@@ -1,0 +1,60 @@
+//! Detailed single-benchmark evaluation: per-subtask accuracy, FLOPs,
+//! latency, memory, and the per-layer live-token trace for one sample.
+//!
+//! ```sh
+//! cargo run --release --example avqa_eval [model] [n_samples]
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastav::avsynth::{gen_sample, Dataset};
+use fastav::eval::evaluate;
+use fastav::model::{GenerateOptions, PruningPlan, RequestInput};
+
+fn main() {
+    let model = common::model_arg();
+    let n = common::n_arg(60);
+    let mut engine = common::load_engine(&model);
+    engine.warmup().ok();
+    let calib = common::load_or_calibrate(&mut engine, 50);
+
+    println!("avsynth-AVQA detailed evaluation — model {}, n={}", model, n);
+    println!(
+        "calibrated rule: vis_cutoff {}, keep_audio {}, keep_frames {}, budget {}",
+        calib.vis_cutoff, calib.keep_audio, calib.keep_frames, calib.budget
+    );
+
+    for (tag, plan) in [
+        ("vanilla", PruningPlan::vanilla()),
+        ("fastav(P=20)", calib.plan(20.0)),
+    ] {
+        let r = evaluate(&mut engine, Dataset::Avqa, n, 1234, &plan, 4).expect("eval");
+        println!(
+            "\n[{}] accuracy {:.1}%  rel-FLOPs {:.1}  prefill {:.1}ms  {:.2}ms/tok  kv {:.2}MB",
+            tag,
+            r.accuracy(),
+            r.mean_rel_flops,
+            r.mean_prefill_s * 1e3,
+            r.mean_decode_tok_s * 1e3,
+            r.mean_peak_kv_bytes / 1e6
+        );
+        for (name, s) in &r.per_subtask {
+            println!("    {:<18} n={:<4} acc {:.1}%", name, s.n, s.accuracy());
+        }
+    }
+
+    // Pruning trace for one sample: live tokens entering each layer.
+    let s = gen_sample(&engine.cfg.layout.clone(), Dataset::Avqa, 0, 1234);
+    let res = engine
+        .generate(
+            &RequestInput::from_sample(&s),
+            &GenerateOptions { plan: calib.plan(20.0), max_gen: 4, ..Default::default() },
+        )
+        .expect("generate");
+    println!(
+        "\npruning trace (sample 0, prompt {} tokens): live tokens per layer = {:?}",
+        s.prompt.len(),
+        res.live_counts
+    );
+}

@@ -1,0 +1,58 @@
+//! Shared glue for the examples: artifact discovery, engine setup, and
+//! load-or-run calibration.
+
+use std::path::PathBuf;
+
+use fastav::calibration::{calibrate, Calibration};
+use fastav::model::ModelEngine;
+
+#[allow(dead_code)]
+pub fn artifact_root() -> PathBuf {
+    // Examples run from the repo root (cargo run --example ...).
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Load the engine or exit with a pointer to `make artifacts`.
+#[allow(dead_code)]
+pub fn load_engine(model: &str) -> ModelEngine {
+    match ModelEngine::load(&artifact_root(), model) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot load model '{}': {:#}", model, e);
+            eprintln!("build artifacts first: make artifacts");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Load `calibration.json` or run calibration (100 samples) and save it.
+#[allow(dead_code)]
+pub fn load_or_calibrate(engine: &mut ModelEngine, samples: usize) -> Calibration {
+    let path = artifact_root()
+        .join(&engine.cfg.name)
+        .join("calibration.json");
+    if let Ok(c) = Calibration::load(&path) {
+        if c.samples >= samples {
+            return c;
+        }
+    }
+    eprintln!("calibrating {} ({} samples)...", engine.cfg.name, samples);
+    let c = calibrate(engine, samples, 1234).expect("calibration");
+    c.save(&path).expect("save calibration");
+    c
+}
+
+/// Model name from argv[1], default vl2sim.
+#[allow(dead_code)]
+pub fn model_arg() -> String {
+    std::env::args().nth(1).unwrap_or_else(|| "vl2sim".to_string())
+}
+
+/// Optional sample-count argv[2].
+#[allow(dead_code)]
+pub fn n_arg(default: usize) -> usize {
+    std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}

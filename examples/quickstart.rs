@@ -1,0 +1,52 @@
+//! Quickstart: load a model, answer one audio-visual question with and
+//! without FastAV pruning, and print the efficiency delta.
+//!
+//! ```sh
+//! cargo run --release --example quickstart [model]
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastav::avsynth::{gen_sample, Dataset};
+use fastav::model::{GenerateOptions, PruningPlan, RequestInput};
+use fastav::tokens::render_answer;
+
+fn main() {
+    let model = common::model_arg();
+    let mut engine = common::load_engine(&model);
+    let calib = common::load_or_calibrate(&mut engine, 20);
+    engine.warmup().expect("warmup"); // compile artifacts up front
+    let layout = engine.cfg.layout.clone();
+
+    let sample = gen_sample(&layout, Dataset::Avqa, 0, 1234);
+    println!(
+        "question: {}  (scene {}, sound {})",
+        sample.subtask.name(),
+        sample.scene,
+        sample.sound
+    );
+    println!("prompt: {} tokens ({} visual, {} audio)", sample.prompt.len(),
+        layout.vis_tokens(), layout.audio_tokens());
+
+    for (name, plan) in [
+        ("vanilla", PruningPlan::vanilla()),
+        ("fastav ", calib.plan(20.0)),
+    ] {
+        let res = engine
+            .generate(
+                &RequestInput::from_sample(&sample),
+                &GenerateOptions { plan, max_gen: 4, ..Default::default() },
+            )
+            .expect("generate");
+        println!(
+            "{}: answer '{}' (expect '{}')  flops {:>5.1}  prefill {:>6.1}ms  kv {:.2}MB",
+            name,
+            render_answer(&res.tokens),
+            render_answer(&sample.answer),
+            res.relative_flops,
+            res.prefill_seconds * 1e3,
+            res.peak_kv_bytes as f64 / 1e6,
+        );
+    }
+}

@@ -1,0 +1,106 @@
+//! End-to-end serving validation (DESIGN.md §5): boots the full stack —
+//! HTTP server → coordinator → scheduler → engine worker → PJRT — then
+//! drives a batched client workload over real sockets and reports
+//! throughput + latency, vanilla vs FastAV.
+//!
+//! ```sh
+//! cargo run --release --example serve_load [model] [n_requests]
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use fastav::coordinator::Coordinator;
+use fastav::http::{api::make_handler, request, Server};
+use fastav::util::bench::stats_from;
+use fastav::util::json::Json;
+use fastav::util::threadpool::ThreadPool;
+
+fn main() {
+    let model = common::model_arg();
+    let n_requests = common::n_arg(24);
+
+    // Calibrate first (separate engine instance; the serving engine lives
+    // on the coordinator's thread).
+    let calib = {
+        let mut engine = common::load_engine(&model);
+        common::load_or_calibrate(&mut engine, 50)
+    };
+    let layout = {
+        let engine = common::load_engine(&model);
+        engine.cfg.layout.clone()
+    };
+
+    let coord = Arc::new(
+        Coordinator::start(common::artifact_root(), model.clone(), 128, true)
+            .expect("coordinator"),
+    );
+    let handler = make_handler(Arc::clone(&coord), layout, calib.plan(20.0), 4, 1234);
+    let server = Server::bind("127.0.0.1:0", 8, handler).expect("bind");
+    let addr = server.local_addr().to_string();
+    let stop = server.shutdown_handle();
+    let server_thread = std::thread::spawn(move || server.serve());
+    println!("serving {} at {} — driving {} requests per mode", model, addr, n_requests);
+
+    let datasets = ["avqa", "musicavqa", "avhbench"];
+    for (mode, no_pruning) in [("fastav", false), ("vanilla", true)] {
+        let latencies = Arc::new(Mutex::new(Vec::new()));
+        let correct = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let flops = Arc::new(Mutex::new(Vec::new()));
+        let pool = ThreadPool::new(6);
+        let t0 = Instant::now();
+        for i in 0..n_requests {
+            let addr = addr.clone();
+            let latencies = Arc::clone(&latencies);
+            let correct = Arc::clone(&correct);
+            let flops = Arc::clone(&flops);
+            let ds = datasets[i % datasets.len()];
+            pool.execute(move || {
+                let body = format!(
+                    r#"{{"dataset": "{}", "index": {}, "no_pruning": {}}}"#,
+                    ds, i, no_pruning
+                );
+                let t = Instant::now();
+                match request(&addr, "POST", "/v1/generate", body.as_bytes()) {
+                    Ok((200, resp)) => {
+                        latencies.lock().unwrap().push(t.elapsed().as_secs_f64());
+                        if let Ok(j) = Json::parse(std::str::from_utf8(&resp).unwrap_or("")) {
+                            if j.get("correct").as_bool() == Some(true) {
+                                correct.fetch_add(1, Ordering::Relaxed);
+                            }
+                            if let Some(f) = j.get("relative_flops").as_f64() {
+                                flops.lock().unwrap().push(f);
+                            }
+                        }
+                    }
+                    Ok((code, _)) => eprintln!("request {} -> {}", i, code),
+                    Err(e) => eprintln!("request {} failed: {}", i, e),
+                }
+            });
+        }
+        pool.wait_idle();
+        let wall = t0.elapsed().as_secs_f64();
+        let lat = latencies.lock().unwrap().clone();
+        let fl = flops.lock().unwrap();
+        let mean_flops = fl.iter().sum::<f64>() / fl.len().max(1) as f64;
+        let stats = stats_from(&format!("{} end-to-end latency", mode), lat);
+        println!(
+            "\n[{}] {}/{} ok, accuracy {:.1}%, throughput {:.2} req/s, mean rel-FLOPs {:.1}",
+            mode,
+            stats.iters,
+            n_requests,
+            100.0 * correct.load(Ordering::Relaxed) as f64 / n_requests as f64,
+            stats.iters as f64 / wall,
+            mean_flops,
+        );
+        stats.report();
+    }
+
+    println!("\nserver metrics:\n{}", coord.metrics.export());
+    stop.store(true, Ordering::SeqCst);
+    let _ = server_thread.join();
+}

@@ -1,0 +1,75 @@
+//! Table 1 — main results: FLOPs / latency / memory + accuracy for each
+//! model × dataset, vanilla vs FastAV.
+//!
+//! Paper shape to reproduce: FastAV ≈ 55–60 relative FLOPs, ~30% faster
+//! per token, lower memory, accuracy preserved or improved (AV matching
+//! notably improves on VideoLLaMA2).
+//!
+//! ```sh
+//! cargo run --release --example table1_main [n_samples]
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastav::avsynth::Dataset;
+use fastav::eval::evaluate;
+use fastav::model::PruningPlan;
+
+fn main() {
+    let n = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    println!("Table 1 — main results ({} samples per dataset)", n);
+    println!(
+        "{:<22} {:<10} {:>6} {:>9} {:>9} {:>8} {:>7} {:>7} {:>7} {:>7}",
+        "model", "dataset", "FLOPs", "ms/tok", "KV MB", "acc%", "hall%", "match%", "cap/5", "music%"
+    );
+
+    for model in ["vl2sim", "salmsim"] {
+        let mut engine = common::load_engine(model);
+        if let Err(e) = engine.warmup() {
+            eprintln!("warmup: {:#}", e);
+        }
+        let calib = common::load_or_calibrate(&mut engine, 50);
+        for (tag, plan) in [
+            ("vanilla", PruningPlan::vanilla()),
+            ("fastav", calib.plan(20.0)),
+        ] {
+            for ds in [Dataset::MusicAvqa, Dataset::Avqa, Dataset::AvhBench] {
+                // MUSIC-AVQA is NA for salmsim in the paper (long videos);
+                // our substitute keeps the NA to preserve the table shape.
+                if model == "salmsim" && ds == Dataset::MusicAvqa {
+                    continue;
+                }
+                let report = evaluate(&mut engine, ds, n, 1234, &plan, 4).expect("eval");
+                println!(
+                    "{:<22} {:<10} {:>6.1} {:>9.2} {:>9.2} {:>8.1} {:>7} {:>7} {:>7} {:>7}",
+                    format!("{} ({})", model, tag),
+                    report.dataset,
+                    report.mean_rel_flops,
+                    report.mean_decode_tok_s * 1e3,
+                    report.mean_peak_kv_bytes / 1e6,
+                    report.accuracy(),
+                    report
+                        .subtask_accuracy("hallucination")
+                        .map(|a| format!("{:.1}", a))
+                        .unwrap_or_else(|| "-".into()),
+                    report
+                        .subtask_accuracy("matching")
+                        .map(|a| format!("{:.1}", a))
+                        .unwrap_or_else(|| "-".into()),
+                    report
+                        .caption_mean()
+                        .map(|a| format!("{:.2}", a))
+                        .unwrap_or_else(|| "-".into()),
+                    report
+                        .subtask_accuracy("how_many_beats")
+                        .map(|a| format!("{:.1}", a))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Table 2 — global-pruning strategy ablation on AVHBench (vl2sim), no
+//! fine pruning, all strategies at the same AV-token keep budget
+//! (equal FLOPs).
+//!
+//! Paper shape: Low informative (ours) > Low attentive ≈ Vanilla >
+//! Random > Top attentive > Top informative.
+//!
+//! ```sh
+//! cargo run --release --example table2_global [n_samples]
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastav::avsynth::Dataset;
+use fastav::eval::evaluate;
+use fastav::model::PruningPlan;
+use fastav::pruning::{FineStrategy, GlobalStrategy};
+
+fn main() {
+    let n = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let dataset = std::env::args()
+        .nth(2)
+        .and_then(|s| fastav::avsynth::Dataset::parse(&s))
+        .unwrap_or(Dataset::AvhBench);
+    let mut engine = common::load_engine("vl2sim");
+    engine.warmup().ok();
+    let calib = common::load_or_calibrate(&mut engine, 50);
+    println!(
+        "Table 2 — global pruning strategies (vl2sim, avhbench, n={}, budget={} AV tokens)",
+        n, calib.budget
+    );
+    println!(
+        "{:<26} {:>6} {:>8} {:>8} {:>8}",
+        "strategy", "FLOPs", "hall%", "match%", "acc%"
+    );
+
+    let rows: Vec<(&str, PruningPlan)> = vec![
+        ("Vanilla", PruningPlan::vanilla()),
+        (
+            "Random",
+            calib.ablation_plan(GlobalStrategy::Random, FineStrategy::None, 0.0),
+        ),
+        (
+            "Top attentive",
+            calib.ablation_plan(GlobalStrategy::TopAttentive, FineStrategy::None, 0.0),
+        ),
+        (
+            "Low attentive",
+            calib.ablation_plan(GlobalStrategy::LowAttentive, FineStrategy::None, 0.0),
+        ),
+        (
+            "Top informative",
+            calib.ablation_plan(GlobalStrategy::TopInformative, FineStrategy::None, 0.0),
+        ),
+        ("Low informative (Ours)", calib.global_only_plan()),
+    ];
+
+    for (name, plan) in rows {
+        let report = evaluate(&mut engine, dataset, n, 1234, &plan, 4).expect("eval");
+        let hall = report.subtask_accuracy("hallucination").unwrap_or(0.0);
+        let mat = report.subtask_accuracy("matching").unwrap_or(0.0);
+        println!(
+            "{:<26} {:>6.1} {:>8.1} {:>8.1} {:>8.1}",
+            name,
+            report.mean_rel_flops,
+            hall,
+            mat,
+            report.accuracy()
+        );
+    }
+}

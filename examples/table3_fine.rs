@@ -1,0 +1,74 @@
+//! Table 3 — fine-pruning strategy ablation on AVHBench (vl2sim), global
+//! pruning fixed to the calibrated FastAV rule, P = 20%.
+//!
+//! Paper shape: Low attentive (ours) > Random > Top attentive; low
+//! attentive matches or beats vanilla.
+//!
+//! ```sh
+//! cargo run --release --example table3_fine [n_samples]
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastav::avsynth::Dataset;
+use fastav::eval::evaluate;
+use fastav::model::PruningPlan;
+use fastav::pruning::FineStrategy;
+
+fn main() {
+    let n = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let dataset = std::env::args()
+        .nth(2)
+        .and_then(|s| fastav::avsynth::Dataset::parse(&s))
+        .unwrap_or(Dataset::AvhBench);
+    let mut engine = common::load_engine("vl2sim");
+    engine.warmup().ok();
+    let calib = common::load_or_calibrate(&mut engine, 50);
+    println!(
+        "Table 3 — fine pruning strategies (vl2sim, avhbench, n={}, P=20%)",
+        n
+    );
+    println!(
+        "{:<24} {:>6} {:>8} {:>8} {:>8}",
+        "strategy", "FLOPs", "hall%", "match%", "acc%"
+    );
+
+    let fastav_global = calib.plan(20.0).global;
+    let mut rows: Vec<(&str, PruningPlan)> = vec![("Vanilla", PruningPlan::vanilla())];
+    for (name, fine) in [
+        ("Random", FineStrategy::Random),
+        ("Top attentive", FineStrategy::TopAttentive),
+        ("Low attentive (Ours)", FineStrategy::LowAttentive),
+    ] {
+        rows.push((
+            name,
+            PruningPlan {
+                global: fastav_global.clone(),
+                global_budget: calib.budget,
+                fine,
+                fine_percent: 20.0,
+                seed: 0,
+                global_layer: None,
+                fine_during_decode: false,
+            },
+        ));
+    }
+
+    for (name, plan) in rows {
+        let report = evaluate(&mut engine, dataset, n, 1234, &plan, 4).expect("eval");
+        let hall = report.subtask_accuracy("hallucination").unwrap_or(0.0);
+        let mat = report.subtask_accuracy("matching").unwrap_or(0.0);
+        println!(
+            "{:<24} {:>6.1} {:>8.1} {:>8.1} {:>8.1}",
+            name,
+            report.mean_rel_flops,
+            hall,
+            mat,
+            report.accuracy()
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! Table 4 — fine-pruning ratio sweep on AVHBench (vl2sim): P in
+//! {0, 10, 20, 30}%, global pruning fixed.
+//!
+//! Paper shape: FLOPs fall with P; P = 20% gives the best average
+//! accuracy at low FLOPs (P = 0 is global-only).
+//!
+//! ```sh
+//! cargo run --release --example table4_psweep [n_samples]
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastav::avsynth::Dataset;
+use fastav::eval::evaluate;
+
+fn main() {
+    let n = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let dataset = std::env::args()
+        .nth(2)
+        .and_then(|s| fastav::avsynth::Dataset::parse(&s))
+        .unwrap_or(Dataset::AvhBench);
+    let mut engine = common::load_engine("vl2sim");
+    engine.warmup().ok();
+    let calib = common::load_or_calibrate(&mut engine, 50);
+    println!("Table 4 — pruning ratio P sweep (vl2sim, avhbench, n={})", n);
+    println!(
+        "{:<10} {:>6} {:>8} {:>8} {:>8}",
+        "P (%)", "FLOPs", "hall%", "match%", "acc%"
+    );
+
+    for p in [0.0, 10.0, 20.0, 30.0] {
+        let plan = if p == 0.0 { calib.global_only_plan() } else { calib.plan(p) };
+        let report = evaluate(&mut engine, dataset, n, 1234, &plan, 4).expect("eval");
+        let hall = report.subtask_accuracy("hallucination").unwrap_or(0.0);
+        let mat = report.subtask_accuracy("matching").unwrap_or(0.0);
+        let label = if p == 20.0 { "20 (Ours)".to_string() } else { format!("{:.0}", p) };
+        println!(
+            "{:<10} {:>6.1} {:>8.1} {:>8.1} {:>8.1}",
+            label,
+            report.mean_rel_flops,
+            hall,
+            mat,
+            report.accuracy()
+        );
+    }
+}

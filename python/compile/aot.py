@@ -1,0 +1,179 @@
+"""AOT lowering: every L2 entry point → HLO *text* artifacts for rust/PJRT.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Per model config this emits into ``artifacts/<model>/``:
+  * ``prefill_front_<n>.hlo.txt``  (one per prefill bucket)
+  * ``back_layer_<n>.hlo.txt``     (one per seq bucket)
+  * ``decode_layer_<n>.hlo.txt``   (one per seq bucket)
+  * ``logits.hlo.txt``
+  * ``calib_probe_<n>.hlo.txt``    (one per calib bucket)
+  * ``model.json``                 (config + bucket grid + per-entry ABI)
+
+Usage: python -m compile.aot [--out ../artifacts] [--model all]
+       [--impl pallas|jnp] [--force]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import CONFIGS, WEIGHT_ALIASES
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def layer_param_specs(cfg, stack=None):
+    """ShapeDtypeStructs for the 9 per-layer params (optionally stacked)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    shapes = {
+        "ln1": (d,), "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "ln2": (d,), "wg": (d, ff), "wu": (d, ff), "wd": (ff, d),
+    }
+    out = []
+    for name in M.LAYER_PARAM_NAMES:
+        s = shapes[name]
+        if stack is not None:
+            s = (stack,) + s
+        out.append(spec(s))
+    return out
+
+
+def entry_specs(cfg, entry, n, split=None):
+    """Input ShapeDtypeStructs for an entry point at bucket n (the rust ABI).
+
+    ``split`` overrides the front-half depth for ``frontsplit`` artifacts
+    (the Fig. 4 pruning-start-layer sweep).
+    """
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    if entry in ("prefill_front", "frontsplit"):
+        stack = cfg.mid_layer if split is None else split
+        return [spec((n, d)), spec((n,)), spec((n,), jnp.int32)] + \
+            layer_param_specs(cfg, stack=stack)
+    if entry == "back_layer":
+        return [spec((n, d)), spec((n,)), spec((n,), jnp.int32),
+                spec((), jnp.int32)] + layer_param_specs(cfg)
+    if entry == "decode_layer":
+        return [spec((d,)), spec((), jnp.int32), spec((), jnp.int32),
+                spec((h, n, dh)), spec((h, n, dh)), spec((n,))] + \
+            layer_param_specs(cfg)
+    if entry == "logits":
+        return [spec((d,)), spec((d,)), spec((cfg.vocab, d))]
+    if entry == "calib_probe":
+        return [spec((n, d)), spec((n,)), spec((n,), jnp.int32)] + \
+            layer_param_specs(cfg, stack=cfg.n_layers)
+    raise ValueError(entry)
+
+
+def entry_fn(cfg, entry, use_pallas):
+    if entry in ("prefill_front", "frontsplit"):
+        return functools.partial(M.prefill_front, cfg, use_pallas)
+    if entry == "back_layer":
+        return functools.partial(M.back_layer, cfg, use_pallas)
+    if entry == "decode_layer":
+        return functools.partial(M.decode_layer, cfg, use_pallas)
+    if entry == "logits":
+        return functools.partial(M.logits_head, cfg)
+    if entry == "calib_probe":
+        return functools.partial(M.calib_probe, cfg)
+    raise ValueError(entry)
+
+
+def lower_entry(cfg, entry, n, use_pallas, out_path, force, split=None):
+    if os.path.exists(out_path) and not force:
+        return False
+    specs = entry_specs(cfg, entry, n, split=split)
+    lowered = jax.jit(entry_fn(cfg, entry, use_pallas)).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return True
+
+
+def abi_of(cfg, entry, n):
+    return [
+        {"shape": list(s.shape), "dtype": str(s.dtype)}
+        for s in entry_specs(cfg, entry, n)
+    ]
+
+
+def build_model(cfg, out_root, use_pallas, force):
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    built = 0
+
+    # (entry, bucket, split, filename-stem)
+    plan = [("prefill_front", n, None, f"prefill_front_{n}") for n in cfg.prefill_buckets]
+    plan += [("back_layer", n, None, f"back_layer_{n}") for n in cfg.seq_buckets]
+    plan += [("decode_layer", n, None, f"decode_layer_{n}") for n in cfg.seq_buckets]
+    plan += [("logits", 0, None, "logits")]
+    plan += [("calib_probe", n, None, f"calib_probe_{n}") for n in cfg.calib_buckets]
+    if cfg.emit_splits:
+        # Front halves split at every layer boundary m (Fig. 4 sweep); the
+        # m == mid split is identical to prefill_front and skipped.
+        for m in range(1, cfg.n_layers):
+            if m == cfg.mid_layer:
+                continue
+            for n in cfg.prefill_buckets:
+                plan.append(("frontsplit", n, m, f"frontsplit{m}_{n}"))
+
+    for entry, n, split, stem in plan:
+        path = os.path.join(out_dir, f"{stem}.hlo.txt")
+        if lower_entry(cfg, entry, n, use_pallas, path, force, split=split):
+            built += 1
+            print(f"  lowered {cfg.name}/{stem}", flush=True)
+
+    meta = {
+        "config": cfg.to_json_dict(),
+        "impl": "pallas" if use_pallas else "jnp",
+        "weights_dir": WEIGHT_ALIASES.get(cfg.name, cfg.name),
+        "abi": {
+            "prefill_front": abi_of(cfg, "prefill_front", cfg.prefill_buckets[0]),
+            "back_layer": abi_of(cfg, "back_layer", cfg.seq_buckets[0]),
+            "decode_layer": abi_of(cfg, "decode_layer", cfg.seq_buckets[0]),
+            "logits": abi_of(cfg, "logits", 0),
+            "calib_probe": abi_of(cfg, "calib_probe", cfg.calib_buckets[0]),
+        },
+    }
+    with open(os.path.join(out_dir, "model.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return built
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="all")
+    ap.add_argument("--impl", default="pallas", choices=["pallas", "jnp"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    names = list(CONFIGS) if args.model == "all" else [args.model]
+    total = 0
+    for name in names:
+        total += build_model(CONFIGS[name], args.out, args.impl == "pallas", args.force)
+    print(f"aot: {total} artifacts lowered (impl={args.impl})")
+
+
+if __name__ == "__main__":
+    main()

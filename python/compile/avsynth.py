@@ -1,0 +1,258 @@
+"""Synthetic audio-visual task suite ("avsynth").
+
+Substitute for AVQA / MUSIC-AVQA / AVHBench (DESIGN.md §2): each sample
+plants class-bearing *evidence tokens* inside streams of modality noise,
+and the answer is a deterministic function of the multimodal evidence.
+Evidence is concentrated early in each modality (first frames / first
+audio slots) — the property FastAV's rollout analysis detects in real
+AV-LLMs — so pruning strategies separate exactly as in the paper: keeping
+early tokens is safe, dropping informative tokens is catastrophic.
+
+This module is mirrored in ``rust/src/avsynth/``; both sides generate
+bit-identical samples from the same (base_seed, dataset, index) triple via
+the shared SplitMix64. Cross-language reference vectors are pinned in
+``python/tests/test_avsynth.py`` and the rust test suite.
+"""
+
+from dataclasses import dataclass, field
+
+from . import vocab as V
+from .rng import SplitMix64, derive_seed
+
+# Modality codes for the per-token segment map (shared with rust).
+SEG_CTRL = 0
+SEG_VIS = 1
+SEG_AUD = 2
+SEG_TEXT = 3
+
+# Dataset stream ids for seed derivation (shared with rust).
+STREAM_TRAIN = 0
+STREAM_AVQA = 1
+STREAM_MUSIC = 2
+STREAM_AVHBENCH = 3
+STREAM_CALIB = 4
+
+DATASET_STREAMS = {
+    "train": STREAM_TRAIN,
+    "avqa": STREAM_AVQA,
+    "musicavqa": STREAM_MUSIC,
+    "avhbench": STREAM_AVHBENCH,
+    "calib": STREAM_CALIB,
+}
+
+EVIDENCE_FRAMES = 2    # scene evidence lives in the first 2 frames
+EVIDENCE_AUD_SLOTS = 4  # sound evidence lives in the first 4 audio slots
+BEAT_REGION = 12       # beat markers land in the first 12 audio slots
+MAX_BEATS = 5
+
+
+@dataclass
+class LayoutCfg:
+    """Modality layout of the prompt (mirrors rust ``tokens::Layout``).
+
+    ``interleaved=False`` — VideoLLaMA2-style: ``BOS | all vis | all aud |
+    text``. ``interleaved=True`` — video-SALMONN2-style: ``BOS | per-frame
+    (vis then aud) | text``.
+    """
+
+    frames: int = 8
+    vis_per_frame: int = 8
+    aud_len: int = 24          # sequential layout: total audio tokens
+    aud_per_frame: int = 3     # interleaved layout: audio tokens per frame
+    interleaved: bool = False
+
+    def audio_tokens(self) -> int:
+        return self.frames * self.aud_per_frame if self.interleaved else self.aud_len
+
+    def vis_tokens(self) -> int:
+        return self.frames * self.vis_per_frame
+
+    def prompt_len_max(self) -> int:
+        # BOS + modality tokens + [SEP, qword, arg, SEP]
+        return 1 + self.vis_tokens() + self.audio_tokens() + 4
+
+
+@dataclass
+class Sample:
+    """One synthetic AV sample: prompt token ids + expected answer.
+
+    ``segments[i]``/``frame_of[i]`` describe token *i* of the prompt:
+    modality code and owning frame (-1 when not frame-scoped). The rust
+    pruning policies consume this map.
+    """
+
+    dataset: str
+    subtask: str
+    index: int
+    prompt: list = field(default_factory=list)
+    answer: list = field(default_factory=list)   # includes trailing EOS
+    segments: list = field(default_factory=list)
+    frame_of: list = field(default_factory=list)
+    scene: int = -1
+    sound: int = -1
+    beats: int = -1
+
+
+def _fill_streams(rng, cfg, scene, sound, beats):
+    """Generate the visual and audio token streams with planted evidence."""
+    vis = []
+    for f in range(cfg.frames):
+        frame = [V.VIS_NOISE_BASE + rng.next_below(V.VIS_NOISE_COUNT)
+                 for _ in range(cfg.vis_per_frame)]
+        if f < EVIDENCE_FRAMES:
+            slot = rng.next_below(cfg.vis_per_frame)
+            frame[slot] = V.scene_token(scene)
+        vis.append(frame)
+
+    n_aud = cfg.audio_tokens()
+    aud = [V.AUD_NOISE_BASE + rng.next_below(V.AUD_NOISE_COUNT)
+           for _ in range(n_aud)]
+    slot = rng.next_below(min(EVIDENCE_AUD_SLOTS, n_aud))
+    aud[slot] = V.sound_token(sound)
+    if beats > 0:
+        # Distinct beat slots inside the (early) beat region, skipping the
+        # sound-evidence slot.
+        region = min(BEAT_REGION, n_aud)
+        placed = 0
+        while placed < beats:
+            b = rng.next_below(region)
+            if aud[b] == V.BEAT or b == slot:
+                continue
+            aud[b] = V.BEAT
+            placed += 1
+    return vis, aud
+
+
+def _assemble(cfg, vis, aud, question):
+    """Concatenate modality streams per layout; build the segment map."""
+    prompt, segs, frames = [V.BOS], [SEG_CTRL], [-1]
+    if cfg.interleaved:
+        ap = cfg.aud_per_frame
+        for f in range(cfg.frames):
+            for t in vis[f]:
+                prompt.append(t); segs.append(SEG_VIS); frames.append(f)
+            for a in aud[f * ap:(f + 1) * ap]:
+                prompt.append(a); segs.append(SEG_AUD); frames.append(f)
+    else:
+        for f in range(cfg.frames):
+            for t in vis[f]:
+                prompt.append(t); segs.append(SEG_VIS); frames.append(f)
+        for a in aud:
+            prompt.append(a); segs.append(SEG_AUD); frames.append(-1)
+    for t in question:
+        prompt.append(t); segs.append(SEG_TEXT); frames.append(-1)
+    return prompt, segs, frames
+
+
+def _question(qword, arg=None):
+    q = [V.SEP, qword]
+    if arg is not None:
+        q.append(arg)
+    q.append(V.SEP)
+    return q
+
+
+def gen_sample(cfg: LayoutCfg, dataset: str, index: int, base_seed: int) -> Sample:
+    """Generate sample ``index`` of ``dataset`` deterministically.
+
+    The (dataset, index, base_seed) triple fully determines the sample on
+    both the python and rust implementations.
+    """
+    stream = DATASET_STREAMS[dataset]
+    rng = SplitMix64(derive_seed(base_seed, stream, index))
+
+    scene = rng.next_below(V.NUM_CLASSES)
+    # Default: sound drawn independently (may or may not match the scene).
+    sound = rng.next_below(V.NUM_CLASSES)
+    beats = -1
+    subtask = ""
+    question, answer = [], []
+
+    if dataset in ("train", "calib"):
+        # Training/calibration mixture, weighted toward the relational
+        # tasks (hallucination, matching) which need far more examples to
+        # learn than the retrieval tasks. Weights (mirrored in rust):
+        #   what_scene 1, what_sound 1, scene_sound 1, beats 1,
+        #   instrument 1, hallucination 4, matching 4, captioning 1.
+        r = rng.next_below(14)
+        bounds = [1, 2, 3, 4, 5, 9, 13, 14]       # cumulative
+        picks_ = [0, 1, 2, 3, 4, 5, 6, 8]
+        pick = next(p for b, p in zip(bounds, picks_) if r < b)
+    elif dataset == "avqa":
+        pick = rng.next_below(3)            # 0..2
+    elif dataset == "musicavqa":
+        pick = 3 + rng.next_below(2)        # 3..4
+    elif dataset == "avhbench":
+        pick = 5 + rng.next_below(3)        # 5..7 (3 subtasks)
+        if pick == 7:
+            pick = 8                        # captioning
+    else:
+        raise ValueError(dataset)
+
+    if pick == 0:
+        subtask = "what_scene"
+        question = _question(V.Q_WHAT_SCENE)
+        answer = [V.scene_token(scene), V.EOS]
+    elif pick == 1:
+        subtask = "what_sound"
+        question = _question(V.Q_WHAT_SOUND)
+        answer = [V.sound_token(sound), V.EOS]
+    elif pick == 2:
+        subtask = "scene_sound"
+        question = _question(V.Q_SCENE_SOUND)
+        answer = [V.scene_token(scene), V.sound_token(sound), V.EOS]
+    elif pick == 3:
+        subtask = "how_many_beats"
+        beats = rng.next_below(MAX_BEATS + 1)
+        question = _question(V.Q_HOW_MANY_BEATS)
+        answer = [V.digit_token(beats), V.EOS]
+    elif pick == 4:
+        subtask = "which_instrument"
+        question = _question(V.Q_WHICH_INSTRUMENT)
+        answer = [V.sound_token(sound), V.EOS]
+    elif pick == 5:
+        subtask = "hallucination"
+        # 50%: ask about the present class; 50%: an absent one.
+        ask_sound = rng.chance(0.5)
+        present = rng.chance(0.5)
+        actual = sound if ask_sound else scene
+        if present:
+            probe = actual
+        else:
+            probe = (actual + 1 + rng.next_below(V.NUM_CLASSES - 1)) % V.NUM_CLASSES
+        tok = V.sound_token(probe) if ask_sound else V.scene_token(probe)
+        qw = V.Q_IS_THERE_SOUND if ask_sound else V.Q_IS_THERE_SCENE
+        question = _question(qw, tok)
+        answer = [V.YES if present else V.NO, V.EOS]
+    elif pick == 6:
+        subtask = "matching"
+        matched = rng.chance(0.5)
+        if matched:
+            sound = scene
+        else:
+            sound = (scene + 1 + rng.next_below(V.NUM_CLASSES - 1)) % V.NUM_CLASSES
+        question = _question(V.Q_AV_MATCH)
+        answer = [V.YES if matched else V.NO, V.EOS]
+    elif pick == 8:
+        subtask = "captioning"
+        question = _question(V.Q_DESCRIBE)
+        answer = [V.scene_token(scene), V.sound_token(sound), V.EOS]
+    else:
+        raise AssertionError(pick)
+
+    if beats < 0:
+        beats = 0
+    vis, aud = _fill_streams(rng, cfg, scene, sound, beats)
+    prompt, segs, frames = _assemble(cfg, vis, aud, question)
+    return Sample(
+        dataset=dataset, subtask=subtask, index=index,
+        prompt=prompt, answer=answer, segments=segs, frame_of=frames,
+        scene=scene, sound=sound, beats=beats,
+    )
+
+
+# Canonical layouts for the two simulated AV-LLMs (mirrors rust).
+VL2SIM_LAYOUT = LayoutCfg(frames=8, vis_per_frame=8, aud_len=24, interleaved=False)
+SALMSIM_LAYOUT = LayoutCfg(frames=8, vis_per_frame=8, aud_per_frame=3, interleaved=True)
+# Long-context layout for latency-scaling benches (prefill bucket 512).
+VL2SIM_LONG_LAYOUT = LayoutCfg(frames=24, vis_per_frame=16, aud_len=96, interleaved=False)

@@ -1,0 +1,100 @@
+"""Model configurations and the AOT bucket grid.
+
+Mirrored by ``rust/src/model/config.rs`` — the rust side reads the same
+values from ``artifacts/<model>/model.json`` written by ``aot.py``, so this
+file is the single authoritative definition.
+"""
+
+from dataclasses import dataclass, asdict, field
+
+from .avsynth import (
+    LayoutCfg,
+    SALMSIM_LAYOUT,
+    VL2SIM_LAYOUT,
+    VL2SIM_LONG_LAYOUT,
+)
+
+
+@dataclass
+class ModelCfg:
+    """AV-LLM decoder hyperparameters + AOT bucket grid.
+
+    ``mid_layer`` is the FastAV global-pruning layer (L/2 in the paper —
+    layer 14 of VideoLLaMA2's 28). Buckets are the static sequence lengths
+    artifacts are compiled at; the rust runtime picks the smallest bucket
+    that fits (DESIGN.md §3). All buckets are multiples of 16 so Pallas
+    tile sizes divide evenly.
+    """
+
+    name: str = "vl2sim"
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    d_head: int = 32
+    n_layers: int = 8
+    mid_layer: int = 4
+    d_ff: int = 256
+    rope_theta: float = 10000.0
+    rollout_alpha: float = 0.6
+    layout: LayoutCfg = field(default_factory=lambda: VL2SIM_LAYOUT)
+    prefill_buckets: tuple = (128,)
+    seq_buckets: tuple = (32, 48, 64, 96, 128)   # back layers + decode
+    calib_buckets: tuple = (128,)
+    # Emit per-split front artifacts (frontsplit<m>_<n>.hlo.txt) for the
+    # pruning-start-layer sweep (paper Fig. 4).
+    emit_splits: bool = False
+    # Training hyperparameters (build-time only).
+    train_steps: int = 1500
+    train_batch: int = 16
+    train_lr: float = 2e-3
+    train_seed: int = 1234
+
+    def __post_init__(self):
+        assert self.d_model == self.n_heads * self.d_head
+        assert 0 < self.mid_layer < self.n_layers
+
+    def to_json_dict(self):
+        d = asdict(self)
+        d["layout"] = asdict(self.layout)
+        d["prefill_buckets"] = list(self.prefill_buckets)
+        d["seq_buckets"] = list(self.seq_buckets)
+        d["calib_buckets"] = list(self.calib_buckets)
+        return d
+
+
+VL2SIM = ModelCfg(name="vl2sim", layout=VL2SIM_LAYOUT, emit_splits=True)
+
+SALMSIM = ModelCfg(name="salmsim", layout=SALMSIM_LAYOUT)
+
+# Long-context vl2sim variant for latency-scaling benches: same weights as
+# vl2sim (identical architecture), larger buckets. No separate training.
+VL2SIM_LONG = ModelCfg(
+    name="vl2sim_long",
+    layout=VL2SIM_LONG_LAYOUT,
+    prefill_buckets=(512,),
+    seq_buckets=(64, 128, 192, 256, 384, 512),
+    calib_buckets=(512,),
+)
+
+# Miniature config for fast rust integration tests.
+TINY = ModelCfg(
+    name="tiny",
+    d_model=32,
+    n_heads=2,
+    d_head=16,
+    n_layers=4,
+    mid_layer=2,
+    d_ff=64,
+    layout=LayoutCfg(frames=2, vis_per_frame=4, aud_len=6, interleaved=False),
+    prefill_buckets=(32,),
+    seq_buckets=(16, 32),
+    calib_buckets=(32,),
+    emit_splits=True,
+    train_steps=150,
+    train_batch=8,
+)
+
+CONFIGS = {c.name: c for c in (VL2SIM, SALMSIM, VL2SIM_LONG, TINY)}
+
+# vl2sim_long shares vl2sim's trained weights.
+WEIGHT_ALIASES = {"vl2sim_long": "vl2sim"}

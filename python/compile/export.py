@@ -1,0 +1,79 @@
+"""Weights export: ``weights.bin`` + ``manifest.json`` (rust ABI).
+
+Format (consumed by ``rust/src/model/weights.rs``):
+  * ``weights.bin`` — raw little-endian float32, tensors concatenated in
+    manifest order, no alignment padding (f32 elements are 4-aligned by
+    construction).
+  * ``manifest.json`` — ``{"tensors": [{"name", "shape", "offset"}...]}``
+    with ``offset`` in *elements* from the start of the file.
+
+Stacked per-layer tensors keep their leading ``[L, ...]`` axis so the rust
+side can slice layer ``l`` (or the contiguous ``[0..mid)`` slab for the
+fused front-half artifact) without copying.
+"""
+
+import json
+import os
+
+import numpy as np
+
+
+TENSOR_ORDER = (
+    "emb",
+    "ln_f",
+    "layers.ln1",
+    "layers.wq",
+    "layers.wk",
+    "layers.wv",
+    "layers.wo",
+    "layers.ln2",
+    "layers.wg",
+    "layers.wu",
+    "layers.wd",
+)
+
+
+def flatten_params(params):
+    """Parameter pytree -> ordered {name: np.ndarray} dict."""
+    out = {}
+    for name in TENSOR_ORDER:
+        if name.startswith("layers."):
+            arr = params["layers"][name.split(".", 1)[1]]
+        else:
+            arr = params[name]
+        out[name] = np.asarray(arr, dtype=np.float32)
+    return out
+
+
+def save_weights(params, out_dir):
+    """Write weights.bin + manifest.json into ``out_dir``."""
+    os.makedirs(out_dir, exist_ok=True)
+    tensors = flatten_params(params)
+    manifest = {"tensors": []}
+    offset = 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for name, arr in tensors.items():
+            f.write(arr.tobytes())
+            manifest["tensors"].append(
+                {"name": name, "shape": list(arr.shape), "offset": offset}
+            )
+            offset += arr.size
+    manifest["total_elements"] = offset
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_weights(out_dir, cfg):
+    """Read weights.bin back into the parameter pytree (round-trip tests,
+    and reuse of trained weights by alias configs)."""
+    with open(os.path.join(out_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.fromfile(os.path.join(out_dir, "weights.bin"), dtype=np.float32)
+    params = {"layers": {}}
+    for t in manifest["tensors"]:
+        arr = data[t["offset"]:t["offset"] + int(np.prod(t["shape"]))].reshape(t["shape"])
+        if t["name"].startswith("layers."):
+            params["layers"][t["name"].split(".", 1)[1]] = arr
+        else:
+            params[t["name"]] = arr
+    return params

@@ -1,0 +1,22 @@
+"""L1 Pallas kernels for FastAV: the paper's compute hot-spots.
+
+Public surface:
+  * :func:`attention.flash_attention`   — fused causal MHA (prefill).
+  * :func:`importance.importance_scores` — last-query importance (Eq. 4).
+  * :func:`importance.decode_attention` — fused decode attention + importance.
+  * :func:`rollout.rollout_step`        — calibration rollout accumulation.
+  * :mod:`ref`                          — pure-jnp oracles for all of the above.
+"""
+
+from .attention import flash_attention
+from .importance import decode_attention, importance_scores
+from .rollout import rollout_step
+from . import ref
+
+__all__ = [
+    "flash_attention",
+    "decode_attention",
+    "importance_scores",
+    "rollout_step",
+    "ref",
+]

@@ -1,0 +1,121 @@
+"""Fused causal multi-head attention as a Pallas kernel (L1 hot path).
+
+Flash-style streaming softmax: the kernel walks key/value tiles and keeps
+a running (max, denominator, weighted-accumulator) triple per query row,
+so the full ``n x n`` attention map is never materialized — this is the
+property FastAV relies on for FlashAttention compatibility (paper §1).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates
+(head, query-block); each step streams K/V tiles HBM→VMEM via BlockSpec
+and feeds (bq x dh)·(dh x bk) products to the MXU. ``interpret=True`` is
+mandatory on this image — real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute; numerics are validated through the
+interpret path against ``ref.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def pick_block(n, cap=128):
+    """Largest tile size <= cap that divides n (buckets are multiples of 16,
+    so 16 always qualifies)."""
+    for b in (128, 96, 64, 48, 32, 16):
+        if b <= cap and n % b == 0:
+            return b
+    return n  # tiny shapes: single block
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, bq, bk, n, causal):
+    """One (head, query-block) grid step of flash attention.
+
+    Refs:
+      q_ref: ``[1, bq, dh]`` query tile for this head/block.
+      k_ref, v_ref: ``[1, n, dh]`` full K/V for this head (tiles are
+        sliced inside the kernel with ``pl.ds`` so the softmax streams).
+      mask_ref: ``[n]`` key validity mask.
+      o_ref: ``[1, bq, dh]`` output tile.
+    """
+    qb = pl.program_id(1)
+    dh = q_ref.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q = q_ref[0, :, :].astype(jnp.float32) * scale  # [bq, dh]
+
+    q_pos = qb * bq + jax.lax.iota(jnp.int32, bq)  # global query rows
+
+    # Running statistics of the online softmax.
+    m_i = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l_i = jnp.zeros((bq,), dtype=jnp.float32)
+    acc = jnp.zeros((bq, dh), dtype=jnp.float32)
+
+    # Causal structure lets us stop at the tile containing the last query
+    # row of this block. qb is a traced grid index, so clamp with jnp ops;
+    # fori_loop with a traced bound lowers to while_loop.
+    if causal:
+        num_kb = jnp.clip((qb * bq + bq + bk - 1) // bk, 1, n // bk)
+    else:
+        num_kb = n // bk
+
+    def body(kb, carry):
+        m_i, l_i, acc = carry
+        k_tile = k_ref[0, pl.ds(kb * bk, bk), :].astype(jnp.float32)  # [bk, dh]
+        v_tile = v_ref[0, pl.ds(kb * bk, bk), :].astype(jnp.float32)
+        mask_tile = mask_ref[pl.ds(kb * bk, bk)]
+
+        s = q @ k_tile.T  # [bq, bk]
+        k_pos = kb * bk + jax.lax.iota(jnp.int32, bk)
+        bias = jnp.where(mask_tile[None, :] > 0.5, 0.0, NEG_INF)
+        if causal:
+            bias = bias + jnp.where(k_pos[None, :] <= q_pos[:, None], 0.0, NEG_INF)
+        s = s + bias
+
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        m_new = jnp.maximum(m_new, NEG_INF / 2)  # fully-masked row guard
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v_tile
+        return m_new, l_new, acc_new
+
+    m_i, l_i, acc = jax.lax.fori_loop(0, num_kb, body, (m_i, l_i, acc))
+    out = acc / jnp.maximum(l_i, 1e-30)[:, None]
+    o_ref[0, :, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, mask, causal=True, block_q=None, block_k=None):
+    """Multi-head attention via the Pallas flash kernel.
+
+    Args:
+      q, k, v: ``[H, n, dh]`` float32 (post-RoPE).
+      mask: ``[n]`` float32 key validity mask.
+      causal: lower-triangular masking by row index.
+      block_q / block_k: tile sizes; default ``min(n, 128)``. Must divide n.
+
+    Returns:
+      ``[H, n, dh]`` float32 attention output (identical semantics to
+      ``ref.ref_attention``).
+    """
+    h, n, dh = q.shape
+    bq = block_q or pick_block(n)
+    bk = block_k or pick_block(n)
+    assert n % bq == 0 and n % bk == 0, (n, bq, bk)
+
+    kernel = functools.partial(_attention_kernel, bq=bq, bk=bk, n=n, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(h, n // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda hh, qq: (hh, qq, 0)),
+            pl.BlockSpec((1, n, dh), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((n,), lambda hh, qq: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda hh, qq: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, mask)

@@ -1,0 +1,164 @@
+"""Last-query token-importance Pallas kernels (the paper's hot spot).
+
+FastAV's fine pruning (paper Eq. 4) scores every remaining token with
+``s = mean_h softmax(Q_last K^T)`` — one softmax *row*, never the full
+attention map. These kernels compute that row with a streaming
+(two-accumulator online) softmax over key tiles, plus a fused decode
+variant that also produces the attention output for the current token so
+the serving path gets importance for free at decode time.
+
+TPU mapping: a single query row is DMA-bound — arithmetic intensity
+~2 FLOPs/byte of K — so the kernel shape is one (dh)·(dh x bk) VREG loop
+per head streaming K tiles; see DESIGN.md §9 for roofline estimates.
+``interpret=True`` mandatory on this image (CPU PJRT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .attention import pick_block
+from .ref import NEG_INF
+
+
+def _importance_kernel(q_ref, k_ref, mask_ref, s_ref, *, bk, n):
+    """Per-head streaming softmax row. Grid: (H,). Outputs per-head probs."""
+    dh = q_ref.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q = q_ref[0, :].astype(jnp.float32) * scale  # [dh]
+
+    num_kb = n // bk
+
+    # Pass 1: running max + denominator.
+    def stats(kb, carry):
+        m_i, l_i = carry
+        k_tile = k_ref[0, pl.ds(kb * bk, bk), :].astype(jnp.float32)
+        mask_tile = mask_ref[pl.ds(kb * bk, bk)]
+        s = k_tile @ q + jnp.where(mask_tile > 0.5, 0.0, NEG_INF)  # [bk]
+        m_new = jnp.maximum(m_i, jnp.maximum(jnp.max(s), NEG_INF / 2))
+        l_new = l_i * jnp.exp(m_i - m_new) + jnp.sum(jnp.exp(s - m_new))
+        return m_new, l_new
+
+    m_i, l_i = jax.lax.fori_loop(0, num_kb, stats, (jnp.float32(NEG_INF), jnp.float32(0.0)))
+    denom = jnp.maximum(l_i, 1e-30)
+
+    # Pass 2: normalized probabilities written tile by tile.
+    def write(kb, _):
+        k_tile = k_ref[0, pl.ds(kb * bk, bk), :].astype(jnp.float32)
+        mask_tile = mask_ref[pl.ds(kb * bk, bk)]
+        s = k_tile @ q + jnp.where(mask_tile > 0.5, 0.0, NEG_INF)
+        p = jnp.exp(s - m_i) / denom * mask_tile
+        s_ref[0, pl.ds(kb * bk, bk)] = p.astype(s_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, num_kb, write, 0)
+
+
+def importance_scores(q_last, k, mask, block_k=None):
+    """Token importance via the Pallas kernel (paper Eq. 4).
+
+    Args:
+      q_last: ``[H, dh]`` last query row (post-RoPE).
+      k: ``[H, n, dh]`` keys.
+      mask: ``[n]`` validity mask.
+      block_k: key tile size; default ``min(n, 128)``; must divide n.
+
+    Returns:
+      ``[n]`` head-averaged importance (identical to ``ref.ref_importance``).
+    """
+    h, n, dh = k.shape
+    bk = block_k or pick_block(n)
+    assert n % bk == 0, (n, bk)
+    kernel = functools.partial(_importance_kernel, bk=bk, n=n)
+    per_head = pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda hh: (hh, 0)),
+            pl.BlockSpec((1, n, dh), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((n,), lambda hh: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda hh: (hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n), jnp.float32),
+        interpret=True,
+    )(q_last, k, mask)
+    return jnp.mean(per_head, axis=0)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, s_ref, *, bk, n):
+    """Fused decode-step attention: output vector + importance row."""
+    dh = q_ref.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q = q_ref[0, :].astype(jnp.float32) * scale
+
+    num_kb = n // bk
+
+    def body(kb, carry):
+        m_i, l_i, acc = carry
+        k_tile = k_ref[0, pl.ds(kb * bk, bk), :].astype(jnp.float32)
+        v_tile = v_ref[0, pl.ds(kb * bk, bk), :].astype(jnp.float32)
+        mask_tile = mask_ref[pl.ds(kb * bk, bk)]
+        s = k_tile @ q + jnp.where(mask_tile > 0.5, 0.0, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.maximum(jnp.max(s), NEG_INF / 2))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_i * alpha + jnp.sum(p)
+        acc_new = acc * alpha + p @ v_tile
+        return m_new, l_new, acc_new
+
+    m_i, l_i, acc = jax.lax.fori_loop(
+        0, num_kb, body, (jnp.float32(NEG_INF), jnp.float32(0.0), jnp.zeros((dh,), jnp.float32))
+    )
+    denom = jnp.maximum(l_i, 1e-30)
+    o_ref[0, :] = (acc / denom).astype(o_ref.dtype)
+
+    def write(kb, _):
+        k_tile = k_ref[0, pl.ds(kb * bk, bk), :].astype(jnp.float32)
+        mask_tile = mask_ref[pl.ds(kb * bk, bk)]
+        s = k_tile @ q + jnp.where(mask_tile > 0.5, 0.0, NEG_INF)
+        p = jnp.exp(s - m_i) / denom * mask_tile
+        s_ref[0, pl.ds(kb * bk, bk)] = p.astype(s_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, num_kb, write, 0)
+
+
+def decode_attention(q1, k, v, mask, block_k=None):
+    """Fused single-query attention + importance (decode hot path).
+
+    Args:
+      q1: ``[H, dh]`` current decode query (post-RoPE).
+      k, v: ``[H, n, dh]`` caches including the current token's K/V.
+      mask: ``[n]`` validity mask.
+      block_k: key tile size; default ``min(n, 128)``; must divide n.
+
+    Returns:
+      ``(out, s)`` — out ``[H, dh]``, s ``[n]`` head-averaged importance.
+      Matches ``ref.ref_decode_attention``.
+    """
+    h, n, dh = k.shape
+    bk = block_k or pick_block(n)
+    assert n % bk == 0, (n, bk)
+    kernel = functools.partial(_decode_kernel, bk=bk, n=n)
+    out, per_head = pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda hh: (hh, 0)),
+            pl.BlockSpec((1, n, dh), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((n,), lambda hh: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dh), lambda hh: (hh, 0)),
+            pl.BlockSpec((1, n), lambda hh: (hh, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((h, n), jnp.float32),
+        ],
+        interpret=True,
+    )(q1, k, v, mask)
+    return out, jnp.mean(per_head, axis=0)

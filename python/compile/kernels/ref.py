@@ -1,0 +1,143 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every kernel in this package has an exact functional counterpart here.
+pytest (``python/tests/test_kernels.py``) sweeps shapes/dtypes with
+hypothesis and asserts ``assert_allclose(kernel(...), ref(...))`` — this
+file is the single source of truth for kernel semantics.
+
+Conventions (shared with the kernels and the L2 model):
+  * ``q, k, v``     — ``[H, n, dh]`` float32, post-RoPE.
+  * ``mask``        — ``[n]`` float32, 1.0 = valid token, 0.0 = padding.
+  * causal masking  — query *i* may attend to keys ``j <= i`` (row index
+    within the compacted sequence; RoPE phases carry the *original*
+    positions separately).
+  * ``NEG_INF``     — large negative bias, not actual ``-inf`` (keeps
+    softmax NaN-free for fully-masked rows).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_bias(mask, n, causal):
+    """Additive attention bias ``[n, n]`` from a validity mask.
+
+    Combines key-padding and (optionally) causal structure. Rows are
+    query positions, columns key positions.
+    """
+    bias = jnp.where(mask[None, :] > 0.5, 0.0, NEG_INF)
+    if causal:
+        q_idx = jnp.arange(n)[:, None]
+        k_idx = jnp.arange(n)[None, :]
+        bias = bias + jnp.where(k_idx <= q_idx, 0.0, NEG_INF)
+    return bias
+
+
+def ref_attention(q, k, v, mask, causal=True):
+    """Reference multi-head scaled-dot-product attention.
+
+    Args:
+      q, k, v: ``[H, n, dh]`` float32.
+      mask: ``[n]`` float32 validity mask over keys.
+      causal: apply lower-triangular masking.
+
+    Returns:
+      ``[H, n, dh]`` attention output.
+    """
+    h, n, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    logits = logits + attention_bias(mask, n, causal)[None, :, :]
+    # Max-subtracted softmax; clamp so fully-masked rows stay finite.
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(logits - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def ref_importance(q_last, k, mask):
+    """Reference last-query token importance (paper Eq. 4).
+
+    ``s = mean_h softmax(q_last K^T / sqrt(dh))`` over valid keys.
+
+    Args:
+      q_last: ``[H, dh]`` the last query row, post-RoPE.
+      k: ``[H, n, dh]`` key features.
+      mask: ``[n]`` validity mask.
+
+    Returns:
+      ``[n]`` importance scores; exactly 0 at padded positions.
+    """
+    h, n, dh = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.einsum("hd,hkd->hk", q_last, k) * scale
+    logits = logits + jnp.where(mask[None, :] > 0.5, 0.0, NEG_INF)
+    m = jnp.maximum(jnp.max(logits, axis=-1, keepdims=True), NEG_INF / 2)
+    p = jnp.exp(logits - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    s = jnp.mean(p, axis=0)
+    return s * mask
+
+
+def ref_decode_attention(q1, k, v, mask):
+    """Reference single-query (decode-step) attention + importance row.
+
+    Args:
+      q1: ``[H, dh]`` the current decode query.
+      k, v: ``[H, n, dh]`` cached keys/values (the query's own K/V must
+        already be appended by the caller).
+      mask: ``[n]`` validity mask.
+
+    Returns:
+      ``(out, s)`` where out is ``[H, dh]`` and s is ``[n]`` — the
+      head-averaged attention row reused as the fine-pruning importance
+      signal (paper §2.2: the last query's attention directly influences
+      next-token prediction).
+    """
+    h, n, dh = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.einsum("hd,hkd->hk", q1, k) * scale
+    logits = logits + jnp.where(mask[None, :] > 0.5, 0.0, NEG_INF)
+    m = jnp.maximum(jnp.max(logits, axis=-1, keepdims=True), NEG_INF / 2)
+    p = jnp.exp(logits - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("hk,hkd->hd", p, v)
+    return out, jnp.mean(p, axis=0) * mask
+
+
+def ref_rollout_step(a_bar, r, alpha):
+    """Reference attention-rollout accumulation step (paper Eqs. 2–3).
+
+    ``R^l = (alpha * A^l + (1 - alpha) * I) @ R^{l-1}`` with the convex
+    residual combination of the head-averaged attention matrix.
+
+    Args:
+      a_bar: ``[n, n]`` head-averaged attention probabilities at layer l.
+      r: ``[n, n]`` rollout accumulated through layer l-1 (identity at l=0).
+      alpha: residual/attention balance in [0, 1].
+
+    Returns:
+      ``[n, n]`` updated rollout.
+    """
+    n = a_bar.shape[0]
+    a_tilde = alpha * a_bar + (1.0 - alpha) * jnp.eye(n, dtype=a_bar.dtype)
+    return a_tilde @ r
+
+
+def ref_attention_probs(q, k, mask, causal=True):
+    """Head-averaged attention probability matrix ``[n, n]``.
+
+    Calibration-path helper (offline only — the serving path never
+    materializes this map). Rows are queries, columns keys.
+    """
+    h, n, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    logits = logits + attention_bias(mask, n, causal)[None, :, :]
+    m = jnp.maximum(jnp.max(logits, axis=-1, keepdims=True), NEG_INF / 2)
+    p = jnp.exp(logits - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.mean(p, axis=0)

@@ -1,0 +1,68 @@
+"""Attention-rollout accumulation step as a tiled Pallas matmul kernel.
+
+Calibration path only (paper Eqs. 2–3): ``R^l = (a*A + (1-a)*I) @ R^{l-1}``.
+The residual convex combination is fused into the matmul's left operand
+tile-by-tile, so the intermediate ``A-tilde`` matrix is never allocated.
+
+Grid: (rows/bm, cols/bn); the contraction dimension streams in ``bkk``
+tiles inside the kernel. ``interpret=True`` mandatory on this image.
+"""
+
+import functools
+
+from .attention import pick_block
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rollout_kernel(a_ref, r_ref, o_ref, *, bm, bn, bkk, n, alpha):
+    """One (row-block, col-block) output tile of R' = A_tilde @ R."""
+    i = pl.program_id(0)
+    acc = jnp.zeros((bm, bn), dtype=jnp.float32)
+
+    row_pos = i * bm + jax.lax.iota(jnp.int32, bm)
+
+    def body(kb, acc):
+        a_tile = a_ref[0:bm, pl.ds(kb * bkk, bkk)].astype(jnp.float32)
+        # Fuse A_tilde = alpha*A + (1-alpha)*I into the loaded tile.
+        col_pos = kb * bkk + jax.lax.iota(jnp.int32, bkk)
+        eye = (row_pos[:, None] == col_pos[None, :]).astype(jnp.float32)
+        a_tile = alpha * a_tile + (1.0 - alpha) * eye
+        r_tile = r_ref[pl.ds(kb * bkk, bkk), 0:bn].astype(jnp.float32)
+        return acc + a_tile @ r_tile
+
+    acc = jax.lax.fori_loop(0, n // bkk, body, acc)
+    o_ref[:, :] = acc.astype(o_ref.dtype)
+
+
+def rollout_step(a_bar, r, alpha, block=None):
+    """One rollout accumulation step via the Pallas kernel.
+
+    Args:
+      a_bar: ``[n, n]`` head-averaged attention probabilities at layer l.
+      r: ``[n, n]`` rollout through layer l-1.
+      alpha: python float, residual/attention balance (baked at lowering).
+      block: square tile size; default ``min(n, 128)``; must divide n.
+
+    Returns:
+      ``[n, n]`` updated rollout; matches ``ref.ref_rollout_step``.
+    """
+    n = a_bar.shape[0]
+    b = block or pick_block(n)
+    assert n % b == 0, (n, b)
+    kernel = functools.partial(
+        _rollout_kernel, bm=b, bn=b, bkk=b, n=n, alpha=float(alpha)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // b, n // b),
+        in_specs=[
+            pl.BlockSpec((b, n), lambda ii, jj: (ii, 0)),
+            pl.BlockSpec((n, b), lambda ii, jj: (0, jj)),
+        ],
+        out_specs=pl.BlockSpec((b, b), lambda ii, jj: (ii, jj)),
+        out_shape=jax.ShapeDtypeStruct((n, n), a_bar.dtype),
+        interpret=True,
+    )(a_bar, r)

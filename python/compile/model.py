@@ -1,0 +1,328 @@
+"""L2: the AV-LLM decoder in JAX — every computation the rust runtime executes.
+
+Entry points (AOT-lowered per bucket by ``aot.py``; flat argument lists are
+the rust↔artifact ABI, documented per function):
+
+  * :func:`prefill_front`  — fused layers ``0..mid`` over the full prompt.
+  * :func:`back_layer`     — one layer ``>= mid`` returning the last-query
+    importance scores that drive FastAV's fine pruning.
+  * :func:`decode_layer`   — one layer of a single-token decode step over a
+    compacted KV cache (fused attention + importance).
+  * :func:`logits_head`    — final RMSNorm + tied unembedding.
+  * :func:`calib_probe`    — all-layer rollout + raw-attention stacks
+    (offline calibration; Figs. 1–2).
+
+Also hosts the batched training forward (:func:`train_forward`) — pure jnp
+(numerically identical to the kernels; see test_kernels.py) so build-time
+training is fast on CPU.
+
+Weights are runtime *arguments*, never baked into artifacts: one artifact
+serves all layers of all checkpoints with the same shape.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    decode_attention,
+    flash_attention,
+    importance_scores,
+    rollout_step,
+    ref,
+)
+
+EPS = 1e-5
+
+
+# ------------------------------------------------------------ building blocks
+
+
+def rms_norm(x, scale):
+    """RMSNorm over the last axis (scale-only, LLaMA-style)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + EPS) * scale
+
+
+def rope_angles(positions, d_head, theta):
+    """Rotation angles ``[n, d_head/2]`` for explicit integer positions.
+
+    Positions are *original* sequence positions — compaction after pruning
+    re-indexes rows but keeps these phases, which is what makes pruned and
+    masked execution equivalent (integration-tested on the rust side).
+    """
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) * 2.0 / d_head)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x, angles):
+    """Rotate feature pairs of ``x [..., n, H, dh]`` by ``angles [..., n, half]``."""
+    half = x.shape[-1] // 2
+    x1 = x[..., :half]
+    x2 = x[..., half:]
+    # angles: [..., n, half] -> insert a heads axis before the last dim.
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def qkv_project(x, wq, wk, wv, n_heads, d_head, angles):
+    """Project hidden states to per-head Q/K/V with RoPE applied to Q and K.
+
+    Args:
+      x: ``[n, d]`` normalized hidden states.
+      angles: ``[n, d_head/2]`` RoPE angles for these rows.
+
+    Returns:
+      q, k, v each ``[H, n, dh]``.
+    """
+    n = x.shape[0]
+
+    def heads(w):
+        return (x @ w).reshape(n, n_heads, d_head)
+
+    q = apply_rope(heads(wq), angles)
+    k = apply_rope(heads(wk), angles)
+    v = heads(wv)
+    return (
+        jnp.transpose(q, (1, 0, 2)),
+        jnp.transpose(k, (1, 0, 2)),
+        jnp.transpose(v, (1, 0, 2)),
+    )
+
+
+def swiglu(x, wg, wu, wd):
+    """SwiGLU MLP: ``(silu(x Wg) * (x Wu)) Wd``."""
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+def _attend(q, k, v, mask, use_pallas):
+    if use_pallas:
+        return flash_attention(q, k, v, mask, causal=True)
+    return ref.ref_attention(q, k, v, mask, causal=True)
+
+
+def layer_fwd(h, mask, angles, p, cfg, use_pallas):
+    """One pre-LN transformer block over ``[n, d]`` hidden states.
+
+    ``p`` is the per-layer parameter dict (ln1, wq, wk, wv, wo, ln2, wg,
+    wu, wd). Returns (h', k, v, q) with k/v/q in ``[H, n, dh]``.
+    """
+    x = rms_norm(h, p["ln1"])
+    q, k, v = qkv_project(x, p["wq"], p["wk"], p["wv"], cfg.n_heads, cfg.d_head, angles)
+    attn = _attend(q, k, v, mask, use_pallas)  # [H, n, dh]
+    attn = jnp.transpose(attn, (1, 0, 2)).reshape(h.shape[0], cfg.d_model)
+    h = h + (attn * mask[:, None]) @ p["wo"]
+    x2 = rms_norm(h, p["ln2"])
+    h = h + swiglu(x2, p["wg"], p["wu"], p["wd"]) * mask[:, None]
+    return h, k, v, q
+
+
+LAYER_PARAM_NAMES = ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")
+
+
+def _layer_dict(args):
+    return dict(zip(LAYER_PARAM_NAMES, args))
+
+
+# ------------------------------------------------------------- AOT entry points
+
+
+def prefill_front(cfg, use_pallas, x_emb, mask, positions, *stacked):
+    """Layers ``0..mid`` fused over the full prompt (one dispatch).
+
+    ABI (all float32 unless noted):
+      inputs:  x_emb ``[n, d]``; mask ``[n]``; positions ``[n]`` int32;
+               then the 9 per-layer params each stacked ``[mid, ...]`` in
+               ``LAYER_PARAM_NAMES`` order.
+      outputs: (h ``[n, d]``, k_stack ``[mid, H, n, dh]``,
+                v_stack ``[mid, H, n, dh]``)
+    """
+    angles = rope_angles(positions, cfg.d_head, cfg.rope_theta)
+    params = _layer_dict(stacked)
+
+    def step(h, layer_params):
+        h, k, v, _ = layer_fwd(h, mask, angles, layer_params, cfg, use_pallas)
+        return h, (k, v)
+
+    h, (k_stack, v_stack) = jax.lax.scan(step, x_emb, params)
+    return h, k_stack, v_stack
+
+
+def back_layer(cfg, use_pallas, h, mask, positions, last_idx, *layer_params):
+    """One post-mid layer during prefill + FastAV importance (paper Eq. 4).
+
+    ABI:
+      inputs:  h ``[n, d]``; mask ``[n]``; positions ``[n]`` int32;
+               last_idx ``[]`` int32 (row of the final prompt token after
+               compaction); 9 single-layer params.
+      outputs: (h' ``[n, d]``, k ``[H, n, dh]``, v ``[H, n, dh]``,
+                s ``[n]`` importance scores).
+    """
+    p = _layer_dict(layer_params)
+    angles = rope_angles(positions, cfg.d_head, cfg.rope_theta)
+    h_out, k, v, q = layer_fwd(h, mask, angles, p, cfg, use_pallas)
+    q_last = jax.lax.dynamic_index_in_dim(q, last_idx, axis=1, keepdims=False)  # [H, dh]
+    if use_pallas:
+        s = importance_scores(q_last, k, mask)
+    else:
+        s = ref.ref_importance(q_last, k, mask)
+    return h_out, k, v, s
+
+
+def decode_layer(cfg, use_pallas, x, pos, cur_idx, k_cache, v_cache, mask, *layer_params):
+    """One layer of a single-token decode step over a compacted cache.
+
+    The current token's K/V are computed here, written into slot
+    ``cur_idx`` (the rust coordinator guarantees ``mask[cur_idx] == 1`` and
+    that the slot is otherwise unused), and returned so the host cache can
+    be updated without re-reading device memory.
+
+    ABI:
+      inputs:  x ``[d]``; pos ``[]`` int32 (original position of the new
+               token); cur_idx ``[]`` int32 (its cache slot);
+               k_cache/v_cache ``[H, n, dh]``; mask ``[n]``; 9 params.
+      outputs: (x' ``[d]``, k_new ``[H, dh]``, v_new ``[H, dh]``,
+                s ``[n]`` importance row incl. the new token).
+    """
+    p = _layer_dict(layer_params)
+    xi = rms_norm(x, p["ln1"])[None, :]  # [1, d]
+    angles = rope_angles(jnp.reshape(pos, (1,)), cfg.d_head, cfg.rope_theta)
+    q, k, v = qkv_project(xi, p["wq"], p["wk"], p["wv"], cfg.n_heads, cfg.d_head, angles)
+    k_new = k[:, 0, :]
+    v_new = v[:, 0, :]
+    k_full = jax.lax.dynamic_update_index_in_dim(k_cache, k_new, cur_idx, axis=1)
+    v_full = jax.lax.dynamic_update_index_in_dim(v_cache, v_new, cur_idx, axis=1)
+    q1 = q[:, 0, :]
+    if use_pallas:
+        out, s = decode_attention(q1, k_full, v_full, mask)
+    else:
+        out, s = ref.ref_decode_attention(q1, k_full, v_full, mask)
+    x = x + out.reshape(cfg.d_model) @ p["wo"]
+    x2 = rms_norm(x, p["ln2"])
+    x = x + swiglu(x2, p["wg"], p["wu"], p["wd"])
+    return x, k_new, v_new, s
+
+
+def logits_head(cfg, x, ln_f, emb):
+    """Final RMSNorm + tied unembedding.
+
+    ABI: inputs x ``[d]``, ln_f ``[d]``, emb ``[vocab, d]``;
+         output logits ``[vocab]``.
+    """
+    return rms_norm(x, ln_f) @ emb.T
+
+
+def calib_probe(cfg, x_emb, mask, positions, *stacked):
+    """Offline rollout/attention probe over all L layers (calibration path).
+
+    Runs the vanilla forward and records, per layer: the head-averaged raw
+    attention map and the accumulated rollout
+    ``R^l = (a A^l + (1-a) I) R^{l-1}`` (paper Eqs. 2–3; the accumulation
+    itself is the Pallas :func:`rollout_step` kernel).
+
+    ABI:
+      inputs:  x_emb ``[n, d]``; mask ``[n]``; positions ``[n]`` int32;
+               9 params stacked ``[L, ...]``.
+      outputs: (rollout_stack ``[L, n, n]``, attn_stack ``[L, n, n]``).
+    """
+    n = x_emb.shape[0]
+    angles = rope_angles(positions, cfg.d_head, cfg.rope_theta)
+    params = _layer_dict(stacked)
+    alpha = cfg.rollout_alpha
+
+    def step(carry, layer_params):
+        h, r = carry
+        x = rms_norm(h, layer_params["ln1"])
+        q, k, v = qkv_project(
+            x, layer_params["wq"], layer_params["wk"], layer_params["wv"],
+            cfg.n_heads, cfg.d_head, angles,
+        )
+        a_bar = ref.ref_attention_probs(q, k, mask, causal=True)  # [n, n]
+        r = rollout_step(a_bar, r, alpha)
+        attn = ref.ref_attention(q, k, v, mask, causal=True)
+        attn = jnp.transpose(attn, (1, 0, 2)).reshape(n, cfg.d_model)
+        h = h + (attn * mask[:, None]) @ layer_params["wo"]
+        x2 = rms_norm(h, layer_params["ln2"])
+        h = h + swiglu(x2, layer_params["wg"], layer_params["wu"], layer_params["wd"]) * mask[:, None]
+        return (h, r), (r, a_bar)
+
+    init = (x_emb, jnp.eye(n, dtype=jnp.float32))
+    (_, _), (rollout_stack, attn_stack) = jax.lax.scan(step, init, params)
+    return rollout_stack, attn_stack
+
+
+# ---------------------------------------------------------------- training path
+
+
+def batched_attention(q, k, v, mask):
+    """Causal MHA over a batch: q/k/v ``[B, H, n, dh]``, mask ``[B, n]``."""
+    b, h, n, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    bias = jnp.where(mask[:, None, None, :] > 0.5, 0.0, ref.NEG_INF)
+    tri = jnp.where(
+        jnp.arange(n)[None, :] <= jnp.arange(n)[:, None], 0.0, ref.NEG_INF
+    )
+    logits = logits + bias + tri[None, None, :, :]
+    m = jnp.maximum(jnp.max(logits, axis=-1, keepdims=True), ref.NEG_INF / 2)
+    p = jnp.exp(logits - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def train_forward(cfg, params, tokens, mask):
+    """Teacher-forced logits ``[B, n, vocab]`` for training.
+
+    ``params`` is the full pytree: ``{"emb", "ln_f", "layers": {name: [L, ...]}}``.
+    """
+    b, n = tokens.shape
+    h = params["emb"][tokens]  # [B, n, d]
+    positions = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    angles = rope_angles(positions, cfg.d_head, cfg.rope_theta)  # [B, n, half]
+
+    def step(h, layer_params):
+        x = rms_norm(h, layer_params["ln1"])
+
+        def heads(w):
+            return (x @ w).reshape(b, n, cfg.n_heads, cfg.d_head)
+
+        q = apply_rope(heads(layer_params["wq"]), angles)
+        k = apply_rope(heads(layer_params["wk"]), angles)
+        v = heads(layer_params["wv"])
+        q, k, v = (jnp.transpose(t, (0, 2, 1, 3)) for t in (q, k, v))
+        attn = batched_attention(q, k, v, mask)
+        attn = jnp.transpose(attn, (0, 2, 1, 3)).reshape(b, n, cfg.d_model)
+        h = h + (attn * mask[:, :, None]) @ layer_params["wo"]
+        x2 = rms_norm(h, layer_params["ln2"])
+        h = h + swiglu(x2, layer_params["wg"], layer_params["wu"], layer_params["wd"]) * mask[:, :, None]
+        return h, None
+
+    h, _ = jax.lax.scan(step, h, params["layers"])
+    h = rms_norm(h, params["ln_f"])
+    return h @ params["emb"].T
+
+
+def init_params(cfg, key):
+    """Initialize the parameter pytree (scaled-normal, zero-mean)."""
+    keys = jax.random.split(key, 8)
+    d, ff, l = cfg.d_model, cfg.d_ff, cfg.n_layers
+
+    def normal(k, shape, scale):
+        return jax.random.normal(k, shape, jnp.float32) * scale
+
+    return {
+        "emb": normal(keys[0], (cfg.vocab, d), 0.02),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "layers": {
+            "ln1": jnp.ones((l, d), jnp.float32),
+            "wq": normal(keys[1], (l, d, d), d ** -0.5),
+            "wk": normal(keys[2], (l, d, d), d ** -0.5),
+            "wv": normal(keys[3], (l, d, d), d ** -0.5),
+            "wo": normal(keys[4], (l, d, d), (2 * l * d) ** -0.5),
+            "ln2": jnp.ones((l, d), jnp.float32),
+            "wg": normal(keys[5], (l, d, ff), d ** -0.5),
+            "wu": normal(keys[6], (l, d, ff), d ** -0.5),
+            "wd": normal(keys[7], (l, ff, d), (2 * l * ff) ** -0.5),
+        },
+    }

@@ -1,0 +1,44 @@
+"""SplitMix64 — deterministic RNG shared bit-exactly with the rust side.
+
+The synthetic AV task generators exist twice: here (training data, L2) and
+in ``rust/src/avsynth/`` (serving + evaluation). Both sides must produce
+*identical* sample streams from the same seed, so both implement this exact
+SplitMix64. ``python/tests/test_avsynth.py`` and rust's
+``avsynth::tests::rng_reference_vectors`` pin the same reference vectors.
+"""
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """SplitMix64 PRNG (Steele et al.); 64-bit state, 64-bit output."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_below(self, n: int) -> int:
+        """Uniform integer in [0, n) via 64-bit modulo (bias negligible,
+        and — critically — identical on both implementations)."""
+        assert n > 0
+        return self.next_u64() % n
+
+    def next_f64(self) -> float:
+        """Uniform float in [0, 1) with 53 bits of entropy."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def chance(self, p: float) -> bool:
+        return self.next_f64() < p
+
+
+def derive_seed(base_seed: int, stream: int, index: int) -> int:
+    """Per-(stream, sample) seed derivation — one SplitMix64 scramble of the
+    mixed inputs so neighbouring indices decorrelate. Mirrored in rust."""
+    mixer = SplitMix64((base_seed ^ (stream * 0x9E3779B97F4A7C15) ^ index) & MASK64)
+    return mixer.next_u64()

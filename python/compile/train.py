@@ -1,0 +1,185 @@
+"""Build-time training of the simulated AV-LLMs (L2, python-only).
+
+Trains each model config on the avsynth task mixture with a hand-written
+Adam (no optax on this image) and exports ``weights.bin`` + loss curve.
+Runs once from ``make artifacts``; never on the serving path.
+
+Usage: python -m compile.train [--model vl2sim] [--steps N] [--out DIR]
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import avsynth
+from .config import CONFIGS, WEIGHT_ALIASES
+from .export import save_weights
+from .model import init_params, train_forward
+from . import vocab as V
+
+
+def make_batch(cfg, rng_indices, base_seed, bucket, dataset="train"):
+    """Assemble a teacher-forced batch from avsynth samples.
+
+    Returns (tokens [B, n], attn_mask [B, n], loss_mask [B, n]) where
+    ``loss_mask[i] == 1`` at positions whose *next*-token target is an
+    answer token.
+    """
+    b = len(rng_indices)
+    tokens = np.zeros((b, bucket), dtype=np.int32)
+    attn_mask = np.zeros((b, bucket), dtype=np.float32)
+    loss_mask = np.zeros((b, bucket), dtype=np.float32)
+    for i, idx in enumerate(rng_indices):
+        s = avsynth.gen_sample(cfg.layout, dataset, int(idx), base_seed)
+        seq = s.prompt + s.answer
+        assert len(seq) <= bucket, (len(seq), bucket)
+        tokens[i, :len(seq)] = seq
+        attn_mask[i, :len(seq)] = 1.0
+        # Positions len(prompt)-1 .. len(seq)-2 predict the answer tokens.
+        loss_mask[i, len(s.prompt) - 1:len(seq) - 1] = 1.0
+    return jnp.asarray(tokens), jnp.asarray(attn_mask), jnp.asarray(loss_mask)
+
+
+def loss_fn(cfg, params, tokens, attn_mask, loss_mask):
+    logits = train_forward(cfg, params, tokens, attn_mask)  # [B, n, vocab]
+    targets = jnp.roll(tokens, -1, axis=1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * loss_mask) / jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(step, total, base_lr, warmup=50):
+    warm = jnp.minimum(step / warmup, 1.0)
+    progress = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cosine = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return base_lr * warm * (0.03 + 0.97 * cosine)
+
+
+def clip_grads(grads, max_norm=1.0):
+    """Global-norm gradient clipping (stabilizes the retrieval heads)."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def answer_accuracy(cfg, params, tokens, attn_mask, loss_mask):
+    """Teacher-forced exact-answer accuracy: every answer token argmax-correct."""
+    logits = train_forward(cfg, params, tokens, attn_mask)
+    targets = jnp.roll(tokens, -1, axis=1)
+    pred = jnp.argmax(logits, axis=-1)
+    tok_ok = jnp.where(loss_mask > 0, (pred == targets).astype(jnp.float32), 1.0)
+    sample_ok = jnp.min(tok_ok, axis=1)
+    return float(jnp.mean(sample_ok))
+
+
+def train_model(cfg, out_dir, steps=None, log_every=25, extend=False):
+    """Train from scratch, or — with ``extend=True`` and an existing
+    checkpoint — continue training (used to add task emphasis without a
+    full retrain; the avsynth train stream controls the mixture)."""
+    steps = steps or cfg.train_steps
+    bucket = cfg.prefill_buckets[0]
+    key = jax.random.PRNGKey(cfg.train_seed)
+    if extend and os.path.exists(os.path.join(out_dir, "weights.bin")):
+        from .export import load_weights
+        loaded = load_weights(out_dir, cfg)
+        params = {
+            "emb": jnp.asarray(loaded["emb"]),
+            "ln_f": jnp.asarray(loaded["ln_f"]),
+            "layers": {k: jnp.asarray(v) for k, v in loaded["layers"].items()},
+        }
+        print(f"[{cfg.name}] extending from existing checkpoint")
+    else:
+        params = init_params(cfg, key)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, tokens, attn_mask, loss_mask, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, attn_mask, loss_mask)
+        )(params)
+        grads = clip_grads(grads)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    curve = []
+    t0 = time.time()
+    # Extension runs draw from a disjoint index range so they see fresh
+    # samples under the (possibly re-weighted) train mixture.
+    base_idx = 5_000_000 if extend else 0
+    for step in range(steps):
+        idx = base_idx + np.arange(step * cfg.train_batch, (step + 1) * cfg.train_batch)
+        tokens, attn_mask, loss_mask = make_batch(cfg, idx, cfg.train_seed, bucket)
+        base_lr = cfg.train_lr * (0.5 if extend else 1.0)  # gentler fine-tune
+        lr = lr_schedule(jnp.float32(step), steps, base_lr)
+        params, opt, loss = step_fn(params, opt, tokens, attn_mask, loss_mask, lr)
+        if step % log_every == 0 or step == steps - 1:
+            loss_v = float(loss)
+            curve.append((step, loss_v))
+            print(f"[{cfg.name}] step {step:4d}  loss {loss_v:.4f}  "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+    # Held-out evaluation (indices far beyond the training range).
+    accs = []
+    for ev in range(4):
+        idx = np.arange(10_000_000 + ev * cfg.train_batch, 10_000_000 + (ev + 1) * cfg.train_batch)
+        tokens, attn_mask, loss_mask = make_batch(cfg, idx, cfg.train_seed, bucket)
+        accs.append(answer_accuracy(cfg, params, tokens, attn_mask, loss_mask))
+    acc = float(np.mean(accs))
+    print(f"[{cfg.name}] held-out teacher-forced answer accuracy: {acc:.3f}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    save_weights(params, out_dir)
+    with open(os.path.join(out_dir, "train_loss.csv"), "w") as f:
+        f.write("step,loss\n")
+        for s, l in curve:
+            f.write(f"{s},{l:.6f}\n")
+    with open(os.path.join(out_dir, "train_summary.txt"), "w") as f:
+        f.write(f"model={cfg.name} steps={steps} final_loss={curve[-1][1]:.4f} "
+                f"heldout_acc={acc:.4f}\n")
+    return acc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="all", help="config name or 'all'")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--extend", action="store_true",
+                    help="continue training an existing checkpoint")
+    args = ap.parse_args()
+
+    names = [n for n in CONFIGS if n not in WEIGHT_ALIASES] if args.model == "all" else [args.model]
+    for name in names:
+        cfg = CONFIGS[name]
+        out_dir = os.path.join(args.out, name)
+        if not args.extend and os.path.exists(os.path.join(out_dir, "weights.bin")):
+            print(f"[{name}] weights exist, skipping (delete to retrain)")
+            continue
+        train_model(cfg, out_dir, steps=args.steps, extend=args.extend)
+
+
+if __name__ == "__main__":
+    main()

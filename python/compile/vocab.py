@@ -1,0 +1,73 @@
+"""Structured vocabulary for the synthetic AV task suite.
+
+Shared layout with ``rust/src/tokens/vocab.rs`` — keep the two in sync
+(pinned by cross-implementation tests). Vocabulary size is 256.
+
+Layout:
+  0..15    control + answer words (PAD, BOS, EOS, SEP, YES, NO, ...)
+  16..31   scene classes   (visual evidence + answer words)
+  32..47   sound classes   (audio evidence + answer words)
+  48..57   digits 0-9      (counting answers)
+  58..63   reserved
+  64..127  visual noise tokens
+  128..191 audio noise tokens
+  192..207 question words (one per question type)
+  208..223 beat marker + misc audio events
+  224..255 reserved
+"""
+
+VOCAB_SIZE = 256
+
+PAD = 0
+BOS = 1
+EOS = 2
+SEP = 3
+YES = 4
+NO = 5
+
+NUM_CLASSES = 16
+
+SCENE_BASE = 16   # scene class c -> token SCENE_BASE + c
+SOUND_BASE = 32   # sound class c -> token SOUND_BASE + c
+DIGIT_BASE = 48   # digit k (0..9) -> token DIGIT_BASE + k
+
+VIS_NOISE_BASE = 64
+VIS_NOISE_COUNT = 64
+AUD_NOISE_BASE = 128
+AUD_NOISE_COUNT = 64
+
+# Question-word tokens (one per question type).
+Q_WHAT_SCENE = 192
+Q_WHAT_SOUND = 193
+Q_SCENE_SOUND = 194
+Q_HOW_MANY_BEATS = 195
+Q_WHICH_INSTRUMENT = 196
+Q_IS_THERE_SCENE = 197
+Q_IS_THERE_SOUND = 198
+Q_AV_MATCH = 199
+Q_DESCRIBE = 200
+
+BEAT = 208  # audio beat marker for the counting task
+
+
+def scene_token(c: int) -> int:
+    assert 0 <= c < NUM_CLASSES
+    return SCENE_BASE + c
+
+
+def sound_token(c: int) -> int:
+    assert 0 <= c < NUM_CLASSES
+    return SOUND_BASE + c
+
+
+def digit_token(k: int) -> int:
+    assert 0 <= k <= 9
+    return DIGIT_BASE + k
+
+
+def is_vis_noise(t: int) -> bool:
+    return VIS_NOISE_BASE <= t < VIS_NOISE_BASE + VIS_NOISE_COUNT
+
+
+def is_aud_noise(t: int) -> bool:
+    return AUD_NOISE_BASE <= t < AUD_NOISE_BASE + AUD_NOISE_COUNT

@@ -1,0 +1,69 @@
+"""AOT pipeline smoke tests: lowering emits parseable HLO text with the
+expected entry computation, and the weights export round-trips.
+"""
+
+import json
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from compile import aot
+from compile.config import TINY
+from compile.export import flatten_params, load_weights, save_weights
+from compile.model import init_params
+
+
+def test_entry_specs_shapes():
+    specs = aot.entry_specs(TINY, "prefill_front", 32)
+    assert specs[0].shape == (32, TINY.d_model)
+    assert specs[1].shape == (32,)
+    assert specs[2].shape == (32,)
+    # 9 stacked layer params.
+    assert len(specs) == 3 + 9
+    assert specs[3].shape == (TINY.mid_layer, TINY.d_model)
+
+    specs = aot.entry_specs(TINY, "decode_layer", 16)
+    assert specs[3].shape == (TINY.n_heads, 16, TINY.d_head)
+    assert len(specs) == 6 + 9
+
+
+def test_lower_back_layer_produces_hlo(tmp_path):
+    path = tmp_path / "back_layer_16.hlo.txt"
+    assert aot.lower_entry(TINY, "back_layer", 16, True, str(path), force=True)
+    text = path.read_text()
+    assert "ENTRY" in text and "HloModule" in text
+    # Lowering again without force is a no-op.
+    assert not aot.lower_entry(TINY, "back_layer", 16, True, str(path), force=False)
+
+
+def test_lower_logits_produces_hlo(tmp_path):
+    path = tmp_path / "logits.hlo.txt"
+    assert aot.lower_entry(TINY, "logits", 0, False, str(path), force=True)
+    assert "ENTRY" in path.read_text()
+
+
+def test_abi_json_serializable():
+    abi = aot.abi_of(TINY, "decode_layer", 16)
+    txt = json.dumps(abi)
+    parsed = json.loads(txt)
+    assert parsed[0]["shape"] == [TINY.d_model]
+    assert parsed[1]["dtype"] == "int32"
+
+
+def test_weights_roundtrip(tmp_path):
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    save_weights(params, str(tmp_path))
+    loaded = load_weights(str(tmp_path), TINY)
+    flat_a = flatten_params(params)
+    flat_b = flatten_params(loaded)
+    assert flat_a.keys() == flat_b.keys()
+    for k in flat_a:
+        np.testing.assert_array_equal(flat_a[k], flat_b[k])
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    total = manifest["total_elements"]
+    assert os.path.getsize(tmp_path / "weights.bin") == total * 4
+    # Offsets are contiguous and ordered.
+    offs = [t["offset"] for t in manifest["tensors"]]
+    assert offs == sorted(offs) and offs[0] == 0

@@ -1,0 +1,223 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Every Pallas kernel is compared against its pure-jnp reference from
+``compile.kernels.ref`` over a hypothesis-driven sweep of shapes, block
+sizes, and mask patterns, plus deterministic edge cases (full mask, empty
+mask, single block, non-square blocks).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    decode_attention,
+    flash_attention,
+    importance_scores,
+    rollout_step,
+    ref,
+)
+
+# interpret-mode pallas is slow; keep hypothesis example counts modest.
+EXAMPLES = 12
+DEADLINE = None
+
+
+def make_qkv(rng, h, n, dh):
+    q = rng.standard_normal((h, n, dh), dtype=np.float32)
+    k = rng.standard_normal((h, n, dh), dtype=np.float32)
+    v = rng.standard_normal((h, n, dh), dtype=np.float32)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+def prefix_mask(n, valid):
+    return jnp.asarray((np.arange(n) < valid).astype(np.float32))
+
+
+# ---------------------------------------------------------------- attention
+
+
+@settings(max_examples=EXAMPLES, deadline=DEADLINE)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    n=st.sampled_from([16, 32, 64, 128]),
+    dh=st.sampled_from([8, 16, 32]),
+    valid_frac=st.floats(0.2, 1.0),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(h, n, dh, valid_frac, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = make_qkv(rng, h, n, dh)
+    mask = prefix_mask(n, max(1, int(n * valid_frac)))
+    bq = bk = min(n, 32)
+    got = flash_attention(q, k, v, mask, causal=causal, block_q=bq, block_k=bk)
+    want = ref.ref_attention(q, k, v, mask, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(16, 64), (64, 16), (32, 32), (64, 64)])
+def test_attention_block_shapes(bq, bk):
+    rng = np.random.default_rng(7)
+    q, k, v = make_qkv(rng, 2, 64, 16)
+    mask = prefix_mask(64, 64)
+    got = flash_attention(q, k, v, mask, causal=True, block_q=bq, block_k=bk)
+    want = ref.ref_attention(q, k, v, mask, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_scattered_mask():
+    """Masks need not be prefixes — compaction leaves arbitrary hole patterns."""
+    rng = np.random.default_rng(11)
+    q, k, v = make_qkv(rng, 2, 32, 8)
+    m = (rng.random(32) > 0.4).astype(np.float32)
+    m[0] = 1.0  # keep at least the first key so row 0 is attendable
+    mask = jnp.asarray(m)
+    got = flash_attention(q, k, v, mask, causal=True, block_q=16, block_k=16)
+    want = ref.ref_attention(q, k, v, mask, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_single_block():
+    rng = np.random.default_rng(3)
+    q, k, v = make_qkv(rng, 1, 16, 8)
+    mask = prefix_mask(16, 16)
+    got = flash_attention(q, k, v, mask, causal=False, block_q=16, block_k=16)
+    want = ref.ref_attention(q, k, v, mask, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_fully_masked_rows_finite():
+    """Rows whose keys are all masked must produce finite output, not NaN."""
+    rng = np.random.default_rng(5)
+    q, k, v = make_qkv(rng, 2, 32, 8)
+    mask = jnp.zeros((32,), jnp.float32)
+    got = flash_attention(q, k, v, mask, causal=True, block_q=16, block_k=16)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_attention_causality():
+    """Future keys must not influence earlier queries."""
+    rng = np.random.default_rng(9)
+    q, k, v = make_qkv(rng, 2, 32, 8)
+    mask = prefix_mask(32, 32)
+    base = np.asarray(flash_attention(q, k, v, mask, block_q=16, block_k=16))
+    # Perturb the last key/value; only the last row may change.
+    k2 = k.at[:, -1, :].add(3.0)
+    v2 = v.at[:, -1, :].add(3.0)
+    pert = np.asarray(flash_attention(q, k2, v2, mask, block_q=16, block_k=16))
+    np.testing.assert_allclose(base[:, :-1, :], pert[:, :-1, :], atol=1e-6)
+    assert np.abs(base[:, -1, :] - pert[:, -1, :]).max() > 1e-4
+
+
+# --------------------------------------------------------------- importance
+
+
+@settings(max_examples=EXAMPLES, deadline=DEADLINE)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    n=st.sampled_from([16, 32, 64, 128]),
+    dh=st.sampled_from([8, 16, 32]),
+    valid_frac=st.floats(0.2, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_importance_matches_ref(h, n, dh, valid_frac, seed):
+    rng = np.random.default_rng(seed)
+    _, k, _ = make_qkv(rng, h, n, dh)
+    q_last = jnp.asarray(rng.standard_normal((h, dh), dtype=np.float32))
+    mask = prefix_mask(n, max(1, int(n * valid_frac)))
+    got = importance_scores(q_last, k, mask, block_k=min(n, 32))
+    want = ref.ref_importance(q_last, k, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6, rtol=1e-5)
+
+
+def test_importance_sums_to_one():
+    """Scores are a probability distribution over valid keys."""
+    rng = np.random.default_rng(1)
+    _, k, _ = make_qkv(rng, 4, 64, 16)
+    q_last = jnp.asarray(rng.standard_normal((4, 16), dtype=np.float32))
+    mask = prefix_mask(64, 40)
+    s = np.asarray(importance_scores(q_last, k, mask, block_k=32))
+    assert abs(s.sum() - 1.0) < 1e-5
+    assert (s[40:] == 0).all()
+    assert (s >= 0).all()
+
+
+def test_importance_zero_on_padding():
+    rng = np.random.default_rng(2)
+    _, k, _ = make_qkv(rng, 2, 32, 8)
+    q_last = jnp.asarray(rng.standard_normal((2, 8), dtype=np.float32))
+    mask = prefix_mask(32, 7)
+    s = np.asarray(importance_scores(q_last, k, mask, block_k=16))
+    assert (s[7:] == 0).all()
+
+
+# ------------------------------------------------------------------- decode
+
+
+@settings(max_examples=EXAMPLES, deadline=DEADLINE)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    n=st.sampled_from([16, 32, 64]),
+    dh=st.sampled_from([8, 16, 32]),
+    valid_frac=st.floats(0.2, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_matches_ref(h, n, dh, valid_frac, seed):
+    rng = np.random.default_rng(seed)
+    _, k, v = make_qkv(rng, h, n, dh)
+    q1 = jnp.asarray(rng.standard_normal((h, dh), dtype=np.float32))
+    mask = prefix_mask(n, max(1, int(n * valid_frac)))
+    got_o, got_s = decode_attention(q1, k, v, mask, block_k=min(n, 16))
+    want_o, want_s = ref.ref_decode_attention(q1, k, v, mask)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s), atol=1e-6, rtol=1e-5)
+
+
+def test_decode_importance_consistent_with_importance_kernel():
+    """The decode kernel's score row equals the standalone importance kernel."""
+    rng = np.random.default_rng(4)
+    _, k, v = make_qkv(rng, 4, 64, 16)
+    q1 = jnp.asarray(rng.standard_normal((4, 16), dtype=np.float32))
+    mask = prefix_mask(64, 64)
+    _, s_dec = decode_attention(q1, k, v, mask, block_k=32)
+    s_imp = importance_scores(q1, k, mask, block_k=32)
+    np.testing.assert_allclose(np.asarray(s_dec), np.asarray(s_imp), atol=1e-6)
+
+
+# ------------------------------------------------------------------ rollout
+
+
+@settings(max_examples=EXAMPLES, deadline=DEADLINE)
+@given(
+    n=st.sampled_from([16, 32, 64, 128]),
+    alpha=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rollout_matches_ref(n, alpha, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.random((n, n), dtype=np.float32))
+    r = jnp.asarray(rng.random((n, n), dtype=np.float32))
+    got = rollout_step(a, r, alpha, block=min(n, 32))
+    want = ref.ref_rollout_step(a, r, alpha)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_rollout_alpha_zero_is_identity():
+    """alpha=0 keeps R unchanged (pure residual)."""
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.random((32, 32), dtype=np.float32))
+    r = jnp.asarray(rng.random((32, 32), dtype=np.float32))
+    got = np.asarray(rollout_step(a, r, 0.0, block=16))
+    np.testing.assert_allclose(got, np.asarray(r), atol=1e-6)
+
+
+def test_rollout_preserves_row_stochasticity():
+    """Row-stochastic A and R give a row-stochastic R' for any alpha."""
+    rng = np.random.default_rng(8)
+    a = rng.random((32, 32)).astype(np.float32)
+    a /= a.sum(axis=1, keepdims=True)
+    r = np.eye(32, dtype=np.float32)
+    got = np.asarray(rollout_step(jnp.asarray(a), jnp.asarray(r), 0.7, block=16))
+    np.testing.assert_allclose(got.sum(axis=1), np.ones(32), atol=1e-5)

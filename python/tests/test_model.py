@@ -1,0 +1,226 @@
+"""L2 model correctness: the staged (prefill/back/decode) decomposition must
+be numerically equivalent to the monolithic training forward, and pruning
+(row gather + original positions) must equal masking.
+
+These are the invariants the whole rust serving path rests on.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import avsynth
+from compile.config import TINY
+from compile.model import (
+    back_layer,
+    calib_probe,
+    decode_layer,
+    init_params,
+    logits_head,
+    prefill_front,
+    train_forward,
+)
+
+CFG = TINY
+N = CFG.prefill_buckets[0]  # 32
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(42))
+
+
+@pytest.fixture(scope="module")
+def sample_tokens():
+    s = avsynth.gen_sample(CFG.layout, "avqa", 3, 1234)
+    return s
+
+
+def front_params(params):
+    return [params["layers"][k][: CFG.mid_layer] for k in
+            ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")]
+
+
+def layer_params(params, l):
+    return [params["layers"][k][l] for k in
+            ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")]
+
+
+def staged_last_logits(params, tokens, use_pallas=False):
+    """Run the staged pipeline (prefill_front -> back layers -> logits) and
+    return the next-token logits at the last valid position."""
+    klen = len(tokens)
+    x = np.zeros((N, CFG.d_model), np.float32)
+    x[:klen] = np.asarray(params["emb"])[tokens]
+    mask = np.zeros((N,), np.float32)
+    mask[:klen] = 1.0
+    pos = np.arange(N, dtype=np.int32)
+
+    h, ks, vs = prefill_front(CFG, use_pallas, jnp.asarray(x), jnp.asarray(mask),
+                              jnp.asarray(pos), *front_params(params))
+    for l in range(CFG.mid_layer, CFG.n_layers):
+        h, k, v, s = back_layer(CFG, use_pallas, h, jnp.asarray(mask),
+                                jnp.asarray(pos), jnp.int32(klen - 1),
+                                *layer_params(params, l))
+    logits = logits_head(CFG, h[klen - 1], params["ln_f"], params["emb"])
+    return np.asarray(logits)
+
+
+def monolithic_last_logits(params, tokens):
+    n = len(tokens)
+    toks = np.zeros((1, N), np.int32)
+    toks[0, :n] = tokens
+    mask = np.zeros((1, N), np.float32)
+    mask[0, :n] = 1.0
+    logits = train_forward(CFG, params, jnp.asarray(toks), jnp.asarray(mask))
+    return np.asarray(logits)[0, n - 1]
+
+
+def test_staged_equals_monolithic(params, sample_tokens):
+    """prefill_front + back_layer chain + logits == train_forward."""
+    tokens = sample_tokens.prompt
+    staged = staged_last_logits(params, tokens, use_pallas=False)
+    mono = monolithic_last_logits(params, tokens)
+    np.testing.assert_allclose(staged, mono, atol=2e-4, rtol=2e-4)
+
+
+def test_staged_pallas_equals_jnp(params, sample_tokens):
+    """The pallas-kernel artifact path matches the jnp path."""
+    tokens = sample_tokens.prompt
+    a = staged_last_logits(params, tokens, use_pallas=True)
+    b = staged_last_logits(params, tokens, use_pallas=False)
+    np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
+def test_decode_step_equals_teacher_forced(params, sample_tokens):
+    """Decoding one token via decode_layer over caches == monolithic forward
+    over prompt+token. This validates the entire KV-cache/decode ABI."""
+    tokens = list(sample_tokens.prompt)
+    next_tok = sample_tokens.answer[0]
+    klen = len(tokens)
+
+    # Stage 1: staged prefill collecting per-layer K/V.
+    x = np.zeros((N, CFG.d_model), np.float32)
+    x[:klen] = np.asarray(params["emb"])[tokens]
+    mask = np.zeros((N,), np.float32)
+    mask[:klen] = 1.0
+    pos = np.arange(N, dtype=np.int32)
+    h, ks, vs = prefill_front(CFG, False, jnp.asarray(x), jnp.asarray(mask),
+                              jnp.asarray(pos), *front_params(params))
+    caches = [(np.asarray(ks[l]), np.asarray(vs[l])) for l in range(CFG.mid_layer)]
+    for l in range(CFG.mid_layer, CFG.n_layers):
+        h, k, v, s = back_layer(CFG, False, h, jnp.asarray(mask), jnp.asarray(pos),
+                                jnp.int32(klen - 1), *layer_params(params, l))
+        caches.append((np.asarray(k), np.asarray(v)))
+
+    # Stage 2: decode the next token at slot klen.
+    mask2 = mask.copy()
+    mask2[klen] = 1.0
+    xt = np.asarray(params["emb"])[next_tok]
+    xcur = jnp.asarray(xt)
+    for l in range(CFG.n_layers):
+        kc, vc = caches[l]
+        xcur, k_new, v_new, s = decode_layer(
+            CFG, False, xcur, jnp.int32(klen), jnp.int32(klen),
+            jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(mask2),
+            *layer_params(params, l))
+    got = np.asarray(logits_head(CFG, xcur, params["ln_f"], params["emb"]))
+
+    want = monolithic_last_logits(params, tokens + [next_tok])
+    np.testing.assert_allclose(got, want, atol=3e-4, rtol=3e-4)
+
+
+def test_pruned_equals_masked(params, sample_tokens):
+    """Gather-compaction with original positions == zero-masking the same
+    rows: the kept tokens' hidden states must agree."""
+    tokens = sample_tokens.prompt
+    klen = len(tokens)
+    x = np.zeros((N, CFG.d_model), np.float32)
+    x[:klen] = np.asarray(params["emb"])[tokens]
+    mask = np.zeros((N,), np.float32)
+    mask[:klen] = 1.0
+    pos = np.arange(N, dtype=np.int32)
+    h, _, _ = prefill_front(CFG, False, jnp.asarray(x), jnp.asarray(mask),
+                            jnp.asarray(pos), *front_params(params))
+    h = np.asarray(h)
+
+    # Keep a scattered subset that includes the question tail + BOS.
+    keep = [0, 2, 3, 7, 9] + list(range(klen - 6, klen))
+    keep = sorted(set(keep))
+    l = CFG.mid_layer
+
+    # (a) masked execution at the original bucket.
+    m2 = np.zeros((N,), np.float32)
+    m2[keep] = 1.0
+    h_masked, _, _, _ = back_layer(CFG, False, jnp.asarray(h), jnp.asarray(m2),
+                                   jnp.asarray(pos), jnp.int32(klen - 1),
+                                   *layer_params(params, l))
+    h_masked = np.asarray(h_masked)
+
+    # (b) compacted execution at a smaller bucket with original positions.
+    nb = CFG.seq_buckets[0]  # 16
+    assert len(keep) <= nb
+    hc = np.zeros((nb, CFG.d_model), np.float32)
+    hc[:len(keep)] = h[keep]
+    mc = np.zeros((nb,), np.float32)
+    mc[:len(keep)] = 1.0
+    pc = np.zeros((nb,), np.int32)
+    pc[:len(keep)] = keep
+    h_compact, _, _, s = back_layer(CFG, False, jnp.asarray(hc), jnp.asarray(mc),
+                                    jnp.asarray(pc), jnp.int32(len(keep) - 1),
+                                    *layer_params(params, l))
+    h_compact = np.asarray(h_compact)
+
+    np.testing.assert_allclose(h_compact[:len(keep)], h_masked[keep],
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_back_layer_importance_properties(params, sample_tokens):
+    tokens = sample_tokens.prompt
+    klen = len(tokens)
+    x = np.zeros((N, CFG.d_model), np.float32)
+    x[:klen] = np.asarray(params["emb"])[tokens]
+    mask = np.zeros((N,), np.float32)
+    mask[:klen] = 1.0
+    pos = np.arange(N, dtype=np.int32)
+    h, _, _ = prefill_front(CFG, False, jnp.asarray(x), jnp.asarray(mask),
+                            jnp.asarray(pos), *front_params(params))
+    _, _, _, s = back_layer(CFG, False, h, jnp.asarray(mask), jnp.asarray(pos),
+                            jnp.int32(klen - 1), *layer_params(params, CFG.mid_layer))
+    s = np.asarray(s)
+    assert abs(s.sum() - 1.0) < 1e-4
+    assert (s[klen:] == 0).all()
+    assert (s >= 0).all()
+
+
+def test_calib_probe_shapes_and_stochasticity(params, sample_tokens):
+    tokens = sample_tokens.prompt
+    klen = len(tokens)
+    x = np.zeros((N, CFG.d_model), np.float32)
+    x[:klen] = np.asarray(params["emb"])[tokens]
+    mask = np.zeros((N,), np.float32)
+    mask[:klen] = 1.0
+    pos = np.arange(N, dtype=np.int32)
+    all_params = [params["layers"][k] for k in
+                  ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")]
+    roll, attn = calib_probe(CFG, jnp.asarray(x), jnp.asarray(mask),
+                             jnp.asarray(pos), *all_params)
+    roll, attn = np.asarray(roll), np.asarray(attn)
+    assert roll.shape == (CFG.n_layers, N, N)
+    assert attn.shape == (CFG.n_layers, N, N)
+    # Valid rows of both stacks are (approximately) stochastic.
+    for l in range(CFG.n_layers):
+        rs = roll[l, :klen].sum(axis=1)
+        np.testing.assert_allclose(rs, np.ones(klen), atol=1e-3)
+    # Rollout concentration on early tokens is a *trained* property, but
+    # mass must stay within the valid region even for random weights.
+    assert roll[:, :klen, klen:].max() < 1e-6
+
+
+def test_logits_head_matches_manual(params):
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(CFG.d_model, ).astype(np.float32))
+    got = np.asarray(logits_head(CFG, x, params["ln_f"], params["emb"]))
+    from compile.model import rms_norm
+    want = np.asarray(rms_norm(x, params["ln_f"]) @ params["emb"].T)
+    np.testing.assert_allclose(got, want, atol=1e-6)

@@ -1,0 +1,41 @@
+//! Shared glue for bench targets (criterion is not on this image; each
+//! bench is `harness = false` and uses `fastav::util::bench`).
+
+use std::path::PathBuf;
+
+use fastav::calibration::{calibrate, Calibration};
+use fastav::model::ModelEngine;
+
+#[allow(dead_code)]
+pub fn artifact_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Load a model's engine; `None` (with a SKIP note) when artifacts are
+/// missing so `cargo bench` stays green on a fresh checkout.
+#[allow(dead_code)]
+pub fn try_engine(model: &str) -> Option<ModelEngine> {
+    match ModelEngine::load(&artifact_root(), model) {
+        Ok(mut e) => {
+            e.warmup().ok();
+            Some(e)
+        }
+        Err(err) => {
+            eprintln!("SKIP {}: {:#} (run `make artifacts`)", model, err);
+            None
+        }
+    }
+}
+
+#[allow(dead_code)]
+pub fn load_or_calibrate(engine: &mut ModelEngine, samples: usize) -> Calibration {
+    let path = artifact_root()
+        .join(&engine.cfg.name)
+        .join("calibration.json");
+    if let Ok(c) = Calibration::load(&path) {
+        return c;
+    }
+    let c = calibrate(engine, samples, 1234).expect("calibration");
+    c.save(&path).ok();
+    c
+}

@@ -1,0 +1,50 @@
+//! Decode-latency benchmark (paper §3.1: "latency indicates the time in
+//! seconds to generate a single token during a forward pass").
+//!
+//! Measures per-token decode latency vanilla vs FastAV — the paper's
+//! headline ~30% latency reduction (Table 1) comes from decoding over
+//! pruned per-layer caches.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use fastav::avsynth::{gen_sample, Dataset};
+use fastav::model::{GenerateOptions, PruningPlan, RequestInput};
+use fastav::util::bench::stats_from;
+
+fn main() {
+    println!("== per-token decode latency ==");
+    for model in ["vl2sim", "tiny"] {
+        let Some(mut engine) = bench_common::try_engine(model) else { continue };
+        let calib = bench_common::load_or_calibrate(&mut engine, 30);
+        let layout = engine.cfg.layout.clone();
+
+        for (tag, plan) in [
+            ("vanilla", PruningPlan::vanilla()),
+            ("fastav ", calib.plan(20.0)),
+        ] {
+            let mut per_tok = Vec::new();
+            let mut rel = 0.0;
+            for i in 0..6u64 {
+                let s = gen_sample(&layout, Dataset::Avqa, i, 1234);
+                let res = engine
+                    .generate(
+                        &RequestInput::from_sample(&s),
+                        &GenerateOptions { plan: plan.clone(), max_gen: 4, ..Default::default() },
+                    )
+                    .expect("generate");
+                if res.decode_steps > 0 {
+                    per_tok.push(res.decode_seconds / res.decode_steps as f64);
+                }
+                rel = res.relative_flops;
+            }
+            if per_tok.is_empty() {
+                println!("{} {}: no decode steps (answers were 1 token)", model, tag);
+                continue;
+            }
+            let stats = stats_from(&format!("{} {} s/token", model, tag), per_tok);
+            stats.report();
+            println!("    relative FLOPs {:.1}", rel);
+        }
+    }
+}

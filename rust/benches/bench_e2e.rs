@@ -1,0 +1,50 @@
+//! End-to-end generation latency (Table 1's latency/memory columns) plus
+//! long-context scaling (vl2sim_long, 512-token prompts) where pruning
+//! wins grow with sequence length.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use fastav::avsynth::{gen_sample, Dataset};
+use fastav::model::{GenerateOptions, PruningPlan, RequestInput};
+use fastav::util::bench::stats_from;
+
+fn run_model(model: &str) {
+    let Some(mut engine) = bench_common::try_engine(model) else { return };
+    let calib = bench_common::load_or_calibrate(&mut engine, 30);
+    let layout = engine.cfg.layout.clone();
+    println!(
+        "\n-- {} (prompt ~{} tokens) --",
+        model,
+        layout.prompt_len_max()
+    );
+    for (tag, plan) in [
+        ("vanilla", PruningPlan::vanilla()),
+        ("fastav ", calib.plan(20.0)),
+    ] {
+        let mut total = Vec::new();
+        let (mut rel, mut kv) = (0.0f64, 0usize);
+        for i in 0..5u64 {
+            let s = gen_sample(&layout, Dataset::AvhBench, i, 1234);
+            let res = engine
+                .generate(
+                    &RequestInput::from_sample(&s),
+                    &GenerateOptions { plan: plan.clone(), max_gen: 4, ..Default::default() },
+                )
+                .expect("generate");
+            total.push(res.prefill_seconds + res.decode_seconds);
+            rel = res.relative_flops;
+            kv = res.peak_kv_bytes;
+        }
+        let stats = stats_from(&format!("{} {} end-to-end", model, tag), total);
+        stats.report();
+        println!("    relative FLOPs {:.1}, peak KV {:.2} MB", rel, kv as f64 / 1e6);
+    }
+}
+
+fn main() {
+    println!("== end-to-end generation latency ==");
+    run_model("vl2sim");
+    run_model("salmsim");
+    run_model("vl2sim_long"); // long-context scaling
+}

@@ -1,0 +1,47 @@
+//! Kernel-level microbenchmarks: per-artifact execution latency (the L1
+//! Pallas kernels live inside these artifacts).
+//!
+//! Reports prefill (flash-attention kernel path), pruned prefill, and the
+//! calibration probe (rollout kernel). L1 TPU estimates live in DESIGN.md
+//! §9; these CPU timings size the *serving* hot path.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use fastav::avsynth::{gen_sample, Dataset};
+use fastav::model::{GenerateOptions, PruningPlan, RequestInput};
+use fastav::util::bench::bench;
+
+fn main() {
+    println!("== kernel/artifact microbenchmarks ==");
+    for model in ["tiny", "vl2sim"] {
+        let Some(mut engine) = bench_common::try_engine(model) else { continue };
+        let layout = engine.cfg.layout.clone();
+        let sample = gen_sample(&layout, Dataset::Avqa, 0, 1234);
+        let input = RequestInput::from_sample(&sample);
+
+        // Whole-prefill benchmark (front + back layers + logits).
+        let opts = GenerateOptions { plan: PruningPlan::vanilla(), max_gen: 1, ..Default::default() };
+        bench(&format!("{}: prefill+1tok vanilla", model), 2, 8, || {
+            engine.generate(&input, &opts).expect("generate");
+        })
+        .report();
+
+        // Pruned prefill at the same shape.
+        let opts_pruned = GenerateOptions {
+            plan: PruningPlan::fastav(layout.vis_tokens() / 3, 2, 1, 20.0),
+            max_gen: 1,
+            ..Default::default()
+        };
+        bench(&format!("{}: prefill+1tok fastav", model), 2, 8, || {
+            engine.generate(&input, &opts_pruned).expect("generate");
+        })
+        .report();
+
+        // Calibration probe (rollout kernel path).
+        bench(&format!("{}: calib_probe (rollout)", model), 1, 4, || {
+            engine.calib_probe(&sample.prompt).expect("probe");
+        })
+        .report();
+    }
+}

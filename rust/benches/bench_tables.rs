@@ -1,0 +1,65 @@
+//! Strategy-ablation benchmark: latency + theoretical FLOPs per pruning
+//! strategy (timing companion to Tables 2–4; accuracy rows come from the
+//! example drivers, which run larger sample counts).
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use fastav::avsynth::{gen_sample, Dataset};
+use fastav::model::{GenerateOptions, PruningPlan, RequestInput};
+use fastav::pruning::{FineStrategy, GlobalStrategy};
+use fastav::util::bench::stats_from;
+
+fn main() {
+    println!("== pruning-strategy latency/FLOPs ablation (vl2sim) ==");
+    let Some(mut engine) = bench_common::try_engine("vl2sim") else { return };
+    let calib = bench_common::load_or_calibrate(&mut engine, 30);
+    let layout = engine.cfg.layout.clone();
+
+    let rows: Vec<(String, PruningPlan)> = vec![
+        ("vanilla".into(), PruningPlan::vanilla()),
+        ("fastav P=0 (global only)".into(), calib.global_only_plan()),
+        ("fastav P=10".into(), calib.plan(10.0)),
+        ("fastav P=20".into(), calib.plan(20.0)),
+        ("fastav P=30".into(), calib.plan(30.0)),
+        (
+            "global random".into(),
+            calib.ablation_plan(GlobalStrategy::Random, FineStrategy::None, 0.0),
+        ),
+        (
+            "global low-attentive".into(),
+            calib.ablation_plan(GlobalStrategy::LowAttentive, FineStrategy::None, 0.0),
+        ),
+        (
+            "vtw (drop all AV)".into(),
+            calib.ablation_plan(GlobalStrategy::Vtw, FineStrategy::None, 0.0),
+        ),
+        (
+            "fastv (50% vis)".into(),
+            calib.ablation_plan(
+                GlobalStrategy::FastV { keep_ratio: 0.5 },
+                FineStrategy::None,
+                0.0,
+            ),
+        ),
+    ];
+
+    for (name, plan) in rows {
+        let mut latencies = Vec::new();
+        let mut rel = 0.0;
+        for i in 0..4u64 {
+            let s = gen_sample(&layout, Dataset::AvhBench, i, 1234);
+            let res = engine
+                .generate(
+                    &RequestInput::from_sample(&s),
+                    &GenerateOptions { plan: plan.clone(), max_gen: 4, ..Default::default() },
+                )
+                .expect("generate");
+            latencies.push(res.prefill_seconds + res.decode_seconds);
+            rel = res.relative_flops;
+        }
+        let stats = stats_from(&name, latencies);
+        stats.report();
+        println!("    relative FLOPs {:.1}", rel);
+    }
+}

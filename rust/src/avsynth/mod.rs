@@ -1,0 +1,481 @@
+//! Synthetic audio-visual benchmark generators — rust mirror of
+//! `python/compile/avsynth.py`.
+//!
+//! Both implementations must generate **bit-identical** samples from the
+//! same `(base_seed, dataset, index)` triple: python generates training
+//! batches at build time, rust generates serving/eval workloads at run
+//! time, and pruning-accuracy results are only meaningful if the trained
+//! distribution matches the served distribution exactly. The contract is
+//! pinned by `testdata/avsynth_vectors.json` (hashes of full samples,
+//! written by the python suite and asserted here).
+
+use crate::tokens::{self as V, Layout, Segment};
+use crate::util::rng::{derive_seed, SplitMix64};
+
+pub const EVIDENCE_FRAMES: usize = 2;
+pub const EVIDENCE_AUD_SLOTS: usize = 4;
+pub const BEAT_REGION: usize = 12;
+pub const MAX_BEATS: u64 = 5;
+
+/// Dataset identifiers (seed-derivation streams; mirrors python).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    Train,
+    Avqa,
+    MusicAvqa,
+    AvhBench,
+    Calib,
+}
+
+impl Dataset {
+    pub fn stream(self) -> u64 {
+        match self {
+            Dataset::Train => 0,
+            Dataset::Avqa => 1,
+            Dataset::MusicAvqa => 2,
+            Dataset::AvhBench => 3,
+            Dataset::Calib => 4,
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Dataset> {
+        Some(match name {
+            "train" => Dataset::Train,
+            "avqa" => Dataset::Avqa,
+            "musicavqa" => Dataset::MusicAvqa,
+            "avhbench" => Dataset::AvhBench,
+            "calib" => Dataset::Calib,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataset::Train => "train",
+            Dataset::Avqa => "avqa",
+            Dataset::MusicAvqa => "musicavqa",
+            Dataset::AvhBench => "avhbench",
+            Dataset::Calib => "calib",
+        }
+    }
+}
+
+/// Question subtask (also the evaluation grouping key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Subtask {
+    WhatScene,
+    WhatSound,
+    SceneSound,
+    HowManyBeats,
+    WhichInstrument,
+    Hallucination,
+    Matching,
+    Captioning,
+}
+
+impl Subtask {
+    pub fn name(self) -> &'static str {
+        match self {
+            Subtask::WhatScene => "what_scene",
+            Subtask::WhatSound => "what_sound",
+            Subtask::SceneSound => "scene_sound",
+            Subtask::HowManyBeats => "how_many_beats",
+            Subtask::WhichInstrument => "which_instrument",
+            Subtask::Hallucination => "hallucination",
+            Subtask::Matching => "matching",
+            Subtask::Captioning => "captioning",
+        }
+    }
+}
+
+/// One synthetic AV sample (mirrors avsynth.Sample).
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub dataset: Dataset,
+    pub subtask: Subtask,
+    pub index: u64,
+    pub prompt: Vec<u32>,
+    pub answer: Vec<u32>, // includes trailing EOS
+    pub segments: Vec<Segment>,
+    pub frame_of: Vec<i32>, // -1 when not frame-scoped
+    pub scene: u32,
+    pub sound: u32,
+    pub beats: u32,
+}
+
+fn fill_streams(
+    rng: &mut SplitMix64,
+    cfg: &Layout,
+    scene: u32,
+    sound: u32,
+    beats: u64,
+) -> (Vec<Vec<u32>>, Vec<u32>) {
+    let mut vis = Vec::with_capacity(cfg.frames);
+    for f in 0..cfg.frames {
+        let mut frame: Vec<u32> = (0..cfg.vis_per_frame)
+            .map(|_| V::VIS_NOISE_BASE + rng.next_below(V::VIS_NOISE_COUNT as u64) as u32)
+            .collect();
+        if f < EVIDENCE_FRAMES {
+            let slot = rng.next_below(cfg.vis_per_frame as u64) as usize;
+            frame[slot] = V::scene_token(scene);
+        }
+        vis.push(frame);
+    }
+
+    let n_aud = cfg.audio_tokens();
+    let mut aud: Vec<u32> = (0..n_aud)
+        .map(|_| V::AUD_NOISE_BASE + rng.next_below(V::AUD_NOISE_COUNT as u64) as u32)
+        .collect();
+    let slot = rng.next_below(EVIDENCE_AUD_SLOTS.min(n_aud) as u64) as usize;
+    aud[slot] = V::sound_token(sound);
+    if beats > 0 {
+        let region = BEAT_REGION.min(n_aud);
+        let mut placed = 0;
+        while placed < beats {
+            let b = rng.next_below(region as u64) as usize;
+            if aud[b] == V::BEAT || b == slot {
+                continue;
+            }
+            aud[b] = V::BEAT;
+            placed += 1;
+        }
+    }
+    (vis, aud)
+}
+
+fn assemble(
+    cfg: &Layout,
+    vis: &[Vec<u32>],
+    aud: &[u32],
+    question: &[u32],
+) -> (Vec<u32>, Vec<Segment>, Vec<i32>) {
+    let mut prompt = vec![V::BOS];
+    let mut segs = vec![Segment::Ctrl];
+    let mut frames = vec![-1i32];
+    if cfg.interleaved {
+        let ap = cfg.aud_per_frame;
+        for f in 0..cfg.frames {
+            for &t in &vis[f] {
+                prompt.push(t);
+                segs.push(Segment::Vis);
+                frames.push(f as i32);
+            }
+            for &a in &aud[f * ap..(f + 1) * ap] {
+                prompt.push(a);
+                segs.push(Segment::Aud);
+                frames.push(f as i32);
+            }
+        }
+    } else {
+        for f in 0..cfg.frames {
+            for &t in &vis[f] {
+                prompt.push(t);
+                segs.push(Segment::Vis);
+                frames.push(f as i32);
+            }
+        }
+        for &a in aud {
+            prompt.push(a);
+            segs.push(Segment::Aud);
+            frames.push(-1);
+        }
+    }
+    for &t in question {
+        prompt.push(t);
+        segs.push(Segment::Text);
+        frames.push(-1);
+    }
+    (prompt, segs, frames)
+}
+
+fn question(qword: u32, arg: Option<u32>) -> Vec<u32> {
+    let mut q = vec![V::SEP, qword];
+    if let Some(a) = arg {
+        q.push(a);
+    }
+    q.push(V::SEP);
+    q
+}
+
+/// Generate sample `index` of `dataset` deterministically (bit-identical
+/// to the python implementation).
+pub fn gen_sample(cfg: &Layout, dataset: Dataset, index: u64, base_seed: u64) -> Sample {
+    let mut rng = SplitMix64::new(derive_seed(base_seed, dataset.stream(), index));
+
+    let scene = rng.next_below(V::NUM_CLASSES as u64) as u32;
+    let mut sound = rng.next_below(V::NUM_CLASSES as u64) as u32;
+    let mut beats: i64 = -1;
+
+    let pick = match dataset {
+        // Weighted mixture (mirrors python): retrieval tasks weight 1,
+        // hallucination/matching weight 4, captioning 1 (total 14).
+        Dataset::Train | Dataset::Calib => {
+            let r = rng.next_below(14);
+            let bounds = [1u64, 2, 3, 4, 5, 9, 13, 14];
+            let picks = [0u64, 1, 2, 3, 4, 5, 6, 8];
+            let mut chosen = 8;
+            for (b, p) in bounds.iter().zip(picks.iter()) {
+                if r < *b {
+                    chosen = *p;
+                    break;
+                }
+            }
+            chosen
+        }
+        Dataset::Avqa => rng.next_below(3),
+        Dataset::MusicAvqa => 3 + rng.next_below(2),
+        Dataset::AvhBench => {
+            let p = 5 + rng.next_below(3);
+            if p == 7 {
+                8
+            } else {
+                p
+            }
+        }
+    };
+
+    let (subtask, q, answer): (Subtask, Vec<u32>, Vec<u32>) = match pick {
+        0 => (
+            Subtask::WhatScene,
+            question(V::Q_WHAT_SCENE, None),
+            vec![V::scene_token(scene), V::EOS],
+        ),
+        1 => (
+            Subtask::WhatSound,
+            question(V::Q_WHAT_SOUND, None),
+            vec![V::sound_token(sound), V::EOS],
+        ),
+        2 => (
+            Subtask::SceneSound,
+            question(V::Q_SCENE_SOUND, None),
+            vec![V::scene_token(scene), V::sound_token(sound), V::EOS],
+        ),
+        3 => {
+            let b = rng.next_below(MAX_BEATS + 1);
+            beats = b as i64;
+            (
+                Subtask::HowManyBeats,
+                question(V::Q_HOW_MANY_BEATS, None),
+                vec![V::digit_token(b as u32), V::EOS],
+            )
+        }
+        4 => (
+            Subtask::WhichInstrument,
+            question(V::Q_WHICH_INSTRUMENT, None),
+            vec![V::sound_token(sound), V::EOS],
+        ),
+        5 => {
+            let ask_sound = rng.chance(0.5);
+            let present = rng.chance(0.5);
+            let actual = if ask_sound { sound } else { scene };
+            let probe = if present {
+                actual
+            } else {
+                (actual + 1 + rng.next_below(V::NUM_CLASSES as u64 - 1) as u32) % V::NUM_CLASSES
+            };
+            let tok = if ask_sound { V::sound_token(probe) } else { V::scene_token(probe) };
+            let qw = if ask_sound { V::Q_IS_THERE_SOUND } else { V::Q_IS_THERE_SCENE };
+            (
+                Subtask::Hallucination,
+                question(qw, Some(tok)),
+                vec![if present { V::YES } else { V::NO }, V::EOS],
+            )
+        }
+        6 => {
+            let matched = rng.chance(0.5);
+            if matched {
+                sound = scene;
+            } else {
+                sound = (scene + 1 + rng.next_below(V::NUM_CLASSES as u64 - 1) as u32)
+                    % V::NUM_CLASSES;
+            }
+            (
+                Subtask::Matching,
+                question(V::Q_AV_MATCH, None),
+                vec![if matched { V::YES } else { V::NO }, V::EOS],
+            )
+        }
+        8 => (
+            Subtask::Captioning,
+            question(V::Q_DESCRIBE, None),
+            vec![V::scene_token(scene), V::sound_token(sound), V::EOS],
+        ),
+        _ => unreachable!("pick {}", pick),
+    };
+
+    let beats_u = if beats < 0 { 0 } else { beats as u64 };
+    let (vis, aud) = fill_streams(&mut rng, cfg, scene, sound, beats_u);
+    let (prompt, segments, frame_of) = assemble(cfg, &vis, &aud, &q);
+    Sample {
+        dataset,
+        subtask,
+        index,
+        prompt,
+        answer,
+        segments,
+        frame_of,
+        scene,
+        sound,
+        beats: beats_u as u32,
+    }
+}
+
+/// Structural hash used by the cross-language reference vectors:
+/// `h = (h * 31 + token) mod 2^32` over `prompt ++ answer`.
+pub fn sample_hash(s: &Sample) -> u32 {
+    let mut h: u32 = 0;
+    for &t in s.prompt.iter().chain(s.answer.iter()) {
+        h = h.wrapping_mul(31).wrapping_add(t);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokens::{salmsim_layout, vl2sim_layout};
+    use crate::util::json::Json;
+
+    const BASE_SEED: u64 = 1234;
+
+    #[test]
+    fn deterministic() {
+        let l = vl2sim_layout();
+        let a = gen_sample(&l, Dataset::Avqa, 17, BASE_SEED);
+        let b = gen_sample(&l, Dataset::Avqa, 17, BASE_SEED);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.answer, b.answer);
+    }
+
+    #[test]
+    fn segment_map_lengths() {
+        let l = vl2sim_layout();
+        let s = gen_sample(&l, Dataset::AvhBench, 5, BASE_SEED);
+        assert_eq!(s.prompt.len(), s.segments.len());
+        assert_eq!(s.prompt.len(), s.frame_of.len());
+        assert!(s.prompt.len() <= l.prompt_len_max());
+    }
+
+    #[test]
+    fn sequential_vis_before_aud() {
+        let l = vl2sim_layout();
+        let s = gen_sample(&l, Dataset::Avqa, 2, BASE_SEED);
+        let last_vis = s.segments.iter().rposition(|&g| g == Segment::Vis).unwrap();
+        let first_aud = s.segments.iter().position(|&g| g == Segment::Aud).unwrap();
+        assert!(last_vis < first_aud);
+    }
+
+    #[test]
+    fn interleaved_frames_contiguous() {
+        let l = salmsim_layout();
+        let s = gen_sample(&l, Dataset::Avqa, 5, BASE_SEED);
+        let f0: Vec<usize> =
+            (0..s.prompt.len()).filter(|&i| s.frame_of[i] == 0).collect();
+        assert_eq!(f0.len(), l.vis_per_frame + l.aud_per_frame);
+        let contiguous: Vec<usize> = (f0[0]..=*f0.last().unwrap()).collect();
+        assert_eq!(f0, contiguous);
+    }
+
+    #[test]
+    fn matching_answer_consistent() {
+        let l = vl2sim_layout();
+        for i in 0..60 {
+            let s = gen_sample(&l, Dataset::AvhBench, i, BASE_SEED);
+            if s.subtask == Subtask::Matching {
+                let want = if s.scene == s.sound { V::YES } else { V::NO };
+                assert_eq!(s.answer[0], want);
+            }
+        }
+    }
+
+    #[test]
+    fn beats_counted() {
+        let l = vl2sim_layout();
+        for i in 0..60 {
+            let s = gen_sample(&l, Dataset::MusicAvqa, i, BASE_SEED);
+            if s.subtask == Subtask::HowManyBeats {
+                let n = s
+                    .prompt
+                    .iter()
+                    .zip(&s.segments)
+                    .filter(|&(&t, &g)| t == V::BEAT && g == Segment::Aud)
+                    .count() as u32;
+                assert_eq!(s.answer[0], V::digit_token(n));
+                assert_eq!(n, s.beats);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_language_reference_vectors() {
+        // Written by python/tests/test_avsynth.py::test_pinned_sample_prefix.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/testdata/avsynth_vectors.json");
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(_) => {
+                eprintln!("skipping: {} not generated yet (run pytest first)", path);
+                return;
+            }
+        };
+        let vectors = Json::parse(&text).unwrap();
+        let vl2 = vl2sim_layout();
+        let salm = salmsim_layout();
+        let mut checked = 0;
+        for v in vectors.as_arr().unwrap() {
+            let layout = match v.get("layout").as_str().unwrap() {
+                "vl2sim" => &vl2,
+                "salmsim" => &salm,
+                other => panic!("unknown layout {}", other),
+            };
+            let ds = Dataset::parse(v.get("dataset").as_str().unwrap()).unwrap();
+            let idx = v.get("index").as_usize().unwrap() as u64;
+            let s = gen_sample(layout, ds, idx, BASE_SEED);
+            assert_eq!(s.prompt.len(), v.get("prompt_len").as_usize().unwrap(),
+                "prompt_len mismatch for {:?} {}", ds, idx);
+            assert_eq!(sample_hash(&s) as usize, v.get("hash").as_usize().unwrap(),
+                "hash mismatch for {:?} {}", ds, idx);
+            assert_eq!(s.subtask.name(), v.get("subtask").as_str().unwrap());
+            let want_answer: Vec<u32> = v
+                .get("answer")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|j| j.as_usize().unwrap() as u32)
+                .collect();
+            assert_eq!(s.answer, want_answer);
+            checked += 1;
+        }
+        assert_eq!(checked, 18);
+    }
+
+    #[test]
+    fn evidence_placement_early() {
+        let l = vl2sim_layout();
+        for i in 0..30 {
+            let s = gen_sample(&l, Dataset::Avqa, i, BASE_SEED);
+            let tok = V::scene_token(s.scene);
+            let frames: std::collections::BTreeSet<i32> = s
+                .prompt
+                .iter()
+                .enumerate()
+                .filter(|&(j, &t)| t == tok && s.segments[j] == Segment::Vis)
+                .map(|(j, _)| s.frame_of[j])
+                .collect();
+            let want: std::collections::BTreeSet<i32> =
+                (0..EVIDENCE_FRAMES as i32).collect();
+            assert_eq!(frames, want);
+        }
+    }
+
+    #[test]
+    fn answers_end_with_eos() {
+        let l = vl2sim_layout();
+        for ds in [Dataset::Avqa, Dataset::MusicAvqa, Dataset::AvhBench] {
+            for i in 0..20 {
+                let s = gen_sample(&l, ds, i, BASE_SEED);
+                assert_eq!(*s.answer.last().unwrap(), V::EOS);
+                assert!(s.answer.len() >= 2 && s.answer.len() <= 4);
+            }
+        }
+    }
+}

@@ -1,0 +1,382 @@
+//! Offline rollout calibration (paper §2.2 "Global pruning").
+//!
+//! The paper derives its runtime policy by applying an attention-rollout
+//! threshold at the middle layer over ~100 non-test samples: tokens whose
+//! accumulated influence on the final query falls below the threshold are
+//! "less informative", and their positions turn out to be a *positional*
+//! rule (beyond position ~750 for VideoLLaMA2; beyond frame 4 for
+//! video-SALMONN2). This module reproduces that pipeline:
+//!
+//! 1. run [`ModelEngine::calib_probe`] on N calibration samples,
+//! 2. average the rollout influence of each AV position on the last query
+//!    at the middle layer,
+//! 3. threshold → per-modality positional keep rule
+//!    (`vis_cutoff`, `keep_audio`, `keep_frames`),
+//! 4. persist as `calibration.json` for the serving path.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::avsynth::{gen_sample, Dataset};
+use crate::model::{ModelEngine, PruningPlan};
+use crate::pruning::{FineStrategy, GlobalStrategy};
+use crate::tokens::Segment;
+use crate::util::json::Json;
+
+/// Calibrated positional pruning rule + the evidence that produced it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    pub model: String,
+    pub samples: usize,
+    pub threshold: f32,
+    /// Keep visual tokens with original position `< vis_cutoff` (sequential
+    /// layouts).
+    pub vis_cutoff: usize,
+    /// Keep the first N audio tokens (sequential layouts).
+    pub keep_audio: usize,
+    /// Keep the first F whole frames (interleaved layouts).
+    pub keep_frames: usize,
+    /// AV tokens kept by the rule (the FLOPs-matched ablation budget).
+    pub budget: usize,
+    /// Mean rollout influence per prompt position (AV prefix only).
+    pub profile: Vec<f32>,
+}
+
+impl Calibration {
+    /// FastAV serving plan at fine-pruning ratio `p` (paper: P = 20).
+    pub fn plan(&self, p: f64) -> PruningPlan {
+        let mut plan =
+            PruningPlan::fastav(self.vis_cutoff, self.keep_audio, self.keep_frames, p);
+        plan.global_budget = self.budget;
+        plan
+    }
+
+    /// Global-only plan (Table 2 rows / Table 4 row P=0).
+    pub fn global_only_plan(&self) -> PruningPlan {
+        let mut plan = self.plan(0.0);
+        plan.fine = FineStrategy::None;
+        plan
+    }
+
+    /// Budget-matched ablation plan with a different global strategy.
+    pub fn ablation_plan(&self, strategy: GlobalStrategy, fine: FineStrategy, p: f64) -> PruningPlan {
+        PruningPlan {
+            global: strategy,
+            global_budget: self.budget,
+            fine,
+            fine_percent: p,
+            seed: 0,
+            global_layer: None,
+            fine_during_decode: false,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("samples", Json::num(self.samples as f64)),
+            ("threshold", Json::num(self.threshold as f64)),
+            ("vis_cutoff", Json::num(self.vis_cutoff as f64)),
+            ("keep_audio", Json::num(self.keep_audio as f64)),
+            ("keep_frames", Json::num(self.keep_frames as f64)),
+            ("budget", Json::num(self.budget as f64)),
+            (
+                "profile",
+                Json::arr(self.profile.iter().map(|&v| Json::num(v as f64))),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Calibration> {
+        Ok(Calibration {
+            model: j.get("model").as_str().ok_or_else(|| anyhow!("model"))?.to_string(),
+            samples: j.get("samples").as_usize().ok_or_else(|| anyhow!("samples"))?,
+            threshold: j.get("threshold").as_f64().ok_or_else(|| anyhow!("threshold"))? as f32,
+            vis_cutoff: j.get("vis_cutoff").as_usize().ok_or_else(|| anyhow!("vis_cutoff"))?,
+            keep_audio: j.get("keep_audio").as_usize().ok_or_else(|| anyhow!("keep_audio"))?,
+            keep_frames: j.get("keep_frames").as_usize().ok_or_else(|| anyhow!("keep_frames"))?,
+            budget: j.get("budget").as_usize().ok_or_else(|| anyhow!("budget"))?,
+            profile: j
+                .get("profile")
+                .as_arr()
+                .ok_or_else(|| anyhow!("profile"))?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                .collect(),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {:?}", path))
+    }
+
+    pub fn load(path: &Path) -> Result<Calibration> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {:?}", path))?;
+        Calibration::from_json(&Json::parse(&text).map_err(|e| anyhow!("{}", e))?)
+    }
+}
+
+/// Fraction of each modality's rollout influence the positional rule must
+/// cover. The paper applies "an attention rollout threshold"; a coverage
+/// target is the parameter-light equivalent that adapts to the influence
+/// distribution instead of its mean (mean thresholds over-prune when the
+/// profile has a long flat tail).
+pub const COVERAGE: f32 = 0.90;
+
+/// Pure rule derivation from an influence profile (unit-testable core).
+///
+/// Keeps the shortest per-modality *prefix* covering [`COVERAGE`] of that
+/// modality's total rollout influence on the final query: visual tokens up
+/// to `vis_cutoff`, the first `keep_audio` audio slots, and (interleaved
+/// layouts) the first `keep_frames` frames. The reported `threshold` is
+/// the influence at the visual cutoff boundary (diagnostic only).
+pub fn derive_rule(
+    profile: &[f32],
+    segments: &[Segment],
+    frame_of: &[i32],
+    interleaved: bool,
+) -> (f32, usize, usize, usize, usize) {
+    let av: Vec<usize> = (0..profile.len())
+        .filter(|&i| matches!(segments[i], Segment::Vis | Segment::Aud))
+        .collect();
+    assert!(!av.is_empty());
+
+    // Shortest prefix of `items` whose influence sum reaches COVERAGE of
+    // the total; returns the prefix length.
+    let prefix_cover = |items: &[usize]| -> usize {
+        let total: f32 = items.iter().map(|&i| profile[i]).sum();
+        if total <= 0.0 {
+            return items.len();
+        }
+        let mut acc = 0.0f32;
+        for (rank, &i) in items.iter().enumerate() {
+            acc += profile[i];
+            if acc >= COVERAGE * total {
+                return rank + 1;
+            }
+        }
+        items.len()
+    };
+
+    let vis: Vec<usize> = av.iter().copied().filter(|&i| segments[i] == Segment::Vis).collect();
+    let aud: Vec<usize> = av.iter().copied().filter(|&i| segments[i] == Segment::Aud).collect();
+
+    let (mut vis_cutoff, mut keep_audio) = (0usize, 0usize);
+    let mut threshold = 0.0f32;
+    if !interleaved {
+        if !vis.is_empty() {
+            let n_keep = prefix_cover(&vis);
+            vis_cutoff = vis[n_keep - 1] + 1;
+            threshold = profile[vis[n_keep - 1]];
+        }
+        if !aud.is_empty() {
+            keep_audio = prefix_cover(&aud).max(1);
+        }
+    }
+
+    // Interleaved rule: shortest frame prefix covering COVERAGE of the
+    // total per-frame influence.
+    let mut keep_frames = 0usize;
+    if interleaved {
+        let max_frame = frame_of.iter().copied().max().unwrap_or(-1);
+        let mut frame_mass = Vec::new();
+        for f in 0..=max_frame.max(0) {
+            let m: f32 = av
+                .iter()
+                .copied()
+                .filter(|&i| frame_of[i] == f)
+                .map(|i| profile[i])
+                .sum();
+            frame_mass.push(m);
+        }
+        let total: f32 = frame_mass.iter().sum();
+        let mut acc = 0.0f32;
+        for (f, &m) in frame_mass.iter().enumerate() {
+            acc += m;
+            keep_frames = f + 1;
+            if total > 0.0 && acc >= COVERAGE * total {
+                break;
+            }
+        }
+        keep_frames = keep_frames.max(1);
+    }
+
+    // Budget = AV tokens the rule keeps.
+    let mut budget = 0usize;
+    for &i in &av {
+        let kept = if interleaved {
+            (frame_of[i] as usize) < keep_frames && frame_of[i] >= 0
+        } else {
+            match segments[i] {
+                Segment::Vis => i < vis_cutoff,
+                Segment::Aud => {
+                    let audio_rank = av
+                        .iter()
+                        .filter(|&&j| segments[j] == Segment::Aud && j < i)
+                        .count();
+                    audio_rank < keep_audio
+                }
+                _ => false,
+            }
+        };
+        if kept {
+            budget += 1;
+        }
+    }
+    (threshold, vis_cutoff, keep_audio, keep_frames, budget)
+}
+
+/// Run the full calibration pipeline over `n_samples` calib-stream samples.
+pub fn calibrate(engine: &mut ModelEngine, n_samples: usize, base_seed: u64) -> Result<Calibration> {
+    let layout = engine.cfg.layout.clone();
+    let mid = engine.cfg.mid_layer;
+    // AV prefix length is layout-stable; text tail varies per question.
+    let av_prefix = 1 + layout.vis_tokens() + layout.audio_tokens();
+    let mut sums = vec![0.0f64; av_prefix];
+    let mut reference: Option<(Vec<Segment>, Vec<i32>)> = None;
+
+    for i in 0..n_samples {
+        let s = gen_sample(&layout, Dataset::Calib, i as u64, base_seed);
+        let probe = engine.calib_probe(&s.prompt)?;
+        let row = probe.last_row(mid);
+        for (p, &v) in row.iter().take(av_prefix).enumerate() {
+            sums[p] += v as f64;
+        }
+        if reference.is_none() {
+            reference = Some((
+                s.segments[..av_prefix].to_vec(),
+                s.frame_of[..av_prefix].to_vec(),
+            ));
+        }
+    }
+    let profile: Vec<f32> = sums.iter().map(|&s| (s / n_samples as f64) as f32).collect();
+    let (segments, frame_of) = reference.ok_or_else(|| anyhow!("no calib samples"))?;
+    let (threshold, vis_cutoff, keep_audio, keep_frames, budget) =
+        derive_rule(&profile, &segments, &frame_of, layout.interleaved);
+    Ok(Calibration {
+        model: engine.cfg.name.clone(),
+        samples: n_samples,
+        threshold,
+        vis_cutoff,
+        keep_audio,
+        keep_frames,
+        budget,
+        profile,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Sequential toy: BOS + 6 vis + 4 aud; early tokens influential.
+    fn toy() -> (Vec<f32>, Vec<Segment>, Vec<i32>) {
+        let mut segments = vec![Segment::Ctrl];
+        let mut frames = vec![-1];
+        for f in 0..3 {
+            segments.push(Segment::Vis);
+            frames.push(f);
+            segments.push(Segment::Vis);
+            frames.push(f);
+        }
+        for _ in 0..4 {
+            segments.push(Segment::Aud);
+            frames.push(-1);
+        }
+        // Influence: high on BOS + first 3 vis + first 2 aud.
+        let profile = vec![
+            0.5, // BOS (not AV; ignored by the rule)
+            0.3, 0.25, 0.2, 0.01, 0.01, 0.01, // vis
+            0.2, 0.15, 0.01, 0.01, // aud
+        ];
+        (profile, segments, frames)
+    }
+
+    #[test]
+    fn derive_rule_sequential_covers_mass() {
+        let (profile, segments, frames) = toy();
+        let (th, vis_cutoff, keep_audio, keep_frames, budget) =
+            derive_rule(&profile, &segments, &frames, false);
+        assert!(th > 0.0);
+        // Vis influence: [.3, .25, .2, .01, .01, .01] (total .78); 90%
+        // coverage (.702) is reached at prefix sum .75 (3 positions) ->
+        // cutoff = position 3 + 1 = 4.
+        assert_eq!(vis_cutoff, 4);
+        // Audio influence: [.2, .15, .01, .01] (total .37); 90% (.333) is
+        // reached at prefix sum .35 (2 slots).
+        assert_eq!(keep_audio, 2);
+        assert_eq!(keep_frames, 0);
+        assert_eq!(budget, 3 + 2);
+    }
+
+    #[test]
+    fn derive_rule_sequential_tail_excluded() {
+        // All mass on the first vis token: cutoff collapses to 2.
+        let segments = vec![Segment::Ctrl, Segment::Vis, Segment::Vis, Segment::Vis, Segment::Aud];
+        let frames = vec![-1, 0, 0, 0, -1];
+        let profile = vec![0.5, 1.0, 0.0, 0.0, 0.2];
+        let (_th, vis_cutoff, keep_audio, _kf, budget) =
+            derive_rule(&profile, &segments, &frames, false);
+        assert_eq!(vis_cutoff, 2);
+        assert_eq!(keep_audio, 1);
+        assert_eq!(budget, 2);
+    }
+
+    #[test]
+    fn derive_rule_interleaved() {
+        // 2 frames, each (vis, vis, aud); frame 0 hot, frame 1 cold.
+        let segments = vec![
+            Segment::Ctrl,
+            Segment::Vis,
+            Segment::Vis,
+            Segment::Aud,
+            Segment::Vis,
+            Segment::Vis,
+            Segment::Aud,
+        ];
+        let frames = vec![-1, 0, 0, 0, 1, 1, 1];
+        let profile = vec![0.4, 0.3, 0.3, 0.3, 0.01, 0.01, 0.01];
+        let (_th, _vc, _ka, keep_frames, budget) =
+            derive_rule(&profile, &segments, &frames, true);
+        assert_eq!(keep_frames, 1);
+        assert_eq!(budget, 3);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = Calibration {
+            model: "vl2sim".into(),
+            samples: 100,
+            threshold: 0.01,
+            vis_cutoff: 20,
+            keep_audio: 4,
+            keep_frames: 0,
+            budget: 23,
+            profile: vec![0.1, 0.2, 0.3],
+        };
+        let j = c.to_json();
+        let back = Calibration::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn plan_carries_budget() {
+        let c = Calibration {
+            model: "m".into(),
+            samples: 1,
+            threshold: 0.0,
+            vis_cutoff: 10,
+            keep_audio: 4,
+            keep_frames: 2,
+            budget: 14,
+            profile: vec![],
+        };
+        let p = c.plan(20.0);
+        assert_eq!(p.global_budget, 14);
+        assert!(matches!(p.global, GlobalStrategy::FastAvPosition { vis_cutoff: 10, keep_audio: 4, keep_frames: 2 }));
+        let g = c.global_only_plan();
+        assert_eq!(g.fine, FineStrategy::None);
+    }
+}

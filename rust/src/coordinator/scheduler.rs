@@ -1,0 +1,195 @@
+//! Request scheduler: bounded two-class priority queue with FIFO order
+//! within each class, blocking pop, and conservation counters.
+//!
+//! Invariants (property-tested in `rust/tests/test_coordinator.rs`):
+//! * FIFO within a priority class;
+//! * High class always dequeues before Normal;
+//! * `admitted == completed + rejected + in_queue + in_flight` at any
+//!   quiescent point (conservation);
+//! * `try_push` fails exactly when the queue is at capacity (backpressure).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Scheduling class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    High,
+    Normal,
+}
+
+/// Counters for the conservation invariant.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SchedStats {
+    pub admitted: u64,
+    pub rejected: u64,
+    pub dequeued: u64,
+}
+
+struct Inner<T> {
+    high: VecDeque<T>,
+    normal: VecDeque<T>,
+    closed: bool,
+    stats: SchedStats,
+}
+
+/// Bounded blocking priority queue.
+pub struct SchedulerQueue<T> {
+    inner: Mutex<Inner<T>>,
+    notify: Condvar,
+    capacity: usize,
+}
+
+impl<T> SchedulerQueue<T> {
+    pub fn new(capacity: usize) -> SchedulerQueue<T> {
+        SchedulerQueue {
+            inner: Mutex::new(Inner {
+                high: VecDeque::new(),
+                normal: VecDeque::new(),
+                closed: false,
+                stats: SchedStats::default(),
+            }),
+            notify: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Admit a request; `Err(item)` when the queue is full or closed
+    /// (backpressure — the caller turns this into HTTP 429/503).
+    pub fn try_push(&self, item: T, prio: Priority) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.high.len() + g.normal.len() >= self.capacity {
+            g.stats.rejected += 1;
+            return Err(item);
+        }
+        match prio {
+            Priority::High => g.high.push_back(item),
+            Priority::Normal => g.normal.push_back(item),
+        }
+        g.stats.admitted += 1;
+        drop(g);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: High before Normal, FIFO within class; `None` once
+    /// closed and drained.
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.high.pop_front().or_else(|| g.normal.pop_front()) {
+                g.stats.dequeued += 1;
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.notify.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking pop (tests / drain loops).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let item = g.high.pop_front().or_else(|| g.normal.pop_front());
+        if item.is_some() {
+            g.stats.dequeued += 1;
+        }
+        item
+    }
+
+    pub fn len(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.high.len() + g.normal.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> SchedStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Close the queue: pending items still drain; new pushes fail.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_within_class() {
+        let q = SchedulerQueue::new(10);
+        for i in 0..5 {
+            q.try_push(i, Priority::Normal).unwrap();
+        }
+        let order: Vec<i32> = (0..5).map(|_| q.try_pop().unwrap()).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn high_preempts_normal() {
+        let q = SchedulerQueue::new(10);
+        q.try_push("n1", Priority::Normal).unwrap();
+        q.try_push("h1", Priority::High).unwrap();
+        q.try_push("n2", Priority::Normal).unwrap();
+        q.try_push("h2", Priority::High).unwrap();
+        let order: Vec<&str> = (0..4).map(|_| q.try_pop().unwrap()).collect();
+        assert_eq!(order, vec!["h1", "h2", "n1", "n2"]);
+    }
+
+    #[test]
+    fn backpressure_at_capacity() {
+        let q = SchedulerQueue::new(2);
+        assert!(q.try_push(1, Priority::Normal).is_ok());
+        assert!(q.try_push(2, Priority::High).is_ok());
+        assert!(q.try_push(3, Priority::Normal).is_err());
+        assert_eq!(q.stats().rejected, 1);
+        q.try_pop().unwrap();
+        assert!(q.try_push(3, Priority::Normal).is_ok());
+    }
+
+    #[test]
+    fn conservation_counters() {
+        let q = SchedulerQueue::new(100);
+        for i in 0..30 {
+            q.try_push(i, if i % 3 == 0 { Priority::High } else { Priority::Normal })
+                .unwrap();
+        }
+        let mut popped = 0;
+        while q.try_pop().is_some() {
+            popped += 1;
+        }
+        let s = q.stats();
+        assert_eq!(s.admitted, 30);
+        assert_eq!(s.dequeued, 30);
+        assert_eq!(popped, 30);
+        assert_eq!(s.admitted, s.dequeued + q.len() as u64);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = Arc::new(SchedulerQueue::new(10));
+        q.try_push(1, Priority::Normal).unwrap();
+        q.close();
+        assert!(q.try_push(2, Priority::Normal).is_err());
+        assert_eq!(q.pop_blocking(), Some(1));
+        assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        let q = Arc::new(SchedulerQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.pop_blocking());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.try_push(42, Priority::Normal).unwrap();
+        assert_eq!(t.join().unwrap(), Some(42));
+    }
+}

@@ -1,0 +1,217 @@
+//! Benchmark evaluation harness + rule-based scoring.
+//!
+//! Substitutes the paper's GPT-assisted protocol (DESIGN.md §2): answers in
+//! avsynth are structured token sequences, so exact matching scores QA
+//! subtasks and keyword recall maps captioning onto the paper's 0–5 scale.
+//! The harness also aggregates the efficiency columns of Table 1 (relative
+//! FLOPs, per-token latency, peak KV bytes).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::avsynth::{gen_sample, Dataset, Subtask};
+use crate::model::{GenerateOptions, ModelEngine, PruningPlan, RequestInput};
+use crate::tokens::{EOS, PAD};
+
+/// Exact-match correctness for QA subtasks: the generated tokens up to the
+/// first EOS must equal the expected answer (its EOS stripped).
+pub fn exact_match(generated: &[u32], expected: &[u32]) -> bool {
+    let gen_clean: Vec<u32> = generated
+        .iter()
+        .copied()
+        .take_while(|&t| t != EOS)
+        .filter(|&t| t != PAD)
+        .collect();
+    let want: Vec<u32> = expected
+        .iter()
+        .copied()
+        .take_while(|&t| t != EOS)
+        .collect();
+    gen_clean == want
+}
+
+/// Captioning score on the paper's 0–5 scale: keyword recall over the
+/// expected caption tokens (scene + sound), 2.5 points each.
+pub fn caption_score(generated: &[u32], expected: &[u32]) -> f64 {
+    let want: Vec<u32> = expected
+        .iter()
+        .copied()
+        .take_while(|&t| t != EOS)
+        .collect();
+    if want.is_empty() {
+        return 0.0;
+    }
+    let gen_set: std::collections::HashSet<u32> = generated
+        .iter()
+        .copied()
+        .take_while(|&t| t != EOS)
+        .collect();
+    let hits = want.iter().filter(|t| gen_set.contains(t)).count();
+    5.0 * hits as f64 / want.len() as f64
+}
+
+/// Per-subtask aggregate.
+#[derive(Debug, Clone, Default)]
+pub struct SubtaskScore {
+    pub n: usize,
+    pub correct: usize,
+    pub caption_sum: f64,
+}
+
+impl SubtaskScore {
+    pub fn accuracy(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            100.0 * self.correct as f64 / self.n as f64
+        }
+    }
+
+    pub fn caption_mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.caption_sum / self.n as f64
+        }
+    }
+}
+
+/// Full evaluation report for one (dataset, plan) pair.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub dataset: String,
+    pub n: usize,
+    pub per_subtask: BTreeMap<String, SubtaskScore>,
+    pub mean_rel_flops: f64,
+    pub mean_prefill_s: f64,
+    pub mean_decode_tok_s: f64,
+    pub mean_peak_kv_bytes: f64,
+}
+
+impl EvalReport {
+    /// Accuracy over all non-captioning samples (the paper's protocol for
+    /// AVHBench excludes AV captioning from the accuracy number).
+    pub fn accuracy(&self) -> f64 {
+        let (mut n, mut c) = (0usize, 0usize);
+        for (name, s) in &self.per_subtask {
+            if name != "captioning" {
+                n += s.n;
+                c += s.correct;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            100.0 * c as f64 / n as f64
+        }
+    }
+
+    pub fn subtask_accuracy(&self, name: &str) -> Option<f64> {
+        self.per_subtask.get(name).map(|s| s.accuracy())
+    }
+
+    pub fn caption_mean(&self) -> Option<f64> {
+        self.per_subtask.get("captioning").map(|s| s.caption_mean())
+    }
+}
+
+/// Evaluate `n` samples of `dataset` under a pruning plan.
+pub fn evaluate(
+    engine: &mut ModelEngine,
+    dataset: Dataset,
+    n: usize,
+    base_seed: u64,
+    plan: &PruningPlan,
+    max_gen: usize,
+) -> Result<EvalReport> {
+    let layout = engine.cfg.layout.clone();
+    let opts = GenerateOptions { plan: plan.clone(), max_gen, ..Default::default() };
+    let mut per_subtask: BTreeMap<String, SubtaskScore> = BTreeMap::new();
+    let (mut f_sum, mut p_sum, mut d_sum, mut kv_sum) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut d_count = 0usize;
+
+    for i in 0..n {
+        let s = gen_sample(&layout, dataset, i as u64, base_seed);
+        let res = engine.generate(&RequestInput::from_sample(&s), &opts)?;
+        let entry = per_subtask.entry(s.subtask.name().to_string()).or_default();
+        entry.n += 1;
+        if s.subtask == Subtask::Captioning {
+            entry.caption_sum += caption_score(&res.tokens, &s.answer);
+            // Captioning also counts exact match for completeness.
+            if exact_match(&res.tokens, &s.answer) {
+                entry.correct += 1;
+            }
+        } else if exact_match(&res.tokens, &s.answer) {
+            entry.correct += 1;
+        }
+        f_sum += res.relative_flops;
+        p_sum += res.prefill_seconds;
+        if res.decode_steps > 0 {
+            d_sum += res.decode_seconds / res.decode_steps as f64;
+            d_count += 1;
+        }
+        kv_sum += res.peak_kv_bytes as f64;
+    }
+
+    Ok(EvalReport {
+        dataset: dataset.name().to_string(),
+        n,
+        per_subtask,
+        mean_rel_flops: f_sum / n.max(1) as f64,
+        mean_prefill_s: p_sum / n.max(1) as f64,
+        mean_decode_tok_s: if d_count > 0 { d_sum / d_count as f64 } else { 0.0 },
+        mean_peak_kv_bytes: kv_sum / n.max(1) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokens::{scene_token, sound_token, YES};
+
+    #[test]
+    fn exact_match_strips_eos() {
+        assert!(exact_match(&[YES, EOS], &[YES, EOS]));
+        assert!(exact_match(&[YES, EOS, 99], &[YES, EOS])); // post-EOS junk ignored
+        assert!(!exact_match(&[YES], &[scene_token(1), EOS]));
+        assert!(!exact_match(&[YES, YES, EOS], &[YES, EOS]));
+    }
+
+    #[test]
+    fn caption_scoring_scale() {
+        let want = [scene_token(3), sound_token(5), EOS];
+        assert_eq!(caption_score(&[scene_token(3), sound_token(5), EOS], &want), 5.0);
+        assert_eq!(caption_score(&[scene_token(3), EOS], &want), 2.5);
+        assert_eq!(caption_score(&[scene_token(9), EOS], &want), 0.0);
+        // Order-insensitive recall.
+        assert_eq!(caption_score(&[sound_token(5), scene_token(3), EOS], &want), 5.0);
+    }
+
+    #[test]
+    fn report_accuracy_excludes_captioning() {
+        let mut per = BTreeMap::new();
+        per.insert("hallucination".into(), SubtaskScore { n: 10, correct: 8, caption_sum: 0.0 });
+        per.insert("matching".into(), SubtaskScore { n: 10, correct: 5, caption_sum: 0.0 });
+        per.insert("captioning".into(), SubtaskScore { n: 10, correct: 0, caption_sum: 30.0 });
+        let r = EvalReport {
+            dataset: "avhbench".into(),
+            n: 30,
+            per_subtask: per,
+            mean_rel_flops: 0.0,
+            mean_prefill_s: 0.0,
+            mean_decode_tok_s: 0.0,
+            mean_peak_kv_bytes: 0.0,
+        };
+        assert!((r.accuracy() - 65.0).abs() < 1e-9);
+        assert_eq!(r.caption_mean(), Some(3.0));
+        assert_eq!(r.subtask_accuracy("matching"), Some(50.0));
+    }
+
+    #[test]
+    fn subtask_score_edge_cases() {
+        let s = SubtaskScore::default();
+        assert_eq!(s.accuracy(), 0.0);
+        assert_eq!(s.caption_mean(), 0.0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Theoretical FLOPs accounting — the paper's efficiency metric.
+//!
+//! The paper reports FLOPs *relative to the vanilla model = 100* (the
+//! FastV protocol, [11]). This module implements exact closed-form
+//! per-layer counts given the number of live tokens at each layer, and a
+//! [`FlopsTally`] that the engine updates as it executes so every request
+//! carries its own measured-theoretical cost.
+//!
+//! Conventions: one multiply-accumulate = 2 FLOPs; biases/norms/softmax
+//! are omitted (matmul-dominated, matching the paper's protocol).
+
+/// Model dimensions needed for FLOPs accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlopsModel {
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+}
+
+impl FlopsModel {
+    /// FLOPs of one transformer layer processing `n_q` query rows against
+    /// `n_k` key rows.
+    ///
+    /// qkv+output projections: `8 * n_q * d^2`; attention scores + values:
+    /// `4 * n_q * n_k * d`; SwiGLU MLP (3 matmuls): `6 * n_q * d * d_ff`.
+    pub fn layer(&self, n_q: usize, n_k: usize) -> u64 {
+        let d = self.d_model as u64;
+        let ff = self.d_ff as u64;
+        let nq = n_q as u64;
+        let nk = n_k as u64;
+        8 * nq * d * d + 4 * nq * nk * d + 6 * nq * d * ff
+    }
+
+    /// FLOPs of the logits head for one token (tied unembedding).
+    pub fn logits(&self) -> u64 {
+        2 * self.d_model as u64 * self.vocab as u64
+    }
+
+    /// Full-prompt prefill with no pruning: all layers see `k` tokens.
+    pub fn vanilla_prefill(&self, k: usize) -> u64 {
+        self.layer(k, k) * self.n_layers as u64 + self.logits()
+    }
+
+    /// One vanilla decode step with a cache of `k` tokens (query row
+    /// attends over `k + 1` keys including itself).
+    pub fn vanilla_decode_step(&self, k: usize) -> u64 {
+        self.layer(1, k + 1) * self.n_layers as u64 + self.logits()
+    }
+
+    /// Vanilla end-to-end generation cost: prefill of `k` prompt tokens +
+    /// `gen` decode steps with a growing cache.
+    pub fn vanilla_generate(&self, k: usize, gen: usize) -> u64 {
+        let mut total = self.vanilla_prefill(k);
+        for t in 0..gen.saturating_sub(1) {
+            total += self.vanilla_decode_step(k + t);
+        }
+        total
+    }
+}
+
+/// Running tally of theoretical FLOPs for one request. The engine calls
+/// `add_layer` with the *actual* live token counts at each executed layer,
+/// so pruning shows up directly.
+#[derive(Debug, Clone, Default)]
+pub struct FlopsTally {
+    pub total: u64,
+    pub prefill: u64,
+    pub decode: u64,
+}
+
+impl FlopsTally {
+    pub fn add_prefill_layer(&mut self, m: &FlopsModel, n_q: usize, n_k: usize) {
+        let f = m.layer(n_q, n_k);
+        self.total += f;
+        self.prefill += f;
+    }
+
+    pub fn add_decode_layer(&mut self, m: &FlopsModel, n_k: usize) {
+        let f = m.layer(1, n_k);
+        self.total += f;
+        self.decode += f;
+    }
+
+    pub fn add_logits(&mut self, m: &FlopsModel) {
+        self.total += m.logits();
+    }
+
+    /// Relative cost vs a vanilla run over the same prompt/generation
+    /// lengths, scaled so vanilla = 100 (paper protocol).
+    pub fn relative_to_vanilla(&self, m: &FlopsModel, prompt_len: usize, gen_len: usize) -> f64 {
+        let vanilla = m.vanilla_generate(prompt_len, gen_len.max(1)) as f64;
+        100.0 * self.total as f64 / vanilla
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> FlopsModel {
+        FlopsModel { d_model: 128, d_ff: 256, n_layers: 8, vocab: 256 }
+    }
+
+    #[test]
+    fn layer_closed_form() {
+        // Hand-computed: d=128, ff=256, n_q=n_k=100:
+        // 8*100*128^2 = 13_107_200; 4*100*100*128 = 5_120_000;
+        // 6*100*128*256 = 19_660_800. Total 37_888_000.
+        assert_eq!(m().layer(100, 100), 37_888_000);
+    }
+
+    #[test]
+    fn logits_closed_form() {
+        assert_eq!(m().logits(), 2 * 128 * 256);
+    }
+
+    #[test]
+    fn vanilla_prefill_is_layers_plus_logits() {
+        let mm = m();
+        assert_eq!(mm.vanilla_prefill(64), mm.layer(64, 64) * 8 + mm.logits());
+    }
+
+    #[test]
+    fn tally_matches_vanilla_when_unpruned() {
+        let mm = m();
+        let k = 93;
+        let gen = 3;
+        let mut tally = FlopsTally::default();
+        for _ in 0..mm.n_layers {
+            tally.add_prefill_layer(&mm, k, k);
+        }
+        tally.add_logits(&mm);
+        for t in 0..gen - 1 {
+            for _ in 0..mm.n_layers {
+                tally.add_decode_layer(&mm, k + t + 1);
+            }
+            tally.add_logits(&mm);
+        }
+        let rel = tally.relative_to_vanilla(&mm, k, gen);
+        assert!((rel - 100.0).abs() < 1e-9, "rel = {}", rel);
+    }
+
+    #[test]
+    fn pruning_reduces_relative() {
+        let mm = m();
+        let k = 93;
+        let kept = 40;
+        let mut tally = FlopsTally::default();
+        for l in 0..mm.n_layers {
+            let n = if l < 4 { k } else { kept };
+            tally.add_prefill_layer(&mm, n, n);
+        }
+        tally.add_logits(&mm);
+        let rel = tally.relative_to_vanilla(&mm, k, 1);
+        assert!(rel < 80.0 && rel > 30.0, "rel = {}", rel);
+    }
+
+    #[test]
+    fn monotone_in_tokens() {
+        let mm = m();
+        assert!(mm.layer(50, 50) < mm.layer(51, 50));
+        assert!(mm.layer(50, 50) < mm.layer(50, 51));
+        assert!(mm.vanilla_decode_step(10) < mm.vanilla_decode_step(11));
+    }
+}

@@ -1,0 +1,106 @@
+//! HTTP API surface: the handler shared by `fastav serve`, the serving
+//! example, and the integration tests.
+//!
+//! Endpoints:
+//! * `POST /v1/generate` — body `{"dataset": "...", "index": N,
+//!   "no_pruning": bool}`; generates the avsynth sample's answer and
+//!   returns tokens + efficiency metrics.
+//! * `GET /metrics` — Prometheus text exposition.
+//! * `GET /healthz` — liveness.
+
+use std::sync::Arc;
+
+use super::{Handler, Request, Response};
+use crate::avsynth::{gen_sample, Dataset};
+use crate::coordinator::{Coordinator, GenRequest, Priority};
+use crate::eval::exact_match;
+use crate::model::{GenerateOptions, PruningPlan};
+use crate::tokens::{render_answer, Layout};
+use crate::util::json::Json;
+
+/// Build the request handler for a running coordinator.
+pub fn make_handler(
+    coord: Arc<Coordinator>,
+    layout: Layout,
+    plan: PruningPlan,
+    max_gen: usize,
+    base_seed: u64,
+) -> Handler {
+    Arc::new(move |req: &Request| route(req, &coord, &layout, &plan, max_gen, base_seed))
+}
+
+fn route(
+    req: &Request,
+    coord: &Coordinator,
+    layout: &Layout,
+    plan: &PruningPlan,
+    max_gen: usize,
+    base_seed: u64,
+) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::text(200, "ok"),
+        ("GET", "/metrics") => Response::text(200, &coord.metrics.export()),
+        ("POST", "/v1/generate") => generate(req, coord, layout, plan, max_gen, base_seed),
+        ("GET", _) | ("POST", _) => Response::text(404, "not found"),
+        _ => Response::text(405, "method not allowed"),
+    }
+}
+
+fn generate(
+    req: &Request,
+    coord: &Coordinator,
+    layout: &Layout,
+    plan: &PruningPlan,
+    max_gen: usize,
+    base_seed: u64,
+) -> Response {
+    let body = match std::str::from_utf8(&req.body)
+        .map_err(|_| ())
+        .and_then(|s| Json::parse(s).map_err(|_| ()))
+    {
+        Ok(j) => j,
+        Err(_) => return Response::text(400, "invalid JSON body"),
+    };
+    let dataset = body
+        .get("dataset")
+        .as_str()
+        .and_then(Dataset::parse)
+        .unwrap_or(Dataset::Avqa);
+    let index = body.get("index").as_usize().unwrap_or(0) as u64;
+    let vanilla = body.get("no_pruning").as_bool().unwrap_or(false);
+    let high_priority = body.get("priority").as_str() == Some("high");
+    let sample = gen_sample(layout, dataset, index, base_seed);
+    let request = GenRequest {
+        prompt: sample.prompt.clone(),
+        segments: sample.segments.clone(),
+        frame_of: sample.frame_of.clone(),
+        opts: GenerateOptions {
+            plan: if vanilla { PruningPlan::vanilla() } else { plan.clone() },
+            max_gen,
+            ..Default::default()
+        },
+        priority: if high_priority { Priority::High } else { Priority::Normal },
+    };
+    match coord.submit_blocking(request) {
+        Ok(res) => {
+            let correct = exact_match(&res.tokens, &sample.answer);
+            let out = Json::obj(vec![
+                ("answer", Json::str(&render_answer(&res.tokens))),
+                ("expected", Json::str(&render_answer(&sample.answer))),
+                ("correct", Json::Bool(correct)),
+                ("subtask", Json::str(sample.subtask.name())),
+                (
+                    "tokens",
+                    Json::arr(res.tokens.iter().map(|&t| Json::num(t as f64))),
+                ),
+                ("relative_flops", Json::num(res.relative_flops)),
+                ("prefill_seconds", Json::num(res.prefill_seconds)),
+                ("decode_seconds", Json::num(res.decode_seconds)),
+                ("peak_kv_bytes", Json::num(res.peak_kv_bytes as f64)),
+            ]);
+            Response::json(200, out.to_string())
+        }
+        Err(e) if format!("{}", e).contains("backpressure") => Response::text(429, "queue full"),
+        Err(e) => Response::text(500, &format!("{:#}", e)),
+    }
+}

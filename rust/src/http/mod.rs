@@ -1,0 +1,356 @@
+//! Minimal HTTP/1.1 server + client (substrate — no web framework on this
+//! image; built directly on `std::net` + the [`crate::util::threadpool`]).
+//!
+//! Scope: exactly what the serving example needs — `POST /v1/generate`
+//! (JSON body), `GET /metrics`, `GET /healthz`. Parsing is incremental and
+//! robust to fragmented reads; malformed requests get a 400 instead of a
+//! panic (property-tested with garbage inputs).
+
+pub mod api;
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::util::threadpool::ThreadPool;
+
+/// A parsed HTTP request (headers lowercased).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == lower)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json".into(), body: body.into_bytes() }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response { status, content_type: "text/plain".into(), body: body.as_bytes().to_vec() }
+    }
+
+    fn status_line(&self) -> &'static str {
+        match self.status {
+            200 => "200 OK",
+            400 => "400 Bad Request",
+            404 => "404 Not Found",
+            405 => "405 Method Not Allowed",
+            429 => "429 Too Many Requests",
+            500 => "500 Internal Server Error",
+            503 => "503 Service Unavailable",
+            _ => "500 Internal Server Error",
+        }
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            self.status_line(),
+            self.content_type,
+            self.body.len()
+        )?;
+        w.write_all(&self.body)
+    }
+}
+
+/// Incremental request parser outcome.
+pub enum ParseOutcome {
+    /// Need more bytes.
+    Incomplete,
+    /// Parsed a full request, consuming `used` bytes.
+    Done(Request, usize),
+    /// Irrecoverably malformed.
+    Bad(&'static str),
+}
+
+/// Maximum accepted body (1 MiB) — backpressure against abusive clients.
+pub const MAX_BODY: usize = 1 << 20;
+const MAX_HEAD: usize = 64 * 1024;
+
+/// Parse an HTTP/1.1 request head + content-length body from `buf`.
+pub fn parse_request(buf: &[u8]) -> ParseOutcome {
+    let head_end = match find_head_end(buf) {
+        Some(e) => e,
+        None => {
+            return if buf.len() > MAX_HEAD {
+                ParseOutcome::Bad("headers too large")
+            } else {
+                ParseOutcome::Incomplete
+            }
+        }
+    };
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h,
+        Err(_) => return ParseOutcome::Bad("non-utf8 head"),
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if !m.is_empty() && p.starts_with('/') => (m, p, v),
+        _ => return ParseOutcome::Bad("bad request line"),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return ParseOutcome::Bad("unsupported version");
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        match line.split_once(':') {
+            Some((k, v)) => headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string())),
+            None => return ParseOutcome::Bad("bad header"),
+        }
+    }
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse::<usize>())
+        .transpose();
+    let content_length = match content_length {
+        Ok(cl) => cl.unwrap_or(0),
+        Err(_) => return ParseOutcome::Bad("bad content-length"),
+    };
+    if content_length > MAX_BODY {
+        return ParseOutcome::Bad("body too large");
+    }
+    let body_start = head_end + 4;
+    if buf.len() < body_start + content_length {
+        return ParseOutcome::Incomplete;
+    }
+    let req = Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body: buf[body_start..body_start + content_length].to_vec(),
+    };
+    ParseOutcome::Done(req, body_start + content_length)
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Request handler: borrows the request, returns a response.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// Minimal HTTP server bound to `addr`, serving until `shutdown` is set.
+pub struct Server {
+    listener: TcpListener,
+    pool: ThreadPool,
+    handler: Handler,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn bind(addr: &str, workers: usize, handler: Handler) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(Server {
+            listener,
+            pool: ThreadPool::new(workers),
+            handler,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().unwrap()
+    }
+
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Accept loop; returns when the shutdown flag is set.
+    pub fn serve(&self) {
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let handler = Arc::clone(&self.handler);
+                    self.pool.execute(move || handle_conn(stream, handler));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, handler: Handler) {
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(10)));
+    let mut buf = Vec::with_capacity(4096);
+    let mut chunk = [0u8; 4096];
+    loop {
+        match parse_request(&buf) {
+            ParseOutcome::Done(req, _) => {
+                let resp = handler(&req);
+                let _ = resp.write_to(&mut stream);
+                return;
+            }
+            ParseOutcome::Bad(msg) => {
+                let _ = Response::text(400, msg).write_to(&mut stream);
+                return;
+            }
+            ParseOutcome::Incomplete => match stream.read(&mut chunk) {
+                Ok(0) => return, // peer closed before a full request
+                Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                Err(_) => return,
+            },
+        }
+    }
+}
+
+/// One-shot HTTP client (for examples/benches/tests).
+pub fn request(addr: &str, method: &str, path: &str, body: &[u8]) -> std::io::Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "{} {} HTTP/1.1\r\nhost: localhost\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        method,
+        path,
+        body.len()
+    )?;
+    stream.write_all(body)?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let head_end = find_head_end(&raw).ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, "no response head")
+    })?;
+    let head = String::from_utf8_lossy(&raw[..head_end]);
+    let status: u16 = head
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad status"))?;
+    Ok((status, raw[head_end + 4..].to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_str(s: &str) -> ParseOutcome {
+        parse_request(s.as_bytes())
+    }
+
+    #[test]
+    fn parses_get() {
+        let raw = "GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n";
+        match parse_str(raw) {
+            ParseOutcome::Done(req, used) => {
+                assert_eq!(req.method, "GET");
+                assert_eq!(req.path, "/healthz");
+                assert_eq!(req.header("host"), Some("x"));
+                assert_eq!(used, raw.len());
+            }
+            _ => panic!("expected Done"),
+        }
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = "POST /v1/generate HTTP/1.1\r\ncontent-length: 5\r\n\r\nhello";
+        match parse_str(raw) {
+            ParseOutcome::Done(req, used) => {
+                assert_eq!(req.body, b"hello");
+                assert_eq!(used, raw.len());
+            }
+            _ => panic!("expected Done"),
+        }
+    }
+
+    #[test]
+    fn incomplete_until_body_arrives() {
+        let raw = "POST / HTTP/1.1\r\ncontent-length: 10\r\n\r\nhi";
+        assert!(matches!(parse_str(raw), ParseOutcome::Incomplete));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(matches!(parse_str("\r\n\r\n"), ParseOutcome::Bad(_)));
+        assert!(matches!(
+            parse_str("GET missing-slash HTTP/1.1\r\n\r\n"),
+            ParseOutcome::Bad(_)
+        ));
+        assert!(matches!(
+            parse_str("GET / SPDY/9\r\n\r\n"),
+            ParseOutcome::Bad(_)
+        ));
+        assert!(matches!(
+            parse_str("GET / HTTP/1.1\r\ncontent-length: banana\r\n\r\n"),
+            ParseOutcome::Bad(_)
+        ));
+    }
+
+    #[test]
+    fn fragmented_parse_is_incomplete() {
+        let full = "GET / HTTP/1.1\r\nhost: a\r\n\r\n";
+        for cut in 1..full.len() {
+            match parse_str(&full[..cut]) {
+                ParseOutcome::Incomplete => {}
+                ParseOutcome::Done(_, _) if cut == full.len() => {}
+                ParseOutcome::Done(_, _) => panic!("premature Done at {}", cut),
+                ParseOutcome::Bad(m) => panic!("Bad({}) at cut {}", m, cut),
+            }
+        }
+    }
+
+    #[test]
+    fn server_roundtrip() {
+        let handler: Handler = Arc::new(|req: &Request| {
+            if req.path == "/echo" {
+                Response::json(200, String::from_utf8_lossy(&req.body).to_string())
+            } else {
+                Response::text(404, "nope")
+            }
+        });
+        let server = Server::bind("127.0.0.1:0", 2, handler).unwrap();
+        let addr = server.local_addr().to_string();
+        let stop = server.shutdown_handle();
+        let t = std::thread::spawn(move || server.serve());
+        let (status, body) = request(&addr, "POST", "/echo", b"{\"x\":1}").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"x\":1}");
+        let (status, _) = request(&addr, "GET", "/missing", b"").unwrap();
+        assert_eq!(status, 404);
+        stop.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn response_serialization() {
+        let mut out = Vec::new();
+        Response::text(200, "ok").write_to(&mut out).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("content-length: 2"));
+        assert!(s.ends_with("ok"));
+    }
+}

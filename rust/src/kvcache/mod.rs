@@ -1,0 +1,313 @@
+//! Per-layer compacted KV caches.
+//!
+//! FastAV's fine pruning gives every layer a *different* live token set,
+//! so each layer owns an independent cache. Layout matches the artifact
+//! ABI exactly — `[H, cap, dh]` row-major f32, where `cap` is the compiled
+//! bucket capacity — so cache slices upload to PJRT without reshuffling.
+//!
+//! Invariants (property-tested in `rust/tests/`):
+//! * slots `0..len` are live, `len..cap` are padding;
+//! * `positions[i]` is the token's *original* sequence position (RoPE
+//!   phases survive compaction);
+//! * `compact(keep)` preserves (position → K/V row) for kept tokens;
+//! * `grow(cap')` preserves all live rows and their order.
+
+/// KV cache for one transformer layer.
+#[derive(Debug, Clone)]
+pub struct LayerCache {
+    pub n_heads: usize,
+    pub d_head: usize,
+    cap: usize,
+    len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    positions: Vec<i32>,
+}
+
+impl LayerCache {
+    /// Empty cache with `cap` slots.
+    pub fn new(n_heads: usize, d_head: usize, cap: usize) -> LayerCache {
+        LayerCache {
+            n_heads,
+            d_head,
+            cap,
+            len: 0,
+            k: vec![0.0; n_heads * cap * d_head],
+            v: vec![0.0; n_heads * cap * d_head],
+            positions: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Build from prefill output `[H, src_n, dh]` keeping rows `0..valid`.
+    /// `positions[i]` gives the original position of row `i`.
+    pub fn from_prefill(
+        n_heads: usize,
+        d_head: usize,
+        cap: usize,
+        src_k: &[f32],
+        src_v: &[f32],
+        src_n: usize,
+        valid: usize,
+        positions: &[i32],
+    ) -> LayerCache {
+        assert!(valid <= cap && valid <= src_n);
+        assert_eq!(src_k.len(), n_heads * src_n * d_head);
+        assert_eq!(positions.len(), valid);
+        let mut c = LayerCache::new(n_heads, d_head, cap);
+        for h in 0..n_heads {
+            let src_base = h * src_n * d_head;
+            let dst_base = h * cap * d_head;
+            let rows = valid * d_head;
+            c.k[dst_base..dst_base + rows]
+                .copy_from_slice(&src_k[src_base..src_base + rows]);
+            c.v[dst_base..dst_base + rows]
+                .copy_from_slice(&src_v[src_base..src_base + rows]);
+        }
+        c.len = valid;
+        c.positions.extend_from_slice(positions);
+        c
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn positions(&self) -> &[i32] {
+        &self.positions
+    }
+
+    pub fn k_data(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v_data(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Heap bytes of the K/V payload (the paper's memory metric).
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Validity mask over the `cap` slots (1.0 for live rows).
+    pub fn mask(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.cap];
+        for slot in m.iter_mut().take(self.len) {
+            *slot = 1.0;
+        }
+        m
+    }
+
+    /// One K row (head `h`, slot `i`) — test/debug helper.
+    pub fn k_row(&self, h: usize, i: usize) -> &[f32] {
+        let base = h * self.cap * self.d_head + i * self.d_head;
+        &self.k[base..base + self.d_head]
+    }
+
+    pub fn v_row(&self, h: usize, i: usize) -> &[f32] {
+        let base = h * self.cap * self.d_head + i * self.d_head;
+        &self.v[base..base + self.d_head]
+    }
+
+    /// Keep only the slots in `keep` (ascending, unique, all `< len`),
+    /// compacting rows to the front. Positions follow their rows.
+    pub fn compact(&mut self, keep: &[usize]) {
+        debug_assert!(keep.windows(2).all(|w| w[0] < w[1]), "keep must be ascending");
+        if let Some(&last) = keep.last() {
+            assert!(last < self.len, "keep index {} out of range {}", last, self.len);
+        }
+        let dh = self.d_head;
+        for h in 0..self.n_heads {
+            let base = h * self.cap * dh;
+            for (dst, &src) in keep.iter().enumerate() {
+                if dst == src {
+                    continue; // prefix already in place
+                }
+                self.k.copy_within(base + src * dh..base + (src + 1) * dh, base + dst * dh);
+                self.v.copy_within(base + src * dh..base + (src + 1) * dh, base + dst * dh);
+            }
+        }
+        let new_pos: Vec<i32> = keep.iter().map(|&i| self.positions[i]).collect();
+        self.positions = new_pos;
+        self.len = keep.len();
+        // Zero the now-dead tail so masked kernels see clean padding.
+        for h in 0..self.n_heads {
+            let base = h * self.cap * dh;
+            for i in self.len..self.cap.min(self.len + 64) {
+                self.k[base + i * dh..base + (i + 1) * dh].fill(0.0);
+                self.v[base + i * dh..base + (i + 1) * dh].fill(0.0);
+            }
+        }
+    }
+
+    /// Append one token's K/V (`[H, dh]` each) at original position `pos`.
+    /// The caller must ensure capacity (`grow` first if needed).
+    pub fn append(&mut self, k_new: &[f32], v_new: &[f32], pos: i32) {
+        assert!(self.len < self.cap, "cache full: len={} cap={}", self.len, self.cap);
+        assert_eq!(k_new.len(), self.n_heads * self.d_head);
+        let dh = self.d_head;
+        for h in 0..self.n_heads {
+            let dst = h * self.cap * dh + self.len * dh;
+            self.k[dst..dst + dh].copy_from_slice(&k_new[h * dh..(h + 1) * dh]);
+            self.v[dst..dst + dh].copy_from_slice(&v_new[h * dh..(h + 1) * dh]);
+        }
+        self.positions.push(pos);
+        self.len += 1;
+    }
+
+    /// Re-layout into a larger capacity (next bucket).
+    pub fn grow(&mut self, new_cap: usize) {
+        assert!(new_cap >= self.len);
+        if new_cap == self.cap {
+            return;
+        }
+        let dh = self.d_head;
+        let mut k = vec![0.0f32; self.n_heads * new_cap * dh];
+        let mut v = vec![0.0f32; self.n_heads * new_cap * dh];
+        for h in 0..self.n_heads {
+            let src = h * self.cap * dh;
+            let dst = h * new_cap * dh;
+            let rows = self.len * dh;
+            k[dst..dst + rows].copy_from_slice(&self.k[src..src + rows]);
+            v[dst..dst + rows].copy_from_slice(&self.v[src..src + rows]);
+        }
+        self.k = k;
+        self.v = v;
+        self.cap = new_cap;
+    }
+}
+
+/// All layers' caches for one request + peak-memory accounting.
+#[derive(Debug, Clone, Default)]
+pub struct CacheSet {
+    pub layers: Vec<LayerCache>,
+    peak_bytes: usize,
+}
+
+impl CacheSet {
+    pub fn push(&mut self, c: LayerCache) {
+        self.layers.push(c);
+        self.update_peak();
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|c| c.bytes()).sum()
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    pub fn update_peak(&mut self) {
+        self.peak_bytes = self.peak_bytes.max(self.bytes());
+    }
+
+    /// Live token count per layer (the pruning trace).
+    pub fn live_counts(&self) -> Vec<usize> {
+        self.layers.iter().map(|c| c.len()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(n_heads: usize, dh: usize, cap: usize, n: usize) -> LayerCache {
+        // K row value = 100*h + i, V = negative of that; positions = 10+i.
+        let mut k = vec![0.0f32; n_heads * n * dh];
+        let mut v = vec![0.0f32; n_heads * n * dh];
+        for h in 0..n_heads {
+            for i in 0..n {
+                for d in 0..dh {
+                    k[h * n * dh + i * dh + d] = (100 * h + i) as f32;
+                    v[h * n * dh + i * dh + d] = -((100 * h + i) as f32);
+                }
+            }
+        }
+        let positions: Vec<i32> = (0..n as i32).map(|i| 10 + i).collect();
+        LayerCache::from_prefill(n_heads, dh, cap, &k, &v, n, n, &positions)
+    }
+
+    #[test]
+    fn from_prefill_copies_rows() {
+        let c = filled(2, 4, 8, 5);
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.k_row(1, 3)[0], 103.0);
+        assert_eq!(c.v_row(0, 2)[0], -2.0);
+        assert_eq!(c.positions(), &[10, 11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn compact_preserves_position_row_mapping() {
+        let mut c = filled(2, 4, 8, 6);
+        c.compact(&[0, 2, 5]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.positions(), &[10, 12, 15]);
+        assert_eq!(c.k_row(0, 0)[0], 0.0);
+        assert_eq!(c.k_row(0, 1)[0], 2.0);
+        assert_eq!(c.k_row(0, 2)[0], 5.0);
+        assert_eq!(c.k_row(1, 2)[0], 105.0);
+        // mask reflects new length
+        let m = c.mask();
+        assert_eq!(m.iter().filter(|&&x| x > 0.5).count(), 3);
+    }
+
+    #[test]
+    fn append_then_read_back() {
+        let mut c = filled(2, 4, 8, 3);
+        let k_new = vec![7.0f32; 8];
+        let v_new = vec![-7.0f32; 8];
+        c.append(&k_new, &v_new, 42);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.k_row(0, 3)[0], 7.0);
+        assert_eq!(c.k_row(1, 3)[0], 7.0);
+        assert_eq!(c.positions().last(), Some(&42));
+    }
+
+    #[test]
+    fn grow_preserves_rows() {
+        let mut c = filled(2, 4, 8, 6);
+        c.compact(&[1, 4]);
+        c.grow(16);
+        assert_eq!(c.cap(), 16);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.k_row(0, 0)[0], 1.0);
+        assert_eq!(c.k_row(1, 1)[0], 104.0);
+        assert_eq!(c.positions(), &[11, 14]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cache full")]
+    fn append_past_capacity_panics() {
+        let mut c = filled(1, 2, 3, 3);
+        c.append(&[0.0, 0.0], &[0.0, 0.0], 1);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let c = LayerCache::new(2, 4, 8);
+        assert_eq!(c.bytes(), 2 * 2 * 8 * 4 * 4); // k+v, H, cap, dh, f32
+        let mut set = CacheSet::default();
+        set.push(c);
+        assert_eq!(set.bytes(), set.peak_bytes());
+        assert_eq!(set.live_counts(), vec![0]);
+    }
+
+    #[test]
+    fn peak_tracks_maximum() {
+        let mut set = CacheSet::default();
+        set.push(LayerCache::new(1, 2, 16));
+        let before = set.peak_bytes();
+        set.layers[0].grow(32);
+        set.update_peak();
+        assert!(set.peak_bytes() > before);
+    }
+}

@@ -1,0 +1,43 @@
+//! # FastAV — efficient token pruning for audio-visual LLM inference
+//!
+//! Rust coordinator (L3) of the three-layer FastAV stack. The JAX/Pallas
+//! layers (L2/L1, `python/compile/`) are AOT-lowered to HLO-text artifacts
+//! at build time; this crate loads them through the PJRT C API and owns
+//! everything on the request path: tokenization, embedding lookup, the
+//! staged prefill/decode pipeline, KV-cache management, and — the paper's
+//! contribution — the two-stage FastAV pruning (global at the middle
+//! layer, fine in every later layer) plus the baseline policies it is
+//! evaluated against.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`]        — std-only substrates: JSON, CLI parsing, thread pool.
+//! * [`tokens`]      — vocabulary + modality segment layout (mirrors python).
+//! * [`avsynth`]     — synthetic AV benchmark generators (bit-identical to
+//!   the python training-side generators via a shared SplitMix64).
+//! * [`runtime`]     — PJRT client wrapper, HLO artifact registry, bucket
+//!   selection, literal helpers.
+//! * [`model`]       — model config, weights, and the staged execution
+//!   engine (prefill front, back layers, decode loop).
+//! * [`kvcache`]     — per-layer compacted KV caches with byte accounting.
+//! * [`pruning`]     — FastAV global + fine pruning and all baselines.
+//! * [`calibration`] — offline rollout calibration (paper Figs. 1–2).
+//! * [`flops`]       — theoretical FLOPs accounting (paper's protocol).
+//! * [`eval`]        — benchmark evaluation harness + scoring.
+//! * [`metrics`]    — counters/histograms with Prometheus-style export.
+//! * [`coordinator`] — request queue, scheduler, engine worker, streaming.
+//! * [`http`]        — minimal HTTP/1.1 server (std::net, no framework).
+
+pub mod avsynth;
+pub mod calibration;
+pub mod coordinator;
+pub mod eval;
+pub mod flops;
+pub mod http;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod pruning;
+pub mod runtime;
+pub mod tokens;
+pub mod util;

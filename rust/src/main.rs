@@ -1,0 +1,187 @@
+//! FastAV CLI: serve / eval / calibrate / info.
+//!
+//! ```text
+//! fastav serve     --model vl2sim --port 8077 [--no-pruning] [--p 20]
+//! fastav eval      --model vl2sim --dataset avhbench --n 50 [--no-pruning]
+//! fastav calibrate --model vl2sim --n 100
+//! fastav info      --model vl2sim
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use fastav::avsynth::Dataset;
+use fastav::calibration::{calibrate, Calibration};
+use fastav::coordinator::Coordinator;
+use fastav::eval::evaluate;
+use fastav::http::{Handler, Server};
+use fastav::model::{ModelEngine, PruningPlan};
+use fastav::util::cli::Args;
+
+const OPTIONS: &[&str] = &[
+    "model", "artifacts", "dataset", "n", "port", "p", "no-pruning", "seed",
+    "max-gen", "queue-cap", "workers", "calibration",
+];
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match Args::parse(args, OPTIONS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {}", e);
+            eprintln!("usage: fastav <serve|eval|calibrate|info> [--model vl2sim] ...");
+            std::process::exit(2);
+        }
+    };
+    let result = match parsed.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&parsed),
+        Some("eval") => cmd_eval(&parsed),
+        Some("calibrate") => cmd_calibrate(&parsed),
+        Some("info") => cmd_info(&parsed),
+        other => {
+            eprintln!("unknown subcommand {:?}", other);
+            eprintln!("usage: fastav <serve|eval|calibrate|info> [--model vl2sim] ...");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {:#}", e);
+        std::process::exit(1);
+    }
+}
+
+fn artifact_root(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn load_calibration(args: &Args, root: &std::path::Path, model: &str) -> Result<Calibration> {
+    let path = match args.get("calibration") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => root.join(model).join("calibration.json"),
+    };
+    Calibration::load(&path).map_err(|e| {
+        anyhow!("{:#}. Run `fastav calibrate --model {}` first.", e, model)
+    })
+}
+
+fn plan_from_args(args: &Args, root: &std::path::Path, model: &str) -> Result<PruningPlan> {
+    if args.has_flag("no-pruning") {
+        return Ok(PruningPlan::vanilla());
+    }
+    let p = args.get_f64("p", 20.0).map_err(|e| anyhow!(e))?;
+    let calib = load_calibration(args, root, model)?;
+    Ok(calib.plan(p))
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let root = artifact_root(args);
+    let model = args.get_or("model", "vl2sim").to_string();
+    let n = args.get_usize("n", 100).map_err(|e| anyhow!(e))?;
+    let seed = args.get_usize("seed", 1234).map_err(|e| anyhow!(e))? as u64;
+    let mut engine = ModelEngine::load(&root, &model)?;
+    println!("calibrating {} over {} samples...", model, n);
+    let calib = calibrate(&mut engine, n, seed)?;
+    println!(
+        "  threshold {:.5}  vis_cutoff {}  keep_audio {}  keep_frames {}  budget {}",
+        calib.threshold, calib.vis_cutoff, calib.keep_audio, calib.keep_frames, calib.budget
+    );
+    let out = root.join(&model).join("calibration.json");
+    calib.save(&out)?;
+    println!("wrote {:?}", out);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let root = artifact_root(args);
+    let model = args.get_or("model", "vl2sim").to_string();
+    let dataset = Dataset::parse(args.get_or("dataset", "avhbench"))
+        .ok_or_else(|| anyhow!("unknown dataset"))?;
+    let n = args.get_usize("n", 50).map_err(|e| anyhow!(e))?;
+    let seed = args.get_usize("seed", 1234).map_err(|e| anyhow!(e))? as u64;
+    let max_gen = args.get_usize("max-gen", 4).map_err(|e| anyhow!(e))?;
+    let plan = plan_from_args(args, &root, &model)?;
+    let mut engine = ModelEngine::load(&root, &model)?;
+    engine.warmup()?;
+    let report = evaluate(&mut engine, dataset, n, seed, &plan, max_gen)?;
+    println!(
+        "model={} dataset={} n={} pruning={}",
+        model,
+        report.dataset,
+        report.n,
+        if args.has_flag("no-pruning") { "off" } else { "fastav" }
+    );
+    println!(
+        "  accuracy {:.1}%  rel_flops {:.1}  prefill {:.1}ms  per-token {:.1}ms  kv {:.1}MB",
+        report.accuracy(),
+        report.mean_rel_flops,
+        report.mean_prefill_s * 1e3,
+        report.mean_decode_tok_s * 1e3,
+        report.mean_peak_kv_bytes / 1e6,
+    );
+    for (name, s) in &report.per_subtask {
+        if name == "captioning" {
+            println!("    {:<18} n={:<4} score {:.2}/5", name, s.n, s.caption_mean());
+        } else {
+            println!("    {:<18} n={:<4} acc {:.1}%", name, s.n, s.accuracy());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let root = artifact_root(args);
+    let model = args.get_or("model", "vl2sim").to_string();
+    let engine = ModelEngine::load(&root, &model)?;
+    let cfg = &engine.cfg;
+    println!("model {}", cfg.name);
+    println!(
+        "  d_model {}  heads {}x{}  layers {} (mid {})  ff {}  vocab {}",
+        cfg.d_model, cfg.n_heads, cfg.d_head, cfg.n_layers, cfg.mid_layer, cfg.d_ff, cfg.vocab
+    );
+    println!(
+        "  layout: frames {} x {} vis/frame, {} audio tokens, interleaved={}",
+        cfg.layout.frames,
+        cfg.layout.vis_per_frame,
+        cfg.layout.audio_tokens(),
+        cfg.layout.interleaved
+    );
+    println!("  kernel impl: {}", cfg.kernel_impl);
+    for entry in ["prefill_front", "back_layer", "decode_layer", "calib_probe"] {
+        println!("  {} buckets: {:?}", entry, engine.artifacts().buckets(entry));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let root = artifact_root(args);
+    let model = args.get_or("model", "vl2sim").to_string();
+    let port = args.get_usize("port", 8077).map_err(|e| anyhow!(e))?;
+    let queue_cap = args.get_usize("queue-cap", 64).map_err(|e| anyhow!(e))?;
+    let workers = args.get_usize("workers", 4).map_err(|e| anyhow!(e))?;
+    let max_gen = args.get_usize("max-gen", 4).map_err(|e| anyhow!(e))?;
+    let plan = plan_from_args(args, &root, &model)?;
+
+    // Engine + coordinator (engine lives on its own thread).
+    let coord = Arc::new(Coordinator::start(root.clone(), model.clone(), queue_cap, true)?);
+    let layout = {
+        // Load config cheaply for request assembly.
+        let cfg = fastav::model::ModelConfig::load(&root.join(&model).join("model.json"))?;
+        cfg.layout
+    };
+
+    let handler: Handler =
+        fastav::http::api::make_handler(Arc::clone(&coord), layout, plan.clone(), max_gen, 1234);
+    let server = Server::bind(&format!("127.0.0.1:{}", port), workers, handler)?;
+    println!("fastav serving {} on http://{}", model, server.local_addr());
+    println!("  POST /v1/generate  {{\"dataset\": \"avhbench\", \"index\": 0}}");
+    println!("  GET  /metrics      GET /healthz");
+    let shutdown = server.shutdown_handle();
+    ctrlc_fallback(&shutdown);
+    server.serve();
+    Ok(())
+}
+
+/// Without a signal-handling crate, serve until stdin closes (Ctrl-D) or
+/// the process is killed; the flag lets tests stop the loop.
+fn ctrlc_fallback(_shutdown: &Arc<std::sync::atomic::AtomicBool>) {}

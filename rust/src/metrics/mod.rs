@@ -1,0 +1,251 @@
+//! Metrics registry: counters, gauges, and latency histograms with
+//! Prometheus-text export (substrate — no metrics crate on this image).
+//!
+//! Lock-free counters (atomics); histograms use fixed log-spaced latency
+//! buckets suited to the 10µs–10s range the engine operates in.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotone counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (u64; store scaled values for floats).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn max(&self, n: u64) {
+        self.v.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram: 32 log-spaced buckets from 10µs to ~21s (×1.6 per
+/// bucket), plus count/sum for mean.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    bounds: Vec<f64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        let mut bounds = Vec::with_capacity(32);
+        let mut b = 10e-6;
+        for _ in 0..32 {
+            bounds.push(b);
+            b *= 1.6;
+        }
+        Histogram {
+            buckets: (0..33).map(|_| AtomicU64::new(0)).collect(),
+            bounds,
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, secs: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| secs <= b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6 / c as f64
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    *self.bounds.last().unwrap()
+                };
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+/// Named-metric registry; export() renders Prometheus text format.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Prometheus text exposition.
+    pub fn export(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {} counter\n{} {}\n", name, name, c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {} gauge\n{} {}\n", name, name, g.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "# TYPE {} summary\n{}_count {}\n{}_mean_seconds {:.6}\n\
+                 {}{{quantile=\"0.5\"}} {:.6}\n{}{{quantile=\"0.95\"}} {:.6}\n\
+                 {}{{quantile=\"0.99\"}} {:.6}\n",
+                name,
+                name,
+                h.count(),
+                name,
+                h.mean(),
+                name,
+                h.quantile(0.5),
+                name,
+                h.quantile(0.95),
+                name,
+                h.quantile(0.99),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::default();
+        r.counter("reqs").inc();
+        r.counter("reqs").add(4);
+        assert_eq!(r.counter("reqs").get(), 5);
+        r.gauge("kv_bytes").set(100);
+        r.gauge("kv_bytes").max(50);
+        assert_eq!(r.gauge("kv_bytes").get(), 100);
+        r.gauge("kv_bytes").max(200);
+        assert_eq!(r.gauge("kv_bytes").get(), 200);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::default();
+        for i in 1..=1000 {
+            h.observe(i as f64 * 1e-5); // 10µs .. 10ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p50 > 1e-3 && p50 < 1e-2);
+        assert!((h.mean() - 5.0e-3).abs() < 1e-3);
+    }
+
+    #[test]
+    fn histogram_empty_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn export_contains_all() {
+        let r = Registry::default();
+        r.counter("a_total").inc();
+        r.gauge("b_bytes").set(7);
+        r.histogram("lat_seconds").observe(0.01);
+        let text = r.export();
+        assert!(text.contains("a_total 1"));
+        assert!(text.contains("b_bytes 7"));
+        assert!(text.contains("lat_seconds_count 1"));
+        assert!(text.contains("quantile=\"0.95\""));
+    }
+
+    #[test]
+    fn same_name_same_instance() {
+        let r = Registry::default();
+        let c1 = r.counter("x");
+        let c2 = r.counter("x");
+        c1.inc();
+        assert_eq!(c2.get(), 1);
+    }
+}

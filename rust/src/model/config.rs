@@ -1,0 +1,157 @@
+//! Model configuration parsed from `artifacts/<model>/model.json`
+//! (written by `python/compile/aot.py` — the single source of truth).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::flops::FlopsModel;
+use crate::tokens::Layout;
+use crate::util::json::Json;
+
+/// AV-LLM decoder hyperparameters + bucket grid (mirrors python ModelCfg).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub n_layers: usize,
+    pub mid_layer: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    pub rollout_alpha: f64,
+    pub layout: Layout,
+    pub prefill_buckets: Vec<usize>,
+    pub seq_buckets: Vec<usize>,
+    pub calib_buckets: Vec<usize>,
+    /// Directory (under the artifact root) holding this model's weights —
+    /// alias configs (vl2sim_long) share another model's checkpoint.
+    pub weights_dir: String,
+    /// Kernel implementation the artifacts were lowered with.
+    pub kernel_impl: String,
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .as_usize()
+        .ok_or_else(|| anyhow!("model.json: missing/invalid '{}'", key))
+}
+
+fn usize_list(j: &Json, key: &str) -> Result<Vec<usize>> {
+    j.get(key)
+        .as_arr()
+        .ok_or_else(|| anyhow!("model.json: missing list '{}'", key))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("model.json: bad int in '{}'", key)))
+        .collect()
+}
+
+impl ModelConfig {
+    /// Parse `artifacts/<model>/model.json`.
+    pub fn load(path: &Path) -> Result<ModelConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {:?} (run `make artifacts`)", path))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{:?}: {}", path, e))?;
+        Self::from_json(&root)
+    }
+
+    pub fn from_json(root: &Json) -> Result<ModelConfig> {
+        let c = root.get("config");
+        let l = c.get("layout");
+        let layout = Layout {
+            frames: usize_field(l, "frames")?,
+            vis_per_frame: usize_field(l, "vis_per_frame")?,
+            aud_len: usize_field(l, "aud_len")?,
+            aud_per_frame: usize_field(l, "aud_per_frame")?,
+            interleaved: l
+                .get("interleaved")
+                .as_bool()
+                .ok_or_else(|| anyhow!("layout.interleaved"))?,
+        };
+        Ok(ModelConfig {
+            name: c
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("config.name"))?
+                .to_string(),
+            vocab: usize_field(c, "vocab")?,
+            d_model: usize_field(c, "d_model")?,
+            n_heads: usize_field(c, "n_heads")?,
+            d_head: usize_field(c, "d_head")?,
+            n_layers: usize_field(c, "n_layers")?,
+            mid_layer: usize_field(c, "mid_layer")?,
+            d_ff: usize_field(c, "d_ff")?,
+            rope_theta: c.get("rope_theta").as_f64().unwrap_or(10000.0),
+            rollout_alpha: c.get("rollout_alpha").as_f64().unwrap_or(0.6),
+            layout,
+            prefill_buckets: usize_list(c, "prefill_buckets")?,
+            seq_buckets: usize_list(c, "seq_buckets")?,
+            calib_buckets: usize_list(c, "calib_buckets")?,
+            weights_dir: root
+                .get("weights_dir")
+                .as_str()
+                .unwrap_or_else(|| c.get("name").as_str().unwrap_or("model"))
+                .to_string(),
+            kernel_impl: root.get("impl").as_str().unwrap_or("pallas").to_string(),
+        })
+    }
+
+    pub fn flops_model(&self) -> FlopsModel {
+        FlopsModel {
+            d_model: self.d_model,
+            d_ff: self.d_ff,
+            n_layers: self.n_layers,
+            vocab: self.vocab,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {
+        "name": "tiny", "vocab": 256, "d_model": 32, "n_heads": 2,
+        "d_head": 16, "n_layers": 4, "mid_layer": 2, "d_ff": 64,
+        "rope_theta": 10000.0, "rollout_alpha": 0.6,
+        "layout": {"frames": 2, "vis_per_frame": 4, "aud_len": 6,
+                    "aud_per_frame": 3, "interleaved": false},
+        "prefill_buckets": [32], "seq_buckets": [16, 32],
+        "calib_buckets": [32],
+        "train_steps": 150, "train_batch": 8, "train_lr": 0.002,
+        "train_seed": 1234
+      },
+      "impl": "pallas",
+      "weights_dir": "tiny",
+      "abi": {}
+    }"#;
+
+    #[test]
+    fn parses_model_json() {
+        let cfg = ModelConfig::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.name, "tiny");
+        assert_eq!(cfg.d_model, 32);
+        assert_eq!(cfg.n_heads * cfg.d_head, cfg.d_model);
+        assert_eq!(cfg.seq_buckets, vec![16, 32]);
+        assert!(!cfg.layout.interleaved);
+        assert_eq!(cfg.weights_dir, "tiny");
+        assert_eq!(cfg.kernel_impl, "pallas");
+    }
+
+    #[test]
+    fn flops_model_dims() {
+        let cfg = ModelConfig::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        let fm = cfg.flops_model();
+        assert_eq!(fm.d_model, 32);
+        assert_eq!(fm.n_layers, 4);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        let bad = r#"{"config": {"name": "x"}}"#;
+        assert!(ModelConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,803 @@
+//! The staged execution engine: front half → global prune → back layers
+//! with fine pruning → decode loop over per-layer KV caches.
+//!
+//! This is the request-path core. Every matrix multiplication happens
+//! inside AOT-compiled XLA artifacts; this module owns control flow,
+//! pruning decisions, cache bookkeeping, FLOPs/latency accounting, and
+//! the embedding gather (a host-side table lookup).
+//!
+//! Pruning-start-layer generality (paper Fig. 4): the front half is a
+//! fused artifact split at layer `g` — `prefill_front_<n>` for the default
+//! `g == mid_layer`, `frontsplit<g>_<n>` otherwise. Global pruning always
+//! happens at the split boundary; fine pruning follows in each later
+//! layer.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::config::ModelConfig;
+use super::weights::{WeightLiterals, Weights};
+use crate::flops::FlopsTally;
+use crate::kvcache::{CacheSet, LayerCache};
+use crate::pruning::{
+    fine_keep, global_keep, validate_keep, FineStrategy, GlobalInputs, GlobalStrategy,
+};
+use crate::runtime::literals::{lit_f32, lit_i32, lit_i32_scalar, to_vec_f32};
+use crate::runtime::{ArtifactDir, Runtime};
+use crate::tokens::{Segment, EOS};
+
+/// Complete pruning configuration for one request.
+#[derive(Debug, Clone)]
+pub struct PruningPlan {
+    pub global: GlobalStrategy,
+    /// AV-token keep budget for the budget-matched ablation strategies.
+    pub global_budget: usize,
+    pub fine: FineStrategy,
+    /// The paper's P (percent of remaining AV tokens dropped per layer).
+    pub fine_percent: f64,
+    pub seed: u64,
+    /// Layer boundary where the global stage applies; `None` = cfg.mid_layer.
+    pub global_layer: Option<usize>,
+    /// Extension (LazyLLM-inspired, the paper's future-work direction):
+    /// keep fine-pruning *during decode* using each step's importance row,
+    /// compacting per-layer caches as generation proceeds.
+    pub fine_during_decode: bool,
+}
+
+impl PruningPlan {
+    /// Vanilla inference: no pruning at all.
+    pub fn vanilla() -> PruningPlan {
+        PruningPlan {
+            global: GlobalStrategy::None,
+            global_budget: 0,
+            fine: FineStrategy::None,
+            fine_percent: 0.0,
+            seed: 0,
+            global_layer: None,
+            fine_during_decode: false,
+        }
+    }
+
+    /// The deployed FastAV policy (calibrated positional global pruning +
+    /// low-attentive fine pruning at `p` percent).
+    pub fn fastav(
+        vis_cutoff: usize,
+        keep_audio: usize,
+        keep_frames: usize,
+        p: f64,
+    ) -> PruningPlan {
+        PruningPlan {
+            global: GlobalStrategy::FastAvPosition { vis_cutoff, keep_audio, keep_frames },
+            global_budget: 0,
+            fine: FineStrategy::LowAttentive,
+            fine_percent: p,
+            seed: 0,
+            global_layer: None,
+            fine_during_decode: false,
+        }
+    }
+}
+
+/// Token-selection parameters. `temperature == 0` is greedy (argmax);
+/// otherwise softmax sampling at the given temperature, optionally
+/// truncated to the `top_k` highest-probability tokens. Deterministic
+/// under a fixed `seed`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sampling {
+    pub temperature: f64,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for Sampling {
+    fn default() -> Self {
+        Sampling { temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+/// Generation request options.
+#[derive(Debug, Clone)]
+pub struct GenerateOptions {
+    pub plan: PruningPlan,
+    pub max_gen: usize,
+    pub sampling: Sampling,
+}
+
+impl Default for GenerateOptions {
+    fn default() -> Self {
+        GenerateOptions {
+            plan: PruningPlan::vanilla(),
+            max_gen: 4,
+            sampling: Sampling::default(),
+        }
+    }
+}
+
+/// Select the next token from logits under the sampling parameters.
+/// Pure function (unit-tested); `step` decorrelates successive draws.
+pub fn select_token(logits: &[f32], s: &Sampling, step: usize) -> u32 {
+    if s.temperature <= 0.0 {
+        let mut best = 0usize;
+        for i in 1..logits.len() {
+            if logits[i] > logits[best] {
+                best = i;
+            }
+        }
+        return best as u32;
+    }
+    // Rank candidates, truncate to top_k (0 = no truncation).
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    let k = if s.top_k == 0 { idx.len() } else { s.top_k.min(idx.len()) };
+    let idx = &idx[..k];
+    let max = logits[idx[0]] as f64;
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| ((logits[i] as f64 - max) / s.temperature).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut rng = crate::util::rng::SplitMix64::new(
+        s.seed ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let mut r = rng.next_f64() * total;
+    for (w, &i) in weights.iter().zip(idx) {
+        r -= w;
+        if r <= 0.0 {
+            return i as u32;
+        }
+    }
+    idx[k - 1] as u32
+}
+
+/// One prompt with its modality metadata.
+pub struct RequestInput<'a> {
+    pub prompt: &'a [u32],
+    pub segments: &'a [Segment],
+    pub frame_of: &'a [i32],
+}
+
+impl<'a> RequestInput<'a> {
+    pub fn from_sample(s: &'a crate::avsynth::Sample) -> RequestInput<'a> {
+        RequestInput { prompt: &s.prompt, segments: &s.segments, frame_of: &s.frame_of }
+    }
+}
+
+/// Everything measured about one generation.
+#[derive(Debug, Clone)]
+pub struct GenerateResult {
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    pub flops: FlopsTally,
+    pub relative_flops: f64,
+    pub peak_kv_bytes: usize,
+    pub prefill_seconds: f64,
+    pub decode_seconds: f64,
+    pub decode_steps: usize,
+    /// Live token count entering each layer during prefill.
+    pub live_counts: Vec<usize>,
+}
+
+/// Rollout/attention probe output (calibration path).
+#[derive(Debug, Clone)]
+pub struct CalibProbe {
+    pub n_layers: usize,
+    pub bucket: usize,
+    pub prompt_len: usize,
+    /// `[L, n, n]` row-major rollout stacks (R^1..R^L).
+    pub rollout: Vec<f32>,
+    /// `[L, n, n]` head-averaged raw attention per layer.
+    pub attn: Vec<f32>,
+}
+
+impl CalibProbe {
+    /// Rollout value R^layer[row, col] (`layer` counts layers applied, 1-based).
+    pub fn rollout_at(&self, layer: usize, row: usize, col: usize) -> f32 {
+        let n = self.bucket;
+        self.rollout[((layer - 1) * n + row) * n + col]
+    }
+
+    pub fn attn_at(&self, layer: usize, row: usize, col: usize) -> f32 {
+        let n = self.bucket;
+        self.attn[((layer - 1) * n + row) * n + col]
+    }
+
+    /// Influence of every prompt token on the final query after `layer`
+    /// layers (the last live row of R^layer) — the "informativeness" signal.
+    pub fn last_row(&self, layer: usize) -> Vec<f32> {
+        (0..self.prompt_len)
+            .map(|j| self.rollout_at(layer, self.prompt_len - 1, j))
+            .collect()
+    }
+}
+
+/// The engine: one model, one PJRT runtime, prebuilt weight literals.
+pub struct ModelEngine {
+    pub cfg: ModelConfig,
+    rt: Runtime,
+    art: ArtifactDir,
+    weights: Weights,
+    wlit: WeightLiterals,
+    /// Lazily-built front slabs for non-default split depths (Fig. 4).
+    front_slabs: HashMap<usize, Vec<xla::Literal>>,
+}
+
+impl ModelEngine {
+    /// Load a model from `artifact_root/<model>` (artifacts + config) and
+    /// `artifact_root/<weights_dir>` (checkpoint).
+    pub fn load(artifact_root: &std::path::Path, model: &str) -> Result<ModelEngine> {
+        let dir = artifact_root.join(model);
+        let cfg = ModelConfig::load(&dir.join("model.json"))?;
+        let art = ArtifactDir::open(&dir)?;
+        let weights = Weights::load(&artifact_root.join(&cfg.weights_dir))?;
+        weights.check(&cfg)?;
+        let wlit = WeightLiterals::build(&weights, &cfg)?;
+        let rt = Runtime::cpu()?;
+        Ok(ModelEngine { cfg, rt, art, weights, wlit, front_slabs: HashMap::new() })
+    }
+
+    pub fn artifacts(&self) -> &ArtifactDir {
+        &self.art
+    }
+
+    /// (compiled executables, total executions) — cache-health telemetry.
+    pub fn runtime_stats(&self) -> (usize, u64) {
+        (self.rt.cached(), self.rt.exec_count)
+    }
+
+    /// Pre-compile the artifacts on the serving path (prefill at every
+    /// bucket, back/decode at every bucket, logits) so first-request
+    /// latency excludes XLA compilation.
+    pub fn warmup(&mut self) -> Result<()> {
+        let mut paths = Vec::new();
+        for entry in ["prefill_front", "back_layer", "decode_layer"] {
+            for &b in self.art.buckets(entry) {
+                paths.push(self.art.path(entry, Some(b)));
+            }
+        }
+        paths.push(self.art.path("logits", None));
+        for p in paths {
+            self.rt.load(&p)?;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ helpers
+
+    fn fm(&self) -> crate::flops::FlopsModel {
+        self.cfg.flops_model()
+    }
+
+    /// Front artifact entry name for a split depth.
+    fn front_entry(&self, g: usize) -> String {
+        if g == self.cfg.mid_layer {
+            "prefill_front".to_string()
+        } else {
+            format!("frontsplit{}", g)
+        }
+    }
+
+    /// Ensure the stacked front-weight literals for split depth `g` exist
+    /// (prefix slab of the stacked per-layer tensors; cached).
+    fn ensure_front_slab(&mut self, g: usize) -> Result<()> {
+        if g == self.cfg.mid_layer || self.front_slabs.contains_key(&g) {
+            return Ok(());
+        }
+        let mut slab = Vec::with_capacity(9);
+        for t in &self.weights.layers {
+            let row = t.elems() / t.shape[0];
+            let mut shape = vec![g];
+            shape.extend(&t.shape[1..]);
+            slab.push(lit_f32(&shape, &t.data[..g * row])?);
+        }
+        self.front_slabs.insert(g, slab);
+        Ok(())
+    }
+
+    /// Build the (mask, positions) literal pair padded to `bucket`.
+    fn mask_positions(
+        &self,
+        live_positions: &[i32],
+        bucket: usize,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let mut mask = vec![0.0f32; bucket];
+        let mut pos = vec![0i32; bucket];
+        for (i, &p) in live_positions.iter().enumerate() {
+            mask[i] = 1.0;
+            pos[i] = p;
+        }
+        Ok((lit_f32(&[bucket], &mask)?, lit_i32(&[bucket], &pos)?))
+    }
+
+    /// Run the logits head on a hidden vector.
+    ///
+    /// §Perf note: a device-resident-weights variant via `execute_b` was
+    /// measured but the xla 0.1.6 PJRT wrapper appears to donate input
+    /// buffers on execution (reuse segfaults); see EXPERIMENTS.md §Perf.
+    fn logits(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let path = self.art.path("logits", None);
+        let x_lit = lit_f32(&[self.cfg.d_model], x)?;
+        let outs = self.rt.execute(&path, &[&x_lit, &self.wlit.ln_f, &self.wlit.emb])?;
+        to_vec_f32(&outs[0])
+    }
+
+    /// Execute one back layer over the live rows. Returns (h', k, v, s)
+    /// as host vectors sized to the bucket.
+    fn run_back_layer(
+        &mut self,
+        layer: usize,
+        h_live: &[f32],
+        live_positions: &[i32],
+        bucket: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let d = self.cfg.d_model;
+        let n_live = live_positions.len();
+        let mut h_pad = vec![0.0f32; bucket * d];
+        h_pad[..n_live * d].copy_from_slice(&h_live[..n_live * d]);
+        let h_lit = lit_f32(&[bucket, d], &h_pad)?;
+        let (mask, pos) = self.mask_positions(live_positions, bucket)?;
+        let last_idx = lit_i32_scalar(n_live as i32 - 1)?;
+        let path = self.art.path("back_layer", Some(bucket));
+        let mut inputs: Vec<&xla::Literal> = vec![&h_lit, &mask, &pos, &last_idx];
+        for p in &self.wlit.per_layer[layer] {
+            inputs.push(p);
+        }
+        let outs = self.rt.execute(&path, &inputs)?;
+        let [h_out, k, v, s]: [xla::Literal; 4] = outs
+            .try_into()
+            .map_err(|_| anyhow!("back_layer returned wrong arity"))?;
+        Ok((to_vec_f32(&h_out)?, to_vec_f32(&k)?, to_vec_f32(&v)?, to_vec_f32(&s)?))
+    }
+
+    /// Compact live-state vectors to a keep set (indices into live rows).
+    fn compact_live(
+        h_live: &mut Vec<f32>,
+        positions: &mut Vec<i32>,
+        segments: &mut Vec<Segment>,
+        keep: &[usize],
+        d: usize,
+    ) {
+        let mut new_h = Vec::with_capacity(keep.len() * d);
+        let mut new_p = Vec::with_capacity(keep.len());
+        let mut new_s = Vec::with_capacity(keep.len());
+        for &i in keep {
+            new_h.extend_from_slice(&h_live[i * d..(i + 1) * d]);
+            new_p.push(positions[i]);
+            new_s.push(segments[i]);
+        }
+        *h_live = new_h;
+        *positions = new_p;
+        *segments = new_s;
+    }
+
+    /// Cache capacity for a live set: the smallest decode bucket that fits
+    /// `live + max_gen` appended tokens.
+    fn cache_cap(&self, live: usize, max_gen: usize) -> Result<usize> {
+        self.art.pick_bucket("decode_layer", live + max_gen)
+    }
+
+    /// Build one front-layer cache by gathering `keep` rows from the
+    /// stacked prefill K/V output (layer stride `bucket_p`).
+    #[allow(clippy::too_many_arguments)]
+    fn front_cache(
+        &self,
+        ks: &[f32],
+        vs: &[f32],
+        layer: usize,
+        bucket_p: usize,
+        keep: &[usize],
+        cap: usize,
+    ) -> LayerCache {
+        let (h_n, dh) = (self.cfg.n_heads, self.cfg.d_head);
+        let stride = h_n * bucket_p * dh;
+        let src_k = &ks[layer * stride..(layer + 1) * stride];
+        let src_v = &vs[layer * stride..(layer + 1) * stride];
+        let mut cache = LayerCache::new(h_n, dh, cap);
+        let mut k_row = vec![0.0f32; h_n * dh];
+        let mut v_row = vec![0.0f32; h_n * dh];
+        for &orig in keep {
+            for h in 0..h_n {
+                let base = h * bucket_p * dh + orig * dh;
+                k_row[h * dh..(h + 1) * dh].copy_from_slice(&src_k[base..base + dh]);
+                v_row[h * dh..(h + 1) * dh].copy_from_slice(&src_v[base..base + dh]);
+            }
+            cache.append(&k_row, &v_row, orig as i32);
+        }
+        cache
+    }
+
+    // ----------------------------------------------------------- generate
+
+    /// Run one full generation (prefill + decode) under a pruning plan.
+    pub fn generate(
+        &mut self,
+        input: &RequestInput,
+        opts: &GenerateOptions,
+    ) -> Result<GenerateResult> {
+        self.generate_with(input, opts, |_| {})
+    }
+
+    /// [`Self::generate`] with a per-token streaming callback (invoked as
+    /// each output token is decided, before the next decode step runs).
+    pub fn generate_with(
+        &mut self,
+        input: &RequestInput,
+        opts: &GenerateOptions,
+        mut on_token: impl FnMut(u32),
+    ) -> Result<GenerateResult> {
+        let cfg = self.cfg.clone();
+        let fm = self.fm();
+        let d = cfg.d_model;
+        let k = input.prompt.len();
+        if k == 0 {
+            bail!("empty prompt");
+        }
+        if k != input.segments.len() || k != input.frame_of.len() {
+            bail!("prompt/segments/frame_of length mismatch");
+        }
+        let g = opts.plan.global_layer.unwrap_or(cfg.mid_layer);
+        if g == 0 || g >= cfg.n_layers {
+            bail!("global_layer {} outside [1, {})", g, cfg.n_layers);
+        }
+        let front_entry = self.front_entry(g);
+        if !self.art.has_entry(&front_entry) {
+            bail!(
+                "model '{}' has no '{}' artifact (emit_splits off?)",
+                cfg.name,
+                front_entry
+            );
+        }
+
+        let mut flops = FlopsTally::default();
+        let mut live_counts = vec![k; g];
+        let t_prefill = Instant::now();
+
+        // --- Stage 1: fused front half (layers 0..g) over the full prompt.
+        let bucket_p = self.art.pick_bucket(&front_entry, k)?;
+        let mut x_emb = vec![0.0f32; bucket_p * d];
+        self.weights.embed_into(input.prompt, &mut x_emb);
+        let x_lit = lit_f32(&[bucket_p, d], &x_emb)?;
+        let all_pos: Vec<i32> = (0..k as i32).collect();
+        let (mask, pos) = self.mask_positions(&all_pos, bucket_p)?;
+        let path = self.art.path(&front_entry, Some(bucket_p));
+        self.ensure_front_slab(g)?;
+        let outs = {
+            // Disjoint field borrows: `slab` reads wlit/front_slabs while
+            // `self.rt.execute` mutates only `rt`.
+            let slab: &[xla::Literal] = if g == self.cfg.mid_layer {
+                &self.wlit.front
+            } else {
+                self.front_slabs.get(&g).unwrap()
+            };
+            let mut inputs: Vec<&xla::Literal> = vec![&x_lit, &mask, &pos];
+            for p in slab {
+                inputs.push(p);
+            }
+            self.rt.execute(&path, &inputs)?
+        };
+        let [h_lit, k_stack, v_stack]: [xla::Literal; 3] = outs
+            .try_into()
+            .map_err(|_| anyhow!("front returned wrong arity"))?;
+        let h_full = to_vec_f32(&h_lit)?; // [bucket_p, d]
+        let ks = to_vec_f32(&k_stack)?; // [g, H, bucket_p, dh]
+        let vs = to_vec_f32(&v_stack)?;
+        for _ in 0..g {
+            flops.add_prefill_layer(&fm, k, k);
+        }
+
+        // Live state (rows of h, original positions, modality).
+        let mut h_live: Vec<f32> = h_full[..k * d].to_vec();
+        let mut positions: Vec<i32> = (0..k as i32).collect();
+        let mut segments: Vec<Segment> = input.segments.to_vec();
+
+        // --- Stage 2: global pruning at the split boundary. ---------------
+        // Attention-score strategies need layer g's own attention: the
+        // layer runs unpruned first and the keep applies after it.
+        // Positional / random / rollout strategies prune before layer g
+        // (paper semantics: tokens removed at the middle layer).
+        let needs_scores = matches!(
+            opts.plan.global,
+            GlobalStrategy::TopAttentive
+                | GlobalStrategy::LowAttentive
+                | GlobalStrategy::FastV { .. }
+        );
+        let needs_rollout = matches!(
+            opts.plan.global,
+            GlobalStrategy::TopInformative | GlobalStrategy::LowInformative
+        );
+
+        let rollout_row: Option<Vec<f32>> = if needs_rollout {
+            // Offline analysis pass; its FLOPs are calibration, not serving
+            // cost (the deployed policy is positional — see DESIGN.md).
+            let probe = self.calib_probe(input.prompt)?;
+            Some(probe.last_row(g))
+        } else {
+            None
+        };
+
+        let mut next_layer = g;
+        let mut mid_scores: Option<Vec<f32>> = None;
+        let mut mid_kv: Option<(Vec<f32>, Vec<f32>, usize)> = None;
+
+        if needs_scores {
+            let bucket = self.art.pick_bucket("back_layer", positions.len())?;
+            let (h2, k_out, v_out, s) = self.run_back_layer(g, &h_live, &positions, bucket)?;
+            live_counts.push(positions.len());
+            flops.add_prefill_layer(&fm, positions.len(), positions.len());
+            h_live = h2[..positions.len() * d].to_vec();
+            mid_scores = Some(s[..positions.len()].to_vec());
+            mid_kv = Some((k_out, v_out, bucket));
+            next_layer = g + 1;
+        }
+
+        let ginp = GlobalInputs {
+            segments: &segments,
+            frame_of: input.frame_of,
+            scores: mid_scores.as_deref(),
+            rollout: rollout_row.as_deref(),
+            budget: opts.plan.global_budget,
+            seed: opts.plan.seed ^ 0x61E0,
+        };
+        let keep = global_keep(&opts.plan.global, &ginp);
+        validate_keep(&keep, &segments).map_err(|e| anyhow!("global keep invalid: {}", e))?;
+
+        // Cache for layer g when it ran unpruned (tokens alive entering g
+        // = the full prompt; kept unpruned, LazyLLM-style).
+        let mut caches = CacheSet::default();
+        let cap_front = self.cache_cap(keep.len(), opts.max_gen)?;
+        for l in 0..g {
+            caches.push(self.front_cache(&ks, &vs, l, bucket_p, &keep, cap_front));
+        }
+        if let Some((k_out, v_out, bucket)) = mid_kv {
+            let pos_then: Vec<i32> = (0..k as i32).collect();
+            let cap = self.cache_cap(k, opts.max_gen)?;
+            caches.push(LayerCache::from_prefill(
+                cfg.n_heads,
+                cfg.d_head,
+                cap,
+                &k_out,
+                &v_out,
+                bucket,
+                k,
+                &pos_then,
+            ));
+        }
+        Self::compact_live(&mut h_live, &mut positions, &mut segments, &keep, d);
+
+        // --- Stage 3: back layers (next_layer..L) with fine pruning. -------
+        for l in next_layer..cfg.n_layers {
+            let n_live = positions.len();
+            live_counts.push(n_live);
+            let bucket = self.art.pick_bucket("back_layer", n_live)?;
+            let (h2, k_out, v_out, s) = self.run_back_layer(l, &h_live, &positions, bucket)?;
+            flops.add_prefill_layer(&fm, n_live, n_live);
+            h_live = h2[..n_live * d].to_vec();
+            let cap = self.cache_cap(n_live, opts.max_gen)?;
+            caches.push(LayerCache::from_prefill(
+                cfg.n_heads,
+                cfg.d_head,
+                cap,
+                &k_out,
+                &v_out,
+                bucket,
+                n_live,
+                &positions,
+            ));
+            // Fine pruning applies entering the next layer.
+            if l + 1 < cfg.n_layers && opts.plan.fine != FineStrategy::None {
+                let keep = fine_keep(
+                    opts.plan.fine,
+                    &s[..n_live],
+                    &segments,
+                    opts.plan.fine_percent,
+                    opts.plan.seed ^ ((l as u64) << 8),
+                );
+                validate_keep(&keep, &segments)
+                    .map_err(|e| anyhow!("fine keep invalid at layer {}: {}", l, e))?;
+                Self::compact_live(&mut h_live, &mut positions, &mut segments, &keep, d);
+            }
+        }
+        caches.update_peak();
+
+        // First generated token comes from the prefill's last hidden row.
+        let last_row = &h_live[(positions.len() - 1) * d..positions.len() * d].to_vec();
+        let lg = self.logits(last_row)?;
+        let first_tok = select_token(&lg, &opts.sampling, 0);
+        flops.add_logits(&fm);
+        let prefill_seconds = t_prefill.elapsed().as_secs_f64();
+
+        on_token(first_tok);
+        let mut tokens = vec![first_tok];
+
+        // --- Stage 4: decode loop over per-layer caches. -------------------
+        let t_decode = Instant::now();
+        let mut decode_steps = 0usize;
+        while tokens.len() < opts.max_gen && *tokens.last().unwrap() != EOS {
+            let cur = *tokens.last().unwrap();
+            let pos = (k + tokens.len() - 1) as i32;
+            let mut x: Vec<f32> = self.weights.embed(cur).to_vec();
+            for l in 0..cfg.n_layers {
+                if caches.layers[l].len() + 1 > caches.layers[l].cap() {
+                    let new_cap =
+                        self.art.pick_bucket("decode_layer", caches.layers[l].len() + 1)?;
+                    caches.layers[l].grow(new_cap);
+                }
+                let cache = &caches.layers[l];
+                let cap = cache.cap();
+                let cur_idx = cache.len();
+                let mut mask = cache.mask();
+                mask[cur_idx] = 1.0;
+                let x_lit = lit_f32(&[d], &x)?;
+                let pos_lit = lit_i32_scalar(pos)?;
+                let idx_lit = lit_i32_scalar(cur_idx as i32)?;
+                let kc = lit_f32(&[cfg.n_heads, cap, cfg.d_head], cache.k_data())?;
+                let vc = lit_f32(&[cfg.n_heads, cap, cfg.d_head], cache.v_data())?;
+                let m_lit = lit_f32(&[cap], &mask)?;
+                let path = self.art.path("decode_layer", Some(cap));
+                let mut inputs: Vec<&xla::Literal> =
+                    vec![&x_lit, &pos_lit, &idx_lit, &kc, &vc, &m_lit];
+                for p in &self.wlit.per_layer[l] {
+                    inputs.push(p);
+                }
+                let outs = self.rt.execute(&path, &inputs)?;
+                let [x2, k_new, v_new, s_lit]: [xla::Literal; 4] = outs
+                    .try_into()
+                    .map_err(|_| anyhow!("decode_layer returned wrong arity"))?;
+                x = to_vec_f32(&x2)?;
+                let k_new = to_vec_f32(&k_new)?;
+                let v_new = to_vec_f32(&v_new)?;
+                caches.layers[l].append(&k_new, &v_new, pos);
+                flops.add_decode_layer(&fm, cur_idx + 1);
+                // Progressive decode-time pruning (extension): drop the
+                // least-important AV rows of this layer's cache using the
+                // step's own importance row.
+                if opts.plan.fine_during_decode
+                    && l >= g
+                    && opts.plan.fine != FineStrategy::None
+                {
+                    let s = to_vec_f32(&s_lit)?;
+                    let cache = &mut caches.layers[l];
+                    let len = cache.len();
+                    let segs: Vec<Segment> = cache
+                        .positions()
+                        .iter()
+                        .map(|&p| {
+                            if (p as usize) < k {
+                                input.segments[p as usize]
+                            } else {
+                                Segment::Text // generated tokens are text
+                            }
+                        })
+                        .collect();
+                    let keep = fine_keep(
+                        opts.plan.fine,
+                        &s[..len],
+                        &segs,
+                        opts.plan.fine_percent,
+                        opts.plan.seed ^ ((l as u64) << 16) ^ tokens.len() as u64,
+                    );
+                    if keep.len() < len {
+                        cache.compact(&keep);
+                    }
+                }
+            }
+            caches.update_peak();
+            let lg = self.logits(&x)?;
+            let tok = select_token(&lg, &opts.sampling, tokens.len());
+            flops.add_logits(&fm);
+            on_token(tok);
+            tokens.push(tok);
+            decode_steps += 1;
+        }
+        let decode_seconds = t_decode.elapsed().as_secs_f64();
+
+        let relative = flops.relative_to_vanilla(&fm, k, tokens.len());
+        Ok(GenerateResult {
+            prompt_len: k,
+            relative_flops: relative,
+            flops,
+            peak_kv_bytes: caches.peak_bytes(),
+            prefill_seconds,
+            decode_seconds,
+            decode_steps,
+            live_counts,
+            tokens,
+        })
+    }
+
+    // -------------------------------------------------------- calibration
+
+    /// Run the all-layer rollout/attention probe (offline path).
+    pub fn calib_probe(&mut self, prompt: &[u32]) -> Result<CalibProbe> {
+        let cfg = self.cfg.clone();
+        let d = cfg.d_model;
+        let k = prompt.len();
+        let bucket = self.art.pick_bucket("calib_probe", k)?;
+        let mut x_emb = vec![0.0f32; bucket * d];
+        self.weights.embed_into(prompt, &mut x_emb);
+        let x_lit = lit_f32(&[bucket, d], &x_emb)?;
+        let all_pos: Vec<i32> = (0..k as i32).collect();
+        let (mask, pos) = self.mask_positions(&all_pos, bucket)?;
+        let path = self.art.path("calib_probe", Some(bucket));
+        let mut inputs: Vec<&xla::Literal> = vec![&x_lit, &mask, &pos];
+        for p in &self.wlit.full_stack {
+            inputs.push(p);
+        }
+        let outs = self.rt.execute(&path, &inputs)?;
+        let [rollout, attn]: [xla::Literal; 2] = outs
+            .try_into()
+            .map_err(|_| anyhow!("calib_probe returned wrong arity"))?;
+        Ok(CalibProbe {
+            n_layers: cfg.n_layers,
+            bucket,
+            prompt_len: k,
+            rollout: to_vec_f32(&rollout)?,
+            attn: to_vec_f32(&attn)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vanilla_plan_has_no_pruning() {
+        let p = PruningPlan::vanilla();
+        assert_eq!(p.global, GlobalStrategy::None);
+        assert_eq!(p.fine, FineStrategy::None);
+    }
+
+    #[test]
+    fn fastav_plan_shape() {
+        let p = PruningPlan::fastav(40, 4, 2, 20.0);
+        assert!(matches!(p.global, GlobalStrategy::FastAvPosition { .. }));
+        assert_eq!(p.fine, FineStrategy::LowAttentive);
+        assert!((p.fine_percent - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn default_options() {
+        let o = GenerateOptions::default();
+        assert_eq!(o.max_gen, 4);
+        assert_eq!(o.sampling.temperature, 0.0);
+    }
+
+    #[test]
+    fn select_token_greedy() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let s = Sampling::default();
+        assert_eq!(select_token(&logits, &s, 0), 1);
+        assert_eq!(select_token(&logits, &s, 7), 1); // step-independent
+    }
+
+    #[test]
+    fn select_token_top_k_1_is_greedy() {
+        let logits = vec![0.0, 3.0, 1.0];
+        let s = Sampling { temperature: 1.0, top_k: 1, seed: 42 };
+        for step in 0..10 {
+            assert_eq!(select_token(&logits, &s, step), 1);
+        }
+    }
+
+    #[test]
+    fn select_token_sampling_deterministic_and_varied() {
+        let logits = vec![1.0, 1.0, 1.0, 1.0];
+        let s = Sampling { temperature: 1.0, top_k: 0, seed: 5 };
+        let a: Vec<u32> = (0..20).map(|st| select_token(&logits, &s, st)).collect();
+        let b: Vec<u32> = (0..20).map(|st| select_token(&logits, &s, st)).collect();
+        assert_eq!(a, b); // deterministic under fixed seed
+        let distinct: std::collections::HashSet<u32> = a.into_iter().collect();
+        assert!(distinct.len() > 1, "uniform logits must mix across steps");
+    }
+
+    #[test]
+    fn select_token_low_temperature_concentrates() {
+        let logits = vec![0.0, 5.0, 0.0];
+        let s = Sampling { temperature: 0.1, top_k: 0, seed: 9 };
+        for step in 0..20 {
+            assert_eq!(select_token(&logits, &s, step), 1);
+        }
+    }
+}

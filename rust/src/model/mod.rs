@@ -1,0 +1,17 @@
+//! Model layer: configuration, weights, and the staged execution engine.
+//!
+//! * [`config`]  — `model.json` parsing (hyperparameters + bucket grid).
+//! * [`weights`] — `weights.bin`/`manifest.json` loading + prebuilt
+//!   parameter literals.
+//! * [`engine`]  — the request-path core: prefill front, global + fine
+//!   pruning, back layers, decode loop, FLOPs/latency accounting.
+
+pub mod config;
+pub mod engine;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use engine::{
+    CalibProbe, GenerateOptions, GenerateResult, ModelEngine, PruningPlan, RequestInput,
+};
+pub use weights::{WeightLiterals, Weights};

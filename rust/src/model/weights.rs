@@ -1,0 +1,286 @@
+//! Weights loading: `weights.bin` + `manifest.json` → host tensors and
+//! prebuilt XLA literals (the rust half of `python/compile/export.py`).
+//!
+//! Stacked per-layer tensors keep their `[L, ...]` leading axis in the
+//! file, so the contiguous `[0..mid)` slab feeds the fused front-half
+//! artifact without copying, and row `l` feeds single-layer artifacts.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::Literal;
+
+use super::config::ModelConfig;
+use crate::runtime::literals::lit_f32;
+use crate::util::json::Json;
+
+/// Per-layer parameter names in artifact ABI order (mirrors python
+/// `LAYER_PARAM_NAMES`).
+pub const LAYER_PARAM_NAMES: [&str; 9] =
+    ["ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd"];
+
+/// One named tensor: shape + the elements (host copy).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// All model weights on the host.
+#[derive(Debug)]
+pub struct Weights {
+    pub emb: Tensor,
+    pub ln_f: Tensor,
+    /// Stacked per-layer tensors, keyed in LAYER_PARAM_NAMES order.
+    pub layers: Vec<Tensor>,
+}
+
+impl Weights {
+    /// Load from a model weights directory.
+    pub fn load(dir: &Path) -> Result<Weights> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("manifest in {:?} (run `make artifacts`)", dir))?;
+        let manifest =
+            Json::parse(&manifest_text).map_err(|e| anyhow!("manifest.json: {}", e))?;
+        let raw = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| format!("weights.bin in {:?}", dir))?;
+        if raw.len() % 4 != 0 {
+            bail!("weights.bin size {} not a multiple of 4", raw.len());
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+
+        let mut tensors = std::collections::BTreeMap::new();
+        for t in manifest
+            .get("tensors")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: tensors[] missing"))?
+        {
+            let name = t
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("tensor name"))?
+                .to_string();
+            let shape: Vec<usize> = t
+                .get("shape")
+                .as_arr()
+                .ok_or_else(|| anyhow!("tensor shape"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?;
+            let offset = t
+                .get("offset")
+                .as_usize()
+                .ok_or_else(|| anyhow!("tensor offset"))?;
+            let n: usize = shape.iter().product();
+            if offset + n > floats.len() {
+                bail!("tensor {} [{}..{}] exceeds file ({})", name, offset, offset + n, floats.len());
+            }
+            tensors.insert(
+                name.clone(),
+                Tensor { name, shape, data: floats[offset..offset + n].to_vec() },
+            );
+        }
+
+        let take = |name: &str| -> Result<Tensor> {
+            tensors
+                .get(name)
+                .cloned()
+                .ok_or_else(|| anyhow!("manifest missing tensor '{}'", name))
+        };
+        let emb = take("emb")?;
+        let ln_f = take("ln_f")?;
+        let layers = LAYER_PARAM_NAMES
+            .iter()
+            .map(|p| take(&format!("layers.{}", p)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Weights { emb, ln_f, layers })
+    }
+
+    /// Validate shapes against a model config.
+    pub fn check(&self, cfg: &ModelConfig) -> Result<()> {
+        if self.emb.shape != [cfg.vocab, cfg.d_model] {
+            bail!("emb shape {:?} != [{}, {}]", self.emb.shape, cfg.vocab, cfg.d_model);
+        }
+        if self.ln_f.shape != [cfg.d_model] {
+            bail!("ln_f shape {:?}", self.ln_f.shape);
+        }
+        for t in &self.layers {
+            if t.shape[0] != cfg.n_layers {
+                bail!("{} leading dim {} != n_layers {}", t.name, t.shape[0], cfg.n_layers);
+            }
+        }
+        Ok(())
+    }
+
+    /// Embedding row for a token id.
+    pub fn embed(&self, token: u32) -> &[f32] {
+        let d = self.emb.shape[1];
+        let i = token as usize;
+        &self.emb.data[i * d..(i + 1) * d]
+    }
+
+    /// Gather embeddings for a prompt into `dst` (bucket-padded `[n, d]`).
+    pub fn embed_into(&self, tokens: &[u32], dst: &mut [f32]) {
+        let d = self.emb.shape[1];
+        assert!(tokens.len() * d <= dst.len());
+        for (i, &t) in tokens.iter().enumerate() {
+            dst[i * d..(i + 1) * d].copy_from_slice(self.embed(t));
+        }
+    }
+}
+
+/// Prebuilt literals for every artifact parameter slot — built once at
+/// engine startup, reused across all requests.
+pub struct WeightLiterals {
+    /// 9 stacked `[mid, ...]` literals for `prefill_front`.
+    pub front: Vec<Literal>,
+    /// 9 stacked `[L, ...]` literals for `calib_probe`.
+    pub full_stack: Vec<Literal>,
+    /// `per_layer[l]` = 9 single-layer literals for back/decode layers.
+    pub per_layer: Vec<Vec<Literal>>,
+    /// `ln_f` and `emb` for the logits head.
+    pub ln_f: Literal,
+    pub emb: Literal,
+}
+
+impl WeightLiterals {
+    pub fn build(w: &Weights, cfg: &ModelConfig) -> Result<WeightLiterals> {
+        let l = cfg.n_layers;
+        let mid = cfg.mid_layer;
+        let mut front = Vec::with_capacity(9);
+        let mut full_stack = Vec::with_capacity(9);
+        let mut per_layer: Vec<Vec<Literal>> = (0..l).map(|_| Vec::with_capacity(9)).collect();
+        for t in &w.layers {
+            let row = t.elems() / t.shape[0];
+            let inner: Vec<usize> = t.shape[1..].to_vec();
+            // Front slab: first `mid` rows, contiguous.
+            let mut front_shape = vec![mid];
+            front_shape.extend(&inner);
+            front.push(lit_f32(&front_shape, &t.data[..mid * row])?);
+            full_stack.push(lit_f32(&t.shape, &t.data)?);
+            for (li, slot) in per_layer.iter_mut().enumerate() {
+                slot.push(lit_f32(&inner, &t.data[li * row..(li + 1) * row])?);
+            }
+        }
+        Ok(WeightLiterals {
+            front,
+            full_stack,
+            per_layer,
+            ln_f: lit_f32(&w.ln_f.shape, &w.ln_f.data)?,
+            emb: lit_f32(&w.emb.shape, &w.emb.data)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    struct TempDir(std::path::PathBuf);
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    /// Write a synthetic 2-layer weights dir: d=4, ff=8, vocab=6.
+    fn fake_weights(tag: &str) -> TempDir {
+        let dir = std::env::temp_dir().join(format!("fastav-w-{}-{}", std::process::id(), tag));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (vocab, d, ff, l) = (6usize, 4usize, 8usize, 2usize);
+        let specs: Vec<(&str, Vec<usize>)> = vec![
+            ("emb", vec![vocab, d]),
+            ("ln_f", vec![d]),
+            ("layers.ln1", vec![l, d]),
+            ("layers.wq", vec![l, d, d]),
+            ("layers.wk", vec![l, d, d]),
+            ("layers.wv", vec![l, d, d]),
+            ("layers.wo", vec![l, d, d]),
+            ("layers.ln2", vec![l, d]),
+            ("layers.wg", vec![l, d, ff]),
+            ("layers.wu", vec![l, d, ff]),
+            ("layers.wd", vec![l, ff, d]),
+        ];
+        let mut bin = std::fs::File::create(dir.join("weights.bin")).unwrap();
+        let mut tensors = Vec::new();
+        let mut offset = 0usize;
+        for (i, (name, shape)) in specs.iter().enumerate() {
+            let n: usize = shape.iter().product();
+            // Deterministic fill: tensor index + element index / 1000.
+            for e in 0..n {
+                bin.write_all(&((i as f32) + e as f32 / 1000.0).to_le_bytes()).unwrap();
+            }
+            let dims: Vec<String> = shape.iter().map(|s| s.to_string()).collect();
+            tensors.push(format!(
+                r#"{{"name":"{}","shape":[{}],"offset":{}}}"#,
+                name,
+                dims.join(","),
+                offset
+            ));
+            offset += n;
+        }
+        let manifest = format!(
+            r#"{{"tensors":[{}],"total_elements":{}}}"#,
+            tensors.join(","),
+            offset
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        TempDir(dir)
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let d = fake_weights("load");
+        let w = Weights::load(&d.0).unwrap();
+        assert_eq!(w.emb.shape, vec![6, 4]);
+        assert_eq!(w.layers.len(), 9);
+        assert_eq!(w.layers[0].name, "layers.ln1");
+        // embed() slices the right row: row 2 of emb starts at elem 8.
+        let row = w.embed(2);
+        assert!((row[0] - 0.008).abs() < 1e-6);
+    }
+
+    #[test]
+    fn embed_into_pads() {
+        let d = fake_weights("embed");
+        let w = Weights::load(&d.0).unwrap();
+        let mut dst = vec![0.0f32; 4 * 4];
+        w.embed_into(&[1, 3], &mut dst);
+        assert!((dst[0] - 0.004).abs() < 1e-6); // emb row 1 elem 0
+        assert_eq!(dst[8..], vec![0.0; 8][..]); // padding untouched
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let d = fake_weights("missing");
+        // Corrupt the manifest: drop 'emb'.
+        let m = std::fs::read_to_string(d.0.join("manifest.json")).unwrap();
+        std::fs::write(d.0.join("manifest.json"), m.replace("\"emb\"", "\"em\"")).unwrap();
+        assert!(Weights::load(&d.0).is_err());
+    }
+
+    #[test]
+    fn out_of_range_offset_errors() {
+        let d = fake_weights("range");
+        let m = std::fs::read_to_string(d.0.join("manifest.json")).unwrap();
+        std::fs::write(
+            d.0.join("manifest.json"),
+            m.replace(r#""offset":0"#, r#""offset":999999"#),
+        )
+        .unwrap();
+        assert!(Weights::load(&d.0).is_err());
+    }
+}

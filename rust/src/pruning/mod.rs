@@ -1,0 +1,551 @@
+//! Token-pruning policies: FastAV's two stages + every baseline the paper
+//! evaluates against (Tables 2–4).
+//!
+//! **Global pruning** (paper §2.2, applied at the middle layer): the
+//! deployed FastAV policy is *positional* — calibration (see
+//! [`crate::calibration`]) turns the attention-rollout analysis into a
+//! per-modality keep rule (visual-position cutoff / keep-first-N audio
+//! tokens / keep-first-F frames), so the serving path never touches an
+//! attention map. The ablation strategies of Table 2 (random, top/low
+//! attentive, top/low informative) are implemented score-based at a fixed
+//! keep *budget* so all rows compare at equal FLOPs.
+//!
+//! **Fine pruning** (paper Eq. 4, every layer after the middle): drops the
+//! lowest-P% of remaining AV tokens by last-query importance. Table 3's
+//! baselines (random, top-attentive) share the same drop count.
+//!
+//! Hard safety rules enforced by every policy: control (BOS) and text
+//! (question) tokens are never pruned, the final prompt token is never
+//! pruned, and keep sets are ascending + unique.
+
+use crate::tokens::Segment;
+use crate::util::rng::SplitMix64;
+
+/// Global-stage strategy selector.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GlobalStrategy {
+    /// No global pruning (vanilla).
+    None,
+    /// FastAV's deployed positional policy from calibration:
+    /// keep visual tokens whose *original position* is below `vis_cutoff`,
+    /// the first `keep_audio` audio tokens (sequential layouts), or the
+    /// first `keep_frames` whole frames (interleaved layouts).
+    FastAvPosition { vis_cutoff: usize, keep_audio: usize, keep_frames: usize },
+    /// Keep a uniformly random AV subset of size `budget` (Table 2 row 2).
+    Random,
+    /// Prune the most-attended AV tokens (keep the `budget` *least*
+    /// attended) — Table 2 "Top attentive" (degrades badly).
+    TopAttentive,
+    /// Prune the least-attended AV tokens (keep the `budget` most
+    /// attended) — Table 2 "Low attentive".
+    LowAttentive,
+    /// Prune the most informative (highest rollout influence) — Table 2
+    /// "Top informative" (worst).
+    TopInformative,
+    /// Prune the least informative by attention rollout — Table 2 "Low
+    /// informative (Ours)".
+    LowInformative,
+    /// Visual-tokens-withdrawal baseline (VTW [12]): drop *all* AV tokens.
+    Vtw,
+    /// FastV-style baseline [11]: prune visual tokens by attention score,
+    /// keeping `keep_ratio` of them (audio kept untouched).
+    FastV { keep_ratio: f64 },
+    /// StreamingLLM/attention-sink-style baseline: keep the first `sink`
+    /// and the last `recent` AV tokens by position (the paper's anchor
+    /// observation predicts the sink half matters far more).
+    StreamingWindow { sink: usize, recent: usize },
+}
+
+/// Everything a global strategy may consult.
+pub struct GlobalInputs<'a> {
+    /// Per-token modality of the original prompt.
+    pub segments: &'a [Segment],
+    /// Owning frame per token (-1 when not frame-scoped).
+    pub frame_of: &'a [i32],
+    /// Last-query attention importance at the pruning layer (Eq. 4),
+    /// aligned with `segments`. Required by the *attentive* strategies.
+    pub scores: Option<&'a [f32]>,
+    /// Rollout influence of each token on the final query (last row of
+    /// `R^mid`), aligned with `segments`. Required by the *informative*
+    /// strategies.
+    pub rollout: Option<&'a [f32]>,
+    /// Number of AV tokens to keep (budget-matched ablations).
+    pub budget: usize,
+    /// Seed for the random strategy.
+    pub seed: u64,
+}
+
+/// Indices of AV (prunable) tokens.
+fn av_indices(segments: &[Segment]) -> Vec<usize> {
+    segments
+        .iter()
+        .enumerate()
+        .filter(|(_, &g)| g == Segment::Vis || g == Segment::Aud)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Merge always-kept (ctrl/text) indices with a chosen AV subset into an
+/// ascending keep set.
+fn merge_keep(segments: &[Segment], mut av_keep: Vec<usize>) -> Vec<usize> {
+    let mut keep: Vec<usize> = segments
+        .iter()
+        .enumerate()
+        .filter(|(_, &g)| g == Segment::Ctrl || g == Segment::Text)
+        .map(|(i, _)| i)
+        .collect();
+    keep.append(&mut av_keep);
+    keep.sort_unstable();
+    keep.dedup();
+    keep
+}
+
+/// Keep the `budget` AV tokens with the best value under `key` (max-first
+/// when `descending`), breaking ties by position (earlier wins).
+fn budget_select(
+    av: &[usize],
+    key: impl Fn(usize) -> f32,
+    budget: usize,
+    descending: bool,
+) -> Vec<usize> {
+    let mut ranked: Vec<usize> = av.to_vec();
+    ranked.sort_by(|&a, &b| {
+        let (ka, kb) = (key(a), key(b));
+        let ord = if descending {
+            kb.partial_cmp(&ka).unwrap()
+        } else {
+            ka.partial_cmp(&kb).unwrap()
+        };
+        ord.then(a.cmp(&b))
+    });
+    let mut chosen: Vec<usize> = ranked.into_iter().take(budget).collect();
+    chosen.sort_unstable();
+    chosen
+}
+
+/// Compute the global keep set (ascending indices into the original
+/// prompt). Panics if a score-based strategy is missing its inputs.
+pub fn global_keep(strategy: &GlobalStrategy, inp: &GlobalInputs) -> Vec<usize> {
+    let segments = inp.segments;
+    let av = av_indices(segments);
+    let av_keep: Vec<usize> = match strategy {
+        GlobalStrategy::None => av.clone(),
+        GlobalStrategy::Vtw => Vec::new(),
+        GlobalStrategy::FastAvPosition { vis_cutoff, keep_audio, keep_frames } => {
+            let mut out = Vec::new();
+            let mut audio_seen = 0usize;
+            let interleaved_frames = segments
+                .iter()
+                .zip(inp.frame_of)
+                .any(|(&g, &f)| g == Segment::Aud && f >= 0);
+            for &i in &av {
+                match segments[i] {
+                    Segment::Vis => {
+                        if interleaved_frames {
+                            if (inp.frame_of[i] as usize) < *keep_frames {
+                                out.push(i);
+                            }
+                        } else if i < *vis_cutoff {
+                            out.push(i);
+                        }
+                    }
+                    Segment::Aud => {
+                        if interleaved_frames {
+                            if (inp.frame_of[i] as usize) < *keep_frames {
+                                out.push(i);
+                            }
+                        } else {
+                            if audio_seen < *keep_audio {
+                                out.push(i);
+                            }
+                            audio_seen += 1;
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            out
+        }
+        GlobalStrategy::Random => {
+            let mut rng = SplitMix64::new(inp.seed);
+            // Partial Fisher–Yates: choose `budget` of the AV tokens.
+            let mut pool = av.clone();
+            let take = inp.budget.min(pool.len());
+            for i in 0..take {
+                let j = i + rng.next_below((pool.len() - i) as u64) as usize;
+                pool.swap(i, j);
+            }
+            let mut chosen = pool[..take].to_vec();
+            chosen.sort_unstable();
+            chosen
+        }
+        GlobalStrategy::TopAttentive => {
+            let s = inp.scores.expect("TopAttentive requires scores");
+            budget_select(&av, |i| s[i], inp.budget, false)
+        }
+        GlobalStrategy::LowAttentive => {
+            let s = inp.scores.expect("LowAttentive requires scores");
+            budget_select(&av, |i| s[i], inp.budget, true)
+        }
+        GlobalStrategy::TopInformative => {
+            let r = inp.rollout.expect("TopInformative requires rollout");
+            budget_select(&av, |i| r[i], inp.budget, false)
+        }
+        GlobalStrategy::LowInformative => {
+            let r = inp.rollout.expect("LowInformative requires rollout");
+            budget_select(&av, |i| r[i], inp.budget, true)
+        }
+        GlobalStrategy::StreamingWindow { sink, recent } => {
+            let n_av = av.len();
+            let mut out: Vec<usize> = av.iter().take(*sink).copied().collect();
+            out.extend(av.iter().skip(n_av.saturating_sub(*recent)).copied());
+            out.sort_unstable();
+            out.dedup();
+            out
+        }
+        GlobalStrategy::FastV { keep_ratio } => {
+            let s = inp.scores.expect("FastV requires scores");
+            let vis: Vec<usize> = segments
+                .iter()
+                .enumerate()
+                .filter(|(_, &g)| g == Segment::Vis)
+                .map(|(i, _)| i)
+                .collect();
+            let keep_n = ((vis.len() as f64) * keep_ratio).round() as usize;
+            let mut kept_vis = budget_select(&vis, |i| s[i], keep_n, true);
+            // All audio tokens survive FastV (it is vision-only).
+            let mut out: Vec<usize> = segments
+                .iter()
+                .enumerate()
+                .filter(|(_, &g)| g == Segment::Aud)
+                .map(|(i, _)| i)
+                .collect();
+            out.append(&mut kept_vis);
+            out.sort_unstable();
+            out
+        }
+    };
+    merge_keep(segments, av_keep)
+}
+
+/// Fine-stage strategy selector (Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FineStrategy {
+    None,
+    Random,
+    /// Drop the *most* attended (Table 3 "Top attentive" — degrades).
+    TopAttentive,
+    /// Drop the *least* attended (FastAV, Table 3 "Low attentive (Ours)").
+    LowAttentive,
+}
+
+/// Compute the keep set after one fine-pruning step.
+///
+/// `scores` are this layer's last-query importance over the *live* rows;
+/// `segments` gives each live row's modality; `percent` is the paper's P.
+/// Exactly `round(percent/100 * prunable)` AV rows are dropped (text/ctrl
+/// rows and the final row are untouchable).
+pub fn fine_keep(
+    strategy: FineStrategy,
+    scores: &[f32],
+    segments: &[Segment],
+    percent: f64,
+    seed: u64,
+) -> Vec<usize> {
+    let n = scores.len();
+    assert_eq!(n, segments.len());
+    if n == 0 {
+        return Vec::new();
+    }
+    let last = n - 1;
+    let prunable: Vec<usize> = (0..n)
+        .filter(|&i| {
+            i != last && matches!(segments[i], Segment::Vis | Segment::Aud)
+        })
+        .collect();
+    let drop_n = match strategy {
+        FineStrategy::None => 0,
+        _ => ((percent / 100.0) * prunable.len() as f64).round() as usize,
+    };
+    let drop_n = drop_n.min(prunable.len());
+    let dropped: Vec<usize> = match strategy {
+        FineStrategy::None => Vec::new(),
+        FineStrategy::Random => {
+            let mut rng = SplitMix64::new(seed);
+            let mut pool = prunable.clone();
+            for i in 0..drop_n {
+                let j = i + rng.next_below((pool.len() - i) as u64) as usize;
+                pool.swap(i, j);
+            }
+            pool[..drop_n].to_vec()
+        }
+        FineStrategy::TopAttentive => {
+            budget_select(&prunable, |i| scores[i], drop_n, true)
+        }
+        FineStrategy::LowAttentive => {
+            budget_select(&prunable, |i| scores[i], drop_n, false)
+        }
+    };
+    let drop_set: std::collections::HashSet<usize> = dropped.into_iter().collect();
+    (0..n).filter(|i| !drop_set.contains(i)).collect()
+}
+
+/// Validate a keep set against the invariants every policy must uphold.
+/// Returns an error string for use in tests and debug assertions.
+pub fn validate_keep(keep: &[usize], segments: &[Segment]) -> Result<(), String> {
+    let n = segments.len();
+    if keep.is_empty() {
+        return Err("empty keep set".into());
+    }
+    for w in keep.windows(2) {
+        if w[0] >= w[1] {
+            return Err(format!("keep not strictly ascending at {:?}", w));
+        }
+    }
+    if *keep.last().unwrap() >= n {
+        return Err("keep index out of range".into());
+    }
+    for (i, &g) in segments.iter().enumerate() {
+        if matches!(g, Segment::Ctrl | Segment::Text) && !keep.contains(&i) {
+            return Err(format!("non-prunable token {} ({:?}) was pruned", i, g));
+        }
+    }
+    if !keep.contains(&(n - 1)) {
+        return Err("last prompt token was pruned".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1 ctrl + 6 vis (frames 0,0,1,1,2,2) + 3 aud + 2 text.
+    fn segs() -> (Vec<Segment>, Vec<i32>) {
+        let mut s = vec![Segment::Ctrl];
+        let mut f = vec![-1];
+        for fr in 0..3 {
+            for _ in 0..2 {
+                s.push(Segment::Vis);
+                f.push(fr);
+            }
+        }
+        for _ in 0..3 {
+            s.push(Segment::Aud);
+            f.push(-1);
+        }
+        s.push(Segment::Text);
+        f.push(-1);
+        s.push(Segment::Text);
+        f.push(-1);
+        (s, f)
+    }
+
+    fn inputs<'a>(
+        s: &'a [Segment],
+        f: &'a [i32],
+        scores: Option<&'a [f32]>,
+        rollout: Option<&'a [f32]>,
+        budget: usize,
+    ) -> GlobalInputs<'a> {
+        GlobalInputs { segments: s, frame_of: f, scores, rollout, budget, seed: 7 }
+    }
+
+    #[test]
+    fn none_keeps_everything() {
+        let (s, f) = segs();
+        let keep = global_keep(&GlobalStrategy::None, &inputs(&s, &f, None, None, 0));
+        assert_eq!(keep, (0..s.len()).collect::<Vec<_>>());
+        validate_keep(&keep, &s).unwrap();
+    }
+
+    #[test]
+    fn vtw_drops_all_av() {
+        let (s, f) = segs();
+        let keep = global_keep(&GlobalStrategy::Vtw, &inputs(&s, &f, None, None, 0));
+        assert_eq!(keep, vec![0, 10, 11]);
+        validate_keep(&keep, &s).unwrap();
+    }
+
+    #[test]
+    fn fastav_position_sequential() {
+        let (s, f) = segs();
+        // vis positions are 1..=6; cutoff 4 keeps vis 1,2,3. keep_audio=1
+        // keeps the first audio token (index 7).
+        let strat = GlobalStrategy::FastAvPosition {
+            vis_cutoff: 4,
+            keep_audio: 1,
+            keep_frames: 0,
+        };
+        let keep = global_keep(&strat, &inputs(&s, &f, None, None, 0));
+        assert_eq!(keep, vec![0, 1, 2, 3, 7, 10, 11]);
+        validate_keep(&keep, &s).unwrap();
+    }
+
+    #[test]
+    fn fastav_position_interleaved() {
+        // Interleaved: frames own audio too.
+        let mut s = vec![Segment::Ctrl];
+        let mut f = vec![-1];
+        for fr in 0..3 {
+            s.extend([Segment::Vis, Segment::Vis, Segment::Aud]);
+            f.extend([fr, fr, fr]);
+        }
+        s.push(Segment::Text);
+        f.push(-1);
+        let strat = GlobalStrategy::FastAvPosition {
+            vis_cutoff: usize::MAX,
+            keep_audio: 0,
+            keep_frames: 2,
+        };
+        let keep = global_keep(&strat, &inputs(&s, &f, None, None, 0));
+        // BOS + frames 0,1 (indices 1..=6) + text (10).
+        assert_eq!(keep, vec![0, 1, 2, 3, 4, 5, 6, 10]);
+        validate_keep(&keep, &s).unwrap();
+    }
+
+    #[test]
+    fn random_respects_budget_and_determinism() {
+        let (s, f) = segs();
+        let a = global_keep(&GlobalStrategy::Random, &inputs(&s, &f, None, None, 4));
+        let b = global_keep(&GlobalStrategy::Random, &inputs(&s, &f, None, None, 4));
+        assert_eq!(a, b);
+        // ctrl(1) + text(2) + 4 AV.
+        assert_eq!(a.len(), 7);
+        validate_keep(&a, &s).unwrap();
+    }
+
+    #[test]
+    fn attentive_strategies_order_by_scores() {
+        let (s, f) = segs();
+        // Scores: AV indices 1..=9; make index 3 the hottest, 8 coldest.
+        let mut scores = vec![0.0f32; s.len()];
+        for (i, sc) in scores.iter_mut().enumerate() {
+            *sc = i as f32 * 0.01;
+        }
+        scores[3] = 1.0;
+        scores[8] = -1.0;
+        let low = global_keep(
+            &GlobalStrategy::LowAttentive,
+            &inputs(&s, &f, Some(&scores), None, 2),
+        );
+        assert!(low.contains(&3), "keeps hottest");
+        assert!(!low.contains(&8), "drops coldest");
+        let top = global_keep(
+            &GlobalStrategy::TopAttentive,
+            &inputs(&s, &f, Some(&scores), None, 2),
+        );
+        assert!(!top.contains(&3), "prunes hottest");
+        assert!(top.contains(&8), "keeps coldest");
+        validate_keep(&low, &s).unwrap();
+        validate_keep(&top, &s).unwrap();
+    }
+
+    #[test]
+    fn informative_strategies_use_rollout() {
+        let (s, f) = segs();
+        let mut rollout = vec![0.0f32; s.len()];
+        rollout[1] = 0.9; // most informative AV token
+        rollout[9] = 0.001;
+        let low = global_keep(
+            &GlobalStrategy::LowInformative,
+            &inputs(&s, &f, None, Some(&rollout), 3),
+        );
+        assert!(low.contains(&1));
+        let top = global_keep(
+            &GlobalStrategy::TopInformative,
+            &inputs(&s, &f, None, Some(&rollout), 3),
+        );
+        assert!(!top.contains(&1));
+    }
+
+    #[test]
+    fn fastv_keeps_audio_prunes_vision() {
+        let (s, f) = segs();
+        let mut scores = vec![0.0f32; s.len()];
+        scores[1] = 0.5;
+        scores[2] = 0.4;
+        let keep = global_keep(
+            &GlobalStrategy::FastV { keep_ratio: 0.5 },
+            &inputs(&s, &f, Some(&scores), None, 0),
+        );
+        // 3 of 6 vis kept (the highest-scored), all 3 audio kept.
+        let vis_kept = keep.iter().filter(|&&i| s[i] == Segment::Vis).count();
+        let aud_kept = keep.iter().filter(|&&i| s[i] == Segment::Aud).count();
+        assert_eq!(vis_kept, 3);
+        assert_eq!(aud_kept, 3);
+        assert!(keep.contains(&1) && keep.contains(&2));
+    }
+
+    #[test]
+    fn streaming_window_keeps_sink_and_recent() {
+        let (s, f) = segs();
+        // AV indices are 1..=9; sink 2 keeps {1,2}, recent 3 keeps {7,8,9}.
+        let keep = global_keep(
+            &GlobalStrategy::StreamingWindow { sink: 2, recent: 3 },
+            &inputs(&s, &f, None, None, 0),
+        );
+        assert_eq!(keep, vec![0, 1, 2, 7, 8, 9, 10, 11]);
+        validate_keep(&keep, &s).unwrap();
+        // Overlapping windows dedupe cleanly.
+        let keep = global_keep(
+            &GlobalStrategy::StreamingWindow { sink: 9, recent: 9 },
+            &inputs(&s, &f, None, None, 0),
+        );
+        assert_eq!(keep, (0..s.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fine_keep_drops_exact_count() {
+        // 8 live rows: ctrl, 5 vis, text, text(last).
+        let segments = vec![
+            Segment::Ctrl,
+            Segment::Vis,
+            Segment::Vis,
+            Segment::Vis,
+            Segment::Vis,
+            Segment::Vis,
+            Segment::Text,
+            Segment::Text,
+        ];
+        let scores = vec![0.5, 0.01, 0.2, 0.03, 0.4, 0.02, 0.9, 0.9];
+        let keep = fine_keep(FineStrategy::LowAttentive, &scores, &segments, 40.0, 0);
+        // prunable = 5 vis; drop round(0.4*5)=2 lowest (idx 1: .01, idx 5: .02).
+        assert_eq!(keep, vec![0, 2, 3, 4, 6, 7]);
+    }
+
+    #[test]
+    fn fine_top_attentive_drops_hottest() {
+        let segments = vec![Segment::Ctrl, Segment::Vis, Segment::Vis, Segment::Text];
+        let scores = vec![0.0, 0.9, 0.1, 0.0];
+        let keep = fine_keep(FineStrategy::TopAttentive, &scores, &segments, 50.0, 0);
+        assert_eq!(keep, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn fine_none_keeps_all() {
+        let segments = vec![Segment::Ctrl, Segment::Vis, Segment::Text];
+        let keep = fine_keep(FineStrategy::None, &[0.1, 0.2, 0.3], &segments, 20.0, 0);
+        assert_eq!(keep, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn fine_never_drops_last_or_text() {
+        let segments = vec![Segment::Vis; 6];
+        let mut segments = segments;
+        segments[5] = Segment::Vis; // last row is Vis but must survive
+        let scores = vec![0.0; 6];
+        let keep = fine_keep(FineStrategy::LowAttentive, &scores, &segments, 100.0, 0);
+        assert!(keep.contains(&5));
+    }
+
+    #[test]
+    fn validate_catches_violations() {
+        let (s, _) = segs();
+        assert!(validate_keep(&[], &s).is_err());
+        assert!(validate_keep(&[0, 0, 1], &s).is_err());
+        assert!(validate_keep(&[0, 1], &s).is_err()); // text pruned
+        let all: Vec<usize> = (0..s.len()).collect();
+        assert!(validate_keep(&all, &s).is_ok());
+    }
+}

@@ -1,0 +1,100 @@
+//! Host ↔ XLA literal conversion helpers.
+//!
+//! All artifact inputs/outputs are f32 tensors or i32 scalars/vectors;
+//! these helpers centralize the (unsafe-ish) byte-level conversions so the
+//! engine code stays shape-explicit and checked.
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal};
+
+/// f32 tensor literal from a host slice (row-major).
+pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    let expect: usize = dims.iter().product();
+    if expect != data.len() {
+        return Err(anyhow!("lit_f32 shape {:?} wants {} elems, got {}", dims, expect, data.len()));
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("create f32 literal: {:?}", e))
+}
+
+/// i32 tensor literal.
+pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    let expect: usize = dims.iter().product();
+    if expect != data.len() {
+        return Err(anyhow!("lit_i32 shape {:?} wants {} elems, got {}", dims, expect, data.len()));
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow!("create i32 literal: {:?}", e))
+}
+
+/// i32 scalar literal.
+pub fn lit_i32_scalar(v: i32) -> Result<Literal> {
+    lit_i32(&[], &[v])
+}
+
+/// Copy a literal's f32 payload to a host Vec.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {:?}", e))
+}
+
+/// Copy a literal's f32 payload into an existing buffer (hot path: avoids
+/// a fresh allocation per decode step).
+pub fn copy_f32_into(lit: &Literal, dst: &mut [f32]) -> Result<()> {
+    if lit.element_count() != dst.len() {
+        return Err(anyhow!(
+            "copy_f32_into: literal has {} elems, dst {}",
+            lit.element_count(),
+            dst.len()
+        ));
+    }
+    lit.copy_raw_to::<f32>(dst).map_err(|e| anyhow!("copy_raw_to: {:?}", e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let lit = lit_f32(&[3, 4], &data).unwrap();
+        assert_eq!(lit.element_count(), 12);
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![5i32, -3, 7];
+        let lit = lit_i32(&[3], &data).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn scalar() {
+        let lit = lit_i32_scalar(42).unwrap();
+        assert_eq!(lit.element_count(), 1);
+        assert_eq!(lit.get_first_element::<i32>().unwrap(), 42);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        assert!(lit_f32(&[2, 2], &[1.0]).is_err());
+        assert!(lit_i32(&[3], &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn copy_into_checks_len() {
+        let lit = lit_f32(&[4], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut buf = vec![0.0f32; 4];
+        copy_f32_into(&lit, &mut buf).unwrap();
+        assert_eq!(buf, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut short = vec![0.0f32; 3];
+        assert!(copy_f32_into(&lit, &mut short).is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client). All execution happens
+//! on the thread that owns [`Runtime`] — PJRT handles are not `Send` in
+//! this crate, so the coordinator gives the engine a dedicated thread.
+//!
+//! Pieces:
+//! * [`Runtime`]     — client + executable cache (compile each HLO once).
+//! * [`ArtifactDir`] — artifact discovery + *bucket selection*: artifacts
+//!   are compiled at fixed sequence lengths; `pick_bucket(n)` returns the
+//!   smallest compiled bucket that fits.
+//! * [`literals`]    — typed host↔literal conversion helpers.
+
+pub mod literals;
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Artifact directory for one model (e.g. `artifacts/vl2sim/`).
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    root: PathBuf,
+    /// entry name -> sorted bucket list (empty vec for unbucketed entries).
+    buckets: BTreeMap<String, Vec<usize>>,
+}
+
+impl ArtifactDir {
+    /// Scan `root` for `<entry>_<n>.hlo.txt` / `<entry>.hlo.txt` files.
+    pub fn open(root: impl AsRef<Path>) -> Result<ArtifactDir> {
+        let root = root.as_ref().to_path_buf();
+        let mut buckets: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let entries = std::fs::read_dir(&root)
+            .with_context(|| format!("artifact dir {:?} (run `make artifacts`)", root))?;
+        for e in entries {
+            let name = e?.file_name().to_string_lossy().into_owned();
+            let Some(stem) = name.strip_suffix(".hlo.txt") else { continue };
+            // Split a trailing _<number> if present.
+            match stem.rsplit_once('_') {
+                Some((base, num)) if num.chars().all(|c| c.is_ascii_digit()) => {
+                    buckets
+                        .entry(base.to_string())
+                        .or_default()
+                        .push(num.parse().unwrap());
+                }
+                _ => {
+                    buckets.entry(stem.to_string()).or_default();
+                }
+            }
+        }
+        for v in buckets.values_mut() {
+            v.sort_unstable();
+        }
+        if buckets.is_empty() {
+            bail!("no .hlo.txt artifacts in {:?}", root);
+        }
+        Ok(ArtifactDir { root, buckets })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Smallest compiled bucket with capacity >= `needed`.
+    pub fn pick_bucket(&self, entry: &str, needed: usize) -> Result<usize> {
+        let buckets = self
+            .buckets
+            .get(entry)
+            .ok_or_else(|| anyhow!("unknown artifact entry '{}'", entry))?;
+        buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= needed)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no bucket >= {} for entry '{}' (have {:?})",
+                    needed,
+                    entry,
+                    buckets
+                )
+            })
+    }
+
+    pub fn buckets(&self, entry: &str) -> &[usize] {
+        self.buckets.get(entry).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Path of a (possibly bucketed) artifact.
+    pub fn path(&self, entry: &str, bucket: Option<usize>) -> PathBuf {
+        match bucket {
+            Some(n) => self.root.join(format!("{}_{}.hlo.txt", entry, n)),
+            None => self.root.join(format!("{}.hlo.txt", entry)),
+        }
+    }
+
+    pub fn has_entry(&self, entry: &str) -> bool {
+        self.buckets.contains_key(entry)
+    }
+}
+
+/// PJRT client + executable cache. One per engine thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+    pub compile_count: usize,
+    pub exec_count: u64,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {:?}", e))?;
+        Ok(Runtime { client, cache: HashMap::new(), compile_count: 0, exec_count: 0 })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        if self.cache.contains_key(path) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {:?}: {:?}", path, e))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {:?}: {:?}", path, e))?;
+        self.cache.insert(path.to_path_buf(), exe);
+        self.compile_count += 1;
+        Ok(())
+    }
+
+    /// Execute a previously loaded artifact. Inputs are borrowed literals;
+    /// the (single, tuple-typed) output is decomposed into its elements.
+    pub fn execute(&mut self, path: &Path, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(path)?;
+        let exe = self.cache.get(path).unwrap();
+        let out = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {:?}: {:?}", path, e))?;
+        self.exec_count += 1;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {:?}: {:?}", path, e))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {:?}: {:?}", path, e))
+    }
+
+    /// Number of compiled executables held.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Upload a literal to a device-resident buffer (perf path: weights go
+    /// up once at startup instead of once per execution).
+    pub fn to_buffer(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("buffer_from_host_literal: {:?}", e))
+    }
+
+    /// Execute with device-resident buffers (mixed activation/weight
+    /// inputs; the caller pre-uploads everything).
+    pub fn execute_buffers(
+        &mut self,
+        path: &Path,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        self.load(path)?;
+        let exe = self.cache.get(path).unwrap();
+        let out = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("execute_b {:?}: {:?}", path, e))?;
+        self.exec_count += 1;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {:?}: {:?}", path, e))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {:?}: {:?}", path, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Minimal tempdir helper (no tempfile crate on this image).
+    struct TempDir(PathBuf);
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn fake_dir(tag: &str, files: &[&str]) -> TempDir {
+        let dir = std::env::temp_dir().join(format!("fastav-test-{}-{}", std::process::id(), tag));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for f in files {
+            let mut fh = std::fs::File::create(dir.join(f)).unwrap();
+            writeln!(fh, "HloModule placeholder").unwrap();
+        }
+        TempDir(dir)
+    }
+
+    #[test]
+    fn scans_entries_and_buckets() {
+        let d = fake_dir(
+            "scan",
+            &[
+                "prefill_front_128.hlo.txt",
+                "back_layer_32.hlo.txt",
+                "back_layer_64.hlo.txt",
+                "back_layer_128.hlo.txt",
+                "logits.hlo.txt",
+                "model.json",
+            ],
+        );
+        let a = ArtifactDir::open(&d.0).unwrap();
+        assert_eq!(a.buckets("back_layer"), &[32, 64, 128]);
+        assert_eq!(a.buckets("prefill_front"), &[128]);
+        assert!(a.has_entry("logits"));
+        assert!(!a.has_entry("nope"));
+    }
+
+    #[test]
+    fn bucket_selection_smallest_fit() {
+        let d = fake_dir(
+            "buckets",
+            &[
+                "back_layer_32.hlo.txt",
+                "back_layer_64.hlo.txt",
+                "back_layer_128.hlo.txt",
+            ],
+        );
+        let a = ArtifactDir::open(&d.0).unwrap();
+        assert_eq!(a.pick_bucket("back_layer", 1).unwrap(), 32);
+        assert_eq!(a.pick_bucket("back_layer", 32).unwrap(), 32);
+        assert_eq!(a.pick_bucket("back_layer", 33).unwrap(), 64);
+        assert_eq!(a.pick_bucket("back_layer", 128).unwrap(), 128);
+        assert!(a.pick_bucket("back_layer", 129).is_err());
+        assert!(a.pick_bucket("missing", 1).is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactDir::open("/nonexistent/fastav").is_err());
+    }
+
+    #[test]
+    fn artifact_paths() {
+        let d = fake_dir("paths", &["decode_layer_32.hlo.txt"]);
+        let a = ArtifactDir::open(&d.0).unwrap();
+        assert!(a
+            .path("decode_layer", Some(32))
+            .to_string_lossy()
+            .ends_with("decode_layer_32.hlo.txt"));
+        assert!(a.path("logits", None).to_string_lossy().ends_with("logits.hlo.txt"));
+    }
+}

@@ -1,0 +1,217 @@
+//! Vocabulary constants and modality segment layout.
+//!
+//! Mirrors `python/compile/vocab.py` and the layout half of
+//! `python/compile/avsynth.py`; the cross-language contract is pinned by
+//! `testdata/avsynth_vectors.json` (written by the python test suite,
+//! checked by [`crate::avsynth`] tests).
+
+/// Vocabulary size shared by all model configs.
+pub const VOCAB_SIZE: usize = 256;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const SEP: u32 = 3;
+pub const YES: u32 = 4;
+pub const NO: u32 = 5;
+
+pub const NUM_CLASSES: u32 = 16;
+pub const SCENE_BASE: u32 = 16;
+pub const SOUND_BASE: u32 = 32;
+pub const DIGIT_BASE: u32 = 48;
+
+pub const VIS_NOISE_BASE: u32 = 64;
+pub const VIS_NOISE_COUNT: u32 = 64;
+pub const AUD_NOISE_BASE: u32 = 128;
+pub const AUD_NOISE_COUNT: u32 = 64;
+
+pub const Q_WHAT_SCENE: u32 = 192;
+pub const Q_WHAT_SOUND: u32 = 193;
+pub const Q_SCENE_SOUND: u32 = 194;
+pub const Q_HOW_MANY_BEATS: u32 = 195;
+pub const Q_WHICH_INSTRUMENT: u32 = 196;
+pub const Q_IS_THERE_SCENE: u32 = 197;
+pub const Q_IS_THERE_SOUND: u32 = 198;
+pub const Q_AV_MATCH: u32 = 199;
+pub const Q_DESCRIBE: u32 = 200;
+
+pub const BEAT: u32 = 208;
+
+pub fn scene_token(c: u32) -> u32 {
+    debug_assert!(c < NUM_CLASSES);
+    SCENE_BASE + c
+}
+
+pub fn sound_token(c: u32) -> u32 {
+    debug_assert!(c < NUM_CLASSES);
+    SOUND_BASE + c
+}
+
+pub fn digit_token(k: u32) -> u32 {
+    debug_assert!(k <= 9);
+    DIGIT_BASE + k
+}
+
+pub fn is_scene_token(t: u32) -> bool {
+    (SCENE_BASE..SCENE_BASE + NUM_CLASSES).contains(&t)
+}
+
+pub fn is_sound_token(t: u32) -> bool {
+    (SOUND_BASE..SOUND_BASE + NUM_CLASSES).contains(&t)
+}
+
+/// Modality of a prompt token (mirrors avsynth.SEG_* codes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Segment {
+    Ctrl = 0,
+    Vis = 1,
+    Aud = 2,
+    Text = 3,
+}
+
+impl Segment {
+    pub fn from_code(c: u8) -> Segment {
+        match c {
+            0 => Segment::Ctrl,
+            1 => Segment::Vis,
+            2 => Segment::Aud,
+            3 => Segment::Text,
+            _ => panic!("bad segment code {}", c),
+        }
+    }
+}
+
+/// Modality layout of a prompt (mirrors avsynth.LayoutCfg).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layout {
+    pub frames: usize,
+    pub vis_per_frame: usize,
+    pub aud_len: usize,       // sequential layout: total audio tokens
+    pub aud_per_frame: usize, // interleaved layout: audio tokens per frame
+    pub interleaved: bool,
+}
+
+impl Layout {
+    pub fn audio_tokens(&self) -> usize {
+        if self.interleaved {
+            self.frames * self.aud_per_frame
+        } else {
+            self.aud_len
+        }
+    }
+
+    pub fn vis_tokens(&self) -> usize {
+        self.frames * self.vis_per_frame
+    }
+
+    /// BOS + modality tokens + `[SEP, qword, arg, SEP]`.
+    pub fn prompt_len_max(&self) -> usize {
+        1 + self.vis_tokens() + self.audio_tokens() + 4
+    }
+}
+
+/// Canonical layouts (mirrors avsynth.VL2SIM_LAYOUT etc.).
+pub fn vl2sim_layout() -> Layout {
+    Layout { frames: 8, vis_per_frame: 8, aud_len: 24, aud_per_frame: 3, interleaved: false }
+}
+
+pub fn salmsim_layout() -> Layout {
+    Layout { frames: 8, vis_per_frame: 8, aud_len: 24, aud_per_frame: 3, interleaved: true }
+}
+
+pub fn vl2sim_long_layout() -> Layout {
+    Layout { frames: 24, vis_per_frame: 16, aud_len: 96, aud_per_frame: 3, interleaved: false }
+}
+
+/// Human-readable rendering of a token id (logging / HTTP responses).
+pub fn token_name(t: u32) -> String {
+    match t {
+        PAD => "<pad>".into(),
+        BOS => "<bos>".into(),
+        EOS => "<eos>".into(),
+        SEP => "<sep>".into(),
+        YES => "yes".into(),
+        NO => "no".into(),
+        t if is_scene_token(t) => format!("scene_{}", t - SCENE_BASE),
+        t if is_sound_token(t) => format!("sound_{}", t - SOUND_BASE),
+        t if (DIGIT_BASE..DIGIT_BASE + 10).contains(&t) => format!("{}", t - DIGIT_BASE),
+        Q_WHAT_SCENE => "what-scene?".into(),
+        Q_WHAT_SOUND => "what-sound?".into(),
+        Q_SCENE_SOUND => "scene-and-sound?".into(),
+        Q_HOW_MANY_BEATS => "how-many-beats?".into(),
+        Q_WHICH_INSTRUMENT => "which-instrument?".into(),
+        Q_IS_THERE_SCENE => "is-there-scene?".into(),
+        Q_IS_THERE_SOUND => "is-there-sound?".into(),
+        Q_AV_MATCH => "av-match?".into(),
+        Q_DESCRIBE => "describe".into(),
+        BEAT => "<beat>".into(),
+        t if (VIS_NOISE_BASE..VIS_NOISE_BASE + VIS_NOISE_COUNT).contains(&t) => {
+            format!("v{}", t - VIS_NOISE_BASE)
+        }
+        t if (AUD_NOISE_BASE..AUD_NOISE_BASE + AUD_NOISE_COUNT).contains(&t) => {
+            format!("a{}", t - AUD_NOISE_BASE)
+        }
+        t => format!("<{}>", t),
+    }
+}
+
+/// Render an answer token sequence (drops the trailing EOS).
+pub fn render_answer(tokens: &[u32]) -> String {
+    tokens
+        .iter()
+        .filter(|&&t| t != EOS && t != PAD)
+        .map(|&t| token_name(t))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_ranges_disjoint() {
+        // Every classifier matches a disjoint range.
+        for t in 0..VOCAB_SIZE as u32 {
+            let classes = [
+                is_scene_token(t),
+                is_sound_token(t),
+                (DIGIT_BASE..DIGIT_BASE + 10).contains(&t),
+                (VIS_NOISE_BASE..VIS_NOISE_BASE + VIS_NOISE_COUNT).contains(&t),
+                (AUD_NOISE_BASE..AUD_NOISE_BASE + AUD_NOISE_COUNT).contains(&t),
+            ];
+            assert!(classes.iter().filter(|&&c| c).count() <= 1, "token {}", t);
+        }
+    }
+
+    #[test]
+    fn layout_lengths() {
+        let l = vl2sim_layout();
+        assert_eq!(l.vis_tokens(), 64);
+        assert_eq!(l.audio_tokens(), 24);
+        assert_eq!(l.prompt_len_max(), 93);
+        assert!(l.prompt_len_max() <= 128);
+
+        let s = salmsim_layout();
+        assert_eq!(s.audio_tokens(), 24);
+        assert_eq!(s.prompt_len_max(), 93);
+
+        let long = vl2sim_long_layout();
+        assert!(long.prompt_len_max() <= 512);
+    }
+
+    #[test]
+    fn segment_roundtrip() {
+        for c in 0..4u8 {
+            assert_eq!(Segment::from_code(c) as u8, c);
+        }
+    }
+
+    #[test]
+    fn token_names_render() {
+        assert_eq!(token_name(YES), "yes");
+        assert_eq!(token_name(scene_token(3)), "scene_3");
+        assert_eq!(token_name(digit_token(7)), "7");
+        assert_eq!(render_answer(&[scene_token(1), sound_token(2), EOS]), "scene_1 sound_2");
+    }
+}

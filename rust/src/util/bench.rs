@@ -1,0 +1,109 @@
+//! Timing harness for `cargo bench` targets (substrate — criterion is not
+//! on this image; bench targets use `harness = false` and call this).
+//!
+//! Methodology: warmup runs, then `iters` timed runs; reports min / mean /
+//! p50 / p95 / max. Deliberately simple but honest — each sample is a full
+//! closure invocation, no statistical smoothing.
+
+use std::time::Instant;
+
+/// Result of one benchmark: per-iteration wall-clock stats in seconds.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub min: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>7} iters  min {:>10}  mean {:>10}  p50 {:>10}  p95 {:>10}  max {:>10}",
+            self.name,
+            self.iters,
+            fmt_secs(self.min),
+            fmt_secs(self.mean),
+            fmt_secs(self.p50),
+            fmt_secs(self.p95),
+            fmt_secs(self.max),
+        );
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    stats_from(name, samples)
+}
+
+/// Build stats from raw per-iteration samples (for harnesses that time
+/// internally, e.g. end-to-end request latencies).
+pub fn stats_from(name: &str, mut samples: Vec<f64>) -> BenchStats {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        min: samples[0],
+        mean,
+        p50: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        max: samples[n - 1],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn computes_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = stats_from("t", samples);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.p50, 51.0);
+        assert_eq!(s.p95, 96.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_closure() {
+        let mut count = 0;
+        let s = bench("noop", 2, 10, || count += 1);
+        assert_eq!(count, 12);
+        assert_eq!(s.iters, 10);
+        assert!(s.min >= 0.0 && s.min <= s.p50 && s.p50 <= s.max);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2.0).ends_with('s'));
+        assert!(fmt_secs(0.002).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("us"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Tiny CLI argument parser (substrate — clap is not on this image).
+//!
+//! Grammar: `binary [subcommand] [--flag] [--key value]...`. Unknown
+//! options are an error so typos fail fast.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: optional subcommand + option map + bare flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    allowed: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()[1..]`. `allowed` lists every legal option /
+    /// flag name (without `--`); anything else aborts with a usage error.
+    pub fn parse(
+        argv: impl IntoIterator<Item = String>,
+        allowed: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args {
+            allowed: allowed.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(arg) = it.next() {
+            let name = arg
+                .strip_prefix("--")
+                .ok_or_else(|| format!("unexpected positional argument '{}'", arg))?;
+            if !out.allowed.iter().any(|a| a == name) {
+                return Err(format!("unknown option '--{}'", name));
+            }
+            // An option takes a value if the next token is not another option.
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                }
+                _ => out.flags.push(name.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{} expects an integer, got '{}'", name, v)),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{} expects a number, got '{}'", name, v)),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_opts() {
+        let a = Args::parse(
+            argv(&["serve", "--port", "8080", "--verbose"]),
+            &["port", "verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(argv(&["--wat"]), &["port"]).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(argv(&["--n", "5", "--p", "0.25"]), &["n", "p"]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+        assert_eq!(a.get_f64("p", 0.0).unwrap(), 0.25);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        let bad = Args::parse(argv(&["--n", "abc"]), &["n"]).unwrap();
+        assert!(bad.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse(argv(&["--x", "1"]), &["x"]).unwrap();
+        assert_eq!(a.subcommand, None);
+    }
+}

@@ -1,0 +1,168 @@
+//! Tiny CSV writer/reader (experiment outputs; no csv crate on this image).
+//!
+//! RFC-4180-lite: comma separator, `"`-quoting when a field contains
+//! comma/quote/newline, `""` escaping inside quotes. The experiment
+//! drivers emit every table/figure as CSV under `results/` so EXPERIMENTS
+//! numbers are regenerable artifacts, not transcript copies.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Incremental CSV writer over any `Write`.
+pub struct CsvWriter<W: Write> {
+    out: W,
+    cols: usize,
+}
+
+impl CsvWriter<std::io::BufWriter<std::fs::File>> {
+    /// Create (truncate) a CSV file with a header row.
+    pub fn create(path: &Path, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        let mut w = CsvWriter { out: f, cols: header.len() };
+        w.write_row(header)?;
+        Ok(w)
+    }
+}
+
+impl<W: Write> CsvWriter<W> {
+    pub fn from_writer(out: W, cols: usize) -> Self {
+        CsvWriter { out, cols }
+    }
+
+    pub fn write_row<S: AsRef<str>>(&mut self, fields: &[S]) -> std::io::Result<()> {
+        assert_eq!(fields.len(), self.cols, "row width != header width");
+        let mut first = true;
+        for f in fields {
+            if !first {
+                self.out.write_all(b",")?;
+            }
+            first = false;
+            write_field(&mut self.out, f.as_ref())?;
+        }
+        self.out.write_all(b"\n")
+    }
+
+    /// Convenience: numeric row with fixed precision.
+    pub fn write_nums(&mut self, label: &str, nums: &[f64]) -> std::io::Result<()> {
+        let mut fields = vec![label.to_string()];
+        fields.extend(nums.iter().map(|v| format!("{:.6}", v)));
+        self.write_row(&fields)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn write_field(out: &mut impl Write, s: &str) -> std::io::Result<()> {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        out.write_all(b"\"")?;
+        out.write_all(s.replace('"', "\"\"").as_bytes())?;
+        out.write_all(b"\"")
+    } else {
+        out.write_all(s.as_bytes())
+    }
+}
+
+/// Parse CSV text into rows of fields (used by tests and tooling).
+pub fn parse(text: &str) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    let mut row = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' if chars.peek() == Some(&'"') => {
+                    chars.next();
+                    field.push('"');
+                }
+                '"' => in_quotes = false,
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => row.push(std::mem::take(&mut field)),
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                '\r' => {}
+                c => field.push(c),
+            }
+        }
+    }
+    if !field.is_empty() || !row.is_empty() {
+        row.push(field);
+        rows.push(row);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_plain() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::from_writer(&mut buf, 3);
+            w.write_row(&["a", "b", "c"]).unwrap();
+            w.write_row(&["1", "2", "3"]).unwrap();
+        }
+        let rows = parse(std::str::from_utf8(&buf).unwrap());
+        assert_eq!(rows, vec![vec!["a", "b", "c"], vec!["1", "2", "3"]]);
+    }
+
+    #[test]
+    fn quoting_roundtrip() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::from_writer(&mut buf, 2);
+            w.write_row(&["has,comma", "has\"quote"]).unwrap();
+            w.write_row(&["multi\nline", "plain"]).unwrap();
+        }
+        let rows = parse(std::str::from_utf8(&buf).unwrap());
+        assert_eq!(rows[0], vec!["has,comma", "has\"quote"]);
+        assert_eq!(rows[1], vec!["multi\nline", "plain"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut buf = Vec::new();
+        let mut w = CsvWriter::from_writer(&mut buf, 2);
+        w.write_row(&["only-one"]).unwrap();
+    }
+
+    #[test]
+    fn write_nums_formats() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::from_writer(&mut buf, 3);
+            w.write_nums("row", &[1.0, 2.5]).unwrap();
+        }
+        let rows = parse(std::str::from_utf8(&buf).unwrap());
+        assert_eq!(rows[0][0], "row");
+        assert!(rows[0][1].starts_with("1.0"));
+    }
+
+    #[test]
+    fn file_create_with_header(){
+        let path = std::env::temp_dir().join(format!("fastav-csv-{}.csv", std::process::id()));
+        {
+            let mut w = CsvWriter::create(&path, &["x", "y"]).unwrap();
+            w.write_row(&["1", "2"]).unwrap();
+            w.flush().unwrap();
+        }
+        let rows = parse(&std::fs::read_to_string(&path).unwrap());
+        assert_eq!(rows[0], vec!["x", "y"]);
+        let _ = std::fs::remove_file(path);
+    }
+}

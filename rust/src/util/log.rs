@@ -1,0 +1,121 @@
+//! Leveled logger substrate (no `log`/`tracing` crates on this image).
+//!
+//! Plain stderr lines: `LEVEL target: message`, with a process-global
+//! level filter. Cheap enough for the serving path at Info; Debug/Trace
+//! guard their formatting behind the level check via the macros.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => return None,
+        })
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global level (also reads `FASTAV_LOG` at first use of `init`).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Initialize from the `FASTAV_LOG` environment variable (if set).
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("FASTAV_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one log line (used by the macros; callable directly).
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments) {
+    if enabled(level) {
+        eprintln!("{:5} {}: {}", level.name(), target, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $target,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $target,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            $crate::util::log::log($crate::util::log::Level::Debug, $target,
+                                   format_args!($($arg)*))
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("TRACE"), Some(Level::Trace));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn macros_compile_and_run() {
+        log_info!("test", "hello {}", 1);
+        log_warn!("test", "warn {}", 2);
+        log_debug!("test", "debug {}", 3);
+    }
+}

@@ -1,0 +1,25 @@
+//! Std-only utility substrates.
+//!
+//! This image has no network access and only the `xla`/`anyhow` crates
+//! vendored, so the usual ecosystem crates (serde, clap, tokio, criterion,
+//! proptest) are unavailable. The substrates here replace exactly what the
+//! rest of the crate needs from them — nothing speculative:
+//!
+//! * [`json`]       — recursive-descent JSON parser + writer (manifest,
+//!   model.json, calibration files, HTTP bodies).
+//! * [`cli`]        — flag/option argument parsing for the binaries.
+//! * [`threadpool`] — fixed worker pool for the HTTP server and client
+//!   load generators.
+//! * [`bench`]      — timing harness used by `cargo bench` targets
+//!   (`harness = false`).
+//! * [`proptest`]   — miniature property-testing driver (seeded shrinking
+//!   over integer vectors) used by the invariant tests.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod threadpool;

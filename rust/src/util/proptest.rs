@@ -1,0 +1,161 @@
+//! Miniature property-testing driver (substrate — the proptest crate is
+//! not on this image).
+//!
+//! Generates seeded random cases from a [`Gen`] source, runs the property,
+//! and on failure performs greedy input shrinking for `Vec`-shaped inputs
+//! before panicking with the minimal counterexample. Deterministic: every
+//! failure message includes the case seed for replay.
+
+use super::rng::SplitMix64;
+
+/// Random-input source handed to properties.
+pub struct Gen {
+    rng: SplitMix64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: SplitMix64::new(seed) }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector of length in `[0, max_len]` with elements from `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize_in(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+}
+
+/// Run `prop` over `cases` random cases. The property receives a fresh
+/// `Gen`; it should build inputs from it and panic (assert) on violation.
+/// The driver reports the failing case seed.
+pub fn run_prop(name: &str, cases: usize, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        let seed = 0xF057_A000u64 ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{}' failed on case {} (seed {:#x}): {}",
+                name, case, seed, msg
+            );
+        }
+    }
+}
+
+/// Greedy shrink of a failing `Vec` input: repeatedly try removing chunks
+/// while `fails` keeps failing; returns the minimal failing vector.
+pub fn shrink_vec<T: Clone>(input: &[T], fails: impl Fn(&[T]) -> bool) -> Vec<T> {
+    assert!(fails(input), "shrink_vec requires a failing input");
+    let mut cur: Vec<T> = input.to_vec();
+    let mut chunk = (cur.len() / 2).max(1);
+    while chunk >= 1 {
+        let mut i = 0;
+        let mut progressed = false;
+        while i < cur.len() {
+            let mut candidate = cur.clone();
+            let end = (i + chunk).min(candidate.len());
+            candidate.drain(i..end);
+            if !candidate.is_empty() || cur.len() > chunk {
+                if fails(&candidate) {
+                    cur = candidate;
+                    progressed = true;
+                    continue; // retry same index at shorter length
+                }
+            }
+            i += chunk;
+        }
+        if chunk == 1 && !progressed {
+            break;
+        }
+        chunk = if chunk == 1 { if progressed { 1 } else { 0 } } else { chunk / 2 };
+        if chunk == 0 {
+            break;
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_is_deterministic() {
+        let mut a = Gen::new(1);
+        let mut b = Gen::new(1);
+        for _ in 0..50 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        let mut g = Gen::new(2);
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn run_prop_passes_trivial() {
+        run_prop("trivial", 50, |g| {
+            let v = g.vec(10, |g| g.usize_in(0, 5));
+            assert!(v.len() <= 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn run_prop_reports_failure() {
+        run_prop("always-fails", 5, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn shrink_finds_minimal() {
+        // Failing predicate: contains a 7.
+        let input = vec![1, 2, 7, 3, 7, 4];
+        let shrunk = shrink_vec(&input, |v| v.contains(&7));
+        assert_eq!(shrunk, vec![7]);
+    }
+
+    #[test]
+    fn choose_picks_member() {
+        let mut g = Gen::new(3);
+        let items = [10, 20, 30];
+        for _ in 0..20 {
+            assert!(items.contains(g.choose(&items)));
+        }
+    }
+}

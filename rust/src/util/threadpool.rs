@@ -1,0 +1,132 @@
+//! Fixed-size worker thread pool (substrate — tokio is not on this image).
+//!
+//! Used by the HTTP server (connection handling) and by client-side load
+//! generators. Jobs are `FnOnce() + Send` closures over an mpsc channel
+//! guarded by a mutex (the classic "channel of boxed jobs" design).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads. Dropping the pool joins all workers
+/// after draining the queue.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (at least 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(size);
+        for idx in 0..size {
+            let rx = Arc::clone(&rx);
+            let queued = Arc::clone(&queued);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("pool-{}", idx))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                queued.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { sender: Some(tx), workers, queued }
+    }
+
+    /// Enqueue a job. Panics if the pool is shutting down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("workers alive");
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    /// Block until every submitted job has finished (simple spin+yield —
+    /// call sites are tests and shutdown paths, not hot loops).
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take()); // close the channel; workers drain + exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn drop_joins_after_drain() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..50 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop here must wait for all 50
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn single_worker_is_serial() {
+        let pool = ThreadPool::new(1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..10 {
+            let log = Arc::clone(&log);
+            pool.execute(move || log.lock().unwrap().push(i));
+        }
+        pool.wait_idle();
+        assert_eq!(*log.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,386 @@
+//! Engine integration tests over the real AOT artifacts (tiny model).
+//!
+//! These exercise the full rust↔XLA path: artifact loading, the staged
+//! prefill/decode pipeline, pruning plans, FLOPs accounting, and the
+//! calibration probe. Tests skip when artifacts are absent.
+
+mod common;
+
+use fastav::avsynth::{gen_sample, Dataset};
+use fastav::calibration::calibrate;
+use fastav::model::{GenerateOptions, ModelEngine, PruningPlan, RequestInput};
+use fastav::pruning::{FineStrategy, GlobalStrategy};
+use fastav::tokens::EOS;
+
+fn engine() -> Option<ModelEngine> {
+    let root = common::tiny_ready()?;
+    Some(ModelEngine::load(&root, "tiny").expect("engine load"))
+}
+
+fn sample(idx: u64) -> fastav::avsynth::Sample {
+    let layout = fastav::tokens::Layout {
+        frames: 2,
+        vis_per_frame: 4,
+        aud_len: 6,
+        aud_per_frame: 3,
+        interleaved: false,
+    };
+    gen_sample(&layout, Dataset::Avqa, idx, 1234)
+}
+
+#[test]
+fn vanilla_generation_is_deterministic() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(0);
+    let opts = GenerateOptions::default();
+    let a = eng.generate(&RequestInput::from_sample(&s), &opts).unwrap();
+    let b = eng.generate(&RequestInput::from_sample(&s), &opts).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.flops.total, b.flops.total);
+    assert!(!a.tokens.is_empty() && a.tokens.len() <= opts.max_gen);
+}
+
+#[test]
+fn vanilla_relative_flops_is_100() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(1);
+    let res = eng
+        .generate(&RequestInput::from_sample(&s), &GenerateOptions::default())
+        .unwrap();
+    assert!(
+        (res.relative_flops - 100.0).abs() < 1e-6,
+        "vanilla must be exactly 100, got {}",
+        res.relative_flops
+    );
+    // Live counts: every layer sees the full prompt.
+    assert!(res.live_counts.iter().all(|&n| n == s.prompt.len()));
+}
+
+#[test]
+fn fastav_reduces_flops_and_live_counts() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(2);
+    let plan = PruningPlan::fastav(5, 2, 0, 20.0);
+    let opts = GenerateOptions { plan, max_gen: 4, ..Default::default() };
+    let res = eng.generate(&RequestInput::from_sample(&s), &opts).unwrap();
+    assert!(res.relative_flops < 95.0, "got {}", res.relative_flops);
+    // Monotone non-increasing live counts after the global layer.
+    let mid = eng.cfg.mid_layer;
+    for w in res.live_counts[mid..].windows(2) {
+        assert!(w[1] <= w[0], "live counts must shrink: {:?}", res.live_counts);
+    }
+    assert!(res.live_counts[mid] < s.prompt.len());
+}
+
+#[test]
+fn pruned_output_stays_plausible() {
+    // Pruning must not break decoding: tokens come from the vocab and the
+    // sequence terminates (EOS or max_gen).
+    let Some(mut eng) = engine() else { return };
+    let s = sample(3);
+    let plan = PruningPlan::fastav(6, 2, 0, 30.0);
+    let res = eng
+        .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 4, ..Default::default() })
+        .unwrap();
+    assert!(res.tokens.iter().all(|&t| (t as usize) < eng.cfg.vocab));
+    assert!(res.tokens.contains(&EOS) || res.tokens.len() == 4);
+}
+
+#[test]
+fn vtw_drops_all_av_tokens() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(4);
+    let plan = PruningPlan {
+        global: GlobalStrategy::Vtw,
+        global_budget: 0,
+        fine: FineStrategy::None,
+        fine_percent: 0.0,
+        seed: 0,
+        global_layer: None,
+        fine_during_decode: false,
+    };
+    let res = eng
+        .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 2, ..Default::default() })
+        .unwrap();
+    let av = s
+        .segments
+        .iter()
+        .filter(|g| matches!(g, fastav::tokens::Segment::Vis | fastav::tokens::Segment::Aud))
+        .count();
+    let mid = eng.cfg.mid_layer;
+    assert_eq!(res.live_counts[mid], s.prompt.len() - av);
+    assert!(res.relative_flops < 90.0);
+}
+
+#[test]
+fn random_strategy_respects_budget() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(5);
+    let plan = PruningPlan {
+        global: GlobalStrategy::Random,
+        global_budget: 4,
+        fine: FineStrategy::None,
+        fine_percent: 0.0,
+        seed: 99,
+        global_layer: None,
+        fine_during_decode: false,
+    };
+    let res = eng
+        .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 2, ..Default::default() })
+        .unwrap();
+    let non_av = s
+        .segments
+        .iter()
+        .filter(|g| matches!(g, fastav::tokens::Segment::Ctrl | fastav::tokens::Segment::Text))
+        .count();
+    assert_eq!(res.live_counts[eng.cfg.mid_layer], non_av + 4);
+}
+
+#[test]
+fn attentive_strategies_run_score_capture() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(6);
+    for strat in [GlobalStrategy::LowAttentive, GlobalStrategy::TopAttentive] {
+        let plan = PruningPlan {
+            global: strat,
+            global_budget: 5,
+            fine: FineStrategy::None,
+            fine_percent: 0.0,
+            seed: 0,
+            global_layer: None,
+            fine_during_decode: false,
+        };
+        let res = eng
+            .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 2, ..Default::default() })
+            .unwrap();
+        // Score capture runs layer mid unpruned: its live count is full.
+        assert_eq!(res.live_counts[eng.cfg.mid_layer], s.prompt.len());
+        // The following layer sees the pruned set.
+        let non_av = s.prompt.len()
+            - s.segments
+                .iter()
+                .filter(|g| {
+                    matches!(g, fastav::tokens::Segment::Vis | fastav::tokens::Segment::Aud)
+                })
+                .count();
+        assert_eq!(res.live_counts[eng.cfg.mid_layer + 1], non_av + 5);
+    }
+}
+
+#[test]
+fn informative_strategies_use_rollout() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(7);
+    for strat in [GlobalStrategy::LowInformative, GlobalStrategy::TopInformative] {
+        let plan = PruningPlan {
+            global: strat,
+            global_budget: 5,
+            fine: FineStrategy::None,
+            fine_percent: 0.0,
+            seed: 0,
+            global_layer: None,
+            fine_during_decode: false,
+        };
+        let res = eng
+            .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 2, ..Default::default() })
+            .unwrap();
+        let non_av = s
+            .segments
+            .iter()
+            .filter(|g| matches!(g, fastav::tokens::Segment::Ctrl | fastav::tokens::Segment::Text))
+            .count();
+        assert_eq!(res.live_counts[eng.cfg.mid_layer], non_av + 5);
+    }
+}
+
+#[test]
+fn fine_pruning_drops_expected_counts() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(8);
+    let plan = PruningPlan {
+        global: GlobalStrategy::None,
+        global_budget: 0,
+        fine: FineStrategy::LowAttentive,
+        fine_percent: 25.0,
+        seed: 0,
+        global_layer: None,
+        fine_during_decode: false,
+    };
+    let res = eng
+        .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 2, ..Default::default() })
+        .unwrap();
+    let mid = eng.cfg.mid_layer;
+    // Each back layer drops round(25% of prunable AV rows) of the previous.
+    let av0 = s
+        .segments
+        .iter()
+        .filter(|g| matches!(g, fastav::tokens::Segment::Vis | fastav::tokens::Segment::Aud))
+        .count();
+    let keep0 = s.prompt.len();
+    let expect1 = keep0 - ((av0 as f64) * 0.25).round() as usize;
+    assert_eq!(res.live_counts[mid], keep0);
+    assert_eq!(res.live_counts[mid + 1], expect1);
+}
+
+#[test]
+fn frontsplit_layer_sweep_runs() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(9);
+    // tiny has splits at 1 and 3 (mid=2 is prefill_front).
+    for g in [1usize, 2, 3] {
+        let plan = PruningPlan {
+            global: GlobalStrategy::FastAvPosition {
+                vis_cutoff: 5,
+                keep_audio: 2,
+                keep_frames: 0,
+            },
+            global_budget: 0,
+            fine: FineStrategy::LowAttentive,
+            fine_percent: 20.0,
+            seed: 0,
+            global_layer: Some(g),
+            fine_during_decode: false,
+        };
+        let res = eng
+            .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 2, ..Default::default() })
+            .unwrap();
+        assert!(res.relative_flops < 100.0, "g={} got {}", g, res.relative_flops);
+        assert_eq!(res.live_counts[..g], vec![s.prompt.len(); g][..]);
+    }
+}
+
+#[test]
+fn calib_probe_rollout_is_stochastic() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(10);
+    let probe = eng.calib_probe(&s.prompt).unwrap();
+    let k = s.prompt.len();
+    for layer in 1..=probe.n_layers {
+        for row in 0..k {
+            let sum: f32 = (0..k).map(|c| probe.rollout_at(layer, row, c)).sum();
+            assert!((sum - 1.0).abs() < 1e-2, "layer {} row {} sum {}", layer, row, sum);
+        }
+    }
+    // Influence on the last query is a distribution too.
+    let lr = probe.last_row(eng.cfg.mid_layer);
+    let total: f32 = lr.iter().sum();
+    assert!((total - 1.0).abs() < 1e-2);
+}
+
+#[test]
+fn calibration_pipeline_produces_sane_rule() {
+    let Some(mut eng) = engine() else { return };
+    let calib = calibrate(&mut eng, 8, 1234).unwrap();
+    assert!(calib.vis_cutoff >= 1);
+    assert!(calib.keep_audio >= 1);
+    assert!(calib.budget >= 2);
+    let layout = &eng.cfg.layout;
+    assert!(calib.budget <= layout.vis_tokens() + layout.audio_tokens());
+    // The derived plan must execute.
+    let s = sample(11);
+    let res = eng
+        .generate(
+            &RequestInput::from_sample(&s),
+            &GenerateOptions { plan: calib.plan(20.0), max_gen: 3, ..Default::default() },
+        )
+        .unwrap();
+    assert!(res.relative_flops < 100.0);
+}
+
+#[test]
+fn kv_memory_shrinks_under_pruning() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(12);
+    let vanilla = eng
+        .generate(&RequestInput::from_sample(&s), &GenerateOptions::default())
+        .unwrap();
+    let pruned = eng
+        .generate(
+            &RequestInput::from_sample(&s),
+            &GenerateOptions { plan: PruningPlan::fastav(4, 1, 0, 20.0), max_gen: 4, ..Default::default() },
+        )
+        .unwrap();
+    assert!(
+        pruned.peak_kv_bytes <= vanilla.peak_kv_bytes,
+        "pruned {} vs vanilla {}",
+        pruned.peak_kv_bytes,
+        vanilla.peak_kv_bytes
+    );
+}
+
+#[test]
+fn oversized_prompt_is_rejected() {
+    let Some(mut eng) = engine() else { return };
+    let prompt = vec![1u32; 100]; // tiny prefill bucket is 32
+    let segments = vec![fastav::tokens::Segment::Text; 100];
+    let frames = vec![-1i32; 100];
+    let input = RequestInput { prompt: &prompt, segments: &segments, frame_of: &frames };
+    assert!(eng.generate(&input, &GenerateOptions::default()).is_err());
+}
+
+#[test]
+fn sampling_greedy_matches_default_and_seeded_sampling_is_deterministic() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(14);
+    let greedy = eng
+        .generate(&RequestInput::from_sample(&s), &GenerateOptions::default())
+        .unwrap();
+    let temp0 = eng
+        .generate(
+            &RequestInput::from_sample(&s),
+            &GenerateOptions {
+                sampling: fastav::model::engine::Sampling { temperature: 0.0, top_k: 5, seed: 1 },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(greedy.tokens, temp0.tokens, "temperature 0 is greedy");
+    let sampled = GenerateOptions {
+        sampling: fastav::model::engine::Sampling { temperature: 0.8, top_k: 0, seed: 7 },
+        ..Default::default()
+    };
+    let a = eng.generate(&RequestInput::from_sample(&s), &sampled).unwrap();
+    let b = eng.generate(&RequestInput::from_sample(&s), &sampled).unwrap();
+    assert_eq!(a.tokens, b.tokens, "fixed seed must be deterministic");
+}
+
+#[test]
+fn decode_time_pruning_shrinks_caches() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(15);
+    let mut plan = PruningPlan::fastav(6, 2, 0, 30.0);
+    plan.fine_during_decode = true;
+    let pruned = eng
+        .generate(
+            &RequestInput::from_sample(&s),
+            &GenerateOptions { plan: plan.clone(), max_gen: 4, ..Default::default() },
+        )
+        .unwrap();
+    plan.fine_during_decode = false;
+    let baseline = eng
+        .generate(
+            &RequestInput::from_sample(&s),
+            &GenerateOptions { plan, max_gen: 4, ..Default::default() },
+        )
+        .unwrap();
+    // Decode-time pruning can only reduce decode FLOPs (cache keys shrink).
+    if pruned.decode_steps > 0 && baseline.decode_steps > 0 {
+        assert!(pruned.flops.decode <= baseline.flops.decode);
+    }
+    assert!(pruned.tokens.iter().all(|&t| (t as usize) < eng.cfg.vocab));
+}
+
+#[test]
+fn streaming_callback_sees_all_tokens() {
+    let Some(mut eng) = engine() else { return };
+    let s = sample(13);
+    let mut streamed = Vec::new();
+    let res = eng
+        .generate_with(
+            &RequestInput::from_sample(&s),
+            &GenerateOptions::default(),
+            |t| streamed.push(t),
+        )
+        .unwrap();
+    assert_eq!(streamed, res.tokens);
+}

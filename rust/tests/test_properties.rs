@@ -1,0 +1,302 @@
+//! Property-based tests over the pure substrates (no artifacts needed):
+//! pruning invariants, KV-cache compaction, FLOPs monotonicity, scheduler
+//! conservation, JSON round-trips, and HTTP parser robustness.
+
+mod common;
+
+use fastav::flops::FlopsModel;
+use fastav::http::{parse_request, ParseOutcome};
+use fastav::kvcache::LayerCache;
+use fastav::pruning::{
+    fine_keep, global_keep, validate_keep, FineStrategy, GlobalInputs, GlobalStrategy,
+};
+use fastav::tokens::Segment;
+use fastav::util::json::Json;
+use fastav::util::proptest::{run_prop, Gen};
+
+/// Random prompt-shaped segment vector: BOS + vis/aud mix + >=1 text.
+fn gen_segments(g: &mut Gen) -> (Vec<Segment>, Vec<i32>) {
+    let frames = g.usize_in(1, 5) as i32;
+    let vis_per = g.usize_in(1, 6);
+    let auds = g.usize_in(1, 8);
+    let texts = g.usize_in(1, 4);
+    let mut segs = vec![Segment::Ctrl];
+    let mut fr = vec![-1i32];
+    for f in 0..frames {
+        for _ in 0..vis_per {
+            segs.push(Segment::Vis);
+            fr.push(f);
+        }
+    }
+    for _ in 0..auds {
+        segs.push(Segment::Aud);
+        fr.push(-1);
+    }
+    for _ in 0..texts {
+        segs.push(Segment::Text);
+        fr.push(-1);
+    }
+    (segs, fr)
+}
+
+#[test]
+fn prop_global_keep_always_valid() {
+    run_prop("global_keep_valid", 200, |g| {
+        let (segs, fr) = gen_segments(g);
+        let n = segs.len();
+        let scores: Vec<f32> = (0..n).map(|_| g.f64_unit() as f32).collect();
+        let rollout: Vec<f32> = (0..n).map(|_| g.f64_unit() as f32).collect();
+        let av = segs
+            .iter()
+            .filter(|s| matches!(s, Segment::Vis | Segment::Aud))
+            .count();
+        let budget = g.usize_in(0, av);
+        let strategies = [
+            GlobalStrategy::None,
+            GlobalStrategy::Vtw,
+            GlobalStrategy::Random,
+            GlobalStrategy::TopAttentive,
+            GlobalStrategy::LowAttentive,
+            GlobalStrategy::TopInformative,
+            GlobalStrategy::LowInformative,
+            GlobalStrategy::FastAvPosition {
+                vis_cutoff: g.usize_in(0, n),
+                keep_audio: g.usize_in(1, 8),
+                keep_frames: g.usize_in(1, 5),
+            },
+            GlobalStrategy::FastV { keep_ratio: g.f64_unit() },
+        ];
+        let strat = g.choose(&strategies).clone();
+        let inp = GlobalInputs {
+            segments: &segs,
+            frame_of: &fr,
+            scores: Some(&scores),
+            rollout: Some(&rollout),
+            budget,
+            seed: g.u64(),
+        };
+        let keep = global_keep(&strat, &inp);
+        validate_keep(&keep, &segs).unwrap_or_else(|e| {
+            panic!("strategy {:?} violated invariants: {}", strat, e)
+        });
+        // Budget strategies keep exactly `budget` AV tokens.
+        if matches!(
+            strat,
+            GlobalStrategy::Random
+                | GlobalStrategy::TopAttentive
+                | GlobalStrategy::LowAttentive
+                | GlobalStrategy::TopInformative
+                | GlobalStrategy::LowInformative
+        ) {
+            let kept_av = keep
+                .iter()
+                .filter(|&&i| matches!(segs[i], Segment::Vis | Segment::Aud))
+                .count();
+            assert_eq!(kept_av, budget.min(av));
+        }
+    });
+}
+
+#[test]
+fn prop_fine_keep_exact_drop_count() {
+    run_prop("fine_keep_count", 200, |g| {
+        let (segs, _) = gen_segments(g);
+        let n = segs.len();
+        let scores: Vec<f32> = (0..n).map(|_| g.f64_unit() as f32).collect();
+        let percent = g.usize_in(0, 100) as f64;
+        let strat = *g.choose(&[
+            FineStrategy::Random,
+            FineStrategy::TopAttentive,
+            FineStrategy::LowAttentive,
+        ]);
+        let keep = fine_keep(strat, &scores, &segs, percent, g.u64());
+        validate_keep(&keep, &segs).unwrap();
+        let prunable = (0..n)
+            .filter(|&i| i != n - 1 && matches!(segs[i], Segment::Vis | Segment::Aud))
+            .count();
+        let expect_drop = ((percent / 100.0) * prunable as f64).round() as usize;
+        assert_eq!(keep.len(), n - expect_drop.min(prunable));
+    });
+}
+
+#[test]
+fn prop_fine_keep_low_attentive_drops_lowest() {
+    run_prop("fine_low_attentive", 100, |g| {
+        let (segs, _) = gen_segments(g);
+        let n = segs.len();
+        // Distinct scores so the ordering is unambiguous.
+        let scores: Vec<f32> = (0..n).map(|i| (i as f32) * 0.001 + g.f64_unit() as f32 * 0.0001).collect();
+        let keep = fine_keep(FineStrategy::LowAttentive, &scores, &segs, 50.0, 0);
+        let dropped: Vec<usize> = (0..n).filter(|i| !keep.contains(i)).collect();
+        // Every dropped AV token must score <= every kept prunable AV token.
+        let kept_av_min = keep
+            .iter()
+            .filter(|&&i| i != n - 1 && matches!(segs[i], Segment::Vis | Segment::Aud))
+            .map(|&i| scores[i])
+            .fold(f32::INFINITY, f32::min);
+        for &d in &dropped {
+            assert!(scores[d] <= kept_av_min + 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_kvcache_compact_preserves_mapping() {
+    run_prop("kvcache_compact", 150, |g| {
+        let n_heads = g.usize_in(1, 4);
+        let dh = g.usize_in(2, 8);
+        let n = g.usize_in(1, 24);
+        let cap = n + g.usize_in(0, 8);
+        // K rows tagged by index so we can trace them.
+        let mut src_k = vec![0.0f32; n_heads * n * dh];
+        let mut src_v = vec![0.0f32; n_heads * n * dh];
+        for h in 0..n_heads {
+            for i in 0..n {
+                for e in 0..dh {
+                    src_k[h * n * dh + i * dh + e] = (h * 1000 + i) as f32;
+                    src_v[h * n * dh + i * dh + e] = -((h * 1000 + i) as f32);
+                }
+            }
+        }
+        let positions: Vec<i32> = (0..n as i32).map(|i| i * 3 + 1).collect();
+        let mut cache = LayerCache::from_prefill(
+            n_heads, dh, cap, &src_k, &src_v, n, n, &positions,
+        );
+        // Random ascending keep subset (non-empty).
+        let mut keep: Vec<usize> = (0..n).filter(|_| g.bool()).collect();
+        if keep.is_empty() {
+            keep.push(g.usize_in(0, n - 1));
+        }
+        cache.compact(&keep);
+        assert_eq!(cache.len(), keep.len());
+        for (row, &src) in keep.iter().enumerate() {
+            assert_eq!(cache.positions()[row], positions[src]);
+            for h in 0..n_heads {
+                assert_eq!(cache.k_row(h, row)[0], (h * 1000 + src) as f32);
+                assert_eq!(cache.v_row(h, row)[0], -((h * 1000 + src) as f32));
+            }
+        }
+        // Grow preserves everything.
+        let bigger = cap + g.usize_in(1, 16);
+        cache.grow(bigger);
+        for (row, &src) in keep.iter().enumerate() {
+            assert_eq!(cache.k_row(0, row)[0], src as f32);
+        }
+    });
+}
+
+#[test]
+fn prop_flops_monotone_and_positive() {
+    run_prop("flops_monotone", 200, |g| {
+        let m = FlopsModel {
+            d_model: g.usize_in(8, 256),
+            d_ff: g.usize_in(8, 512),
+            n_layers: g.usize_in(1, 32),
+            vocab: g.usize_in(16, 1024),
+        };
+        let n = g.usize_in(1, 512);
+        assert!(m.layer(n, n) > 0);
+        assert!(m.layer(n, n) <= m.layer(n + 1, n + 1));
+        assert!(m.vanilla_prefill(n) < m.vanilla_prefill(n + 1));
+        let gen = g.usize_in(1, 8);
+        assert!(m.vanilla_generate(n, gen) <= m.vanilla_generate(n, gen + 1));
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    run_prop("json_roundtrip", 200, |g| {
+        // Random JSON tree of bounded depth.
+        fn build(g: &mut Gen, depth: usize) -> Json {
+            match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.usize_in(0, 1_000_000) as f64) - 500_000.0),
+                3 => {
+                    let len = g.usize_in(0, 12);
+                    let s: String = (0..len)
+                        .map(|_| char::from_u32(g.usize_in(32, 126) as u32).unwrap())
+                        .collect();
+                    Json::Str(s)
+                }
+                4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| build(g, depth - 1)).collect()),
+                _ => {
+                    let n = g.usize_in(0, 4);
+                    Json::Obj(
+                        (0..n)
+                            .map(|i| (format!("k{}", i), build(g, depth - 1)))
+                            .collect(),
+                    )
+                }
+            }
+        }
+        let v = build(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("reparse {}: {}", text, e));
+        assert_eq!(back, v);
+    });
+}
+
+#[test]
+fn prop_http_parser_never_panics() {
+    run_prop("http_garbage", 300, |g| {
+        let len = g.usize_in(0, 200);
+        let bytes: Vec<u8> = (0..len).map(|_| (g.u64() & 0xFF) as u8).collect();
+        // Must classify without panicking.
+        let _ = parse_request(&bytes);
+        // Valid requests with injected noise: random truncation points.
+        let valid = b"POST /v1/generate HTTP/1.1\r\ncontent-length: 4\r\n\r\nbody";
+        let cut = g.usize_in(0, valid.len());
+        match parse_request(&valid[..cut]) {
+            ParseOutcome::Done(req, _) if cut == valid.len() => {
+                assert_eq!(req.body, b"body");
+            }
+            ParseOutcome::Done(_, _) => panic!("premature Done at cut {}", cut),
+            _ => {}
+        }
+    });
+}
+
+#[test]
+fn prop_scheduler_conservation_under_concurrency() {
+    use fastav::coordinator::{Priority, SchedulerQueue};
+    use std::sync::Arc;
+
+    run_prop("sched_conservation", 20, |g| {
+        let q: Arc<SchedulerQueue<u64>> = Arc::new(SchedulerQueue::new(g.usize_in(1, 64)));
+        let producers = g.usize_in(1, 4);
+        let per = g.usize_in(1, 50);
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                let mut pushed = 0u64;
+                for i in 0..per {
+                    let prio = if i % 2 == 0 { Priority::High } else { Priority::Normal };
+                    if q.try_push((p * 1000 + i) as u64, prio).is_ok() {
+                        pushed += 1;
+                    }
+                }
+                pushed
+            }));
+        }
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut popped = 0u64;
+                while q.pop_blocking().is_some() {
+                    popped += 1;
+                }
+                popped
+            })
+        };
+        let pushed: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        q.close();
+        let popped = consumer.join().unwrap();
+        assert_eq!(pushed, popped);
+        let stats = q.stats();
+        assert_eq!(stats.admitted, pushed);
+        assert_eq!(stats.dequeued, popped);
+        assert_eq!(stats.admitted + stats.rejected, (producers * per) as u64);
+    });
+}

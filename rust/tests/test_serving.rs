@@ -1,0 +1,137 @@
+//! Full-stack serving tests: HTTP server → coordinator → engine → PJRT,
+//! all layers composed, exercised through real sockets.
+
+mod common;
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use fastav::coordinator::Coordinator;
+use fastav::http::{api::make_handler, request, Server};
+use fastav::model::PruningPlan;
+use fastav::tokens::Layout;
+use fastav::util::json::Json;
+
+fn layout() -> Layout {
+    Layout { frames: 2, vis_per_frame: 4, aud_len: 6, aud_per_frame: 3, interleaved: false }
+}
+
+struct Running {
+    addr: String,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    coord: Arc<Coordinator>,
+}
+
+impl Drop for Running {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn spin_up(root: std::path::PathBuf) -> Running {
+    let coord = Arc::new(Coordinator::start(root, "tiny".into(), 16, false).unwrap());
+    let handler = make_handler(
+        Arc::clone(&coord),
+        layout(),
+        PruningPlan::fastav(5, 2, 0, 20.0),
+        3,
+        1234,
+    );
+    let server = Server::bind("127.0.0.1:0", 2, handler).unwrap();
+    let addr = server.local_addr().to_string();
+    let stop = server.shutdown_handle();
+    let thread = std::thread::spawn(move || server.serve());
+    Running { addr, stop, thread: Some(thread), coord }
+}
+
+#[test]
+fn healthz_and_metrics() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+    let (code, body) = request(&run.addr, "GET", "/healthz", b"").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(body, b"ok");
+    let (code, body) = request(&run.addr, "GET", "/metrics", b"").unwrap();
+    assert_eq!(code, 200);
+    assert!(String::from_utf8_lossy(&body).contains("fastav_requests_total"));
+}
+
+#[test]
+fn generate_roundtrip_with_and_without_pruning() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+
+    let (code, body) = request(
+        &run.addr,
+        "POST",
+        "/v1/generate",
+        br#"{"dataset": "avqa", "index": 0}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let pruned_flops = j.get("relative_flops").as_f64().unwrap();
+    assert!(pruned_flops < 100.0);
+    assert!(j.get("answer").as_str().is_some());
+    assert!(j.get("subtask").as_str().is_some());
+
+    let (code, body) = request(
+        &run.addr,
+        "POST",
+        "/v1/generate",
+        br#"{"dataset": "avqa", "index": 0, "no_pruning": true}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let vanilla_flops = j.get("relative_flops").as_f64().unwrap();
+    assert!((vanilla_flops - 100.0).abs() < 1e-6);
+    assert!(pruned_flops < vanilla_flops);
+}
+
+#[test]
+fn malformed_body_is_400() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+    let (code, _) = request(&run.addr, "POST", "/v1/generate", b"{not json").unwrap();
+    assert_eq!(code, 400);
+}
+
+#[test]
+fn unknown_path_is_404() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+    let (code, _) = request(&run.addr, "GET", "/nope", b"").unwrap();
+    assert_eq!(code, 404);
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+    let addr = run.addr.clone();
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let body = format!(r#"{{"dataset": "avhbench", "index": {}}}"#, i);
+                request(&addr, "POST", "/v1/generate", body.as_bytes()).unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let (code, body) = h.join().unwrap();
+        assert!(
+            code == 200 || code == 429,
+            "unexpected status {}: {}",
+            code,
+            String::from_utf8_lossy(&body)
+        );
+    }
+    // The engine saw at least one request end-to-end.
+    assert!(run.coord.metrics.counter("fastav_requests_completed_total").get() >= 1);
+}
