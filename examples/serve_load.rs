@@ -1,7 +1,10 @@
-//! End-to-end serving validation (DESIGN.md §5): boots the full stack —
-//! HTTP server → coordinator → scheduler → engine worker → PJRT — then
-//! drives a batched client workload over real sockets and reports
-//! throughput + latency, vanilla vs FastAV.
+//! End-to-end serving benchmark: boots the full stack — HTTP server →
+//! coordinator → replica pool → step schedulers → engines → PJRT — and
+//! drives a mixed short/long workload over real sockets, once against a
+//! single replica and once against a pool of four. Reports sustained
+//! throughput and per-class latency (the pool's step scheduler should
+//! keep short-request p95 bounded even when mixed with long
+//! generations), and records the numbers in `BENCH_serving.json`.
 //!
 //! ```sh
 //! cargo run --release --example serve_load [model] [n_requests]
@@ -10,97 +13,217 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use fastav::coordinator::Coordinator;
 use fastav::http::{api::make_handler, request, Server};
-use fastav::util::bench::stats_from;
+use fastav::model::PruningPlan;
+use fastav::serving::PoolConfig;
+use fastav::tokens::Layout;
+use fastav::util::bench::{stats_from, BenchStats};
 use fastav::util::json::Json;
 use fastav::util::threadpool::ThreadPool;
 
-fn main() {
-    let model = common::model_arg();
-    let n_requests = common::n_arg(24);
+/// Short requests: an answer-length generation (≤ 8 tokens).
+const SHORT_MAX_GEN: usize = 2;
+/// Long requests: a captioning-length generation.
+const LONG_MAX_GEN: usize = 16;
+/// Every 4th request is long.
+const LONG_EVERY: usize = 4;
 
-    // Calibrate first (separate engine instance; the serving engine lives
-    // on the coordinator's thread).
-    let calib = {
-        let mut engine = common::load_engine(&model);
-        common::load_or_calibrate(&mut engine, 50)
-    };
-    let layout = {
-        let engine = common::load_engine(&model);
-        engine.cfg.layout.clone()
-    };
+struct RunResult {
+    name: &'static str,
+    replicas: usize,
+    wall: f64,
+    ok: usize,
+    rejected: usize,
+    short: BenchStats,
+    long: BenchStats,
+}
 
+impl RunResult {
+    fn throughput(&self) -> f64 {
+        self.ok as f64 / self.wall
+    }
+
+    fn to_json(&self) -> Json {
+        let lat = |s: &BenchStats| {
+            Json::obj(vec![
+                ("mean_s", Json::num(s.mean)),
+                ("p50_s", Json::num(s.p50)),
+                ("p95_s", Json::num(s.p95)),
+                ("max_s", Json::num(s.max)),
+            ])
+        };
+        Json::obj(vec![
+            ("replicas", Json::num(self.replicas as f64)),
+            ("completed", Json::num(self.ok as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("wall_s", Json::num(self.wall)),
+            ("throughput_rps", Json::num(self.throughput())),
+            ("short_latency", lat(&self.short)),
+            ("long_latency", lat(&self.long)),
+        ])
+    }
+
+    fn report(&self) {
+        println!(
+            "\n[{}] {} replica(s): {} ok / {} rejected in {:.2}s — {:.2} req/s",
+            self.name, self.replicas, self.ok, self.rejected, self.wall, self.throughput()
+        );
+        self.short.report();
+        self.long.report();
+    }
+}
+
+fn drive(
+    name: &'static str,
+    replicas: usize,
+    model: &str,
+    n_requests: usize,
+    plan: PruningPlan,
+    layout: Layout,
+) -> RunResult {
+    let cfg = PoolConfig {
+        replicas,
+        queue_cap: 256,
+        max_inflight: 4,
+        warmup: true,
+        ..Default::default()
+    };
     let coord = Arc::new(
-        Coordinator::start(common::artifact_root(), model.clone(), 128, true)
-            .expect("coordinator"),
+        Coordinator::start_pool(common::artifact_root(), model.to_string(), cfg)
+            .expect("start pool"),
     );
-    let handler = make_handler(Arc::clone(&coord), layout, calib.plan(20.0), 4, 1234);
+    // The handler cap is the long-request length; each request asks for
+    // its own max_gen below it.
+    let handler = make_handler(Arc::clone(&coord), layout, plan, LONG_MAX_GEN, 1234);
     let server = Server::bind("127.0.0.1:0", 8, handler).expect("bind");
     let addr = server.local_addr().to_string();
     let stop = server.shutdown_handle();
     let server_thread = std::thread::spawn(move || server.serve());
-    println!("serving {} at {} — driving {} requests per mode", model, addr, n_requests);
 
     let datasets = ["avqa", "musicavqa", "avhbench"];
-    for (mode, no_pruning) in [("fastav", false), ("vanilla", true)] {
-        let latencies = Arc::new(Mutex::new(Vec::new()));
-        let correct = Arc::new(std::sync::atomic::AtomicUsize::new(0));
-        let flops = Arc::new(Mutex::new(Vec::new()));
-        let pool = ThreadPool::new(6);
-        let t0 = Instant::now();
-        for i in 0..n_requests {
-            let addr = addr.clone();
-            let latencies = Arc::clone(&latencies);
-            let correct = Arc::clone(&correct);
-            let flops = Arc::clone(&flops);
-            let ds = datasets[i % datasets.len()];
-            pool.execute(move || {
-                let body = format!(
-                    r#"{{"dataset": "{}", "index": {}, "no_pruning": {}}}"#,
-                    ds, i, no_pruning
-                );
-                let t = Instant::now();
-                match request(&addr, "POST", "/v1/generate", body.as_bytes()) {
-                    Ok((200, resp)) => {
-                        latencies.lock().unwrap().push(t.elapsed().as_secs_f64());
-                        if let Ok(j) = Json::parse(std::str::from_utf8(&resp).unwrap_or("")) {
-                            if j.get("correct").as_bool() == Some(true) {
-                                correct.fetch_add(1, Ordering::Relaxed);
-                            }
-                            if let Some(f) = j.get("relative_flops").as_f64() {
-                                flops.lock().unwrap().push(f);
-                            }
-                        }
-                    }
-                    Ok((code, _)) => eprintln!("request {} -> {}", i, code),
-                    Err(e) => eprintln!("request {} failed: {}", i, e),
+    let short_lat = Arc::new(Mutex::new(Vec::new()));
+    let long_lat = Arc::new(Mutex::new(Vec::new()));
+    let ok = Arc::new(AtomicUsize::new(0));
+    let rejected = Arc::new(AtomicUsize::new(0));
+    let clients = ThreadPool::new(8);
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let addr = addr.clone();
+        let short_lat = Arc::clone(&short_lat);
+        let long_lat = Arc::clone(&long_lat);
+        let ok = Arc::clone(&ok);
+        let rejected = Arc::clone(&rejected);
+        let ds = datasets[i % datasets.len()];
+        let is_long = i % LONG_EVERY == LONG_EVERY - 1;
+        clients.execute(move || {
+            let max_gen = if is_long { LONG_MAX_GEN } else { SHORT_MAX_GEN };
+            let body = format!(
+                r#"{{"dataset": "{}", "index": {}, "max_gen": {}}}"#,
+                ds, i, max_gen
+            );
+            let t = Instant::now();
+            match request(&addr, "POST", "/v1/generate", body.as_bytes()) {
+                Ok((200, _)) => {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                    let sink = if is_long { &long_lat } else { &short_lat };
+                    sink.lock().unwrap().push(t.elapsed().as_secs_f64());
                 }
-            });
-        }
-        pool.wait_idle();
-        let wall = t0.elapsed().as_secs_f64();
-        let lat = latencies.lock().unwrap().clone();
-        let fl = flops.lock().unwrap();
-        let mean_flops = fl.iter().sum::<f64>() / fl.len().max(1) as f64;
-        let stats = stats_from(&format!("{} end-to-end latency", mode), lat);
-        println!(
-            "\n[{}] {}/{} ok, accuracy {:.1}%, throughput {:.2} req/s, mean rel-FLOPs {:.1}",
-            mode,
-            stats.iters,
-            n_requests,
-            100.0 * correct.load(Ordering::Relaxed) as f64 / n_requests as f64,
-            stats.iters as f64 / wall,
-            mean_flops,
-        );
-        stats.report();
+                Ok((429, _)) => {
+                    rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok((code, resp)) => {
+                    eprintln!("request {} -> {}: {}", i, code, String::from_utf8_lossy(&resp))
+                }
+                Err(e) => eprintln!("request {} failed: {}", i, e),
+            }
+        });
     }
+    clients.wait_idle();
+    let wall = t0.elapsed().as_secs_f64();
 
-    println!("\nserver metrics:\n{}", coord.metrics.export());
+    for r in coord.pool_status() {
+        println!(
+            "  replica {}: {} completed, {} steps, peak-ish kv {} bytes",
+            r.id, r.completed, r.steps_total, r.kv_bytes
+        );
+    }
     stop.store(true, Ordering::SeqCst);
     let _ = server_thread.join();
+
+    let short = short_lat.lock().unwrap().clone();
+    let long = long_lat.lock().unwrap().clone();
+    let ok = ok.load(Ordering::Relaxed);
+    if ok == 0 {
+        eprintln!(
+            "no request succeeded against {} — is the engine backend available? \
+             (vendored xla stub cannot execute artifacts)",
+            name
+        );
+        std::process::exit(1);
+    }
+    RunResult {
+        name,
+        replicas,
+        wall,
+        ok,
+        rejected: rejected.load(Ordering::Relaxed),
+        short: lat_stats(&format!("{} short (max_gen {})", name, SHORT_MAX_GEN), short),
+        long: lat_stats(&format!("{} long  (max_gen {})", name, LONG_MAX_GEN), long),
+    }
+}
+
+/// `stats_from` that tolerates an empty class (e.g. every long request
+/// rejected) instead of panicking after the workload ran.
+fn lat_stats(name: &str, samples: Vec<f64>) -> BenchStats {
+    if samples.is_empty() {
+        eprintln!("warning: no successful samples for {}", name);
+        return stats_from(name, vec![0.0]);
+    }
+    stats_from(name, samples)
+}
+
+fn main() {
+    let model = common::model_arg();
+    let n_requests = common::n_arg(48).max(8);
+
+    // Calibrate once (separate engine instance; serving engines live on
+    // their replica threads), and grab the layout for request assembly.
+    let (plan, layout) = {
+        let mut engine = common::load_engine(&model);
+        let calib = common::load_or_calibrate(&mut engine, 50);
+        (calib.plan(20.0), engine.cfg.layout.clone())
+    };
+
+    println!(
+        "driving {} requests ({} short : 1 long) per configuration against {}",
+        n_requests,
+        LONG_EVERY - 1,
+        model
+    );
+    let single = drive("single", 1, &model, n_requests, plan.clone(), layout.clone());
+    single.report();
+    let pool4 = drive("pool4", 4, &model, n_requests, plan, layout);
+    pool4.report();
+
+    let speedup = pool4.throughput() / single.throughput().max(1e-12);
+    println!("\npool-of-4 vs single-worker throughput: {:.2}x", speedup);
+
+    let out = Json::obj(vec![
+        ("benchmark", Json::str("serve_load")),
+        ("model", Json::str(&model)),
+        ("n_requests", Json::num(n_requests as f64)),
+        ("short_max_gen", Json::num(SHORT_MAX_GEN as f64)),
+        ("long_max_gen", Json::num(LONG_MAX_GEN as f64)),
+        ("single", single.to_json()),
+        ("pool4", pool4.to_json()),
+        ("throughput_speedup", Json::num(speedup)),
+        ("measured", Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_serving.json", out.to_string() + "\n").expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json");
 }

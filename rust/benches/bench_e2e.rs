@@ -1,12 +1,15 @@
 //! End-to-end generation latency (Table 1's latency/memory columns) plus
 //! long-context scaling (vl2sim_long, 512-token prompts) where pruning
-//! wins grow with sequence length.
+//! wins grow with sequence length, and a serving comparison: one
+//! blocking replica vs a pool of four with iteration-level scheduling.
 
 #[path = "bench_common/mod.rs"]
 mod bench_common;
 
 use fastav::avsynth::{gen_sample, Dataset};
+use fastav::coordinator::{Coordinator, Event, GenRequest, Priority};
 use fastav::model::{GenerateOptions, PruningPlan, RequestInput};
+use fastav::serving::PoolConfig;
 use fastav::util::bench::stats_from;
 
 fn run_model(model: &str) {
@@ -42,9 +45,89 @@ fn run_model(model: &str) {
     }
 }
 
+/// Throughput of the serving path: 16 mixed short/long requests pushed
+/// at once, single replica vs pool of four.
+fn run_pool_comparison(model: &str) {
+    let Some(mut probe) = bench_common::try_engine(model) else { return };
+    let calib = bench_common::load_or_calibrate(&mut probe, 30);
+    let layout = probe.cfg.layout.clone();
+    drop(probe); // serving engines live on their replica threads
+
+    println!("\n-- {} serving throughput (12 short + 4 long requests) --", model);
+    let mut single_rps = 0.0;
+    for (tag, replicas) in [("single", 1usize), ("pool4", 4usize)] {
+        let coord = Coordinator::start_pool(
+            bench_common::artifact_root(),
+            model.to_string(),
+            PoolConfig {
+                replicas,
+                queue_cap: 128,
+                max_inflight: 4,
+                warmup: true,
+                ..Default::default()
+            },
+        )
+        .expect("start pool");
+        let n = 16;
+        let t0 = std::time::Instant::now();
+        let receivers: Vec<_> = (0..n)
+            .map(|i| {
+                let s = gen_sample(&layout, Dataset::AvhBench, i as u64, 1234);
+                let req = GenRequest {
+                    prompt: s.prompt,
+                    segments: s.segments,
+                    frame_of: s.frame_of,
+                    opts: GenerateOptions {
+                        plan: calib.plan(20.0),
+                        max_gen: if i % 4 == 3 { 16 } else { 2 },
+                        ..Default::default()
+                    },
+                    priority: Priority::Normal,
+                    deadline: None,
+                };
+                coord.submit(req).expect("submit")
+            })
+            .collect();
+        let mut failures = 0;
+        for rx in receivers {
+            for ev in rx {
+                match ev {
+                    Event::Done(_) => break,
+                    Event::Error(_) => {
+                        failures += 1;
+                        break;
+                    }
+                    Event::Token(_) => {}
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = (n - failures) as f64 / wall;
+        if replicas == 1 {
+            single_rps = rps;
+        }
+        println!(
+            "    {:<7} {} ok / {} failed in {:6.2}s — {:6.2} req/s{}",
+            tag,
+            n - failures,
+            failures,
+            wall,
+            rps,
+            if replicas > 1 && single_rps > 0.0 {
+                format!("  ({:.2}x vs single)", rps / single_rps)
+            } else {
+                String::new()
+            }
+        );
+        coord.shutdown();
+    }
+}
+
 fn main() {
     println!("== end-to-end generation latency ==");
     run_model("vl2sim");
     run_model("salmsim");
     run_model("vl2sim_long"); // long-context scaling
+    println!("\n== serving: replica pool vs single worker ==");
+    run_pool_comparison("vl2sim");
 }

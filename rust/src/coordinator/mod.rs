@@ -1,35 +1,38 @@
-//! L3 coordinator: admission, scheduling, and the engine worker loop.
+//! L3 coordinator: the serving facade over the replica pool.
 //!
-//! Architecture (vLLM-router-shaped, scaled to this substrate):
+//! Architecture (continuous-batching, scaled to this substrate):
 //!
 //! ```text
-//!   clients ──► Coordinator::submit ──► SchedulerQueue (bounded, 2-class)
-//!                                            │ pop_blocking
-//!                                       engine worker thread
-//!                                       (owns ModelEngine — PJRT handles
-//!                                        are not Send; one thread owns
-//!                                        all device interaction)
-//!                                            │ per-token stream + final
-//!                                       mpsc back to the caller
+//!   clients ──► Coordinator::submit ──► ReplicaPool (least-loaded dispatch)
+//!                                            │ per-replica SchedulerQueue
+//!                                       replica threads (each owns a
+//!                                       ModelEngine — PJRT handles are
+//!                                       not Send; one thread per engine)
+//!                                            │ step scheduler interleaves
+//!                                            │ prefill layers/decode steps
+//!                                       per-token stream + final mpsc
+//!                                       back to the caller
 //! ```
 //!
-//! Backpressure: a full queue rejects at admission (HTTP 429 upstream).
-//! Shutdown: closing the queue drains in-flight work, then the worker
-//! exits and `join` completes.
+//! Backpressure: full queues reject at admission (HTTP 429 upstream);
+//! closed queues reject as shutting-down (HTTP 503). Shutdown drains
+//! in-flight work, then the replicas exit and `join` completes. The
+//! single-worker constructor [`Coordinator::start`] is the historical
+//! surface — it builds a pool of one replica.
 
 pub mod scheduler;
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-pub use scheduler::{Priority, SchedStats, SchedulerQueue};
+pub use scheduler::{Priority, PushError, SchedStats, SchedulerQueue};
 
 use crate::metrics::Registry;
-use crate::model::{GenerateOptions, GenerateResult, ModelEngine, RequestInput};
+use crate::model::{GenerateOptions, GenerateResult};
+use crate::serving::{PoolConfig, PoolStats, ReplicaPool, ReplicaStatus, SubmitError};
 use crate::tokens::Segment;
 
 /// A generation request (owned data — crosses threads).
@@ -40,6 +43,9 @@ pub struct GenRequest {
     pub frame_of: Vec<i32>,
     pub opts: GenerateOptions,
     pub priority: Priority,
+    /// Optional per-request deadline, measured from submission; an
+    /// expired request aborts between scheduling quanta.
+    pub deadline: Option<Duration>,
 }
 
 /// Streaming events delivered to the submitter.
@@ -49,122 +55,68 @@ pub enum Event {
     Token(u32),
     /// Generation finished; full result attached.
     Done(Box<GenerateResult>),
-    /// Generation failed.
+    /// Generation failed, was canceled, or missed its deadline.
     Error(String),
-}
-
-struct Job {
-    id: u64,
-    req: GenRequest,
-    enqueued: Instant,
-    events: Sender<Event>,
 }
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
-    queue: Arc<SchedulerQueue<Job>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    pool: ReplicaPool,
     pub metrics: Arc<Registry>,
-    next_id: AtomicU64,
 }
 
 impl Coordinator {
-    /// Start a coordinator over one engine worker thread.
+    /// Start a coordinator over a single engine replica (the historical
+    /// one-worker surface; see [`Coordinator::start_pool`]).
     ///
-    /// `artifact_root`/`model` locate the AOT artifacts; `queue_cap` bounds
-    /// admission (backpressure). The engine is constructed *on* the worker
-    /// thread (PJRT handles never cross threads).
+    /// `artifact_root`/`model` locate the AOT artifacts; `queue_cap`
+    /// bounds admission (backpressure).
     pub fn start(
         artifact_root: std::path::PathBuf,
         model: String,
         queue_cap: usize,
         warmup: bool,
     ) -> Result<Coordinator> {
-        let queue: Arc<SchedulerQueue<Job>> = Arc::new(SchedulerQueue::new(queue_cap));
-        let metrics = Arc::new(Registry::default());
-        // Pre-register the serving metrics so /metrics is complete from
-        // the first scrape, before any traffic.
-        for c in [
-            "fastav_requests_total",
-            "fastav_requests_rejected_total",
-            "fastav_requests_completed_total",
-            "fastav_requests_failed_total",
-            "fastav_tokens_generated_total",
-        ] {
-            metrics.counter(c);
-        }
-        metrics.gauge("fastav_queue_depth");
-        metrics.gauge("fastav_kv_peak_bytes");
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-
-        let worker = {
-            let queue = Arc::clone(&queue);
-            let metrics = Arc::clone(&metrics);
-            std::thread::Builder::new()
-                .name("engine-worker".into())
-                .spawn(move || {
-                    let mut engine = match ModelEngine::load(&artifact_root, &model) {
-                        Ok(e) => e,
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(format!("engine load: {:#}", e)));
-                            return;
-                        }
-                    };
-                    if warmup {
-                        if let Err(e) = engine.warmup() {
-                            let _ = ready_tx.send(Err(format!("warmup: {:#}", e)));
-                            return;
-                        }
-                    }
-                    let _ = ready_tx.send(Ok(()));
-                    worker_loop(&mut engine, &queue, &metrics);
-                })
-                .map_err(|e| anyhow!("spawn engine worker: {}", e))?
-        };
-
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(msg)) => {
-                return Err(anyhow!(msg));
-            }
-            Err(_) => return Err(anyhow!("engine worker died during startup")),
-        }
-
-        Ok(Coordinator {
-            queue,
-            worker: Some(worker),
-            metrics,
-            next_id: AtomicU64::new(1),
-        })
+        Self::start_pool(
+            artifact_root,
+            model,
+            PoolConfig { replicas: 1, queue_cap, warmup, ..PoolConfig::default() },
+        )
     }
 
-    /// Submit a request; returns the streaming event receiver, or the
-    /// request back when the queue is full (backpressure).
-    pub fn submit(&self, req: GenRequest) -> Result<Receiver<Event>, GenRequest> {
-        let (tx, rx) = channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let prio = req.priority;
-        let job = Job { id, req, enqueued: Instant::now(), events: tx };
-        self.metrics.counter("fastav_requests_total").inc();
-        match self.queue.try_push(job, prio) {
-            Ok(()) => {
-                self.metrics
-                    .gauge("fastav_queue_depth")
-                    .set(self.queue.len() as u64);
-                Ok(rx)
-            }
-            Err(job) => {
-                self.metrics.counter("fastav_requests_rejected_total").inc();
-                Err(job.req)
-            }
-        }
+    /// Start a coordinator over a replica pool. Engines are constructed
+    /// on their replica threads (PJRT handles never cross threads).
+    pub fn start_pool(
+        artifact_root: std::path::PathBuf,
+        model: String,
+        cfg: PoolConfig,
+    ) -> Result<Coordinator> {
+        let metrics = Arc::new(Registry::default());
+        let pool = ReplicaPool::start(artifact_root, model, cfg, Arc::clone(&metrics))?;
+        Ok(Coordinator { pool, metrics })
+    }
+
+    /// Submit a request; returns the streaming event receiver, or a
+    /// [`SubmitError`] carrying the request back on backpressure.
+    pub fn submit(&self, req: GenRequest) -> Result<Receiver<Event>, SubmitError> {
+        self.submit_with_id(req).map(|(_, rx)| rx)
+    }
+
+    /// [`Self::submit`], also returning the request id usable with
+    /// [`Self::cancel`].
+    pub fn submit_with_id(
+        &self,
+        req: GenRequest,
+    ) -> Result<(u64, Receiver<Event>), SubmitError> {
+        self.pool.submit(req)
     }
 
     /// Submit and wait for the final result (drops streamed tokens).
     pub fn submit_blocking(&self, req: GenRequest) -> Result<GenerateResult> {
-        let rx = self
-            .submit(req)
-            .map_err(|_| anyhow!("queue full (backpressure)"))?;
+        let rx = self.submit(req).map_err(|e| match e {
+            SubmitError::Full(_) => anyhow!("queue full (backpressure)"),
+            SubmitError::Closed(_) => anyhow!("shutting down"),
+        })?;
         for ev in rx {
             match ev {
                 Event::Token(_) => {}
@@ -175,72 +127,38 @@ impl Coordinator {
         Err(anyhow!("worker dropped the request"))
     }
 
+    /// Cooperatively cancel a submitted request by id.
+    pub fn cancel(&self, id: u64) -> bool {
+        self.pool.cancel(id)
+    }
+
     pub fn queue_depth(&self) -> usize {
-        self.queue.len()
+        self.pool.queue_depth()
     }
 
+    /// Aggregate queue counters (admitted/rejected/dequeued).
     pub fn sched_stats(&self) -> SchedStats {
-        self.queue.stats()
+        self.pool.sched_stats()
     }
 
-    /// Drain and stop the worker.
-    pub fn shutdown(mut self) {
-        self.queue.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+    /// Pool-wide conservation ledger.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
-}
 
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        self.queue.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+    /// Per-replica status snapshots.
+    pub fn pool_status(&self) -> Vec<ReplicaStatus> {
+        self.pool.status()
     }
-}
 
-fn worker_loop(engine: &mut ModelEngine, queue: &SchedulerQueue<Job>, metrics: &Registry) {
-    let queue_hist = metrics.histogram("fastav_queue_seconds");
-    let gen_hist = metrics.histogram("fastav_generate_seconds");
-    let prefill_hist = metrics.histogram("fastav_prefill_seconds");
-    let tok_hist = metrics.histogram("fastav_decode_token_seconds");
-    let completed = metrics.counter("fastav_requests_completed_total");
-    let failed = metrics.counter("fastav_requests_failed_total");
-    let tokens_out = metrics.counter("fastav_tokens_generated_total");
-    let kv_peak = metrics.gauge("fastav_kv_peak_bytes");
+    pub fn replica_count(&self) -> usize {
+        self.pool.replica_count()
+    }
 
-    while let Some(job) = queue.pop_blocking() {
-        let _ = job.id;
-        queue_hist.observe(job.enqueued.elapsed().as_secs_f64());
-        let t0 = Instant::now();
-        let input = RequestInput {
-            prompt: &job.req.prompt,
-            segments: &job.req.segments,
-            frame_of: &job.req.frame_of,
-        };
-        let events = job.events;
-        let result = engine.generate_with(&input, &job.req.opts, |tok| {
-            let _ = events.send(Event::Token(tok));
-        });
-        gen_hist.observe(t0.elapsed().as_secs_f64());
-        match result {
-            Ok(res) => {
-                completed.inc();
-                tokens_out.add(res.tokens.len() as u64);
-                prefill_hist.observe(res.prefill_seconds);
-                if res.decode_steps > 0 {
-                    tok_hist.observe(res.decode_seconds / res.decode_steps as f64);
-                }
-                kv_peak.max(res.peak_kv_bytes as u64);
-                let _ = events.send(Event::Done(Box::new(res)));
-            }
-            Err(e) => {
-                failed.inc();
-                let _ = events.send(Event::Error(format!("{:#}", e)));
-            }
-        }
+    /// Drain and stop every replica.
+    pub fn shutdown(self) {
+        // ReplicaPool::drop closes the queues and joins the threads;
+        // consuming self here makes the drain explicit at call sites.
     }
 }
 
@@ -262,6 +180,16 @@ mod tests {
             "ghost".into(),
             4,
             false,
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn pool_startup_fails_cleanly_on_missing_artifacts() {
+        let err = Coordinator::start_pool(
+            std::path::PathBuf::from("/nonexistent"),
+            "ghost".into(),
+            PoolConfig { replicas: 3, ..PoolConfig::default() },
         );
         assert!(err.is_err());
     }

@@ -18,6 +18,43 @@ pub enum Priority {
     Normal,
 }
 
+/// Why an admission failed. The HTTP layer maps `Full` to 429 (+
+/// `Retry-After`) and `Closed` to 503; both return the item so callers
+/// can retry elsewhere (e.g. another replica's queue).
+pub enum PushError<T> {
+    /// At capacity — backpressure; retrying later can succeed.
+    Full(T),
+    /// Closed for shutdown; retrying can never succeed.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(t) | PushError::Closed(t) => t,
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        matches!(self, PushError::Closed(_))
+    }
+}
+
+// Manual impl: `T` (a queued job) need not be Debug for `unwrap()` at
+// call sites to work.
+impl<T> std::fmt::Debug for PushError<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PushError::Full(_) => write!(f, "PushError::Full"),
+            PushError::Closed(_) => write!(f, "PushError::Closed"),
+        }
+    }
+}
+
+/// Every `FAIR_EVERY`-th fair dequeue serves the Normal class first, so
+/// a sustained High-priority stream cannot starve Normal admissions.
+pub const FAIR_EVERY: u64 = 4;
+
 /// Counters for the conservation invariant.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct SchedStats {
@@ -54,13 +91,18 @@ impl<T> SchedulerQueue<T> {
         }
     }
 
-    /// Admit a request; `Err(item)` when the queue is full or closed
-    /// (backpressure — the caller turns this into HTTP 429/503).
-    pub fn try_push(&self, item: T, prio: Priority) -> Result<(), T> {
+    /// Admit a request; fails with [`PushError::Full`] at capacity
+    /// (backpressure → HTTP 429) or [`PushError::Closed`] during
+    /// shutdown (→ HTTP 503). The item rides back in the error.
+    pub fn try_push(&self, item: T, prio: Priority) -> Result<(), PushError<T>> {
         let mut g = self.inner.lock().unwrap();
-        if g.closed || g.high.len() + g.normal.len() >= self.capacity {
+        if g.closed {
             g.stats.rejected += 1;
-            return Err(item);
+            return Err(PushError::Closed(item));
+        }
+        if g.high.len() + g.normal.len() >= self.capacity {
+            g.stats.rejected += 1;
+            return Err(PushError::Full(item));
         }
         match prio {
             Priority::High => g.high.push_back(item),
@@ -96,6 +138,29 @@ impl<T> SchedulerQueue<T> {
             g.stats.dequeued += 1;
         }
         item
+    }
+
+    /// Non-blocking pop with anti-starvation: High first, except every
+    /// [`FAIR_EVERY`]-th dequeue serves Normal first. Replica admission
+    /// loops use this so a saturating High stream cannot starve Normal
+    /// requests out of the step scheduler.
+    pub fn try_pop_fair(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let normal_first = g.stats.dequeued % FAIR_EVERY == FAIR_EVERY - 1;
+        let item = if normal_first {
+            g.normal.pop_front().or_else(|| g.high.pop_front())
+        } else {
+            g.high.pop_front().or_else(|| g.normal.pop_front())
+        };
+        if item.is_some() {
+            g.stats.dequeued += 1;
+        }
+        item
+    }
+
+    /// Whether `close` has been called (new pushes will fail).
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
     }
 
     pub fn len(&self) -> usize {
@@ -181,6 +246,35 @@ mod tests {
         assert!(q.try_push(2, Priority::Normal).is_err());
         assert_eq!(q.pop_blocking(), Some(1));
         assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn full_vs_closed_push_errors() {
+        let q = SchedulerQueue::new(1);
+        q.try_push(1, Priority::Normal).unwrap();
+        assert!(matches!(q.try_push(2, Priority::Normal), Err(PushError::Full(2))));
+        q.close();
+        assert!(matches!(q.try_push(3, Priority::Normal), Err(PushError::Closed(3))));
+        assert_eq!(q.stats().rejected, 2);
+    }
+
+    #[test]
+    fn fair_pop_bounds_normal_wait() {
+        let q = SchedulerQueue::new(64);
+        for i in 0..12 {
+            q.try_push(i, Priority::High).unwrap();
+        }
+        q.try_push(100, Priority::Normal).unwrap();
+        let mut order = Vec::new();
+        while let Some(v) = q.try_pop_fair() {
+            order.push(v);
+        }
+        let pos = order.iter().position(|&v| v == 100).unwrap();
+        assert!(
+            pos < FAIR_EVERY as usize,
+            "normal item starved to position {}",
+            pos
+        );
     }
 
     #[test]

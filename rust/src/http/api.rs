@@ -3,22 +3,35 @@
 //!
 //! Endpoints:
 //! * `POST /v1/generate` — body `{"dataset": "...", "index": N,
-//!   "no_pruning": bool}`; generates the avsynth sample's answer and
-//!   returns tokens + efficiency metrics.
+//!   "no_pruning": bool, "priority": "high"?, "max_gen": N?,
+//!   "deadline_ms": N?}`; generates the avsynth sample's answer and
+//!   returns tokens + efficiency metrics + the pool request id.
+//! * `POST /v1/cancel` — body `{"request_id": N}`; cooperative
+//!   cancellation of a queued or running request.
+//! * `GET /v1/pool` — per-replica status + the pool conservation ledger.
 //! * `GET /metrics` — Prometheus text exposition.
 //! * `GET /healthz` — liveness.
+//!
+//! Backpressure mapping: a full queue is `429` with `Retry-After`; a
+//! shutting-down pool is `503`. Every response echoes the client's
+//! `x-request-id` header (or the pool-assigned id on generate) for
+//! request tracing.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::{Handler, Request, Response};
 use crate::avsynth::{gen_sample, Dataset};
-use crate::coordinator::{Coordinator, GenRequest, Priority};
+use crate::coordinator::{Coordinator, Event, GenRequest, Priority};
 use crate::eval::exact_match;
 use crate::model::{GenerateOptions, PruningPlan};
+use crate::serving::SubmitError;
 use crate::tokens::{render_answer, Layout};
 use crate::util::json::Json;
 
-/// Build the request handler for a running coordinator.
+/// Build the request handler for a running coordinator. `max_gen` is
+/// the operator-configured generation cap: the default for requests
+/// that don't ask, and the ceiling for requests that do.
 pub fn make_handler(
     coord: Arc<Coordinator>,
     layout: Layout,
@@ -26,7 +39,21 @@ pub fn make_handler(
     max_gen: usize,
     base_seed: u64,
 ) -> Handler {
-    Arc::new(move |req: &Request| route(req, &coord, &layout, &plan, max_gen, base_seed))
+    Arc::new(move |req: &Request| {
+        let resp = route(req, &coord, &layout, &plan, max_gen, base_seed);
+        echo_request_id(req, resp)
+    })
+}
+
+/// Echo the client's `x-request-id` unless the handler already set one
+/// (generate sets the pool-assigned id when the client sent none).
+fn echo_request_id(req: &Request, resp: Response) -> Response {
+    match req.header("x-request-id") {
+        Some(v) if !resp.headers.iter().any(|(k, _)| k == "x-request-id") => {
+            resp.with_header("x-request-id", v)
+        }
+        _ => resp,
+    }
 }
 
 fn route(
@@ -40,10 +67,68 @@ fn route(
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Response::text(200, "ok"),
         ("GET", "/metrics") => Response::text(200, &coord.metrics.export()),
+        ("GET", "/v1/pool") => pool_status(coord),
         ("POST", "/v1/generate") => generate(req, coord, layout, plan, max_gen, base_seed),
+        ("POST", "/v1/cancel") => cancel(req, coord),
         ("GET", _) | ("POST", _) => Response::text(404, "not found"),
         _ => Response::text(405, "method not allowed"),
     }
+}
+
+fn parse_body(req: &Request) -> Result<Json, Response> {
+    std::str::from_utf8(&req.body)
+        .map_err(|_| ())
+        .and_then(|s| Json::parse(s).map_err(|_| ()))
+        .map_err(|_| Response::text(400, "invalid JSON body"))
+}
+
+fn pool_status(coord: &Coordinator) -> Response {
+    let replicas = coord.pool_status().into_iter().map(|r| {
+        Json::obj(vec![
+            ("id", Json::num(r.id as f64)),
+            ("queued", Json::num(r.queued as f64)),
+            ("active", Json::num(r.active as f64)),
+            ("kv_bytes", Json::num(r.kv_bytes as f64)),
+            ("kv_budget_bytes", Json::num(r.kv_budget_bytes as f64)),
+            ("steps_total", Json::num(r.steps_total as f64)),
+            ("steps_per_sec", Json::num(r.steps_per_sec as f64)),
+            ("completed", Json::num(r.completed as f64)),
+        ])
+    });
+    let s = coord.pool_stats();
+    let out = Json::obj(vec![
+        ("replicas", Json::arr(replicas)),
+        (
+            "stats",
+            Json::obj(vec![
+                ("submitted", Json::num(s.submitted as f64)),
+                ("rejected", Json::num(s.rejected as f64)),
+                ("completed", Json::num(s.completed as f64)),
+                ("failed", Json::num(s.failed as f64)),
+                ("canceled", Json::num(s.canceled as f64)),
+                ("expired", Json::num(s.expired as f64)),
+                ("in_queue", Json::num(s.in_queue as f64)),
+                ("in_flight", Json::num(s.in_flight as f64)),
+            ]),
+        ),
+    ]);
+    Response::json(200, out.to_string())
+}
+
+fn cancel(req: &Request, coord: &Coordinator) -> Response {
+    let body = match parse_body(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let Some(id) = body.get("request_id").as_usize() else {
+        return Response::text(400, "request_id (integer) required");
+    };
+    let found = coord.cancel(id as u64);
+    let out = Json::obj(vec![
+        ("request_id", Json::num(id as f64)),
+        ("canceled", Json::Bool(found)),
+    ]);
+    Response::json(if found { 200 } else { 404 }, out.to_string())
 }
 
 fn generate(
@@ -54,12 +139,9 @@ fn generate(
     max_gen: usize,
     base_seed: u64,
 ) -> Response {
-    let body = match std::str::from_utf8(&req.body)
-        .map_err(|_| ())
-        .and_then(|s| Json::parse(s).map_err(|_| ()))
-    {
+    let body = match parse_body(req) {
         Ok(j) => j,
-        Err(_) => return Response::text(400, "invalid JSON body"),
+        Err(resp) => return resp,
     };
     let dataset = body
         .get("dataset")
@@ -69,6 +151,15 @@ fn generate(
     let index = body.get("index").as_usize().unwrap_or(0) as u64;
     let vanilla = body.get("no_pruning").as_bool().unwrap_or(false);
     let high_priority = body.get("priority").as_str() == Some("high");
+    let req_max_gen = body
+        .get("max_gen")
+        .as_usize()
+        .map(|n| n.clamp(1, max_gen))
+        .unwrap_or(max_gen);
+    let deadline = body
+        .get("deadline_ms")
+        .as_usize()
+        .map(|ms| Duration::from_millis(ms as u64));
     let sample = gen_sample(layout, dataset, index, base_seed);
     let request = GenRequest {
         prompt: sample.prompt.clone(),
@@ -76,31 +167,54 @@ fn generate(
         frame_of: sample.frame_of.clone(),
         opts: GenerateOptions {
             plan: if vanilla { PruningPlan::vanilla() } else { plan.clone() },
-            max_gen,
+            max_gen: req_max_gen,
             ..Default::default()
         },
         priority: if high_priority { Priority::High } else { Priority::Normal },
+        deadline,
     };
-    match coord.submit_blocking(request) {
-        Ok(res) => {
-            let correct = exact_match(&res.tokens, &sample.answer);
-            let out = Json::obj(vec![
-                ("answer", Json::str(&render_answer(&res.tokens))),
-                ("expected", Json::str(&render_answer(&sample.answer))),
-                ("correct", Json::Bool(correct)),
-                ("subtask", Json::str(sample.subtask.name())),
-                (
-                    "tokens",
-                    Json::arr(res.tokens.iter().map(|&t| Json::num(t as f64))),
-                ),
-                ("relative_flops", Json::num(res.relative_flops)),
-                ("prefill_seconds", Json::num(res.prefill_seconds)),
-                ("decode_seconds", Json::num(res.decode_seconds)),
-                ("peak_kv_bytes", Json::num(res.peak_kv_bytes as f64)),
-            ]);
-            Response::json(200, out.to_string())
+    let (id, rx) = match coord.submit_with_id(request) {
+        Ok(ok) => ok,
+        Err(SubmitError::Full(_)) => {
+            return Response::text(429, "queue full").with_header("retry-after", "1")
         }
-        Err(e) if format!("{}", e).contains("backpressure") => Response::text(429, "queue full"),
-        Err(e) => Response::text(500, &format!("{:#}", e)),
+        Err(SubmitError::Closed(_)) => {
+            return Response::text(503, "shutting down")
+        }
+    };
+    // Echo the client's trace id verbatim when it sent one; otherwise
+    // surface the pool-assigned id (also in the JSON, for /v1/cancel).
+    let id_str = req
+        .header("x-request-id")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| id.to_string());
+    for ev in rx {
+        match ev {
+            Event::Token(_) => {}
+            Event::Done(res) => {
+                let correct = exact_match(&res.tokens, &sample.answer);
+                let out = Json::obj(vec![
+                    ("request_id", Json::num(id as f64)),
+                    ("answer", Json::str(&render_answer(&res.tokens))),
+                    ("expected", Json::str(&render_answer(&sample.answer))),
+                    ("correct", Json::Bool(correct)),
+                    ("subtask", Json::str(sample.subtask.name())),
+                    (
+                        "tokens",
+                        Json::arr(res.tokens.iter().map(|&t| Json::num(t as f64))),
+                    ),
+                    ("relative_flops", Json::num(res.relative_flops)),
+                    ("prefill_seconds", Json::num(res.prefill_seconds)),
+                    ("decode_seconds", Json::num(res.decode_seconds)),
+                    ("peak_kv_bytes", Json::num(res.peak_kv_bytes as f64)),
+                ]);
+                return Response::json(200, out.to_string())
+                    .with_header("x-request-id", &id_str);
+            }
+            Event::Error(e) => {
+                return Response::text(500, &e).with_header("x-request-id", &id_str)
+            }
+        }
     }
+    Response::text(500, "worker dropped the request").with_header("x-request-id", &id_str)
 }

@@ -40,15 +40,33 @@ pub struct Response {
     pub status: u16,
     pub content_type: String,
     pub body: Vec<u8>,
+    /// Extra headers (lowercase names), e.g. `retry-after`, `x-request-id`.
+    pub headers: Vec<(String, String)>,
 }
 
 impl Response {
     pub fn json(status: u16, body: String) -> Response {
-        Response { status, content_type: "application/json".into(), body: body.into_bytes() }
+        Response {
+            status,
+            content_type: "application/json".into(),
+            body: body.into_bytes(),
+            headers: Vec::new(),
+        }
     }
 
     pub fn text(status: u16, body: &str) -> Response {
-        Response { status, content_type: "text/plain".into(), body: body.as_bytes().to_vec() }
+        Response {
+            status,
+            content_type: "text/plain".into(),
+            body: body.as_bytes().to_vec(),
+            headers: Vec::new(),
+        }
+    }
+
+    /// Attach an extra response header (builder style).
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_ascii_lowercase(), value.to_string()));
+        self
     }
 
     fn status_line(&self) -> &'static str {
@@ -67,11 +85,15 @@ impl Response {
     pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            "HTTP/1.1 {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n",
             self.status_line(),
             self.content_type,
             self.body.len()
         )?;
+        for (name, value) in &self.headers {
+            write!(w, "{}: {}\r\n", name, value)?;
+        }
+        write!(w, "\r\n")?;
         w.write_all(&self.body)
     }
 }
@@ -227,16 +249,52 @@ fn handle_conn(mut stream: TcpStream, handler: Handler) {
     }
 }
 
+/// A parsed client-side reply (status + headers + body).
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub status: u16,
+    /// Response headers, names lowercased.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Reply {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == lower)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
 /// One-shot HTTP client (for examples/benches/tests).
 pub fn request(addr: &str, method: &str, path: &str, body: &[u8]) -> std::io::Result<(u16, Vec<u8>)> {
+    let r = request_with_headers(addr, method, path, &[], body)?;
+    Ok((r.status, r.body))
+}
+
+/// One-shot HTTP client with request headers and a full [`Reply`]
+/// (needed to observe `retry-after` / `x-request-id`).
+pub fn request_with_headers(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<Reply> {
     let mut stream = TcpStream::connect(addr)?;
     write!(
         stream,
-        "{} {} HTTP/1.1\r\nhost: localhost\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        "{} {} HTTP/1.1\r\nhost: localhost\r\ncontent-length: {}\r\nconnection: close\r\n",
         method,
         path,
         body.len()
     )?;
+    for (name, value) in headers {
+        write!(stream, "{}: {}\r\n", name, value)?;
+    }
+    write!(stream, "\r\n")?;
     stream.write_all(body)?;
     let mut raw = Vec::new();
     stream.read_to_end(&mut raw)?;
@@ -244,12 +302,19 @@ pub fn request(addr: &str, method: &str, path: &str, body: &[u8]) -> std::io::Re
         std::io::Error::new(std::io::ErrorKind::InvalidData, "no response head")
     })?;
     let head = String::from_utf8_lossy(&raw[..head_end]);
-    let status: u16 = head
+    let mut lines = head.split("\r\n");
+    let status: u16 = lines
+        .next()
+        .unwrap_or("")
         .split(' ')
         .nth(1)
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad status"))?;
-    Ok((status, raw[head_end + 4..].to_vec()))
+    let parsed_headers = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    Ok(Reply { status, headers: parsed_headers, body: raw[head_end + 4..].to_vec() })
 }
 
 #[cfg(test)]
@@ -340,6 +405,39 @@ mod tests {
         assert_eq!(body, b"{\"x\":1}");
         let (status, _) = request(&addr, "GET", "/missing", b"").unwrap();
         assert_eq!(status, 404);
+        stop.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn response_extra_headers_serialized() {
+        let mut out = Vec::new();
+        Response::text(429, "queue full")
+            .with_header("Retry-After", "1")
+            .with_header("x-request-id", "42")
+            .write_to(&mut out)
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        let head_end = s.find("\r\n\r\n").unwrap();
+        assert!(s[..head_end].contains("retry-after: 1"));
+        assert!(s[..head_end].contains("x-request-id: 42"));
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+    }
+
+    #[test]
+    fn client_reply_exposes_headers() {
+        let handler: Handler = Arc::new(|req: &Request| {
+            let id = req.header("x-request-id").unwrap_or("none").to_string();
+            Response::text(200, "ok").with_header("x-request-id", &id)
+        });
+        let server = Server::bind("127.0.0.1:0", 2, handler).unwrap();
+        let addr = server.local_addr().to_string();
+        let stop = server.shutdown_handle();
+        let t = std::thread::spawn(move || server.serve());
+        let r = request_with_headers(&addr, "GET", "/", &[("x-request-id", "abc-7")], b"")
+            .unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.header("x-request-id"), Some("abc-7"));
         stop.store(true, Ordering::SeqCst);
         t.join().unwrap();
     }

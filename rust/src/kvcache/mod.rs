@@ -97,6 +97,13 @@ impl LayerCache {
         (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
     }
 
+    /// Byte footprint of one layer's K+V slab at capacity `cap`, without
+    /// building it — serving admission gates on this estimate before a
+    /// request is allowed to allocate real caches.
+    pub fn slab_bytes(n_heads: usize, d_head: usize, cap: usize) -> usize {
+        2 * n_heads * cap * d_head * std::mem::size_of::<f32>()
+    }
+
     /// Validity mask over the `cap` slots (1.0 for live rows).
     pub fn mask(&self) -> Vec<f32> {
         let mut m = vec![0.0f32; self.cap];
@@ -295,6 +302,7 @@ mod tests {
     fn bytes_accounting() {
         let c = LayerCache::new(2, 4, 8);
         assert_eq!(c.bytes(), 2 * 2 * 8 * 4 * 4); // k+v, H, cap, dh, f32
+        assert_eq!(LayerCache::slab_bytes(2, 4, 8), c.bytes());
         let mut set = CacheSet::default();
         set.push(c);
         assert_eq!(set.bytes(), set.peak_bytes());

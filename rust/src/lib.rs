@@ -25,7 +25,10 @@
 //! * [`flops`]       — theoretical FLOPs accounting (paper's protocol).
 //! * [`eval`]        — benchmark evaluation harness + scoring.
 //! * [`metrics`]    — counters/histograms with Prometheus-style export.
-//! * [`coordinator`] — request queue, scheduler, engine worker, streaming.
+//! * [`serving`]     — continuous-batching replica pool: N engine threads,
+//!   per-replica step scheduler (chunked prefill + iteration-level decode),
+//!   KV-byte admission, cancellation/deadlines.
+//! * [`coordinator`] — serving facade: request ids, streaming, shutdown.
 //! * [`http`]        — minimal HTTP/1.1 server (std::net, no framework).
 
 pub mod avsynth;
@@ -39,5 +42,6 @@ pub mod metrics;
 pub mod model;
 pub mod pruning;
 pub mod runtime;
+pub mod serving;
 pub mod tokens;
 pub mod util;

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! fastav serve     --model vl2sim --port 8077 [--no-pruning] [--p 20]
+//!                  [--replicas 4] [--max-inflight 4] [--kv-budget-mb 512]
 //! fastav eval      --model vl2sim --dataset avhbench --n 50 [--no-pruning]
 //! fastav calibrate --model vl2sim --n 100
 //! fastav info      --model vl2sim
@@ -21,7 +22,8 @@ use fastav::util::cli::Args;
 
 const OPTIONS: &[&str] = &[
     "model", "artifacts", "dataset", "n", "port", "p", "no-pruning", "seed",
-    "max-gen", "queue-cap", "workers", "calibration",
+    "max-gen", "queue-cap", "workers", "calibration", "replicas",
+    "max-inflight", "kv-budget-mb", "deadline-ms",
 ];
 
 fn main() {
@@ -160,10 +162,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let queue_cap = args.get_usize("queue-cap", 64).map_err(|e| anyhow!(e))?;
     let workers = args.get_usize("workers", 4).map_err(|e| anyhow!(e))?;
     let max_gen = args.get_usize("max-gen", 4).map_err(|e| anyhow!(e))?;
+    let replicas = args.get_usize("replicas", 1).map_err(|e| anyhow!(e))?;
+    let max_inflight = args.get_usize("max-inflight", 4).map_err(|e| anyhow!(e))?;
+    let kv_budget_mb = args.get_usize("kv-budget-mb", 0).map_err(|e| anyhow!(e))?;
+    let deadline_ms = args.get_usize("deadline-ms", 0).map_err(|e| anyhow!(e))?;
     let plan = plan_from_args(args, &root, &model)?;
 
-    // Engine + coordinator (engine lives on its own thread).
-    let coord = Arc::new(Coordinator::start(root.clone(), model.clone(), queue_cap, true)?);
+    // Replica pool: each engine lives on its own thread.
+    let cfg = fastav::serving::PoolConfig {
+        replicas,
+        queue_cap,
+        max_inflight,
+        kv_budget_bytes: kv_budget_mb * (1 << 20),
+        warmup: true,
+        default_deadline: if deadline_ms == 0 {
+            None
+        } else {
+            Some(std::time::Duration::from_millis(deadline_ms as u64))
+        },
+    };
+    let coord = Arc::new(Coordinator::start_pool(root.clone(), model.clone(), cfg)?);
     let layout = {
         // Load config cheaply for request assembly.
         let cfg = fastav::model::ModelConfig::load(&root.join(&model).join("model.json"))?;
@@ -173,9 +191,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let handler: Handler =
         fastav::http::api::make_handler(Arc::clone(&coord), layout, plan.clone(), max_gen, 1234);
     let server = Server::bind(&format!("127.0.0.1:{}", port), workers, handler)?;
-    println!("fastav serving {} on http://{}", model, server.local_addr());
+    println!(
+        "fastav serving {} on http://{} ({} replica(s))",
+        model,
+        server.local_addr(),
+        coord.replica_count()
+    );
     println!("  POST /v1/generate  {{\"dataset\": \"avhbench\", \"index\": 0}}");
-    println!("  GET  /metrics      GET /healthz");
+    println!("  POST /v1/cancel    {{\"request_id\": 1}}");
+    println!("  GET  /v1/pool      GET /metrics      GET /healthz");
     let shutdown = server.shutdown_handle();
     ctrlc_fallback(&shutdown);
     server.serve();

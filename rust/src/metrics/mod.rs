@@ -8,6 +8,14 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// Format a labeled series name: `labeled("x_total", "replica", "0")`
+/// → `x_total{replica="0"}`. [`Registry::export`] emits one `# TYPE`
+/// line per base family, so labeled series group correctly under
+/// Prometheus scraping.
+pub fn labeled(base: &str, key: &str, value: &str) -> String {
+    format!("{}{{{}=\"{}\"}}", base, key, value)
+}
+
 /// Monotone counter.
 #[derive(Debug, Default)]
 pub struct Counter {
@@ -157,14 +165,31 @@ impl Registry {
             .clone()
     }
 
-    /// Prometheus text exposition.
+    /// Prometheus text exposition. Labeled series (`name{k="v"}`) emit
+    /// one `# TYPE` line per base family, in the family's first
+    /// position (BTreeMap order keeps families contiguous).
     pub fn export(&self) -> String {
-        let mut out = String::new();
-        for (name, c) in self.counters.lock().unwrap().iter() {
-            out.push_str(&format!("# TYPE {} counter\n{} {}\n", name, name, c.get()));
+        fn base(name: &str) -> &str {
+            name.split('{').next().unwrap_or(name)
         }
+        let mut out = String::new();
+        let mut last_family = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            let fam = base(name);
+            if fam != last_family {
+                out.push_str(&format!("# TYPE {} counter\n", fam));
+                last_family = fam.to_string();
+            }
+            out.push_str(&format!("{} {}\n", name, c.get()));
+        }
+        last_family.clear();
         for (name, g) in self.gauges.lock().unwrap().iter() {
-            out.push_str(&format!("# TYPE {} gauge\n{} {}\n", name, name, g.get()));
+            let fam = base(name);
+            if fam != last_family {
+                out.push_str(&format!("# TYPE {} gauge\n", fam));
+                last_family = fam.to_string();
+            }
+            out.push_str(&format!("{} {}\n", name, g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
@@ -238,6 +263,17 @@ mod tests {
         assert!(text.contains("b_bytes 7"));
         assert!(text.contains("lat_seconds_count 1"));
         assert!(text.contains("quantile=\"0.95\""));
+    }
+
+    #[test]
+    fn labeled_series_share_one_type_line() {
+        let r = Registry::default();
+        r.gauge(&labeled("pool_active", "replica", "0")).set(2);
+        r.gauge(&labeled("pool_active", "replica", "1")).set(5);
+        let text = r.export();
+        assert!(text.contains("pool_active{replica=\"0\"} 2"));
+        assert!(text.contains("pool_active{replica=\"1\"} 5"));
+        assert_eq!(text.matches("# TYPE pool_active gauge").count(), 1);
     }
 
     #[test]

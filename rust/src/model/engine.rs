@@ -212,6 +212,84 @@ impl CalibProbe {
     }
 }
 
+/// What one [`ModelEngine::step_generation`] call accomplished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepEvent {
+    /// One chunked-prefill unit (a single back layer) ran; no token yet.
+    Prefilled { layer: usize },
+    /// A token was decided — the first token when prefill completes, or
+    /// one decode step afterwards.
+    Token(u32),
+    /// The generation had already finished; nothing ran.
+    Done,
+}
+
+/// Resumable in-flight generation state.
+///
+/// Produced by [`ModelEngine::begin_generation`], advanced one quantum
+/// at a time by [`ModelEngine::step_generation`], and consumed by
+/// [`ModelEngine::finish_generation`]. Holding the state outside the
+/// engine is what lets the serving layer interleave decode steps of
+/// many requests on one engine (continuous-batching-style scheduling):
+/// everything a request owns — live rows, per-layer caches, FLOPs tally,
+/// emitted tokens — travels in this struct.
+pub struct Generation {
+    opts: GenerateOptions,
+    prompt_len: usize,
+    /// Original full-prompt modality tags (decode-time fine pruning
+    /// re-derives segment classes from cache positions).
+    segments_src: Vec<Segment>,
+    /// Global-pruning split depth for this request.
+    g: usize,
+    h_live: Vec<f32>,
+    positions: Vec<i32>,
+    segments: Vec<Segment>,
+    /// Next back layer to run; `== n_layers` once prefill is complete.
+    next_layer: usize,
+    caches: CacheSet,
+    flops: FlopsTally,
+    live_counts: Vec<usize>,
+    tokens: Vec<u32>,
+    decode_steps: usize,
+    prefill_seconds: f64,
+    decode_seconds: f64,
+    done: bool,
+}
+
+impl Generation {
+    /// Current KV-cache footprint (serving admission accounting).
+    pub fn kv_bytes(&self) -> usize {
+        self.caches.bytes()
+    }
+
+    /// Tokens emitted so far.
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    /// True while back layers are still being prefilled.
+    pub fn is_prefilling(&self) -> bool {
+        self.tokens.is_empty() && !self.done
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    pub fn decode_steps(&self) -> usize {
+        self.decode_steps
+    }
+
+    fn update_done(&mut self) {
+        let last = *self.tokens.last().expect("update_done before first token");
+        self.done = self.tokens.len() >= self.opts.max_gen || last == EOS;
+    }
+}
+
 /// The engine: one model, one PJRT runtime, prebuilt weight literals.
 pub struct ModelEngine {
     pub cfg: ModelConfig,
@@ -420,12 +498,41 @@ impl ModelEngine {
 
     /// [`Self::generate`] with a per-token streaming callback (invoked as
     /// each output token is decided, before the next decode step runs).
+    ///
+    /// Implemented on top of the resumable
+    /// [`begin_generation`](Self::begin_generation) /
+    /// [`step_generation`](Self::step_generation) /
+    /// [`finish_generation`](Self::finish_generation) stages so the
+    /// one-shot path and the serving step scheduler share one engine
+    /// code path.
     pub fn generate_with(
         &mut self,
         input: &RequestInput,
         opts: &GenerateOptions,
         mut on_token: impl FnMut(u32),
     ) -> Result<GenerateResult> {
+        let mut gen = self.begin_generation(input, opts)?;
+        loop {
+            match self.step_generation(&mut gen)? {
+                StepEvent::Token(t) => on_token(t),
+                StepEvent::Prefilled { .. } => {}
+                StepEvent::Done => break,
+            }
+        }
+        Ok(self.finish_generation(gen))
+    }
+
+    /// Start a resumable generation: embed the prompt, run the fused
+    /// front half, apply global pruning, and seed the per-layer caches.
+    /// The remaining back layers and every decode step are advanced one
+    /// at a time by [`step_generation`](Self::step_generation), so a
+    /// serving scheduler can interleave many in-flight generations on
+    /// one engine (chunked prefill + iteration-level decode).
+    pub fn begin_generation(
+        &mut self,
+        input: &RequestInput,
+        opts: &GenerateOptions,
+    ) -> Result<Generation> {
         let cfg = self.cfg.clone();
         let fm = self.fm();
         let d = cfg.d_model;
@@ -565,145 +672,226 @@ impl ModelEngine {
         }
         Self::compact_live(&mut h_live, &mut positions, &mut segments, &keep, d);
 
-        // --- Stage 3: back layers (next_layer..L) with fine pruning. -------
-        for l in next_layer..cfg.n_layers {
-            let n_live = positions.len();
-            live_counts.push(n_live);
-            let bucket = self.art.pick_bucket("back_layer", n_live)?;
-            let (h2, k_out, v_out, s) = self.run_back_layer(l, &h_live, &positions, bucket)?;
-            flops.add_prefill_layer(&fm, n_live, n_live);
-            h_live = h2[..n_live * d].to_vec();
-            let cap = self.cache_cap(n_live, opts.max_gen)?;
-            caches.push(LayerCache::from_prefill(
-                cfg.n_heads,
-                cfg.d_head,
-                cap,
-                &k_out,
-                &v_out,
-                bucket,
-                n_live,
-                &positions,
-            ));
-            // Fine pruning applies entering the next layer.
-            if l + 1 < cfg.n_layers && opts.plan.fine != FineStrategy::None {
-                let keep = fine_keep(
-                    opts.plan.fine,
-                    &s[..n_live],
-                    &segments,
-                    opts.plan.fine_percent,
-                    opts.plan.seed ^ ((l as u64) << 8),
-                );
-                validate_keep(&keep, &segments)
-                    .map_err(|e| anyhow!("fine keep invalid at layer {}: {}", l, e))?;
-                Self::compact_live(&mut h_live, &mut positions, &mut segments, &keep, d);
-            }
-        }
-        caches.update_peak();
-
-        // First generated token comes from the prefill's last hidden row.
-        let last_row = &h_live[(positions.len() - 1) * d..positions.len() * d].to_vec();
-        let lg = self.logits(last_row)?;
-        let first_tok = select_token(&lg, &opts.sampling, 0);
-        flops.add_logits(&fm);
-        let prefill_seconds = t_prefill.elapsed().as_secs_f64();
-
-        on_token(first_tok);
-        let mut tokens = vec![first_tok];
-
-        // --- Stage 4: decode loop over per-layer caches. -------------------
-        let t_decode = Instant::now();
-        let mut decode_steps = 0usize;
-        while tokens.len() < opts.max_gen && *tokens.last().unwrap() != EOS {
-            let cur = *tokens.last().unwrap();
-            let pos = (k + tokens.len() - 1) as i32;
-            let mut x: Vec<f32> = self.weights.embed(cur).to_vec();
-            for l in 0..cfg.n_layers {
-                if caches.layers[l].len() + 1 > caches.layers[l].cap() {
-                    let new_cap =
-                        self.art.pick_bucket("decode_layer", caches.layers[l].len() + 1)?;
-                    caches.layers[l].grow(new_cap);
-                }
-                let cache = &caches.layers[l];
-                let cap = cache.cap();
-                let cur_idx = cache.len();
-                let mut mask = cache.mask();
-                mask[cur_idx] = 1.0;
-                let x_lit = lit_f32(&[d], &x)?;
-                let pos_lit = lit_i32_scalar(pos)?;
-                let idx_lit = lit_i32_scalar(cur_idx as i32)?;
-                let kc = lit_f32(&[cfg.n_heads, cap, cfg.d_head], cache.k_data())?;
-                let vc = lit_f32(&[cfg.n_heads, cap, cfg.d_head], cache.v_data())?;
-                let m_lit = lit_f32(&[cap], &mask)?;
-                let path = self.art.path("decode_layer", Some(cap));
-                let mut inputs: Vec<&xla::Literal> =
-                    vec![&x_lit, &pos_lit, &idx_lit, &kc, &vc, &m_lit];
-                for p in &self.wlit.per_layer[l] {
-                    inputs.push(p);
-                }
-                let outs = self.rt.execute(&path, &inputs)?;
-                let [x2, k_new, v_new, s_lit]: [xla::Literal; 4] = outs
-                    .try_into()
-                    .map_err(|_| anyhow!("decode_layer returned wrong arity"))?;
-                x = to_vec_f32(&x2)?;
-                let k_new = to_vec_f32(&k_new)?;
-                let v_new = to_vec_f32(&v_new)?;
-                caches.layers[l].append(&k_new, &v_new, pos);
-                flops.add_decode_layer(&fm, cur_idx + 1);
-                // Progressive decode-time pruning (extension): drop the
-                // least-important AV rows of this layer's cache using the
-                // step's own importance row.
-                if opts.plan.fine_during_decode
-                    && l >= g
-                    && opts.plan.fine != FineStrategy::None
-                {
-                    let s = to_vec_f32(&s_lit)?;
-                    let cache = &mut caches.layers[l];
-                    let len = cache.len();
-                    let segs: Vec<Segment> = cache
-                        .positions()
-                        .iter()
-                        .map(|&p| {
-                            if (p as usize) < k {
-                                input.segments[p as usize]
-                            } else {
-                                Segment::Text // generated tokens are text
-                            }
-                        })
-                        .collect();
-                    let keep = fine_keep(
-                        opts.plan.fine,
-                        &s[..len],
-                        &segs,
-                        opts.plan.fine_percent,
-                        opts.plan.seed ^ ((l as u64) << 16) ^ tokens.len() as u64,
-                    );
-                    if keep.len() < len {
-                        cache.compact(&keep);
-                    }
-                }
-            }
-            caches.update_peak();
-            let lg = self.logits(&x)?;
-            let tok = select_token(&lg, &opts.sampling, tokens.len());
-            flops.add_logits(&fm);
-            on_token(tok);
-            tokens.push(tok);
-            decode_steps += 1;
-        }
-        let decode_seconds = t_decode.elapsed().as_secs_f64();
-
-        let relative = flops.relative_to_vanilla(&fm, k, tokens.len());
-        Ok(GenerateResult {
+        Ok(Generation {
+            opts: opts.clone(),
             prompt_len: k,
-            relative_flops: relative,
+            segments_src: input.segments.to_vec(),
+            g,
+            h_live,
+            positions,
+            segments,
+            next_layer,
+            caches,
             flops,
-            peak_kv_bytes: caches.peak_bytes(),
-            prefill_seconds,
-            decode_seconds,
-            decode_steps,
             live_counts,
-            tokens,
+            tokens: Vec::new(),
+            decode_steps: 0,
+            prefill_seconds: t_prefill.elapsed().as_secs_f64(),
+            decode_seconds: 0.0,
+            done: false,
         })
+    }
+
+    /// Advance a generation by one scheduling quantum: one back layer
+    /// while prefill is in flight (chunked prefill), or one full decode
+    /// step afterwards. Engine time is accumulated on the generation, so
+    /// per-request latency accounting survives interleaving.
+    pub fn step_generation(&mut self, gen: &mut Generation) -> Result<StepEvent> {
+        if gen.done {
+            return Ok(StepEvent::Done);
+        }
+        if gen.next_layer < self.cfg.n_layers {
+            self.prefill_layer_step(gen)
+        } else {
+            self.decode_step(gen)
+        }
+    }
+
+    /// One chunked-prefill unit: back layer `gen.next_layer` over the
+    /// live rows (with fine pruning entering the next layer); after the
+    /// final layer, the logits head decides the first token.
+    fn prefill_layer_step(&mut self, gen: &mut Generation) -> Result<StepEvent> {
+        let t0 = Instant::now();
+        // Hot path (one call per scheduling quantum): copy the scalar
+        // dims instead of cloning the whole config.
+        let fm = self.fm();
+        let (d, n_heads, d_head, n_layers) = (
+            self.cfg.d_model,
+            self.cfg.n_heads,
+            self.cfg.d_head,
+            self.cfg.n_layers,
+        );
+        let l = gen.next_layer;
+        let n_live = gen.positions.len();
+        gen.live_counts.push(n_live);
+        let bucket = self.art.pick_bucket("back_layer", n_live)?;
+        let (h2, k_out, v_out, s) =
+            self.run_back_layer(l, &gen.h_live, &gen.positions, bucket)?;
+        gen.flops.add_prefill_layer(&fm, n_live, n_live);
+        gen.h_live = h2[..n_live * d].to_vec();
+        let cap = self.cache_cap(n_live, gen.opts.max_gen)?;
+        gen.caches.push(LayerCache::from_prefill(
+            n_heads,
+            d_head,
+            cap,
+            &k_out,
+            &v_out,
+            bucket,
+            n_live,
+            &gen.positions,
+        ));
+        // Fine pruning applies entering the next layer.
+        if l + 1 < n_layers && gen.opts.plan.fine != FineStrategy::None {
+            let keep = fine_keep(
+                gen.opts.plan.fine,
+                &s[..n_live],
+                &gen.segments,
+                gen.opts.plan.fine_percent,
+                gen.opts.plan.seed ^ ((l as u64) << 8),
+            );
+            validate_keep(&keep, &gen.segments)
+                .map_err(|e| anyhow!("fine keep invalid at layer {}: {}", l, e))?;
+            Self::compact_live(&mut gen.h_live, &mut gen.positions, &mut gen.segments, &keep, d);
+        }
+        gen.next_layer = l + 1;
+        if gen.next_layer < n_layers {
+            gen.prefill_seconds += t0.elapsed().as_secs_f64();
+            return Ok(StepEvent::Prefilled { layer: l });
+        }
+        // Prefill complete: first token from the last live hidden row.
+        gen.caches.update_peak();
+        let last = gen.h_live[(gen.positions.len() - 1) * d..gen.positions.len() * d].to_vec();
+        let lg = self.logits(&last)?;
+        let first_tok = select_token(&lg, &gen.opts.sampling, 0);
+        gen.flops.add_logits(&fm);
+        gen.tokens.push(first_tok);
+        gen.update_done();
+        gen.prefill_seconds += t0.elapsed().as_secs_f64();
+        Ok(StepEvent::Token(first_tok))
+    }
+
+    /// One decode step over the per-layer caches: every layer advances
+    /// one token, then the logits head selects the next token.
+    fn decode_step(&mut self, gen: &mut Generation) -> Result<StepEvent> {
+        let t0 = Instant::now();
+        // Hot path (one call per decode token): no config clone.
+        let fm = self.fm();
+        let (d, n_heads, d_head, n_layers) = (
+            self.cfg.d_model,
+            self.cfg.n_heads,
+            self.cfg.d_head,
+            self.cfg.n_layers,
+        );
+        let k = gen.prompt_len;
+        let cur = *gen.tokens.last().expect("decode_step before prefill finished");
+        let pos = (k + gen.tokens.len() - 1) as i32;
+        let mut x: Vec<f32> = self.weights.embed(cur).to_vec();
+        for l in 0..n_layers {
+            if gen.caches.layers[l].len() + 1 > gen.caches.layers[l].cap() {
+                let new_cap =
+                    self.art.pick_bucket("decode_layer", gen.caches.layers[l].len() + 1)?;
+                gen.caches.layers[l].grow(new_cap);
+            }
+            let cache = &gen.caches.layers[l];
+            let cap = cache.cap();
+            let cur_idx = cache.len();
+            let mut mask = cache.mask();
+            mask[cur_idx] = 1.0;
+            let x_lit = lit_f32(&[d], &x)?;
+            let pos_lit = lit_i32_scalar(pos)?;
+            let idx_lit = lit_i32_scalar(cur_idx as i32)?;
+            let kc = lit_f32(&[n_heads, cap, d_head], cache.k_data())?;
+            let vc = lit_f32(&[n_heads, cap, d_head], cache.v_data())?;
+            let m_lit = lit_f32(&[cap], &mask)?;
+            let path = self.art.path("decode_layer", Some(cap));
+            let mut inputs: Vec<&xla::Literal> =
+                vec![&x_lit, &pos_lit, &idx_lit, &kc, &vc, &m_lit];
+            for p in &self.wlit.per_layer[l] {
+                inputs.push(p);
+            }
+            let outs = self.rt.execute(&path, &inputs)?;
+            let [x2, k_new, v_new, s_lit]: [xla::Literal; 4] = outs
+                .try_into()
+                .map_err(|_| anyhow!("decode_layer returned wrong arity"))?;
+            x = to_vec_f32(&x2)?;
+            let k_new = to_vec_f32(&k_new)?;
+            let v_new = to_vec_f32(&v_new)?;
+            gen.caches.layers[l].append(&k_new, &v_new, pos);
+            gen.flops.add_decode_layer(&fm, cur_idx + 1);
+            // Progressive decode-time pruning (extension): drop the
+            // least-important AV rows of this layer's cache using the
+            // step's own importance row.
+            if gen.opts.plan.fine_during_decode
+                && l >= gen.g
+                && gen.opts.plan.fine != FineStrategy::None
+            {
+                let s = to_vec_f32(&s_lit)?;
+                let segments_src = &gen.segments_src;
+                let cache = &mut gen.caches.layers[l];
+                let len = cache.len();
+                let segs: Vec<Segment> = cache
+                    .positions()
+                    .iter()
+                    .map(|&p| {
+                        if (p as usize) < k {
+                            segments_src[p as usize]
+                        } else {
+                            Segment::Text // generated tokens are text
+                        }
+                    })
+                    .collect();
+                let keep = fine_keep(
+                    gen.opts.plan.fine,
+                    &s[..len],
+                    &segs,
+                    gen.opts.plan.fine_percent,
+                    gen.opts.plan.seed ^ ((l as u64) << 16) ^ gen.tokens.len() as u64,
+                );
+                if keep.len() < len {
+                    cache.compact(&keep);
+                }
+            }
+        }
+        gen.caches.update_peak();
+        let lg = self.logits(&x)?;
+        let tok = select_token(&lg, &gen.opts.sampling, gen.tokens.len());
+        gen.flops.add_logits(&fm);
+        gen.tokens.push(tok);
+        gen.decode_steps += 1;
+        gen.update_done();
+        gen.decode_seconds += t0.elapsed().as_secs_f64();
+        Ok(StepEvent::Token(tok))
+    }
+
+    /// Consume a generation into its result. Callable at any point — a
+    /// canceled or deadline-expired generation yields its partial tokens
+    /// and the FLOPs/memory actually spent.
+    pub fn finish_generation(&self, gen: Generation) -> GenerateResult {
+        let fm = self.fm();
+        let relative = gen.flops.relative_to_vanilla(&fm, gen.prompt_len, gen.tokens.len());
+        GenerateResult {
+            prompt_len: gen.prompt_len,
+            relative_flops: relative,
+            flops: gen.flops,
+            peak_kv_bytes: gen.caches.peak_bytes(),
+            prefill_seconds: gen.prefill_seconds,
+            decode_seconds: gen.decode_seconds,
+            decode_steps: gen.decode_steps,
+            live_counts: gen.live_counts,
+            tokens: gen.tokens,
+        }
+    }
+
+    /// Conservative upper bound on the KV bytes a request can pin:
+    /// unpruned prompt + full generation budget, at bucket granularity,
+    /// across every layer. Serving admission gates on this estimate.
+    pub fn estimate_kv_bytes(&self, prompt_len: usize, max_gen: usize) -> usize {
+        let needed = prompt_len + max_gen;
+        let cap = self
+            .art
+            .pick_bucket("decode_layer", needed)
+            .unwrap_or(needed);
+        LayerCache::slab_bytes(self.cfg.n_heads, self.cfg.d_head, cap) * self.cfg.n_layers
     }
 
     // -------------------------------------------------------- calibration

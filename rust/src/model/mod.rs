@@ -12,6 +12,7 @@ pub mod weights;
 
 pub use config::ModelConfig;
 pub use engine::{
-    CalibProbe, GenerateOptions, GenerateResult, ModelEngine, PruningPlan, RequestInput,
+    CalibProbe, GenerateOptions, GenerateResult, Generation, ModelEngine, PruningPlan,
+    RequestInput, StepEvent,
 };
 pub use weights::{WeightLiterals, Weights};

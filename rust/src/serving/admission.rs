@@ -1,0 +1,129 @@
+//! Per-replica admission control: a KV-cache byte budget plus an
+//! in-flight slot cap.
+//!
+//! Each replica owns one [`Admission`] (single-threaded — the replica
+//! thread is the only caller, so no locking). A request is admitted
+//! into the step scheduler only when its *estimated* KV footprint
+//! (unpruned prompt + full generation budget, bucket-rounded — see
+//! `ModelEngine::estimate_kv_bytes`) fits under the remaining budget.
+//! Estimates are conservative upper bounds, so the replica can never
+//! oversubscribe device-adjacent host memory no matter how pruning
+//! plays out.
+
+/// Outcome of an admission check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admit {
+    /// Admitted; the budget now accounts for the request.
+    Granted,
+    /// Does not fit *right now*; park it and retry when a running
+    /// request completes.
+    Defer,
+    /// Can never fit — the single request exceeds the whole budget.
+    /// Reject it instead of deadlocking the replica.
+    Oversize,
+}
+
+/// KV-byte + slot accounting for one replica.
+#[derive(Debug)]
+pub struct Admission {
+    budget_bytes: usize,
+    max_inflight: usize,
+    used_bytes: usize,
+    inflight: usize,
+}
+
+impl Admission {
+    /// `budget_bytes == 0` means "unlimited" (slot cap still applies).
+    pub fn new(budget_bytes: usize, max_inflight: usize) -> Admission {
+        Admission {
+            budget_bytes: if budget_bytes == 0 { usize::MAX } else { budget_bytes },
+            max_inflight: max_inflight.max(1),
+            used_bytes: 0,
+            inflight: 0,
+        }
+    }
+
+    /// Whether another request may even be popped from the queue.
+    pub fn has_slot(&self) -> bool {
+        self.inflight < self.max_inflight
+    }
+
+    /// Try to admit a request estimated at `bytes`; on `Granted` the
+    /// caller must later `release(bytes)` exactly once.
+    pub fn check(&mut self, bytes: usize) -> Admit {
+        if bytes > self.budget_bytes {
+            return Admit::Oversize;
+        }
+        if !self.has_slot() || self.used_bytes.saturating_add(bytes) > self.budget_bytes {
+            return Admit::Defer;
+        }
+        self.used_bytes += bytes;
+        self.inflight += 1;
+        Admit::Granted
+    }
+
+    /// Return a previously granted reservation.
+    pub fn release(&mut self, bytes: usize) {
+        debug_assert!(self.inflight > 0, "release without admit");
+        self.used_bytes = self.used_bytes.saturating_sub(bytes);
+        self.inflight = self.inflight.saturating_sub(1);
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grants_until_budget_then_defers() {
+        let mut a = Admission::new(100, 8);
+        assert_eq!(a.check(40), Admit::Granted);
+        assert_eq!(a.check(40), Admit::Granted);
+        assert_eq!(a.check(40), Admit::Defer); // 120 > 100
+        a.release(40);
+        assert_eq!(a.check(40), Admit::Granted);
+        assert_eq!(a.used_bytes(), 80);
+    }
+
+    #[test]
+    fn oversize_is_terminal_not_deferred() {
+        let mut a = Admission::new(100, 8);
+        assert_eq!(a.check(101), Admit::Oversize);
+        // Even with the budget fully free, oversize stays oversize.
+        assert_eq!(a.inflight(), 0);
+        assert_eq!(a.check(101), Admit::Oversize);
+    }
+
+    #[test]
+    fn slot_cap_defers_independently_of_bytes() {
+        let mut a = Admission::new(0, 2); // unlimited bytes, 2 slots
+        assert_eq!(a.check(1), Admit::Granted);
+        assert_eq!(a.check(1), Admit::Granted);
+        assert!(!a.has_slot());
+        assert_eq!(a.check(1), Admit::Defer);
+        a.release(1);
+        assert_eq!(a.check(1), Admit::Granted);
+    }
+
+    #[test]
+    fn release_is_saturating() {
+        let mut a = Admission::new(10, 1);
+        assert_eq!(a.check(10), Admit::Granted);
+        a.release(10);
+        a.release(10); // double release must not underflow
+        assert_eq!(a.used_bytes(), 0);
+        assert_eq!(a.inflight(), 0);
+    }
+}

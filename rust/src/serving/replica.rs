@@ -1,0 +1,370 @@
+//! One replica: an OS thread that owns one engine and interleaves many
+//! in-flight generations over it.
+//!
+//! PJRT handles are not `Send`, so the engine is constructed *on* this
+//! thread and never leaves it; the replica is therefore the sharding
+//! unit of the pool. Inside the thread, scheduling is iteration-level:
+//! the loop alternates between admitting queued jobs (under the
+//! [`Admission`] KV-byte budget) and advancing exactly one generation
+//! by one quantum, as chosen by the [`StepScheduler`]. Cancellation and
+//! deadlines are checked at every admission and before every quantum,
+//! so a canceled long generation stops within one step.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{Event, GenRequest, SchedulerQueue};
+use crate::metrics::{labeled, Registry};
+use crate::model::{GenerateResult, Generation, ModelEngine, RequestInput, StepEvent};
+
+use super::admission::{Admission, Admit};
+use super::step_scheduler::StepScheduler;
+use super::{PoolConfig, PoolShared, ReplicaShared, Terminal};
+
+/// The engine surface a replica drives. [`ModelEngine`] is the real
+/// implementation; tests swap in a mock so the pool's scheduling and
+/// conservation properties run without AOT artifacts.
+pub trait ReplicaEngine {
+    type Gen;
+
+    /// Start a generation (embed + fused front + global pruning).
+    fn begin(&mut self, req: &GenRequest) -> Result<Self::Gen>;
+
+    /// Advance one quantum (one prefill layer or one decode step).
+    fn step(&mut self, gen: &mut Self::Gen) -> Result<StepEvent>;
+
+    /// Whether the generation has emitted its final token.
+    fn is_done(&self, gen: &Self::Gen) -> bool;
+
+    /// Consume the generation into its result (partial on abort).
+    fn finish(&mut self, gen: Self::Gen) -> GenerateResult;
+
+    /// Current KV bytes pinned by this generation.
+    fn kv_bytes(&self, gen: &Self::Gen) -> usize;
+
+    /// Conservative pre-admission KV-byte estimate for a request.
+    fn estimate_bytes(&self, req: &GenRequest) -> usize;
+}
+
+impl ReplicaEngine for ModelEngine {
+    type Gen = Generation;
+
+    fn begin(&mut self, req: &GenRequest) -> Result<Generation> {
+        let input = RequestInput {
+            prompt: &req.prompt,
+            segments: &req.segments,
+            frame_of: &req.frame_of,
+        };
+        self.begin_generation(&input, &req.opts)
+    }
+
+    fn step(&mut self, gen: &mut Generation) -> Result<StepEvent> {
+        self.step_generation(gen)
+    }
+
+    fn is_done(&self, gen: &Generation) -> bool {
+        gen.is_done()
+    }
+
+    fn finish(&mut self, gen: Generation) -> GenerateResult {
+        self.finish_generation(gen)
+    }
+
+    fn kv_bytes(&self, gen: &Generation) -> usize {
+        gen.kv_bytes()
+    }
+
+    fn estimate_bytes(&self, req: &GenRequest) -> usize {
+        self.estimate_kv_bytes(req.prompt.len(), req.opts.max_gen)
+    }
+}
+
+/// A queued request (pool-internal).
+pub(crate) struct Job {
+    pub id: u64,
+    pub req: GenRequest,
+    pub enqueued: Instant,
+    pub deadline: Option<Instant>,
+    pub cancel: Arc<std::sync::atomic::AtomicBool>,
+    pub events: Sender<Event>,
+}
+
+/// One admitted, in-flight generation.
+struct Active<G> {
+    id: u64,
+    gen: G,
+    cancel: Arc<std::sync::atomic::AtomicBool>,
+    deadline: Option<Instant>,
+    events: Sender<Event>,
+    started: Instant,
+    est_bytes: usize,
+}
+
+/// Pre-resolved metric handles for one replica thread.
+struct ReplicaMetrics {
+    active_g: Arc<crate::metrics::Gauge>,
+    kv_g: Arc<crate::metrics::Gauge>,
+    sps_g: Arc<crate::metrics::Gauge>,
+    steps_c: Arc<crate::metrics::Counter>,
+    queue_hist: Arc<crate::metrics::Histogram>,
+    gen_hist: Arc<crate::metrics::Histogram>,
+    prefill_hist: Arc<crate::metrics::Histogram>,
+    tok_hist: Arc<crate::metrics::Histogram>,
+    completed_c: Arc<crate::metrics::Counter>,
+    failed_c: Arc<crate::metrics::Counter>,
+    canceled_c: Arc<crate::metrics::Counter>,
+    expired_c: Arc<crate::metrics::Counter>,
+    tokens_c: Arc<crate::metrics::Counter>,
+    kv_peak: Arc<crate::metrics::Gauge>,
+}
+
+impl ReplicaMetrics {
+    fn new(metrics: &Registry, replica: usize) -> ReplicaMetrics {
+        let l = replica.to_string();
+        ReplicaMetrics {
+            active_g: metrics.gauge(&labeled("fastav_replica_active_requests", "replica", &l)),
+            kv_g: metrics.gauge(&labeled("fastav_replica_kv_bytes", "replica", &l)),
+            sps_g: metrics.gauge(&labeled("fastav_replica_steps_per_second", "replica", &l)),
+            steps_c: metrics.counter(&labeled("fastav_replica_steps_total", "replica", &l)),
+            queue_hist: metrics.histogram("fastav_queue_seconds"),
+            gen_hist: metrics.histogram("fastav_generate_seconds"),
+            prefill_hist: metrics.histogram("fastav_prefill_seconds"),
+            tok_hist: metrics.histogram("fastav_decode_token_seconds"),
+            completed_c: metrics.counter("fastav_requests_completed_total"),
+            failed_c: metrics.counter("fastav_requests_failed_total"),
+            canceled_c: metrics.counter("fastav_requests_canceled_total"),
+            expired_c: metrics.counter("fastav_requests_expired_total"),
+            tokens_c: metrics.counter("fastav_tokens_generated_total"),
+            kv_peak: metrics.gauge("fastav_kv_peak_bytes"),
+        }
+    }
+}
+
+/// How a generation left the replica.
+enum Outcome {
+    Completed,
+    Terminal(Terminal, String),
+}
+
+/// The replica thread body: admit → step → account, until the queue is
+/// closed and drained and no generation is in flight.
+pub(crate) fn replica_loop<E: ReplicaEngine>(
+    replica_id: usize,
+    mut engine: E,
+    cfg: &PoolConfig,
+    queue: &SchedulerQueue<Job>,
+    rshared: &ReplicaShared,
+    pshared: &PoolShared,
+    metrics: &Registry,
+) {
+    let m = ReplicaMetrics::new(metrics, replica_id);
+    let mut admission = Admission::new(cfg.kv_budget_bytes, cfg.max_inflight);
+    let mut sched = StepScheduler::new();
+    let mut active: Vec<Active<E::Gen>> = Vec::new();
+    let mut parked: Option<Job> = None;
+    let mut rate_steps = 0u64;
+    let mut rate_t0 = Instant::now();
+
+    'outer: loop {
+        // ---- Admission: pull queued jobs into the step scheduler. ----
+        while admission.has_slot() {
+            // A parked (budget-deferred) job is already counted as
+            // in-flight; fresh pops are counted on arrival.
+            let mut counted = false;
+            let job = if let Some(j) = parked.take() {
+                counted = true;
+                Some(j)
+            } else if active.is_empty() {
+                match queue.pop_blocking() {
+                    Some(j) => Some(j),
+                    None => break 'outer, // closed + drained, nothing running
+                }
+            } else {
+                queue.try_pop_fair()
+            };
+            let Some(job) = job else { break };
+            if !counted {
+                rshared.active.fetch_add(1, Ordering::SeqCst);
+            }
+            if job.cancel.load(Ordering::SeqCst) {
+                settle_job(&job, Terminal::Canceled, "canceled before start", rshared, pshared, &m);
+                continue;
+            }
+            if job.deadline.is_some_and(|d| Instant::now() >= d) {
+                settle_job(&job, Terminal::Expired, "deadline exceeded in queue", rshared, pshared, &m);
+                continue;
+            }
+            let est = engine.estimate_bytes(&job.req);
+            match admission.check(est) {
+                Admit::Granted => {}
+                Admit::Defer => {
+                    // Re-examined once a running generation releases
+                    // budget; stays counted as in-flight meanwhile.
+                    parked = Some(job);
+                    break;
+                }
+                Admit::Oversize => {
+                    settle_job(
+                        &job,
+                        Terminal::Failed,
+                        &format!(
+                            "request needs ~{} KV bytes, over the replica budget {}",
+                            est,
+                            admission.budget_bytes()
+                        ),
+                        rshared,
+                        pshared,
+                        &m,
+                    );
+                    continue;
+                }
+            }
+            m.queue_hist.observe(job.enqueued.elapsed().as_secs_f64());
+            match engine.begin(&job.req) {
+                Ok(gen) => {
+                    sched.admit(job.id, job.req.priority, job.deadline);
+                    active.push(Active {
+                        id: job.id,
+                        gen,
+                        cancel: job.cancel,
+                        deadline: job.deadline,
+                        events: job.events,
+                        started: Instant::now(),
+                        est_bytes: est,
+                    });
+                }
+                Err(e) => {
+                    admission.release(est);
+                    settle_job(&job, Terminal::Failed, &format!("{:#}", e), rshared, pshared, &m);
+                }
+            }
+        }
+        m.active_g.set(active.len() as u64);
+        if active.is_empty() {
+            continue; // back to the blocking pop (or retry the parked job)
+        }
+
+        // ---- One scheduling quantum. ----
+        let Some(idx) = sched.pick() else { continue };
+        let now = Instant::now();
+        let entry = &mut active[idx];
+        let outcome: Option<Outcome> = if entry.cancel.load(Ordering::SeqCst) {
+            Some(Outcome::Terminal(Terminal::Canceled, "canceled".into()))
+        } else if entry.deadline.is_some_and(|d| now >= d) {
+            Some(Outcome::Terminal(Terminal::Expired, "deadline exceeded".into()))
+        } else {
+            match engine.step(&mut entry.gen) {
+                Ok(StepEvent::Token(t)) => {
+                    let _ = entry.events.send(Event::Token(t));
+                    m.steps_c.inc();
+                    rshared.steps_total.fetch_add(1, Ordering::Relaxed);
+                    rate_steps += 1;
+                    if engine.is_done(&entry.gen) {
+                        Some(Outcome::Completed)
+                    } else {
+                        None
+                    }
+                }
+                Ok(StepEvent::Prefilled { .. }) => {
+                    m.steps_c.inc();
+                    rshared.steps_total.fetch_add(1, Ordering::Relaxed);
+                    rate_steps += 1;
+                    None
+                }
+                Ok(StepEvent::Done) => Some(Outcome::Completed),
+                Err(e) => Some(Outcome::Terminal(Terminal::Failed, format!("{:#}", e))),
+            }
+        };
+
+        if let Some(outcome) = outcome {
+            let a = active.remove(idx);
+            sched.remove(idx);
+            match outcome {
+                Outcome::Completed => {
+                    let res = engine.finish(a.gen);
+                    m.gen_hist.observe(a.started.elapsed().as_secs_f64());
+                    m.prefill_hist.observe(res.prefill_seconds);
+                    if res.decode_steps > 0 {
+                        m.tok_hist.observe(res.decode_seconds / res.decode_steps as f64);
+                    }
+                    m.kv_peak.max(res.peak_kv_bytes as u64);
+                    m.tokens_c.add(res.tokens.len() as u64);
+                    m.completed_c.inc();
+                    pshared.completed.fetch_add(1, Ordering::SeqCst);
+                    rshared.completed.fetch_add(1, Ordering::SeqCst);
+                    let _ = a.events.send(Event::Done(Box::new(res)));
+                }
+                Outcome::Terminal(kind, msg) => {
+                    // Abandon the generation; partial state is dropped.
+                    drop(engine.finish(a.gen));
+                    settle_terminal(kind, &msg, &a.events, rshared, pshared, &m, false);
+                }
+            }
+            admission.release(a.est_bytes);
+            pshared.cancels.lock().unwrap().remove(&a.id);
+            rshared.active.fetch_sub(1, Ordering::SeqCst);
+            m.active_g.set(active.len() as u64);
+        }
+
+        // ---- Gauges: KV footprint + steps/s. ----
+        let kv_now: usize = active.iter().map(|a| engine.kv_bytes(&a.gen)).sum();
+        rshared.kv_bytes.store(kv_now as u64, Ordering::Relaxed);
+        m.kv_g.set(kv_now as u64);
+        let dt = rate_t0.elapsed().as_secs_f64();
+        if dt >= 0.5 {
+            let sps = (rate_steps as f64 / dt).round() as u64;
+            rshared.steps_per_sec.store(sps, Ordering::Relaxed);
+            m.sps_g.set(sps);
+            rate_steps = 0;
+            rate_t0 = Instant::now();
+        }
+    }
+}
+
+/// Account a job that never entered the step scheduler (canceled,
+/// expired, oversize, or failed at begin). The caller has already
+/// counted it in `rshared.active`.
+fn settle_job(
+    job: &Job,
+    kind: Terminal,
+    msg: &str,
+    rshared: &ReplicaShared,
+    pshared: &PoolShared,
+    m: &ReplicaMetrics,
+) {
+    settle_terminal(kind, msg, &job.events, rshared, pshared, m, true);
+    pshared.cancels.lock().unwrap().remove(&job.id);
+}
+
+fn settle_terminal(
+    kind: Terminal,
+    msg: &str,
+    events: &Sender<Event>,
+    rshared: &ReplicaShared,
+    pshared: &PoolShared,
+    m: &ReplicaMetrics,
+    decrement_active: bool,
+) {
+    match kind {
+        Terminal::Canceled => {
+            m.canceled_c.inc();
+            pshared.canceled.fetch_add(1, Ordering::SeqCst);
+        }
+        Terminal::Expired => {
+            m.expired_c.inc();
+            pshared.expired.fetch_add(1, Ordering::SeqCst);
+        }
+        Terminal::Failed => {
+            m.failed_c.inc();
+            pshared.failed.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+    let _ = events.send(Event::Error(msg.to_string()));
+    if decrement_active {
+        rshared.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}

@@ -22,6 +22,7 @@ fn request(idx: u64, priority: Priority) -> GenRequest {
         frame_of: s.frame_of,
         opts: GenerateOptions { plan: PruningPlan::fastav(5, 2, 0, 20.0), max_gen: 3, ..Default::default() },
         priority,
+        deadline: None,
     }
 }
 
@@ -143,4 +144,86 @@ fn shutdown_drains_cleanly() {
     coord.shutdown(); // must drain the in-flight request, then join
     let got_done = rx.iter().any(|ev| matches!(ev, Event::Done(_)));
     assert!(got_done, "in-flight request was dropped at shutdown");
+}
+
+#[test]
+fn pool_of_two_replicas_serves_and_conserves() {
+    let Some(root) = common::tiny_ready() else { return };
+    let coord = Coordinator::start_pool(
+        root,
+        "tiny".into(),
+        fastav::serving::PoolConfig {
+            replicas: 2,
+            queue_cap: 32,
+            max_inflight: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(coord.replica_count(), 2);
+    let n = 8;
+    let receivers: Vec<_> = (0..n)
+        .map(|i| coord.submit(request(i as u64, Priority::Normal)).unwrap())
+        .collect();
+    for rx in receivers {
+        let done = rx.iter().any(|ev| matches!(ev, Event::Done(_)));
+        assert!(done);
+    }
+    let stats = coord.pool_stats();
+    assert_eq!(stats.submitted, n as u64);
+    assert_eq!(stats.completed, n as u64);
+    assert!(stats.conserved(), "ledger out of balance: {:?}", stats);
+    let status = coord.pool_status();
+    assert_eq!(status.len(), 2);
+    // Least-loaded dispatch spread work across both replicas.
+    assert!(
+        status.iter().all(|r| r.completed > 0),
+        "one replica sat idle: {:?}",
+        status
+    );
+}
+
+#[test]
+fn cancellation_reaches_queued_request() {
+    let Some(root) = common::tiny_ready() else { return };
+    // One slot in flight: extra requests sit in the queue where a
+    // cancel must drop them at pop.
+    let coord = Coordinator::start_pool(
+        root,
+        "tiny".into(),
+        fastav::serving::PoolConfig {
+            replicas: 1,
+            queue_cap: 16,
+            max_inflight: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let _busy = coord.submit(request(0, Priority::Normal)).unwrap();
+    let (id, rx) = coord.submit_with_id(request(1, Priority::Normal)).unwrap();
+    // May race with completion on a fast engine; canceling an already
+    // terminal id reports false, and the request then finishes Done.
+    let was_live = coord.cancel(id);
+    let mut saw_terminal_error = false;
+    for ev in rx {
+        match ev {
+            Event::Error(msg) => {
+                saw_terminal_error = true;
+                assert!(msg.contains("cancel"), "unexpected error: {}", msg);
+                break;
+            }
+            Event::Done(_) => break, // raced completion: acceptable
+            Event::Token(_) => {}
+        }
+    }
+    let stats = coord.pool_stats();
+    assert!(
+        !saw_terminal_error || stats.canceled >= 1,
+        "canceled event without ledger entry: {:?}",
+        stats
+    );
+    assert!(
+        was_live || !saw_terminal_error,
+        "cancel reported dead id yet the request was canceled"
+    );
 }

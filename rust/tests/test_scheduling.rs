@@ -1,0 +1,320 @@
+//! Serving-pool scheduling properties, run against a mock engine so no
+//! AOT artifacts are needed: fairness under a sustained High-priority
+//! stream (no starvation once the step scheduler interleaves) and the
+//! pool conservation ledger
+//! (`submitted == rejected + terminal + in_queue + in_flight`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastav::coordinator::{Event, GenRequest, Priority};
+use fastav::metrics::Registry;
+use fastav::model::{GenerateOptions, GenerateResult, PruningPlan, StepEvent};
+use fastav::serving::{PoolConfig, ReplicaEngine, ReplicaPool};
+use fastav::tokens::Segment;
+use fastav::util::proptest::{run_prop, Gen};
+
+// ---------------------------------------------------------------- mock
+
+/// A generation that takes `prefill_left + total` quanta to finish.
+struct MockGen {
+    prefill_left: usize,
+    produced: usize,
+    total: usize,
+    kv_bytes: usize,
+}
+
+/// Engine stand-in: every quantum burns `step_cost` of wall clock, so
+/// scheduling contention is observable.
+struct MockEngine {
+    step_cost: Duration,
+}
+
+impl ReplicaEngine for MockEngine {
+    type Gen = MockGen;
+
+    fn begin(&mut self, req: &GenRequest) -> anyhow::Result<MockGen> {
+        Ok(MockGen {
+            prefill_left: 2,
+            produced: 0,
+            total: req.opts.max_gen.max(1),
+            kv_bytes: req.prompt.len() * 1000,
+        })
+    }
+
+    fn step(&mut self, gen: &mut MockGen) -> anyhow::Result<StepEvent> {
+        if !self.step_cost.is_zero() {
+            std::thread::sleep(self.step_cost);
+        }
+        if gen.prefill_left > 0 {
+            gen.prefill_left -= 1;
+            if gen.prefill_left > 0 {
+                return Ok(StepEvent::Prefilled { layer: 2 - gen.prefill_left });
+            }
+        }
+        if gen.produced >= gen.total {
+            return Ok(StepEvent::Done);
+        }
+        gen.produced += 1;
+        Ok(StepEvent::Token(7))
+    }
+
+    fn is_done(&self, gen: &MockGen) -> bool {
+        gen.prefill_left == 0 && gen.produced >= gen.total
+    }
+
+    fn finish(&mut self, gen: MockGen) -> GenerateResult {
+        GenerateResult {
+            tokens: vec![7; gen.produced],
+            prompt_len: 4,
+            flops: Default::default(),
+            relative_flops: 0.0,
+            peak_kv_bytes: gen.kv_bytes,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            decode_steps: gen.produced.saturating_sub(1),
+            live_counts: Vec::new(),
+        }
+    }
+
+    fn kv_bytes(&self, gen: &MockGen) -> usize {
+        gen.kv_bytes
+    }
+
+    fn estimate_bytes(&self, req: &GenRequest) -> usize {
+        req.prompt.len() * 1000
+    }
+}
+
+fn mock_request(max_gen: usize, priority: Priority) -> GenRequest {
+    GenRequest {
+        prompt: vec![1, 2, 3, 4],
+        segments: vec![Segment::Ctrl, Segment::Vis, Segment::Aud, Segment::Text],
+        frame_of: vec![-1, 0, -1, -1],
+        opts: GenerateOptions {
+            plan: PruningPlan::vanilla(),
+            max_gen,
+            ..Default::default()
+        },
+        priority,
+        deadline: None,
+    }
+}
+
+fn mock_pool(cfg: PoolConfig, step_cost: Duration) -> ReplicaPool {
+    ReplicaPool::start_with_factory(cfg, Arc::new(Registry::default()), move |_replica| {
+        Ok(MockEngine { step_cost })
+    })
+    .expect("mock pool starts")
+}
+
+/// Wait (bounded) for the pool to reach a quiescent, conserved state.
+fn settled_stats(pool: &ReplicaPool) -> fastav::serving::PoolStats {
+    let t0 = Instant::now();
+    loop {
+        let s = pool.stats();
+        if (s.conserved() && s.in_flight == 0 && s.in_queue == 0)
+            || t0.elapsed() > Duration::from_secs(10)
+        {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn drain(rx: std::sync::mpsc::Receiver<Event>) -> Result<usize, String> {
+    let mut tokens = 0;
+    loop {
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(Event::Token(_)) => tokens += 1,
+            Ok(Event::Done(_)) => return Ok(tokens),
+            Ok(Event::Error(e)) => return Err(e),
+            Err(e) => panic!("stream stalled: {}", e),
+        }
+    }
+}
+
+// --------------------------------------------------------------- tests
+
+#[test]
+fn normal_requests_complete_under_sustained_high_stream() {
+    let pool = Arc::new(mock_pool(
+        PoolConfig {
+            replicas: 1,
+            queue_cap: 8,
+            max_inflight: 2,
+            ..Default::default()
+        },
+        Duration::from_micros(200),
+    ));
+
+    // Producer: a saturating stream of High-priority long generations.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let producer = {
+        let pool = Arc::clone(&pool);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut receivers = Vec::new();
+            while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                if let Ok((_, rx)) = pool.submit(mock_request(16, Priority::High)) {
+                    receivers.push(rx);
+                }
+                std::thread::sleep(Duration::from_micros(300));
+            }
+            receivers
+        })
+    };
+
+    // Under that stream, short Normal requests must still finish.
+    let mut normal_done = 0;
+    for _ in 0..10 {
+        // Retry through transient queue-full backpressure.
+        let rx = loop {
+            match pool.submit(mock_request(3, Priority::Normal)) {
+                Ok((_, rx)) => break rx,
+                Err(_) => std::thread::sleep(Duration::from_millis(1)),
+            }
+        };
+        match drain(rx) {
+            Ok(_) => normal_done += 1,
+            Err(e) => panic!("normal request failed: {}", e),
+        }
+    }
+    assert_eq!(normal_done, 10, "normal requests starved by High stream");
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let high_receivers = producer.join().unwrap();
+    for rx in high_receivers {
+        drain(rx).expect("high request failed");
+    }
+    let stats = settled_stats(&pool);
+    assert!(stats.conserved(), "ledger out of balance: {:?}", stats);
+}
+
+#[test]
+fn prop_conservation_under_mixed_load() {
+    run_prop("pool_conservation", 12, |g: &mut Gen| {
+        let replicas = g.usize_in(1, 3);
+        let queue_cap = g.usize_in(1, 4);
+        let max_inflight = g.usize_in(1, 3);
+        let n = g.usize_in(5, 40);
+        let pool = mock_pool(
+            PoolConfig {
+                replicas,
+                queue_cap,
+                max_inflight,
+                ..Default::default()
+            },
+            Duration::from_micros(50),
+        );
+        let mut accepted = Vec::new();
+        let mut rejected = 0u64;
+        for i in 0..n {
+            let prio = if i % 3 == 0 { Priority::High } else { Priority::Normal };
+            match pool.submit(mock_request(g.usize_in(1, 6), prio)) {
+                Ok((id, rx)) => {
+                    // Cancel a random slice of live requests.
+                    if g.bool() && g.bool() {
+                        pool.cancel(id);
+                    }
+                    accepted.push(rx);
+                }
+                Err(_) => rejected += 1,
+            }
+        }
+        let mut terminal_seen = 0u64;
+        for rx in accepted {
+            let _ = drain(rx); // Done and Error both count as terminal
+            terminal_seen += 1;
+        }
+        let stats = settled_stats(&pool);
+        assert!(stats.conserved(), "not conserved: {:?}", stats);
+        assert_eq!(stats.submitted, n as u64);
+        assert_eq!(stats.rejected, rejected);
+        assert_eq!(stats.terminal(), terminal_seen);
+        // Queue-level conservation across the pool, too.
+        let qs = pool.sched_stats();
+        assert_eq!(qs.admitted, qs.dequeued, "queue drained at quiescence");
+    });
+}
+
+#[test]
+fn kv_budget_serializes_admissions_and_rejects_oversize() {
+    // Budget fits exactly one 4000-byte request at a time.
+    let pool = mock_pool(
+        PoolConfig {
+            replicas: 1,
+            queue_cap: 8,
+            max_inflight: 4,
+            kv_budget_bytes: 5000,
+            ..Default::default()
+        },
+        Duration::from_micros(100),
+    );
+    let rxs: Vec<_> = (0..4)
+        .map(|_| pool.submit(mock_request(4, Priority::Normal)).unwrap().1)
+        .collect();
+    for rx in rxs {
+        drain(rx).expect("budget-admitted request must complete");
+    }
+
+    // A request whose estimate exceeds the whole budget fails fast.
+    let mut big = mock_request(2, Priority::Normal);
+    big.prompt = vec![1; 10]; // 10_000 estimated bytes > 5000 budget
+    big.segments = vec![Segment::Text; 10];
+    big.frame_of = vec![-1; 10];
+    let (_, rx) = pool.submit(big).unwrap();
+    let err = drain(rx).expect_err("oversize request must be rejected");
+    assert!(err.contains("budget"), "unexpected error: {}", err);
+    let stats = settled_stats(&pool);
+    assert!(stats.conserved(), "{:?}", stats);
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.failed, 1);
+}
+
+#[test]
+fn deadlines_expire_queued_requests() {
+    let pool = mock_pool(
+        PoolConfig {
+            replicas: 1,
+            queue_cap: 8,
+            max_inflight: 1,
+            ..Default::default()
+        },
+        Duration::from_micros(500),
+    );
+    // Occupy the only slot with a long generation...
+    let (_, busy) = pool.submit(mock_request(64, Priority::Normal)).unwrap();
+    // ...then queue a request that can only expire.
+    let mut doomed = mock_request(4, Priority::Normal);
+    doomed.deadline = Some(Duration::from_millis(1));
+    let (_, rx) = pool.submit(doomed).unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+    let err = drain(rx).expect_err("deadline must expire the request");
+    assert!(err.contains("deadline"), "unexpected error: {}", err);
+    drain(busy).expect("long request still completes");
+    let stats = settled_stats(&pool);
+    assert_eq!(stats.expired, 1);
+    assert!(stats.conserved(), "{:?}", stats);
+}
+
+#[test]
+fn pool_shutdown_drains_in_flight_work() {
+    let pool = mock_pool(
+        PoolConfig {
+            replicas: 2,
+            queue_cap: 16,
+            max_inflight: 2,
+            ..Default::default()
+        },
+        Duration::from_micros(100),
+    );
+    let rxs: Vec<_> = (0..6)
+        .map(|_| pool.submit(mock_request(8, Priority::Normal)).unwrap().1)
+        .collect();
+    pool.shutdown(); // close + drain + join
+    for rx in rxs {
+        let done = rx.iter().any(|ev| matches!(ev, Event::Done(_)));
+        assert!(done, "in-flight request dropped at shutdown");
+    }
+}

@@ -7,7 +7,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use fastav::coordinator::Coordinator;
-use fastav::http::{api::make_handler, request, Server};
+use fastav::http::{api::make_handler, request, request_with_headers, Server};
 use fastav::model::PruningPlan;
 use fastav::tokens::Layout;
 use fastav::util::json::Json;
@@ -107,6 +107,70 @@ fn unknown_path_is_404() {
     let run = spin_up(root);
     let (code, _) = request(&run.addr, "GET", "/nope", b"").unwrap();
     assert_eq!(code, 404);
+}
+
+#[test]
+fn request_id_echoed_and_pool_status_served() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+    let r = request_with_headers(
+        &run.addr,
+        "POST",
+        "/v1/generate",
+        &[("x-request-id", "trace-123")],
+        br#"{"dataset": "avqa", "index": 1}"#,
+    )
+    .unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    assert_eq!(r.header("x-request-id"), Some("trace-123"));
+    let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+    assert!(j.get("request_id").as_usize().is_some());
+
+    // Pool status reflects the completed request.
+    let (code, body) = request(&run.addr, "GET", "/v1/pool", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("replicas").as_arr().unwrap().len(), 1);
+    assert!(j.get("stats").get("completed").as_f64().unwrap() >= 1.0);
+}
+
+#[test]
+fn cancel_unknown_request_is_404() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+    let (code, body) =
+        request(&run.addr, "POST", "/v1/cancel", br#"{"request_id": 999999}"#).unwrap();
+    assert_eq!(code, 404);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("canceled").as_bool(), Some(false));
+}
+
+#[test]
+fn rejected_requests_carry_retry_after() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+    let barrier = Arc::new(std::sync::Barrier::new(16));
+    let handles: Vec<_> = (0..16)
+        .map(|i| {
+            let addr = run.addr.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let body = format!(r#"{{"dataset": "avqa", "index": {}}}"#, i);
+                barrier.wait();
+                request_with_headers(&addr, "POST", "/v1/generate", &[], body.as_bytes())
+                    .unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let r = h.join().unwrap();
+        match r.status {
+            200 => {}
+            // Backpressure must be retryable: 429 + Retry-After.
+            429 => assert_eq!(r.header("retry-after"), Some("1")),
+            other => panic!("unexpected status {}", other),
+        }
+    }
 }
 
 #[test]

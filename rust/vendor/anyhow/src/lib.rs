@@ -1,0 +1,182 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! This image builds with no registry access, so the crate graph must be
+//! self-contained. This shim implements exactly the surface `fastav`
+//! uses — `anyhow!`, `bail!`, `Context`, `Result`, `{:#}` chain
+//! formatting, and `?` conversion from standard error types — with the
+//! same observable semantics. Swap in the real crate by pointing the
+//! `anyhow` dependency back at crates.io; no call sites change.
+
+use std::fmt;
+
+/// An error: a chain of messages, innermost cause first.
+pub struct Error {
+    /// `chain[0]` is the root cause; later entries are added context.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message (like `anyhow::Error::context`).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.push(c.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` prints the outermost message; `{:#}` prints the whole chain
+    /// outermost-first, `": "`-separated (matching anyhow).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, msg) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{}", msg)?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.root_message())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // unwrap()/expect() go through Debug; show the full chain.
+        write!(f, "{:#}", self)
+    }
+}
+
+// `?` conversion from any std error. Error deliberately does NOT
+// implement std::error::Error, so this blanket impl cannot conflict
+// with `From<Error> for Error` (the same trick the real crate uses).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result` or `Option` (subset of anyhow's trait).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt {}", args)` / `anyhow!(err)` — build an [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `bail!(...)` — early-return `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, ...)` — bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading config")
+            .unwrap_err();
+        assert_eq!(format!("{}", e), "reading config");
+        assert_eq!(format!("{:#}", e), "reading config: missing");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let a = anyhow!("plain");
+        assert_eq!(format!("{}", a), "plain");
+        let b = anyhow!("x = {}", 7);
+        assert_eq!(format!("{}", b), "x = 7");
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(format!("{}", c), "owned");
+
+        fn bails(flag: bool) -> Result<()> {
+            if flag {
+                bail!("nope {}", 1);
+            }
+            ensure!(!flag, "unreachable");
+            Ok(())
+        }
+        assert_eq!(format!("{}", bails(true).unwrap_err()), "nope 1");
+        assert!(bails(false).is_ok());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{}", e), "empty");
+    }
+}
