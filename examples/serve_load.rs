@@ -6,6 +6,13 @@
 //! keep short-request p95 bounded even when mixed with long
 //! generations), and records the numbers in `BENCH_serving.json`.
 //!
+//! A third phase drives the **repeated-prefix** workload the AV-prefix
+//! cache targets: N different questions per sample (same AV prefix,
+//! varying question suffix via the `question` body field). It reports
+//! prefix-cache hit/miss/eviction counts from `GET /v1/pool` plus the
+//! total front-half prefill tokens skipped (summed from each response's
+//! `prefix_tokens_reused`), and records them in `BENCH_prefix.json`.
+//!
 //! ```sh
 //! cargo run --release --example serve_load [model] [n_requests]
 //! ```
@@ -17,6 +24,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use fastav::avsynth::QuestionKind;
 use fastav::coordinator::Coordinator;
 use fastav::http::{api::make_handler, request, Server};
 use fastav::model::PruningPlan;
@@ -187,6 +195,185 @@ fn lat_stats(name: &str, samples: Vec<f64>) -> BenchStats {
     stats_from(name, samples)
 }
 
+/// Repeated-prefix phase result (the AV-prefix cache workload).
+struct PrefixRun {
+    samples: usize,
+    questions_per_sample: usize,
+    completed: usize,
+    rejected: usize,
+    wall: f64,
+    warm_hits: u64,
+    misses: u64,
+    evictions: u64,
+    /// Σ `prefix_tokens_reused` over completed requests = front-half
+    /// prefill tokens the cache skipped.
+    prefill_tokens_saved: u64,
+    warm_lat: BenchStats,
+    cold_lat: BenchStats,
+}
+
+impl PrefixRun {
+    fn to_json(&self) -> Json {
+        let lat = |s: &BenchStats| {
+            Json::obj(vec![
+                ("mean_s", Json::num(s.mean)),
+                ("p50_s", Json::num(s.p50)),
+                ("p95_s", Json::num(s.p95)),
+                ("max_s", Json::num(s.max)),
+            ])
+        };
+        Json::obj(vec![
+            ("samples", Json::num(self.samples as f64)),
+            ("questions_per_sample", Json::num(self.questions_per_sample as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("wall_s", Json::num(self.wall)),
+            ("prefix_hits", Json::num(self.warm_hits as f64)),
+            ("prefix_misses", Json::num(self.misses as f64)),
+            ("prefix_evictions", Json::num(self.evictions as f64)),
+            ("prefill_tokens_saved", Json::num(self.prefill_tokens_saved as f64)),
+            ("cold_latency", lat(&self.cold_lat)),
+            ("warm_latency", lat(&self.warm_lat)),
+        ])
+    }
+}
+
+/// Drive the repeated-prefix workload: for each of `samples` samples,
+/// one cold request (publishes the AV-prefix entry), then
+/// `questions - 1` further questions about the *same* sample issued
+/// concurrently — each should resume from the shared prefix.
+fn drive_prefix(
+    replicas: usize,
+    model: &str,
+    samples: usize,
+    questions: usize,
+    plan: PruningPlan,
+    layout: Layout,
+) -> PrefixRun {
+    let cfg = PoolConfig {
+        replicas,
+        queue_cap: 256,
+        max_inflight: 4,
+        warmup: true,
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::start_pool(common::artifact_root(), model.to_string(), cfg)
+            .expect("start pool"),
+    );
+    let handler = make_handler(Arc::clone(&coord), layout, plan, LONG_MAX_GEN, 1234);
+    let server = Server::bind("127.0.0.1:0", 8, handler).expect("bind");
+    let addr = server.local_addr().to_string();
+    let stop = server.shutdown_handle();
+    let server_thread = std::thread::spawn(move || server.serve());
+
+    let completed = Arc::new(AtomicUsize::new(0));
+    let rejected = Arc::new(AtomicUsize::new(0));
+    let tokens_saved = Arc::new(AtomicUsize::new(0));
+    let warm_lat = Arc::new(Mutex::new(Vec::new()));
+    let mut cold_lat = Vec::new();
+    let clients = ThreadPool::new(8);
+    let t0 = Instant::now();
+    for s in 0..samples {
+        // Cold request first (synchronously): builds + publishes the
+        // entry so the remaining questions hit a warm cache.
+        let body = prefix_body(s, 0);
+        let t = Instant::now();
+        match request(&addr, "POST", "/v1/generate", body.as_bytes()) {
+            Ok((200, resp)) => {
+                completed.fetch_add(1, Ordering::Relaxed);
+                cold_lat.push(t.elapsed().as_secs_f64());
+                tokens_saved.fetch_add(reused_tokens(&resp), Ordering::Relaxed);
+            }
+            Ok((429, _)) => {
+                rejected.fetch_add(1, Ordering::Relaxed);
+            }
+            other => eprintln!("cold request {} -> {:?}", s, other.map(|(c, _)| c)),
+        }
+        for q in 1..questions {
+            let addr = addr.clone();
+            let completed = Arc::clone(&completed);
+            let rejected = Arc::clone(&rejected);
+            let tokens_saved = Arc::clone(&tokens_saved);
+            let warm_lat = Arc::clone(&warm_lat);
+            clients.execute(move || {
+                let body = prefix_body(s, q);
+                let t = Instant::now();
+                match request(&addr, "POST", "/v1/generate", body.as_bytes()) {
+                    Ok((200, resp)) => {
+                        completed.fetch_add(1, Ordering::Relaxed);
+                        warm_lat.lock().unwrap().push(t.elapsed().as_secs_f64());
+                        tokens_saved.fetch_add(reused_tokens(&resp), Ordering::Relaxed);
+                    }
+                    Ok((429, _)) => {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok((code, resp)) => eprintln!(
+                        "warm request {}/{} -> {}: {}",
+                        s,
+                        q,
+                        code,
+                        String::from_utf8_lossy(&resp)
+                    ),
+                    Err(e) => eprintln!("warm request {}/{} failed: {}", s, q, e),
+                }
+            });
+        }
+    }
+    clients.wait_idle();
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Cache counters from the pool endpoint.
+    let (hits, misses, evictions) = match request(&addr, "GET", "/v1/pool", b"") {
+        Ok((200, body)) => {
+            let j = Json::parse(std::str::from_utf8(&body).unwrap_or("")).unwrap_or(Json::Null);
+            let p = j.get("prefix_cache");
+            (
+                p.get("hits").as_f64().unwrap_or(0.0) as u64,
+                p.get("misses").as_f64().unwrap_or(0.0) as u64,
+                p.get("evictions").as_f64().unwrap_or(0.0) as u64,
+            )
+        }
+        _ => (0, 0, 0),
+    };
+    stop.store(true, Ordering::SeqCst);
+    let _ = server_thread.join();
+
+    let warm = warm_lat.lock().unwrap().clone();
+    PrefixRun {
+        samples,
+        questions_per_sample: questions,
+        completed: completed.load(Ordering::Relaxed),
+        rejected: rejected.load(Ordering::Relaxed),
+        wall,
+        warm_hits: hits,
+        misses,
+        evictions,
+        prefill_tokens_saved: tokens_saved.load(Ordering::Relaxed) as u64,
+        cold_lat: lat_stats("prefix cold (miss)", cold_lat),
+        warm_lat: lat_stats("prefix warm (hit)", warm),
+    }
+}
+
+/// Body for question `q` about sample `s`: same (dataset, index) → same
+/// AV prefix; the `question` field swaps the text suffix.
+fn prefix_body(s: usize, q: usize) -> String {
+    format!(
+        r#"{{"dataset": "avqa", "index": {}, "max_gen": 2, "question": "{}"}}"#,
+        s,
+        QuestionKind::nth(q).name()
+    )
+}
+
+/// Pull `prefix_tokens_reused` out of a generate response.
+fn reused_tokens(resp: &[u8]) -> usize {
+    std::str::from_utf8(resp)
+        .ok()
+        .and_then(|s| Json::parse(s).ok())
+        .map(|j| j.get("prefix_tokens_reused").as_usize().unwrap_or(0))
+        .unwrap_or(0)
+}
+
 fn main() {
     let model = common::model_arg();
     let n_requests = common::n_arg(48).max(8);
@@ -207,7 +394,7 @@ fn main() {
     );
     let single = drive("single", 1, &model, n_requests, plan.clone(), layout.clone());
     single.report();
-    let pool4 = drive("pool4", 4, &model, n_requests, plan, layout);
+    let pool4 = drive("pool4", 4, &model, n_requests, plan.clone(), layout.clone());
     pool4.report();
 
     let speedup = pool4.throughput() / single.throughput().max(1e-12);
@@ -226,4 +413,46 @@ fn main() {
     ]);
     std::fs::write("BENCH_serving.json", out.to_string() + "\n").expect("write BENCH_serving.json");
     println!("wrote BENCH_serving.json");
+
+    // --- Phase 3: repeated-prefix workload (AV-prefix cache). ----------
+    let samples = 4;
+    let questions = 8;
+    println!(
+        "\ndriving repeated-prefix workload: {} samples x {} questions (pool of 2)",
+        samples, questions
+    );
+    let prefix = drive_prefix(2, &model, samples, questions, plan, layout);
+    println!(
+        "[prefix] {} ok / {} rejected in {:.2}s — {} hits / {} misses / {} evictions, \
+         {} prefill tokens saved",
+        prefix.completed,
+        prefix.rejected,
+        prefix.wall,
+        prefix.warm_hits,
+        prefix.misses,
+        prefix.evictions,
+        prefix.prefill_tokens_saved
+    );
+    prefix.cold_lat.report();
+    prefix.warm_lat.report();
+    let out = Json::obj(vec![
+        ("benchmark", Json::str("serve_load_prefix")),
+        ("model", Json::str(&model)),
+        ("replicas", Json::num(2.0)),
+        ("prefix", prefix.to_json()),
+        ("measured", Json::Bool(true)),
+        (
+            "methodology",
+            Json::str(
+                "One cold request per sample publishes the AV-prefix entry; the \
+                 remaining questions_per_sample-1 requests re-ask different questions \
+                 (question body field) about the same sample concurrently. hits/misses/\
+                 evictions come from GET /v1/pool prefix_cache; prefill_tokens_saved is \
+                 the sum of per-response prefix_tokens_reused (front-half prefill tokens \
+                 skipped by mid-sequence resume).",
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_prefix.json", out.to_string() + "\n").expect("write BENCH_prefix.json");
+    println!("wrote BENCH_prefix.json");
 }

@@ -320,6 +320,91 @@ pub fn gen_sample(cfg: &Layout, dataset: Dataset, index: u64, base_seed: u64) ->
     }
 }
 
+/// Argless retrieval questions that can be re-asked about any sample —
+/// the serving-side "N questions per sample" workload the AV-prefix
+/// cache accelerates. Kept out of [`gen_sample`] so the cross-language
+/// bit-identity contract (pinned by `testdata/avsynth_vectors.json`) is
+/// untouched: the AV streams stay exactly as generated; only the
+/// trailing question text (and the derived answer) are rewritten.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuestionKind {
+    WhatScene,
+    WhatSound,
+    SceneSound,
+}
+
+impl QuestionKind {
+    pub fn parse(name: &str) -> Option<QuestionKind> {
+        Some(match name {
+            "what_scene" => QuestionKind::WhatScene,
+            "what_sound" => QuestionKind::WhatSound,
+            "scene_sound" => QuestionKind::SceneSound,
+            _ => return None,
+        })
+    }
+
+    /// Round-robin variant for workload drivers.
+    pub fn nth(i: usize) -> QuestionKind {
+        match i % 3 {
+            0 => QuestionKind::WhatScene,
+            1 => QuestionKind::WhatSound,
+            _ => QuestionKind::SceneSound,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuestionKind::WhatScene => "what_scene",
+            QuestionKind::WhatSound => "what_sound",
+            QuestionKind::SceneSound => "scene_sound",
+        }
+    }
+}
+
+impl Sample {
+    /// The same sample asking a different question: identical AV prefix
+    /// (tokens, segments, frame map), new trailing question text, and
+    /// the ground-truth answer recomputed from the sample's latent
+    /// scene/sound.
+    pub fn with_question(&self, q: QuestionKind) -> Sample {
+        let (subtask, qword, answer) = match q {
+            QuestionKind::WhatScene => (
+                Subtask::WhatScene,
+                V::Q_WHAT_SCENE,
+                vec![V::scene_token(self.scene), V::EOS],
+            ),
+            QuestionKind::WhatSound => (
+                Subtask::WhatSound,
+                V::Q_WHAT_SOUND,
+                vec![V::sound_token(self.sound), V::EOS],
+            ),
+            QuestionKind::SceneSound => (
+                Subtask::SceneSound,
+                V::Q_SCENE_SOUND,
+                vec![V::scene_token(self.scene), V::sound_token(self.sound), V::EOS],
+            ),
+        };
+        // The question is the trailing run of Text tokens.
+        let text_start = self
+            .segments
+            .iter()
+            .position(|&g| g == Segment::Text)
+            .unwrap_or(self.prompt.len());
+        let mut out = self.clone();
+        out.subtask = subtask;
+        out.answer = answer;
+        out.prompt.truncate(text_start);
+        out.segments.truncate(text_start);
+        out.frame_of.truncate(text_start);
+        for t in question(qword, None) {
+            out.prompt.push(t);
+            out.segments.push(Segment::Text);
+            out.frame_of.push(-1);
+        }
+        out
+    }
+}
+
 /// Structural hash used by the cross-language reference vectors:
 /// `h = (h * 31 + token) mod 2^32` over `prompt ++ answer`.
 pub fn sample_hash(s: &Sample) -> u32 {
@@ -374,6 +459,46 @@ mod tests {
         assert_eq!(f0.len(), l.vis_per_frame + l.aud_per_frame);
         let contiguous: Vec<usize> = (f0[0]..=*f0.last().unwrap()).collect();
         assert_eq!(f0, contiguous);
+    }
+
+    #[test]
+    fn with_question_preserves_av_prefix() {
+        let l = vl2sim_layout();
+        let s = gen_sample(&l, Dataset::Avqa, 9, BASE_SEED);
+        let p = s.segments.iter().position(|&g| g == Segment::Text).unwrap();
+        for (i, q) in [
+            QuestionKind::WhatScene,
+            QuestionKind::WhatSound,
+            QuestionKind::SceneSound,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            assert_eq!(QuestionKind::nth(i), q);
+            let v = s.with_question(q);
+            // Identical AV prefix — the property the prefix cache keys on.
+            assert_eq!(&v.prompt[..p], &s.prompt[..p]);
+            assert_eq!(&v.segments[..p], &s.segments[..p]);
+            assert_eq!(&v.frame_of[..p], &s.frame_of[..p]);
+            assert_eq!(v.prompt.len(), v.segments.len());
+            assert_eq!(v.prompt.len(), v.frame_of.len());
+            // Question text swapped in, answer re-derived from latents.
+            assert!(v.segments[p..].iter().all(|&g| g == Segment::Text));
+            assert_eq!(*v.answer.last().unwrap(), V::EOS);
+            match q {
+                QuestionKind::WhatScene => {
+                    assert_eq!(v.answer[0], V::scene_token(s.scene))
+                }
+                QuestionKind::WhatSound => {
+                    assert_eq!(v.answer[0], V::sound_token(s.sound))
+                }
+                QuestionKind::SceneSound => {
+                    assert_eq!(v.answer[0], V::scene_token(s.scene));
+                    assert_eq!(v.answer[1], V::sound_token(s.sound));
+                }
+            }
+            assert_eq!(QuestionKind::parse(q.name()), Some(q));
+        }
     }
 
     #[test]

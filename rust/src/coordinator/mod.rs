@@ -151,6 +151,23 @@ impl Coordinator {
         self.pool.status()
     }
 
+    /// AV-prefix cache accounting (hits/misses/evictions, entries, bytes).
+    pub fn prefix_stats(&self) -> crate::kvcache::PrefixCacheStats {
+        self.pool.prefix_stats()
+    }
+
+    /// Shared KV block-pool accounting (used/shared/free blocks).
+    pub fn block_stats(&self) -> crate::kvcache::BlockPoolStats {
+        self.pool.prefix_cache().pool().stats()
+    }
+
+    /// Evict every lease-free prefix entry; returns
+    /// `(entries_evicted, bytes_freed)` (the `POST /v1/cache/flush`
+    /// endpoint).
+    pub fn flush_prefix_cache(&self) -> (usize, usize) {
+        self.pool.flush_prefix_cache()
+    }
+
     pub fn replica_count(&self) -> usize {
         self.pool.replica_count()
     }

@@ -4,11 +4,20 @@
 //! Endpoints:
 //! * `POST /v1/generate` — body `{"dataset": "...", "index": N,
 //!   "no_pruning": bool, "priority": "high"?, "max_gen": N?,
-//!   "deadline_ms": N?}`; generates the avsynth sample's answer and
-//!   returns tokens + efficiency metrics + the pool request id.
+//!   "deadline_ms": N?, "question": "what_scene"|"what_sound"|
+//!   "scene_sound"?}`; generates the avsynth sample's answer and returns
+//!   tokens + efficiency metrics (including `prefix_hit` /
+//!   `prefix_tokens_reused` from the AV-prefix cache) + the pool request
+//!   id. The optional `question` override re-asks a *different* question
+//!   about the same sample — the workload shape the prefix cache
+//!   accelerates, since the AV prefix K/V is shared across questions.
 //! * `POST /v1/cancel` — body `{"request_id": N}`; cooperative
 //!   cancellation of a queued or running request.
-//! * `GET /v1/pool` — per-replica status + the pool conservation ledger.
+//! * `POST /v1/cache/flush` — evict every lease-free AV-prefix cache
+//!   entry; returns `{"flushed_entries": N, "freed_bytes": N}`.
+//! * `GET /v1/pool` — per-replica status, the pool conservation ledger,
+//!   prefix-cache stats (`hits`/`misses`/`evictions`/`entries`/`bytes`)
+//!   and shared KV block-pool gauges (`used`/`shared`/`free`).
 //! * `GET /metrics` — Prometheus text exposition.
 //! * `GET /healthz` — liveness.
 //!
@@ -21,7 +30,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use super::{Handler, Request, Response};
-use crate::avsynth::{gen_sample, Dataset};
+use crate::avsynth::{gen_sample, Dataset, QuestionKind};
 use crate::coordinator::{Coordinator, Event, GenRequest, Priority};
 use crate::eval::exact_match;
 use crate::model::{GenerateOptions, PruningPlan};
@@ -70,6 +79,7 @@ fn route(
         ("GET", "/v1/pool") => pool_status(coord),
         ("POST", "/v1/generate") => generate(req, coord, layout, plan, max_gen, base_seed),
         ("POST", "/v1/cancel") => cancel(req, coord),
+        ("POST", "/v1/cache/flush") => cache_flush(coord),
         ("GET", _) | ("POST", _) => Response::text(404, "not found"),
         _ => Response::text(405, "method not allowed"),
     }
@@ -96,6 +106,8 @@ fn pool_status(coord: &Coordinator) -> Response {
         ])
     });
     let s = coord.pool_stats();
+    let p = coord.prefix_stats();
+    let b = coord.block_stats();
     let out = Json::obj(vec![
         ("replicas", Json::arr(replicas)),
         (
@@ -111,6 +123,36 @@ fn pool_status(coord: &Coordinator) -> Response {
                 ("in_flight", Json::num(s.in_flight as f64)),
             ]),
         ),
+        (
+            "prefix_cache",
+            Json::obj(vec![
+                ("entries", Json::num(p.entries as f64)),
+                ("bytes", Json::num(p.bytes as f64)),
+                ("active_leases", Json::num(p.active_leases as f64)),
+                ("hits", Json::num(p.hits as f64)),
+                ("misses", Json::num(p.misses as f64)),
+                ("evictions", Json::num(p.evictions as f64)),
+                ("insertions", Json::num(p.insertions as f64)),
+            ]),
+        ),
+        (
+            "kv_blocks",
+            Json::obj(vec![
+                ("used", Json::num(b.used as f64)),
+                ("shared", Json::num(b.shared as f64)),
+                ("free", Json::num(b.free as f64)),
+                ("bytes_used", Json::num(b.bytes_used as f64)),
+            ]),
+        ),
+    ]);
+    Response::json(200, out.to_string())
+}
+
+fn cache_flush(coord: &Coordinator) -> Response {
+    let (flushed, freed) = coord.flush_prefix_cache();
+    let out = Json::obj(vec![
+        ("flushed_entries", Json::num(flushed as f64)),
+        ("freed_bytes", Json::num(freed as f64)),
     ]);
     Response::json(200, out.to_string())
 }
@@ -160,7 +202,20 @@ fn generate(
         .get("deadline_ms")
         .as_usize()
         .map(|ms| Duration::from_millis(ms as u64));
-    let sample = gen_sample(layout, dataset, index, base_seed);
+    let mut sample = gen_sample(layout, dataset, index, base_seed);
+    // Optional question override: re-ask about the same sample (same AV
+    // prefix, different text suffix) — the prefix-cache workload shape.
+    if let Some(qname) = body.get("question").as_str() {
+        match QuestionKind::parse(qname) {
+            Some(q) => sample = sample.with_question(q),
+            None => {
+                return Response::text(
+                    400,
+                    "question must be one of what_scene|what_sound|scene_sound",
+                )
+            }
+        }
+    }
     let request = GenRequest {
         prompt: sample.prompt.clone(),
         segments: sample.segments.clone(),
@@ -207,6 +262,11 @@ fn generate(
                     ("prefill_seconds", Json::num(res.prefill_seconds)),
                     ("decode_seconds", Json::num(res.decode_seconds)),
                     ("peak_kv_bytes", Json::num(res.peak_kv_bytes as f64)),
+                    ("prefix_hit", Json::Bool(res.prefix_hit)),
+                    (
+                        "prefix_tokens_reused",
+                        Json::num(res.prefix_tokens_reused as f64),
+                    ),
                 ]);
                 return Response::json(200, out.to_string())
                     .with_header("x-request-id", &id_str);

@@ -1,0 +1,308 @@
+//! Fixed-size KV block pool: the allocation substrate of the paged cache.
+//!
+//! A *block* holds the K and V rows of up to [`BLOCK_TOKENS`] tokens for
+//! one layer, stored token-major (`[BLOCK_TOKENS, n_heads * d_head]`), so
+//! appending one token is a single contiguous row write. Blocks live in a
+//! process-wide [`BlockPool`] and are *refcounted*: a [`super::LayerCache`]
+//! owns references into the pool, cloning a cache bumps refcounts instead
+//! of copying payloads, and the prefix cache shares one frozen AV-prefix
+//! across every request that reuses it.
+//!
+//! Invariants (property-tested in `rust/tests/test_prefix.rs`):
+//! * conservation — every slot is either on the free list or referenced
+//!   (`used + free == slots`), and a released block reaches refcount 0
+//!   exactly once;
+//! * copy-on-write — a block with refcount > 1 is never written through
+//!   (`write_row` asserts sole ownership); writers fork first via
+//!   [`BlockPool::fork`];
+//! * clean padding — freshly allocated (and recycled) blocks are
+//!   zero-filled, so slots beyond a cache's live length always read 0.0.
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Tokens per block. Small enough that a forked tail block copies little,
+/// large enough that block lists stay short for bucket-sized caches.
+pub const BLOCK_TOKENS: usize = 16;
+
+/// Pool-internal block storage.
+struct BlockSlot {
+    /// Outstanding references; 0 means the slot is on the free list.
+    refs: u32,
+    /// `n_heads * d_head` — the per-token row width this slot is sized for.
+    row_elems: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+#[derive(Default)]
+struct PoolInner {
+    slots: Vec<BlockSlot>,
+    free: Vec<usize>,
+}
+
+/// Point-in-time pool accounting (the `kv_blocks_*` gauges).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BlockPoolStats {
+    /// Slots with refcount >= 1.
+    pub used: usize,
+    /// Slots with refcount >= 2 (shared between caches / prefix entries).
+    pub shared: usize,
+    /// Recycled slots awaiting reuse.
+    pub free: usize,
+    /// K+V payload bytes of used slots, each block counted once no matter
+    /// how many caches reference it.
+    pub bytes_used: usize,
+}
+
+/// A shared, refcounted pool of fixed-size KV blocks. Cheap to clone
+/// (`Arc` handle); all methods take `&self` and lock internally, so one
+/// pool can back caches on every replica thread.
+#[derive(Clone)]
+pub struct BlockPool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl Default for BlockPool {
+    fn default() -> Self {
+        BlockPool::new()
+    }
+}
+
+impl std::fmt::Debug for BlockPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(f, "BlockPool(used={}, shared={}, free={})", s.used, s.shared, s.free)
+    }
+}
+
+impl BlockPool {
+    /// A fresh, isolated pool (tests; the serving stack uses
+    /// [`BlockPool::global`]).
+    pub fn new() -> BlockPool {
+        BlockPool { inner: Arc::new(Mutex::new(PoolInner::default())) }
+    }
+
+    /// The process-wide pool every [`super::LayerCache`] built without an
+    /// explicit pool allocates from. One pool per process is what lets
+    /// prefix entries created on one replica back caches on another.
+    pub fn global() -> BlockPool {
+        static GLOBAL: OnceLock<BlockPool> = OnceLock::new();
+        GLOBAL.get_or_init(BlockPool::new).clone()
+    }
+
+    /// Whether two handles refer to the same underlying pool.
+    pub fn same_pool(&self, other: &BlockPool) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    /// Allocate a zero-filled block sized for `row_elems`-wide token rows,
+    /// returning its id with refcount 1.
+    pub fn alloc(&self, row_elems: usize) -> usize {
+        assert!(row_elems > 0, "zero-width block row");
+        let mut p = self.inner.lock().unwrap();
+        // Reuse a free slot of the same geometry if one exists.
+        if let Some(pos) = p
+            .free
+            .iter()
+            .position(|&id| p.slots[id].row_elems == row_elems)
+        {
+            let id = p.free.swap_remove(pos);
+            let s = &mut p.slots[id];
+            s.k.fill(0.0);
+            s.v.fill(0.0);
+            s.refs = 1;
+            return id;
+        }
+        let elems = BLOCK_TOKENS * row_elems;
+        p.slots.push(BlockSlot {
+            refs: 1,
+            row_elems,
+            k: vec![0.0; elems],
+            v: vec![0.0; elems],
+        });
+        p.slots.len() - 1
+    }
+
+    /// Add a reference (cache clone / prefix share).
+    pub fn retain(&self, id: usize) {
+        let mut p = self.inner.lock().unwrap();
+        let s = &mut p.slots[id];
+        assert!(s.refs > 0, "retain of a free block {}", id);
+        s.refs += 1;
+    }
+
+    /// Drop a reference; the block is recycled when the count hits 0.
+    pub fn release(&self, id: usize) {
+        let mut p = self.inner.lock().unwrap();
+        let s = &mut p.slots[id];
+        assert!(s.refs > 0, "release of a free block {}", id);
+        s.refs -= 1;
+        if s.refs == 0 {
+            p.free.push(id);
+        }
+    }
+
+    /// Current refcount (COW decision point).
+    pub fn refs(&self, id: usize) -> u32 {
+        self.inner.lock().unwrap().slots[id].refs
+    }
+
+    /// Copy-on-write fork: a new block (refcount 1) with the same payload.
+    /// The caller keeps its reference on `id` and must release it
+    /// separately if it is swapping the fork in.
+    pub fn fork(&self, id: usize) -> usize {
+        let row_elems = {
+            let p = self.inner.lock().unwrap();
+            p.slots[id].row_elems
+        };
+        let copy = self.alloc(row_elems);
+        let mut p = self.inner.lock().unwrap();
+        // Split the slots vector to borrow source and destination at once.
+        let (src, dst) = if id < copy {
+            let (a, b) = p.slots.split_at_mut(copy);
+            (&a[id], &mut b[0])
+        } else {
+            let (a, b) = p.slots.split_at_mut(id);
+            (&b[0], &mut a[copy])
+        };
+        dst.k.copy_from_slice(&src.k);
+        dst.v.copy_from_slice(&src.v);
+        copy
+    }
+
+    /// Write one token's K/V row (`row_elems` floats each) at `slot`.
+    /// COW safety: asserts the block is solely owned.
+    pub fn write_row(&self, id: usize, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        assert!(slot < BLOCK_TOKENS);
+        let mut p = self.inner.lock().unwrap();
+        let s = &mut p.slots[id];
+        assert_eq!(s.refs, 1, "copy-on-write violation: write to shared block {}", id);
+        let w = s.row_elems;
+        assert_eq!(k_row.len(), w);
+        assert_eq!(v_row.len(), w);
+        s.k[slot * w..(slot + 1) * w].copy_from_slice(k_row);
+        s.v[slot * w..(slot + 1) * w].copy_from_slice(v_row);
+    }
+
+    /// Read access to a block's K/V payload under the pool lock.
+    pub fn with_kv<R>(&self, id: usize, f: impl FnOnce(&[f32], &[f32]) -> R) -> R {
+        let p = self.inner.lock().unwrap();
+        let s = &p.slots[id];
+        assert!(s.refs > 0, "read of a free block {}", id);
+        f(&s.k, &s.v)
+    }
+
+    /// Pool-wide accounting snapshot.
+    pub fn stats(&self) -> BlockPoolStats {
+        let p = self.inner.lock().unwrap();
+        let mut st = BlockPoolStats::default();
+        for s in &p.slots {
+            if s.refs > 0 {
+                st.used += 1;
+                st.bytes_used += (s.k.len() + s.v.len()) * std::mem::size_of::<f32>();
+                if s.refs > 1 {
+                    st.shared += 1;
+                }
+            }
+        }
+        st.free = p.free.len();
+        debug_assert_eq!(st.used + st.free, p.slots.len(), "pool conservation");
+        st
+    }
+
+    /// Total slots ever created (conservation checks in tests).
+    pub fn total_slots(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+}
+
+/// Payload bytes of one block sized for `row_elems`-wide rows (K + V).
+pub fn block_bytes(row_elems: usize) -> usize {
+    2 * BLOCK_TOKENS * row_elems * std::mem::size_of::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_recycles() {
+        let p = BlockPool::new();
+        let a = p.alloc(8);
+        assert_eq!(p.refs(a), 1);
+        p.release(a);
+        assert_eq!(p.stats().free, 1);
+        let b = p.alloc(8);
+        assert_eq!(b, a, "same-geometry slot is recycled");
+        assert_eq!(p.total_slots(), 1);
+        p.release(b);
+    }
+
+    #[test]
+    fn recycled_blocks_are_zeroed() {
+        let p = BlockPool::new();
+        let a = p.alloc(2);
+        p.write_row(a, 3, &[1.0, 2.0], &[3.0, 4.0]);
+        p.release(a);
+        let b = p.alloc(2);
+        p.with_kv(b, |k, v| {
+            assert!(k.iter().all(|&x| x == 0.0));
+            assert!(v.iter().all(|&x| x == 0.0));
+        });
+        p.release(b);
+    }
+
+    #[test]
+    fn geometry_mismatch_allocates_new_slot() {
+        let p = BlockPool::new();
+        let a = p.alloc(4);
+        p.release(a);
+        let b = p.alloc(8); // different row width: must not reuse slot a
+        assert_ne!(a, b);
+        p.release(b);
+    }
+
+    #[test]
+    fn fork_copies_payload_and_is_sole_owned() {
+        let p = BlockPool::new();
+        let a = p.alloc(2);
+        p.write_row(a, 0, &[5.0, 6.0], &[7.0, 8.0]);
+        p.retain(a); // now shared
+        let f = p.fork(a);
+        assert_eq!(p.refs(f), 1);
+        p.with_kv(f, |k, _| assert_eq!(&k[..2], &[5.0, 6.0]));
+        // Writing the fork must not touch the original.
+        p.write_row(f, 0, &[9.0, 9.0], &[9.0, 9.0]);
+        p.with_kv(a, |k, _| assert_eq!(&k[..2], &[5.0, 6.0]));
+        p.release(a);
+        p.release(a);
+        p.release(f);
+        assert_eq!(p.stats().used, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "copy-on-write violation")]
+    fn write_to_shared_block_panics() {
+        let p = BlockPool::new();
+        let a = p.alloc(2);
+        p.retain(a);
+        p.write_row(a, 0, &[0.0, 0.0], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn stats_track_shared() {
+        let p = BlockPool::new();
+        let a = p.alloc(2);
+        let b = p.alloc(2);
+        p.retain(a);
+        let s = p.stats();
+        assert_eq!(s.used, 2);
+        assert_eq!(s.shared, 1);
+        assert_eq!(s.bytes_used, 2 * block_bytes(2));
+        p.release(a);
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.stats().used, 0);
+        assert_eq!(p.stats().free, 2);
+    }
+}

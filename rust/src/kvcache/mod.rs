@@ -1,45 +1,102 @@
-//! Per-layer compacted KV caches.
+//! Paged per-layer KV caches over a refcounted block pool.
 //!
 //! FastAV's fine pruning gives every layer a *different* live token set,
-//! so each layer owns an independent cache. Layout matches the artifact
-//! ABI exactly — `[H, cap, dh]` row-major f32, where `cap` is the compiled
-//! bucket capacity — so cache slices upload to PJRT without reshuffling.
+//! so each layer owns an independent cache. Storage is **paged**: a
+//! [`LayerCache`] is a view over a list of fixed-size blocks
+//! ([`block::BLOCK_TOKENS`] token rows each) owned by a shared, refcounted
+//! [`BlockPool`]. Capacity is logical — `grow` re-targets the compiled
+//! bucket without moving a byte — and cloning a cache bumps block
+//! refcounts instead of copying payloads, which is what makes the
+//! [`prefix`] cache's AV-prefix sharing O(1) per request.
+//!
+//! Copy-on-write: `append` and `compact` fork only the blocks they
+//! rewrite. A frozen prefix shared with the [`prefix::PrefixCache`] (or
+//! with another request) is never copied — fine pruning on one request
+//! cannot perturb another request sharing its prefix (property-tested in
+//! `rust/tests/test_prefix.rs`).
 //!
 //! Invariants (property-tested in `rust/tests/`):
-//! * slots `0..len` are live, `len..cap` are padding;
+//! * slots `0..len` are live; every allocated slot `>= len` reads 0.0
+//!   (blocks are zero-filled on allocation and recycled zeroed, and
+//!   `compact` rebuilds its tail into fresh blocks — the vacated range is
+//!   exactly zero, not just the first 64 rows as in the pre-paged layout);
 //! * `positions[i]` is the token's *original* sequence position (RoPE
 //!   phases survive compaction);
-//! * `compact(keep)` preserves (position → K/V row) for kept tokens;
-//! * `grow(cap')` preserves all live rows and their order.
+//! * `compact(keep)` preserves (position → K/V row) for kept tokens and
+//!   never writes through a block with refcount > 1;
+//! * `grow(cap')` preserves all live rows and their order;
+//! * upload layout is materialized on demand by [`LayerCache::padded_kv`]
+//!   as `[H, cap, dh]` row-major f32 — the artifact ABI is unchanged.
 
-/// KV cache for one transformer layer.
-#[derive(Debug, Clone)]
+pub mod block;
+pub mod prefix;
+
+pub use block::{block_bytes, BlockPool, BlockPoolStats, BLOCK_TOKENS};
+pub use prefix::{PrefixCache, PrefixCacheStats, PrefixEntry, PrefixLease};
+
+/// KV cache for one transformer layer: a refcounted block list plus the
+/// live length, logical capacity, and original token positions.
+#[derive(Debug)]
 pub struct LayerCache {
     pub n_heads: usize,
     pub d_head: usize,
     cap: usize,
     len: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    blocks: Vec<usize>,
     positions: Vec<i32>,
+    pool: BlockPool,
+}
+
+impl Clone for LayerCache {
+    /// O(blocks) refcount bumps; payloads are shared until a writer forks.
+    fn clone(&self) -> LayerCache {
+        for &id in &self.blocks {
+            self.pool.retain(id);
+        }
+        LayerCache {
+            n_heads: self.n_heads,
+            d_head: self.d_head,
+            cap: self.cap,
+            len: self.len,
+            blocks: self.blocks.clone(),
+            positions: self.positions.clone(),
+            pool: self.pool.clone(),
+        }
+    }
+}
+
+impl Drop for LayerCache {
+    fn drop(&mut self) {
+        for &id in &self.blocks {
+            self.pool.release(id);
+        }
+    }
 }
 
 impl LayerCache {
-    /// Empty cache with `cap` slots.
+    /// Empty cache with logical capacity `cap`, allocating from the
+    /// process-wide [`BlockPool::global`]. No blocks are allocated until
+    /// rows are appended.
     pub fn new(n_heads: usize, d_head: usize, cap: usize) -> LayerCache {
+        Self::new_in(BlockPool::global(), n_heads, d_head, cap)
+    }
+
+    /// [`LayerCache::new`] against an explicit pool (isolated tests).
+    pub fn new_in(pool: BlockPool, n_heads: usize, d_head: usize, cap: usize) -> LayerCache {
         LayerCache {
             n_heads,
             d_head,
             cap,
             len: 0,
-            k: vec![0.0; n_heads * cap * d_head],
-            v: vec![0.0; n_heads * cap * d_head],
-            positions: Vec::with_capacity(cap),
+            blocks: Vec::new(),
+            positions: Vec::with_capacity(cap.min(1024)),
+            pool,
         }
     }
 
     /// Build from prefill output `[H, src_n, dh]` keeping rows `0..valid`.
     /// `positions[i]` gives the original position of row `i`.
+    #[allow(clippy::too_many_arguments)]
     pub fn from_prefill(
         n_heads: usize,
         d_head: usize,
@@ -54,18 +111,22 @@ impl LayerCache {
         assert_eq!(src_k.len(), n_heads * src_n * d_head);
         assert_eq!(positions.len(), valid);
         let mut c = LayerCache::new(n_heads, d_head, cap);
-        for h in 0..n_heads {
-            let src_base = h * src_n * d_head;
-            let dst_base = h * cap * d_head;
-            let rows = valid * d_head;
-            c.k[dst_base..dst_base + rows]
-                .copy_from_slice(&src_k[src_base..src_base + rows]);
-            c.v[dst_base..dst_base + rows]
-                .copy_from_slice(&src_v[src_base..src_base + rows]);
+        let dh = d_head;
+        let mut k_row = vec![0.0f32; n_heads * dh];
+        let mut v_row = vec![0.0f32; n_heads * dh];
+        for (i, &pos) in positions.iter().enumerate().take(valid) {
+            for h in 0..n_heads {
+                let src = h * src_n * dh + i * dh;
+                k_row[h * dh..(h + 1) * dh].copy_from_slice(&src_k[src..src + dh]);
+                v_row[h * dh..(h + 1) * dh].copy_from_slice(&src_v[src..src + dh]);
+            }
+            c.append(&k_row, &v_row, pos);
         }
-        c.len = valid;
-        c.positions.extend_from_slice(positions);
         c
+    }
+
+    fn row_elems(&self) -> usize {
+        self.n_heads * self.d_head
     }
 
     pub fn len(&self) -> usize {
@@ -84,22 +145,29 @@ impl LayerCache {
         &self.positions
     }
 
-    pub fn k_data(&self) -> &[f32] {
-        &self.k
+    /// The pool this cache allocates from.
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
     }
 
-    pub fn v_data(&self) -> &[f32] {
-        &self.v
+    /// Block ids backing this cache (refcount inspection in tests).
+    pub fn block_ids(&self) -> &[usize] {
+        &self.blocks
     }
 
-    /// Heap bytes of the K/V payload (the paper's memory metric).
+    /// Heap bytes of the K/V payload actually allocated (paged: blocks ×
+    /// block size, independent of the logical `cap`). A block shared with
+    /// another cache is counted here by *each* holder; pool-level
+    /// accounting that counts shared blocks once lives in
+    /// [`BlockPool::stats`].
     pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+        self.blocks.len() * block_bytes(self.row_elems())
     }
 
-    /// Byte footprint of one layer's K+V slab at capacity `cap`, without
-    /// building it — serving admission gates on this estimate before a
-    /// request is allowed to allocate real caches.
+    /// Byte footprint of one layer's K+V at capacity `cap`, without
+    /// building it — serving admission gates on this *upper bound* before
+    /// a request is allowed to allocate real blocks (paged allocation can
+    /// only come in under it).
     pub fn slab_bytes(n_heads: usize, d_head: usize, cap: usize) -> usize {
         2 * n_heads * cap * d_head * std::mem::size_of::<f32>()
     }
@@ -113,81 +181,175 @@ impl LayerCache {
         m
     }
 
-    /// One K row (head `h`, slot `i`) — test/debug helper.
-    pub fn k_row(&self, h: usize, i: usize) -> &[f32] {
-        let base = h * self.cap * self.d_head + i * self.d_head;
-        &self.k[base..base + self.d_head]
+    /// One K row (head `h`, slot `i`) — test/debug helper. Slots beyond
+    /// the allocated blocks read as padding (all zero).
+    pub fn k_row(&self, h: usize, i: usize) -> Vec<f32> {
+        self.read_row(h, i, false)
     }
 
-    pub fn v_row(&self, h: usize, i: usize) -> &[f32] {
-        let base = h * self.cap * self.d_head + i * self.d_head;
-        &self.v[base..base + self.d_head]
+    pub fn v_row(&self, h: usize, i: usize) -> Vec<f32> {
+        self.read_row(h, i, true)
+    }
+
+    fn read_row(&self, h: usize, i: usize, want_v: bool) -> Vec<f32> {
+        assert!(i < self.cap, "slot {} out of cap {}", i, self.cap);
+        let dh = self.d_head;
+        let w = self.row_elems();
+        let bi = i / BLOCK_TOKENS;
+        if bi >= self.blocks.len() {
+            return vec![0.0; dh]; // unallocated padding
+        }
+        let slot = i % BLOCK_TOKENS;
+        self.pool.with_kv(self.blocks[bi], |k, v| {
+            let src = if want_v { v } else { k };
+            src[slot * w + h * dh..slot * w + (h + 1) * dh].to_vec()
+        })
+    }
+
+    /// Materialize the artifact-ABI upload layout: `[H, cap, dh]` K and V
+    /// slabs, zero-padded beyond `len`.
+    pub fn padded_kv(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut k_out = Vec::new();
+        let mut v_out = Vec::new();
+        self.padded_kv_into(&mut k_out, &mut v_out);
+        (k_out, v_out)
+    }
+
+    /// [`Self::padded_kv`] into caller-owned buffers (resized and
+    /// zeroed here) — the decode hot path reuses scratch buffers so the
+    /// per-step gather allocates nothing.
+    pub fn padded_kv_into(&self, k_out: &mut Vec<f32>, v_out: &mut Vec<f32>) {
+        let (h_n, dh, w) = (self.n_heads, self.d_head, self.row_elems());
+        let elems = h_n * self.cap * dh;
+        k_out.clear();
+        k_out.resize(elems, 0.0);
+        v_out.clear();
+        v_out.resize(elems, 0.0);
+        for (bi, &id) in self.blocks.iter().enumerate() {
+            let base_tok = bi * BLOCK_TOKENS;
+            let rows = BLOCK_TOKENS.min(self.len.saturating_sub(base_tok));
+            if rows == 0 {
+                break;
+            }
+            self.pool.with_kv(id, |k, v| {
+                for s in 0..rows {
+                    let tok = base_tok + s;
+                    for h in 0..h_n {
+                        let src = s * w + h * dh;
+                        let dst = h * self.cap * dh + tok * dh;
+                        k_out[dst..dst + dh].copy_from_slice(&k[src..src + dh]);
+                        v_out[dst..dst + dh].copy_from_slice(&v[src..src + dh]);
+                    }
+                }
+            });
+        }
+    }
+
+    /// True when every allocated slot at or beyond `len` is exactly zero —
+    /// the clean-padding invariant (regression-tested after `compact`).
+    pub fn padding_is_zero(&self) -> bool {
+        let w = self.row_elems();
+        for (bi, &id) in self.blocks.iter().enumerate() {
+            let base_tok = bi * BLOCK_TOKENS;
+            let live = BLOCK_TOKENS.min(self.len.saturating_sub(base_tok));
+            let clean = self.pool.with_kv(id, |k, v| {
+                k[live * w..].iter().all(|&x| x == 0.0)
+                    && v[live * w..].iter().all(|&x| x == 0.0)
+            });
+            if !clean {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// The block that will hold slot `len`, forked first if it is shared
+    /// (copy-on-write) or freshly allocated at a block boundary.
+    fn writable_tail(&mut self) -> usize {
+        let bi = self.len / BLOCK_TOKENS;
+        if bi == self.blocks.len() {
+            let id = self.pool.alloc(self.row_elems());
+            self.blocks.push(id);
+            return id;
+        }
+        let id = self.blocks[bi];
+        if self.pool.refs(id) > 1 {
+            // Fork carries the zero padding of the source block, so the
+            // clean-padding invariant survives the copy.
+            let f = self.pool.fork(id);
+            self.pool.release(id);
+            self.blocks[bi] = f;
+            return f;
+        }
+        id
+    }
+
+    /// Append one token's K/V (`[H, dh]` each) at original position `pos`.
+    /// The caller must ensure capacity (`grow` first if needed). If the
+    /// tail block is shared, only that block is forked — never the prefix.
+    pub fn append(&mut self, k_new: &[f32], v_new: &[f32], pos: i32) {
+        assert!(self.len < self.cap, "cache full: len={} cap={}", self.len, self.cap);
+        assert_eq!(k_new.len(), self.row_elems());
+        assert_eq!(v_new.len(), self.row_elems());
+        let id = self.writable_tail();
+        self.pool.write_row(id, self.len % BLOCK_TOKENS, k_new, v_new);
+        self.positions.push(pos);
+        self.len += 1;
     }
 
     /// Keep only the slots in `keep` (ascending, unique, all `< len`),
     /// compacting rows to the front. Positions follow their rows.
+    ///
+    /// Copy-on-write: fully-retained identity-prefix blocks are kept
+    /// as-is (still shared if they were shared); every row from the first
+    /// divergence onward is gathered into fresh zero-filled blocks and the
+    /// old blocks are released — the vacated range therefore reads
+    /// exactly zero, however large the prune.
     pub fn compact(&mut self, keep: &[usize]) {
         debug_assert!(keep.windows(2).all(|w| w[0] < w[1]), "keep must be ascending");
         if let Some(&last) = keep.last() {
             assert!(last < self.len, "keep index {} out of range {}", last, self.len);
         }
-        let dh = self.d_head;
-        for h in 0..self.n_heads {
-            let base = h * self.cap * dh;
-            for (dst, &src) in keep.iter().enumerate() {
-                if dst == src {
-                    continue; // prefix already in place
-                }
-                self.k.copy_within(base + src * dh..base + (src + 1) * dh, base + dst * dh);
-                self.v.copy_within(base + src * dh..base + (src + 1) * dh, base + dst * dh);
-            }
+        // Longest identity prefix: rows that stay in place.
+        let mut ident = 0;
+        while ident < keep.len() && keep[ident] == ident {
+            ident += 1;
         }
+        if ident == keep.len() && keep.len() == self.len {
+            return; // no-op compaction
+        }
+        let w = self.row_elems();
+        let keep_blocks = ident / BLOCK_TOKENS;
+        let mut new_blocks: Vec<usize> = Vec::new();
+        let mut k_buf = vec![0.0f32; w];
+        let mut v_buf = vec![0.0f32; w];
+        for (dst, &src) in keep.iter().enumerate().skip(keep_blocks * BLOCK_TOKENS) {
+            let slot = dst % BLOCK_TOKENS;
+            if slot == 0 {
+                new_blocks.push(self.pool.alloc(w));
+            }
+            let sb = self.blocks[src / BLOCK_TOKENS];
+            let ss = src % BLOCK_TOKENS;
+            self.pool.with_kv(sb, |k, v| {
+                k_buf.copy_from_slice(&k[ss * w..(ss + 1) * w]);
+                v_buf.copy_from_slice(&v[ss * w..(ss + 1) * w]);
+            });
+            self.pool.write_row(*new_blocks.last().unwrap(), slot, &k_buf, &v_buf);
+        }
+        for &id in &self.blocks[keep_blocks..] {
+            self.pool.release(id);
+        }
+        self.blocks.truncate(keep_blocks);
+        self.blocks.extend(new_blocks);
         let new_pos: Vec<i32> = keep.iter().map(|&i| self.positions[i]).collect();
         self.positions = new_pos;
         self.len = keep.len();
-        // Zero the now-dead tail so masked kernels see clean padding.
-        for h in 0..self.n_heads {
-            let base = h * self.cap * dh;
-            for i in self.len..self.cap.min(self.len + 64) {
-                self.k[base + i * dh..base + (i + 1) * dh].fill(0.0);
-                self.v[base + i * dh..base + (i + 1) * dh].fill(0.0);
-            }
-        }
     }
 
-    /// Append one token's K/V (`[H, dh]` each) at original position `pos`.
-    /// The caller must ensure capacity (`grow` first if needed).
-    pub fn append(&mut self, k_new: &[f32], v_new: &[f32], pos: i32) {
-        assert!(self.len < self.cap, "cache full: len={} cap={}", self.len, self.cap);
-        assert_eq!(k_new.len(), self.n_heads * self.d_head);
-        let dh = self.d_head;
-        for h in 0..self.n_heads {
-            let dst = h * self.cap * dh + self.len * dh;
-            self.k[dst..dst + dh].copy_from_slice(&k_new[h * dh..(h + 1) * dh]);
-            self.v[dst..dst + dh].copy_from_slice(&v_new[h * dh..(h + 1) * dh]);
-        }
-        self.positions.push(pos);
-        self.len += 1;
-    }
-
-    /// Re-layout into a larger capacity (next bucket).
+    /// Re-target the logical capacity (next compiled bucket). Paged
+    /// storage makes this free: no rows move, no bytes are copied.
     pub fn grow(&mut self, new_cap: usize) {
-        assert!(new_cap >= self.len);
-        if new_cap == self.cap {
-            return;
-        }
-        let dh = self.d_head;
-        let mut k = vec![0.0f32; self.n_heads * new_cap * dh];
-        let mut v = vec![0.0f32; self.n_heads * new_cap * dh];
-        for h in 0..self.n_heads {
-            let src = h * self.cap * dh;
-            let dst = h * new_cap * dh;
-            let rows = self.len * dh;
-            k[dst..dst + rows].copy_from_slice(&self.k[src..src + rows]);
-            v[dst..dst + rows].copy_from_slice(&self.v[src..src + rows]);
-        }
-        self.k = k;
-        self.v = v;
+        assert!(new_cap >= self.len, "grow below live length");
         self.cap = new_cap;
     }
 }
@@ -227,7 +389,7 @@ impl CacheSet {
 mod tests {
     use super::*;
 
-    fn filled(n_heads: usize, dh: usize, cap: usize, n: usize) -> LayerCache {
+    fn filled_in(pool: &BlockPool, n_heads: usize, dh: usize, cap: usize, n: usize) -> LayerCache {
         // K row value = 100*h + i, V = negative of that; positions = 10+i.
         let mut k = vec![0.0f32; n_heads * n * dh];
         let mut v = vec![0.0f32; n_heads * n * dh];
@@ -239,13 +401,37 @@ mod tests {
                 }
             }
         }
-        let positions: Vec<i32> = (0..n as i32).map(|i| 10 + i).collect();
-        LayerCache::from_prefill(n_heads, dh, cap, &k, &v, n, n, &positions)
+        let mut c = LayerCache::new_in(pool.clone(), n_heads, dh, cap);
+        let mut k_row = vec![0.0f32; n_heads * dh];
+        let mut v_row = vec![0.0f32; n_heads * dh];
+        for i in 0..n {
+            for h in 0..n_heads {
+                k_row[h * dh..(h + 1) * dh].copy_from_slice(&k[h * n * dh + i * dh..][..dh]);
+                v_row[h * dh..(h + 1) * dh].copy_from_slice(&v[h * n * dh + i * dh..][..dh]);
+            }
+            c.append(&k_row, &v_row, 10 + i as i32);
+        }
+        c
+    }
+
+    fn filled(n_heads: usize, dh: usize, cap: usize, n: usize) -> LayerCache {
+        filled_in(&BlockPool::new(), n_heads, dh, cap, n)
     }
 
     #[test]
     fn from_prefill_copies_rows() {
-        let c = filled(2, 4, 8, 5);
+        let mut k = vec![0.0f32; 2 * 5 * 4];
+        let mut v = vec![0.0f32; 2 * 5 * 4];
+        for h in 0..2 {
+            for i in 0..5 {
+                for d in 0..4 {
+                    k[h * 5 * 4 + i * 4 + d] = (100 * h + i) as f32;
+                    v[h * 5 * 4 + i * 4 + d] = -((100 * h + i) as f32);
+                }
+            }
+        }
+        let positions: Vec<i32> = (0..5).map(|i| 10 + i).collect();
+        let c = LayerCache::from_prefill(2, 4, 8, &k, &v, 5, 5, &positions);
         assert_eq!(c.len(), 5);
         assert_eq!(c.k_row(1, 3)[0], 103.0);
         assert_eq!(c.v_row(0, 2)[0], -2.0);
@@ -265,6 +451,23 @@ mod tests {
         // mask reflects new length
         let m = c.mask();
         assert_eq!(m.iter().filter(|&&x| x > 0.5).count(), 3);
+        assert!(c.padding_is_zero());
+    }
+
+    #[test]
+    fn compact_zeroes_entire_vacated_range() {
+        // Regression: the pre-paged layout only zeroed 64 rows past `len`,
+        // leaving stale K/V beyond that after a large prune. Paged compact
+        // rebuilds the tail into fresh zero-filled blocks, so the whole
+        // vacated range reads zero.
+        let n = 4 * BLOCK_TOKENS + 7; // several blocks, partial tail
+        let mut c = filled(1, 2, n + 8, n);
+        c.compact(&[0, 1]); // prune almost everything (>> 64 rows vacated)
+        assert_eq!(c.len(), 2);
+        assert!(c.padding_is_zero(), "vacated range must read zero");
+        let (k, v) = c.padded_kv();
+        assert!(k[2 * 2..].iter().all(|&x| x == 0.0));
+        assert!(v[2 * 2..].iter().all(|&x| x == 0.0));
     }
 
     #[test]
@@ -299,23 +502,71 @@ mod tests {
     }
 
     #[test]
-    fn bytes_accounting() {
-        let c = LayerCache::new(2, 4, 8);
-        assert_eq!(c.bytes(), 2 * 2 * 8 * 4 * 4); // k+v, H, cap, dh, f32
-        assert_eq!(LayerCache::slab_bytes(2, 4, 8), c.bytes());
+    fn bytes_accounting_is_paged() {
+        let pool = BlockPool::new();
+        let c = LayerCache::new_in(pool.clone(), 2, 4, 8);
+        // No rows appended -> no blocks allocated.
+        assert_eq!(c.bytes(), 0);
+        // The admission estimate stays the dense upper bound.
+        assert_eq!(LayerCache::slab_bytes(2, 4, 8), 2 * 2 * 8 * 4 * 4);
+        let c = filled_in(&pool, 2, 4, 8, 3);
+        assert_eq!(c.bytes(), block_bytes(2 * 4)); // one block allocated
+        assert!(c.bytes() <= LayerCache::slab_bytes(2, 4, BLOCK_TOKENS));
         let mut set = CacheSet::default();
         set.push(c);
         assert_eq!(set.bytes(), set.peak_bytes());
-        assert_eq!(set.live_counts(), vec![0]);
+        assert_eq!(set.live_counts(), vec![3]);
     }
 
     #[test]
     fn peak_tracks_maximum() {
+        let pool = BlockPool::new();
         let mut set = CacheSet::default();
-        set.push(LayerCache::new(1, 2, 16));
+        set.push(LayerCache::new_in(pool.clone(), 1, 2, 2 * BLOCK_TOKENS));
         let before = set.peak_bytes();
-        set.layers[0].grow(32);
+        // Appending across a block boundary allocates more blocks.
+        for i in 0..BLOCK_TOKENS + 1 {
+            set.layers[0].append(&[1.0, 1.0], &[2.0, 2.0], i as i32);
+        }
         set.update_peak();
         assert!(set.peak_bytes() > before);
+    }
+
+    #[test]
+    fn clone_shares_blocks_and_cow_isolates_writers() {
+        let pool = BlockPool::new();
+        let a = filled_in(&pool, 1, 2, 64, BLOCK_TOKENS + 4);
+        let mut b = a.clone();
+        assert_eq!(a.block_ids(), b.block_ids());
+        assert_eq!(pool.stats().shared, 2);
+        // Appending to the clone forks only the partial tail block.
+        b.append(&[9.0, 9.0], &[9.0, 9.0], 99);
+        assert_eq!(a.block_ids()[0], b.block_ids()[0], "full prefix block still shared");
+        assert_ne!(a.block_ids()[1], b.block_ids()[1], "tail block forked");
+        assert_eq!(a.len(), BLOCK_TOKENS + 4);
+        assert_eq!(a.k_row(0, BLOCK_TOKENS + 3)[0], (BLOCK_TOKENS + 3) as f32);
+        // Compacting the clone never touches the original's rows.
+        b.compact(&[0, 1, 2]);
+        assert_eq!(a.k_row(0, 5)[0], 5.0);
+        assert!(a.padding_is_zero() && b.padding_is_zero());
+        drop(a);
+        drop(b);
+        assert_eq!(pool.stats().used, 0, "all blocks returned to the pool");
+    }
+
+    #[test]
+    fn padded_kv_matches_rows() {
+        let c = filled(2, 3, 8, 5);
+        let (k, v) = c.padded_kv();
+        assert_eq!(k.len(), 2 * 8 * 3);
+        for h in 0..2 {
+            for i in 0..5 {
+                assert_eq!(k[h * 8 * 3 + i * 3], (100 * h + i) as f32);
+                assert_eq!(v[h * 8 * 3 + i * 3], -((100 * h + i) as f32));
+            }
+            for i in 5..8 {
+                assert_eq!(k[h * 8 * 3 + i * 3], 0.0);
+            }
+        }
     }
 }

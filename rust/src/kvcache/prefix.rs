@@ -1,0 +1,623 @@
+//! Shared AV-prefix KV cache: a radix trie of frozen, refcounted prefix
+//! entries over the [`super::BlockPool`].
+//!
+//! FastAV's deployed *positional* global pruning makes the post-prune AV
+//! prefix KV query-independent: the keep rule depends only on token
+//! positions and layout, never on the question. Every request over the
+//! same sample/layout/pruning-config therefore produces bit-identical
+//! front-layer K/V for the audio-visual prefix — by far the largest token
+//! block an AV-LLM ingests — so the serving stack computes it once and
+//! shares it.
+//!
+//! Keying: entries are grouped by a *config key* (global-pruning config +
+//! split depth + layout + model fingerprint) and, within a config, stored
+//! in a token **trie** keyed by the tokenized prefix. Lookup walks the
+//! request's prefix tokens and returns the deepest entry on the path
+//! (longest-prefix match), which lets a request resume mid-sequence from
+//! any covered prefix length.
+//!
+//! Lifetime: a hit takes a [`PrefixLease`] (RAII) that pins the entry
+//! against eviction while a generation uses it; eviction is LRU over
+//! lease-free entries under a configurable byte budget. Entry payloads
+//! are [`LayerCache`]s whose blocks live in the shared pool, so "evicted"
+//! blocks are only recycled once the last borrowing request drops them —
+//! no use-after-free by construction (property-tested in
+//! `rust/tests/test_prefix.rs`).
+//!
+//! Exposure: `GET /v1/pool` reports `stats()`, `POST /v1/cache/flush`
+//! calls [`PrefixCache::flush`], and [`PrefixCache::bind_metrics`] keeps
+//! the `fastav_prefix_cache_*` counters and `fastav_kv_blocks_*` gauges
+//! live in `/metrics`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::{Counter, Gauge, Registry};
+
+use super::block::BlockPool;
+use super::LayerCache;
+
+// ------------------------------------------------------------- hashing
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a `u32` stream (deterministic across runs/platforms, so
+/// cache keys are stable and loggable).
+pub fn hash_tokens(seed: u64, tokens: &[u32]) -> u64 {
+    let mut h = FNV_OFFSET ^ seed;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Combine already-hashed parts into one key.
+pub fn hash_mix(parts: &[u64]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &p in parts {
+        for b in p.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+// ---------------------------------------------------------------- trie
+
+#[derive(Default)]
+struct TrieNode {
+    children: HashMap<u32, usize>,
+    /// Full entry key when a cached prefix ends at this node.
+    key: Option<u64>,
+}
+
+/// Token radix trie for one config key. Nodes are arena-allocated;
+/// removal clears the entry marker (interior nodes are retained — they
+/// are a few machine words each and bounded by inserted prefixes).
+#[derive(Default)]
+struct Trie {
+    nodes: Vec<TrieNode>,
+}
+
+impl Trie {
+    fn new() -> Trie {
+        Trie { nodes: vec![TrieNode::default()] }
+    }
+
+    fn insert(&mut self, tokens: &[u32], key: u64) {
+        let mut at = 0;
+        for &t in tokens {
+            at = match self.nodes[at].children.get(&t) {
+                Some(&n) => n,
+                None => {
+                    self.nodes.push(TrieNode::default());
+                    let n = self.nodes.len() - 1;
+                    self.nodes[at].children.insert(t, n);
+                    n
+                }
+            };
+        }
+        self.nodes[at].key = Some(key);
+    }
+
+    /// Deepest entry key along the path of `tokens` (longest-prefix match).
+    fn longest(&self, tokens: &[u32]) -> Option<u64> {
+        let mut at = 0;
+        let mut best = self.nodes[0].key;
+        for &t in tokens {
+            match self.nodes[at].children.get(&t) {
+                Some(&n) => {
+                    at = n;
+                    if self.nodes[at].key.is_some() {
+                        best = self.nodes[at].key;
+                    }
+                }
+                None => break,
+            }
+        }
+        best
+    }
+
+    fn remove(&mut self, tokens: &[u32]) {
+        let mut at = 0;
+        for &t in tokens {
+            match self.nodes[at].children.get(&t) {
+                Some(&n) => at = n,
+                None => return,
+            }
+        }
+        self.nodes[at].key = None;
+    }
+}
+
+// --------------------------------------------------------------- entry
+
+/// One frozen AV-prefix: everything `ModelEngine::begin_generation` needs
+/// to resume a covered request mid-sequence.
+pub struct PrefixEntry {
+    /// Tokens covered (`prompt[..prefix_len]`).
+    pub prefix_len: usize,
+    /// Per front layer (`0..g`): K/V rows for **all** prefix positions —
+    /// what the resumed text suffix attends to (global pruning removes
+    /// tokens *at* the split layer, so layers below it saw every token).
+    pub full_layers: Vec<LayerCache>,
+    /// Per front layer: K/V rows for keep∩prefix only — the rows a
+    /// generation's own decode-path front caches start from.
+    pub keep_layers: Vec<LayerCache>,
+    /// Hidden rows after the front half for keep∩prefix, `[rows, d_model]`.
+    pub h_keep: Vec<f32>,
+    /// Original positions of the keep∩prefix rows (ascending).
+    pub keep_positions: Vec<i32>,
+    /// Payload bytes (block payloads counted once + hidden rows).
+    pub bytes: usize,
+}
+
+impl PrefixEntry {
+    /// Fill in `bytes` from the payloads.
+    pub fn finalize(mut self) -> PrefixEntry {
+        let layer_bytes: usize = self
+            .full_layers
+            .iter()
+            .chain(self.keep_layers.iter())
+            .map(|c| c.bytes())
+            .sum();
+        self.bytes = layer_bytes + self.h_keep.len() * std::mem::size_of::<f32>();
+        self
+    }
+}
+
+struct Slot {
+    entry: Arc<PrefixEntry>,
+    tokens: Vec<u32>,
+    cfg: u64,
+    /// Outstanding leases (pins against eviction).
+    active: usize,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    tries: HashMap<u64, Trie>,
+    slots: HashMap<u64, Slot>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// Counter/gauge handles bound by [`PrefixCache::bind_metrics`].
+struct MetricSinks {
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    evictions: Arc<Counter>,
+    entries_g: Arc<Gauge>,
+    bytes_g: Arc<Gauge>,
+    blocks_used: Arc<Gauge>,
+    blocks_shared: Arc<Gauge>,
+    blocks_free: Arc<Gauge>,
+}
+
+/// Point-in-time cache accounting (the `/v1/pool` payload).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    pub entries: usize,
+    pub bytes: usize,
+    pub active_leases: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub insertions: u64,
+}
+
+/// Process-wide prefix cache. Thread-safe (`&self` everywhere); shared
+/// across replica threads behind an `Arc`.
+pub struct PrefixCache {
+    inner: Mutex<Inner>,
+    pool: BlockPool,
+    /// Eviction budget over entry payload bytes; `usize::MAX` = unlimited.
+    budget_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    insertions: AtomicU64,
+    sinks: Mutex<Option<MetricSinks>>,
+}
+
+impl PrefixCache {
+    /// `budget_bytes == 0` means unlimited (flush/eviction still work).
+    pub fn new(budget_bytes: usize) -> PrefixCache {
+        Self::new_in(BlockPool::global(), budget_bytes)
+    }
+
+    pub fn new_in(pool: BlockPool, budget_bytes: usize) -> PrefixCache {
+        PrefixCache {
+            inner: Mutex::new(Inner::default()),
+            pool,
+            budget_bytes: if budget_bytes == 0 { usize::MAX } else { budget_bytes },
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            sinks: Mutex::new(None),
+        }
+    }
+
+    /// The block pool entry payloads must allocate from.
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Bind the `fastav_prefix_cache_*` / `fastav_kv_blocks_*` series so
+    /// every cache operation keeps `/metrics` current.
+    pub fn bind_metrics(&self, metrics: &Registry) {
+        *self.sinks.lock().unwrap() = Some(MetricSinks {
+            hits: metrics.counter("fastav_prefix_cache_hits_total"),
+            misses: metrics.counter("fastav_prefix_cache_misses_total"),
+            evictions: metrics.counter("fastav_prefix_cache_evictions_total"),
+            entries_g: metrics.gauge("fastav_prefix_cache_entries"),
+            bytes_g: metrics.gauge("fastav_prefix_cache_bytes"),
+            blocks_used: metrics.gauge("fastav_kv_blocks_used"),
+            blocks_shared: metrics.gauge("fastav_kv_blocks_shared"),
+            blocks_free: metrics.gauge("fastav_kv_blocks_free"),
+        });
+        self.refresh_gauges();
+    }
+
+    /// Re-export the entry/byte gauges and the pool's `kv_blocks_*`
+    /// gauges. Called by cache operations and periodically by replica
+    /// threads (block usage also drifts with ordinary appends/compacts).
+    pub fn refresh_gauges(&self) {
+        let sinks = self.sinks.lock().unwrap();
+        if let Some(s) = sinks.as_ref() {
+            let (entries, bytes) = {
+                let inner = self.inner.lock().unwrap();
+                (inner.slots.len(), inner.bytes)
+            };
+            s.entries_g.set(entries as u64);
+            s.bytes_g.set(bytes as u64);
+            let ps = self.pool.stats();
+            s.blocks_used.set(ps.used as u64);
+            s.blocks_shared.set(ps.shared as u64);
+            s.blocks_free.set(ps.free as u64);
+        }
+    }
+
+    fn count_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = self.sinks.lock().unwrap().as_ref() {
+            s.hits.inc();
+        }
+    }
+
+    fn count_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = self.sinks.lock().unwrap().as_ref() {
+            s.misses.inc();
+        }
+    }
+
+    /// Longest-prefix lookup; a hit pins the entry with a lease. Counts a
+    /// hit or a miss.
+    pub fn lookup(self: &Arc<Self>, cfg: u64, tokens: &[u32]) -> Option<PrefixLease> {
+        self.lookup_inner(cfg, tokens, false)
+    }
+
+    /// Exact-prefix lookup: a hit only when an entry covers *precisely*
+    /// `tokens`. The engine resumes only from exact entries (budget-
+    /// matched keep rules select over the whole AV set), and counting
+    /// hits here — not on partial matches that fall back to full
+    /// prefill — keeps the hit/miss counters honest for operators.
+    pub fn lookup_exact(self: &Arc<Self>, cfg: u64, tokens: &[u32]) -> Option<PrefixLease> {
+        self.lookup_inner(cfg, tokens, true)
+    }
+
+    fn lookup_inner(self: &Arc<Self>, cfg: u64, tokens: &[u32], exact: bool) -> Option<PrefixLease> {
+        let exact_key = hash_mix(&[cfg, hash_tokens(0, tokens)]);
+        let found = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            let key = if exact {
+                inner.slots.contains_key(&exact_key).then_some(exact_key)
+            } else {
+                inner.tries.get(&cfg).and_then(|t| t.longest(tokens))
+            };
+            key.and_then(|key| {
+                inner.slots.get_mut(&key).map(|slot| {
+                    slot.active += 1;
+                    slot.last_used = tick;
+                    (key, Arc::clone(&slot.entry))
+                })
+            })
+        };
+        match found {
+            Some((key, entry)) => {
+                self.count_hit();
+                Some(PrefixLease { cache: Arc::clone(self), key, entry })
+            }
+            None => {
+                self.count_miss();
+                None
+            }
+        }
+    }
+
+    /// Exact-prefix probe without lease or hit/miss accounting —
+    /// admission uses it to split a request's estimate into shared vs
+    /// unique bytes, so it must mirror [`Self::lookup_exact`] (a
+    /// partial-coverage entry would credit sharing the resume never
+    /// uses). Returns `(entry key, entry bytes)`.
+    pub fn peek(&self, cfg: u64, tokens: &[u32]) -> Option<(u64, usize)> {
+        let key = hash_mix(&[cfg, hash_tokens(0, tokens)]);
+        let inner = self.inner.lock().unwrap();
+        inner.slots.get(&key).map(|s| (key, s.entry.bytes))
+    }
+
+    /// Insert a frozen entry for `tokens` under `cfg`; no-op if an entry
+    /// for the exact prefix already exists (first writer wins — payloads
+    /// are deterministic, so both are identical). Evicts LRU lease-free
+    /// entries afterwards if the byte budget is exceeded.
+    pub fn insert(&self, cfg: u64, tokens: &[u32], entry: PrefixEntry) -> bool {
+        debug_assert!(
+            entry
+                .full_layers
+                .iter()
+                .chain(entry.keep_layers.iter())
+                .all(|c| c.pool().same_pool(&self.pool)),
+            "entry blocks must come from the cache's pool"
+        );
+        let inserted = {
+            let mut inner = self.inner.lock().unwrap();
+            let key = hash_mix(&[cfg, hash_tokens(0, tokens)]);
+            if inner.slots.contains_key(&key) {
+                false
+            } else {
+                inner.tick += 1;
+                let tick = inner.tick;
+                inner.bytes += entry.bytes;
+                inner.slots.insert(
+                    key,
+                    Slot {
+                        entry: Arc::new(entry),
+                        tokens: tokens.to_vec(),
+                        cfg,
+                        active: 0,
+                        last_used: tick,
+                    },
+                );
+                inner.tries.entry(cfg).or_insert_with(Trie::new).insert(tokens, key);
+                Self::evict_over_budget(&mut inner, self.budget_bytes, &self.evictions);
+                true
+            }
+        };
+        if inserted {
+            self.insertions.fetch_add(1, Ordering::Relaxed);
+        }
+        self.refresh_gauges();
+        if inserted {
+            if let Some(s) = self.sinks.lock().unwrap().as_ref() {
+                // Evictions triggered by this insert are already in the
+                // atomic; mirror the delta into the counter series.
+                let total = self.evictions.load(Ordering::Relaxed);
+                let exported = s.evictions.get();
+                if total > exported {
+                    s.evictions.add(total - exported);
+                }
+            }
+        }
+        inserted
+    }
+
+    fn evict_over_budget(inner: &mut Inner, budget: usize, evictions: &AtomicU64) {
+        while inner.bytes > budget {
+            let victim = inner
+                .slots
+                .iter()
+                .filter(|(_, s)| s.active == 0)
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(&k, _)| k);
+            let Some(key) = victim else { break };
+            Self::evict_key(inner, key);
+            evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn evict_key(inner: &mut Inner, key: u64) {
+        if let Some(slot) = inner.slots.remove(&key) {
+            inner.bytes = inner.bytes.saturating_sub(slot.entry.bytes);
+            if let Some(trie) = inner.tries.get_mut(&slot.cfg) {
+                trie.remove(&slot.tokens);
+            }
+            // Dropping the Arc releases the blocks once the last
+            // in-flight borrower (cloned LayerCache / outstanding lease
+            // upgrade) lets go — never before.
+        }
+    }
+
+    /// Drop every lease-free entry (the `POST /v1/cache/flush` endpoint).
+    /// Returns `(entries_evicted, bytes_freed)`.
+    pub fn flush(&self) -> (usize, usize) {
+        let (n, freed) = {
+            let mut inner = self.inner.lock().unwrap();
+            let victims: Vec<u64> = inner
+                .slots
+                .iter()
+                .filter(|(_, s)| s.active == 0)
+                .map(|(&k, _)| k)
+                .collect();
+            let before = inner.bytes;
+            for key in &victims {
+                Self::evict_key(&mut inner, *key);
+            }
+            (victims.len(), before - inner.bytes)
+        };
+        self.evictions.fetch_add(n as u64, Ordering::Relaxed);
+        if let Some(s) = self.sinks.lock().unwrap().as_ref() {
+            s.evictions.add(n as u64);
+        }
+        self.refresh_gauges();
+        (n, freed)
+    }
+
+    fn release_lease(&self, key: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(slot) = inner.slots.get_mut(&key) {
+            slot.active = slot.active.saturating_sub(1);
+        }
+    }
+
+    pub fn stats(&self) -> PrefixCacheStats {
+        let (entries, bytes, active) = {
+            let inner = self.inner.lock().unwrap();
+            (
+                inner.slots.len(),
+                inner.bytes,
+                inner.slots.values().map(|s| s.active).sum(),
+            )
+        };
+        PrefixCacheStats {
+            entries,
+            bytes,
+            active_leases: active,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// RAII pin on a cache entry: holds the payload `Arc` and decrements the
+/// entry's active count (making it evictable again) on drop.
+pub struct PrefixLease {
+    cache: Arc<PrefixCache>,
+    key: u64,
+    entry: Arc<PrefixEntry>,
+}
+
+impl PrefixLease {
+    pub fn entry(&self) -> &PrefixEntry {
+        &self.entry
+    }
+
+    pub fn key(&self) -> u64 {
+        self.key
+    }
+}
+
+impl Drop for PrefixLease {
+    fn drop(&mut self) {
+        self.cache.release_lease(self.key);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry_with(pool: &BlockPool, rows: usize) -> PrefixEntry {
+        let mut c = LayerCache::new_in(pool.clone(), 1, 2, rows.max(1));
+        for i in 0..rows {
+            c.append(&[i as f32, 0.0], &[0.0, i as f32], i as i32);
+        }
+        PrefixEntry {
+            prefix_len: rows,
+            full_layers: vec![c.clone()],
+            keep_layers: vec![c],
+            h_keep: vec![0.5; rows],
+            keep_positions: (0..rows as i32).collect(),
+            bytes: 0,
+        }
+        .finalize()
+    }
+
+    #[test]
+    fn longest_prefix_match() {
+        let pool = BlockPool::new();
+        let cache = Arc::new(PrefixCache::new_in(pool.clone(), 0));
+        let cfg = 7;
+        assert!(cache.insert(cfg, &[1, 2, 3], entry_with(&pool, 3)));
+        assert!(cache.insert(cfg, &[1, 2, 3, 4, 5], entry_with(&pool, 5)));
+        // Exact longer prefix wins.
+        let lease = cache.lookup(cfg, &[1, 2, 3, 4, 5, 99]).unwrap();
+        assert_eq!(lease.entry().prefix_len, 5);
+        // Shorter coverage still matches.
+        let lease2 = cache.lookup(cfg, &[1, 2, 3, 8]).unwrap();
+        assert_eq!(lease2.entry().prefix_len, 3);
+        // Different config sees nothing.
+        assert!(cache.lookup(8, &[1, 2, 3]).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 1, 2));
+    }
+
+    #[test]
+    fn exact_lookup_rejects_partial_coverage() {
+        let pool = BlockPool::new();
+        let cache = Arc::new(PrefixCache::new_in(pool.clone(), 0));
+        cache.insert(1, &[1, 2], entry_with(&pool, 2));
+        // Longest-match sees the shorter entry; exact does not — and the
+        // exact miss is counted as a miss, not a hit.
+        assert!(cache.lookup(1, &[1, 2, 3]).is_some());
+        assert!(cache.lookup_exact(1, &[1, 2, 3]).is_none());
+        assert!(cache.lookup_exact(1, &[1, 2]).is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (2, 1));
+    }
+
+    #[test]
+    fn duplicate_insert_is_noop() {
+        let pool = BlockPool::new();
+        let cache = Arc::new(PrefixCache::new_in(pool.clone(), 0));
+        assert!(cache.insert(1, &[5, 6], entry_with(&pool, 2)));
+        assert!(!cache.insert(1, &[5, 6], entry_with(&pool, 2)));
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn lru_eviction_skips_leased_entries() {
+        let pool = BlockPool::new();
+        let per_entry = entry_with(&pool, 2).bytes;
+        // Budget fits exactly two entries.
+        let cache = Arc::new(PrefixCache::new_in(pool.clone(), 2 * per_entry));
+        cache.insert(1, &[1], entry_with(&pool, 2));
+        cache.insert(1, &[2], entry_with(&pool, 2));
+        // Pin [1]; touch nothing else, then overflow.
+        let lease = cache.lookup(1, &[1]).unwrap();
+        cache.insert(1, &[3], entry_with(&pool, 2));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        // [2] (LRU among lease-free) was evicted; [1] survived its pin.
+        assert!(cache.lookup(1, &[2, 9]).is_none());
+        assert!(cache.lookup(1, &[1, 9]).is_some());
+        drop(lease);
+        let (flushed, freed) = cache.flush();
+        assert_eq!(flushed, 2);
+        assert!(freed > 0);
+        assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn evicted_entry_blocks_survive_borrowers() {
+        let pool = BlockPool::new();
+        let cache = Arc::new(PrefixCache::new_in(pool.clone(), 0));
+        cache.insert(1, &[1, 2], entry_with(&pool, 2));
+        let lease = cache.lookup(1, &[1, 2]).unwrap();
+        // Borrow the payload the way a generation does: clone the cache.
+        let borrowed = lease.entry().keep_layers[0].clone();
+        drop(lease);
+        cache.flush();
+        assert_eq!(cache.stats().entries, 0);
+        // The borrowed rows are still readable (blocks refcounted).
+        assert_eq!(borrowed.k_row(0, 1)[0], 1.0);
+        drop(borrowed);
+        assert_eq!(pool.stats().used, 0, "blocks recycled after last borrower");
+    }
+}

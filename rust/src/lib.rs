@@ -19,7 +19,9 @@
 //!   selection, literal helpers.
 //! * [`model`]       — model config, weights, and the staged execution
 //!   engine (prefill front, back layers, decode loop).
-//! * [`kvcache`]     — per-layer compacted KV caches with byte accounting.
+//! * [`kvcache`]     — paged per-layer KV caches over a refcounted block
+//!   pool, with copy-on-write compaction and a trie prefix cache that
+//!   shares the post-global-prune AV-prefix K/V across requests.
 //! * [`pruning`]     — FastAV global + fine pruning and all baselines.
 //! * [`calibration`] — offline rollout calibration (paper Figs. 1–2).
 //! * [`flops`]       — theoretical FLOPs accounting (paper's protocol).

@@ -3,6 +3,7 @@
 //! ```text
 //! fastav serve     --model vl2sim --port 8077 [--no-pruning] [--p 20]
 //!                  [--replicas 4] [--max-inflight 4] [--kv-budget-mb 512]
+//!                  [--prefix-cache-mb 256]
 //! fastav eval      --model vl2sim --dataset avhbench --n 50 [--no-pruning]
 //! fastav calibrate --model vl2sim --n 100
 //! fastav info      --model vl2sim
@@ -23,7 +24,7 @@ use fastav::util::cli::Args;
 const OPTIONS: &[&str] = &[
     "model", "artifacts", "dataset", "n", "port", "p", "no-pruning", "seed",
     "max-gen", "queue-cap", "workers", "calibration", "replicas",
-    "max-inflight", "kv-budget-mb", "deadline-ms",
+    "max-inflight", "kv-budget-mb", "deadline-ms", "prefix-cache-mb",
 ];
 
 fn main() {
@@ -165,6 +166,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let replicas = args.get_usize("replicas", 1).map_err(|e| anyhow!(e))?;
     let max_inflight = args.get_usize("max-inflight", 4).map_err(|e| anyhow!(e))?;
     let kv_budget_mb = args.get_usize("kv-budget-mb", 0).map_err(|e| anyhow!(e))?;
+    let prefix_cache_mb = args.get_usize("prefix-cache-mb", 0).map_err(|e| anyhow!(e))?;
     let deadline_ms = args.get_usize("deadline-ms", 0).map_err(|e| anyhow!(e))?;
     let plan = plan_from_args(args, &root, &model)?;
 
@@ -174,6 +176,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap,
         max_inflight,
         kv_budget_bytes: kv_budget_mb * (1 << 20),
+        prefix_cache_bytes: prefix_cache_mb * (1 << 20),
         warmup: true,
         default_deadline: if deadline_ms == 0 {
             None
@@ -197,9 +200,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.local_addr(),
         coord.replica_count()
     );
-    println!("  POST /v1/generate  {{\"dataset\": \"avhbench\", \"index\": 0}}");
-    println!("  POST /v1/cancel    {{\"request_id\": 1}}");
-    println!("  GET  /v1/pool      GET /metrics      GET /healthz");
+    println!("  POST /v1/generate     {{\"dataset\": \"avhbench\", \"index\": 0, \"question\": \"what_scene\"?}}");
+    println!("  POST /v1/cancel       {{\"request_id\": 1}}");
+    println!("  POST /v1/cache/flush  (evict lease-free AV-prefix entries)");
+    println!("  GET  /v1/pool         GET /metrics      GET /healthz");
     let shutdown = server.shutdown_handle();
     ctrlc_fallback(&shutdown);
     server.serve();

@@ -13,6 +13,7 @@
 //! layer.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -20,7 +21,8 @@ use anyhow::{anyhow, bail, Result};
 use super::config::ModelConfig;
 use super::weights::{WeightLiterals, Weights};
 use crate::flops::FlopsTally;
-use crate::kvcache::{CacheSet, LayerCache};
+use crate::kvcache::prefix::{hash_mix, hash_tokens};
+use crate::kvcache::{CacheSet, LayerCache, PrefixCache, PrefixEntry, PrefixLease};
 use crate::pruning::{
     fine_keep, global_keep, validate_keep, FineStrategy, GlobalInputs, GlobalStrategy,
 };
@@ -78,6 +80,75 @@ impl PruningPlan {
             fine_during_decode: false,
         }
     }
+}
+
+/// Number of leading prompt tokens before the first text (question)
+/// token — the shared audio-visual prefix. `None` when the prompt has no
+/// AV prefix (starts with text), no text at all (nothing to resume), or
+/// prunable AV tokens *after* the first text token: the resume path
+/// replays the suffix verbatim (ctrl/text tokens are never pruned), so
+/// a mixed suffix would diverge from the cold path's global keep set.
+/// Standard avsynth layouts always end with the question, so this only
+/// excludes hand-built mixed prompts.
+pub fn av_prefix_len(segments: &[Segment]) -> Option<usize> {
+    let p = segments.iter().position(|&s| s == Segment::Text)?;
+    if p == 0 {
+        return None;
+    }
+    if segments[p..]
+        .iter()
+        .any(|&s| s == Segment::Vis || s == Segment::Aud)
+    {
+        return None;
+    }
+    Some(p)
+}
+
+/// Fingerprint of everything about a pruning plan that decides the
+/// post-global-prune AV-prefix KV, or `None` when the plan's global
+/// stage is query-dependent (attention/rollout-guided strategies look at
+/// the question, so their keep sets — unlike the deployed positional
+/// policy's — are not shareable across requests).
+pub fn plan_prefix_fingerprint(plan: &PruningPlan) -> Option<u64> {
+    let strat: u64 = match plan.global {
+        GlobalStrategy::None => 1,
+        GlobalStrategy::Vtw => 2,
+        GlobalStrategy::Random => 3,
+        GlobalStrategy::FastAvPosition { vis_cutoff, keep_audio, keep_frames } => {
+            hash_mix(&[4, vis_cutoff as u64, keep_audio as u64, keep_frames as u64])
+        }
+        GlobalStrategy::StreamingWindow { sink, recent } => {
+            hash_mix(&[5, sink as u64, recent as u64])
+        }
+        // Query-guided global stages (scores/rollout) are per-question.
+        GlobalStrategy::TopAttentive
+        | GlobalStrategy::LowAttentive
+        | GlobalStrategy::TopInformative
+        | GlobalStrategy::LowInformative
+        | GlobalStrategy::FastV { .. } => return None,
+    };
+    Some(hash_mix(&[
+        strat,
+        plan.global_budget as u64,
+        plan.seed,
+        plan.global_layer.map(|g| g as u64 + 1).unwrap_or(0),
+    ]))
+}
+
+/// Dispatch-affinity key for a request: requests sharing it produce the
+/// same AV-prefix entry, so the pool routes them to the replica that
+/// built it. `None` when the request cannot use the prefix cache.
+pub fn request_prefix_affinity(
+    prompt: &[u32],
+    segments: &[Segment],
+    plan: &PruningPlan,
+) -> Option<u64> {
+    let fp = plan_prefix_fingerprint(plan)?;
+    let p = av_prefix_len(segments)?;
+    if p >= prompt.len() {
+        return None;
+    }
+    Some(hash_mix(&[fp, hash_tokens(0, &prompt[..p])]))
 }
 
 /// Token-selection parameters. `temperature == 0` is greedy (argmax);
@@ -177,6 +248,10 @@ pub struct GenerateResult {
     pub decode_steps: usize,
     /// Live token count entering each layer during prefill.
     pub live_counts: Vec<usize>,
+    /// Whether the AV-prefix KV was reused from the prefix cache.
+    pub prefix_hit: bool,
+    /// Prefix tokens whose front-half prefill was skipped on a hit.
+    pub prefix_tokens_reused: usize,
 }
 
 /// Rollout/attention probe output (calibration path).
@@ -254,6 +329,11 @@ pub struct Generation {
     prefill_seconds: f64,
     decode_seconds: f64,
     done: bool,
+    /// Pin on the prefix-cache entry this generation resumed from (kept
+    /// for the generation's lifetime so eviction can't race the blocks).
+    prefix_lease: Option<PrefixLease>,
+    /// Prefix tokens reused on a hit (0 on miss).
+    prefix_tokens_reused: usize,
 }
 
 impl Generation {
@@ -284,6 +364,15 @@ impl Generation {
         self.decode_steps
     }
 
+    /// Whether this generation resumed from a cached AV prefix.
+    pub fn prefix_hit(&self) -> bool {
+        self.prefix_lease.is_some()
+    }
+
+    pub fn prefix_tokens_reused(&self) -> usize {
+        self.prefix_tokens_reused
+    }
+
     fn update_done(&mut self) {
         let last = *self.tokens.last().expect("update_done before first token");
         self.done = self.tokens.len() >= self.opts.max_gen || last == EOS;
@@ -299,6 +388,14 @@ pub struct ModelEngine {
     wlit: WeightLiterals,
     /// Lazily-built front slabs for non-default split depths (Fig. 4).
     front_slabs: HashMap<usize, Vec<xla::Literal>>,
+    /// Shared AV-prefix KV cache (attached by the serving pool; `None`
+    /// on the one-shot eval/bench paths, where every request is a miss).
+    prefix_cache: Option<Arc<PrefixCache>>,
+    /// Reused upload buffers for the per-step paged-cache gather
+    /// (`LayerCache::padded_kv_into`) — the decode hot path allocates
+    /// nothing per quantum.
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
 }
 
 impl ModelEngine {
@@ -312,7 +409,65 @@ impl ModelEngine {
         weights.check(&cfg)?;
         let wlit = WeightLiterals::build(&weights, &cfg)?;
         let rt = Runtime::cpu()?;
-        Ok(ModelEngine { cfg, rt, art, weights, wlit, front_slabs: HashMap::new() })
+        Ok(ModelEngine {
+            cfg,
+            rt,
+            art,
+            weights,
+            wlit,
+            front_slabs: HashMap::new(),
+            prefix_cache: None,
+            scratch_k: Vec::new(),
+            scratch_v: Vec::new(),
+        })
+    }
+
+    /// Attach a shared prefix cache. Subsequent `begin_generation` calls
+    /// with a query-independent (positional) global-pruning plan consult
+    /// it, resume mid-sequence on a hit, and insert the AV prefix on a
+    /// miss.
+    pub fn set_prefix_cache(&mut self, cache: Arc<PrefixCache>) {
+        self.prefix_cache = Some(cache);
+    }
+
+    pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        self.prefix_cache.as_ref()
+    }
+
+    /// Cache config key for this engine + plan: what must match for a
+    /// stored AV-prefix entry to be reusable. The tokenized prefix itself
+    /// is the trie key *under* this config key.
+    fn prefix_config_key(&self, plan: &PruningPlan, g: usize) -> Option<u64> {
+        let fp = plan_prefix_fingerprint(plan)?;
+        let name: Vec<u32> = self.cfg.name.bytes().map(|b| b as u32).collect();
+        Some(hash_mix(&[
+            fp,
+            g as u64,
+            hash_tokens(1, &[self.cfg.n_heads as u32, self.cfg.d_head as u32]),
+            hash_tokens(2, &name),
+        ]))
+    }
+
+    /// Admission probe: the shareable AV-prefix bytes already resident
+    /// for a request (counted once across concurrent users by
+    /// `serving::Admission`), keyed by the cache entry. `None` when no
+    /// cache is attached or the request is not coverable.
+    pub fn prefix_shared_estimate(
+        &self,
+        prompt: &[u32],
+        segments: &[Segment],
+        frame_of: &[i32],
+        plan: &PruningPlan,
+    ) -> Option<(u64, usize)> {
+        let cache = self.prefix_cache.as_ref()?;
+        let g = plan.global_layer.unwrap_or(self.cfg.mid_layer);
+        let base = self.prefix_config_key(plan, g)?;
+        let p = av_prefix_len(segments)?;
+        if p >= prompt.len() {
+            return None;
+        }
+        let cfg_key = hash_mix(&[base, Self::layout_fingerprint(segments, frame_of, p)]);
+        cache.peek(cfg_key, &prompt[..p])
     }
 
     pub fn artifacts(&self) -> &ArtifactDir {
@@ -556,6 +711,13 @@ impl ModelEngine {
             );
         }
 
+        // --- Prefix-cache fast path: when a warm AV-prefix entry covers
+        // this prompt under the same (positional) pruning config, resume
+        // mid-sequence instead of re-prefilling the front half.
+        if let Some(gen) = self.try_begin_from_prefix(input, opts, g)? {
+            return Ok(gen);
+        }
+
         let mut flops = FlopsTally::default();
         let mut live_counts = vec![k; g];
         let t_prefill = Instant::now();
@@ -670,6 +832,9 @@ impl ModelEngine {
                 &pos_then,
             ));
         }
+        // Publish the AV prefix for future same-sample requests (no-op
+        // when the plan is query-dependent or no cache is attached).
+        self.maybe_insert_prefix(input, opts, g, &keep, &ks, &vs, &h_full, bucket_p);
         Self::compact_live(&mut h_live, &mut positions, &mut segments, &keep, d);
 
         Ok(Generation {
@@ -689,7 +854,258 @@ impl ModelEngine {
             prefill_seconds: t_prefill.elapsed().as_secs_f64(),
             decode_seconds: 0.0,
             done: false,
+            prefix_lease: None,
+            prefix_tokens_reused: 0,
         })
+    }
+
+    /// Layout disambiguator folded into the cache config key: identical
+    /// token streams under different segment/frame layouts must not
+    /// collide.
+    fn layout_fingerprint(segments: &[Segment], frame_of: &[i32], p: usize) -> u64 {
+        let segs: Vec<u32> = segments[..p].iter().map(|&s| s as u32).collect();
+        let frames: Vec<u32> = frame_of[..p].iter().map(|&f| f as u32).collect();
+        hash_mix(&[hash_tokens(3, &segs), hash_tokens(4, &frames)])
+    }
+
+    /// Gather `rows` of a `[H, bucket_p, dh]` K/V slab pair into a fresh
+    /// paged cache allocated from `pool`.
+    #[allow(clippy::too_many_arguments)]
+    fn gather_cache(
+        pool: &crate::kvcache::BlockPool,
+        h_n: usize,
+        dh: usize,
+        bucket_p: usize,
+        src_k: &[f32],
+        src_v: &[f32],
+        rows: &[usize],
+        cap: usize,
+    ) -> LayerCache {
+        let mut c = LayerCache::new_in(pool.clone(), h_n, dh, cap);
+        let mut k_row = vec![0.0f32; h_n * dh];
+        let mut v_row = vec![0.0f32; h_n * dh];
+        for &orig in rows {
+            for h in 0..h_n {
+                let base = h * bucket_p * dh + orig * dh;
+                k_row[h * dh..(h + 1) * dh].copy_from_slice(&src_k[base..base + dh]);
+                v_row[h * dh..(h + 1) * dh].copy_from_slice(&src_v[base..base + dh]);
+            }
+            c.append(&k_row, &v_row, orig as i32);
+        }
+        c
+    }
+
+    /// Attempt the warm-prefix resume. Returns `Ok(None)` — falling back
+    /// to full prefill — whenever the request is not coverable: no cache
+    /// attached, query-dependent plan, no AV prefix / no text suffix, no
+    /// (or only partial) cached entry, or missing decode buckets.
+    fn try_begin_from_prefix(
+        &mut self,
+        input: &RequestInput,
+        opts: &GenerateOptions,
+        g: usize,
+    ) -> Result<Option<Generation>> {
+        let Some(cache) = self.prefix_cache.clone() else { return Ok(None) };
+        let Some(base_cfg) = self.prefix_config_key(&opts.plan, g) else { return Ok(None) };
+        let k = input.prompt.len();
+        let Some(p_max) = av_prefix_len(input.segments) else { return Ok(None) };
+        if p_max >= k {
+            return Ok(None); // no text suffix to resume into
+        }
+        let cfg_key = hash_mix(&[
+            base_cfg,
+            Self::layout_fingerprint(input.segments, input.frame_of, p_max),
+        ]);
+        // Feasibility before the lookup, so a bail here never skews the
+        // hit counter: the decode-path buckets must cover prefix +
+        // suffix (resume) and the final live set (decode).
+        let Ok(temp_cap) = self.art.pick_bucket("decode_layer", k) else {
+            return Ok(None);
+        };
+        // Exact match only: budget-matched strategies (e.g. Random)
+        // select over the whole AV set, so a shorter covered prefix
+        // would yield a different keep set.
+        let Some(lease) = cache.lookup_exact(cfg_key, &input.prompt[..p_max]) else {
+            return Ok(None);
+        };
+        let d = self.cfg.d_model;
+        let fm = self.fm();
+        let p = p_max;
+        // Positional plans never consult scores/rollout, so the keep set
+        // is computable host-side without running any layer.
+        let ginp = GlobalInputs {
+            segments: input.segments,
+            frame_of: input.frame_of,
+            scores: None,
+            rollout: None,
+            budget: opts.plan.global_budget,
+            seed: opts.plan.seed ^ 0x61E0,
+        };
+        let keep = global_keep(&opts.plan.global, &ginp);
+        validate_keep(&keep, input.segments)
+            .map_err(|e| anyhow!("global keep invalid: {}", e))?;
+        let cap_front = self.cache_cap(keep.len(), opts.max_gen)?;
+        let keep_pre = keep.iter().take_while(|&&i| i < p).count();
+        {
+            let entry = lease.entry();
+            // The entry's keep∩prefix rows must be exactly this
+            // request's keep∩prefix (the key guarantees it; cheap check).
+            if entry.keep_positions.len() != keep_pre
+                || entry
+                    .keep_positions
+                    .iter()
+                    .zip(keep.iter())
+                    .any(|(&a, &b)| a != b as i32)
+            {
+                return Ok(None);
+            }
+        }
+
+        let t0 = Instant::now();
+        let mut flops = FlopsTally::default();
+        // Temp full-prefix caches: what the resumed suffix attends to at
+        // layers below the split (global pruning removes tokens *at* the
+        // split layer, so suffix rows must see every prefix token there).
+        // Clones share the frozen entry blocks; suffix appends fork only
+        // the partial tail block (copy-on-write).
+        let mut full: Vec<LayerCache> = lease.entry().full_layers.to_vec();
+        for c in &mut full {
+            c.grow(temp_cap.max(c.cap()));
+        }
+        // The generation's own front caches start from keep∩prefix.
+        let mut front: Vec<LayerCache> = lease.entry().keep_layers.to_vec();
+        for c in &mut front {
+            c.grow(cap_front.max(c.cap()));
+        }
+        // Resume mid-sequence: push each text-suffix token through the
+        // front half via the single-token decode artifact, extending both
+        // cache views causally (token j attends to prefix + earlier
+        // suffix — the same set it saw inside the fused front pass).
+        let mut h_suffix: Vec<f32> = Vec::with_capacity((k - p) * d);
+        for j in p..k {
+            let mut x: Vec<f32> = self.weights.embed(input.prompt[j]).to_vec();
+            for (l, fc) in full.iter_mut().enumerate() {
+                let ctx = fc.len() + 1;
+                let (x2, k_new, v_new, _s) = self.decode_one(l, &x, j as i32, fc)?;
+                fc.append(&k_new, &v_new, j as i32);
+                front[l].append(&k_new, &v_new, j as i32);
+                x = x2;
+                flops.add_decode_layer(&fm, ctx);
+            }
+            h_suffix.extend_from_slice(&x);
+        }
+        drop(full); // temp view done; forked tail blocks recycle here
+
+        // Live state entering the back layers = cached keep∩prefix rows
+        // + freshly computed suffix rows (ascending positions).
+        let mut h_live: Vec<f32> = Vec::with_capacity((keep_pre + k - p) * d);
+        h_live.extend_from_slice(&lease.entry().h_keep);
+        h_live.extend_from_slice(&h_suffix);
+        let mut positions: Vec<i32> = lease.entry().keep_positions.clone();
+        positions.extend(p as i32..k as i32);
+        let segments: Vec<Segment> = positions
+            .iter()
+            .map(|&i| input.segments[i as usize])
+            .collect();
+        let mut caches = CacheSet::default();
+        for c in front {
+            caches.push(c);
+        }
+        caches.update_peak();
+
+        Ok(Some(Generation {
+            opts: opts.clone(),
+            prompt_len: k,
+            segments_src: input.segments.to_vec(),
+            g,
+            h_live,
+            positions,
+            segments,
+            next_layer: g,
+            caches,
+            flops,
+            // Same tokens were live entering each front layer as on the
+            // miss path; they just came from the cache.
+            live_counts: vec![k; g],
+            tokens: Vec::new(),
+            decode_steps: 0,
+            prefill_seconds: t0.elapsed().as_secs_f64(),
+            decode_seconds: 0.0,
+            done: false,
+            prefix_lease: Some(lease),
+            prefix_tokens_reused: p,
+        }))
+    }
+
+    /// On a full-prefill miss under a cacheable plan, freeze the AV
+    /// prefix into the shared cache: per-front-layer K/V for all prefix
+    /// rows (resume attention), keep∩prefix K/V (future generations'
+    /// front caches), and the post-front hidden rows for keep∩prefix.
+    #[allow(clippy::too_many_arguments)]
+    fn maybe_insert_prefix(
+        &self,
+        input: &RequestInput,
+        opts: &GenerateOptions,
+        g: usize,
+        keep: &[usize],
+        ks: &[f32],
+        vs: &[f32],
+        h_full: &[f32],
+        bucket_p: usize,
+    ) {
+        let Some(cache) = self.prefix_cache.as_ref() else { return };
+        let Some(base_cfg) = self.prefix_config_key(&opts.plan, g) else { return };
+        let k = input.prompt.len();
+        let Some(p) = av_prefix_len(input.segments) else { return };
+        if p >= k {
+            return;
+        }
+        let cfg_key = hash_mix(&[
+            base_cfg,
+            Self::layout_fingerprint(input.segments, input.frame_of, p),
+        ]);
+        let tokens = &input.prompt[..p];
+        if cache.peek(cfg_key, tokens).is_some() {
+            return; // already published
+        }
+        let (h_n, dh, d) = (self.cfg.n_heads, self.cfg.d_head, self.cfg.d_model);
+        let pool = cache.pool().clone();
+        let all_rows: Vec<usize> = (0..p).collect();
+        let keep_pre: Vec<usize> = keep.iter().copied().take_while(|&i| i < p).collect();
+        let stride = h_n * bucket_p * dh;
+        let mut full_layers = Vec::with_capacity(g);
+        let mut keep_layers = Vec::with_capacity(g);
+        for l in 0..g {
+            let src_k = &ks[l * stride..(l + 1) * stride];
+            let src_v = &vs[l * stride..(l + 1) * stride];
+            full_layers.push(Self::gather_cache(
+                &pool, h_n, dh, bucket_p, src_k, src_v, &all_rows, p,
+            ));
+            keep_layers.push(Self::gather_cache(
+                &pool,
+                h_n,
+                dh,
+                bucket_p,
+                src_k,
+                src_v,
+                &keep_pre,
+                keep_pre.len().max(1),
+            ));
+        }
+        let mut h_keep = Vec::with_capacity(keep_pre.len() * d);
+        for &i in &keep_pre {
+            h_keep.extend_from_slice(&h_full[i * d..(i + 1) * d]);
+        }
+        let entry = PrefixEntry {
+            prefix_len: p,
+            full_layers,
+            keep_layers,
+            h_keep,
+            keep_positions: keep_pre.iter().map(|&i| i as i32).collect(),
+            bytes: 0,
+        }
+        .finalize();
+        cache.insert(cfg_key, tokens, entry);
     }
 
     /// Advance a generation by one scheduling quantum: one back layer
@@ -770,54 +1186,73 @@ impl ModelEngine {
         Ok(StepEvent::Token(first_tok))
     }
 
+    /// Run one layer of the single-token decode artifact over `cache`
+    /// (growing it to the next bucket first if full). Returns
+    /// `(x', k_new, v_new, s)`; the caller appends `k_new`/`v_new`. This
+    /// is the decode loop's inner step *and* the prefix-resume path's way
+    /// of pushing a text-suffix token through the front half.
+    fn decode_one(
+        &mut self,
+        layer: usize,
+        x: &[f32],
+        pos: i32,
+        cache: &mut LayerCache,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (d, n_heads, d_head) =
+            (self.cfg.d_model, self.cfg.n_heads, self.cfg.d_head);
+        if cache.len() + 1 > cache.cap() {
+            let new_cap = self.art.pick_bucket("decode_layer", cache.len() + 1)?;
+            cache.grow(new_cap);
+        }
+        let cap = cache.cap();
+        let cur_idx = cache.len();
+        let mut mask = cache.mask();
+        mask[cur_idx] = 1.0;
+        let x_lit = lit_f32(&[d], x)?;
+        let pos_lit = lit_i32_scalar(pos)?;
+        let idx_lit = lit_i32_scalar(cur_idx as i32)?;
+        // Gather the paged blocks into the reused dense upload buffers
+        // (same O(cap) copy the literal build always paid; no allocs).
+        cache.padded_kv_into(&mut self.scratch_k, &mut self.scratch_v);
+        let kc = lit_f32(&[n_heads, cap, d_head], &self.scratch_k)?;
+        let vc = lit_f32(&[n_heads, cap, d_head], &self.scratch_v)?;
+        let m_lit = lit_f32(&[cap], &mask)?;
+        let path = self.art.path("decode_layer", Some(cap));
+        let mut inputs: Vec<&xla::Literal> =
+            vec![&x_lit, &pos_lit, &idx_lit, &kc, &vc, &m_lit];
+        for p in &self.wlit.per_layer[layer] {
+            inputs.push(p);
+        }
+        let outs = self.rt.execute(&path, &inputs)?;
+        let [x2, k_new, v_new, s_lit]: [xla::Literal; 4] = outs
+            .try_into()
+            .map_err(|_| anyhow!("decode_layer returned wrong arity"))?;
+        Ok((
+            to_vec_f32(&x2)?,
+            to_vec_f32(&k_new)?,
+            to_vec_f32(&v_new)?,
+            to_vec_f32(&s_lit)?,
+        ))
+    }
+
     /// One decode step over the per-layer caches: every layer advances
     /// one token, then the logits head selects the next token.
     fn decode_step(&mut self, gen: &mut Generation) -> Result<StepEvent> {
         let t0 = Instant::now();
         // Hot path (one call per decode token): no config clone.
         let fm = self.fm();
-        let (d, n_heads, d_head, n_layers) = (
-            self.cfg.d_model,
-            self.cfg.n_heads,
-            self.cfg.d_head,
-            self.cfg.n_layers,
-        );
+        let n_layers = self.cfg.n_layers;
         let k = gen.prompt_len;
         let cur = *gen.tokens.last().expect("decode_step before prefill finished");
         let pos = (k + gen.tokens.len() - 1) as i32;
         let mut x: Vec<f32> = self.weights.embed(cur).to_vec();
         for l in 0..n_layers {
-            if gen.caches.layers[l].len() + 1 > gen.caches.layers[l].cap() {
-                let new_cap =
-                    self.art.pick_bucket("decode_layer", gen.caches.layers[l].len() + 1)?;
-                gen.caches.layers[l].grow(new_cap);
-            }
-            let cache = &gen.caches.layers[l];
-            let cap = cache.cap();
-            let cur_idx = cache.len();
-            let mut mask = cache.mask();
-            mask[cur_idx] = 1.0;
-            let x_lit = lit_f32(&[d], &x)?;
-            let pos_lit = lit_i32_scalar(pos)?;
-            let idx_lit = lit_i32_scalar(cur_idx as i32)?;
-            let kc = lit_f32(&[n_heads, cap, d_head], cache.k_data())?;
-            let vc = lit_f32(&[n_heads, cap, d_head], cache.v_data())?;
-            let m_lit = lit_f32(&[cap], &mask)?;
-            let path = self.art.path("decode_layer", Some(cap));
-            let mut inputs: Vec<&xla::Literal> =
-                vec![&x_lit, &pos_lit, &idx_lit, &kc, &vc, &m_lit];
-            for p in &self.wlit.per_layer[l] {
-                inputs.push(p);
-            }
-            let outs = self.rt.execute(&path, &inputs)?;
-            let [x2, k_new, v_new, s_lit]: [xla::Literal; 4] = outs
-                .try_into()
-                .map_err(|_| anyhow!("decode_layer returned wrong arity"))?;
-            x = to_vec_f32(&x2)?;
-            let k_new = to_vec_f32(&k_new)?;
-            let v_new = to_vec_f32(&v_new)?;
+            let ctx = gen.caches.layers[l].len() + 1;
+            let (x2, k_new, v_new, s) =
+                self.decode_one(l, &x, pos, &mut gen.caches.layers[l])?;
+            x = x2;
             gen.caches.layers[l].append(&k_new, &v_new, pos);
-            gen.flops.add_decode_layer(&fm, cur_idx + 1);
+            gen.flops.add_decode_layer(&fm, ctx);
             // Progressive decode-time pruning (extension): drop the
             // least-important AV rows of this layer's cache using the
             // step's own importance row.
@@ -825,7 +1260,6 @@ impl ModelEngine {
                 && l >= gen.g
                 && gen.opts.plan.fine != FineStrategy::None
             {
-                let s = to_vec_f32(&s_lit)?;
                 let segments_src = &gen.segments_src;
                 let cache = &mut gen.caches.layers[l];
                 let len = cache.len();
@@ -878,7 +1312,10 @@ impl ModelEngine {
             decode_seconds: gen.decode_seconds,
             decode_steps: gen.decode_steps,
             live_counts: gen.live_counts,
+            prefix_hit: gen.prefix_lease.is_some(),
+            prefix_tokens_reused: gen.prefix_tokens_reused,
             tokens: gen.tokens,
+            // `gen.prefix_lease` drops here, unpinning the cache entry.
         }
     }
 

@@ -12,7 +12,8 @@ pub mod weights;
 
 pub use config::ModelConfig;
 pub use engine::{
-    CalibProbe, GenerateOptions, GenerateResult, Generation, ModelEngine, PruningPlan,
-    RequestInput, StepEvent,
+    av_prefix_len, plan_prefix_fingerprint, request_prefix_affinity, CalibProbe,
+    GenerateOptions, GenerateResult, Generation, ModelEngine, PruningPlan, RequestInput,
+    StepEvent,
 };
 pub use weights::{WeightLiterals, Weights};

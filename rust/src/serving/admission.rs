@@ -1,14 +1,39 @@
 //! Per-replica admission control: a KV-cache byte budget plus an
-//! in-flight slot cap.
+//! in-flight slot cap, with pool-level accounting for shared AV-prefix
+//! blocks.
 //!
 //! Each replica owns one [`Admission`] (single-threaded — the replica
-//! thread is the only caller, so no locking). A request is admitted
-//! into the step scheduler only when its *estimated* KV footprint
-//! (unpruned prompt + full generation budget, bucket-rounded — see
-//! `ModelEngine::estimate_kv_bytes`) fits under the remaining budget.
-//! Estimates are conservative upper bounds, so the replica can never
-//! oversubscribe device-adjacent host memory no matter how pruning
-//! plays out.
+//! thread is the only caller, so no locking). A request is admitted into
+//! the step scheduler only when its estimated KV footprint fits under
+//! the remaining budget. The estimate is split:
+//!
+//! * **unique bytes** — the request's own suffix/decode blocks
+//!   (conservative dense upper bound, see `ModelEngine::estimate_kv_bytes`),
+//!   charged per request;
+//! * **shared bytes** — the refcounted AV-prefix blocks the request will
+//!   borrow from the prefix cache, charged **once per prefix entry** no
+//!   matter how many concurrent requests share it (a refcount map keyed
+//!   by the entry). This is what makes KV accounting for K same-prefix
+//!   requests grow sub-linearly in K instead of K × slab.
+//!
+//! Estimates are upper bounds, so the replica can never oversubscribe
+//! device-adjacent host memory no matter how pruning plays out. (One
+//! benign race: if a probed entry is evicted between admission and
+//! `begin`, the request re-prefills and its actual unique footprint can
+//! transiently exceed the probe split; the dense per-request bound still
+//! caps it.)
+
+use std::collections::HashMap;
+
+/// Shareable portion of a request's estimate: the prefix-cache entry it
+/// will borrow, keyed so concurrent borrowers are charged once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixCharge {
+    /// Cache entry key (see `kvcache::prefix`).
+    pub key: u64,
+    /// Entry payload bytes.
+    pub bytes: usize,
+}
 
 /// Outcome of an admission check.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,6 +55,8 @@ pub struct Admission {
     max_inflight: usize,
     used_bytes: usize,
     inflight: usize,
+    /// Shared-prefix charges: entry key → (bytes, borrower count).
+    shared: HashMap<u64, (usize, usize)>,
 }
 
 impl Admission {
@@ -40,6 +67,7 @@ impl Admission {
             max_inflight: max_inflight.max(1),
             used_bytes: 0,
             inflight: 0,
+            shared: HashMap::new(),
         }
     }
 
@@ -48,24 +76,61 @@ impl Admission {
         self.inflight < self.max_inflight
     }
 
-    /// Try to admit a request estimated at `bytes`; on `Granted` the
-    /// caller must later `release(bytes)` exactly once.
+    /// Try to admit a request estimated at `bytes`, all unique; on
+    /// `Granted` the caller must later `release(bytes)` exactly once.
     pub fn check(&mut self, bytes: usize) -> Admit {
-        if bytes > self.budget_bytes {
+        self.check_prefixed(bytes, None)
+    }
+
+    /// Try to admit a request whose estimate splits into `unique_bytes`
+    /// plus an optional shared-prefix charge. The shared bytes count
+    /// against the budget only for the entry's *first* concurrent
+    /// borrower; later borrowers are charged their unique bytes alone.
+    /// On `Granted` the caller must later call
+    /// [`release_prefixed`](Self::release_prefixed) with the same
+    /// arguments exactly once.
+    pub fn check_prefixed(&mut self, unique_bytes: usize, prefix: Option<PrefixCharge>) -> Admit {
+        let shared_new = match prefix {
+            Some(p) if !self.shared.contains_key(&p.key) => p.bytes,
+            _ => 0,
+        };
+        let needed = unique_bytes.saturating_add(shared_new);
+        if needed > self.budget_bytes {
             return Admit::Oversize;
         }
-        if !self.has_slot() || self.used_bytes.saturating_add(bytes) > self.budget_bytes {
+        if !self.has_slot() || self.used_bytes.saturating_add(needed) > self.budget_bytes {
             return Admit::Defer;
         }
-        self.used_bytes += bytes;
+        self.used_bytes += needed;
         self.inflight += 1;
+        if let Some(p) = prefix {
+            let e = self.shared.entry(p.key).or_insert((p.bytes, 0));
+            e.1 += 1;
+        }
         Admit::Granted
     }
 
-    /// Return a previously granted reservation.
+    /// Return a previously granted all-unique reservation.
     pub fn release(&mut self, bytes: usize) {
+        self.release_prefixed(bytes, None);
+    }
+
+    /// Return a reservation granted by [`check_prefixed`](Self::check_prefixed).
+    /// The shared charge is refunded when the *last* borrower of the
+    /// entry releases.
+    pub fn release_prefixed(&mut self, unique_bytes: usize, prefix: Option<PrefixCharge>) {
         debug_assert!(self.inflight > 0, "release without admit");
-        self.used_bytes = self.used_bytes.saturating_sub(bytes);
+        let mut refund = unique_bytes;
+        if let Some(p) = prefix {
+            if let Some(e) = self.shared.get_mut(&p.key) {
+                e.1 = e.1.saturating_sub(1);
+                if e.1 == 0 {
+                    refund = refund.saturating_add(e.0);
+                    self.shared.remove(&p.key);
+                }
+            }
+        }
+        self.used_bytes = self.used_bytes.saturating_sub(refund);
         self.inflight = self.inflight.saturating_sub(1);
     }
 
@@ -79,6 +144,11 @@ impl Admission {
 
     pub fn budget_bytes(&self) -> usize {
         self.budget_bytes
+    }
+
+    /// Distinct prefix entries currently charged (observability).
+    pub fn shared_entries(&self) -> usize {
+        self.shared.len()
     }
 }
 
@@ -125,5 +195,59 @@ mod tests {
         a.release(10); // double release must not underflow
         assert_eq!(a.used_bytes(), 0);
         assert_eq!(a.inflight(), 0);
+    }
+
+    #[test]
+    fn shared_prefix_charged_once_across_borrowers() {
+        let mut a = Admission::new(1000, 8);
+        let p = Some(PrefixCharge { key: 42, bytes: 600 });
+        // First borrower pays unique + shared.
+        assert_eq!(a.check_prefixed(100, p), Admit::Granted);
+        assert_eq!(a.used_bytes(), 700);
+        // Later borrowers pay only their unique bytes: sub-linear in K.
+        assert_eq!(a.check_prefixed(100, p), Admit::Granted);
+        assert_eq!(a.check_prefixed(100, p), Admit::Granted);
+        assert_eq!(a.used_bytes(), 900);
+        assert_eq!(a.shared_entries(), 1);
+        // Without sharing, the third request would not have fit.
+        assert!(3 * (100 + 600) > 1000);
+        // Shared bytes are refunded only at the last release.
+        a.release_prefixed(100, p);
+        a.release_prefixed(100, p);
+        assert_eq!(a.used_bytes(), 700);
+        a.release_prefixed(100, p);
+        assert_eq!(a.used_bytes(), 0);
+        assert_eq!(a.shared_entries(), 0);
+    }
+
+    #[test]
+    fn distinct_prefixes_charged_separately() {
+        let mut a = Admission::new(0, 8);
+        assert_eq!(
+            a.check_prefixed(10, Some(PrefixCharge { key: 1, bytes: 100 })),
+            Admit::Granted
+        );
+        assert_eq!(
+            a.check_prefixed(10, Some(PrefixCharge { key: 2, bytes: 200 })),
+            Admit::Granted
+        );
+        assert_eq!(a.used_bytes(), 320);
+        assert_eq!(a.shared_entries(), 2);
+        a.release_prefixed(10, Some(PrefixCharge { key: 1, bytes: 100 }));
+        a.release_prefixed(10, Some(PrefixCharge { key: 2, bytes: 200 }));
+        assert_eq!(a.used_bytes(), 0);
+    }
+
+    #[test]
+    fn oversize_counts_first_borrower_shared_bytes() {
+        let mut a = Admission::new(500, 8);
+        let p = Some(PrefixCharge { key: 7, bytes: 600 });
+        // unique + first-borrower shared exceeds the whole budget.
+        assert_eq!(a.check_prefixed(10, p), Admit::Oversize);
+        // Once someone else holds the entry, the same request fits.
+        let q = Some(PrefixCharge { key: 8, bytes: 400 });
+        assert_eq!(a.check_prefixed(10, q), Admit::Granted);
+        assert_eq!(a.check_prefixed(10, q), Admit::Granted);
+        assert_eq!(a.used_bytes(), 420);
     }
 }

@@ -27,9 +27,20 @@
 //! a per-replica KV-cache byte budget; cancellation flags and deadlines
 //! are honored between quanta.
 //!
+//! **Prefix reuse:** the pool owns one process-wide
+//! [`PrefixCache`] (refcounted AV-prefix K/V blocks over the paged
+//! [`crate::kvcache::BlockPool`]); every engine gets it at startup via
+//! [`ReplicaEngine::attach_prefix_cache`]. Dispatch is prefix-affine —
+//! requests sharing a cached AV prefix land on the replica that built
+//! the entry — and [`admission`] charges shared prefix bytes once per
+//! entry across concurrent borrowers, so KV accounting for K
+//! same-prefix requests grows sub-linearly in K. `GET /v1/pool` exposes
+//! the cache stats; `POST /v1/cache/flush` evicts lease-free entries.
+//!
 //! The pool is generic over [`replica::ReplicaEngine`], so every
 //! scheduling/conservation property is testable with a mock engine and
-//! no AOT artifacts (`rust/tests/test_scheduling.rs`).
+//! no AOT artifacts (`rust/tests/test_scheduling.rs`,
+//! `rust/tests/test_prefix.rs`).
 
 pub mod admission;
 pub mod replica;
@@ -44,9 +55,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{Event, GenRequest, PushError, SchedStats, SchedulerQueue};
+use crate::kvcache::{PrefixCache, PrefixCacheStats};
 use crate::metrics::Registry;
-use crate::model::ModelEngine;
+use crate::model::{request_prefix_affinity, ModelEngine};
 
+pub use admission::PrefixCharge;
 pub use replica::ReplicaEngine;
 use replica::Job;
 
@@ -61,6 +74,9 @@ pub struct PoolConfig {
     pub max_inflight: usize,
     /// Per-replica KV-cache byte budget; `0` = unlimited.
     pub kv_budget_bytes: usize,
+    /// Byte budget for the shared AV-prefix cache (LRU eviction over
+    /// lease-free entries); `0` = unlimited.
+    pub prefix_cache_bytes: usize,
     /// Pre-compile serving artifacts on every replica at startup.
     pub warmup: bool,
     /// Deadline applied to requests that don't carry their own.
@@ -74,6 +90,7 @@ impl Default for PoolConfig {
             queue_cap: 64,
             max_inflight: 4,
             kv_budget_bytes: 0,
+            prefix_cache_bytes: 0,
             warmup: false,
             default_deadline: None,
         }
@@ -171,14 +188,25 @@ struct ReplicaHandle {
     thread: Option<std::thread::JoinHandle<()>>,
 }
 
-/// A pool of engine replicas with iteration-level scheduling.
+/// A pool of engine replicas with iteration-level scheduling and
+/// prefix-affinity dispatch: requests sharing a cached AV prefix are
+/// routed to the replica that built its entry (the entry itself lives in
+/// the process-wide [`PrefixCache`], so any replica *can* serve a hit —
+/// affinity just keeps warm buckets and queues aligned).
 pub struct ReplicaPool {
     replicas: Vec<ReplicaHandle>,
     shared: Arc<PoolShared>,
     cfg: PoolConfig,
     next_id: AtomicU64,
     metrics: Arc<Registry>,
+    prefix: Arc<PrefixCache>,
+    /// Affinity key → replica that first served it (= owns the entry).
+    router: Mutex<HashMap<u64, usize>>,
 }
+
+/// Bound on remembered affinity routes; the map resets when exceeded
+/// (routing degrades to least-loaded, never breaks correctness).
+const ROUTER_CAP: usize = 4096;
 
 impl ReplicaPool {
     /// Start a pool of [`ModelEngine`] replicas over one artifact set.
@@ -215,6 +243,10 @@ impl ReplicaPool {
         register_metrics(&metrics);
         let factory = Arc::new(factory);
         let shared = Arc::new(PoolShared::default());
+        // One process-wide prefix cache shared by every replica; each
+        // engine gets it via `ReplicaEngine::attach_prefix_cache`.
+        let prefix = Arc::new(PrefixCache::new(cfg.prefix_cache_bytes));
+        prefix.bind_metrics(&metrics);
         let mut replicas: Vec<ReplicaHandle> = Vec::with_capacity(cfg.replicas);
         for i in 0..cfg.replicas {
             let queue: Arc<SchedulerQueue<Job>> = Arc::new(SchedulerQueue::new(cfg.queue_cap));
@@ -226,6 +258,7 @@ impl ReplicaPool {
                 let pshared = Arc::clone(&shared);
                 let metrics = Arc::clone(&metrics);
                 let factory = Arc::clone(&factory);
+                let prefix = Arc::clone(&prefix);
                 let cfg = cfg.clone();
                 std::thread::Builder::new()
                     .name(format!("replica-{}", i))
@@ -239,7 +272,14 @@ impl ReplicaPool {
                         };
                         let _ = ready_tx.send(Ok(()));
                         replica::replica_loop(
-                            i, engine, &cfg, &queue, &rshared, &pshared, &metrics,
+                            i,
+                            engine,
+                            &cfg,
+                            &queue,
+                            &rshared,
+                            &pshared,
+                            &metrics,
+                            Some(prefix),
                         );
                     })
             };
@@ -268,6 +308,8 @@ impl ReplicaPool {
             cfg,
             next_id: AtomicU64::new(1),
             metrics,
+            prefix,
+            router: Mutex::new(HashMap::new()),
         })
     }
 
@@ -287,9 +329,12 @@ impl ReplicaPool {
         self.replicas[i].queue.len() + self.replicas[i].shared.active.load(Ordering::SeqCst)
     }
 
-    /// Submit a request to the least-loaded replica; falls over to the
-    /// next replica when a queue is full. Returns the request id (for
-    /// [`cancel`](Self::cancel)) and the streaming event receiver.
+    /// Submit a request with prefix-affinity dispatch: if another request
+    /// sharing this request's AV prefix was already routed, try the
+    /// replica that owns the warm entry first; otherwise (and as
+    /// fallover when that queue is full) walk replicas least-loaded
+    /// first. Returns the request id (for [`cancel`](Self::cancel)) and
+    /// the streaming event receiver.
     pub fn submit(&self, req: GenRequest) -> Result<(u64, Receiver<Event>), SubmitError> {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -299,6 +344,7 @@ impl ReplicaPool {
             .or(self.cfg.default_deadline)
             .map(|d| Instant::now() + d);
         let prio = req.priority;
+        let affinity = request_prefix_affinity(&req.prompt, &req.segments, &req.opts.plan);
         self.shared.submitted.fetch_add(1, Ordering::SeqCst);
         self.metrics.counter("fastav_requests_total").inc();
         let mut job = Job {
@@ -314,10 +360,28 @@ impl ReplicaPool {
         self.shared.cancels.lock().unwrap().insert(id, cancel);
         let mut order: Vec<usize> = (0..self.replicas.len()).collect();
         order.sort_by_key(|&i| self.load(i));
+        if let Some(aff) = affinity {
+            let owner = self.router.lock().unwrap().get(&aff).copied();
+            if let Some(owner) = owner {
+                if let Some(pos) = order.iter().position(|&i| i == owner) {
+                    order.remove(pos);
+                    order.insert(0, owner);
+                }
+            }
+        }
         let mut all_closed = true;
         for &i in &order {
             match self.replicas[i].queue.try_push(job, prio) {
                 Ok(()) => {
+                    if let Some(aff) = affinity {
+                        let mut router = self.router.lock().unwrap();
+                        if router.len() >= ROUTER_CAP {
+                            router.clear();
+                        }
+                        // First dispatch wins: that replica builds (and
+                        // therefore owns) the prefix entry.
+                        router.entry(aff).or_insert(i);
+                    }
                     self.metrics
                         .gauge("fastav_queue_depth")
                         .set(self.queue_depth() as u64);
@@ -409,6 +473,22 @@ impl ReplicaPool {
             .collect()
     }
 
+    /// The process-wide AV-prefix cache backing every replica.
+    pub fn prefix_cache(&self) -> &Arc<PrefixCache> {
+        &self.prefix
+    }
+
+    /// Prefix-cache accounting snapshot (the `/v1/pool` payload).
+    pub fn prefix_stats(&self) -> PrefixCacheStats {
+        self.prefix.stats()
+    }
+
+    /// Evict every lease-free prefix entry (`POST /v1/cache/flush`).
+    /// Returns `(entries_evicted, bytes_freed)`.
+    pub fn flush_prefix_cache(&self) -> (usize, usize) {
+        self.prefix.flush()
+    }
+
     /// Close every queue, drain in-flight work, and join the replicas.
     pub fn shutdown(mut self) {
         Self::close_handles(&mut self.replicas);
@@ -432,9 +512,18 @@ fn register_metrics(metrics: &Registry) {
         "fastav_requests_canceled_total",
         "fastav_requests_expired_total",
         "fastav_tokens_generated_total",
+        "fastav_prefix_tokens_reused_total",
+        "fastav_prefix_cache_hits_total",
+        "fastav_prefix_cache_misses_total",
+        "fastav_prefix_cache_evictions_total",
     ] {
         metrics.counter(c);
     }
     metrics.gauge("fastav_queue_depth");
     metrics.gauge("fastav_kv_peak_bytes");
+    metrics.gauge("fastav_prefix_cache_entries");
+    metrics.gauge("fastav_prefix_cache_bytes");
+    metrics.gauge("fastav_kv_blocks_used");
+    metrics.gauge("fastav_kv_blocks_shared");
+    metrics.gauge("fastav_kv_blocks_free");
 }

@@ -18,10 +18,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::{Event, GenRequest, SchedulerQueue};
+use crate::kvcache::PrefixCache;
 use crate::metrics::{labeled, Registry};
 use crate::model::{GenerateResult, Generation, ModelEngine, RequestInput, StepEvent};
 
-use super::admission::{Admission, Admit};
+use super::admission::{Admission, Admit, PrefixCharge};
 use super::step_scheduler::StepScheduler;
 use super::{PoolConfig, PoolShared, ReplicaShared, Terminal};
 
@@ -31,7 +32,8 @@ use super::{PoolConfig, PoolShared, ReplicaShared, Terminal};
 pub trait ReplicaEngine {
     type Gen;
 
-    /// Start a generation (embed + fused front + global pruning).
+    /// Start a generation (embed + fused front + global pruning — or a
+    /// mid-sequence resume from the shared prefix cache on a hit).
     fn begin(&mut self, req: &GenRequest) -> Result<Self::Gen>;
 
     /// Advance one quantum (one prefill layer or one decode step).
@@ -48,6 +50,18 @@ pub trait ReplicaEngine {
 
     /// Conservative pre-admission KV-byte estimate for a request.
     fn estimate_bytes(&self, req: &GenRequest) -> usize;
+
+    /// Hook: the pool hands every engine the process-wide prefix cache
+    /// at startup. Engines that can reuse AV prefixes store it; the
+    /// default ignores it.
+    fn attach_prefix_cache(&mut self, _cache: Arc<PrefixCache>, _replica: usize) {}
+
+    /// The shareable (already-resident) portion of `estimate_bytes`, as
+    /// a refcounted charge so admission counts shared prefix blocks once
+    /// across concurrent borrowers. `None` = everything is unique.
+    fn prefix_probe(&self, _req: &GenRequest) -> Option<PrefixCharge> {
+        None
+    }
 }
 
 impl ReplicaEngine for ModelEngine {
@@ -81,6 +95,15 @@ impl ReplicaEngine for ModelEngine {
     fn estimate_bytes(&self, req: &GenRequest) -> usize {
         self.estimate_kv_bytes(req.prompt.len(), req.opts.max_gen)
     }
+
+    fn attach_prefix_cache(&mut self, cache: Arc<PrefixCache>, _replica: usize) {
+        self.set_prefix_cache(cache);
+    }
+
+    fn prefix_probe(&self, req: &GenRequest) -> Option<PrefixCharge> {
+        self.prefix_shared_estimate(&req.prompt, &req.segments, &req.frame_of, &req.opts.plan)
+            .map(|(key, bytes)| PrefixCharge { key, bytes })
+    }
 }
 
 /// A queued request (pool-internal).
@@ -101,7 +124,11 @@ struct Active<G> {
     deadline: Option<Instant>,
     events: Sender<Event>,
     started: Instant,
+    /// Unique (non-shared) bytes reserved with the admission controller.
     est_bytes: usize,
+    /// Shared-prefix charge reserved alongside (refcounted; see
+    /// [`Admission::release_prefixed`]).
+    prefix_charge: Option<PrefixCharge>,
 }
 
 /// Pre-resolved metric handles for one replica thread.
@@ -119,6 +146,7 @@ struct ReplicaMetrics {
     canceled_c: Arc<crate::metrics::Counter>,
     expired_c: Arc<crate::metrics::Counter>,
     tokens_c: Arc<crate::metrics::Counter>,
+    prefix_tokens_c: Arc<crate::metrics::Counter>,
     kv_peak: Arc<crate::metrics::Gauge>,
 }
 
@@ -139,6 +167,7 @@ impl ReplicaMetrics {
             canceled_c: metrics.counter("fastav_requests_canceled_total"),
             expired_c: metrics.counter("fastav_requests_expired_total"),
             tokens_c: metrics.counter("fastav_tokens_generated_total"),
+            prefix_tokens_c: metrics.counter("fastav_prefix_tokens_reused_total"),
             kv_peak: metrics.gauge("fastav_kv_peak_bytes"),
         }
     }
@@ -152,6 +181,7 @@ enum Outcome {
 
 /// The replica thread body: admit → step → account, until the queue is
 /// closed and drained and no generation is in flight.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn replica_loop<E: ReplicaEngine>(
     replica_id: usize,
     mut engine: E,
@@ -160,8 +190,12 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
     rshared: &ReplicaShared,
     pshared: &PoolShared,
     metrics: &Registry,
+    prefix: Option<Arc<PrefixCache>>,
 ) {
     let m = ReplicaMetrics::new(metrics, replica_id);
+    if let Some(c) = prefix.clone() {
+        engine.attach_prefix_cache(c, replica_id);
+    }
     let mut admission = Admission::new(cfg.kv_budget_bytes, cfg.max_inflight);
     let mut sched = StepScheduler::new();
     let mut active: Vec<Active<E::Gen>> = Vec::new();
@@ -199,7 +233,11 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                 continue;
             }
             let est = engine.estimate_bytes(&job.req);
-            match admission.check(est) {
+            // Split the estimate: bytes the request will borrow from a
+            // resident prefix entry are charged once across borrowers.
+            let charge = engine.prefix_probe(&job.req);
+            let unique = est.saturating_sub(charge.map(|c| c.bytes).unwrap_or(0));
+            match admission.check_prefixed(unique, charge) {
                 Admit::Granted => {}
                 Admit::Defer => {
                     // Re-examined once a running generation releases
@@ -226,7 +264,12 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
             m.queue_hist.observe(job.enqueued.elapsed().as_secs_f64());
             match engine.begin(&job.req) {
                 Ok(gen) => {
-                    sched.admit(job.id, job.req.priority, job.deadline);
+                    sched.admit_with_affinity(
+                        job.id,
+                        job.req.priority,
+                        job.deadline,
+                        charge.map(|c| c.key),
+                    );
                     active.push(Active {
                         id: job.id,
                         gen,
@@ -234,11 +277,12 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                         deadline: job.deadline,
                         events: job.events,
                         started: Instant::now(),
-                        est_bytes: est,
+                        est_bytes: unique,
+                        prefix_charge: charge,
                     });
                 }
                 Err(e) => {
-                    admission.release(est);
+                    admission.release_prefixed(unique, charge);
                     settle_job(&job, Terminal::Failed, &format!("{:#}", e), rshared, pshared, &m);
                 }
             }
@@ -293,6 +337,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                     }
                     m.kv_peak.max(res.peak_kv_bytes as u64);
                     m.tokens_c.add(res.tokens.len() as u64);
+                    m.prefix_tokens_c.add(res.prefix_tokens_reused as u64);
                     m.completed_c.inc();
                     pshared.completed.fetch_add(1, Ordering::SeqCst);
                     rshared.completed.fetch_add(1, Ordering::SeqCst);
@@ -304,7 +349,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                     settle_terminal(kind, &msg, &a.events, rshared, pshared, &m, false);
                 }
             }
-            admission.release(a.est_bytes);
+            admission.release_prefixed(a.est_bytes, a.prefix_charge);
             pshared.cancels.lock().unwrap().remove(&a.id);
             rshared.active.fetch_sub(1, Ordering::SeqCst);
             m.active_g.set(active.len() as u64);
@@ -319,6 +364,11 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
             let sps = (rate_steps as f64 / dt).round() as u64;
             rshared.steps_per_sec.store(sps, Ordering::Relaxed);
             m.sps_g.set(sps);
+            // Block-pool gauges drift with every append/compact, not only
+            // with cache operations — refresh them on the rate tick.
+            if let Some(c) = &prefix {
+                c.refresh_gauges();
+            }
             rate_steps = 0;
             rate_t0 = Instant::now();
         }

@@ -13,6 +13,15 @@
 //! `admit`/`remove` keep the two in lockstep. It is engine-agnostic and
 //! single-threaded, which is what makes the fairness properties
 //! testable without artifacts (see `rust/tests/test_scheduling.rs`).
+//!
+//! Prefix affinity: entries carry the prefix-cache entry key they were
+//! admitted under ([`EntryMeta::affinity`]). Affinity-aware *dispatch*
+//! happens one level up (`ReplicaPool::submit` routes same-prefix
+//! requests to the owning replica); within a replica every in-flight
+//! generation already shares the same process-wide prefix cache and
+//! engine, so reordering quanta by affinity would buy nothing and cost
+//! the weighted-round-robin no-starvation bound. The key is recorded so
+//! operators can see co-located prefix groups per replica.
 
 use std::time::Instant;
 
@@ -27,6 +36,8 @@ pub struct EntryMeta {
     pub id: u64,
     pub priority: Priority,
     pub deadline: Option<Instant>,
+    /// Prefix-cache entry key this generation shares, if any.
+    pub affinity: Option<u64>,
     /// Quanta this generation has received.
     pub steps: u64,
 }
@@ -66,7 +77,27 @@ impl StepScheduler {
     /// Register a newly admitted generation (appends — the replica's
     /// `active` vector must push in the same order).
     pub fn admit(&mut self, id: u64, priority: Priority, deadline: Option<Instant>) {
-        self.entries.push(EntryMeta { id, priority, deadline, steps: 0 });
+        self.admit_with_affinity(id, priority, deadline, None);
+    }
+
+    /// [`Self::admit`] recording the prefix-cache entry key the
+    /// generation was admitted under (observability; see module docs).
+    pub fn admit_with_affinity(
+        &mut self,
+        id: u64,
+        priority: Priority,
+        deadline: Option<Instant>,
+        affinity: Option<u64>,
+    ) {
+        self.entries.push(EntryMeta { id, priority, deadline, affinity, steps: 0 });
+    }
+
+    /// In-flight generations sharing `affinity` (co-located prefix group).
+    pub fn affinity_count(&self, affinity: u64) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.affinity == Some(affinity))
+            .count()
     }
 
     /// Pick the entry to advance one quantum. Weighted round-robin:
@@ -177,6 +208,18 @@ mod tests {
         assert_eq!(s.pick(), Some(0));
         s.remove(0);
         assert_eq!(s.pick(), None);
+    }
+
+    #[test]
+    fn affinity_recorded_per_entry() {
+        let mut s = StepScheduler::new();
+        s.admit_with_affinity(1, Priority::Normal, None, Some(9));
+        s.admit_with_affinity(2, Priority::Normal, None, Some(9));
+        s.admit(3, Priority::Normal, None);
+        assert_eq!(s.affinity_count(9), 2);
+        assert_eq!(s.entry(2).affinity, None);
+        s.remove(0);
+        assert_eq!(s.affinity_count(9), 1);
     }
 
     #[test]

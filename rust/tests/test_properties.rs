@@ -176,6 +176,10 @@ fn prop_kvcache_compact_preserves_mapping() {
                 assert_eq!(cache.v_row(h, row)[0], -((h * 1000 + src) as f32));
             }
         }
+        // The vacated range reads exactly zero — the whole range, not
+        // just the first 64 rows (regression: pre-paged compact left
+        // stale K/V beyond a 64-slot zeroing window).
+        assert!(cache.padding_is_zero(), "stale rows beyond len after compact");
         // Grow preserves everything.
         let bigger = cap + g.usize_in(1, 16);
         cache.grow(bigger);

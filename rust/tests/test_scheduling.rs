@@ -74,6 +74,8 @@ impl ReplicaEngine for MockEngine {
             decode_seconds: 0.0,
             decode_steps: gen.produced.saturating_sub(1),
             live_counts: Vec::new(),
+            prefix_hit: false,
+            prefix_tokens_reused: 0,
         }
     }
 

@@ -135,6 +135,45 @@ fn request_id_echoed_and_pool_status_served() {
 }
 
 #[test]
+fn question_override_and_cache_flush_roundtrip() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+    // Two different questions about the same sample: identical AV
+    // prefix, different text suffix. The second should be able to reuse
+    // the cached prefix (prefix_hit is engine-dependent here; the JSON
+    // contract is what this test pins).
+    for q in ["what_scene", "what_sound"] {
+        let body = format!(r#"{{"dataset": "avqa", "index": 2, "question": "{}"}}"#, q);
+        let (code, resp) =
+            request(&run.addr, "POST", "/v1/generate", body.as_bytes()).unwrap();
+        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&resp));
+        let j = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+        assert!(j.get("prefix_hit").as_bool().is_some());
+        assert!(j.get("prefix_tokens_reused").as_usize().is_some());
+    }
+    let (code, _) = request(
+        &run.addr,
+        "POST",
+        "/v1/generate",
+        br#"{"dataset": "avqa", "index": 2, "question": "nope"}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400, "unknown question override must 400");
+
+    // Pool status exposes cache + block accounting; flush succeeds.
+    let (code, body) = request(&run.addr, "GET", "/v1/pool", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(j.get("prefix_cache").get("misses").as_f64().is_some());
+    assert!(j.get("kv_blocks").get("used").as_f64().is_some());
+    let (code, body) = request(&run.addr, "POST", "/v1/cache/flush", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(j.get("flushed_entries").as_usize().is_some());
+    assert!(j.get("freed_bytes").as_usize().is_some());
+}
+
+#[test]
 fn cancel_unknown_request_is_404() {
     let Some(root) = common::tiny_ready() else { return };
     let run = spin_up(root);
