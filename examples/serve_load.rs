@@ -13,6 +13,14 @@
 //! total front-half prefill tokens skipped (summed from each response's
 //! `prefix_tokens_reused`), and records them in `BENCH_prefix.json`.
 //!
+//! A fourth phase drives the **saturated-decode** workload batched
+//! decode targets: one replica, N concurrent long generations, so every
+//! quantum past prefill is a fused `decode_batch` dispatch. It measures
+//! generated tokens/s at pool occupancy 1/4/8 with batching enabled
+//! (`max_decode_batch: 0`) vs forced single-step (`1`), reports the mean
+//! batch occupancy from the pool's `decode_batch` stats, and records
+//! everything in `BENCH_batch.json`.
+//!
 //! ```sh
 //! cargo run --release --example serve_load [model] [n_requests]
 //! ```
@@ -40,6 +48,8 @@ const SHORT_MAX_GEN: usize = 2;
 const LONG_MAX_GEN: usize = 16;
 /// Every 4th request is long.
 const LONG_EVERY: usize = 4;
+/// Saturated-decode (phase 4) generation length per request.
+const BATCH_MAX_GEN: usize = 24;
 
 struct RunResult {
     name: &'static str,
@@ -374,6 +384,115 @@ fn reused_tokens(resp: &[u8]) -> usize {
         .unwrap_or(0)
 }
 
+/// One saturated-decode measurement: `occupancy` concurrent
+/// long-generation requests on a single replica.
+struct BatchRun {
+    occupancy: usize,
+    batched: bool,
+    completed: usize,
+    tokens: usize,
+    wall: f64,
+    /// Pool-reported decode quanta + requests advanced by them.
+    quanta: u64,
+    quanta_tokens: u64,
+}
+
+impl BatchRun {
+    fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.wall.max(1e-12)
+    }
+
+    fn mean_occupancy(&self) -> f64 {
+        if self.quanta == 0 {
+            0.0
+        } else {
+            self.quanta_tokens as f64 / self.quanta as f64
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("occupancy", Json::num(self.occupancy as f64)),
+            ("batched", Json::Bool(self.batched)),
+            ("completed", Json::num(self.completed as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("wall_s", Json::num(self.wall)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec())),
+            ("decode_quanta", Json::num(self.quanta as f64)),
+            ("mean_batch_occupancy", Json::num(self.mean_occupancy())),
+        ])
+    }
+}
+
+/// Drive `occupancy` concurrent long generations to completion on one
+/// replica, with the fused decode path enabled or forced off.
+fn drive_batch(
+    model: &str,
+    occupancy: usize,
+    batched: bool,
+    plan: PruningPlan,
+    layout: &Layout,
+) -> BatchRun {
+    let cfg = PoolConfig {
+        replicas: 1,
+        queue_cap: 64,
+        max_inflight: occupancy,
+        warmup: true,
+        max_decode_batch: if batched { 0 } else { 1 },
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start_pool(common::artifact_root(), model.to_string(), cfg)
+            .expect("start pool");
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..occupancy)
+        .map(|i| {
+            let s = fastav::avsynth::gen_sample(
+                layout,
+                fastav::avsynth::Dataset::Avqa,
+                1000 + i as u64,
+                1234,
+            );
+            coord
+                .submit(fastav::coordinator::GenRequest {
+                    prompt: s.prompt,
+                    segments: s.segments,
+                    frame_of: s.frame_of,
+                    opts: fastav::model::GenerateOptions {
+                        plan: plan.clone(),
+                        max_gen: BATCH_MAX_GEN,
+                        ..Default::default()
+                    },
+                    priority: fastav::coordinator::Priority::Normal,
+                    deadline: None,
+                })
+                .expect("submit")
+        })
+        .collect();
+    let mut completed = 0usize;
+    let mut tokens = 0usize;
+    for rx in receivers {
+        for ev in rx {
+            match ev {
+                fastav::coordinator::Event::Token(_) => {}
+                fastav::coordinator::Event::Done(res) => {
+                    completed += 1;
+                    tokens += res.tokens.len();
+                    break;
+                }
+                fastav::coordinator::Event::Error(e) => {
+                    eprintln!("saturated-decode request failed: {}", e);
+                    break;
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (quanta, quanta_tokens) = coord.decode_batch_stats();
+    coord.shutdown();
+    BatchRun { occupancy, batched, completed, tokens, wall, quanta, quanta_tokens }
+}
+
 fn main() {
     let model = common::model_arg();
     let n_requests = common::n_arg(48).max(8);
@@ -421,7 +540,7 @@ fn main() {
         "\ndriving repeated-prefix workload: {} samples x {} questions (pool of 2)",
         samples, questions
     );
-    let prefix = drive_prefix(2, &model, samples, questions, plan, layout);
+    let prefix = drive_prefix(2, &model, samples, questions, plan.clone(), layout.clone());
     println!(
         "[prefix] {} ok / {} rejected in {:.2}s — {} hits / {} misses / {} evictions, \
          {} prefill tokens saved",
@@ -455,4 +574,56 @@ fn main() {
     ]);
     std::fs::write("BENCH_prefix.json", out.to_string() + "\n").expect("write BENCH_prefix.json");
     println!("wrote BENCH_prefix.json");
+
+    // --- Phase 4: saturated-decode workload (batched decode). ----------
+    println!("\ndriving saturated-decode workload: occupancy 1/4/8, batched vs single-step");
+    let mut runs = Vec::new();
+    for &occ in &[1usize, 4, 8] {
+        for &batched in &[true, false] {
+            let r = drive_batch(&model, occ, batched, plan.clone(), &layout);
+            println!(
+                "[batch] occupancy {} {}: {} tokens in {:.2}s — {:.1} tok/s, \
+                 mean batch occupancy {:.2} over {} decode quanta",
+                r.occupancy,
+                if r.batched { "batched " } else { "single-step" },
+                r.tokens,
+                r.wall,
+                r.tokens_per_sec(),
+                r.mean_occupancy(),
+                r.quanta
+            );
+            runs.push(r);
+        }
+    }
+    let speedup_at = |occ: usize| {
+        let tps = |b: bool| {
+            runs.iter()
+                .find(|r| r.occupancy == occ && r.batched == b)
+                .map(|r| r.tokens_per_sec())
+                .unwrap_or(0.0)
+        };
+        tps(true) / tps(false).max(1e-12)
+    };
+    let out = Json::obj(vec![
+        ("benchmark", Json::str("serve_load_batch")),
+        ("model", Json::str(&model)),
+        ("max_gen", Json::num(BATCH_MAX_GEN as f64)),
+        ("runs", Json::arr(runs.iter().map(|r| r.to_json()))),
+        ("speedup_occ4", Json::num(speedup_at(4))),
+        ("speedup_occ8", Json::num(speedup_at(8))),
+        ("measured", Json::Bool(true)),
+        (
+            "methodology",
+            Json::str(
+                "One replica, N concurrent long generations (pool occupancy 1/4/8) driven \
+                 to completion; tokens_per_sec = total generated tokens / wall. batched=true \
+                 runs with max_decode_batch=0 (fuse up to the artifact set's largest batch \
+                 bucket per quantum); batched=false forces max_decode_batch=1 (the \
+                 per-request single-token decode path). decode_quanta/mean_batch_occupancy \
+                 come from the pool's decode_batch stats (the GET /v1/pool block).",
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_batch.json", out.to_string() + "\n").expect("write BENCH_batch.json");
+    println!("wrote BENCH_batch.json");
 }

@@ -9,6 +9,8 @@ Per model config this emits into ``artifacts/<model>/``:
   * ``prefill_front_<n>.hlo.txt``  (one per prefill bucket)
   * ``back_layer_<n>.hlo.txt``     (one per seq bucket)
   * ``decode_layer_<n>.hlo.txt``   (one per seq bucket)
+  * ``decode_batch<b>_<n>.hlo.txt`` (one per batch bucket × seq bucket —
+    the fused continuous-batching decode step)
   * ``logits.hlo.txt``
   * ``calib_probe_<n>.hlo.txt``    (one per calib bucket)
   * ``model.json``                 (config + bucket grid + per-entry ABI)
@@ -59,11 +61,12 @@ def layer_param_specs(cfg, stack=None):
     return out
 
 
-def entry_specs(cfg, entry, n, split=None):
+def entry_specs(cfg, entry, n, split=None, batch=None):
     """Input ShapeDtypeStructs for an entry point at bucket n (the rust ABI).
 
     ``split`` overrides the front-half depth for ``frontsplit`` artifacts
-    (the Fig. 4 pruning-start-layer sweep).
+    (the Fig. 4 pruning-start-layer sweep); ``batch`` is the batch bucket
+    for ``decode_layer_batched`` artifacts.
     """
     d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
     if entry in ("prefill_front", "frontsplit"):
@@ -76,6 +79,11 @@ def entry_specs(cfg, entry, n, split=None):
     if entry == "decode_layer":
         return [spec((d,)), spec((), jnp.int32), spec((), jnp.int32),
                 spec((h, n, dh)), spec((h, n, dh)), spec((n,))] + \
+            layer_param_specs(cfg)
+    if entry == "decode_layer_batched":
+        b = cfg.batch_buckets[0] if batch is None else batch
+        return [spec((b, d)), spec((b,), jnp.int32), spec((b,), jnp.int32),
+                spec((b, h, n, dh)), spec((b, h, n, dh)), spec((b, n))] + \
             layer_param_specs(cfg)
     if entry == "logits":
         return [spec((d,)), spec((d,)), spec((cfg.vocab, d))]
@@ -92,6 +100,8 @@ def entry_fn(cfg, entry, use_pallas):
         return functools.partial(M.back_layer, cfg, use_pallas)
     if entry == "decode_layer":
         return functools.partial(M.decode_layer, cfg, use_pallas)
+    if entry == "decode_layer_batched":
+        return functools.partial(M.decode_layer_batched, cfg, use_pallas)
     if entry == "logits":
         return functools.partial(M.logits_head, cfg)
     if entry == "calib_probe":
@@ -99,10 +109,10 @@ def entry_fn(cfg, entry, use_pallas):
     raise ValueError(entry)
 
 
-def lower_entry(cfg, entry, n, use_pallas, out_path, force, split=None):
+def lower_entry(cfg, entry, n, use_pallas, out_path, force, split=None, batch=None):
     if os.path.exists(out_path) and not force:
         return False
-    specs = entry_specs(cfg, entry, n, split=split)
+    specs = entry_specs(cfg, entry, n, split=split, batch=batch)
     lowered = jax.jit(entry_fn(cfg, entry, use_pallas)).lower(*specs)
     text = to_hlo_text(lowered)
     with open(out_path, "w") as f:
@@ -110,10 +120,10 @@ def lower_entry(cfg, entry, n, use_pallas, out_path, force, split=None):
     return True
 
 
-def abi_of(cfg, entry, n):
+def abi_of(cfg, entry, n, batch=None):
     return [
         {"shape": list(s.shape), "dtype": str(s.dtype)}
-        for s in entry_specs(cfg, entry, n)
+        for s in entry_specs(cfg, entry, n, batch=batch)
     ]
 
 
@@ -122,12 +132,17 @@ def build_model(cfg, out_root, use_pallas, force):
     os.makedirs(out_dir, exist_ok=True)
     built = 0
 
-    # (entry, bucket, split, filename-stem)
-    plan = [("prefill_front", n, None, f"prefill_front_{n}") for n in cfg.prefill_buckets]
-    plan += [("back_layer", n, None, f"back_layer_{n}") for n in cfg.seq_buckets]
-    plan += [("decode_layer", n, None, f"decode_layer_{n}") for n in cfg.seq_buckets]
-    plan += [("logits", 0, None, "logits")]
-    plan += [("calib_probe", n, None, f"calib_probe_{n}") for n in cfg.calib_buckets]
+    # (entry, bucket, split, batch, filename-stem)
+    plan = [("prefill_front", n, None, None, f"prefill_front_{n}") for n in cfg.prefill_buckets]
+    plan += [("back_layer", n, None, None, f"back_layer_{n}") for n in cfg.seq_buckets]
+    plan += [("decode_layer", n, None, None, f"decode_layer_{n}") for n in cfg.seq_buckets]
+    # Batched decode: one artifact per (batch bucket × seq bucket); the
+    # rust engine picks the smallest (B, cap) pair covering a quantum's
+    # decode-ready set and falls back to decode_layer when none fits.
+    plan += [("decode_layer_batched", n, None, b, f"decode_batch{b}_{n}")
+             for b in cfg.batch_buckets for n in cfg.seq_buckets]
+    plan += [("logits", 0, None, None, "logits")]
+    plan += [("calib_probe", n, None, None, f"calib_probe_{n}") for n in cfg.calib_buckets]
     if cfg.emit_splits:
         # Front halves split at every layer boundary m (Fig. 4 sweep); the
         # m == mid split is identical to prefill_front and skipped.
@@ -135,11 +150,11 @@ def build_model(cfg, out_root, use_pallas, force):
             if m == cfg.mid_layer:
                 continue
             for n in cfg.prefill_buckets:
-                plan.append(("frontsplit", n, m, f"frontsplit{m}_{n}"))
+                plan.append(("frontsplit", n, m, None, f"frontsplit{m}_{n}"))
 
-    for entry, n, split, stem in plan:
+    for entry, n, split, batch, stem in plan:
         path = os.path.join(out_dir, f"{stem}.hlo.txt")
-        if lower_entry(cfg, entry, n, use_pallas, path, force, split=split):
+        if lower_entry(cfg, entry, n, use_pallas, path, force, split=split, batch=batch):
             built += 1
             print(f"  lowered {cfg.name}/{stem}", flush=True)
 
@@ -151,6 +166,10 @@ def build_model(cfg, out_root, use_pallas, force):
             "prefill_front": abi_of(cfg, "prefill_front", cfg.prefill_buckets[0]),
             "back_layer": abi_of(cfg, "back_layer", cfg.seq_buckets[0]),
             "decode_layer": abi_of(cfg, "decode_layer", cfg.seq_buckets[0]),
+            "decode_layer_batched": abi_of(
+                cfg, "decode_layer_batched", cfg.seq_buckets[0],
+                batch=cfg.batch_buckets[0],
+            ) if cfg.batch_buckets else [],
             "logits": abi_of(cfg, "logits", 0),
             "calib_probe": abi_of(cfg, "calib_probe", cfg.calib_buckets[0]),
         },

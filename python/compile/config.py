@@ -40,6 +40,11 @@ class ModelCfg:
     prefill_buckets: tuple = (128,)
     seq_buckets: tuple = (32, 48, 64, 96, 128)   # back layers + decode
     calib_buckets: tuple = (128,)
+    # Decode batch sizes: `decode_batch<b>_<n>.hlo.txt` artifacts are
+    # emitted per (batch bucket × seq bucket) so a replica can fuse up to
+    # max(batch_buckets) in-flight single-token decode steps into one
+    # dispatch (continuous batched decode). Empty = no batched artifacts.
+    batch_buckets: tuple = (2, 4, 8)
     # Emit per-split front artifacts (frontsplit<m>_<n>.hlo.txt) for the
     # pruning-start-layer sweep (paper Fig. 4).
     emit_splits: bool = False
@@ -59,6 +64,7 @@ class ModelCfg:
         d["prefill_buckets"] = list(self.prefill_buckets)
         d["seq_buckets"] = list(self.seq_buckets)
         d["calib_buckets"] = list(self.calib_buckets)
+        d["batch_buckets"] = list(self.batch_buckets)
         return d
 
 
@@ -89,6 +95,7 @@ TINY = ModelCfg(
     prefill_buckets=(32,),
     seq_buckets=(16, 32),
     calib_buckets=(32,),
+    batch_buckets=(2, 4),
     emit_splits=True,
     train_steps=150,
     train_batch=8,

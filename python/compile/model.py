@@ -8,6 +8,8 @@ the rust↔artifact ABI, documented per function):
     importance scores that drive FastAV's fine pruning.
   * :func:`decode_layer`   — one layer of a single-token decode step over a
     compacted KV cache (fused attention + importance).
+  * :func:`decode_layer_batched` — B independent single-token decode steps
+    over per-request KV caches in one dispatch (continuous-batching decode).
   * :func:`logits_head`    — final RMSNorm + tied unembedding.
   * :func:`calib_probe`    — all-layer rollout + raw-attention stacks
     (offline calibration; Figs. 1–2).
@@ -199,6 +201,82 @@ def decode_layer(cfg, use_pallas, x, pos, cur_idx, k_cache, v_cache, mask, *laye
     else:
         out, s = ref.ref_decode_attention(q1, k_full, v_full, mask)
     x = x + out.reshape(cfg.d_model) @ p["wo"]
+    x2 = rms_norm(x, p["ln2"])
+    x = x + swiglu(x2, p["wg"], p["wu"], p["wd"])
+    return x, k_new, v_new, s
+
+
+def batched_decode_attention(q, k, v, mask):
+    """Single-query attention over a batch of independent caches.
+
+    The decode-time counterpart of :func:`batched_attention` (same key
+    masking and softmax guards), specialized to one query row per batch
+    element; per-row semantics match ``ref.ref_decode_attention`` exactly
+    (including the head-averaged importance row and its validity gating),
+    which is what makes the batched artifact token-for-token equivalent to
+    B single-token :func:`decode_layer` dispatches.
+
+    Args:
+      q: ``[B, H, dh]`` current decode queries.
+      k, v: ``[B, H, n, dh]`` per-request caches (query's own K/V already
+        scattered in by the caller).
+      mask: ``[B, n]`` per-request validity masks; an all-zero row is a
+        batch padding slot and yields an all-zero output row.
+
+    Returns:
+      ``(out [B, H, dh], s [B, n])``.
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.einsum("bhd,bhnd->bhn", q, k) * scale
+    logits = logits + jnp.where(mask[:, None, :] > 0.5, 0.0, ref.NEG_INF)
+    m = jnp.maximum(jnp.max(logits, axis=-1, keepdims=True), ref.NEG_INF / 2)
+    p = jnp.exp(logits - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhn,bhnd->bhd", p, v)
+    return out, jnp.mean(p, axis=1) * mask
+
+
+def decode_layer_batched(cfg, use_pallas, x, pos, cur_idx, k_cache, v_cache, mask,
+                         *layer_params):
+    """One layer of B independent single-token decode steps, fused.
+
+    Row ``b`` computes exactly what :func:`decode_layer` computes for that
+    request — requests never attend across the batch; batching only
+    amortizes dispatch/upload cost. Padding rows (``mask[b] == 0``
+    everywhere, ``x[b] == 0``) stay exactly zero through the layer, so a
+    partially-filled batch bucket is safe.
+
+    The attention itself is the pure-jnp :func:`batched_decode_attention`
+    for both kernel impls (the single-request Pallas decode kernel has no
+    batched grid; numerics agree within the tested kernel tolerance).
+
+    ABI:
+      inputs:  x ``[B, d]``; pos ``[B]`` int32 (original position of each
+               new token); cur_idx ``[B]`` int32 (its cache slot);
+               k_cache/v_cache ``[B, H, n, dh]``; mask ``[B, n]``;
+               9 single-layer params (shared across the batch).
+      outputs: (x' ``[B, d]``, k_new ``[B, H, dh]``, v_new ``[B, H, dh]``,
+                s ``[B, n]`` importance rows incl. each new token).
+    """
+    del use_pallas  # see docstring: jnp attention on both paths
+    p = _layer_dict(layer_params)
+    xi = rms_norm(x, p["ln1"])  # [B, d]
+    angles = rope_angles(pos, cfg.d_head, cfg.rope_theta)  # [B, dh/2]
+    # One query row per batch element: qkv_project's sequence axis *is*
+    # the batch axis here (rows are independent until attention).
+    q, k, v = qkv_project(xi, p["wq"], p["wk"], p["wv"], cfg.n_heads, cfg.d_head, angles)
+    k_new = jnp.transpose(k, (1, 0, 2))  # [B, H, dh]
+    v_new = jnp.transpose(v, (1, 0, 2))
+    q_b = jnp.transpose(q, (1, 0, 2))
+
+    def scatter(cache, row, idx):
+        return jax.lax.dynamic_update_index_in_dim(cache, row, idx, axis=1)
+
+    k_full = jax.vmap(scatter)(k_cache, k_new, cur_idx)
+    v_full = jax.vmap(scatter)(v_cache, v_new, cur_idx)
+    out, s = batched_decode_attention(q_b, k_full, v_full, mask)
+    x = x + out.reshape(x.shape[0], cfg.d_model) @ p["wo"]
     x2 = rms_norm(x, p["ln2"])
     x = x + swiglu(x2, p["wg"], p["wu"], p["wd"])
     return x, k_new, v_new, s

@@ -29,6 +29,36 @@ def test_entry_specs_shapes():
     assert len(specs) == 6 + 9
 
 
+def test_entry_specs_batched_decode_shapes():
+    b, n = TINY.batch_buckets[1], 16  # (4, 16)
+    specs = aot.entry_specs(TINY, "decode_layer_batched", n, batch=b)
+    assert specs[0].shape == (b, TINY.d_model)
+    assert specs[1].shape == (b,) and str(specs[1].dtype) == "int32"
+    assert specs[2].shape == (b,) and str(specs[2].dtype) == "int32"
+    assert specs[3].shape == (b, TINY.n_heads, n, TINY.d_head)
+    assert specs[4].shape == (b, TINY.n_heads, n, TINY.d_head)
+    assert specs[5].shape == (b, n)
+    assert len(specs) == 6 + 9
+    # batch defaults to the first configured batch bucket.
+    specs = aot.entry_specs(TINY, "decode_layer_batched", n)
+    assert specs[0].shape == (TINY.batch_buckets[0], TINY.d_model)
+
+
+def test_lower_batched_decode_produces_hlo(tmp_path):
+    path = tmp_path / "decode_batch2_16.hlo.txt"
+    assert aot.lower_entry(TINY, "decode_layer_batched", 16, True, str(path),
+                           force=True, batch=2)
+    text = path.read_text()
+    assert "ENTRY" in text and "HloModule" in text
+
+
+def test_abi_batched_decode_serializable():
+    abi = aot.abi_of(TINY, "decode_layer_batched", 16, batch=TINY.batch_buckets[0])
+    parsed = json.loads(json.dumps(abi))
+    assert parsed[0]["shape"] == [TINY.batch_buckets[0], TINY.d_model]
+    assert parsed[3]["shape"] == [TINY.batch_buckets[0], TINY.n_heads, 16, TINY.d_head]
+
+
 def test_lower_back_layer_produces_hlo(tmp_path):
     path = tmp_path / "back_layer_16.hlo.txt"
     assert aot.lower_entry(TINY, "back_layer", 16, True, str(path), force=True)

@@ -16,6 +16,7 @@ from compile.model import (
     back_layer,
     calib_probe,
     decode_layer,
+    decode_layer_batched,
     init_params,
     logits_head,
     prefill_front,
@@ -129,6 +130,73 @@ def test_decode_step_equals_teacher_forced(params, sample_tokens):
 
     want = monolithic_last_logits(params, tokens + [next_tok])
     np.testing.assert_allclose(got, want, atol=3e-4, rtol=3e-4)
+
+
+def test_batched_decode_equals_single(params, sample_tokens):
+    """decode_layer_batched row b == decode_layer for request b: batching
+    amortizes dispatch, never mixes requests. Rows use different caches,
+    contexts (valid lengths), positions, and cache slots."""
+    tokens = list(sample_tokens.prompt)
+    klen = len(tokens)
+    nb = CFG.seq_buckets[1]  # 32: fits klen + 1
+    l = CFG.mid_layer
+
+    # Per-request K/V caches from a shared prefill (then perturbed so the
+    # two requests genuinely differ).
+    x = np.zeros((N, CFG.d_model), np.float32)
+    x[:klen] = np.asarray(params["emb"])[tokens]
+    mask = np.zeros((N,), np.float32)
+    mask[:klen] = 1.0
+    pos = np.arange(N, dtype=np.int32)
+    _, ks, vs = prefill_front(CFG, False, jnp.asarray(x), jnp.asarray(mask),
+                              jnp.asarray(pos), *front_params(params))
+    base_k = np.zeros((CFG.n_heads, nb, CFG.d_head), np.float32)
+    base_v = np.zeros((CFG.n_heads, nb, CFG.d_head), np.float32)
+    base_k[:, :klen] = np.asarray(ks[0])[:, :klen]
+    base_v[:, :klen] = np.asarray(vs[0])[:, :klen]
+
+    B = 3  # ragged: one row is batch padding (all-zero mask)
+    rng = np.random.default_rng(7)
+    k_caches = np.zeros((B, CFG.n_heads, nb, CFG.d_head), np.float32)
+    v_caches = np.zeros((B, CFG.n_heads, nb, CFG.d_head), np.float32)
+    xs = np.zeros((B, CFG.d_model), np.float32)
+    positions = np.zeros((B,), np.int32)
+    cur_idx = np.zeros((B,), np.int32)
+    masks = np.zeros((B, nb), np.float32)
+    # Request 0: full context at slot klen; request 1: shorter (pruned)
+    # context at slot klen-3 with a different position phase.
+    ctxs = [klen, klen - 3]
+    for b, ctx in enumerate(ctxs):
+        k_caches[b] = base_k + rng.standard_normal(base_k.shape).astype(np.float32) * 0.01 * b
+        v_caches[b] = base_v + rng.standard_normal(base_v.shape).astype(np.float32) * 0.01 * b
+        k_caches[b][:, ctx:] = 0.0
+        v_caches[b][:, ctx:] = 0.0
+        xs[b] = np.asarray(params["emb"])[sample_tokens.answer[b % len(sample_tokens.answer)]]
+        positions[b] = klen + b
+        cur_idx[b] = ctx
+        masks[b, :ctx + 1] = 1.0
+
+    xb, kb, vb, sb = decode_layer_batched(
+        CFG, False, jnp.asarray(xs), jnp.asarray(positions), jnp.asarray(cur_idx),
+        jnp.asarray(k_caches), jnp.asarray(v_caches), jnp.asarray(masks),
+        *layer_params(params, l))
+    xb, kb, vb, sb = map(np.asarray, (xb, kb, vb, sb))
+
+    for b in range(len(ctxs)):
+        x1, k1, v1, s1 = decode_layer(
+            CFG, False, jnp.asarray(xs[b]), jnp.int32(positions[b]),
+            jnp.int32(cur_idx[b]), jnp.asarray(k_caches[b]),
+            jnp.asarray(v_caches[b]), jnp.asarray(masks[b]),
+            *layer_params(params, l))
+        np.testing.assert_allclose(xb[b], np.asarray(x1), atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(kb[b], np.asarray(k1), atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(vb[b], np.asarray(v1), atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(sb[b], np.asarray(s1), atol=2e-4, rtol=2e-4)
+
+    # The padding row (zero x, zero mask) stays exactly zero — a partially
+    # filled batch bucket cannot contaminate anything downstream.
+    assert (xb[2] == 0.0).all()
+    assert (sb[2] == 0.0).all()
 
 
 def test_pruned_equals_masked(params, sample_tokens):

@@ -156,6 +156,12 @@ impl Coordinator {
         self.pool.prefix_stats()
     }
 
+    /// Pool-wide decode-batch accounting: `(quanta, tokens)`; their
+    /// ratio is the mean fused-decode batch occupancy.
+    pub fn decode_batch_stats(&self) -> (u64, u64) {
+        self.pool.decode_batch_stats()
+    }
+
     /// Shared KV block-pool accounting (used/shared/free blocks).
     pub fn block_stats(&self) -> crate::kvcache::BlockPoolStats {
         self.pool.prefix_cache().pool().stats()

@@ -16,8 +16,10 @@
 //! * `POST /v1/cache/flush` — evict every lease-free AV-prefix cache
 //!   entry; returns `{"flushed_entries": N, "freed_bytes": N}`.
 //! * `GET /v1/pool` — per-replica status, the pool conservation ledger,
-//!   prefix-cache stats (`hits`/`misses`/`evictions`/`entries`/`bytes`)
-//!   and shared KV block-pool gauges (`used`/`shared`/`free`).
+//!   prefix-cache stats (`hits`/`misses`/`evictions`/`entries`/`bytes`),
+//!   shared KV block-pool gauges (`used`/`shared`/`free`), and the
+//!   `decode_batch` block (`quanta`/`tokens`/`mean_occupancy` of the
+//!   fused continuous-batching decode path).
 //! * `GET /metrics` — Prometheus text exposition.
 //! * `GET /healthz` — liveness.
 //!
@@ -103,11 +105,14 @@ fn pool_status(coord: &Coordinator) -> Response {
             ("steps_total", Json::num(r.steps_total as f64)),
             ("steps_per_sec", Json::num(r.steps_per_sec as f64)),
             ("completed", Json::num(r.completed as f64)),
+            ("decode_batch_quanta", Json::num(r.decode_batch_quanta as f64)),
+            ("decode_batch_tokens", Json::num(r.decode_batch_tokens as f64)),
         ])
     });
     let s = coord.pool_stats();
     let p = coord.prefix_stats();
     let b = coord.block_stats();
+    let (bq, bt) = coord.decode_batch_stats();
     let out = Json::obj(vec![
         ("replicas", Json::arr(replicas)),
         (
@@ -142,6 +147,17 @@ fn pool_status(coord: &Coordinator) -> Response {
                 ("shared", Json::num(b.shared as f64)),
                 ("free", Json::num(b.free as f64)),
                 ("bytes_used", Json::num(b.bytes_used as f64)),
+            ]),
+        ),
+        (
+            "decode_batch",
+            Json::obj(vec![
+                ("quanta", Json::num(bq as f64)),
+                ("tokens", Json::num(bt as f64)),
+                (
+                    "mean_occupancy",
+                    Json::num(if bq == 0 { 0.0 } else { bt as f64 / bq as f64 }),
+                ),
             ]),
         ),
     ]);

@@ -215,16 +215,35 @@ impl LayerCache {
         (k_out, v_out)
     }
 
-    /// [`Self::padded_kv`] into caller-owned buffers (resized and
-    /// zeroed here) — the decode hot path reuses scratch buffers so the
-    /// per-step gather allocates nothing.
+    /// [`Self::padded_kv`] into caller-owned buffers — the decode hot
+    /// path reuses scratch buffers so the per-step gather allocates
+    /// nothing. The buffers are grown as needed but **never shrunk**
+    /// (high-water sizing): only the first `n_heads * cap * d_head`
+    /// elements are written; callers slice.
     pub fn padded_kv_into(&self, k_out: &mut Vec<f32>, v_out: &mut Vec<f32>) {
+        let elems = self.n_heads * self.cap * self.d_head;
+        if k_out.len() < elems {
+            k_out.resize(elems, 0.0);
+        }
+        if v_out.len() < elems {
+            v_out.resize(elems, 0.0);
+        }
+        self.padded_kv_fill(self.cap, &mut k_out[..elems], &mut v_out[..elems]);
+    }
+
+    /// Materialize the upload layout at an explicit capacity `cap >= len`
+    /// into exactly-sized slices (`[H, cap, dh]` each, zeroed here first).
+    /// This is the shared gather under [`Self::padded_kv_into`] and the
+    /// batched [`Self::padded_kv_batch_into`]: a batch of requests is
+    /// written at one *joint* capacity regardless of each cache's own
+    /// logical `cap`.
+    pub fn padded_kv_fill(&self, cap: usize, k_out: &mut [f32], v_out: &mut [f32]) {
         let (h_n, dh, w) = (self.n_heads, self.d_head, self.row_elems());
-        let elems = h_n * self.cap * dh;
-        k_out.clear();
-        k_out.resize(elems, 0.0);
-        v_out.clear();
-        v_out.resize(elems, 0.0);
+        assert!(cap >= self.len, "fill cap {} below live length {}", cap, self.len);
+        assert_eq!(k_out.len(), h_n * cap * dh);
+        assert_eq!(v_out.len(), h_n * cap * dh);
+        k_out.fill(0.0);
+        v_out.fill(0.0);
         for (bi, &id) in self.blocks.iter().enumerate() {
             let base_tok = bi * BLOCK_TOKENS;
             let rows = BLOCK_TOKENS.min(self.len.saturating_sub(base_tok));
@@ -236,13 +255,52 @@ impl LayerCache {
                     let tok = base_tok + s;
                     for h in 0..h_n {
                         let src = s * w + h * dh;
-                        let dst = h * self.cap * dh + tok * dh;
+                        let dst = h * cap * dh + tok * dh;
                         k_out[dst..dst + dh].copy_from_slice(&k[src..src + dh]);
                         v_out[dst..dst + dh].copy_from_slice(&v[src..src + dh]);
                     }
                 }
             });
         }
+    }
+
+    /// Materialize a whole decode batch in one pass: `caches[b]`'s block
+    /// list lands at row `b` of a `[rows, H, cap, dh]` upload pair, each
+    /// at the joint capacity `cap`; rows beyond `caches.len()` (batch
+    /// padding slots) are zeroed. No per-request slabs are allocated —
+    /// the buffers grow to the high-water mark and are reused. All
+    /// caches must share one (n_heads, d_head) geometry.
+    pub fn padded_kv_batch_into(
+        caches: &[&LayerCache],
+        rows: usize,
+        cap: usize,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) {
+        assert!(caches.len() <= rows, "{} caches > {} batch rows", caches.len(), rows);
+        let Some(first) = caches.first() else {
+            // An empty batch carries no geometry (n_heads/d_head) to size
+            // or zero padding rows with — the zeroing contract above is
+            // only honorable for rows == 0.
+            assert_eq!(rows, 0, "empty batch cannot have padding rows");
+            return;
+        };
+        let per = first.n_heads * cap * first.d_head;
+        let elems = per * rows;
+        if k_out.len() < elems {
+            k_out.resize(elems, 0.0);
+        }
+        if v_out.len() < elems {
+            v_out.resize(elems, 0.0);
+        }
+        for (b, c) in caches.iter().enumerate() {
+            assert_eq!((c.n_heads, c.d_head), (first.n_heads, first.d_head));
+            c.padded_kv_fill(cap, &mut k_out[b * per..(b + 1) * per], &mut v_out[b * per..(b + 1) * per]);
+        }
+        // Padding rows: the buffers are reused across quanta, so stale
+        // rows must be re-zeroed explicitly.
+        k_out[caches.len() * per..elems].fill(0.0);
+        v_out[caches.len() * per..elems].fill(0.0);
     }
 
     /// True when every allocated slot at or beyond `len` is exactly zero —
@@ -552,6 +610,63 @@ mod tests {
         drop(a);
         drop(b);
         assert_eq!(pool.stats().used, 0, "all blocks returned to the pool");
+    }
+
+    #[test]
+    fn padded_kv_into_is_high_water_and_sliced() {
+        let c = filled(2, 3, 8, 5);
+        let mut k = vec![9.0f32; 1000]; // oversized scratch from a prior, bigger bucket
+        let mut v = vec![9.0f32; 1000];
+        c.padded_kv_into(&mut k, &mut v);
+        assert_eq!(k.len(), 1000, "scratch is never shrunk");
+        let elems = 2 * 8 * 3;
+        let (kf, vf) = c.padded_kv();
+        assert_eq!(&k[..elems], &kf[..]);
+        assert_eq!(&v[..elems], &vf[..]);
+        assert_eq!(k[elems], 9.0, "bytes past the slice untouched");
+    }
+
+    #[test]
+    fn padded_kv_fill_at_joint_cap() {
+        // Gathering at a larger joint capacity re-strides rows: head h's
+        // row i lands at h*cap*dh + i*dh for the *joint* cap.
+        let c = filled(2, 3, 8, 5);
+        let cap = 16;
+        let mut k = vec![7.0f32; 2 * cap * 3];
+        let mut v = vec![7.0f32; 2 * cap * 3];
+        c.padded_kv_fill(cap, &mut k, &mut v);
+        for h in 0..2 {
+            for i in 0..5 {
+                assert_eq!(k[h * cap * 3 + i * 3], (100 * h + i) as f32);
+                assert_eq!(v[h * cap * 3 + i * 3], -((100 * h + i) as f32));
+            }
+            for i in 5..cap {
+                assert_eq!(k[h * cap * 3 + i * 3], 0.0, "padding must be zeroed");
+            }
+        }
+    }
+
+    #[test]
+    fn padded_kv_batch_matches_per_request_gathers() {
+        let pool = BlockPool::new();
+        let a = filled_in(&pool, 2, 3, 8, 5);
+        let b = filled_in(&pool, 2, 3, 8, 3);
+        let cap = 8;
+        let rows = 4; // 2 live + 2 padding rows
+        let per = 2 * cap * 3;
+        let mut k = vec![1.0f32; rows * per]; // stale contents everywhere
+        let mut v = vec![1.0f32; rows * per];
+        LayerCache::padded_kv_batch_into(&[&a, &b], rows, cap, &mut k, &mut v);
+        let mut ka = vec![0.0; per];
+        let mut va = vec![0.0; per];
+        a.padded_kv_fill(cap, &mut ka, &mut va);
+        assert_eq!(&k[..per], &ka[..]);
+        assert_eq!(&v[..per], &va[..]);
+        b.padded_kv_fill(cap, &mut ka, &mut va);
+        assert_eq!(&k[per..2 * per], &ka[..]);
+        assert_eq!(&v[per..2 * per], &va[..]);
+        assert!(k[2 * per..].iter().all(|&x| x == 0.0), "padding rows re-zeroed");
+        assert!(v[2 * per..].iter().all(|&x| x == 0.0));
     }
 
     #[test]

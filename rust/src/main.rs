@@ -3,7 +3,7 @@
 //! ```text
 //! fastav serve     --model vl2sim --port 8077 [--no-pruning] [--p 20]
 //!                  [--replicas 4] [--max-inflight 4] [--kv-budget-mb 512]
-//!                  [--prefix-cache-mb 256]
+//!                  [--prefix-cache-mb 256] [--decode-batch 0]
 //! fastav eval      --model vl2sim --dataset avhbench --n 50 [--no-pruning]
 //! fastav calibrate --model vl2sim --n 100
 //! fastav info      --model vl2sim
@@ -25,6 +25,7 @@ const OPTIONS: &[&str] = &[
     "model", "artifacts", "dataset", "n", "port", "p", "no-pruning", "seed",
     "max-gen", "queue-cap", "workers", "calibration", "replicas",
     "max-inflight", "kv-budget-mb", "deadline-ms", "prefix-cache-mb",
+    "decode-batch",
 ];
 
 fn main() {
@@ -168,6 +169,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let kv_budget_mb = args.get_usize("kv-budget-mb", 0).map_err(|e| anyhow!(e))?;
     let prefix_cache_mb = args.get_usize("prefix-cache-mb", 0).map_err(|e| anyhow!(e))?;
     let deadline_ms = args.get_usize("deadline-ms", 0).map_err(|e| anyhow!(e))?;
+    // 0 = fuse up to the artifact set's largest batch bucket; 1 = force
+    // the single-token decode path (A/B comparison).
+    let decode_batch = args.get_usize("decode-batch", 0).map_err(|e| anyhow!(e))?;
     let plan = plan_from_args(args, &root, &model)?;
 
     // Replica pool: each engine lives on its own thread.
@@ -183,6 +187,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             Some(std::time::Duration::from_millis(deadline_ms as u64))
         },
+        max_decode_batch: decode_batch,
     };
     let coord = Arc::new(Coordinator::start_pool(root.clone(), model.clone(), cfg)?);
     let layout = {

@@ -16,6 +16,25 @@ pub fn labeled(base: &str, key: &str, value: &str) -> String {
     format!("{}{{{}=\"{}\"}}", base, key, value)
 }
 
+/// Fixed size-class labels for the decode-batch occupancy distribution
+/// (`fastav_decode_batch_occupancy{size="..."}`): histogram-style gauges
+/// over how many requests each fused decode quantum advanced. Coarse
+/// power-of-two-ish classes keep the family bounded however large the
+/// compiled batch buckets grow.
+pub const OCCUPANCY_BUCKETS: [&str; 6] = ["1", "2", "3-4", "5-8", "9-16", "17+"];
+
+/// Index into [`OCCUPANCY_BUCKETS`] for a decode batch of `b` requests.
+pub fn occupancy_bucket(b: usize) -> usize {
+    match b {
+        0 | 1 => 0,
+        2 => 1,
+        3..=4 => 2,
+        5..=8 => 3,
+        9..=16 => 4,
+        _ => 5,
+    }
+}
+
 /// Monotone counter.
 #[derive(Debug, Default)]
 pub struct Counter {
@@ -274,6 +293,25 @@ mod tests {
         assert!(text.contains("pool_active{replica=\"0\"} 2"));
         assert!(text.contains("pool_active{replica=\"1\"} 5"));
         assert_eq!(text.matches("# TYPE pool_active gauge").count(), 1);
+    }
+
+    #[test]
+    fn occupancy_buckets_cover_all_sizes() {
+        assert_eq!(occupancy_bucket(0), 0);
+        assert_eq!(occupancy_bucket(1), 0);
+        assert_eq!(occupancy_bucket(2), 1);
+        assert_eq!(occupancy_bucket(4), 2);
+        assert_eq!(occupancy_bucket(8), 3);
+        assert_eq!(occupancy_bucket(16), 4);
+        assert_eq!(occupancy_bucket(500), 5);
+        // Every class has a label; classes are monotone in b.
+        let mut last = 0;
+        for b in 0..64 {
+            let c = occupancy_bucket(b);
+            assert!(c < OCCUPANCY_BUCKETS.len());
+            assert!(c >= last);
+            last = c;
+        }
     }
 
     #[test]

@@ -26,6 +26,9 @@ pub struct ModelConfig {
     pub prefill_buckets: Vec<usize>,
     pub seq_buckets: Vec<usize>,
     pub calib_buckets: Vec<usize>,
+    /// Decode batch sizes with `decode_batch<b>_<n>` artifacts (empty for
+    /// artifact sets lowered before batched decode existed).
+    pub batch_buckets: Vec<usize>,
     /// Directory (under the artifact root) holding this model's weights —
     /// alias configs (vl2sim_long) share another model's checkpoint.
     pub weights_dir: String,
@@ -89,6 +92,7 @@ impl ModelConfig {
             prefill_buckets: usize_list(c, "prefill_buckets")?,
             seq_buckets: usize_list(c, "seq_buckets")?,
             calib_buckets: usize_list(c, "calib_buckets")?,
+            batch_buckets: usize_list(c, "batch_buckets").unwrap_or_default(),
             weights_dir: root
                 .get("weights_dir")
                 .as_str()
@@ -136,6 +140,9 @@ mod tests {
         assert_eq!(cfg.d_model, 32);
         assert_eq!(cfg.n_heads * cfg.d_head, cfg.d_model);
         assert_eq!(cfg.seq_buckets, vec![16, 32]);
+        // Older model.json without batch_buckets parses as "no batched
+        // decode artifacts" rather than erroring.
+        assert!(cfg.batch_buckets.is_empty());
         assert!(!cfg.layout.interleaved);
         assert_eq!(cfg.weights_dir, "tiny");
         assert_eq!(cfg.kernel_impl, "pallas");
@@ -153,5 +160,15 @@ mod tests {
     fn missing_field_errors() {
         let bad = r#"{"config": {"name": "x"}}"#;
         assert!(ModelConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn parses_batch_buckets_when_present() {
+        let with = SAMPLE.replace(
+            "\"seq_buckets\": [16, 32],",
+            "\"seq_buckets\": [16, 32], \"batch_buckets\": [2, 4],",
+        );
+        let cfg = ModelConfig::from_json(&Json::parse(&with).unwrap()).unwrap();
+        assert_eq!(cfg.batch_buckets, vec![2, 4]);
     }
 }

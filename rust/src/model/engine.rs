@@ -356,6 +356,13 @@ impl Generation {
         self.tokens.is_empty() && !self.done
     }
 
+    /// Decode-ready: prefill complete (first token emitted) and the
+    /// generation still running — exactly the set a fused
+    /// [`ModelEngine::step_decode_batch`] dispatch can advance together.
+    pub fn is_decoding(&self) -> bool {
+        !self.done && !self.tokens.is_empty()
+    }
+
     pub fn is_done(&self) -> bool {
         self.done
     }
@@ -392,10 +399,16 @@ pub struct ModelEngine {
     /// on the one-shot eval/bench paths, where every request is a miss).
     prefix_cache: Option<Arc<PrefixCache>>,
     /// Reused upload buffers for the per-step paged-cache gather
-    /// (`LayerCache::padded_kv_into`) — the decode hot path allocates
-    /// nothing per quantum.
+    /// (`LayerCache::padded_kv_fill`) — the decode hot path allocates
+    /// nothing per quantum. Sized once to the high-water bucket
+    /// (largest decode bucket) and sliced per call, so alternating
+    /// small/large contexts never reallocate.
     scratch_k: Vec<f32>,
     scratch_v: Vec<f32>,
+    /// Batched-decode upload buffers: `[B, H, cap, dh]` at the joint
+    /// (batch-bucket, seq-bucket) high-water mark, grow-only.
+    scratch_bk: Vec<f32>,
+    scratch_bv: Vec<f32>,
 }
 
 impl ModelEngine {
@@ -409,6 +422,11 @@ impl ModelEngine {
         weights.check(&cfg)?;
         let wlit = WeightLiterals::build(&weights, &cfg)?;
         let rt = Runtime::cpu()?;
+        // High-water scratch: one slab at the largest decode bucket per
+        // K/V; shrinking bucket picks slice it instead of reallocating.
+        let hw = cfg.seq_buckets.iter().copied().max().unwrap_or(0)
+            * cfg.n_heads
+            * cfg.d_head;
         Ok(ModelEngine {
             cfg,
             rt,
@@ -417,8 +435,10 @@ impl ModelEngine {
             wlit,
             front_slabs: HashMap::new(),
             prefix_cache: None,
-            scratch_k: Vec::new(),
-            scratch_v: Vec::new(),
+            scratch_k: vec![0.0; hw],
+            scratch_v: vec![0.0; hw],
+            scratch_bk: Vec::new(),
+            scratch_bv: Vec::new(),
         })
     }
 
@@ -483,8 +503,18 @@ impl ModelEngine {
     /// bucket, back/decode at every bucket, logits) so first-request
     /// latency excludes XLA compilation.
     pub fn warmup(&mut self) -> Result<()> {
+        let mut entries: Vec<String> = ["prefill_front", "back_layer", "decode_layer"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        for &bb in &self.cfg.batch_buckets {
+            let entry = format!("decode_batch{}", bb);
+            if self.art.has_entry(&entry) {
+                entries.push(entry);
+            }
+        }
         let mut paths = Vec::new();
-        for entry in ["prefill_front", "back_layer", "decode_layer"] {
+        for entry in &entries {
             for &b in self.art.buckets(entry) {
                 paths.push(self.art.path(entry, Some(b)));
             }
@@ -1211,11 +1241,17 @@ impl ModelEngine {
         let x_lit = lit_f32(&[d], x)?;
         let pos_lit = lit_i32_scalar(pos)?;
         let idx_lit = lit_i32_scalar(cur_idx as i32)?;
-        // Gather the paged blocks into the reused dense upload buffers
-        // (same O(cap) copy the literal build always paid; no allocs).
-        cache.padded_kv_into(&mut self.scratch_k, &mut self.scratch_v);
-        let kc = lit_f32(&[n_heads, cap, d_head], &self.scratch_k)?;
-        let vc = lit_f32(&[n_heads, cap, d_head], &self.scratch_v)?;
+        // Gather the paged blocks into a slice of the reused high-water
+        // upload buffers (same O(cap) copy the literal build always paid;
+        // no allocs, no shrink/regrow churn across bucket sizes).
+        let elems = n_heads * cap * d_head;
+        if self.scratch_k.len() < elems {
+            self.scratch_k.resize(elems, 0.0);
+            self.scratch_v.resize(elems, 0.0);
+        }
+        cache.padded_kv_fill(cap, &mut self.scratch_k[..elems], &mut self.scratch_v[..elems]);
+        let kc = lit_f32(&[n_heads, cap, d_head], &self.scratch_k[..elems])?;
+        let vc = lit_f32(&[n_heads, cap, d_head], &self.scratch_v[..elems])?;
         let m_lit = lit_f32(&[cap], &mask)?;
         let path = self.art.path("decode_layer", Some(cap));
         let mut inputs: Vec<&xla::Literal> =
@@ -1253,38 +1289,7 @@ impl ModelEngine {
             x = x2;
             gen.caches.layers[l].append(&k_new, &v_new, pos);
             gen.flops.add_decode_layer(&fm, ctx);
-            // Progressive decode-time pruning (extension): drop the
-            // least-important AV rows of this layer's cache using the
-            // step's own importance row.
-            if gen.opts.plan.fine_during_decode
-                && l >= gen.g
-                && gen.opts.plan.fine != FineStrategy::None
-            {
-                let segments_src = &gen.segments_src;
-                let cache = &mut gen.caches.layers[l];
-                let len = cache.len();
-                let segs: Vec<Segment> = cache
-                    .positions()
-                    .iter()
-                    .map(|&p| {
-                        if (p as usize) < k {
-                            segments_src[p as usize]
-                        } else {
-                            Segment::Text // generated tokens are text
-                        }
-                    })
-                    .collect();
-                let keep = fine_keep(
-                    gen.opts.plan.fine,
-                    &s[..len],
-                    &segs,
-                    gen.opts.plan.fine_percent,
-                    gen.opts.plan.seed ^ ((l as u64) << 16) ^ gen.tokens.len() as u64,
-                );
-                if keep.len() < len {
-                    cache.compact(&keep);
-                }
-            }
+            Self::maybe_decode_prune(gen, l, &s);
         }
         gen.caches.update_peak();
         let lg = self.logits(&x)?;
@@ -1295,6 +1300,206 @@ impl ModelEngine {
         gen.update_done();
         gen.decode_seconds += t0.elapsed().as_secs_f64();
         Ok(StepEvent::Token(tok))
+    }
+
+    /// Progressive decode-time pruning (extension): drop the
+    /// least-important AV rows of layer `l`'s cache using this step's own
+    /// importance row `s` (`s[..cache.len()]` are the live scores incl.
+    /// the just-appended token). Shared by the single-token and batched
+    /// decode paths so they stay token-for-token equivalent.
+    fn maybe_decode_prune(gen: &mut Generation, l: usize, s: &[f32]) {
+        if !gen.opts.plan.fine_during_decode
+            || l < gen.g
+            || gen.opts.plan.fine == FineStrategy::None
+        {
+            return;
+        }
+        let k = gen.prompt_len;
+        let segments_src = &gen.segments_src;
+        let cache = &mut gen.caches.layers[l];
+        let len = cache.len();
+        let segs: Vec<Segment> = cache
+            .positions()
+            .iter()
+            .map(|&p| {
+                if (p as usize) < k {
+                    segments_src[p as usize]
+                } else {
+                    Segment::Text // generated tokens are text
+                }
+            })
+            .collect();
+        let keep = fine_keep(
+            gen.opts.plan.fine,
+            &s[..len],
+            &segs,
+            gen.opts.plan.fine_percent,
+            gen.opts.plan.seed ^ ((l as u64) << 16) ^ gen.tokens.len() as u64,
+        );
+        if keep.len() < len {
+            cache.compact(&keep);
+        }
+    }
+
+    /// Smallest configured batch bucket that fits `b` requests *and* has
+    /// a lowered `decode_batch<bb>` artifact; `None` = no batched path.
+    fn batch_entry(&self, b: usize) -> Option<(usize, String)> {
+        self.cfg
+            .batch_buckets
+            .iter()
+            .copied()
+            .filter(|&bb| bb >= b)
+            .map(|bb| (bb, format!("decode_batch{}", bb)))
+            .find(|(_, e)| self.art.has_entry(e))
+    }
+
+    /// Largest decode batch one fused dispatch can advance (1 when the
+    /// artifact set predates batched decode).
+    pub fn max_decode_batch(&self) -> usize {
+        self.cfg
+            .batch_buckets
+            .iter()
+            .copied()
+            .filter(|&bb| self.art.has_entry(&format!("decode_batch{}", bb)))
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Advance every generation in `gens` by one decode step with **one
+    /// `decode_batch` dispatch per layer** instead of one per generation
+    /// per layer — the continuous-batching hot path. Per-request K/V
+    /// stays in its own paged block list; the per-layer gather
+    /// materializes all B lists into one `[B, cap, H·dh]`-shaped upload
+    /// at the joint (batch, seq) bucket, with per-request valid-length
+    /// masks. Row `b` of the artifact computes exactly what the
+    /// single-token path computes for that request (requests never attend
+    /// across the batch — equivalence is asserted in
+    /// `python/tests/test_model.py` and `rust/tests/test_batching.rs`).
+    ///
+    /// Falls back to sequential [`step_generation`](Self::step_generation)
+    /// calls when the batch is degenerate (fewer than 2 requests, a
+    /// request that is not decode-ready, or no covering artifact).
+    ///
+    /// Engine wall time is split evenly across the batch, so per-request
+    /// latency accounting stays comparable with the sequential path.
+    pub fn step_decode_batch(&mut self, gens: &mut [&mut Generation]) -> Result<Vec<StepEvent>> {
+        let degenerate = gens.len() < 2
+            || gens.iter().any(|g| !g.is_decoding())
+            || self.batch_entry(gens.len()).is_none();
+        if degenerate {
+            let mut out = Vec::with_capacity(gens.len());
+            for g in gens.iter_mut() {
+                out.push(self.step_generation(g)?);
+            }
+            return Ok(out);
+        }
+        let t0 = Instant::now();
+        let fm = self.fm();
+        let (d, n_heads, d_head, n_layers) = (
+            self.cfg.d_model,
+            self.cfg.n_heads,
+            self.cfg.d_head,
+            self.cfg.n_layers,
+        );
+        let b = gens.len();
+        let (bb, entry) = self.batch_entry(b).expect("checked above");
+
+        // Current-token embeddings and positions, padded to the batch
+        // bucket (padding rows: zero x, all-zero mask — they stay exactly
+        // zero through every layer; see decode_layer_batched).
+        let mut x_all = vec![0.0f32; bb * d];
+        let mut pos = vec![0i32; bb];
+        for (i, g) in gens.iter().enumerate() {
+            let cur = *g.tokens.last().expect("decode-ready implies a token");
+            x_all[i * d..(i + 1) * d].copy_from_slice(self.weights.embed(cur));
+            pos[i] = (g.prompt_len + g.tokens.len() - 1) as i32;
+        }
+        let pos_lit = lit_i32(&[bb], &pos)?;
+
+        for l in 0..n_layers {
+            // Joint capacity: smallest compiled bucket fitting every
+            // request's post-append context at this layer.
+            let need = gens
+                .iter()
+                .map(|g| g.caches.layers[l].len() + 1)
+                .max()
+                .unwrap_or(1);
+            let cap = self.art.pick_bucket(&entry, need)?;
+            for g in gens.iter_mut() {
+                let c = &mut g.caches.layers[l];
+                if c.len() + 1 > c.cap() {
+                    c.grow(cap); // logical re-target; paged — no copy
+                }
+            }
+            let per = n_heads * cap * d_head;
+            let ctxs: Vec<usize> = gens.iter().map(|g| g.caches.layers[l].len()).collect();
+            {
+                let caches: Vec<&LayerCache> =
+                    gens.iter().map(|g| &g.caches.layers[l]).collect();
+                LayerCache::padded_kv_batch_into(
+                    &caches,
+                    bb,
+                    cap,
+                    &mut self.scratch_bk,
+                    &mut self.scratch_bv,
+                );
+            }
+            let mut mask = vec![0.0f32; bb * cap];
+            let mut cur_idx = vec![0i32; bb];
+            for (i, &ctx) in ctxs.iter().enumerate() {
+                // Live rows + the slot this step's K/V is written into.
+                mask[i * cap..i * cap + ctx + 1].fill(1.0);
+                cur_idx[i] = ctx as i32;
+            }
+            let elems = bb * per;
+            let x_lit = lit_f32(&[bb, d], &x_all)?;
+            let kc = lit_f32(&[bb, n_heads, cap, d_head], &self.scratch_bk[..elems])?;
+            let vc = lit_f32(&[bb, n_heads, cap, d_head], &self.scratch_bv[..elems])?;
+            let m_lit = lit_f32(&[bb, cap], &mask)?;
+            let ci_lit = lit_i32(&[bb], &cur_idx)?;
+            let path = self.art.path(&entry, Some(cap));
+            let mut inputs: Vec<&xla::Literal> =
+                vec![&x_lit, &pos_lit, &ci_lit, &kc, &vc, &m_lit];
+            for p in &self.wlit.per_layer[l] {
+                inputs.push(p);
+            }
+            let outs = self.rt.execute(&path, &inputs)?;
+            let [x2, k_new, v_new, s_lit]: [xla::Literal; 4] = outs
+                .try_into()
+                .map_err(|_| anyhow!("decode_batch returned wrong arity"))?;
+            x_all = to_vec_f32(&x2)?; // [bb, d]
+            let kn = to_vec_f32(&k_new)?; // [bb, H, dh]
+            let vn = to_vec_f32(&v_new)?;
+            let sv = to_vec_f32(&s_lit)?; // [bb, cap]
+            let row = n_heads * d_head;
+            for (i, g) in gens.iter_mut().enumerate() {
+                g.caches.layers[l].append(
+                    &kn[i * row..(i + 1) * row],
+                    &vn[i * row..(i + 1) * row],
+                    pos[i],
+                );
+                g.flops.add_decode_layer(&fm, ctxs[i] + 1);
+                Self::maybe_decode_prune(g, l, &sv[i * cap..(i + 1) * cap]);
+            }
+        }
+
+        // Logits head + sampling per generation (single-vector head).
+        let mut out = Vec::with_capacity(b);
+        for (i, g) in gens.iter_mut().enumerate() {
+            g.caches.update_peak();
+            let lg = self.logits(&x_all[i * d..(i + 1) * d])?;
+            let tok = select_token(&lg, &g.opts.sampling, g.tokens.len());
+            g.flops.add_logits(&fm);
+            g.tokens.push(tok);
+            g.decode_steps += 1;
+            g.update_done();
+            out.push(StepEvent::Token(tok));
+        }
+        let dt = t0.elapsed().as_secs_f64() / b as f64;
+        for g in gens.iter_mut() {
+            g.decode_seconds += dt;
+        }
+        Ok(out)
     }
 
     /// Consume a generation into its result. Callable at any point — a

@@ -27,6 +27,27 @@
 //! a per-replica KV-cache byte budget; cancellation flags and deadlines
 //! are honored between quanta.
 //!
+//! **Quantum model (prefill = 1 chunk, decode = 1 batch):** a scheduling
+//! quantum is either one chunked-prefill layer for a single generation
+//! (keeping the weighted-round-robin no-starvation bound for prefill),
+//! or — when the round-robin cursor lands on a decode-ready generation —
+//! one **fused decode batch**: [`StepScheduler::pick_batch`] drains up
+//! to a batch-bucket's worth of decode-ready generations and the engine
+//! advances them all with one `decode_batch<B>` artifact dispatch per
+//! layer ([`ReplicaEngine::step_batch`]), instead of one single-token
+//! dispatch per request per layer. Post-prune contexts are short, so the
+//! whole batch fits one modest `[B, cap]` upload materialized straight
+//! from the paged block lists (`LayerCache::padded_kv_batch_into`).
+//! Batching is the default whenever ≥ 2 requests are decode-ready and
+//! the artifact set carries batch buckets; ragged leftovers beyond the
+//! largest bucket stay first in line for the next quantum, and engines
+//! without batched artifacts degrade to the single-token path. Per-
+//! quantum batch occupancy is exported as
+//! `fastav_decode_batch_occupancy{size=...}` and in the `decode_batch`
+//! block of `GET /v1/pool`.
+//!
+//! [`StepScheduler::pick_batch`]: step_scheduler::StepScheduler::pick_batch
+//!
 //! **Prefix reuse:** the pool owns one process-wide
 //! [`PrefixCache`] (refcounted AV-prefix K/V blocks over the paged
 //! [`crate::kvcache::BlockPool`]); every engine gets it at startup via
@@ -81,6 +102,11 @@ pub struct PoolConfig {
     pub warmup: bool,
     /// Deadline applied to requests that don't carry their own.
     pub default_deadline: Option<Duration>,
+    /// Cap on the fused decode batch per quantum: `0` = whatever the
+    /// engine's artifacts support ([`ReplicaEngine::max_decode_batch`]),
+    /// `1` = force the single-token path (A/B benchmarking), `n` =
+    /// min(n, engine limit).
+    pub max_decode_batch: usize,
 }
 
 impl Default for PoolConfig {
@@ -93,6 +119,7 @@ impl Default for PoolConfig {
             prefix_cache_bytes: 0,
             warmup: false,
             default_deadline: None,
+            max_decode_batch: 0,
         }
     }
 }
@@ -135,6 +162,10 @@ pub(crate) struct ReplicaShared {
     pub steps_total: AtomicU64,
     pub steps_per_sec: AtomicU64,
     pub completed: AtomicU64,
+    /// Decode quanta served (batched or not) and the requests they
+    /// advanced; their ratio is the mean decode-batch occupancy.
+    pub batch_quanta: AtomicU64,
+    pub batch_tokens: AtomicU64,
 }
 
 /// Point-in-time view of one replica (the `/v1/pool` payload).
@@ -148,6 +179,10 @@ pub struct ReplicaStatus {
     pub steps_total: u64,
     pub steps_per_sec: u64,
     pub completed: u64,
+    /// Decode quanta this replica served and the requests they advanced
+    /// (`decode_batch_tokens / decode_batch_quanta` = mean occupancy).
+    pub decode_batch_quanta: u64,
+    pub decode_batch_tokens: u64,
 }
 
 /// Pool-wide request accounting. At any quiescent point,
@@ -469,8 +504,22 @@ impl ReplicaPool {
                 steps_total: r.shared.steps_total.load(Ordering::Relaxed),
                 steps_per_sec: r.shared.steps_per_sec.load(Ordering::Relaxed),
                 completed: r.shared.completed.load(Ordering::SeqCst),
+                decode_batch_quanta: r.shared.batch_quanta.load(Ordering::Relaxed),
+                decode_batch_tokens: r.shared.batch_tokens.load(Ordering::Relaxed),
             })
             .collect()
+    }
+
+    /// Pool-wide decode-batch accounting: `(quanta, tokens)` summed over
+    /// replicas — `tokens / quanta` is the mean batch occupancy (the
+    /// `decode_batch` block of `GET /v1/pool`).
+    pub fn decode_batch_stats(&self) -> (u64, u64) {
+        self.replicas.iter().fold((0, 0), |(q, t), r| {
+            (
+                q + r.shared.batch_quanta.load(Ordering::Relaxed),
+                t + r.shared.batch_tokens.load(Ordering::Relaxed),
+            )
+        })
     }
 
     /// The process-wide AV-prefix cache backing every replica.
@@ -516,8 +565,17 @@ fn register_metrics(metrics: &Registry) {
         "fastav_prefix_cache_hits_total",
         "fastav_prefix_cache_misses_total",
         "fastav_prefix_cache_evictions_total",
+        "fastav_decode_batched_steps_total",
+        "fastav_decode_batched_tokens_total",
     ] {
         metrics.counter(c);
+    }
+    for sz in crate::metrics::OCCUPANCY_BUCKETS {
+        metrics.counter(&crate::metrics::labeled(
+            "fastav_decode_batch_occupancy",
+            "size",
+            sz,
+        ));
     }
     metrics.gauge("fastav_queue_depth");
     metrics.gauge("fastav_kv_peak_bytes");

@@ -19,7 +19,7 @@ use anyhow::Result;
 
 use crate::coordinator::{Event, GenRequest, SchedulerQueue};
 use crate::kvcache::PrefixCache;
-use crate::metrics::{labeled, Registry};
+use crate::metrics::{labeled, occupancy_bucket, Registry, OCCUPANCY_BUCKETS};
 use crate::model::{GenerateResult, Generation, ModelEngine, RequestInput, StepEvent};
 
 use super::admission::{Admission, Admit, PrefixCharge};
@@ -38,6 +38,30 @@ pub trait ReplicaEngine {
 
     /// Advance one quantum (one prefill layer or one decode step).
     fn step(&mut self, gen: &mut Self::Gen) -> Result<StepEvent>;
+
+    /// Whether `gen` is decode-ready (prefill complete, not done) — the
+    /// eligibility test for fused decode batching. The default `false`
+    /// keeps engines without a batched kernel on the single-step path.
+    fn is_decoding(&self, _gen: &Self::Gen) -> bool {
+        false
+    }
+
+    /// Largest number of decode-ready generations [`Self::step_batch`]
+    /// can advance in one fused dispatch (1 = no batching).
+    fn max_decode_batch(&self) -> usize {
+        1
+    }
+
+    /// Advance several decode-ready generations one token each in a
+    /// single fused dispatch, returning one event per generation in
+    /// order. Default: sequential single steps.
+    fn step_batch(&mut self, gens: &mut [&mut Self::Gen]) -> Result<Vec<StepEvent>> {
+        let mut out = Vec::with_capacity(gens.len());
+        for g in gens.iter_mut() {
+            out.push(self.step(g)?);
+        }
+        Ok(out)
+    }
 
     /// Whether the generation has emitted its final token.
     fn is_done(&self, gen: &Self::Gen) -> bool;
@@ -78,6 +102,18 @@ impl ReplicaEngine for ModelEngine {
 
     fn step(&mut self, gen: &mut Generation) -> Result<StepEvent> {
         self.step_generation(gen)
+    }
+
+    fn is_decoding(&self, gen: &Generation) -> bool {
+        gen.is_decoding()
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        ModelEngine::max_decode_batch(self)
+    }
+
+    fn step_batch(&mut self, gens: &mut [&mut Generation]) -> Result<Vec<StepEvent>> {
+        self.step_decode_batch(gens)
     }
 
     fn is_done(&self, gen: &Generation) -> bool {
@@ -148,6 +184,11 @@ struct ReplicaMetrics {
     tokens_c: Arc<crate::metrics::Counter>,
     prefix_tokens_c: Arc<crate::metrics::Counter>,
     kv_peak: Arc<crate::metrics::Gauge>,
+    /// Decode-batch occupancy distribution, one counter per
+    /// [`OCCUPANCY_BUCKETS`] size class (histogram-style gauges).
+    occ: Vec<Arc<crate::metrics::Counter>>,
+    batched_steps_c: Arc<crate::metrics::Counter>,
+    batched_tokens_c: Arc<crate::metrics::Counter>,
 }
 
 impl ReplicaMetrics {
@@ -169,14 +210,14 @@ impl ReplicaMetrics {
             tokens_c: metrics.counter("fastav_tokens_generated_total"),
             prefix_tokens_c: metrics.counter("fastav_prefix_tokens_reused_total"),
             kv_peak: metrics.gauge("fastav_kv_peak_bytes"),
+            occ: OCCUPANCY_BUCKETS
+                .iter()
+                .map(|sz| metrics.counter(&labeled("fastav_decode_batch_occupancy", "size", sz)))
+                .collect(),
+            batched_steps_c: metrics.counter("fastav_decode_batched_steps_total"),
+            batched_tokens_c: metrics.counter("fastav_decode_batched_tokens_total"),
         }
     }
-}
-
-/// How a generation left the replica.
-enum Outcome {
-    Completed,
-    Terminal(Terminal, String),
 }
 
 /// The replica thread body: admit → step → account, until the queue is
@@ -292,43 +333,101 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
             continue; // back to the blocking pop (or retry the parked job)
         }
 
-        // ---- One scheduling quantum. ----
-        let Some(idx) = sched.pick() else { continue };
+        // ---- Cancellation/deadline sweep over every in-flight entry
+        // (a batched quantum advances many at once, so all must be
+        // checked, not just one pick). ----
         let now = Instant::now();
-        let entry = &mut active[idx];
-        let outcome: Option<Outcome> = if entry.cancel.load(Ordering::SeqCst) {
-            Some(Outcome::Terminal(Terminal::Canceled, "canceled".into()))
-        } else if entry.deadline.is_some_and(|d| now >= d) {
-            Some(Outcome::Terminal(Terminal::Expired, "deadline exceeded".into()))
-        } else {
-            match engine.step(&mut entry.gen) {
-                Ok(StepEvent::Token(t)) => {
-                    let _ = entry.events.send(Event::Token(t));
-                    m.steps_c.inc();
-                    rshared.steps_total.fetch_add(1, Ordering::Relaxed);
-                    rate_steps += 1;
-                    if engine.is_done(&entry.gen) {
-                        Some(Outcome::Completed)
-                    } else {
-                        None
-                    }
+        let mut i = 0;
+        while i < active.len() {
+            let kind = if active[i].cancel.load(Ordering::SeqCst) {
+                Some((Terminal::Canceled, "canceled"))
+            } else if active[i].deadline.is_some_and(|d| now >= d) {
+                Some((Terminal::Expired, "deadline exceeded"))
+            } else {
+                None
+            };
+            match kind {
+                Some((kind, msg)) => {
+                    retire_at(&mut engine, &mut active, &mut sched, i, kind, msg,
+                              &mut admission, rshared, pshared, &m);
                 }
-                Ok(StepEvent::Prefilled { .. }) => {
-                    m.steps_c.inc();
-                    rshared.steps_total.fetch_add(1, Ordering::Relaxed);
-                    rate_steps += 1;
-                    None
-                }
-                Ok(StepEvent::Done) => Some(Outcome::Completed),
-                Err(e) => Some(Outcome::Terminal(Terminal::Failed, format!("{:#}", e))),
+                None => i += 1,
             }
+        }
+        m.active_g.set(active.len() as u64);
+        if active.is_empty() {
+            continue;
+        }
+
+        // ---- One scheduling quantum: a chunked-prefill step for one
+        // entry, or one fused decode batch over the decode-ready set
+        // (quantum model: prefill = 1 chunk, decode = 1 batch). ----
+        let max_b = match cfg.max_decode_batch {
+            0 => engine.max_decode_batch(),
+            n => n.min(engine.max_decode_batch()),
+        };
+        let ready: Vec<bool> = active.iter().map(|a| engine.is_decoding(&a.gen)).collect();
+        let picked = sched.pick_batch(max_b, &ready);
+        if picked.is_empty() {
+            continue;
+        }
+        let decode_quantum = ready[picked[0]];
+
+        let stepped: Result<Vec<StepEvent>> = if picked.len() == 1 {
+            engine.step(&mut active[picked[0]].gen).map(|ev| vec![ev])
+        } else {
+            // Disjoint &mut borrows of the picked generations (ascending
+            // indices) for one fused dispatch.
+            let mut gens: Vec<&mut E::Gen> = Vec::with_capacity(picked.len());
+            let mut want = picked.iter().copied().peekable();
+            for (i, a) in active.iter_mut().enumerate() {
+                if want.peek() == Some(&i) {
+                    want.next();
+                    gens.push(&mut a.gen);
+                }
+            }
+            engine.step_batch(&mut gens)
         };
 
-        if let Some(outcome) = outcome {
-            let a = active.remove(idx);
-            sched.remove(idx);
-            match outcome {
-                Outcome::Completed => {
+        match stepped {
+            Ok(events) => {
+                debug_assert_eq!(events.len(), picked.len());
+                if decode_quantum {
+                    let b = picked.len();
+                    m.occ[occupancy_bucket(b)].inc();
+                    rshared.batch_quanta.fetch_add(1, Ordering::Relaxed);
+                    rshared.batch_tokens.fetch_add(b as u64, Ordering::Relaxed);
+                    if b >= 2 {
+                        m.batched_steps_c.inc();
+                        m.batched_tokens_c.add(b as u64);
+                    }
+                }
+                let mut finished: Vec<usize> = Vec::new();
+                for (&idx, ev) in picked.iter().zip(&events) {
+                    let entry = &mut active[idx];
+                    match ev {
+                        StepEvent::Token(t) => {
+                            let _ = entry.events.send(Event::Token(*t));
+                            m.steps_c.inc();
+                            rshared.steps_total.fetch_add(1, Ordering::Relaxed);
+                            rate_steps += 1;
+                            if engine.is_done(&entry.gen) {
+                                finished.push(idx);
+                            }
+                        }
+                        StepEvent::Prefilled { .. } => {
+                            m.steps_c.inc();
+                            rshared.steps_total.fetch_add(1, Ordering::Relaxed);
+                            rate_steps += 1;
+                        }
+                        StepEvent::Done => finished.push(idx),
+                    }
+                }
+                // Retire completed generations back-to-front so the
+                // remaining indices stay valid.
+                for &idx in finished.iter().rev() {
+                    let a = active.remove(idx);
+                    sched.remove(idx);
                     let res = engine.finish(a.gen);
                     m.gen_hist.observe(a.started.elapsed().as_secs_f64());
                     m.prefill_hist.observe(res.prefill_seconds);
@@ -342,18 +441,22 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                     pshared.completed.fetch_add(1, Ordering::SeqCst);
                     rshared.completed.fetch_add(1, Ordering::SeqCst);
                     let _ = a.events.send(Event::Done(Box::new(res)));
-                }
-                Outcome::Terminal(kind, msg) => {
-                    // Abandon the generation; partial state is dropped.
-                    drop(engine.finish(a.gen));
-                    settle_terminal(kind, &msg, &a.events, rshared, pshared, &m, false);
+                    admission.release_prefixed(a.est_bytes, a.prefix_charge);
+                    pshared.cancels.lock().unwrap().remove(&a.id);
+                    rshared.active.fetch_sub(1, Ordering::SeqCst);
                 }
             }
-            admission.release_prefixed(a.est_bytes, a.prefix_charge);
-            pshared.cancels.lock().unwrap().remove(&a.id);
-            rshared.active.fetch_sub(1, Ordering::SeqCst);
-            m.active_g.set(active.len() as u64);
+            Err(e) => {
+                // The fused dispatch is all-or-nothing: every generation
+                // in it fails with the same engine error.
+                let msg = format!("{:#}", e);
+                for &idx in picked.iter().rev() {
+                    retire_at(&mut engine, &mut active, &mut sched, idx,
+                              Terminal::Failed, &msg, &mut admission, rshared, pshared, &m);
+                }
+            }
         }
+        m.active_g.set(active.len() as u64);
 
         // ---- Gauges: KV footprint + steps/s. ----
         let kv_now: usize = active.iter().map(|a| engine.kv_bytes(&a.gen)).sum();
@@ -373,6 +476,30 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
             rate_t0 = Instant::now();
         }
     }
+}
+
+/// Retire in-flight entry `idx` into a terminal state: drop its partial
+/// generation, settle counters/events, and release its admission charge.
+#[allow(clippy::too_many_arguments)]
+fn retire_at<E: ReplicaEngine>(
+    engine: &mut E,
+    active: &mut Vec<Active<E::Gen>>,
+    sched: &mut StepScheduler,
+    idx: usize,
+    kind: Terminal,
+    msg: &str,
+    admission: &mut Admission,
+    rshared: &ReplicaShared,
+    pshared: &PoolShared,
+    m: &ReplicaMetrics,
+) {
+    let a = active.remove(idx);
+    sched.remove(idx);
+    drop(engine.finish(a.gen));
+    settle_terminal(kind, msg, &a.events, rshared, pshared, m, false);
+    admission.release_prefixed(a.est_bytes, a.prefix_charge);
+    pshared.cancels.lock().unwrap().remove(&a.id);
+    rshared.active.fetch_sub(1, Ordering::SeqCst);
 }
 
 /// Account a job that never entered the step scheduler (canceled,

@@ -126,6 +126,58 @@ impl StepScheduler {
         Some(idx)
     }
 
+    /// Pick the entries to advance this quantum under the batched-decode
+    /// quantum model (prefill = 1 chunk, decode = 1 batch):
+    ///
+    /// * If the round-robin cursor lands on an entry that is **not**
+    ///   decode-ready (`ready[i] == false`, i.e. still prefilling), this
+    ///   degrades to [`Self::pick`] — chunked-prefill fairness and the
+    ///   weighted no-starvation bound are unchanged.
+    /// * If it lands on a decode-ready entry, up to `max_b` decode-ready
+    ///   entries (scanning from the cursor, wrapping) are drained into
+    ///   one batch; every picked entry advances this quantum, so batching
+    ///   strictly dominates the weighted share each would have received.
+    ///   Leftover decoders beyond `max_b` are first in line next quantum
+    ///   (the cursor advances by one, and the scan starts there).
+    ///
+    /// `ready` must be index-aligned with the entries (the replica's
+    /// `active` vector). Returns ascending indices; empty iff no entries.
+    pub fn pick_batch(&mut self, max_b: usize, ready: &[bool]) -> Vec<usize> {
+        assert_eq!(ready.len(), self.entries.len(), "ready mask misaligned");
+        if self.entries.is_empty() {
+            return Vec::new();
+        }
+        if self.cursor >= self.entries.len() {
+            self.cursor = 0;
+            self.credits = 0;
+        }
+        let primary = self.cursor;
+        if max_b < 2 || !ready[primary] {
+            return self.pick().into_iter().collect();
+        }
+        let n = self.entries.len();
+        let mut picked: Vec<usize> = Vec::new();
+        for off in 0..n {
+            let i = (primary + off) % n;
+            if ready[i] {
+                picked.push(i);
+                if picked.len() == max_b {
+                    break;
+                }
+            }
+        }
+        for &i in &picked {
+            self.entries[i].steps += 1;
+            self.total_steps += 1;
+        }
+        // Rotation moves past the primary; its priority weight is moot —
+        // the whole decode-ready set advanced in this quantum.
+        self.credits = 0;
+        self.cursor = (primary + 1) % n;
+        picked.sort_unstable();
+        picked
+    }
+
     /// First entry whose deadline has passed, if any.
     pub fn first_expired(&self, now: Instant) -> Option<usize> {
         self.entries
@@ -220,6 +272,63 @@ mod tests {
         assert_eq!(s.entry(2).affinity, None);
         s.remove(0);
         assert_eq!(s.affinity_count(9), 1);
+    }
+
+    #[test]
+    fn pick_batch_drains_decode_ready_set() {
+        let mut s = StepScheduler::new();
+        for id in 0..4 {
+            s.admit(id, Priority::Normal, None);
+        }
+        // Entries 0, 2, 3 decoding; entry 1 still prefilling.
+        let ready = vec![true, false, true, true];
+        let picked = s.pick_batch(8, &ready);
+        assert_eq!(picked, vec![0, 2, 3]);
+        assert_eq!(s.entry(0).steps, 1);
+        assert_eq!(s.entry(1).steps, 0, "prefilling entry not batched");
+        assert_eq!(s.entry(2).steps, 1);
+        assert_eq!(s.total_steps(), 3);
+        // Cursor advanced to the prefilling entry: next quantum is its
+        // chunked-prefill step, exactly as with single picks.
+        assert_eq!(s.pick_batch(8, &ready), vec![1]);
+        assert_eq!(s.entry(1).steps, 1);
+    }
+
+    #[test]
+    fn pick_batch_respects_max_b_and_rotates_leftovers() {
+        let mut s = StepScheduler::new();
+        for id in 0..5 {
+            s.admit(id, Priority::Normal, None);
+        }
+        let ready = vec![true; 5];
+        let picked = s.pick_batch(4, &ready);
+        assert_eq!(picked.len(), 4);
+        assert_eq!(picked, vec![0, 1, 2, 3]);
+        // Next quantum starts at entry 1: the leftover (4) is included.
+        let picked = s.pick_batch(4, &ready);
+        assert_eq!(picked, vec![1, 2, 3, 4]);
+        assert_eq!(s.max_step_gap(), 1, "leftovers lag by at most one round");
+    }
+
+    #[test]
+    fn pick_batch_of_one_matches_single_pick() {
+        let mut s = StepScheduler::new();
+        s.admit(1, Priority::Normal, None);
+        s.admit(2, Priority::Normal, None);
+        // max_b 1 disables batching even for decode-ready entries.
+        assert_eq!(s.pick_batch(1, &[true, true]), vec![0]);
+        assert_eq!(s.pick_batch(1, &[true, true]), vec![1]);
+        // A lone decode-ready entry forms a batch of one.
+        let mut s = StepScheduler::new();
+        s.admit(3, Priority::Normal, None);
+        assert_eq!(s.pick_batch(8, &[true]), vec![0]);
+        assert_eq!(s.entry(0).steps, 1);
+    }
+
+    #[test]
+    fn pick_batch_empty_scheduler() {
+        let mut s = StepScheduler::new();
+        assert!(s.pick_batch(8, &[]).is_empty());
     }
 
     #[test]

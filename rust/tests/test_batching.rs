@@ -1,0 +1,325 @@
+//! Batched-decode equivalence and coverage properties, run against a
+//! mock engine so no AOT artifacts are needed:
+//!
+//! * **Equivalence:** driving a pool whose engine fuses decode batches
+//!   (`step_batch` over every decode-ready generation) produces
+//!   token-for-token identical per-request streams — and an identical
+//!   conservation ledger — as the same workload on the single-step path
+//!   (`max_decode_batch: 1`). Each mock token is a deterministic
+//!   function of (request seed, step index), so any cross-request mixing
+//!   or lost/duplicated step would change a stream.
+//! * **Engagement:** with ≥ 2 decode-ready requests in flight, the
+//!   batched path is what actually runs (fused quanta observed, batch
+//!   occupancy > 1).
+//! * **Ragged tail:** more decode-ready requests than the engine's batch
+//!   limit fall back to bounded batches + leftovers; nothing exceeds the
+//!   limit and everything still completes with the right stream.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastav::coordinator::{Event, GenRequest, Priority};
+use fastav::metrics::Registry;
+use fastav::model::{GenerateOptions, GenerateResult, PruningPlan, StepEvent};
+use fastav::serving::{PoolConfig, ReplicaEngine, ReplicaPool};
+use fastav::tokens::Segment;
+use fastav::util::proptest::{run_prop, Gen};
+
+// ---------------------------------------------------------------- mock
+
+/// Deterministic token stream: mixing up either the request identity or
+/// the per-request step counter changes the token.
+fn mock_token(seed: u64, step: usize) -> u32 {
+    let x = seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(step as u64)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    (x >> 33) as u32 % 1000
+}
+
+struct BatchGen {
+    seed: u64,
+    prefill_left: usize,
+    produced: usize,
+    total: usize,
+}
+
+/// Counters shared with the test body so engagement is observable.
+#[derive(Default)]
+struct BatchStats {
+    fused_quanta: AtomicU64,
+    fused_tokens: AtomicU64,
+    max_batch_seen: AtomicUsize,
+}
+
+/// Engine with a real fused path: `step_batch` advances every handed
+/// generation with the same per-generation transition as `step`.
+struct BatchMock {
+    max_batch: usize,
+    step_cost: Duration,
+    stats: Arc<BatchStats>,
+}
+
+impl BatchMock {
+    fn advance(&self, gen: &mut BatchGen) -> StepEvent {
+        if gen.prefill_left > 0 {
+            gen.prefill_left -= 1;
+            if gen.prefill_left > 0 {
+                return StepEvent::Prefilled { layer: 0 };
+            }
+            // Prefill completion emits the first token, like the engine.
+        } else if gen.produced >= gen.total {
+            return StepEvent::Done;
+        }
+        let tok = mock_token(gen.seed, gen.produced);
+        gen.produced += 1;
+        StepEvent::Token(tok)
+    }
+}
+
+impl ReplicaEngine for BatchMock {
+    type Gen = BatchGen;
+
+    fn begin(&mut self, req: &GenRequest) -> anyhow::Result<BatchGen> {
+        Ok(BatchGen {
+            seed: req.prompt.iter().fold(0u64, |a, &t| a * 31 + t as u64),
+            prefill_left: 2,
+            produced: 0,
+            total: req.opts.max_gen.max(1),
+        })
+    }
+
+    fn step(&mut self, gen: &mut BatchGen) -> anyhow::Result<StepEvent> {
+        if !self.step_cost.is_zero() {
+            std::thread::sleep(self.step_cost);
+        }
+        Ok(self.advance(gen))
+    }
+
+    fn is_decoding(&self, gen: &BatchGen) -> bool {
+        gen.prefill_left == 0 && gen.produced > 0 && gen.produced < gen.total
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn step_batch(&mut self, gens: &mut [&mut BatchGen]) -> anyhow::Result<Vec<StepEvent>> {
+        assert!(
+            gens.len() <= self.max_batch,
+            "replica handed a batch of {} over the engine limit {}",
+            gens.len(),
+            self.max_batch
+        );
+        for g in gens.iter() {
+            assert!(
+                g.prefill_left == 0 && g.produced < g.total,
+                "non-decode-ready generation in a fused batch"
+            );
+        }
+        // One fused dispatch costs one step, however many rows it has.
+        if !self.step_cost.is_zero() {
+            std::thread::sleep(self.step_cost);
+        }
+        if gens.len() >= 2 {
+            self.stats.fused_quanta.fetch_add(1, Ordering::Relaxed);
+            self.stats.fused_tokens.fetch_add(gens.len() as u64, Ordering::Relaxed);
+            self.stats.max_batch_seen.fetch_max(gens.len(), Ordering::Relaxed);
+        }
+        Ok(gens.iter_mut().map(|g| self.advance(g)).collect())
+    }
+
+    fn is_done(&self, gen: &BatchGen) -> bool {
+        gen.prefill_left == 0 && gen.produced >= gen.total
+    }
+
+    fn finish(&mut self, gen: BatchGen) -> GenerateResult {
+        GenerateResult {
+            tokens: (0..gen.produced).map(|s| mock_token(gen.seed, s)).collect(),
+            prompt_len: 4,
+            flops: Default::default(),
+            relative_flops: 0.0,
+            peak_kv_bytes: 1000,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            decode_steps: gen.produced.saturating_sub(1),
+            live_counts: Vec::new(),
+            prefix_hit: false,
+            prefix_tokens_reused: 0,
+        }
+    }
+
+    fn kv_bytes(&self, _gen: &BatchGen) -> usize {
+        1000
+    }
+
+    fn estimate_bytes(&self, _req: &GenRequest) -> usize {
+        1000
+    }
+}
+
+fn batch_request(seed_tok: u32, max_gen: usize) -> GenRequest {
+    GenRequest {
+        prompt: vec![seed_tok, 2, 3, 4],
+        segments: vec![Segment::Ctrl, Segment::Vis, Segment::Aud, Segment::Text],
+        frame_of: vec![-1, 0, -1, -1],
+        opts: GenerateOptions {
+            plan: PruningPlan::vanilla(),
+            max_gen,
+            ..Default::default()
+        },
+        priority: Priority::Normal,
+        deadline: None,
+    }
+}
+
+struct Run {
+    pool: ReplicaPool,
+    stats: Arc<BatchStats>,
+}
+
+fn batch_pool(cfg: PoolConfig, max_batch: usize, step_cost: Duration) -> Run {
+    let stats = Arc::new(BatchStats::default());
+    let s2 = Arc::clone(&stats);
+    let pool = ReplicaPool::start_with_factory(cfg, Arc::new(Registry::default()), move |_r| {
+        Ok(BatchMock { max_batch, step_cost, stats: Arc::clone(&s2) })
+    })
+    .expect("mock pool starts");
+    Run { pool, stats }
+}
+
+/// Collect every request's full token stream (panics on stream errors).
+fn streams(receivers: Vec<std::sync::mpsc::Receiver<Event>>) -> Vec<Vec<u32>> {
+    receivers
+        .into_iter()
+        .map(|rx| {
+            let mut toks = Vec::new();
+            loop {
+                match rx.recv_timeout(Duration::from_secs(10)) {
+                    Ok(Event::Token(t)) => toks.push(t),
+                    Ok(Event::Done(res)) => {
+                        assert_eq!(res.tokens, toks, "Done result diverges from stream");
+                        return toks;
+                    }
+                    Ok(Event::Error(e)) => panic!("request failed: {}", e),
+                    Err(e) => panic!("stream stalled: {}", e),
+                }
+            }
+        })
+        .collect()
+}
+
+fn settled(pool: &ReplicaPool) -> fastav::serving::PoolStats {
+    let t0 = Instant::now();
+    loop {
+        let s = pool.stats();
+        if (s.conserved() && s.in_flight == 0 && s.in_queue == 0)
+            || t0.elapsed() > Duration::from_secs(10)
+        {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Drive one workload, returning (per-request streams, ledger).
+fn drive(
+    max_decode_batch: usize,
+    engine_max: usize,
+    reqs: &[(u32, usize)],
+    max_inflight: usize,
+) -> (Vec<Vec<u32>>, fastav::serving::PoolStats, Arc<BatchStats>) {
+    let run = batch_pool(
+        PoolConfig {
+            replicas: 1,
+            queue_cap: 64,
+            max_inflight,
+            max_decode_batch,
+            ..Default::default()
+        },
+        engine_max,
+        Duration::from_micros(100),
+    );
+    let receivers: Vec<_> = reqs
+        .iter()
+        .map(|&(seed, max_gen)| run.pool.submit(batch_request(seed, max_gen)).unwrap().1)
+        .collect();
+    let streams = streams(receivers);
+    let stats = settled(&run.pool);
+    (streams, stats, run.stats)
+}
+
+// --------------------------------------------------------------- tests
+
+#[test]
+fn prop_batched_equals_sequential() {
+    run_prop("batched_decode_equivalence", 10, |g: &mut Gen| {
+        let n = g.usize_in(2, 12);
+        let max_inflight = g.usize_in(2, 6);
+        let engine_max = g.usize_in(2, 8);
+        let reqs: Vec<(u32, usize)> = (0..n)
+            .map(|i| (100 + i as u32 * 7, g.usize_in(1, 12)))
+            .collect();
+
+        let (batched, bstats, bshared) = drive(0, engine_max, &reqs, max_inflight);
+        let (sequential, sstats, _) = drive(1, engine_max, &reqs, max_inflight);
+
+        assert_eq!(
+            batched, sequential,
+            "batched and sequential token streams must be identical"
+        );
+        // Identical conservation ledgers, not just both conserved.
+        assert!(bstats.conserved(), "batched ledger: {:?}", bstats);
+        assert!(sstats.conserved(), "sequential ledger: {:?}", sstats);
+        assert_eq!(bstats.submitted, sstats.submitted);
+        assert_eq!(bstats.completed, sstats.completed);
+        assert_eq!(bstats.failed, sstats.failed);
+        assert_eq!(bstats.completed, n as u64);
+        // The engine limit was always respected.
+        assert!(bshared.max_batch_seen.load(Ordering::Relaxed) <= engine_max);
+    });
+}
+
+#[test]
+fn batched_path_is_default_with_two_plus_decoding() {
+    // 6 long generations interleaved on one replica: once ≥ 2 are
+    // decode-ready, quanta must fuse.
+    let reqs: Vec<(u32, usize)> = (0..6).map(|i| (500 + i, 32)).collect();
+    let (streams, stats, shared) = drive(0, 8, &reqs, 6);
+    assert_eq!(stats.completed, 6);
+    for (i, s) in streams.iter().enumerate() {
+        assert_eq!(s.len(), 32, "request {} stream truncated", i);
+    }
+    let quanta = shared.fused_quanta.load(Ordering::Relaxed);
+    let tokens = shared.fused_tokens.load(Ordering::Relaxed);
+    assert!(quanta > 0, "no fused decode quanta despite 6 concurrent decoders");
+    let occupancy = tokens as f64 / quanta as f64;
+    assert!(
+        occupancy > 1.5,
+        "mean fused occupancy {:.2} too low for 6 concurrent decoders",
+        occupancy
+    );
+}
+
+#[test]
+fn ragged_tail_falls_back_to_bounded_batches() {
+    // 5 decoders, engine limit 4: the scheduler may fuse at most 4; the
+    // leftover advances as a single step or a later batch — streams and
+    // ledger must be unaffected.
+    let reqs: Vec<(u32, usize)> = (0..5).map(|i| (900 + i, 16)).collect();
+    let (streams, stats, shared) = drive(0, 4, &reqs, 5);
+    assert_eq!(stats.completed, 5);
+    assert!(shared.max_batch_seen.load(Ordering::Relaxed) <= 4);
+    let (sequential, _, _) = drive(1, 4, &reqs, 5);
+    assert_eq!(streams, sequential);
+}
+
+#[test]
+fn single_decoder_never_fuses() {
+    let reqs = vec![(42u32, 16usize)];
+    let (streams, stats, shared) = drive(0, 8, &reqs, 4);
+    assert_eq!(stats.completed, 1);
+    assert_eq!(streams[0].len(), 16);
+    assert_eq!(shared.fused_quanta.load(Ordering::Relaxed), 0);
+}
