@@ -12,8 +12,24 @@ Per model config this emits into ``artifacts/<model>/``:
   * ``decode_batch<b>_<n>.hlo.txt`` (one per batch bucket × seq bucket —
     the fused continuous-batching decode step)
   * ``logits.hlo.txt``
+  * ``logits_batch_<b>.hlo.txt``   (one per batch bucket — the ``[B, d]``
+    logits head closing a fused decode quantum)
   * ``calib_probe_<n>.hlo.txt``    (one per calib bucket)
-  * ``model.json``                 (config + bucket grid + per-entry ABI)
+  * ``model.json``                 (config + bucket grid + per-entry ABI
+    + the ``mesh`` block documenting the tensor-parallel shard naming)
+
+When ``cfg.tp_degree == D > 1``, the head-sharded mesh set is emitted on
+top (shard ``s`` owns heads ``[s*H/D, (s+1)*H/D)``; ``*_tail`` is the
+host-side combine's single unsharded stage):
+  * ``layer_shard<s>of<D>_<n>.hlo.txt`` + ``layer_tail_<n>.hlo.txt``
+    (prefill-shaped; one per seq∪prefill bucket — the mesh backend runs
+    the front half per layer through these)
+  * ``decode_shard<s>of<D>_<n>.hlo.txt`` + ``decode_tail.hlo.txt``
+  * ``decode_batch<b>_shard<s>of<D>_<n>.hlo.txt`` +
+    ``decode_batch_tail_<b>.hlo.txt``
+  * ``logits_shard<s>of<D>.hlo.txt`` /
+    ``logits_batch_shard<s>of<D>_<b>.hlo.txt`` (vocab partials, summed
+    host-side)
 
 Usage: python -m compile.aot [--out ../artifacts] [--model all]
        [--impl pallas|jnp] [--force]
@@ -23,6 +39,7 @@ import argparse
 import functools
 import json
 import os
+import shutil
 
 import jax
 import jax.numpy as jnp
@@ -61,14 +78,35 @@ def layer_param_specs(cfg, stack=None):
     return out
 
 
-def entry_specs(cfg, entry, n, split=None, batch=None):
+def shard_qkv_specs(cfg, tp):
+    """ln1 + the QKV column slices a head-shard artifact takes.
+
+    Shard ``s`` of ``tp`` owns ``H/tp`` heads — columns
+    ``[s·d/tp, (s+1)·d/tp)`` of wq/wk/wv. Shapes are shard-independent.
+    """
+    d = cfg.d_model
+    dc = d // tp
+    return [spec((d,)), spec((d, dc)), spec((d, dc)), spec((d, dc))]
+
+
+def tail_param_specs(cfg):
+    """The 5 combine-stage params (wo, ln2, wg, wu, wd)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    return [spec((d, d)), spec((d,)), spec((d, ff)), spec((d, ff)),
+            spec((ff, d))]
+
+
+def entry_specs(cfg, entry, n, split=None, batch=None, tp=None):
     """Input ShapeDtypeStructs for an entry point at bucket n (the rust ABI).
 
     ``split`` overrides the front-half depth for ``frontsplit`` artifacts
     (the Fig. 4 pruning-start-layer sweep); ``batch`` is the batch bucket
-    for ``decode_layer_batched`` artifacts.
+    for batched artifacts; ``tp`` is the shard count for ``*_shard``
+    artifacts (defaults to ``cfg.tp_degree``).
     """
     d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    tp = cfg.tp_degree if tp is None else tp
+    hs = h // tp
     if entry in ("prefill_front", "frontsplit"):
         stack = cfg.mid_layer if split is None else split
         return [spec((n, d)), spec((n,)), spec((n,), jnp.int32)] + \
@@ -85,15 +123,43 @@ def entry_specs(cfg, entry, n, split=None, batch=None):
         return [spec((b, d)), spec((b,), jnp.int32), spec((b,), jnp.int32),
                 spec((b, h, n, dh)), spec((b, h, n, dh)), spec((b, n))] + \
             layer_param_specs(cfg)
+    if entry == "layer_shard":
+        return [spec((n, d)), spec((n,)), spec((n,), jnp.int32),
+                spec((), jnp.int32)] + shard_qkv_specs(cfg, tp)
+    if entry == "layer_tail":
+        return [spec((n, d)), spec((n, d)), spec((n,))] + tail_param_specs(cfg)
+    if entry == "decode_shard":
+        return [spec((d,)), spec((), jnp.int32), spec((), jnp.int32),
+                spec((hs, n, dh)), spec((hs, n, dh)), spec((n,))] + \
+            shard_qkv_specs(cfg, tp)
+    if entry == "decode_tail":
+        return [spec((d,)), spec((d,))] + tail_param_specs(cfg)
+    if entry == "decode_shard_batched":
+        b = cfg.batch_buckets[0] if batch is None else batch
+        return [spec((b, d)), spec((b,), jnp.int32), spec((b,), jnp.int32),
+                spec((b, hs, n, dh)), spec((b, hs, n, dh)), spec((b, n))] + \
+            shard_qkv_specs(cfg, tp)
+    if entry == "decode_batch_tail":
+        b = cfg.batch_buckets[0] if batch is None else batch
+        return [spec((b, d)), spec((b, d))] + tail_param_specs(cfg)
     if entry == "logits":
         return [spec((d,)), spec((d,)), spec((cfg.vocab, d))]
+    if entry == "logits_batch":
+        b = cfg.batch_buckets[0] if batch is None else batch
+        return [spec((b, d)), spec((d,)), spec((cfg.vocab, d))]
+    if entry == "logits_shard":
+        return [spec((d,)), spec((d,)), spec((cfg.vocab, d // tp))]
+    if entry == "logits_batch_shard":
+        b = cfg.batch_buckets[0] if batch is None else batch
+        return [spec((b, d)), spec((d,)), spec((cfg.vocab, d // tp))]
     if entry == "calib_probe":
         return [spec((n, d)), spec((n,)), spec((n,), jnp.int32)] + \
             layer_param_specs(cfg, stack=cfg.n_layers)
     raise ValueError(entry)
 
 
-def entry_fn(cfg, entry, use_pallas):
+def entry_fn(cfg, entry, use_pallas, tp=None, shard=None):
+    tp = cfg.tp_degree if tp is None else tp
     if entry in ("prefill_front", "frontsplit"):
         return functools.partial(M.prefill_front, cfg, use_pallas)
     if entry == "back_layer":
@@ -102,28 +168,48 @@ def entry_fn(cfg, entry, use_pallas):
         return functools.partial(M.decode_layer, cfg, use_pallas)
     if entry == "decode_layer_batched":
         return functools.partial(M.decode_layer_batched, cfg, use_pallas)
+    if entry == "layer_shard":
+        return functools.partial(M.layer_shard, cfg, use_pallas)
+    if entry == "layer_tail":
+        return functools.partial(M.layer_tail, cfg)
+    if entry == "decode_shard":
+        return functools.partial(M.decode_shard, cfg, use_pallas)
+    if entry == "decode_tail":
+        return functools.partial(M.decode_tail, cfg)
+    if entry == "decode_shard_batched":
+        return functools.partial(M.decode_shard_batched, cfg, use_pallas)
+    if entry == "decode_batch_tail":
+        return functools.partial(M.decode_tail_batched, cfg)
     if entry == "logits":
         return functools.partial(M.logits_head, cfg)
+    if entry == "logits_batch":
+        return functools.partial(M.logits_head_batched, cfg)
+    if entry == "logits_shard":
+        return functools.partial(M.logits_shard, cfg, tp, shard)
+    if entry == "logits_batch_shard":
+        return functools.partial(M.logits_shard_batched, cfg, tp, shard)
     if entry == "calib_probe":
         return functools.partial(M.calib_probe, cfg)
     raise ValueError(entry)
 
 
-def lower_entry(cfg, entry, n, use_pallas, out_path, force, split=None, batch=None):
+def lower_entry(cfg, entry, n, use_pallas, out_path, force, split=None,
+                batch=None, tp=None, shard=None):
     if os.path.exists(out_path) and not force:
         return False
-    specs = entry_specs(cfg, entry, n, split=split, batch=batch)
-    lowered = jax.jit(entry_fn(cfg, entry, use_pallas)).lower(*specs)
+    specs = entry_specs(cfg, entry, n, split=split, batch=batch, tp=tp)
+    fn = entry_fn(cfg, entry, use_pallas, tp=tp, shard=shard)
+    lowered = jax.jit(fn).lower(*specs)
     text = to_hlo_text(lowered)
     with open(out_path, "w") as f:
         f.write(text)
     return True
 
 
-def abi_of(cfg, entry, n, batch=None):
+def abi_of(cfg, entry, n, batch=None, tp=None):
     return [
         {"shape": list(s.shape), "dtype": str(s.dtype)}
-        for s in entry_specs(cfg, entry, n, batch=batch)
+        for s in entry_specs(cfg, entry, n, batch=batch, tp=tp)
     ]
 
 
@@ -132,17 +218,23 @@ def build_model(cfg, out_root, use_pallas, force):
     os.makedirs(out_dir, exist_ok=True)
     built = 0
 
-    # (entry, bucket, split, batch, filename-stem)
-    plan = [("prefill_front", n, None, None, f"prefill_front_{n}") for n in cfg.prefill_buckets]
-    plan += [("back_layer", n, None, None, f"back_layer_{n}") for n in cfg.seq_buckets]
-    plan += [("decode_layer", n, None, None, f"decode_layer_{n}") for n in cfg.seq_buckets]
+    # (entry, bucket, split, batch, shard, filename-stem)
+    plan = [("prefill_front", n, None, None, None, f"prefill_front_{n}")
+            for n in cfg.prefill_buckets]
+    plan += [("back_layer", n, None, None, None, f"back_layer_{n}") for n in cfg.seq_buckets]
+    plan += [("decode_layer", n, None, None, None, f"decode_layer_{n}") for n in cfg.seq_buckets]
     # Batched decode: one artifact per (batch bucket × seq bucket); the
     # rust engine picks the smallest (B, cap) pair covering a quantum's
     # decode-ready set and falls back to decode_layer when none fits.
-    plan += [("decode_layer_batched", n, None, b, f"decode_batch{b}_{n}")
+    plan += [("decode_layer_batched", n, None, b, None, f"decode_batch{b}_{n}")
              for b in cfg.batch_buckets for n in cfg.seq_buckets]
-    plan += [("logits", 0, None, None, "logits")]
-    plan += [("calib_probe", n, None, None, f"calib_probe_{n}") for n in cfg.calib_buckets]
+    plan += [("logits", 0, None, None, None, "logits")]
+    # Batched logits head: one dispatch closes a whole fused decode
+    # quantum (replaces B single-vector logits dispatches).
+    plan += [("logits_batch", 0, None, b, None, f"logits_batch_{b}")
+             for b in cfg.batch_buckets]
+    plan += [("calib_probe", n, None, None, None, f"calib_probe_{n}")
+             for n in cfg.calib_buckets]
     if cfg.emit_splits:
         # Front halves split at every layer boundary m (Fig. 4 sweep); the
         # m == mid split is identical to prefill_front and skipped.
@@ -150,29 +242,111 @@ def build_model(cfg, out_root, use_pallas, force):
             if m == cfg.mid_layer:
                 continue
             for n in cfg.prefill_buckets:
-                plan.append(("frontsplit", n, m, None, f"frontsplit{m}_{n}"))
+                plan.append(("frontsplit", n, m, None, None, f"frontsplit{m}_{n}"))
+    if cfg.tp_degree > 1:
+        # Head-sharded mesh set (see module docstring). layer_shard serves
+        # both front layers (per-layer prefill on the mesh path) and back
+        # layers, so it is lowered at the union of the bucket grids.
+        # Only the logits shards depend on the shard index (the hidden
+        # slice is baked in); layer/decode shard bodies are identical
+        # across shards — shard 0 is lowered and shards 1.. are file
+        # copies below, keeping jit work O(1) in D for those entries.
+        tp = cfg.tp_degree
+        layer_buckets = sorted(set(cfg.seq_buckets) | set(cfg.prefill_buckets))
+        plan += [("layer_shard", n, None, None, 0, f"layer_shard0of{tp}_{n}")
+                 for n in layer_buckets]
+        plan += [("decode_shard", n, None, None, 0, f"decode_shard0of{tp}_{n}")
+                 for n in cfg.seq_buckets]
+        plan += [("decode_shard_batched", n, None, b, 0,
+                  f"decode_batch{b}_shard0of{tp}_{n}")
+                 for b in cfg.batch_buckets for n in cfg.seq_buckets]
+        for s in range(tp):
+            plan += [("logits_shard", 0, None, None, s, f"logits_shard{s}of{tp}")]
+            plan += [("logits_batch_shard", 0, None, b, s,
+                      f"logits_batch_shard{s}of{tp}_{b}")
+                     for b in cfg.batch_buckets]
+        plan += [("layer_tail", n, None, None, None, f"layer_tail_{n}")
+                 for n in layer_buckets]
+        plan += [("decode_tail", 0, None, None, None, "decode_tail")]
+        plan += [("decode_batch_tail", 0, None, b, None, f"decode_batch_tail_{b}")
+                 for b in cfg.batch_buckets]
 
-    for entry, n, split, batch, stem in plan:
+    for entry, n, split, batch, shard, stem in plan:
         path = os.path.join(out_dir, f"{stem}.hlo.txt")
-        if lower_entry(cfg, entry, n, use_pallas, path, force, split=split, batch=batch):
+        if lower_entry(cfg, entry, n, use_pallas, path, force, split=split,
+                       batch=batch, shard=shard):
             built += 1
             print(f"  lowered {cfg.name}/{stem}", flush=True)
+
+    if cfg.tp_degree > 1:
+        # Fan shard 0's shard-independent artifacts out to shards 1..
+        # (the head range lives in the weight slices fed at execution
+        # time, not in the lowered HLO — the rust mesh compiles each
+        # file on its own device regardless).
+        tp = cfg.tp_degree
+        stems0 = [f"layer_shard0of{tp}_{n}" for n in layer_buckets]
+        stems0 += [f"decode_shard0of{tp}_{n}" for n in cfg.seq_buckets]
+        stems0 += [f"decode_batch{b}_shard0of{tp}_{n}"
+                   for b in cfg.batch_buckets for n in cfg.seq_buckets]
+        for stem0 in stems0:
+            src = os.path.join(out_dir, f"{stem0}.hlo.txt")
+            if not os.path.exists(src):
+                continue
+            for s in range(1, tp):
+                stem_s = stem0.replace("shard0of", f"shard{s}of")
+                dst = os.path.join(out_dir, f"{stem_s}.hlo.txt")
+                if force or not os.path.exists(dst):
+                    shutil.copyfile(src, dst)
+                    built += 1
+                    print(f"  copied  {cfg.name}/{stem_s}", flush=True)
+
+    abi = {
+        "prefill_front": abi_of(cfg, "prefill_front", cfg.prefill_buckets[0]),
+        "back_layer": abi_of(cfg, "back_layer", cfg.seq_buckets[0]),
+        "decode_layer": abi_of(cfg, "decode_layer", cfg.seq_buckets[0]),
+        "decode_layer_batched": abi_of(
+            cfg, "decode_layer_batched", cfg.seq_buckets[0],
+            batch=cfg.batch_buckets[0],
+        ) if cfg.batch_buckets else [],
+        "logits": abi_of(cfg, "logits", 0),
+        "logits_batch": abi_of(
+            cfg, "logits_batch", 0, batch=cfg.batch_buckets[0],
+        ) if cfg.batch_buckets else [],
+        "calib_probe": abi_of(cfg, "calib_probe", cfg.calib_buckets[0]),
+    }
+    if cfg.tp_degree > 1:
+        abi["layer_shard"] = abi_of(cfg, "layer_shard", cfg.seq_buckets[0])
+        abi["layer_tail"] = abi_of(cfg, "layer_tail", cfg.seq_buckets[0])
+        abi["decode_shard"] = abi_of(cfg, "decode_shard", cfg.seq_buckets[0])
+        abi["decode_tail"] = abi_of(cfg, "decode_tail", 0)
+        abi["logits_shard"] = abi_of(cfg, "logits_shard", 0)
+        if cfg.batch_buckets:
+            abi["decode_shard_batched"] = abi_of(
+                cfg, "decode_shard_batched", cfg.seq_buckets[0],
+                batch=cfg.batch_buckets[0])
+            abi["decode_batch_tail"] = abi_of(
+                cfg, "decode_batch_tail", 0, batch=cfg.batch_buckets[0])
+            abi["logits_batch_shard"] = abi_of(
+                cfg, "logits_batch_shard", 0, batch=cfg.batch_buckets[0])
 
     meta = {
         "config": cfg.to_json_dict(),
         "impl": "pallas" if use_pallas else "jnp",
         "weights_dir": WEIGHT_ALIASES.get(cfg.name, cfg.name),
-        "abi": {
-            "prefill_front": abi_of(cfg, "prefill_front", cfg.prefill_buckets[0]),
-            "back_layer": abi_of(cfg, "back_layer", cfg.seq_buckets[0]),
-            "decode_layer": abi_of(cfg, "decode_layer", cfg.seq_buckets[0]),
-            "decode_layer_batched": abi_of(
-                cfg, "decode_layer_batched", cfg.seq_buckets[0],
-                batch=cfg.batch_buckets[0],
-            ) if cfg.batch_buckets else [],
-            "logits": abi_of(cfg, "logits", 0),
-            "calib_probe": abi_of(cfg, "calib_probe", cfg.calib_buckets[0]),
+        # The device-mesh ABI contract the rust backend executes against.
+        "mesh": {
+            "tp_degree": cfg.tp_degree,
+            "shard_axis": "attention heads (H/D per device; logits shard "
+                          "d_model columns of the tied unembedding)",
+            "naming": "layer_shard<s>of<D>_<n> / decode_shard<s>of<D>_<n> / "
+                      "decode_batch<b>_shard<s>of<D>_<n> / logits_shard<s>of<D> / "
+                      "logits_batch_shard<s>of<D>_<b>; combine stages "
+                      "layer_tail_<n> / decode_tail / decode_batch_tail_<b>. "
+                      "Shard s owns heads [s*H/D, (s+1)*H/D); the host "
+                      "concatenates attention outputs in head order, sums "
+                      "logits partials, and sums importance partials.",
         },
+        "abi": abi,
     }
     with open(os.path.join(out_dir, "model.json"), "w") as f:
         json.dump(meta, f, indent=1)

@@ -45,6 +45,14 @@ class ModelCfg:
     # max(batch_buckets) in-flight single-token decode steps into one
     # dispatch (continuous batched decode). Empty = no batched artifacts.
     batch_buckets: tuple = (2, 4, 8)
+    # Tensor-parallel degree: when > 1, additionally emit head-sharded
+    # artifacts (`layer_shard<s>of<D>_<n>`, `decode_shard<s>of<D>_<n>`,
+    # `logits_shard<s>of<D>`, batched variants, and the `*_tail` combine
+    # stages) so the rust device-mesh backend can split one replica's
+    # model across D devices, each owning n_heads/D attention heads. The
+    # fused single-device artifacts are always emitted too — tp_degree=1
+    # execution never touches the sharded set.
+    tp_degree: int = 1
     # Emit per-split front artifacts (frontsplit<m>_<n>.hlo.txt) for the
     # pruning-start-layer sweep (paper Fig. 4).
     emit_splits: bool = False
@@ -57,6 +65,11 @@ class ModelCfg:
     def __post_init__(self):
         assert self.d_model == self.n_heads * self.d_head
         assert 0 < self.mid_layer < self.n_layers
+        assert self.tp_degree >= 1
+        if self.tp_degree > 1:
+            # Heads are the shard axis; the logits head shards d_model.
+            assert self.n_heads % self.tp_degree == 0
+            assert self.d_model % self.tp_degree == 0
 
     def to_json_dict(self):
         d = asdict(self)
@@ -68,7 +81,7 @@ class ModelCfg:
         return d
 
 
-VL2SIM = ModelCfg(name="vl2sim", layout=VL2SIM_LAYOUT, emit_splits=True)
+VL2SIM = ModelCfg(name="vl2sim", layout=VL2SIM_LAYOUT, emit_splits=True, tp_degree=2)
 
 SALMSIM = ModelCfg(name="salmsim", layout=SALMSIM_LAYOUT)
 
@@ -96,6 +109,7 @@ TINY = ModelCfg(
     seq_buckets=(16, 32),
     calib_buckets=(32,),
     batch_buckets=(2, 4),
+    tp_degree=2,
     emit_splits=True,
     train_steps=150,
     train_batch=8,

@@ -11,8 +11,23 @@ the rust↔artifact ABI, documented per function):
   * :func:`decode_layer_batched` — B independent single-token decode steps
     over per-request KV caches in one dispatch (continuous-batching decode).
   * :func:`logits_head`    — final RMSNorm + tied unembedding.
+  * :func:`logits_head_batched` — the ``[B, d]`` logits head (one dispatch
+    replaces B single-vector logits dispatches in a decode quantum).
   * :func:`calib_probe`    — all-layer rollout + raw-attention stacks
     (offline calibration; Figs. 1–2).
+
+Tensor-parallel (head-sharded) entry points, lowered when
+``cfg.tp_degree > 1`` so the rust device-mesh backend can split one
+layer across D devices (shard ``s`` owns heads ``[s·H/D, (s+1)·H/D)``;
+the host concatenates attention outputs / sums logits partials):
+
+  * :func:`layer_shard` / :func:`layer_tail` — prefill-shaped layer split
+    at the attention/combine boundary (front layers and back layers).
+  * :func:`decode_shard` / :func:`decode_tail` — the single-token split.
+  * :func:`decode_shard_batched` / :func:`decode_tail_batched` — the
+    fused-batch split.
+  * :func:`logits_shard` / :func:`logits_shard_batched` — vocab logits as
+    per-device partial sums over a ``d_model/D`` column slice.
 
 Also hosts the batched training forward (:func:`train_forward`) — pure jnp
 (numerically identical to the kernels; see test_kernels.py) so build-time
@@ -289,6 +304,191 @@ def logits_head(cfg, x, ln_f, emb):
          output logits ``[vocab]``.
     """
     return rms_norm(x, ln_f) @ emb.T
+
+
+# Batched logits head: row ``b`` equals ``logits_head(x[b])`` — the
+# computation is shape-polymorphic (rms_norm and the matmul broadcast
+# over a leading batch axis), so the batched entry *is* the single-vector
+# head lowered at ``[B, d]``. One dispatch replaces the B per-request
+# logits dispatches at the end of a fused decode quantum; a batch-padding
+# row (``x[b] == 0``) yields an all-zero logits row, which the host
+# ignores. ABI: x ``[B, d]``, ln_f ``[d]``, emb ``[vocab, d]`` →
+# logits ``[B, vocab]``.
+logits_head_batched = logits_head
+
+
+# ------------------------------------------------- head-sharded (mesh) entries
+
+
+def _shard_heads(w_shard, d_head):
+    """Head count owned by a shard, inferred from its QKV column slice."""
+    return w_shard.shape[1] // d_head
+
+
+def _partial_scale(heads_s, n_heads_total):
+    """Rescale a shard-local head *mean* into an all-reduce *partial*.
+
+    The per-head softmax is shard-local, so the full-model head mean
+    decomposes into per-shard sums divided by the total head count:
+    ``mean_shard · (Hs / H)``. Summing the partials across shards
+    reproduces the unsharded row (exactly for the shipped power-of-two
+    shard degrees). Reusing the reference kernels + this one scale keeps
+    the numerically sensitive softmax guards in exactly one place
+    (``kernels/ref.py``).
+    """
+    return jnp.float32(heads_s) / jnp.float32(n_heads_total)
+
+
+def layer_shard(cfg, use_pallas, h, mask, positions, last_idx,
+                ln1, wq_s, wk_s, wv_s):
+    """Per-head-shard half of a prefill-shaped layer (front or back).
+
+    Computes Q/K/V and causal attention for this shard's heads only; the
+    residual/MLP half (:func:`layer_tail`) runs once on the concatenated
+    attention outputs. The importance output is a *partial sum* over this
+    shard's heads — the host reduces partials across shards.
+
+    The attention itself is pure jnp on both kernel impls (the Pallas
+    grids assume full-head tensors; numerics agree within the tested
+    kernel tolerance, mirroring :func:`decode_layer_batched`).
+
+    ABI:
+      inputs:  h ``[n, d]``; mask ``[n]``; positions ``[n]`` int32;
+               last_idx ``[]`` int32; ln1 ``[d]``;
+               wq_s/wk_s/wv_s ``[d, (H/D)·dh]`` column slices.
+      outputs: (attn ``[n, (H/D)·dh]``, k ``[H/D, n, dh]``,
+                v ``[H/D, n, dh]``, s_partial ``[n]``).
+    """
+    del use_pallas  # see docstring: jnp attention on both paths
+    heads_s = _shard_heads(wq_s, cfg.d_head)
+    x = rms_norm(h, ln1)
+    angles = rope_angles(positions, cfg.d_head, cfg.rope_theta)
+    q, k, v = qkv_project(x, wq_s, wk_s, wv_s, heads_s, cfg.d_head, angles)
+    attn = ref.ref_attention(q, k, v, mask, causal=True)  # [H/D, n, dh]
+    attn = jnp.transpose(attn, (1, 0, 2)).reshape(h.shape[0], heads_s * cfg.d_head)
+    q_last = jax.lax.dynamic_index_in_dim(q, last_idx, axis=1, keepdims=False)
+    s = ref.ref_importance(q_last, k, mask) * _partial_scale(heads_s, cfg.n_heads)
+    return attn, k, v, s
+
+
+def layer_tail(cfg, h, attn, mask, wo, ln2, wg, wu, wd):
+    """Combine stage of a sharded prefill-shaped layer.
+
+    ``attn`` is the head-order concatenation of the shards'
+    :func:`layer_shard` outputs (``[n, d]``); this reproduces the
+    ``wo``-projection + MLP half of :func:`layer_fwd` exactly.
+
+    ABI: inputs h ``[n, d]``; attn ``[n, d]``; mask ``[n]``; wo ``[d, d]``;
+         ln2 ``[d]``; wg/wu ``[d, ff]``; wd ``[ff, d]``. Output h' ``[n, d]``.
+    """
+    h = h + (attn * mask[:, None]) @ wo
+    x2 = rms_norm(h, ln2)
+    return h + swiglu(x2, wg, wu, wd) * mask[:, None]
+
+
+def decode_shard(cfg, use_pallas, x, pos, cur_idx, k_cache, v_cache, mask,
+                 ln1, wq_s, wk_s, wv_s):
+    """Per-head-shard half of a single-token decode step.
+
+    The shard's cache carries only its own heads (``[H/D, n, dh]``) — the
+    rust side keeps one paged block list per shard per layer, so nothing
+    is re-laid-out when sharding.
+
+    ABI:
+      inputs:  x ``[d]``; pos ``[]`` int32; cur_idx ``[]`` int32;
+               k_cache/v_cache ``[H/D, n, dh]``; mask ``[n]``; ln1 ``[d]``;
+               wq_s/wk_s/wv_s ``[d, (H/D)·dh]``.
+      outputs: (attn ``[(H/D)·dh]``, k_new ``[H/D, dh]``,
+                v_new ``[H/D, dh]``, s_partial ``[n]``).
+    """
+    del use_pallas
+    heads_s = _shard_heads(wq_s, cfg.d_head)
+    xi = rms_norm(x, ln1)[None, :]
+    angles = rope_angles(jnp.reshape(pos, (1,)), cfg.d_head, cfg.rope_theta)
+    q, k, v = qkv_project(xi, wq_s, wk_s, wv_s, heads_s, cfg.d_head, angles)
+    k_new = k[:, 0, :]
+    v_new = v[:, 0, :]
+    k_full = jax.lax.dynamic_update_index_in_dim(k_cache, k_new, cur_idx, axis=1)
+    v_full = jax.lax.dynamic_update_index_in_dim(v_cache, v_new, cur_idx, axis=1)
+    q1 = q[:, 0, :]
+    out, s = ref.ref_decode_attention(q1, k_full, v_full, mask)
+    s = s * _partial_scale(heads_s, cfg.n_heads)
+    return out.reshape(heads_s * cfg.d_head), k_new, v_new, s
+
+
+def decode_tail(cfg, x, attn, wo, ln2, wg, wu, wd):
+    """Combine stage of a sharded decode step (wo-projection + MLP).
+
+    ABI: inputs x ``[d]``; attn ``[d]`` (head-order concat of shard
+         outputs); 5 tail params. Output x' ``[d]``.
+    """
+    x = x + attn @ wo
+    x2 = rms_norm(x, ln2)
+    return x + swiglu(x2, wg, wu, wd)
+
+
+def decode_shard_batched(cfg, use_pallas, x, pos, cur_idx, k_cache, v_cache,
+                         mask, ln1, wq_s, wk_s, wv_s):
+    """Per-head-shard half of a fused decode batch.
+
+    Row ``b`` computes exactly what :func:`decode_shard` computes for that
+    request; padding rows (zero x, zero mask) stay exactly zero.
+
+    ABI:
+      inputs:  x ``[B, d]``; pos/cur_idx ``[B]`` int32;
+               k_cache/v_cache ``[B, H/D, n, dh]``; mask ``[B, n]``;
+               ln1 ``[d]``; wq_s/wk_s/wv_s ``[d, (H/D)·dh]``.
+      outputs: (attn ``[B, (H/D)·dh]``, k_new ``[B, H/D, dh]``,
+                v_new ``[B, H/D, dh]``, s_partial ``[B, n]``).
+    """
+    del use_pallas
+    heads_s = _shard_heads(wq_s, cfg.d_head)
+    xi = rms_norm(x, ln1)  # [B, d]
+    angles = rope_angles(pos, cfg.d_head, cfg.rope_theta)  # [B, dh/2]
+    q, k, v = qkv_project(xi, wq_s, wk_s, wv_s, heads_s, cfg.d_head, angles)
+    k_new = jnp.transpose(k, (1, 0, 2))  # [B, H/D, dh]
+    v_new = jnp.transpose(v, (1, 0, 2))
+    q_b = jnp.transpose(q, (1, 0, 2))
+
+    def scatter(cache, row, idx):
+        return jax.lax.dynamic_update_index_in_dim(cache, row, idx, axis=1)
+
+    k_full = jax.vmap(scatter)(k_cache, k_new, cur_idx)
+    v_full = jax.vmap(scatter)(v_cache, v_new, cur_idx)
+    out, s = batched_decode_attention(q_b, k_full, v_full, mask)
+    s = s * _partial_scale(heads_s, cfg.n_heads)
+    return out.reshape(x.shape[0], heads_s * cfg.d_head), k_new, v_new, s
+
+
+# Combine stage of a sharded fused decode batch: the single-token tail is
+# shape-polymorphic (every op broadcasts over a leading batch axis), so
+# the batched entry *is* :func:`decode_tail` lowered at ``[B, d]``.
+# ABI: x ``[B, d]``; attn ``[B, d]``; 5 tail params → x' ``[B, d]``.
+decode_tail_batched = decode_tail
+
+
+def logits_shard(cfg, tp, shard, x, ln_f, emb_s):
+    """Per-device partial of the logits head.
+
+    The tied unembedding contracts over ``d_model``; shard ``s`` owns
+    columns ``[s·d/D, (s+1)·d/D)`` of ``emb`` and the matching slice of
+    the normalized hidden vector, so summing the D partials reproduces
+    :func:`logits_head` (all-reduce on the host). ``rms_norm`` needs the
+    *full* ``x`` and is recomputed per shard (it is O(d)).
+
+    ABI: inputs x ``[d]``, ln_f ``[d]``, emb_s ``[vocab, d/D]``;
+         output partial logits ``[vocab]``.
+    """
+    dc = cfg.d_model // tp
+    xn = rms_norm(x, ln_f)
+    return xn[shard * dc:(shard + 1) * dc] @ emb_s.T
+
+
+def logits_shard_batched(cfg, tp, shard, x, ln_f, emb_s):
+    """Batched :func:`logits_shard`: x ``[B, d]`` → partial ``[B, vocab]``."""
+    dc = cfg.d_model // tp
+    xn = rms_norm(x, ln_f)
+    return xn[:, shard * dc:(shard + 1) * dc] @ emb_s.T
 
 
 def calib_probe(cfg, x_emb, mask, positions, *stacked):

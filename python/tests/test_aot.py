@@ -2,6 +2,7 @@
 expected entry computation, and the weights export round-trips.
 """
 
+import dataclasses
 import json
 import os
 
@@ -13,6 +14,15 @@ from compile import aot
 from compile.config import TINY
 from compile.export import flatten_params, load_weights, save_weights
 from compile.model import init_params
+
+# The CI job matrix lowers with FASTAV_TEST_TP in {1, 2}; locally both
+# degrees are also covered explicitly by the parametrized tests below.
+MATRIX_TP = int(os.environ.get("FASTAV_TEST_TP", "2"))
+
+
+def tiny_tp(tp):
+    """TINY at an explicit tensor-parallel degree."""
+    return dataclasses.replace(TINY, tp_degree=tp)
 
 
 def test_entry_specs_shapes():
@@ -80,6 +90,164 @@ def test_abi_json_serializable():
     parsed = json.loads(txt)
     assert parsed[0]["shape"] == [TINY.d_model]
     assert parsed[1]["dtype"] == "int32"
+
+
+def test_entry_specs_sharded_shapes():
+    """Mesh ABI shapes: shard inputs carry H/D heads and d/D QKV columns;
+    tails take the concatenated [n, d] attention plus the 5 tail params."""
+    cfg = tiny_tp(2)
+    hs = cfg.n_heads // 2
+    n = 16
+    specs = aot.entry_specs(cfg, "layer_shard", n)
+    assert specs[0].shape == (n, cfg.d_model)
+    assert specs[3].shape == () and str(specs[3].dtype) == "int32"
+    assert specs[4].shape == (cfg.d_model,)  # ln1
+    assert specs[5].shape == (cfg.d_model, cfg.d_model // 2)  # wq slice
+    assert len(specs) == 4 + 4
+
+    specs = aot.entry_specs(cfg, "layer_tail", n)
+    assert specs[0].shape == (n, cfg.d_model)
+    assert specs[1].shape == (n, cfg.d_model)
+    assert specs[3].shape == (cfg.d_model, cfg.d_model)  # wo
+    assert len(specs) == 3 + 5
+
+    specs = aot.entry_specs(cfg, "decode_shard", n)
+    assert specs[3].shape == (hs, n, cfg.d_head)
+    assert specs[4].shape == (hs, n, cfg.d_head)
+    assert len(specs) == 6 + 4
+
+    b = cfg.batch_buckets[0]
+    specs = aot.entry_specs(cfg, "decode_shard_batched", n, batch=b)
+    assert specs[3].shape == (b, hs, n, cfg.d_head)
+    specs = aot.entry_specs(cfg, "decode_batch_tail", 0, batch=b)
+    assert specs[0].shape == (b, cfg.d_model)
+    assert specs[1].shape == (b, cfg.d_model)
+
+    specs = aot.entry_specs(cfg, "logits_shard", 0)
+    assert specs[2].shape == (cfg.vocab, cfg.d_model // 2)
+    specs = aot.entry_specs(cfg, "logits_batch", 0, batch=b)
+    assert specs[0].shape == (b, cfg.d_model)
+    assert specs[2].shape == (cfg.vocab, cfg.d_model)
+    specs = aot.entry_specs(cfg, "logits_batch_shard", 0, batch=b)
+    assert specs[2].shape == (cfg.vocab, cfg.d_model // 2)
+
+
+@pytest.mark.parametrize("tp", sorted({1, 2, MATRIX_TP}))
+def test_build_plan_covers_tp_degree(tp, tmp_path, monkeypatch):
+    """The build plan emits the sharded mesh set exactly when tp_degree>1
+    (shard-index-independent entries are lowered once and fanned out to
+    shards 1.. as file copies), and model.json carries the mesh block +
+    shard ABIs (tp matrix job)."""
+    cfg = tiny_tp(tp)
+    stems = []
+
+    def fake_lower(cfg_, entry, n, use_pallas, out_path, force,
+                   split=None, batch=None, tp=None, shard=None):
+        stems.append(os.path.basename(out_path))
+        with open(out_path, "w") as f:
+            f.write(f"HloModule fake_{entry}\n")
+        return True
+
+    monkeypatch.setattr(aot, "lower_entry", fake_lower)
+    aot.build_model(cfg, str(tmp_path), use_pallas=False, force=False)
+    out_dir = tmp_path / cfg.name
+    names = set(stems)
+    assert "decode_layer_16.hlo.txt" in names
+    assert "logits_batch_2.hlo.txt" in names  # batched logits head always
+    sharded = [s for s in names if "shard" in s or "tail" in s]
+    if tp == 1:
+        assert sharded == []
+        assert not list(out_dir.glob("*shard*"))
+    else:
+        # Shard-independent bodies: lowered once (shard 0 only) ...
+        assert f"layer_shard0of{tp}_16.hlo.txt" in names
+        assert f"layer_shard0of{tp}_32.hlo.txt" in names  # prefill bucket
+        assert f"decode_shard0of{tp}_16.hlo.txt" in names
+        assert f"decode_batch2_shard0of{tp}_16.hlo.txt" in names
+        assert f"layer_shard1of{tp}_16.hlo.txt" not in names, \
+            "shard 1 must be a copy, not a second lowering"
+        # ... and fanned out to every shard as identical files.
+        for s in range(tp):
+            for stem in (f"layer_shard{s}of{tp}_16", f"layer_shard{s}of{tp}_32",
+                         f"decode_shard{s}of{tp}_16",
+                         f"decode_batch2_shard{s}of{tp}_16"):
+                path = out_dir / f"{stem}.hlo.txt"
+                assert path.exists(), stem
+                assert path.read_text() == \
+                    (out_dir / f"{stem.replace(f'shard{s}of', 'shard0of')}.hlo.txt").read_text()
+            # Logits shards bake the hidden slice in: one lowering per s.
+            assert f"logits_shard{s}of{tp}.hlo.txt" in names
+            assert f"logits_batch_shard{s}of{tp}_2.hlo.txt" in names
+        assert "layer_tail_16.hlo.txt" in names
+        assert "decode_tail.hlo.txt" in names
+        assert "decode_batch_tail_2.hlo.txt" in names
+    meta = json.loads((tmp_path / cfg.name / "model.json").read_text())
+    assert meta["config"]["tp_degree"] == tp
+    assert meta["mesh"]["tp_degree"] == tp
+    assert "shard" in meta["mesh"]["naming"]
+    if tp > 1:
+        assert meta["abi"]["decode_shard"][3]["shape"] == \
+            [cfg.n_heads // tp, 16, cfg.d_head]
+        assert meta["abi"]["logits_shard"][2]["shape"] == \
+            [cfg.vocab, cfg.d_model // tp]
+    else:
+        assert "decode_shard" not in meta["abi"]
+
+
+def test_matrix_degree_end_to_end_lowering(tmp_path):
+    """Real (jax.jit) end-to-end build at the CI matrix degree: the full
+    plan for a single-bucket tiny variant at ``tp_degree = MATRIX_TP``.
+    This is the test the tp matrix actually varies — tp=1 emits the fused
+    set only, tp=2 adds the sharded mesh set — so each matrix job pins a
+    different lowering surface."""
+    cfg = dataclasses.replace(
+        tiny_tp(MATRIX_TP),
+        prefill_buckets=(16,),
+        seq_buckets=(16,),
+        calib_buckets=(16,),
+        batch_buckets=(2,),
+        emit_splits=False,
+    )
+    aot.build_model(cfg, str(tmp_path), use_pallas=False, force=True)
+    out_dir = tmp_path / cfg.name
+    emitted = {p.name for p in out_dir.glob("*.hlo.txt")}
+    assert "decode_layer_16.hlo.txt" in emitted
+    assert "logits_batch_2.hlo.txt" in emitted
+    if MATRIX_TP == 1:
+        assert not [n for n in emitted if "shard" in n or "tail" in n]
+    else:
+        tp = MATRIX_TP
+        for s in range(tp):
+            assert f"layer_shard{s}of{tp}_16.hlo.txt" in emitted
+            assert f"decode_shard{s}of{tp}_16.hlo.txt" in emitted
+            assert f"logits_shard{s}of{tp}.hlo.txt" in emitted
+        assert "layer_tail_16.hlo.txt" in emitted
+        assert "decode_tail.hlo.txt" in emitted
+        assert "decode_batch_tail_2.hlo.txt" in emitted
+    for name in sorted(emitted)[:3]:
+        assert "HloModule" in (out_dir / name).read_text(), name
+    meta = json.loads((out_dir / "model.json").read_text())
+    assert meta["mesh"]["tp_degree"] == MATRIX_TP
+
+
+def test_lower_sharded_entries_produce_hlo(tmp_path):
+    """Shard + tail entries lower to parseable HLO text (smoke, one each
+    at the matrix tp when sharded entries exist)."""
+    tp = max(MATRIX_TP, 2)
+    cfg = tiny_tp(tp)
+    for entry, n, batch, stem in [
+        ("layer_shard", 16, None, "layer_shard0of%d_16" % tp),
+        ("layer_tail", 16, None, "layer_tail_16"),
+        ("decode_shard", 16, None, "decode_shard0of%d_16" % tp),
+        ("decode_tail", 0, None, "decode_tail"),
+        ("logits_shard", 0, None, "logits_shard0of%d" % tp),
+        ("logits_batch", 0, 2, "logits_batch_2"),
+    ]:
+        path = tmp_path / f"{stem}.hlo.txt"
+        assert aot.lower_entry(cfg, entry, n, False, str(path), force=True,
+                               batch=batch, shard=0)
+        text = path.read_text()
+        assert "ENTRY" in text and "HloModule" in text, stem
 
 
 def test_weights_roundtrip(tmp_path):

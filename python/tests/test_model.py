@@ -17,8 +17,17 @@ from compile.model import (
     calib_probe,
     decode_layer,
     decode_layer_batched,
+    decode_shard,
+    decode_shard_batched,
+    decode_tail,
+    decode_tail_batched,
     init_params,
+    layer_shard,
+    layer_tail,
     logits_head,
+    logits_head_batched,
+    logits_shard,
+    logits_shard_batched,
     prefill_front,
     train_forward,
 )
@@ -284,6 +293,207 @@ def test_calib_probe_shapes_and_stochasticity(params, sample_tokens):
     # Rollout concentration on early tokens is a *trained* property, but
     # mass must stay within the valid region even for random weights.
     assert roll[:, :klen, klen:].max() < 1e-6
+
+
+def _head_slice(w, s, tp):
+    """Columns of a QKV projection owned by head-shard ``s`` of ``tp``."""
+    dc = CFG.d_model // tp
+    return w[:, s * dc:(s + 1) * dc]
+
+
+def _front_hidden(params, tokens):
+    """Post-front hidden states + mask/pos (shared sharding-test setup)."""
+    klen = len(tokens)
+    x = np.zeros((N, CFG.d_model), np.float32)
+    x[:klen] = np.asarray(params["emb"])[tokens]
+    mask = np.zeros((N,), np.float32)
+    mask[:klen] = 1.0
+    pos = np.arange(N, dtype=np.int32)
+    h, ks, vs = prefill_front(CFG, False, jnp.asarray(x), jnp.asarray(mask),
+                              jnp.asarray(pos), *front_params(params))
+    return np.asarray(h), mask, pos, klen, ks, vs
+
+
+def test_sharded_layer_equals_unsharded(params, sample_tokens):
+    """D layer_shard dispatches + head-order concat + layer_tail ==
+    back_layer: h', per-head K/V, and the importance row (partials sum to
+    the head mean). This is the numerical contract of the device-mesh
+    prefill/back path (tp_degree=2)."""
+    tp = 2
+    h, mask, pos, klen, _, _ = _front_hidden(params, sample_tokens.prompt)
+    l = CFG.mid_layer
+    lp = layer_params(params, l)
+    want_h, want_k, want_v, want_s = back_layer(
+        CFG, False, jnp.asarray(h), jnp.asarray(mask), jnp.asarray(pos),
+        jnp.int32(klen - 1), *lp)
+
+    attns, kss, vss, sps = [], [], [], []
+    for s in range(tp):
+        a, k, v, sp = layer_shard(
+            CFG, False, jnp.asarray(h), jnp.asarray(mask), jnp.asarray(pos),
+            jnp.int32(klen - 1), lp[0],
+            _head_slice(lp[1], s, tp), _head_slice(lp[2], s, tp),
+            _head_slice(lp[3], s, tp))
+        attns.append(np.asarray(a))
+        kss.append(np.asarray(k))
+        vss.append(np.asarray(v))
+        sps.append(np.asarray(sp))
+    attn = np.concatenate(attns, axis=1)  # head-order concat -> [n, d]
+    got_h = layer_tail(CFG, jnp.asarray(h), jnp.asarray(attn),
+                       jnp.asarray(mask), *lp[4:])
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.concatenate(kss, axis=0),
+                               np.asarray(want_k), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.concatenate(vss, axis=0),
+                               np.asarray(want_v), atol=2e-4, rtol=2e-4)
+    # Importance partials sum (all-reduce) to the unsharded head mean.
+    np.testing.assert_allclose(sps[0] + sps[1], np.asarray(want_s),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_sharded_decode_equals_single(params, sample_tokens):
+    """D decode_shard dispatches over per-shard head caches + decode_tail
+    == decode_layer over the full-head cache (tp_degree=2)."""
+    tp = 2
+    tokens = list(sample_tokens.prompt)
+    klen = len(tokens)
+    nb = CFG.seq_buckets[1]  # 32: fits klen + 1
+    l = CFG.mid_layer
+    lp = layer_params(params, l)
+    _, _, _, _, ks, vs = _front_hidden(params, tokens)
+    k_cache = np.zeros((CFG.n_heads, nb, CFG.d_head), np.float32)
+    v_cache = np.zeros((CFG.n_heads, nb, CFG.d_head), np.float32)
+    k_cache[:, :klen] = np.asarray(ks[0])[:, :klen]
+    v_cache[:, :klen] = np.asarray(vs[0])[:, :klen]
+    mask = np.zeros((nb,), np.float32)
+    mask[:klen + 1] = 1.0
+    xt = np.asarray(params["emb"])[sample_tokens.answer[0]]
+
+    want_x, want_k, want_v, want_s = decode_layer(
+        CFG, False, jnp.asarray(xt), jnp.int32(klen), jnp.int32(klen),
+        jnp.asarray(k_cache), jnp.asarray(v_cache), jnp.asarray(mask), *lp)
+
+    hs = CFG.n_heads // tp
+    attns, kns, vns, sps = [], [], [], []
+    for s in range(tp):
+        a, kn, vn, sp = decode_shard(
+            CFG, False, jnp.asarray(xt), jnp.int32(klen), jnp.int32(klen),
+            jnp.asarray(k_cache[s * hs:(s + 1) * hs]),
+            jnp.asarray(v_cache[s * hs:(s + 1) * hs]),
+            jnp.asarray(mask), lp[0],
+            _head_slice(lp[1], s, tp), _head_slice(lp[2], s, tp),
+            _head_slice(lp[3], s, tp))
+        attns.append(np.asarray(a))
+        kns.append(np.asarray(kn))
+        vns.append(np.asarray(vn))
+        sps.append(np.asarray(sp))
+    got_x = decode_tail(CFG, jnp.asarray(xt),
+                        jnp.asarray(np.concatenate(attns)), *lp[4:])
+    np.testing.assert_allclose(np.asarray(got_x), np.asarray(want_x),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.concatenate(kns, axis=0),
+                               np.asarray(want_k), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.concatenate(vns, axis=0),
+                               np.asarray(want_v), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(sps[0] + sps[1], np.asarray(want_s),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_sharded_batched_decode_equals_batched(params, sample_tokens):
+    """decode_shard_batched + decode_tail_batched == decode_layer_batched
+    row-for-row, including the all-zero padding row."""
+    tp = 2
+    tokens = list(sample_tokens.prompt)
+    klen = len(tokens)
+    nb = CFG.seq_buckets[1]
+    l = CFG.mid_layer
+    lp = layer_params(params, l)
+    _, _, _, _, ks, vs = _front_hidden(params, tokens)
+    B = 2  # one live row + one padding row
+    k_caches = np.zeros((B, CFG.n_heads, nb, CFG.d_head), np.float32)
+    v_caches = np.zeros((B, CFG.n_heads, nb, CFG.d_head), np.float32)
+    k_caches[0, :, :klen] = np.asarray(ks[0])[:, :klen]
+    v_caches[0, :, :klen] = np.asarray(vs[0])[:, :klen]
+    xs = np.zeros((B, CFG.d_model), np.float32)
+    xs[0] = np.asarray(params["emb"])[sample_tokens.answer[0]]
+    positions = np.array([klen, 0], np.int32)
+    cur_idx = np.array([klen, 0], np.int32)
+    masks = np.zeros((B, nb), np.float32)
+    masks[0, :klen + 1] = 1.0
+
+    want_x, want_k, want_v, want_s = decode_layer_batched(
+        CFG, False, jnp.asarray(xs), jnp.asarray(positions),
+        jnp.asarray(cur_idx), jnp.asarray(k_caches), jnp.asarray(v_caches),
+        jnp.asarray(masks), *lp)
+
+    hs = CFG.n_heads // tp
+    attns, kns, vns, sps = [], [], [], []
+    for s in range(tp):
+        a, kn, vn, sp = decode_shard_batched(
+            CFG, False, jnp.asarray(xs), jnp.asarray(positions),
+            jnp.asarray(cur_idx),
+            jnp.asarray(k_caches[:, s * hs:(s + 1) * hs]),
+            jnp.asarray(v_caches[:, s * hs:(s + 1) * hs]),
+            jnp.asarray(masks), lp[0],
+            _head_slice(lp[1], s, tp), _head_slice(lp[2], s, tp),
+            _head_slice(lp[3], s, tp))
+        attns.append(np.asarray(a))
+        kns.append(np.asarray(kn))
+        vns.append(np.asarray(vn))
+        sps.append(np.asarray(sp))
+    got_x = decode_tail_batched(CFG, jnp.asarray(xs),
+                                jnp.asarray(np.concatenate(attns, axis=1)),
+                                *lp[4:])
+    np.testing.assert_allclose(np.asarray(got_x), np.asarray(want_x),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.concatenate(kns, axis=1),
+                               np.asarray(want_k), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.concatenate(vns, axis=1),
+                               np.asarray(want_v), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(sps[0] + sps[1], np.asarray(want_s),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_sharded_logits_partials_sum_to_head(params):
+    """Summing the D logits_shard partials == logits_head (tp_degree=2)."""
+    tp = 2
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(CFG.d_model).astype(np.float32)
+    want = np.asarray(logits_head(CFG, jnp.asarray(x), params["ln_f"],
+                                  params["emb"]))
+    dc = CFG.d_model // tp
+    got = np.zeros_like(want)
+    for s in range(tp):
+        emb_s = np.asarray(params["emb"])[:, s * dc:(s + 1) * dc]
+        got = got + np.asarray(logits_shard(
+            CFG, tp, s, jnp.asarray(x), params["ln_f"], jnp.asarray(emb_s)))
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+def test_batched_logits_head_equals_single(params):
+    """logits_head_batched row b == logits_head(x[b]); a zero (padding)
+    row yields exactly zero logits. Sharded batched partials also sum to
+    the same rows."""
+    tp = 2
+    rng = np.random.default_rng(4)
+    B = 3
+    xs = rng.standard_normal((B, CFG.d_model)).astype(np.float32)
+    xs[B - 1] = 0.0  # batch padding row
+    got = np.asarray(logits_head_batched(CFG, jnp.asarray(xs),
+                                         params["ln_f"], params["emb"]))
+    for b in range(B - 1):
+        want = np.asarray(logits_head(CFG, jnp.asarray(xs[b]),
+                                      params["ln_f"], params["emb"]))
+        np.testing.assert_allclose(got[b], want, atol=2e-4, rtol=2e-4)
+    assert (got[B - 1] == 0.0).all()
+    dc = CFG.d_model // tp
+    summed = np.zeros_like(got)
+    for s in range(tp):
+        emb_s = np.asarray(params["emb"])[:, s * dc:(s + 1) * dc]
+        summed = summed + np.asarray(logits_shard_batched(
+            CFG, tp, s, jnp.asarray(xs), params["ln_f"], jnp.asarray(emb_s)))
+    np.testing.assert_allclose(summed, got, atol=2e-4, rtol=2e-4)
 
 
 def test_logits_head_matches_manual(params):

@@ -100,6 +100,7 @@ fn pool_status(coord: &Coordinator) -> Response {
             ("id", Json::num(r.id as f64)),
             ("queued", Json::num(r.queued as f64)),
             ("active", Json::num(r.active as f64)),
+            ("tp_degree", Json::num(r.tp_degree as f64)),
             ("kv_bytes", Json::num(r.kv_bytes as f64)),
             ("kv_budget_bytes", Json::num(r.kv_budget_bytes as f64)),
             ("steps_total", Json::num(r.steps_total as f64)),
@@ -134,6 +135,7 @@ fn pool_status(coord: &Coordinator) -> Response {
                 ("entries", Json::num(p.entries as f64)),
                 ("bytes", Json::num(p.bytes as f64)),
                 ("active_leases", Json::num(p.active_leases as f64)),
+                ("trie_nodes", Json::num(p.trie_nodes as f64)),
                 ("hits", Json::num(p.hits as f64)),
                 ("misses", Json::num(p.misses as f64)),
                 ("evictions", Json::num(p.evictions as f64)),

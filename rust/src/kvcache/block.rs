@@ -184,6 +184,19 @@ impl BlockPool {
         s.v[slot * w..(slot + 1) * w].copy_from_slice(v_row);
     }
 
+    /// Zero every row at or beyond `from_slot` (the in-place compact
+    /// fast path restores the clean-padding invariant with this).
+    /// COW safety: asserts the block is solely owned, like `write_row`.
+    pub fn zero_tail(&self, id: usize, from_slot: usize) {
+        assert!(from_slot <= BLOCK_TOKENS);
+        let mut p = self.inner.lock().unwrap();
+        let s = &mut p.slots[id];
+        assert_eq!(s.refs, 1, "copy-on-write violation: zero of shared block {}", id);
+        let w = s.row_elems;
+        s.k[from_slot * w..].fill(0.0);
+        s.v[from_slot * w..].fill(0.0);
+    }
+
     /// Read access to a block's K/V payload under the pool lock.
     pub fn with_kv<R>(&self, id: usize, f: impl FnOnce(&[f32], &[f32]) -> R) -> R {
         let p = self.inner.lock().unwrap();

@@ -125,6 +125,41 @@ impl LayerCache {
         c
     }
 
+    /// Gather `rows` of a `[H, src_n, dh]` K/V slab pair into a fresh
+    /// paged cache allocated from `pool`; row `i` keeps `rows[i]` as its
+    /// original position. This is the one strided row-gather under every
+    /// prefill-output → cache build (engine front caches, prefix-cache
+    /// entry construction, and the per-shard mesh builds).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_strided_rows(
+        pool: BlockPool,
+        n_heads: usize,
+        d_head: usize,
+        cap: usize,
+        src_k: &[f32],
+        src_v: &[f32],
+        src_n: usize,
+        rows: &[usize],
+    ) -> LayerCache {
+        assert!(rows.len() <= cap);
+        assert_eq!(src_k.len(), n_heads * src_n * d_head);
+        assert_eq!(src_v.len(), n_heads * src_n * d_head);
+        let dh = d_head;
+        let mut c = LayerCache::new_in(pool, n_heads, d_head, cap);
+        let mut k_row = vec![0.0f32; n_heads * dh];
+        let mut v_row = vec![0.0f32; n_heads * dh];
+        for &orig in rows {
+            debug_assert!(orig < src_n);
+            for h in 0..n_heads {
+                let base = h * src_n * dh + orig * dh;
+                k_row[h * dh..(h + 1) * dh].copy_from_slice(&src_k[base..base + dh]);
+                v_row[h * dh..(h + 1) * dh].copy_from_slice(&src_v[base..base + dh]);
+            }
+            c.append(&k_row, &v_row, orig as i32);
+        }
+        c
+    }
+
     fn row_elems(&self) -> usize {
         self.n_heads * self.d_head
     }
@@ -359,10 +394,14 @@ impl LayerCache {
     /// compacting rows to the front. Positions follow their rows.
     ///
     /// Copy-on-write: fully-retained identity-prefix blocks are kept
-    /// as-is (still shared if they were shared); every row from the first
-    /// divergence onward is gathered into fresh zero-filled blocks and the
-    /// old blocks are released — the vacated range therefore reads
-    /// exactly zero, however large the prune.
+    /// as-is (still shared if they were shared). When every block from
+    /// the first divergence onward is *solely owned* (refs == 1 — the
+    /// common case during `fine_during_decode`, where each step prunes a
+    /// private cache), rows are moved **in place** and the vacated tail
+    /// is re-zeroed, allocating nothing. Otherwise every row from the
+    /// divergence is gathered into fresh zero-filled blocks and the old
+    /// blocks are released. Either way the vacated range reads exactly
+    /// zero, however large the prune.
     pub fn compact(&mut self, keep: &[usize]) {
         debug_assert!(keep.windows(2).all(|w| w[0] < w[1]), "keep must be ascending");
         if let Some(&last) = keep.last() {
@@ -378,27 +417,61 @@ impl LayerCache {
         }
         let w = self.row_elems();
         let keep_blocks = ident / BLOCK_TOKENS;
-        let mut new_blocks: Vec<usize> = Vec::new();
         let mut k_buf = vec![0.0f32; w];
         let mut v_buf = vec![0.0f32; w];
-        for (dst, &src) in keep.iter().enumerate().skip(keep_blocks * BLOCK_TOKENS) {
-            let slot = dst % BLOCK_TOKENS;
-            if slot == 0 {
-                new_blocks.push(self.pool.alloc(w));
+        let tail_sole = self.blocks[keep_blocks..]
+            .iter()
+            .all(|&id| self.pool.refs(id) == 1);
+        if tail_sole {
+            // In-place fast path: `keep` ascending means dst <= src, so
+            // moving rows front-to-back never clobbers an unread source.
+            for (dst, &src) in keep.iter().enumerate().skip(keep_blocks * BLOCK_TOKENS) {
+                if dst == src {
+                    continue;
+                }
+                let sb = self.blocks[src / BLOCK_TOKENS];
+                let ss = src % BLOCK_TOKENS;
+                self.pool.with_kv(sb, |k, v| {
+                    k_buf.copy_from_slice(&k[ss * w..(ss + 1) * w]);
+                    v_buf.copy_from_slice(&v[ss * w..(ss + 1) * w]);
+                });
+                self.pool
+                    .write_row(self.blocks[dst / BLOCK_TOKENS], dst % BLOCK_TOKENS, &k_buf, &v_buf);
             }
-            let sb = self.blocks[src / BLOCK_TOKENS];
-            let ss = src % BLOCK_TOKENS;
-            self.pool.with_kv(sb, |k, v| {
-                k_buf.copy_from_slice(&k[ss * w..(ss + 1) * w]);
-                v_buf.copy_from_slice(&v[ss * w..(ss + 1) * w]);
-            });
-            self.pool.write_row(*new_blocks.last().unwrap(), slot, &k_buf, &v_buf);
+            // Drop whole blocks past the new length; re-zero the partial
+            // tail of the retained ones (clean-padding invariant).
+            let need = keep.len().div_ceil(BLOCK_TOKENS);
+            for &id in &self.blocks[need..] {
+                self.pool.release(id);
+            }
+            self.blocks.truncate(need);
+            for (bi, &id) in self.blocks.iter().enumerate() {
+                let live = keep.len().saturating_sub(bi * BLOCK_TOKENS);
+                if live < BLOCK_TOKENS {
+                    self.pool.zero_tail(id, live);
+                }
+            }
+        } else {
+            let mut new_blocks: Vec<usize> = Vec::new();
+            for (dst, &src) in keep.iter().enumerate().skip(keep_blocks * BLOCK_TOKENS) {
+                let slot = dst % BLOCK_TOKENS;
+                if slot == 0 {
+                    new_blocks.push(self.pool.alloc(w));
+                }
+                let sb = self.blocks[src / BLOCK_TOKENS];
+                let ss = src % BLOCK_TOKENS;
+                self.pool.with_kv(sb, |k, v| {
+                    k_buf.copy_from_slice(&k[ss * w..(ss + 1) * w]);
+                    v_buf.copy_from_slice(&v[ss * w..(ss + 1) * w]);
+                });
+                self.pool.write_row(*new_blocks.last().unwrap(), slot, &k_buf, &v_buf);
+            }
+            for &id in &self.blocks[keep_blocks..] {
+                self.pool.release(id);
+            }
+            self.blocks.truncate(keep_blocks);
+            self.blocks.extend(new_blocks);
         }
-        for &id in &self.blocks[keep_blocks..] {
-            self.pool.release(id);
-        }
-        self.blocks.truncate(keep_blocks);
-        self.blocks.extend(new_blocks);
         let new_pos: Vec<i32> = keep.iter().map(|&i| self.positions[i]).collect();
         self.positions = new_pos;
         self.len = keep.len();
@@ -412,17 +485,164 @@ impl LayerCache {
     }
 }
 
+/// One layer's KV cache split across the device mesh: shard `s` holds
+/// an independent paged block list for heads `[s·H/D, (s+1)·H/D)`, so
+/// per-device uploads materialize straight from per-shard blocks and
+/// nothing is re-laid-out when sharding. Every shard advances in
+/// lockstep (same `len`, `cap`, and positions); `append` splits one
+/// full-head row into per-shard chunks (rows are head-major, so shard
+/// chunks are contiguous), and `compact` applies one keep set to all
+/// shards. With a single shard this is exactly a [`LayerCache`] — the
+/// tp_degree = 1 engine path wraps today's caches via
+/// [`ShardedLayerCache::from_single`] without copying a byte.
+#[derive(Debug, Clone)]
+pub struct ShardedLayerCache {
+    shards: Vec<LayerCache>,
+}
+
+impl ShardedLayerCache {
+    /// Wrap a full-head cache as the one-shard (tp_degree = 1) case.
+    pub fn from_single(c: LayerCache) -> ShardedLayerCache {
+        ShardedLayerCache { shards: vec![c] }
+    }
+
+    /// Assemble from per-shard caches (equal length and capacity).
+    pub fn from_shards(shards: Vec<LayerCache>) -> ShardedLayerCache {
+        assert!(!shards.is_empty(), "a cache needs at least one shard");
+        let (len, cap, dh) = (shards[0].len(), shards[0].cap(), shards[0].d_head);
+        for s in &shards[1..] {
+            assert_eq!((s.len(), s.cap(), s.d_head), (len, cap, dh), "shard drift");
+        }
+        ShardedLayerCache { shards }
+    }
+
+    /// Empty sharded cache: `n_heads` total heads split over `tp` shards,
+    /// allocating from the process-wide pool.
+    pub fn new(n_heads: usize, d_head: usize, cap: usize, tp: usize) -> ShardedLayerCache {
+        assert!(tp >= 1 && n_heads % tp == 0, "heads {} not divisible by tp {}", n_heads, tp);
+        let hs = n_heads / tp;
+        ShardedLayerCache {
+            shards: (0..tp).map(|_| LayerCache::new(hs, d_head, cap)).collect(),
+        }
+    }
+
+    /// Build from per-shard prefill K/V slabs (`[Hs, src_n, dh]` each),
+    /// keeping rows `0..valid` with explicit original positions.
+    pub fn from_prefill_shards(
+        d_head: usize,
+        cap: usize,
+        shard_kv: &[(Vec<f32>, Vec<f32>)],
+        src_n: usize,
+        valid: usize,
+        positions: &[i32],
+    ) -> ShardedLayerCache {
+        assert!(!shard_kv.is_empty());
+        let shards = shard_kv
+            .iter()
+            .map(|(k, v)| {
+                let hs = k.len() / (src_n * d_head);
+                LayerCache::from_prefill(hs, d_head, cap, k, v, src_n, valid, positions)
+            })
+            .collect();
+        ShardedLayerCache::from_shards(shards)
+    }
+
+    pub fn tp(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, s: usize) -> &LayerCache {
+        &self.shards[s]
+    }
+
+    pub fn shard_mut(&mut self, s: usize) -> &mut LayerCache {
+        &mut self.shards[s]
+    }
+
+    /// Shard 0 — *the* cache in the single-shard (tp_degree = 1) case.
+    pub fn primary(&self) -> &LayerCache {
+        &self.shards[0]
+    }
+
+    pub fn primary_mut(&mut self) -> &mut LayerCache {
+        &mut self.shards[0]
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards[0].is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.shards[0].cap()
+    }
+
+    pub fn positions(&self) -> &[i32] {
+        self.shards[0].positions()
+    }
+
+    pub fn mask(&self) -> Vec<f32> {
+        self.shards[0].mask()
+    }
+
+    /// Allocated payload bytes summed over shards (identical to the
+    /// unsharded footprint: the same rows, split by head range).
+    pub fn bytes(&self) -> usize {
+        self.shards.iter().map(|c| c.bytes()).sum()
+    }
+
+    pub fn grow(&mut self, new_cap: usize) {
+        for c in &mut self.shards {
+            c.grow(new_cap);
+        }
+    }
+
+    /// Append one token's full-head K/V row (`[H, dh]` head-major each):
+    /// shard `s` receives its contiguous `[Hs·dh]` chunk.
+    pub fn append(&mut self, k_new: &[f32], v_new: &[f32], pos: i32) {
+        let total: usize = self.shards.iter().map(|c| c.n_heads * c.d_head).sum();
+        assert_eq!(k_new.len(), total);
+        assert_eq!(v_new.len(), total);
+        let mut at = 0;
+        for c in &mut self.shards {
+            let w = c.n_heads * c.d_head;
+            c.append(&k_new[at..at + w], &v_new[at..at + w], pos);
+            at += w;
+        }
+    }
+
+    /// Apply one keep set to every shard (fine pruning prunes *tokens*,
+    /// which exist in all head shards).
+    pub fn compact(&mut self, keep: &[usize]) {
+        for c in &mut self.shards {
+            c.compact(keep);
+        }
+    }
+
+    pub fn padding_is_zero(&self) -> bool {
+        self.shards.iter().all(|c| c.padding_is_zero())
+    }
+}
+
 /// All layers' caches for one request + peak-memory accounting.
 #[derive(Debug, Clone, Default)]
 pub struct CacheSet {
-    pub layers: Vec<LayerCache>,
+    pub layers: Vec<ShardedLayerCache>,
     peak_bytes: usize,
 }
 
 impl CacheSet {
-    pub fn push(&mut self, c: LayerCache) {
+    pub fn push(&mut self, c: ShardedLayerCache) {
         self.layers.push(c);
         self.update_peak();
+    }
+
+    /// Push a full-head cache as a single-shard layer (tp_degree = 1).
+    pub fn push_single(&mut self, c: LayerCache) {
+        self.push(ShardedLayerCache::from_single(c));
     }
 
     pub fn bytes(&self) -> usize {
@@ -667,6 +887,127 @@ mod tests {
         assert_eq!(&v[per..2 * per], &va[..]);
         assert!(k[2 * per..].iter().all(|&x| x == 0.0), "padding rows re-zeroed");
         assert!(v[2 * per..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn from_strided_rows_gathers_and_keeps_positions() {
+        // [H=2, src_n=5, dh=3] slab with value 100*h + i per row.
+        let (h_n, src_n, dh) = (2, 5, 3);
+        let mut k = vec![0.0f32; h_n * src_n * dh];
+        let mut v = vec![0.0f32; h_n * src_n * dh];
+        for h in 0..h_n {
+            for i in 0..src_n {
+                for d in 0..dh {
+                    k[h * src_n * dh + i * dh + d] = (100 * h + i) as f32;
+                    v[h * src_n * dh + i * dh + d] = -((100 * h + i) as f32);
+                }
+            }
+        }
+        let pool = BlockPool::new();
+        let c = LayerCache::from_strided_rows(pool, h_n, dh, 8, &k, &v, src_n, &[1, 4]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.positions(), &[1, 4]);
+        assert_eq!(c.k_row(0, 0)[0], 1.0);
+        assert_eq!(c.k_row(1, 1)[0], 104.0);
+        assert_eq!(c.v_row(1, 0)[0], -101.0);
+        assert!(c.padding_is_zero());
+    }
+
+    #[test]
+    fn compact_solely_owned_is_in_place() {
+        // Regression (refs == 1 fast path): compacting a cache whose tail
+        // blocks are solely owned must reuse those blocks instead of
+        // rewriting every row into fresh ones.
+        let n = 3 * BLOCK_TOKENS + 5;
+        let pool = BlockPool::new();
+        let mut c = filled_in(&pool, 2, 4, n + 8, n);
+        let before = c.block_ids().to_vec();
+        let slots_before = pool.total_slots();
+        let keep: Vec<usize> = (0..n).step_by(3).collect(); // scattered
+        c.compact(&keep);
+        assert_eq!(c.len(), keep.len());
+        assert_eq!(
+            c.block_ids(),
+            &before[..keep.len().div_ceil(BLOCK_TOKENS)],
+            "in-place compact must keep a prefix of the original blocks"
+        );
+        assert_eq!(pool.total_slots(), slots_before, "no fresh allocation");
+        for (r, &src) in keep.iter().enumerate() {
+            assert_eq!(c.k_row(0, r)[0], src as f32);
+            assert_eq!(c.k_row(1, r)[0], (100 + src) as f32);
+            assert_eq!(c.positions()[r], 10 + src as i32);
+        }
+        assert!(c.padding_is_zero(), "vacated tail must be re-zeroed");
+    }
+
+    #[test]
+    fn compact_shared_tail_still_copies() {
+        // A shared tail (refcount > 1) must take the COW slow path: the
+        // clone's rows survive the original's compaction untouched.
+        let pool = BlockPool::new();
+        let mut a = filled_in(&pool, 1, 2, 4 * BLOCK_TOKENS, 2 * BLOCK_TOKENS);
+        let b = a.clone();
+        let before = b.block_ids().to_vec();
+        a.compact(&[0, 3, BLOCK_TOKENS + 1]);
+        assert_eq!(b.block_ids(), &before[..], "clone's blocks untouched");
+        for i in 0..2 * BLOCK_TOKENS {
+            assert_eq!(b.k_row(0, i)[0], i as f32, "clone row {} perturbed", i);
+        }
+        assert_eq!(a.k_row(0, 1)[0], 3.0);
+        assert!(a.padding_is_zero() && b.padding_is_zero());
+    }
+
+    #[test]
+    fn sharded_cache_matches_full_head_cache() {
+        // Appending full-head rows into a 2-shard cache lands each head
+        // range in its own block list, bit-identical to the full cache.
+        let (h_n, dh, cap, n) = (4, 3, 2 * BLOCK_TOKENS, BLOCK_TOKENS + 3);
+        let pool = BlockPool::new();
+        let full = filled_in(&pool, h_n, dh, cap, n);
+        let mut sc = ShardedLayerCache::new(h_n, dh, cap, 2);
+        assert_eq!(sc.tp(), 2);
+        let mut row_k = vec![0.0f32; h_n * dh];
+        let mut row_v = vec![0.0f32; h_n * dh];
+        for i in 0..n {
+            for h in 0..h_n {
+                row_k[h * dh..(h + 1) * dh].copy_from_slice(&full.k_row(h, i));
+                row_v[h * dh..(h + 1) * dh].copy_from_slice(&full.v_row(h, i));
+            }
+            sc.append(&row_k, &row_v, full.positions()[i]);
+        }
+        assert_eq!(sc.len(), full.len());
+        assert_eq!(sc.positions(), full.positions());
+        // Shard s, head h == full cache head s*2 + h.
+        for s in 0..2 {
+            for h in 0..2 {
+                for i in 0..n {
+                    assert_eq!(sc.shard(s).k_row(h, i), full.k_row(s * 2 + h, i));
+                    assert_eq!(sc.shard(s).v_row(h, i), full.v_row(s * 2 + h, i));
+                }
+            }
+        }
+        // compact/grow stay in lockstep across shards.
+        sc.compact(&[0, 2, BLOCK_TOKENS]);
+        assert_eq!(sc.len(), 3);
+        assert_eq!(sc.positions(), &[10, 12, 10 + BLOCK_TOKENS as i32]);
+        assert_eq!(sc.shard(1).k_row(0, 1), full.k_row(2, 2));
+        sc.grow(4 * BLOCK_TOKENS);
+        assert_eq!(sc.cap(), 4 * BLOCK_TOKENS);
+        assert_eq!(sc.shard(0).cap(), 4 * BLOCK_TOKENS);
+        assert!(sc.padding_is_zero());
+    }
+
+    #[test]
+    fn sharded_single_is_transparent_wrapper() {
+        let pool = BlockPool::new();
+        let c = filled_in(&pool, 2, 4, 8, 3);
+        let bytes = c.bytes();
+        let ids = c.block_ids().to_vec();
+        let sc = ShardedLayerCache::from_single(c);
+        assert_eq!(sc.tp(), 1);
+        assert_eq!(sc.len(), 3);
+        assert_eq!(sc.bytes(), bytes);
+        assert_eq!(sc.primary().block_ids(), &ids[..], "no copy on wrap");
     }
 
     #[test]

@@ -77,17 +77,40 @@ struct TrieNode {
     key: Option<u64>,
 }
 
-/// Token radix trie for one config key. Nodes are arena-allocated;
-/// removal clears the entry marker (interior nodes are retained — they
-/// are a few machine words each and bounded by inserted prefixes).
+/// Token radix trie for one config key. Nodes are arena-allocated with a
+/// free list: removal prunes every node made childless and key-less back
+/// up the path and recycles the slots, so the arena occupancy is bounded
+/// by the *live* entries' path lengths — not by every prefix ever
+/// inserted (`prefix_cache_bytes` eviction really frees the index too;
+/// regression-tested below).
 #[derive(Default)]
 struct Trie {
     nodes: Vec<TrieNode>,
+    /// Recycled node slots awaiting reuse (never the root).
+    free: Vec<usize>,
 }
 
 impl Trie {
     fn new() -> Trie {
-        Trie { nodes: vec![TrieNode::default()] }
+        Trie { nodes: vec![TrieNode::default()], free: Vec::new() }
+    }
+
+    /// Arena slots currently reachable (root included).
+    fn live_nodes(&self) -> usize {
+        self.nodes.len() - self.free.len()
+    }
+
+    fn alloc_node(&mut self) -> usize {
+        match self.free.pop() {
+            Some(id) => {
+                self.nodes[id] = TrieNode::default();
+                id
+            }
+            None => {
+                self.nodes.push(TrieNode::default());
+                self.nodes.len() - 1
+            }
+        }
     }
 
     fn insert(&mut self, tokens: &[u32], key: u64) {
@@ -96,8 +119,7 @@ impl Trie {
             at = match self.nodes[at].children.get(&t) {
                 Some(&n) => n,
                 None => {
-                    self.nodes.push(TrieNode::default());
-                    let n = self.nodes.len() - 1;
+                    let n = self.alloc_node();
                     self.nodes[at].children.insert(t, n);
                     n
                 }
@@ -125,14 +147,30 @@ impl Trie {
     }
 
     fn remove(&mut self, tokens: &[u32]) {
+        // Walk down recording the path so pruning can walk back up.
+        let mut path: Vec<(usize, u32)> = Vec::with_capacity(tokens.len());
         let mut at = 0;
         for &t in tokens {
             match self.nodes[at].children.get(&t) {
-                Some(&n) => at = n,
+                Some(&n) => {
+                    path.push((at, t));
+                    at = n;
+                }
                 None => return,
             }
         }
         self.nodes[at].key = None;
+        // Prune childless, key-less nodes bottom-up and recycle them.
+        let mut cur = at;
+        while let Some((parent, tok)) = path.pop() {
+            if self.nodes[cur].key.is_some() || !self.nodes[cur].children.is_empty() {
+                break;
+            }
+            self.nodes[parent].children.remove(&tok);
+            self.nodes[cur] = TrieNode::default();
+            self.free.push(cur);
+            cur = parent;
+        }
     }
 }
 
@@ -207,6 +245,9 @@ pub struct PrefixCacheStats {
     pub entries: usize,
     pub bytes: usize,
     pub active_leases: usize,
+    /// Live trie-arena nodes across all config tries (index overhead;
+    /// bounded by live entries' path lengths — see [`Trie`]).
+    pub trie_nodes: usize,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
@@ -307,7 +348,7 @@ impl PrefixCache {
     /// Longest-prefix lookup; a hit pins the entry with a lease. Counts a
     /// hit or a miss.
     pub fn lookup(self: &Arc<Self>, cfg: u64, tokens: &[u32]) -> Option<PrefixLease> {
-        self.lookup_inner(cfg, tokens, false)
+        self.lookup_longest(cfg, tokens)
     }
 
     /// Exact-prefix lookup: a hit only when an entry covers *precisely*
@@ -316,20 +357,53 @@ impl PrefixCache {
     /// hits here — not on partial matches that fall back to full
     /// prefill — keeps the hit/miss counters honest for operators.
     pub fn lookup_exact(self: &Arc<Self>, cfg: u64, tokens: &[u32]) -> Option<PrefixLease> {
-        self.lookup_inner(cfg, tokens, true)
+        self.lookup_exact_where(cfg, tokens, |_| true)
     }
 
-    fn lookup_inner(self: &Arc<Self>, cfg: u64, tokens: &[u32], exact: bool) -> Option<PrefixLease> {
+    /// [`Self::lookup_exact`] gated on a caller predicate evaluated
+    /// *before* the hit is counted or a lease taken: an entry the
+    /// predicate rejects (e.g. a keep-set mismatch in the engine's
+    /// resume path) counts as a **miss**, because nothing is reused.
+    /// This is what keeps `fastav_prefix_cache_hits_total` honest for
+    /// keep-mismatched lookups (regression-tested below).
+    pub fn lookup_exact_where(
+        self: &Arc<Self>,
+        cfg: u64,
+        tokens: &[u32],
+        pred: impl FnOnce(&PrefixEntry) -> bool,
+    ) -> Option<PrefixLease> {
         let exact_key = hash_mix(&[cfg, hash_tokens(0, tokens)]);
         let found = {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
             let tick = inner.tick;
-            let key = if exact {
-                inner.slots.contains_key(&exact_key).then_some(exact_key)
-            } else {
-                inner.tries.get(&cfg).and_then(|t| t.longest(tokens))
-            };
+            match inner.slots.get_mut(&exact_key) {
+                Some(slot) if pred(&slot.entry) => {
+                    slot.active += 1;
+                    slot.last_used = tick;
+                    Some(Arc::clone(&slot.entry))
+                }
+                _ => None,
+            }
+        };
+        match found {
+            Some(entry) => {
+                self.count_hit();
+                Some(PrefixLease { cache: Arc::clone(self), key: exact_key, entry })
+            }
+            None => {
+                self.count_miss();
+                None
+            }
+        }
+    }
+
+    fn lookup_longest(self: &Arc<Self>, cfg: u64, tokens: &[u32]) -> Option<PrefixLease> {
+        let found = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            let key = inner.tries.get(&cfg).and_then(|t| t.longest(tokens));
             key.and_then(|key| {
                 inner.slots.get_mut(&key).map(|slot| {
                     slot.active += 1;
@@ -435,6 +509,12 @@ impl PrefixCache {
             inner.bytes = inner.bytes.saturating_sub(slot.entry.bytes);
             if let Some(trie) = inner.tries.get_mut(&slot.cfg) {
                 trie.remove(&slot.tokens);
+                // Drop the whole per-config trie once its last entry is
+                // gone (only the root remains) — config keys are
+                // unbounded across a server's lifetime.
+                if trie.nodes[0].children.is_empty() {
+                    inner.tries.remove(&slot.cfg);
+                }
             }
             // Dropping the Arc releases the blocks once the last
             // in-flight borrower (cloned LayerCache / outstanding lease
@@ -475,18 +555,20 @@ impl PrefixCache {
     }
 
     pub fn stats(&self) -> PrefixCacheStats {
-        let (entries, bytes, active) = {
+        let (entries, bytes, active, trie_nodes) = {
             let inner = self.inner.lock().unwrap();
             (
                 inner.slots.len(),
                 inner.bytes,
                 inner.slots.values().map(|s| s.active).sum(),
+                inner.tries.values().map(|t| t.live_nodes()).sum(),
             )
         };
         PrefixCacheStats {
             entries,
             bytes,
             active_leases: active,
+            trie_nodes,
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
@@ -602,6 +684,81 @@ mod tests {
         assert_eq!(flushed, 2);
         assert!(freed > 0);
         assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn eviction_reclaims_trie_arena() {
+        // Regression: trie nodes used to leak forever (~path-length nodes
+        // per distinct prefix, uncapped by the byte budget). Eviction must
+        // return the arena occupancy to a bound set by the *live* entries.
+        let pool = BlockPool::new();
+        let per_entry = entry_with(&pool, 2).bytes;
+        let cache = Arc::new(PrefixCache::new_in(pool.clone(), 2 * per_entry));
+        let prefix_len = 40;
+        for i in 0..50u32 {
+            let tokens: Vec<u32> = (0..prefix_len).map(|j| i * 1000 + j).collect();
+            cache.insert(1, &tokens, entry_with(&pool, 2));
+        }
+        let s = cache.stats();
+        assert_eq!(s.entries, 2, "budget keeps two entries");
+        assert!(s.evictions >= 48);
+        // Bound: root + one path per live entry (paths may share nothing).
+        let bound = 1 + s.entries * prefix_len as usize;
+        assert!(
+            s.trie_nodes <= bound,
+            "trie arena leaked: {} live nodes > bound {}",
+            s.trie_nodes,
+            bound
+        );
+        // Flushing the rest drops the per-config trie entirely.
+        cache.flush();
+        assert_eq!(cache.stats().trie_nodes, 0, "empty trie must be dropped");
+        // Re-inserting after a flush still works (slots recycled).
+        assert!(cache.insert(1, &[1, 2, 3], entry_with(&pool, 2)));
+        assert!(cache.lookup(1, &[1, 2, 3]).is_some());
+    }
+
+    #[test]
+    fn branching_removal_keeps_shared_spine() {
+        // Removing one branch must not free nodes another entry's path
+        // still uses, and must not break lookups through the shared spine.
+        let pool = BlockPool::new();
+        let cache = Arc::new(PrefixCache::new_in(pool.clone(), 0));
+        cache.insert(1, &[1, 2, 3, 4], entry_with(&pool, 2));
+        cache.insert(1, &[1, 2, 9], entry_with(&pool, 2));
+        let before = cache.stats().trie_nodes; // root + 1,2 + {3,4} + {9}
+        assert_eq!(before, 1 + 2 + 2 + 1);
+        // Pin [1,2,9]; flush evicts only the lease-free [1,2,3,4].
+        let lease = cache.lookup(1, &[1, 2, 9]).unwrap();
+        let (evicted, _) = cache.flush();
+        assert_eq!(evicted, 1);
+        let s = cache.stats();
+        assert_eq!(s.trie_nodes, 1 + 2 + 1, "only the 3,4 branch freed");
+        assert!(cache.lookup(1, &[1, 2, 9, 7]).is_some(), "shared spine intact");
+        drop(lease);
+        assert!(cache.lookup(1, &[1, 2, 3, 4, 5]).is_none());
+    }
+
+    #[test]
+    fn exact_where_counts_rejected_entry_as_miss() {
+        // Regression: the engine's keep-set check used to run *after* a
+        // counted lookup_exact hit, inflating hits_total on lookups that
+        // reused nothing. The predicate-gated lookup counts those as
+        // misses and takes no lease.
+        let pool = BlockPool::new();
+        let cache = Arc::new(PrefixCache::new_in(pool.clone(), 0));
+        cache.insert(1, &[1, 2], entry_with(&pool, 2));
+        // Predicate rejects (keep-set mismatch): miss, no lease pinned.
+        assert!(cache.lookup_exact_where(1, &[1, 2], |_| false).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 1), "rejected entry must count as a miss");
+        assert_eq!(s.active_leases, 0, "no lease on a rejected entry");
+        // Predicate accepts: ordinary hit with a lease.
+        let lease = cache.lookup_exact_where(1, &[1, 2], |e| e.prefix_len == 2);
+        assert!(lease.is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.active_leases, 1);
     }
 
     #[test]

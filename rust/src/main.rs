@@ -3,7 +3,7 @@
 //! ```text
 //! fastav serve     --model vl2sim --port 8077 [--no-pruning] [--p 20]
 //!                  [--replicas 4] [--max-inflight 4] [--kv-budget-mb 512]
-//!                  [--prefix-cache-mb 256] [--decode-batch 0]
+//!                  [--prefix-cache-mb 256] [--decode-batch 0] [--tp 1]
 //! fastav eval      --model vl2sim --dataset avhbench --n 50 [--no-pruning]
 //! fastav calibrate --model vl2sim --n 100
 //! fastav info      --model vl2sim
@@ -25,7 +25,7 @@ const OPTIONS: &[&str] = &[
     "model", "artifacts", "dataset", "n", "port", "p", "no-pruning", "seed",
     "max-gen", "queue-cap", "workers", "calibration", "replicas",
     "max-inflight", "kv-budget-mb", "deadline-ms", "prefix-cache-mb",
-    "decode-batch",
+    "decode-batch", "tp",
 ];
 
 fn main() {
@@ -172,6 +172,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // 0 = fuse up to the artifact set's largest batch bucket; 1 = force
     // the single-token decode path (A/B comparison).
     let decode_batch = args.get_usize("decode-batch", 0).map_err(|e| anyhow!(e))?;
+    // Tensor-parallel degree: each replica becomes a device group of
+    // this many mesh devices (needs artifacts lowered with tp_degree).
+    let tp = args.get_usize("tp", 1).map_err(|e| anyhow!(e))?;
     let plan = plan_from_args(args, &root, &model)?;
 
     // Replica pool: each engine lives on its own thread.
@@ -188,6 +191,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Some(std::time::Duration::from_millis(deadline_ms as u64))
         },
         max_decode_batch: decode_batch,
+        tp_degree: tp,
     };
     let coord = Arc::new(Coordinator::start_pool(root.clone(), model.clone(), cfg)?);
     let layout = {
@@ -200,10 +204,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fastav::http::api::make_handler(Arc::clone(&coord), layout, plan.clone(), max_gen, 1234);
     let server = Server::bind(&format!("127.0.0.1:{}", port), workers, handler)?;
     println!(
-        "fastav serving {} on http://{} ({} replica(s))",
+        "fastav serving {} on http://{} ({} replica(s) × tp={})",
         model,
         server.local_addr(),
-        coord.replica_count()
+        coord.replica_count(),
+        tp.max(1)
     );
     println!("  POST /v1/generate     {{\"dataset\": \"avhbench\", \"index\": 0, \"question\": \"what_scene\"?}}");
     println!("  POST /v1/cancel       {{\"request_id\": 1}}");

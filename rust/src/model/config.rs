@@ -29,6 +29,11 @@ pub struct ModelConfig {
     /// Decode batch sizes with `decode_batch<b>_<n>` artifacts (empty for
     /// artifact sets lowered before batched decode existed).
     pub batch_buckets: Vec<usize>,
+    /// Tensor-parallel degree the artifact set was lowered for: when
+    /// > 1, head-sharded `*_shard<s>of<D>` artifacts exist and the
+    /// device-mesh backend may run this model at that degree. `1` for
+    /// artifact sets lowered before the mesh existed.
+    pub tp_degree: usize,
     /// Directory (under the artifact root) holding this model's weights —
     /// alias configs (vl2sim_long) share another model's checkpoint.
     pub weights_dir: String,
@@ -93,6 +98,7 @@ impl ModelConfig {
             seq_buckets: usize_list(c, "seq_buckets")?,
             calib_buckets: usize_list(c, "calib_buckets")?,
             batch_buckets: usize_list(c, "batch_buckets").unwrap_or_default(),
+            tp_degree: c.get("tp_degree").as_usize().unwrap_or(1).max(1),
             weights_dir: root
                 .get("weights_dir")
                 .as_str()
@@ -141,8 +147,10 @@ mod tests {
         assert_eq!(cfg.n_heads * cfg.d_head, cfg.d_model);
         assert_eq!(cfg.seq_buckets, vec![16, 32]);
         // Older model.json without batch_buckets parses as "no batched
-        // decode artifacts" rather than erroring.
+        // decode artifacts" rather than erroring; likewise a missing
+        // tp_degree parses as the unsharded degree 1.
         assert!(cfg.batch_buckets.is_empty());
+        assert_eq!(cfg.tp_degree, 1);
         assert!(!cfg.layout.interleaved);
         assert_eq!(cfg.weights_dir, "tiny");
         assert_eq!(cfg.kernel_impl, "pallas");
@@ -170,5 +178,15 @@ mod tests {
         );
         let cfg = ModelConfig::from_json(&Json::parse(&with).unwrap()).unwrap();
         assert_eq!(cfg.batch_buckets, vec![2, 4]);
+    }
+
+    #[test]
+    fn parses_tp_degree_when_present() {
+        let with = SAMPLE.replace(
+            "\"seq_buckets\": [16, 32],",
+            "\"seq_buckets\": [16, 32], \"tp_degree\": 2,",
+        );
+        let cfg = ModelConfig::from_json(&Json::parse(&with).unwrap()).unwrap();
+        assert_eq!(cfg.tp_degree, 2);
     }
 }

@@ -19,15 +19,17 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use super::config::ModelConfig;
-use super::weights::{WeightLiterals, Weights};
+use super::weights::{ShardWeightLiterals, WeightLiterals, Weights};
 use crate::flops::FlopsTally;
 use crate::kvcache::prefix::{hash_mix, hash_tokens};
-use crate::kvcache::{CacheSet, LayerCache, PrefixCache, PrefixEntry, PrefixLease};
+use crate::kvcache::{
+    BlockPool, CacheSet, LayerCache, PrefixCache, PrefixEntry, PrefixLease, ShardedLayerCache,
+};
 use crate::pruning::{
     fine_keep, global_keep, validate_keep, FineStrategy, GlobalInputs, GlobalStrategy,
 };
 use crate::runtime::literals::{lit_f32, lit_i32, lit_i32_scalar, to_vec_f32};
-use crate::runtime::{ArtifactDir, Runtime};
+use crate::runtime::{ArtifactDir, DeviceMesh, ShardDispatch};
 use crate::tokens::{Segment, EOS};
 
 /// Complete pruning configuration for one request.
@@ -222,6 +224,28 @@ pub fn select_token(logits: &[f32], s: &Sampling, step: usize) -> u32 {
     idx[k - 1] as u32
 }
 
+/// Host-side all-reduce: accumulate one shard's partial output literal
+/// into `acc`. Every mesh combine (logits partials, importance rows)
+/// goes through this one reduction so the single-token, batched, and
+/// prefill-shaped paths can never drift numerically.
+fn add_partial(acc: &mut [f32], part: &xla::Literal) -> Result<()> {
+    let part = to_vec_f32(part)?;
+    if acc.len() != part.len() {
+        // A silent zip-truncation here would sum only a prefix and emit
+        // wrong logits with no diagnostic (stale/re-lowered artifacts).
+        bail!(
+            "shard partial has {} elements, expected {} (artifact set \
+             out of sync with model.json?)",
+            part.len(),
+            acc.len()
+        );
+    }
+    for (a, p) in acc.iter_mut().zip(part) {
+        *a += p;
+    }
+    Ok(())
+}
+
 /// One prompt with its modality metadata.
 pub struct RequestInput<'a> {
     pub prompt: &'a [u32],
@@ -386,13 +410,61 @@ impl Generation {
     }
 }
 
-/// The engine: one model, one PJRT runtime, prebuilt weight literals.
+/// Per-front-layer K/V slabs produced by the prefill front stage, one
+/// `[Hs, src_n, dh]` slab per shard per layer. The fused tp_degree = 1
+/// front emits a single stacked `[g, H, src_n, dh]` pair (borrowed
+/// zero-copy as the one-shard case); the mesh front collects per-layer,
+/// per-shard slabs as it runs.
+enum FrontSlabs {
+    /// Fused front output: `[g, H, src_n, dh]` stacked K and V.
+    Stacked { ks: Vec<f32>, vs: Vec<f32>, stride: usize },
+    /// `layers[l][s]` = shard `s`'s `[Hs, src_n, dh]` K/V of layer `l`.
+    Sharded { layers: Vec<Vec<(Vec<f32>, Vec<f32>)>> },
+}
+
+struct FrontKv {
+    slabs: FrontSlabs,
+    /// Row count of every slab (the prefill bucket).
+    src_n: usize,
+}
+
+impl FrontKv {
+    fn shards(&self) -> usize {
+        match &self.slabs {
+            FrontSlabs::Stacked { .. } => 1,
+            FrontSlabs::Sharded { layers } => layers[0].len(),
+        }
+    }
+
+    /// Layer `l`, shard `s` K/V slab (`[Hs, src_n, dh]` row-major).
+    fn slab(&self, l: usize, s: usize) -> (&[f32], &[f32]) {
+        match &self.slabs {
+            FrontSlabs::Stacked { ks, vs, stride } => {
+                debug_assert_eq!(s, 0);
+                (&ks[l * stride..(l + 1) * stride], &vs[l * stride..(l + 1) * stride])
+            }
+            FrontSlabs::Sharded { layers } => {
+                let (k, v) = &layers[l][s];
+                (k, v)
+            }
+        }
+    }
+}
+
+/// The engine: one model on a device mesh (one PJRT runtime per logical
+/// device), prebuilt weight literals. The single-device engine is the
+/// `tp_degree = 1` case of the mesh executor — same struct, same code
+/// path, a mesh of one.
 pub struct ModelEngine {
     pub cfg: ModelConfig,
-    rt: Runtime,
+    mesh: DeviceMesh,
+    /// Devices the model is sharded over (`mesh.tp()`; 1 = unsharded).
+    tp: usize,
     art: ArtifactDir,
     weights: Weights,
     wlit: WeightLiterals,
+    /// Per-shard QKV/emb column slices (`None` at tp_degree = 1).
+    shard_wlit: Option<ShardWeightLiterals>,
     /// Lazily-built front slabs for non-default split depths (Fig. 4).
     front_slabs: HashMap<usize, Vec<xla::Literal>>,
     /// Shared AV-prefix KV cache (attached by the serving pool; `None`
@@ -402,7 +474,8 @@ pub struct ModelEngine {
     /// (`LayerCache::padded_kv_fill`) — the decode hot path allocates
     /// nothing per quantum. Sized once to the high-water bucket
     /// (largest decode bucket) and sliced per call, so alternating
-    /// small/large contexts never reallocate.
+    /// small/large contexts never reallocate. On the mesh path the
+    /// same buffers are reused shard-after-shard (literal builds copy).
     scratch_k: Vec<f32>,
     scratch_v: Vec<f32>,
     /// Batched-decode upload buffers: `[B, H, cap, dh]` at the joint
@@ -413,15 +486,57 @@ pub struct ModelEngine {
 
 impl ModelEngine {
     /// Load a model from `artifact_root/<model>` (artifacts + config) and
-    /// `artifact_root/<weights_dir>` (checkpoint).
+    /// `artifact_root/<weights_dir>` (checkpoint), unsharded.
     pub fn load(artifact_root: &std::path::Path, model: &str) -> Result<ModelEngine> {
+        Self::load_with_tp(artifact_root, model, 1)
+    }
+
+    /// [`Self::load`] at an explicit tensor-parallel degree: `tp > 1`
+    /// builds a [`DeviceMesh`] of `tp` devices, per-shard weight slices,
+    /// and requires the artifact set to carry the matching
+    /// `*_shard<s>of<tp>` entries (lowered when the python config's
+    /// `tp_degree` equals `tp`).
+    pub fn load_with_tp(
+        artifact_root: &std::path::Path,
+        model: &str,
+        tp: usize,
+    ) -> Result<ModelEngine> {
+        let tp = tp.max(1);
         let dir = artifact_root.join(model);
         let cfg = ModelConfig::load(&dir.join("model.json"))?;
         let art = ArtifactDir::open(&dir)?;
+        if tp > 1 {
+            if cfg.n_heads % tp != 0 || cfg.d_model % tp != 0 {
+                bail!(
+                    "tp {} must divide n_heads {} and d_model {}",
+                    tp,
+                    cfg.n_heads,
+                    cfg.d_model
+                );
+            }
+            let probe = format!("layer_shard0of{}", tp);
+            if !art.has_entry(&probe) {
+                bail!(
+                    "model '{}' has no '{}' artifacts — re-lower with tp_degree={} \
+                     (model.json was lowered with tp_degree={})",
+                    cfg.name,
+                    probe,
+                    tp,
+                    cfg.tp_degree
+                );
+            }
+        }
         let weights = Weights::load(&artifact_root.join(&cfg.weights_dir))?;
         weights.check(&cfg)?;
-        let wlit = WeightLiterals::build(&weights, &cfg)?;
-        let rt = Runtime::cpu()?;
+        // Mesh builds skip the fused-only literals (front slab, full-head
+        // QKV, tied unembedding) — the sharded artifacts never take them.
+        let wlit = WeightLiterals::build_with(&weights, &cfg, tp == 1)?;
+        let shard_wlit = if tp > 1 {
+            Some(ShardWeightLiterals::build(&weights, &cfg, tp)?)
+        } else {
+            None
+        };
+        let mesh = DeviceMesh::cpu(tp)?;
         // High-water scratch: one slab at the largest decode bucket per
         // K/V; shrinking bucket picks slice it instead of reallocating.
         let hw = cfg.seq_buckets.iter().copied().max().unwrap_or(0)
@@ -429,10 +544,12 @@ impl ModelEngine {
             * cfg.d_head;
         Ok(ModelEngine {
             cfg,
-            rt,
+            mesh,
+            tp,
             art,
             weights,
             wlit,
+            shard_wlit,
             front_slabs: HashMap::new(),
             prefix_cache: None,
             scratch_k: vec![0.0; hw],
@@ -440,6 +557,11 @@ impl ModelEngine {
             scratch_bk: Vec::new(),
             scratch_bv: Vec::new(),
         })
+    }
+
+    /// Tensor-parallel degree this engine executes at (mesh devices).
+    pub fn tp_degree(&self) -> usize {
+        self.tp
     }
 
     /// Attach a shared prefix cache. Subsequent `begin_generation` calls
@@ -479,6 +601,9 @@ impl ModelEngine {
         frame_of: &[i32],
         plan: &PruningPlan,
     ) -> Option<(u64, usize)> {
+        if self.tp != 1 {
+            return None; // sharded engines neither insert nor resume
+        }
         let cache = self.prefix_cache.as_ref()?;
         let g = plan.global_layer.unwrap_or(self.cfg.mid_layer);
         let base = self.prefix_config_key(plan, g)?;
@@ -494,34 +619,82 @@ impl ModelEngine {
         &self.art
     }
 
-    /// (compiled executables, total executions) — cache-health telemetry.
+    /// (compiled executables, total executions) summed over mesh devices
+    /// — cache-health telemetry.
     pub fn runtime_stats(&self) -> (usize, u64) {
-        (self.rt.cached(), self.rt.exec_count)
+        self.mesh.stats()
     }
 
-    /// Pre-compile the artifacts on the serving path (prefill at every
-    /// bucket, back/decode at every bucket, logits) so first-request
+    /// Pre-compile exactly the artifact set this engine dispatches
+    /// (fused entries at tp_degree = 1; the per-shard entries on their
+    /// own devices plus the combine stages on the mesh — the fused set
+    /// is unreachable there and is *not* compiled) so first-request
     /// latency excludes XLA compilation.
     pub fn warmup(&mut self) -> Result<()> {
-        let mut entries: Vec<String> = ["prefill_front", "back_layer", "decode_layer"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
-        for &bb in &self.cfg.batch_buckets {
-            let entry = format!("decode_batch{}", bb);
-            if self.art.has_entry(&entry) {
-                entries.push(entry);
+        if self.tp == 1 {
+            let mut entries: Vec<String> = ["prefill_front", "back_layer", "decode_layer"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            for &bb in &self.cfg.batch_buckets {
+                let entry = format!("decode_batch{}", bb);
+                if self.art.has_entry(&entry) {
+                    entries.push(entry);
+                }
             }
+            let mut paths = Vec::new();
+            for entry in &entries {
+                for &b in self.art.buckets(entry) {
+                    paths.push(self.art.path(entry, Some(b)));
+                }
+            }
+            paths.push(self.art.path("logits", None));
+            for &bb in self.art.buckets("logits_batch") {
+                paths.push(self.art.path("logits_batch", Some(bb)));
+            }
+            for p in paths {
+                self.mesh.load(&p)?;
+            }
+            return Ok(());
         }
+        // Mesh path. Combine stages run on device 0.
         let mut paths = Vec::new();
-        for entry in &entries {
-            for &b in self.art.buckets(entry) {
-                paths.push(self.art.path(entry, Some(b)));
-            }
+        for &b in self.art.buckets("layer_tail") {
+            paths.push(self.art.path("layer_tail", Some(b)));
         }
-        paths.push(self.art.path("logits", None));
+        paths.push(self.art.path("decode_tail", None));
+        for &bb in self.art.buckets("decode_batch_tail") {
+            paths.push(self.art.path("decode_batch_tail", Some(bb)));
+        }
         for p in paths {
-            self.rt.load(&p)?;
+            self.mesh.load(&p)?;
+        }
+        // Per-shard entries compile on their own devices.
+        for s in 0..self.tp {
+            let mut shard_paths = Vec::new();
+            for base in ["layer_shard", "decode_shard"] {
+                let entry = format!("{}{}of{}", base, s, self.tp);
+                for &b in self.art.buckets(&entry) {
+                    shard_paths.push(self.art.path(&entry, Some(b)));
+                }
+            }
+            for &bb in &self.cfg.batch_buckets {
+                let entry = format!("decode_batch{}_shard{}of{}", bb, s, self.tp);
+                for &b in self.art.buckets(&entry) {
+                    shard_paths.push(self.art.path(&entry, Some(b)));
+                }
+            }
+            let logits_entry = format!("logits_shard{}of{}", s, self.tp);
+            if self.art.has_entry(&logits_entry) {
+                shard_paths.push(self.art.path(&logits_entry, None));
+            }
+            let batch_logits_entry = format!("logits_batch_shard{}of{}", s, self.tp);
+            for &bb in self.art.buckets(&batch_logits_entry) {
+                shard_paths.push(self.art.path(&batch_logits_entry, Some(bb)));
+            }
+            for p in shard_paths {
+                self.mesh.load_on(s, &p)?;
+            }
         }
         Ok(())
     }
@@ -573,20 +746,97 @@ impl ModelEngine {
         Ok((lit_f32(&[bucket], &mask)?, lit_i32(&[bucket], &pos)?))
     }
 
-    /// Run the logits head on a hidden vector.
+    /// `<base><s>of<D>` — the per-shard artifact entry name.
+    fn shard_entry(&self, base: &str, s: usize) -> String {
+        format!("{}{}of{}", base, s, self.tp)
+    }
+
+    /// Run the logits head on a hidden vector. At tp > 1 each device
+    /// computes a vocab partial over its `d/D` column slice of the tied
+    /// unembedding; the partials are summed host-side (all-reduce).
     ///
     /// §Perf note: a device-resident-weights variant via `execute_b` was
     /// measured but the xla 0.1.6 PJRT wrapper appears to donate input
     /// buffers on execution (reuse segfaults); see EXPERIMENTS.md §Perf.
     fn logits(&mut self, x: &[f32]) -> Result<Vec<f32>> {
-        let path = self.art.path("logits", None);
         let x_lit = lit_f32(&[self.cfg.d_model], x)?;
-        let outs = self.rt.execute(&path, &[&x_lit, &self.wlit.ln_f, &self.wlit.emb])?;
-        to_vec_f32(&outs[0])
+        if self.tp == 1 {
+            let path = self.art.path("logits", None);
+            let emb = self.wlit.emb.as_ref().expect("fused build carries emb");
+            let outs = self.mesh.execute(&path, &[&x_lit, &self.wlit.ln_f, emb])?;
+            return to_vec_f32(&outs[0]);
+        }
+        let sw = self.shard_wlit.as_ref().expect("tp > 1 implies shard weights");
+        let dispatches: Vec<ShardDispatch> = (0..self.tp)
+            .map(|s| ShardDispatch {
+                path: self.art.path(&self.shard_entry("logits_shard", s), None),
+                inputs: vec![&x_lit, &self.wlit.ln_f, &sw.emb[s]],
+            })
+            .collect();
+        let outs = self.mesh.execute_sharded(&dispatches)?;
+        let mut sum = vec![0.0f32; self.cfg.vocab];
+        for shard in &outs {
+            add_partial(&mut sum, &shard[0])?;
+        }
+        Ok(sum)
+    }
+
+    /// Batched logits head: one `logits_batch` dispatch (or one
+    /// `logits_batch_shard` dispatch per device, partials summed) for all
+    /// `b` rows of `xs` (`[b, d]`, row-major). Falls back to `b`
+    /// single-vector [`Self::logits`] calls when the artifact set
+    /// predates the batched head. Padding rows beyond `b` are zero and
+    /// their (zero) logits rows are dropped.
+    fn logits_rows(&mut self, xs: &[f32], b: usize) -> Result<Vec<Vec<f32>>> {
+        let d = self.cfg.d_model;
+        debug_assert_eq!(xs.len() % d, 0);
+        let entry = if self.tp == 1 {
+            "logits_batch".to_string()
+        } else {
+            self.shard_entry("logits_batch_shard", 0)
+        };
+        let bucket = match self.art.pick_bucket(&entry, b) {
+            Ok(bb) if b >= 2 => bb,
+            _ => {
+                // No batched head (or a single row): per-row dispatches.
+                let mut rows = Vec::with_capacity(b);
+                for i in 0..b {
+                    rows.push(self.logits(&xs[i * d..(i + 1) * d])?);
+                }
+                return Ok(rows);
+            }
+        };
+        let mut x_pad = vec![0.0f32; bucket * d];
+        x_pad[..b * d].copy_from_slice(&xs[..b * d]);
+        let x_lit = lit_f32(&[bucket, d], &x_pad)?;
+        let flat = if self.tp == 1 {
+            let path = self.art.path("logits_batch", Some(bucket));
+            let emb = self.wlit.emb.as_ref().expect("fused build carries emb");
+            let outs = self.mesh.execute(&path, &[&x_lit, &self.wlit.ln_f, emb])?;
+            to_vec_f32(&outs[0])?
+        } else {
+            let sw = self.shard_wlit.as_ref().expect("tp > 1 implies shard weights");
+            let dispatches: Vec<ShardDispatch> = (0..self.tp)
+                .map(|s| ShardDispatch {
+                    path: self
+                        .art
+                        .path(&self.shard_entry("logits_batch_shard", s), Some(bucket)),
+                    inputs: vec![&x_lit, &self.wlit.ln_f, &sw.emb[s]],
+                })
+                .collect();
+            let outs = self.mesh.execute_sharded(&dispatches)?;
+            let mut sum = vec![0.0f32; bucket * self.cfg.vocab];
+            for shard in &outs {
+                add_partial(&mut sum, &shard[0])?;
+            }
+            sum
+        };
+        let vocab = self.cfg.vocab;
+        Ok((0..b).map(|i| flat[i * vocab..(i + 1) * vocab].to_vec()).collect())
     }
 
     /// Execute one back layer over the live rows. Returns (h', k, v, s)
-    /// as host vectors sized to the bucket.
+    /// as host vectors sized to the bucket (tp_degree = 1 fused path).
     fn run_back_layer(
         &mut self,
         layer: usize,
@@ -606,11 +856,98 @@ impl ModelEngine {
         for p in &self.wlit.per_layer[layer] {
             inputs.push(p);
         }
-        let outs = self.rt.execute(&path, &inputs)?;
+        let outs = self.mesh.execute(&path, &inputs)?;
         let [h_out, k, v, s]: [xla::Literal; 4] = outs
             .try_into()
             .map_err(|_| anyhow!("back_layer returned wrong arity"))?;
         Ok((to_vec_f32(&h_out)?, to_vec_f32(&k)?, to_vec_f32(&v)?, to_vec_f32(&s)?))
+    }
+
+    /// Execute one prefill-shaped layer on the mesh: D `layer_shard`
+    /// dispatches (one per device, each over its H/D heads), a host
+    /// combine (concat attention outputs in head order, sum importance
+    /// partials), and the `layer_tail` combine stage on device 0.
+    /// Returns `(h', per-shard [Hs, bucket, dh] K/V, s)`.
+    #[allow(clippy::type_complexity)]
+    fn run_layer_sharded(
+        &mut self,
+        layer: usize,
+        h_live: &[f32],
+        live_positions: &[i32],
+        bucket: usize,
+    ) -> Result<(Vec<f32>, Vec<(Vec<f32>, Vec<f32>)>, Vec<f32>)> {
+        let d = self.cfg.d_model;
+        let tp = self.tp;
+        let hs_width = d / tp; // Hs * dh
+        let n_live = live_positions.len();
+        let mut h_pad = vec![0.0f32; bucket * d];
+        h_pad[..n_live * d].copy_from_slice(&h_live[..n_live * d]);
+        let h_lit = lit_f32(&[bucket, d], &h_pad)?;
+        let (mask, pos) = self.mask_positions(live_positions, bucket)?;
+        let last_idx = lit_i32_scalar(n_live as i32 - 1)?;
+        let sw = self.shard_wlit.as_ref().expect("tp > 1 implies shard weights");
+        let ln1 = &self.wlit.per_layer[layer][0];
+        let dispatches: Vec<ShardDispatch> = (0..tp)
+            .map(|s| {
+                let mut inputs: Vec<&xla::Literal> = vec![&h_lit, &mask, &pos, &last_idx, ln1];
+                for w in &sw.qkv[layer][s] {
+                    inputs.push(w);
+                }
+                ShardDispatch {
+                    path: self
+                        .art
+                        .path(&self.shard_entry("layer_shard", s), Some(bucket)),
+                    inputs,
+                }
+            })
+            .collect();
+        let outs = self.mesh.execute_sharded(&dispatches)?;
+        // Combine: attention concat (head order), importance all-reduce.
+        let mut attn = vec![0.0f32; bucket * d];
+        let mut s_sum = vec![0.0f32; bucket];
+        let mut kv = Vec::with_capacity(tp);
+        for (s, shard) in outs.iter().enumerate() {
+            let [a, k, v, sp]: &[xla::Literal; 4] = shard
+                .as_slice()
+                .try_into()
+                .map_err(|_| anyhow!("layer_shard returned wrong arity"))?;
+            let a = to_vec_f32(a)?; // [bucket, Hs*dh]
+            for row in 0..bucket {
+                attn[row * d + s * hs_width..row * d + (s + 1) * hs_width]
+                    .copy_from_slice(&a[row * hs_width..(row + 1) * hs_width]);
+            }
+            add_partial(&mut s_sum, sp)?;
+            kv.push((to_vec_f32(k)?, to_vec_f32(v)?));
+        }
+        let attn_lit = lit_f32(&[bucket, d], &attn)?;
+        let tail_path = self.art.path("layer_tail", Some(bucket));
+        let pl = &self.wlit.per_layer[layer];
+        let mut tail_inputs: Vec<&xla::Literal> = vec![&h_lit, &attn_lit, &mask];
+        for p in &pl[pl.len() - 5..] {
+            tail_inputs.push(p);
+        }
+        let outs = self.mesh.execute(&tail_path, &tail_inputs)?;
+        let h_out = to_vec_f32(&outs[0])?;
+        Ok((h_out, kv, s_sum))
+    }
+
+    /// Unified prefill-shaped layer step: the fused single-device
+    /// artifact at tp_degree = 1 (one shard covering all heads), the
+    /// sharded mesh path otherwise. Returns `(h', per-shard K/V, s)`.
+    #[allow(clippy::type_complexity)]
+    fn run_layer(
+        &mut self,
+        layer: usize,
+        h_live: &[f32],
+        live_positions: &[i32],
+        bucket: usize,
+    ) -> Result<(Vec<f32>, Vec<(Vec<f32>, Vec<f32>)>, Vec<f32>)> {
+        if self.tp == 1 {
+            let (h, k, v, s) = self.run_back_layer(layer, h_live, live_positions, bucket)?;
+            Ok((h, vec![(k, v)], s))
+        } else {
+            self.run_layer_sharded(layer, h_live, live_positions, bucket)
+        }
     }
 
     /// Compact live-state vectors to a keep set (indices into live rows).
@@ -634,40 +971,60 @@ impl ModelEngine {
         *segments = new_s;
     }
 
+    /// Decode-path artifact entry whose bucket grid sizes caches: the
+    /// fused single-token entry at tp_degree = 1, shard 0's entry on the
+    /// mesh (all shards share one grid).
+    fn decode_entry(&self) -> String {
+        if self.tp == 1 {
+            "decode_layer".to_string()
+        } else {
+            self.shard_entry("decode_shard", 0)
+        }
+    }
+
+    /// Prefill-shaped layer entry whose bucket grid sizes back-layer
+    /// dispatches (fused at tp_degree = 1, shard 0's grid on the mesh).
+    fn layer_entry(&self) -> String {
+        if self.tp == 1 {
+            "back_layer".to_string()
+        } else {
+            self.shard_entry("layer_shard", 0)
+        }
+    }
+
     /// Cache capacity for a live set: the smallest decode bucket that fits
     /// `live + max_gen` appended tokens.
     fn cache_cap(&self, live: usize, max_gen: usize) -> Result<usize> {
-        self.art.pick_bucket("decode_layer", live + max_gen)
+        self.art.pick_bucket(&self.decode_entry(), live + max_gen)
     }
 
-    /// Build one front-layer cache by gathering `keep` rows from the
-    /// stacked prefill K/V output (layer stride `bucket_p`).
-    #[allow(clippy::too_many_arguments)]
+    /// Build one layer's (possibly sharded) cache by gathering `keep`
+    /// rows from that layer's per-shard prefill K/V slabs.
     fn front_cache(
         &self,
-        ks: &[f32],
-        vs: &[f32],
+        front: &FrontKv,
         layer: usize,
-        bucket_p: usize,
         keep: &[usize],
         cap: usize,
-    ) -> LayerCache {
-        let (h_n, dh) = (self.cfg.n_heads, self.cfg.d_head);
-        let stride = h_n * bucket_p * dh;
-        let src_k = &ks[layer * stride..(layer + 1) * stride];
-        let src_v = &vs[layer * stride..(layer + 1) * stride];
-        let mut cache = LayerCache::new(h_n, dh, cap);
-        let mut k_row = vec![0.0f32; h_n * dh];
-        let mut v_row = vec![0.0f32; h_n * dh];
-        for &orig in keep {
-            for h in 0..h_n {
-                let base = h * bucket_p * dh + orig * dh;
-                k_row[h * dh..(h + 1) * dh].copy_from_slice(&src_k[base..base + dh]);
-                v_row[h * dh..(h + 1) * dh].copy_from_slice(&src_v[base..base + dh]);
-            }
-            cache.append(&k_row, &v_row, orig as i32);
-        }
-        cache
+    ) -> ShardedLayerCache {
+        let dh = self.cfg.d_head;
+        let shards = (0..front.shards())
+            .map(|s| {
+                let (k, v) = front.slab(layer, s);
+                let heads = k.len() / (front.src_n * dh);
+                LayerCache::from_strided_rows(
+                    BlockPool::global(),
+                    heads,
+                    dh,
+                    cap,
+                    k,
+                    v,
+                    front.src_n,
+                    keep,
+                )
+            })
+            .collect();
+        ShardedLayerCache::from_shards(shards)
     }
 
     // ----------------------------------------------------------- generate
@@ -733,7 +1090,10 @@ impl ModelEngine {
             bail!("global_layer {} outside [1, {})", g, cfg.n_layers);
         }
         let front_entry = self.front_entry(g);
-        if !self.art.has_entry(&front_entry) {
+        // The mesh path runs the front per layer through `layer_shard`
+        // artifacts, which exist for every split depth; only the fused
+        // tp_degree = 1 path needs a per-split front artifact.
+        if self.tp == 1 && !self.art.has_entry(&front_entry) {
             bail!(
                 "model '{}' has no '{}' artifact (emit_splits off?)",
                 cfg.name,
@@ -752,41 +1112,64 @@ impl ModelEngine {
         let mut live_counts = vec![k; g];
         let t_prefill = Instant::now();
 
-        // --- Stage 1: fused front half (layers 0..g) over the full prompt.
-        let bucket_p = self.art.pick_bucket(&front_entry, k)?;
-        let mut x_emb = vec![0.0f32; bucket_p * d];
-        self.weights.embed_into(input.prompt, &mut x_emb);
-        let x_lit = lit_f32(&[bucket_p, d], &x_emb)?;
+        // --- Stage 1: front half (layers 0..g) over the full prompt —
+        // one fused dispatch at tp_degree = 1, g per-layer mesh rounds
+        // (D `layer_shard` dispatches + one `layer_tail`) otherwise.
         let all_pos: Vec<i32> = (0..k as i32).collect();
-        let (mask, pos) = self.mask_positions(&all_pos, bucket_p)?;
-        let path = self.art.path(&front_entry, Some(bucket_p));
-        self.ensure_front_slab(g)?;
-        let outs = {
-            // Disjoint field borrows: `slab` reads wlit/front_slabs while
-            // `self.rt.execute` mutates only `rt`.
-            let slab: &[xla::Literal] = if g == self.cfg.mid_layer {
-                &self.wlit.front
-            } else {
-                self.front_slabs.get(&g).unwrap()
+        let (h_rows, front) = if self.tp == 1 {
+            let bucket_p = self.art.pick_bucket(&front_entry, k)?;
+            let mut x_emb = vec![0.0f32; bucket_p * d];
+            self.weights.embed_into(input.prompt, &mut x_emb);
+            let x_lit = lit_f32(&[bucket_p, d], &x_emb)?;
+            let (mask, pos) = self.mask_positions(&all_pos, bucket_p)?;
+            let path = self.art.path(&front_entry, Some(bucket_p));
+            self.ensure_front_slab(g)?;
+            let outs = {
+                // Disjoint field borrows: `slab` reads wlit/front_slabs
+                // while `self.mesh.execute` mutates only `mesh`.
+                let slab: &[xla::Literal] = if g == self.cfg.mid_layer {
+                    &self.wlit.front
+                } else {
+                    self.front_slabs.get(&g).unwrap()
+                };
+                let mut inputs: Vec<&xla::Literal> = vec![&x_lit, &mask, &pos];
+                for p in slab {
+                    inputs.push(p);
+                }
+                self.mesh.execute(&path, &inputs)?
             };
-            let mut inputs: Vec<&xla::Literal> = vec![&x_lit, &mask, &pos];
-            for p in slab {
-                inputs.push(p);
+            let [h_lit, k_stack, v_stack]: [xla::Literal; 3] = outs
+                .try_into()
+                .map_err(|_| anyhow!("front returned wrong arity"))?;
+            let h_full = to_vec_f32(&h_lit)?; // [bucket_p, d]
+            let ks = to_vec_f32(&k_stack)?; // [g, H, bucket_p, dh]
+            let vs = to_vec_f32(&v_stack)?;
+            for _ in 0..g {
+                flops.add_prefill_layer(&fm, k, k);
             }
-            self.rt.execute(&path, &inputs)?
+            let stride = self.cfg.n_heads * bucket_p * self.cfg.d_head;
+            (
+                h_full[..k * d].to_vec(),
+                FrontKv { slabs: FrontSlabs::Stacked { ks, vs, stride }, src_n: bucket_p },
+            )
+        } else {
+            let bucket_p = self
+                .art
+                .pick_bucket(&self.shard_entry("layer_shard", 0), k)?;
+            let mut h = vec![0.0f32; k * d];
+            self.weights.embed_into(input.prompt, &mut h);
+            let mut layers = Vec::with_capacity(g);
+            for l in 0..g {
+                let (h2, kv, _s) = self.run_layer_sharded(l, &h, &all_pos, bucket_p)?;
+                h = h2[..k * d].to_vec();
+                layers.push(kv);
+                flops.add_prefill_layer(&fm, k, k);
+            }
+            (h, FrontKv { slabs: FrontSlabs::Sharded { layers }, src_n: bucket_p })
         };
-        let [h_lit, k_stack, v_stack]: [xla::Literal; 3] = outs
-            .try_into()
-            .map_err(|_| anyhow!("front returned wrong arity"))?;
-        let h_full = to_vec_f32(&h_lit)?; // [bucket_p, d]
-        let ks = to_vec_f32(&k_stack)?; // [g, H, bucket_p, dh]
-        let vs = to_vec_f32(&v_stack)?;
-        for _ in 0..g {
-            flops.add_prefill_layer(&fm, k, k);
-        }
 
         // Live state (rows of h, original positions, modality).
-        let mut h_live: Vec<f32> = h_full[..k * d].to_vec();
+        let mut h_live: Vec<f32> = h_rows;
         let mut positions: Vec<i32> = (0..k as i32).collect();
         let mut segments: Vec<Segment> = input.segments.to_vec();
 
@@ -817,16 +1200,18 @@ impl ModelEngine {
 
         let mut next_layer = g;
         let mut mid_scores: Option<Vec<f32>> = None;
-        let mut mid_kv: Option<(Vec<f32>, Vec<f32>, usize)> = None;
+        let mut mid_kv: Option<(Vec<(Vec<f32>, Vec<f32>)>, usize)> = None;
 
         if needs_scores {
-            let bucket = self.art.pick_bucket("back_layer", positions.len())?;
-            let (h2, k_out, v_out, s) = self.run_back_layer(g, &h_live, &positions, bucket)?;
+            let bucket = self
+                .art
+                .pick_bucket(&self.layer_entry(), positions.len())?;
+            let (h2, kv, s) = self.run_layer(g, &h_live, &positions, bucket)?;
             live_counts.push(positions.len());
             flops.add_prefill_layer(&fm, positions.len(), positions.len());
             h_live = h2[..positions.len() * d].to_vec();
             mid_scores = Some(s[..positions.len()].to_vec());
-            mid_kv = Some((k_out, v_out, bucket));
+            mid_kv = Some((kv, bucket));
             next_layer = g + 1;
         }
 
@@ -846,25 +1231,33 @@ impl ModelEngine {
         let mut caches = CacheSet::default();
         let cap_front = self.cache_cap(keep.len(), opts.max_gen)?;
         for l in 0..g {
-            caches.push(self.front_cache(&ks, &vs, l, bucket_p, &keep, cap_front));
+            caches.push(self.front_cache(&front, l, &keep, cap_front));
         }
-        if let Some((k_out, v_out, bucket)) = mid_kv {
+        if let Some((kv, bucket)) = mid_kv {
             let pos_then: Vec<i32> = (0..k as i32).collect();
             let cap = self.cache_cap(k, opts.max_gen)?;
-            caches.push(LayerCache::from_prefill(
-                cfg.n_heads,
+            caches.push(ShardedLayerCache::from_prefill_shards(
                 cfg.d_head,
                 cap,
-                &k_out,
-                &v_out,
+                &kv,
                 bucket,
                 k,
                 &pos_then,
             ));
         }
         // Publish the AV prefix for future same-sample requests (no-op
-        // when the plan is query-dependent or no cache is attached).
-        self.maybe_insert_prefix(input, opts, g, &keep, &ks, &vs, &h_full, bucket_p);
+        // when the plan is query-dependent, no cache is attached, or the
+        // engine is sharded — prefix entries store full-head caches).
+        // Gated on `!needs_scores` explicitly: stage 2 advances `h_live`
+        // through layer g for score-based strategies, so the rows are
+        // post-front only when it did not run. Today every score-based
+        // strategy is also unfingerprintable (the insert would no-op
+        // anyway), but this ties the two conditions together instead of
+        // relying on that invariant — a future fingerprintable scores
+        // strategy skips the insert rather than caching post-g rows.
+        if !needs_scores {
+            self.maybe_insert_prefix(input, opts, g, &keep, &front, &h_live);
+        }
         Self::compact_live(&mut h_live, &mut positions, &mut segments, &keep, d);
 
         Ok(Generation {
@@ -898,43 +1291,20 @@ impl ModelEngine {
         hash_mix(&[hash_tokens(3, &segs), hash_tokens(4, &frames)])
     }
 
-    /// Gather `rows` of a `[H, bucket_p, dh]` K/V slab pair into a fresh
-    /// paged cache allocated from `pool`.
-    #[allow(clippy::too_many_arguments)]
-    fn gather_cache(
-        pool: &crate::kvcache::BlockPool,
-        h_n: usize,
-        dh: usize,
-        bucket_p: usize,
-        src_k: &[f32],
-        src_v: &[f32],
-        rows: &[usize],
-        cap: usize,
-    ) -> LayerCache {
-        let mut c = LayerCache::new_in(pool.clone(), h_n, dh, cap);
-        let mut k_row = vec![0.0f32; h_n * dh];
-        let mut v_row = vec![0.0f32; h_n * dh];
-        for &orig in rows {
-            for h in 0..h_n {
-                let base = h * bucket_p * dh + orig * dh;
-                k_row[h * dh..(h + 1) * dh].copy_from_slice(&src_k[base..base + dh]);
-                v_row[h * dh..(h + 1) * dh].copy_from_slice(&src_v[base..base + dh]);
-            }
-            c.append(&k_row, &v_row, orig as i32);
-        }
-        c
-    }
-
     /// Attempt the warm-prefix resume. Returns `Ok(None)` — falling back
     /// to full prefill — whenever the request is not coverable: no cache
-    /// attached, query-dependent plan, no AV prefix / no text suffix, no
-    /// (or only partial) cached entry, or missing decode buckets.
+    /// attached, a sharded engine (entries store full-head caches),
+    /// query-dependent plan, no AV prefix / no text suffix, no (or only
+    /// partial) cached entry, or missing decode buckets.
     fn try_begin_from_prefix(
         &mut self,
         input: &RequestInput,
         opts: &GenerateOptions,
         g: usize,
     ) -> Result<Option<Generation>> {
+        if self.tp != 1 {
+            return Ok(None);
+        }
         let Some(cache) = self.prefix_cache.clone() else { return Ok(None) };
         let Some(base_cfg) = self.prefix_config_key(&opts.plan, g) else { return Ok(None) };
         let k = input.prompt.len();
@@ -952,17 +1322,13 @@ impl ModelEngine {
         let Ok(temp_cap) = self.art.pick_bucket("decode_layer", k) else {
             return Ok(None);
         };
-        // Exact match only: budget-matched strategies (e.g. Random)
-        // select over the whole AV set, so a shorter covered prefix
-        // would yield a different keep set.
-        let Some(lease) = cache.lookup_exact(cfg_key, &input.prompt[..p_max]) else {
-            return Ok(None);
-        };
         let d = self.cfg.d_model;
         let fm = self.fm();
         let p = p_max;
         // Positional plans never consult scores/rollout, so the keep set
-        // is computable host-side without running any layer.
+        // is computable host-side without running any layer — *before*
+        // the lookup, so a keep-set mismatch below is counted as a miss
+        // (nothing reused), never as a hit.
         let ginp = GlobalInputs {
             segments: input.segments,
             frame_of: input.frame_of,
@@ -976,20 +1342,21 @@ impl ModelEngine {
             .map_err(|e| anyhow!("global keep invalid: {}", e))?;
         let cap_front = self.cache_cap(keep.len(), opts.max_gen)?;
         let keep_pre = keep.iter().take_while(|&&i| i < p).count();
-        {
-            let entry = lease.entry();
-            // The entry's keep∩prefix rows must be exactly this
-            // request's keep∩prefix (the key guarantees it; cheap check).
-            if entry.keep_positions.len() != keep_pre
-                || entry
+        // Exact match only: budget-matched strategies (e.g. Random)
+        // select over the whole AV set, so a shorter covered prefix
+        // would yield a different keep set. The predicate checks the
+        // entry's keep∩prefix rows are exactly this request's (the key
+        // guarantees it; cheap check) — a mismatch counts as a miss.
+        let Some(lease) = cache.lookup_exact_where(cfg_key, &input.prompt[..p_max], |entry| {
+            entry.keep_positions.len() == keep_pre
+                && entry
                     .keep_positions
                     .iter()
                     .zip(keep.iter())
-                    .any(|(&a, &b)| a != b as i32)
-            {
-                return Ok(None);
-            }
-        }
+                    .all(|(&a, &b)| a == b as i32)
+        }) else {
+            return Ok(None);
+        };
 
         let t0 = Instant::now();
         let mut flops = FlopsTally::default();
@@ -1016,7 +1383,7 @@ impl ModelEngine {
             let mut x: Vec<f32> = self.weights.embed(input.prompt[j]).to_vec();
             for (l, fc) in full.iter_mut().enumerate() {
                 let ctx = fc.len() + 1;
-                let (x2, k_new, v_new, _s) = self.decode_one(l, &x, j as i32, fc)?;
+                let (x2, k_new, v_new, _s) = self.decode_one_single(l, &x, j as i32, fc)?;
                 fc.append(&k_new, &v_new, j as i32);
                 front[l].append(&k_new, &v_new, j as i32);
                 x = x2;
@@ -1039,7 +1406,7 @@ impl ModelEngine {
             .collect();
         let mut caches = CacheSet::default();
         for c in front {
-            caches.push(c);
+            caches.push_single(c); // resume path is tp_degree = 1 only
         }
         caches.update_peak();
 
@@ -1071,18 +1438,21 @@ impl ModelEngine {
     /// prefix into the shared cache: per-front-layer K/V for all prefix
     /// rows (resume attention), keep∩prefix K/V (future generations'
     /// front caches), and the post-front hidden rows for keep∩prefix.
-    #[allow(clippy::too_many_arguments)]
+    /// `h_rows` are the post-front hidden states for the full prompt
+    /// (`[k, d]`, pre-compaction). No-op on a sharded engine — entries
+    /// store full-head caches and the resume path is tp_degree = 1 only.
     fn maybe_insert_prefix(
         &self,
         input: &RequestInput,
         opts: &GenerateOptions,
         g: usize,
         keep: &[usize],
-        ks: &[f32],
-        vs: &[f32],
-        h_full: &[f32],
-        bucket_p: usize,
+        front: &FrontKv,
+        h_rows: &[f32],
     ) {
+        if self.tp != 1 {
+            return;
+        }
         let Some(cache) = self.prefix_cache.as_ref() else { return };
         let Some(base_cfg) = self.prefix_config_key(&opts.plan, g) else { return };
         let k = input.prompt.len();
@@ -1102,29 +1472,34 @@ impl ModelEngine {
         let pool = cache.pool().clone();
         let all_rows: Vec<usize> = (0..p).collect();
         let keep_pre: Vec<usize> = keep.iter().copied().take_while(|&i| i < p).collect();
-        let stride = h_n * bucket_p * dh;
         let mut full_layers = Vec::with_capacity(g);
         let mut keep_layers = Vec::with_capacity(g);
         for l in 0..g {
-            let src_k = &ks[l * stride..(l + 1) * stride];
-            let src_v = &vs[l * stride..(l + 1) * stride];
-            full_layers.push(Self::gather_cache(
-                &pool, h_n, dh, bucket_p, src_k, src_v, &all_rows, p,
-            ));
-            keep_layers.push(Self::gather_cache(
-                &pool,
+            let (src_k, src_v) = front.slab(l, 0);
+            full_layers.push(LayerCache::from_strided_rows(
+                pool.clone(),
                 h_n,
                 dh,
-                bucket_p,
+                p,
                 src_k,
                 src_v,
-                &keep_pre,
+                front.src_n,
+                &all_rows,
+            ));
+            keep_layers.push(LayerCache::from_strided_rows(
+                pool.clone(),
+                h_n,
+                dh,
                 keep_pre.len().max(1),
+                src_k,
+                src_v,
+                front.src_n,
+                &keep_pre,
             ));
         }
         let mut h_keep = Vec::with_capacity(keep_pre.len() * d);
         for &i in &keep_pre {
-            h_keep.extend_from_slice(&h_full[i * d..(i + 1) * d]);
+            h_keep.extend_from_slice(&h_rows[i * d..(i + 1) * d]);
         }
         let entry = PrefixEntry {
             prefix_len: p,
@@ -1161,27 +1536,20 @@ impl ModelEngine {
         // Hot path (one call per scheduling quantum): copy the scalar
         // dims instead of cloning the whole config.
         let fm = self.fm();
-        let (d, n_heads, d_head, n_layers) = (
-            self.cfg.d_model,
-            self.cfg.n_heads,
-            self.cfg.d_head,
-            self.cfg.n_layers,
-        );
+        let (d, d_head, n_layers) =
+            (self.cfg.d_model, self.cfg.d_head, self.cfg.n_layers);
         let l = gen.next_layer;
         let n_live = gen.positions.len();
         gen.live_counts.push(n_live);
-        let bucket = self.art.pick_bucket("back_layer", n_live)?;
-        let (h2, k_out, v_out, s) =
-            self.run_back_layer(l, &gen.h_live, &gen.positions, bucket)?;
+        let bucket = self.art.pick_bucket(&self.layer_entry(), n_live)?;
+        let (h2, kv, s) = self.run_layer(l, &gen.h_live, &gen.positions, bucket)?;
         gen.flops.add_prefill_layer(&fm, n_live, n_live);
         gen.h_live = h2[..n_live * d].to_vec();
         let cap = self.cache_cap(n_live, gen.opts.max_gen)?;
-        gen.caches.push(LayerCache::from_prefill(
-            n_heads,
+        gen.caches.push(ShardedLayerCache::from_prefill_shards(
             d_head,
             cap,
-            &k_out,
-            &v_out,
+            &kv,
             bucket,
             n_live,
             &gen.positions,
@@ -1216,12 +1584,13 @@ impl ModelEngine {
         Ok(StepEvent::Token(first_tok))
     }
 
-    /// Run one layer of the single-token decode artifact over `cache`
-    /// (growing it to the next bucket first if full). Returns
-    /// `(x', k_new, v_new, s)`; the caller appends `k_new`/`v_new`. This
-    /// is the decode loop's inner step *and* the prefix-resume path's way
-    /// of pushing a text-suffix token through the front half.
-    fn decode_one(
+    /// Run one layer of the fused single-token decode artifact over a
+    /// full-head `cache` (growing it to the next bucket first if full).
+    /// Returns `(x', k_new, v_new, s)`; the caller appends
+    /// `k_new`/`v_new`. This is the tp_degree = 1 decode loop's inner
+    /// step *and* the prefix-resume path's way of pushing a text-suffix
+    /// token through the front half.
+    fn decode_one_single(
         &mut self,
         layer: usize,
         x: &[f32],
@@ -1259,7 +1628,7 @@ impl ModelEngine {
         for p in &self.wlit.per_layer[layer] {
             inputs.push(p);
         }
-        let outs = self.rt.execute(&path, &inputs)?;
+        let outs = self.mesh.execute(&path, &inputs)?;
         let [x2, k_new, v_new, s_lit]: [xla::Literal; 4] = outs
             .try_into()
             .map_err(|_| anyhow!("decode_layer returned wrong arity"))?;
@@ -1271,8 +1640,98 @@ impl ModelEngine {
         ))
     }
 
+    /// One layer of a single-token decode step on the mesh: D
+    /// `decode_shard` dispatches (each over its shard's paged block
+    /// list), host combine (concat attention, sum importance partials),
+    /// and the `decode_tail` stage on device 0. Returns the same
+    /// `(x', k_new, v_new, s)` shape as the fused path, with
+    /// `k_new`/`v_new` as full-head head-major rows (shard concat).
+    fn decode_one_sharded(
+        &mut self,
+        layer: usize,
+        x: &[f32],
+        pos: i32,
+        cache: &mut ShardedLayerCache,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (d, d_head, tp) = (self.cfg.d_model, self.cfg.d_head, self.tp);
+        let hs = self.cfg.n_heads / tp;
+        let hs_width = hs * d_head;
+        if cache.len() + 1 > cache.cap() {
+            let new_cap = self
+                .art
+                .pick_bucket(&self.decode_entry(), cache.len() + 1)?;
+            cache.grow(new_cap);
+        }
+        let cap = cache.cap();
+        let cur_idx = cache.len();
+        let mut mask = cache.mask();
+        mask[cur_idx] = 1.0;
+        let x_lit = lit_f32(&[d], x)?;
+        let pos_lit = lit_i32_scalar(pos)?;
+        let idx_lit = lit_i32_scalar(cur_idx as i32)?;
+        let m_lit = lit_f32(&[cap], &mask)?;
+        // Per-shard uploads straight from each shard's block list; the
+        // scratch pair is reused shard-after-shard (literal builds copy).
+        let elems = hs_width * cap;
+        if self.scratch_k.len() < elems {
+            self.scratch_k.resize(elems, 0.0);
+            self.scratch_v.resize(elems, 0.0);
+        }
+        let mut kcs = Vec::with_capacity(tp);
+        let mut vcs = Vec::with_capacity(tp);
+        for s in 0..tp {
+            cache.shard(s).padded_kv_fill(
+                cap,
+                &mut self.scratch_k[..elems],
+                &mut self.scratch_v[..elems],
+            );
+            kcs.push(lit_f32(&[hs, cap, d_head], &self.scratch_k[..elems])?);
+            vcs.push(lit_f32(&[hs, cap, d_head], &self.scratch_v[..elems])?);
+        }
+        let sw = self.shard_wlit.as_ref().expect("tp > 1 implies shard weights");
+        let ln1 = &self.wlit.per_layer[layer][0];
+        let dispatches: Vec<ShardDispatch> = (0..tp)
+            .map(|s| {
+                let mut inputs: Vec<&xla::Literal> =
+                    vec![&x_lit, &pos_lit, &idx_lit, &kcs[s], &vcs[s], &m_lit, ln1];
+                for w in &sw.qkv[layer][s] {
+                    inputs.push(w);
+                }
+                ShardDispatch {
+                    path: self.art.path(&self.shard_entry("decode_shard", s), Some(cap)),
+                    inputs,
+                }
+            })
+            .collect();
+        let outs = self.mesh.execute_sharded(&dispatches)?;
+        let mut attn = vec![0.0f32; d];
+        let mut k_new = vec![0.0f32; d];
+        let mut v_new = vec![0.0f32; d];
+        let mut s_sum = vec![0.0f32; cap];
+        for (s, shard) in outs.iter().enumerate() {
+            let [a, kn, vn, sp]: &[xla::Literal; 4] = shard
+                .as_slice()
+                .try_into()
+                .map_err(|_| anyhow!("decode_shard returned wrong arity"))?;
+            attn[s * hs_width..(s + 1) * hs_width].copy_from_slice(&to_vec_f32(a)?);
+            k_new[s * hs_width..(s + 1) * hs_width].copy_from_slice(&to_vec_f32(kn)?);
+            v_new[s * hs_width..(s + 1) * hs_width].copy_from_slice(&to_vec_f32(vn)?);
+            add_partial(&mut s_sum, sp)?;
+        }
+        let attn_lit = lit_f32(&[d], &attn)?;
+        let tail_path = self.art.path("decode_tail", None);
+        let pl = &self.wlit.per_layer[layer];
+        let mut tail_inputs: Vec<&xla::Literal> = vec![&x_lit, &attn_lit];
+        for p in &pl[pl.len() - 5..] {
+            tail_inputs.push(p);
+        }
+        let outs = self.mesh.execute(&tail_path, &tail_inputs)?;
+        Ok((to_vec_f32(&outs[0])?, k_new, v_new, s_sum))
+    }
+
     /// One decode step over the per-layer caches: every layer advances
-    /// one token, then the logits head selects the next token.
+    /// one token (fused dispatch at tp_degree = 1, shard fan-out +
+    /// combine on the mesh), then the logits head selects the next token.
     fn decode_step(&mut self, gen: &mut Generation) -> Result<StepEvent> {
         let t0 = Instant::now();
         // Hot path (one call per decode token): no config clone.
@@ -1284,8 +1743,11 @@ impl ModelEngine {
         let mut x: Vec<f32> = self.weights.embed(cur).to_vec();
         for l in 0..n_layers {
             let ctx = gen.caches.layers[l].len() + 1;
-            let (x2, k_new, v_new, s) =
-                self.decode_one(l, &x, pos, &mut gen.caches.layers[l])?;
+            let (x2, k_new, v_new, s) = if self.tp == 1 {
+                self.decode_one_single(l, &x, pos, gen.caches.layers[l].primary_mut())?
+            } else {
+                self.decode_one_sharded(l, &x, pos, &mut gen.caches.layers[l])?
+            };
             x = x2;
             gen.caches.layers[l].append(&k_new, &v_new, pos);
             gen.flops.add_decode_layer(&fm, ctx);
@@ -1341,15 +1803,26 @@ impl ModelEngine {
         }
     }
 
+    /// Batched-decode artifact entry base for batch bucket `bb` (the
+    /// fused all-head artifact at tp_degree = 1, shard 0's entry on the
+    /// mesh — all shards are lowered together).
+    fn batch_entry_name(&self, bb: usize) -> String {
+        if self.tp == 1 {
+            format!("decode_batch{}", bb)
+        } else {
+            format!("decode_batch{}_shard0of{}", bb, self.tp)
+        }
+    }
+
     /// Smallest configured batch bucket that fits `b` requests *and* has
-    /// a lowered `decode_batch<bb>` artifact; `None` = no batched path.
+    /// a lowered batched-decode artifact; `None` = no batched path.
     fn batch_entry(&self, b: usize) -> Option<(usize, String)> {
         self.cfg
             .batch_buckets
             .iter()
             .copied()
             .filter(|&bb| bb >= b)
-            .map(|bb| (bb, format!("decode_batch{}", bb)))
+            .map(|bb| (bb, self.batch_entry_name(bb)))
             .find(|(_, e)| self.art.has_entry(e))
     }
 
@@ -1360,7 +1833,7 @@ impl ModelEngine {
             .batch_buckets
             .iter()
             .copied()
-            .filter(|&bb| self.art.has_entry(&format!("decode_batch{}", bb)))
+            .filter(|&bb| self.art.has_entry(&self.batch_entry_name(bb)))
             .max()
             .unwrap_or(1)
     }
@@ -1431,19 +1904,7 @@ impl ModelEngine {
                     c.grow(cap); // logical re-target; paged — no copy
                 }
             }
-            let per = n_heads * cap * d_head;
             let ctxs: Vec<usize> = gens.iter().map(|g| g.caches.layers[l].len()).collect();
-            {
-                let caches: Vec<&LayerCache> =
-                    gens.iter().map(|g| &g.caches.layers[l]).collect();
-                LayerCache::padded_kv_batch_into(
-                    &caches,
-                    bb,
-                    cap,
-                    &mut self.scratch_bk,
-                    &mut self.scratch_bv,
-                );
-            }
             let mut mask = vec![0.0f32; bb * cap];
             let mut cur_idx = vec![0i32; bb];
             for (i, &ctx) in ctxs.iter().enumerate() {
@@ -1451,26 +1912,124 @@ impl ModelEngine {
                 mask[i * cap..i * cap + ctx + 1].fill(1.0);
                 cur_idx[i] = ctx as i32;
             }
-            let elems = bb * per;
             let x_lit = lit_f32(&[bb, d], &x_all)?;
-            let kc = lit_f32(&[bb, n_heads, cap, d_head], &self.scratch_bk[..elems])?;
-            let vc = lit_f32(&[bb, n_heads, cap, d_head], &self.scratch_bv[..elems])?;
             let m_lit = lit_f32(&[bb, cap], &mask)?;
             let ci_lit = lit_i32(&[bb], &cur_idx)?;
-            let path = self.art.path(&entry, Some(cap));
-            let mut inputs: Vec<&xla::Literal> =
-                vec![&x_lit, &pos_lit, &ci_lit, &kc, &vc, &m_lit];
-            for p in &self.wlit.per_layer[l] {
-                inputs.push(p);
+            let x2: Vec<f32>;
+            let kn: Vec<f32>;
+            let vn: Vec<f32>;
+            let sv: Vec<f32>;
+            if self.tp == 1 {
+                let per = n_heads * cap * d_head;
+                {
+                    let caches: Vec<&LayerCache> =
+                        gens.iter().map(|g| g.caches.layers[l].primary()).collect();
+                    LayerCache::padded_kv_batch_into(
+                        &caches,
+                        bb,
+                        cap,
+                        &mut self.scratch_bk,
+                        &mut self.scratch_bv,
+                    );
+                }
+                let elems = bb * per;
+                let kc = lit_f32(&[bb, n_heads, cap, d_head], &self.scratch_bk[..elems])?;
+                let vc = lit_f32(&[bb, n_heads, cap, d_head], &self.scratch_bv[..elems])?;
+                let path = self.art.path(&entry, Some(cap));
+                let mut inputs: Vec<&xla::Literal> =
+                    vec![&x_lit, &pos_lit, &ci_lit, &kc, &vc, &m_lit];
+                for p in &self.wlit.per_layer[l] {
+                    inputs.push(p);
+                }
+                let outs = self.mesh.execute(&path, &inputs)?;
+                let [x2_lit, k_lit, v_lit, s_lit]: [xla::Literal; 4] = outs
+                    .try_into()
+                    .map_err(|_| anyhow!("decode_batch returned wrong arity"))?;
+                x2 = to_vec_f32(&x2_lit)?; // [bb, d]
+                kn = to_vec_f32(&k_lit)?; // [bb, H, dh]
+                vn = to_vec_f32(&v_lit)?;
+                sv = to_vec_f32(&s_lit)?; // [bb, cap]
+            } else {
+                // Mesh path: one decode_batch shard dispatch per device
+                // over that shard's block lists, then the batch tail.
+                let tp = self.tp;
+                let hs = n_heads / tp;
+                let hs_width = hs * d_head;
+                let per = hs_width * cap;
+                let mut kcs = Vec::with_capacity(tp);
+                let mut vcs = Vec::with_capacity(tp);
+                for s in 0..tp {
+                    {
+                        let caches: Vec<&LayerCache> =
+                            gens.iter().map(|g| g.caches.layers[l].shard(s)).collect();
+                        LayerCache::padded_kv_batch_into(
+                            &caches,
+                            bb,
+                            cap,
+                            &mut self.scratch_bk,
+                            &mut self.scratch_bv,
+                        );
+                    }
+                    let elems = bb * per;
+                    kcs.push(lit_f32(&[bb, hs, cap, d_head], &self.scratch_bk[..elems])?);
+                    vcs.push(lit_f32(&[bb, hs, cap, d_head], &self.scratch_bv[..elems])?);
+                }
+                let sw = self.shard_wlit.as_ref().expect("tp > 1 implies shard weights");
+                let ln1 = &self.wlit.per_layer[l][0];
+                let dispatches: Vec<ShardDispatch> = (0..tp)
+                    .map(|s| {
+                        let mut inputs: Vec<&xla::Literal> =
+                            vec![&x_lit, &pos_lit, &ci_lit, &kcs[s], &vcs[s], &m_lit, ln1];
+                        for w in &sw.qkv[l][s] {
+                            inputs.push(w);
+                        }
+                        ShardDispatch {
+                            path: self.art.path(
+                                &format!("decode_batch{}_shard{}of{}", bb, s, tp),
+                                Some(cap),
+                            ),
+                            inputs,
+                        }
+                    })
+                    .collect();
+                let outs = self.mesh.execute_sharded(&dispatches)?;
+                let mut attn = vec![0.0f32; bb * d];
+                let mut k_all = vec![0.0f32; bb * d];
+                let mut v_all = vec![0.0f32; bb * d];
+                let mut s_all = vec![0.0f32; bb * cap];
+                for (s, shard) in outs.iter().enumerate() {
+                    let [a, k_lit, v_lit, s_lit]: &[xla::Literal; 4] = shard
+                        .as_slice()
+                        .try_into()
+                        .map_err(|_| anyhow!("decode_batch shard returned wrong arity"))?;
+                    let a = to_vec_f32(a)?; // [bb, hs*dh]
+                    let k_part = to_vec_f32(k_lit)?; // [bb, hs, dh]
+                    let v_part = to_vec_f32(v_lit)?;
+                    for i in 0..bb {
+                        let dst = i * d + s * hs_width;
+                        attn[dst..dst + hs_width]
+                            .copy_from_slice(&a[i * hs_width..(i + 1) * hs_width]);
+                        k_all[dst..dst + hs_width]
+                            .copy_from_slice(&k_part[i * hs_width..(i + 1) * hs_width]);
+                        v_all[dst..dst + hs_width]
+                            .copy_from_slice(&v_part[i * hs_width..(i + 1) * hs_width]);
+                    }
+                    add_partial(&mut s_all, s_lit)?;
+                }
+                let attn_lit = lit_f32(&[bb, d], &attn)?;
+                let tail_path = self.art.path("decode_batch_tail", Some(bb));
+                let pl = &self.wlit.per_layer[l];
+                let mut tail_inputs: Vec<&xla::Literal> = vec![&x_lit, &attn_lit];
+                for p in &pl[pl.len() - 5..] {
+                    tail_inputs.push(p);
+                }
+                let tail_outs = self.mesh.execute(&tail_path, &tail_inputs)?;
+                x2 = to_vec_f32(&tail_outs[0])?;
+                kn = k_all;
+                vn = v_all;
+                sv = s_all;
             }
-            let outs = self.rt.execute(&path, &inputs)?;
-            let [x2, k_new, v_new, s_lit]: [xla::Literal; 4] = outs
-                .try_into()
-                .map_err(|_| anyhow!("decode_batch returned wrong arity"))?;
-            x_all = to_vec_f32(&x2)?; // [bb, d]
-            let kn = to_vec_f32(&k_new)?; // [bb, H, dh]
-            let vn = to_vec_f32(&v_new)?;
-            let sv = to_vec_f32(&s_lit)?; // [bb, cap]
+            x_all = x2;
             let row = n_heads * d_head;
             for (i, g) in gens.iter_mut().enumerate() {
                 g.caches.layers[l].append(
@@ -1483,12 +2042,14 @@ impl ModelEngine {
             }
         }
 
-        // Logits head + sampling per generation (single-vector head).
+        // Logits head + sampling: one batched-head dispatch for the whole
+        // quantum when the artifact set carries `logits_batch` buckets
+        // (per-request single-vector dispatches otherwise).
+        let rows = self.logits_rows(&x_all[..b * d], b)?;
         let mut out = Vec::with_capacity(b);
         for (i, g) in gens.iter_mut().enumerate() {
             g.caches.update_peak();
-            let lg = self.logits(&x_all[i * d..(i + 1) * d])?;
-            let tok = select_token(&lg, &g.opts.sampling, g.tokens.len());
+            let tok = select_token(&rows[i], &g.opts.sampling, g.tokens.len());
             g.flops.add_logits(&fm);
             g.tokens.push(tok);
             g.decode_steps += 1;
@@ -1531,8 +2092,10 @@ impl ModelEngine {
         let needed = prompt_len + max_gen;
         let cap = self
             .art
-            .pick_bucket("decode_layer", needed)
+            .pick_bucket(&self.decode_entry(), needed)
             .unwrap_or(needed);
+        // Sharding splits the same rows by head range; the total is
+        // unchanged (each shard holds n_heads/D of this).
         LayerCache::slab_bytes(self.cfg.n_heads, self.cfg.d_head, cap) * self.cfg.n_layers
     }
 
@@ -1554,7 +2117,7 @@ impl ModelEngine {
         for p in &self.wlit.full_stack {
             inputs.push(p);
         }
-        let outs = self.rt.execute(&path, &inputs)?;
+        let outs = self.mesh.execute(&path, &inputs)?;
         let [rollout, attn]: [xla::Literal; 2] = outs
             .try_into()
             .map_err(|_| anyhow!("calib_probe returned wrong arity"))?;

@@ -16,4 +16,4 @@ pub use engine::{
     GenerateOptions, GenerateResult, Generation, ModelEngine, PruningPlan, RequestInput,
     StepEvent,
 };
-pub use weights::{WeightLiterals, Weights};
+pub use weights::{ShardWeightLiterals, WeightLiterals, Weights};

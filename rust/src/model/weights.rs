@@ -140,34 +140,64 @@ impl Weights {
 }
 
 /// Prebuilt literals for every artifact parameter slot — built once at
-/// engine startup, reused across all requests.
+/// engine startup, reused across all requests. A **mesh-only** build
+/// (`with_fused == false`, used at tp_degree > 1) skips every literal
+/// only the fused single-device artifacts consume — the front slab, the
+/// per-layer full-head QKV projections (dispatched from
+/// [`ShardWeightLiterals`] column slices instead), and the tied
+/// unembedding — which would otherwise roughly double the resident
+/// weight bytes per device group.
 pub struct WeightLiterals {
-    /// 9 stacked `[mid, ...]` literals for `prefill_front`.
+    /// 9 stacked `[mid, ...]` literals for `prefill_front` (empty on a
+    /// mesh-only build — the sharded front runs per layer).
     pub front: Vec<Literal>,
-    /// 9 stacked `[L, ...]` literals for `calib_probe`.
+    /// 9 stacked `[L, ...]` literals for `calib_probe` (always built;
+    /// calibration/rollout probes are unsharded on any mesh).
     pub full_stack: Vec<Literal>,
-    /// `per_layer[l]` = 9 single-layer literals for back/decode layers.
+    /// `per_layer[l]` = single-layer literals for back/decode layers:
+    /// `[ln1, wq, wk, wv, wo, ln2, wg, wu, wd]` on a fused build,
+    /// `[ln1, wo, ln2, wg, wu, wd]` on a mesh-only build. `[0]` is
+    /// always ln1 and the last 5 are always the combine-stage params.
     pub per_layer: Vec<Vec<Literal>>,
-    /// `ln_f` and `emb` for the logits head.
+    /// `ln_f` for the logits head (fused and per-shard alike).
     pub ln_f: Literal,
-    pub emb: Literal,
+    /// Tied unembedding for the fused logits head; `None` on a
+    /// mesh-only build (logits dispatch per-shard emb column slices).
+    pub emb: Option<Literal>,
 }
 
 impl WeightLiterals {
+    /// Full (fused single-device) build.
     pub fn build(w: &Weights, cfg: &ModelConfig) -> Result<WeightLiterals> {
+        Self::build_with(w, cfg, true)
+    }
+
+    /// Build with or without the fused-artifact literals (see type doc).
+    pub fn build_with(
+        w: &Weights,
+        cfg: &ModelConfig,
+        with_fused: bool,
+    ) -> Result<WeightLiterals> {
         let l = cfg.n_layers;
         let mid = cfg.mid_layer;
         let mut front = Vec::with_capacity(9);
         let mut full_stack = Vec::with_capacity(9);
         let mut per_layer: Vec<Vec<Literal>> = (0..l).map(|_| Vec::with_capacity(9)).collect();
-        for t in &w.layers {
+        for (i, t) in w.layers.iter().enumerate() {
             let row = t.elems() / t.shape[0];
             let inner: Vec<usize> = t.shape[1..].to_vec();
-            // Front slab: first `mid` rows, contiguous.
-            let mut front_shape = vec![mid];
-            front_shape.extend(&inner);
-            front.push(lit_f32(&front_shape, &t.data[..mid * row])?);
+            if with_fused {
+                // Front slab: first `mid` rows, contiguous.
+                let mut front_shape = vec![mid];
+                front_shape.extend(&inner);
+                front.push(lit_f32(&front_shape, &t.data[..mid * row])?);
+            }
             full_stack.push(lit_f32(&t.shape, &t.data)?);
+            // LAYER_PARAM_NAMES order: wq/wk/wv are tensors 1..=3 — on a
+            // mesh-only build they ship as per-shard column slices only.
+            if !with_fused && (1..=3).contains(&i) {
+                continue;
+            }
             for (li, slot) in per_layer.iter_mut().enumerate() {
                 slot.push(lit_f32(&inner, &t.data[li * row..(li + 1) * row])?);
             }
@@ -177,8 +207,74 @@ impl WeightLiterals {
             full_stack,
             per_layer,
             ln_f: lit_f32(&w.ln_f.shape, &w.ln_f.data)?,
-            emb: lit_f32(&w.emb.shape, &w.emb.data)?,
+            emb: if with_fused {
+                Some(lit_f32(&w.emb.shape, &w.emb.data)?)
+            } else {
+                None
+            },
         })
+    }
+}
+
+/// Per-shard weight literals for the device-mesh (tensor-parallel) path:
+/// shard `s` of `D` owns attention heads `[s·H/D, (s+1)·H/D)`, i.e.
+/// output columns `[s·d/D, (s+1)·d/D)` of wq/wk/wv, and columns
+/// `[s·d/D, (s+1)·d/D)` of the tied unembedding for the logits partial.
+/// Everything else a shard artifact needs (ln1) and the whole combine
+/// stage (wo, ln2, wg, wu, wd) reuse [`WeightLiterals::per_layer`].
+pub struct ShardWeightLiterals {
+    /// `qkv[l][s]` = [wq_s, wk_s, wv_s], each `[d, d/D]`.
+    pub qkv: Vec<Vec<Vec<Literal>>>,
+    /// `emb[s]` = `[vocab, d/D]` column slice for `logits_shard<s>of<D>`.
+    pub emb: Vec<Literal>,
+}
+
+/// Column slice `[c0, c0+w)` of a row-major `[rows, cols]` matrix.
+fn col_slice(data: &[f32], rows: usize, cols: usize, c0: usize, w: usize) -> Vec<f32> {
+    debug_assert_eq!(data.len(), rows * cols);
+    let mut out = Vec::with_capacity(rows * w);
+    for r in 0..rows {
+        out.extend_from_slice(&data[r * cols + c0..r * cols + c0 + w]);
+    }
+    out
+}
+
+impl ShardWeightLiterals {
+    pub fn build(w: &Weights, cfg: &ModelConfig, tp: usize) -> Result<ShardWeightLiterals> {
+        if tp < 2 {
+            bail!("shard literals need tp >= 2, got {}", tp);
+        }
+        if cfg.n_heads % tp != 0 || cfg.d_model % tp != 0 {
+            bail!(
+                "tp {} must divide n_heads {} and d_model {}",
+                tp,
+                cfg.n_heads,
+                cfg.d_model
+            );
+        }
+        let (d, l) = (cfg.d_model, cfg.n_layers);
+        let dc = d / tp;
+        // LAYER_PARAM_NAMES order: wq/wk/wv are tensors 1..=3.
+        let mut qkv: Vec<Vec<Vec<Literal>>> = (0..l)
+            .map(|_| (0..tp).map(|_| Vec::with_capacity(3)).collect())
+            .collect();
+        for t in &w.layers[1..=3] {
+            let row = t.elems() / t.shape[0]; // d * d
+            for (li, per_shard) in qkv.iter_mut().enumerate() {
+                let layer = &t.data[li * row..(li + 1) * row];
+                for (s, slot) in per_shard.iter_mut().enumerate() {
+                    let cols = col_slice(layer, d, d, s * dc, dc);
+                    slot.push(lit_f32(&[d, dc], &cols)?);
+                }
+            }
+        }
+        let emb = (0..tp)
+            .map(|s| {
+                let cols = col_slice(&w.emb.data, cfg.vocab, d, s * dc, dc);
+                lit_f32(&[cfg.vocab, dc], &cols)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardWeightLiterals { qkv, emb })
     }
 }
 
@@ -261,6 +357,84 @@ mod tests {
         w.embed_into(&[1, 3], &mut dst);
         assert!((dst[0] - 0.004).abs() < 1e-6); // emb row 1 elem 0
         assert_eq!(dst[8..], vec![0.0; 8][..]); // padding untouched
+    }
+
+    /// Config matching the `fake_weights` geometry (d=4, H=2, L=2).
+    fn fake_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "fake".into(),
+            vocab: 6,
+            d_model: 4,
+            n_heads: 2,
+            d_head: 2,
+            n_layers: 2,
+            mid_layer: 1,
+            d_ff: 8,
+            rope_theta: 10000.0,
+            rollout_alpha: 0.6,
+            layout: crate::tokens::Layout {
+                frames: 1,
+                vis_per_frame: 1,
+                aud_len: 1,
+                aud_per_frame: 1,
+                interleaved: false,
+            },
+            prefill_buckets: vec![8],
+            seq_buckets: vec![8],
+            calib_buckets: vec![8],
+            batch_buckets: vec![],
+            tp_degree: 2,
+            weights_dir: "fake".into(),
+            kernel_impl: "jnp".into(),
+        }
+    }
+
+    #[test]
+    fn shard_literals_slice_head_columns() {
+        let d = fake_weights("shards");
+        let w = Weights::load(&d.0).unwrap();
+        let cfg = fake_cfg();
+        let sw = ShardWeightLiterals::build(&w, &cfg, 2).unwrap();
+        assert_eq!(sw.qkv.len(), 2); // layers
+        assert_eq!(sw.qkv[0].len(), 2); // shards
+        assert_eq!(sw.qkv[0][0].len(), 3); // wq/wk/wv
+        // wq layer 0 shard 1: columns 2..4 of the [4, 4] matrix. The fake
+        // fill is tensor_index + elem/1000 with wq at tensor index 3.
+        let wq_s1 = sw.qkv[0][1][0].to_vec::<f32>().unwrap();
+        assert_eq!(wq_s1.len(), 4 * 2);
+        assert!((wq_s1[0] - 3.002).abs() < 1e-6); // row 0, col 2
+        assert!((wq_s1[2] - 3.006).abs() < 1e-6); // row 1, col 2
+        // emb shard 0: columns 0..2 of the [6, 4] embedding (tensor 0).
+        let emb0 = sw.emb[0].to_vec::<f32>().unwrap();
+        assert_eq!(emb0.len(), 6 * 2);
+        assert!((emb0[2] - 0.004).abs() < 1e-6); // row 1, col 0
+        // tp must divide the head count.
+        assert!(ShardWeightLiterals::build(&w, &cfg, 3).is_err());
+    }
+
+    #[test]
+    fn mesh_build_skips_fused_only_literals() {
+        let d = fake_weights("lean");
+        let w = Weights::load(&d.0).unwrap();
+        let cfg = fake_cfg();
+        let full = WeightLiterals::build(&w, &cfg).unwrap();
+        assert_eq!(full.per_layer[0].len(), 9);
+        assert!(full.emb.is_some());
+        assert_eq!(full.front.len(), 9);
+        let lean = WeightLiterals::build_with(&w, &cfg, false).unwrap();
+        assert_eq!(lean.per_layer[0].len(), 6, "QKV dropped on mesh builds");
+        assert!(lean.emb.is_none());
+        assert!(lean.front.is_empty());
+        assert_eq!(lean.full_stack.len(), 9, "calib stack kept");
+        // [0] is ln1 and the last five are the combine-stage params in
+        // both layouts (the contract the engine's tail slices rely on).
+        assert_eq!(
+            lean.per_layer[1][0].to_vec::<f32>().unwrap(),
+            full.per_layer[1][0].to_vec::<f32>().unwrap()
+        );
+        for (a, b) in full.per_layer[1][4..].iter().zip(&lean.per_layer[1][1..]) {
+            assert_eq!(a.to_vec::<f32>().unwrap(), b.to_vec::<f32>().unwrap());
+        }
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! Device-mesh execution backend: D logical PJRT devices behind one
+//! dispatch surface.
+//!
+//! A [`DeviceMesh`] owns one [`Runtime`] (client + executable cache) per
+//! logical device. Single-device work (`tp_degree = 1`, replicated
+//! artifacts like `calib_probe`, combine/`*_tail` stages) runs on device
+//! 0 through [`DeviceMesh::execute`] — byte-for-byte the code path the
+//! pre-mesh engine had. Head-sharded work fans one [`ShardDispatch`] per
+//! device through [`DeviceMesh::execute_sharded`]: shard 0 executes on
+//! the caller's thread, shards 1.. on scoped worker threads, and the
+//! call joins all shards before returning (an all-or-nothing barrier —
+//! the combine step needs every partial).
+//!
+//! Why scoped threads and not the shared [`crate::util::threadpool`]:
+//! each device's `Runtime` is pinned to its shard for the executable
+//! cache to stay warm per device, and a dispatch borrows the engine's
+//! prebuilt weight literals — `std::thread::scope` supports both
+//! (non-`'static` borrows, one worker per remote shard) where the job
+//! pool's `'static` closures support neither. The cost is one OS thread
+//! spawn+join per remote shard per dispatch (~tens of µs), which a
+//! CPU-side XLA layer execution dwarfs; persistent per-device workers
+//! would need `'static` (owned/unsafe) input hand-off and are the noted
+//! follow-up if mesh dispatch overhead ever shows up in profiles. With
+//! the vendored host-only `xla` stub, `Runtime` and `Literal` are plain
+//! host data and cross the scope freely; a real PJRT backend keeps the
+//! same shape with per-device contexts created on their worker threads.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::Runtime;
+
+/// One shard's work item: the artifact to run on that device and its
+/// borrowed input literals (activations + that shard's weight slices).
+pub struct ShardDispatch<'a> {
+    pub path: PathBuf,
+    pub inputs: Vec<&'a xla::Literal>,
+}
+
+/// The execution surface the engine drives, named so an alternative
+/// backend (a real multi-device PJRT client, a remote executor) has a
+/// contract to implement. [`DeviceMesh`] is the only implementor today
+/// and the engine holds it concretely — `execute`/`execute_sharded` are
+/// inherent methods (the trait impl delegates), so callers need no
+/// trait import.
+pub trait Backend {
+    /// Logical devices in the mesh (the tensor-parallel degree).
+    fn device_count(&self) -> usize;
+
+    /// Run a replicated artifact on device 0.
+    fn execute(&mut self, path: &Path, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>>;
+
+    /// Run `dispatches[s]` on device `s` (one per device, in parallel)
+    /// and return every shard's outputs in device order.
+    fn execute_sharded(&mut self, dispatches: &[ShardDispatch<'_>])
+        -> Result<Vec<Vec<xla::Literal>>>;
+}
+
+/// D logical devices, each with its own PJRT client + executable cache.
+pub struct DeviceMesh {
+    devices: Vec<Runtime>,
+}
+
+impl DeviceMesh {
+    /// A mesh of `tp` CPU devices (`tp = 0` is clamped to 1).
+    pub fn cpu(tp: usize) -> Result<DeviceMesh> {
+        let devices = (0..tp.max(1))
+            .map(|i| Runtime::cpu().with_context(|| format!("mesh device {}", i)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DeviceMesh { devices })
+    }
+
+    /// Tensor-parallel degree (number of devices).
+    pub fn tp(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn platform(&self) -> String {
+        self.devices[0].platform()
+    }
+
+    /// Pre-compile an artifact on device 0 (warmup of replicated and
+    /// combine-stage entries).
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        self.devices[0].load(path)
+    }
+
+    /// Pre-compile a per-shard artifact on its device (warmup).
+    pub fn load_on(&mut self, device: usize, path: &Path) -> Result<()> {
+        self.devices[device].load(path)
+    }
+
+    /// (compiled executables, total executions) summed over devices.
+    pub fn stats(&self) -> (usize, u64) {
+        self.devices
+            .iter()
+            .fold((0, 0), |(c, e), rt| (c + rt.cached(), e + rt.exec_count))
+    }
+
+    /// Run a replicated artifact on device 0.
+    pub fn execute(
+        &mut self,
+        path: &Path,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.devices[0].execute(path, inputs)
+    }
+
+    /// Run `dispatches[s]` on device `s` (one per device, in parallel)
+    /// and return every shard's outputs in device order.
+    pub fn execute_sharded(
+        &mut self,
+        dispatches: &[ShardDispatch<'_>],
+    ) -> Result<Vec<Vec<xla::Literal>>> {
+        if dispatches.len() != self.devices.len() {
+            bail!(
+                "sharded dispatch arity {} != mesh devices {}",
+                dispatches.len(),
+                self.devices.len()
+            );
+        }
+        if dispatches.len() == 1 {
+            let d = &dispatches[0];
+            return Ok(vec![self.devices[0].execute(&d.path, &d.inputs)?]);
+        }
+        // Shard 0 on the caller's thread, shards 1.. on scoped workers;
+        // join everything before combining (all-or-nothing).
+        let (first, rest) = self.devices.split_at_mut(1);
+        let (d0, drest) = dispatches.split_at(1);
+        let results: Vec<Result<Vec<xla::Literal>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = rest
+                .iter_mut()
+                .zip(drest)
+                .map(|(rt, d)| scope.spawn(move || rt.execute(&d.path, &d.inputs)))
+                .collect();
+            let mut out = vec![first[0].execute(&d0[0].path, &d0[0].inputs)];
+            for h in handles {
+                // A panicking worker must fail this dispatch (with shard
+                // attribution below), not take down the replica thread
+                // that owns the whole device group.
+                out.push(h.join().unwrap_or_else(|_| {
+                    Err(anyhow!("shard worker thread panicked"))
+                }));
+            }
+            out
+        });
+        results
+            .into_iter()
+            .enumerate()
+            .map(|(s, r)| r.map_err(|e| anyhow!("shard {}: {:#}", s, e)))
+            .collect()
+    }
+}
+
+impl Backend for DeviceMesh {
+    fn device_count(&self) -> usize {
+        self.tp()
+    }
+
+    fn execute(&mut self, path: &Path, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        DeviceMesh::execute(self, path, inputs)
+    }
+
+    fn execute_sharded(
+        &mut self,
+        dispatches: &[ShardDispatch<'_>],
+    ) -> Result<Vec<Vec<xla::Literal>>> {
+        DeviceMesh::execute_sharded(self, dispatches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::literals::lit_f32;
+
+    #[test]
+    fn mesh_sizing_and_clamp() {
+        let mesh = DeviceMesh::cpu(0).unwrap();
+        assert_eq!(mesh.tp(), 1);
+        let mesh = DeviceMesh::cpu(3).unwrap();
+        assert_eq!(mesh.tp(), 3);
+        assert_eq!(mesh.device_count(), 3);
+        assert_eq!(mesh.stats(), (0, 0));
+    }
+
+    #[test]
+    fn sharded_dispatch_arity_checked() {
+        let mut mesh = DeviceMesh::cpu(2).unwrap();
+        let x = lit_f32(&[1], &[0.0]).unwrap();
+        let one = vec![ShardDispatch {
+            path: PathBuf::from("/nonexistent/a.hlo.txt"),
+            inputs: vec![&x],
+        }];
+        let err = mesh.execute_sharded(&one).unwrap_err();
+        assert!(format!("{:#}", err).contains("arity"));
+    }
+
+    #[test]
+    fn shard_errors_carry_shard_index() {
+        // Both shards fail (missing artifacts); the error must name a
+        // shard so mesh misconfiguration is debuggable.
+        let mut mesh = DeviceMesh::cpu(2).unwrap();
+        let x = lit_f32(&[1], &[0.0]).unwrap();
+        let dispatches: Vec<ShardDispatch> = (0..2)
+            .map(|s| ShardDispatch {
+                path: PathBuf::from(format!("/nonexistent/shard{}.hlo.txt", s)),
+                inputs: vec![&x],
+            })
+            .collect();
+        let err = mesh.execute_sharded(&dispatches).unwrap_err();
+        assert!(format!("{:#}", err).contains("shard 0"));
+    }
+}

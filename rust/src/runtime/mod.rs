@@ -6,12 +6,18 @@
 //!
 //! Pieces:
 //! * [`Runtime`]     — client + executable cache (compile each HLO once).
+//! * [`mesh`]        — the [`Backend`]/[`DeviceMesh`] abstraction: D
+//!   logical devices behind one dispatch surface (tensor-parallel
+//!   head-sharded execution; device 0 is the `tp_degree = 1` case).
 //! * [`ArtifactDir`] — artifact discovery + *bucket selection*: artifacts
 //!   are compiled at fixed sequence lengths; `pick_bucket(n)` returns the
 //!   smallest compiled bucket that fits.
 //! * [`literals`]    — typed host↔literal conversion helpers.
 
 pub mod literals;
+pub mod mesh;
+
+pub use mesh::{Backend, DeviceMesh, ShardDispatch};
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};

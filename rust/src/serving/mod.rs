@@ -107,6 +107,12 @@ pub struct PoolConfig {
     /// `1` = force the single-token path (A/B benchmarking), `n` =
     /// min(n, engine limit).
     pub max_decode_batch: usize,
+    /// Tensor-parallel degree per replica: each replica becomes a
+    /// device *group* of this many mesh devices, the model head-sharded
+    /// across them (`fastav serve --tp`). Admission charges KV bytes
+    /// against the group's pooled capacity (`kv_budget_bytes` ×
+    /// `tp_degree`). `1` (or `0`) = today's one-device replicas.
+    pub tp_degree: usize,
 }
 
 impl Default for PoolConfig {
@@ -120,6 +126,7 @@ impl Default for PoolConfig {
             warmup: false,
             default_deadline: None,
             max_decode_batch: 0,
+            tp_degree: 1,
         }
     }
 }
@@ -129,7 +136,14 @@ impl PoolConfig {
         self.replicas = self.replicas.max(1);
         self.queue_cap = self.queue_cap.max(1);
         self.max_inflight = self.max_inflight.max(1);
+        self.tp_degree = self.tp_degree.max(1);
         self
+    }
+
+    /// The KV-byte budget one replica (device group) admits against:
+    /// the per-device budget pooled across its mesh devices.
+    pub fn group_kv_budget_bytes(&self) -> usize {
+        self.kv_budget_bytes.saturating_mul(self.tp_degree.max(1))
     }
 }
 
@@ -174,7 +188,11 @@ pub struct ReplicaStatus {
     pub id: usize,
     pub queued: usize,
     pub active: usize,
+    /// Mesh devices this replica's model is head-sharded over.
+    pub tp_degree: usize,
     pub kv_bytes: u64,
+    /// Pooled KV budget of the whole device group (per-device budget ×
+    /// `tp_degree`; 0 = unlimited).
     pub kv_budget_bytes: usize,
     pub steps_total: u64,
     pub steps_per_sec: u64,
@@ -254,8 +272,11 @@ impl ReplicaPool {
         metrics: Arc<Registry>,
     ) -> Result<ReplicaPool> {
         let warmup = cfg.warmup;
+        let tp = cfg.tp_degree.max(1);
         Self::start_with_factory(cfg, metrics, move |_replica| {
-            let mut engine = ModelEngine::load(&artifact_root, &model)?;
+            // A replica is a device group: one engine head-sharded over
+            // `tp` mesh devices (tp = 1 is the single-device case).
+            let mut engine = ModelEngine::load_with_tp(&artifact_root, &model, tp)?;
             if warmup {
                 engine.warmup()?;
             }
@@ -276,6 +297,7 @@ impl ReplicaPool {
     {
         let cfg = cfg.normalized();
         register_metrics(&metrics);
+        metrics.gauge("fastav_tp_degree").set(cfg.tp_degree as u64);
         let factory = Arc::new(factory);
         let shared = Arc::new(PoolShared::default());
         // One process-wide prefix cache shared by every replica; each
@@ -499,8 +521,9 @@ impl ReplicaPool {
                 id,
                 queued: r.queue.len(),
                 active: r.shared.active.load(Ordering::SeqCst),
+                tp_degree: self.cfg.tp_degree,
                 kv_bytes: r.shared.kv_bytes.load(Ordering::Relaxed),
-                kv_budget_bytes: self.cfg.kv_budget_bytes,
+                kv_budget_bytes: self.cfg.group_kv_budget_bytes(),
                 steps_total: r.shared.steps_total.load(Ordering::Relaxed),
                 steps_per_sec: r.shared.steps_per_sec.load(Ordering::Relaxed),
                 completed: r.shared.completed.load(Ordering::SeqCst),
@@ -579,6 +602,7 @@ fn register_metrics(metrics: &Registry) {
     }
     metrics.gauge("fastav_queue_depth");
     metrics.gauge("fastav_kv_peak_bytes");
+    metrics.gauge("fastav_tp_degree");
     metrics.gauge("fastav_prefix_cache_entries");
     metrics.gauge("fastav_prefix_cache_bytes");
     metrics.gauge("fastav_kv_blocks_used");

@@ -237,7 +237,9 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
     if let Some(c) = prefix.clone() {
         engine.attach_prefix_cache(c, replica_id);
     }
-    let mut admission = Admission::new(cfg.kv_budget_bytes, cfg.max_inflight);
+    // A replica is a device group: admission charges KV bytes against
+    // the group's pooled capacity (per-device budget × tp_degree).
+    let mut admission = Admission::new(cfg.group_kv_budget_bytes(), cfg.max_inflight);
     let mut sched = StepScheduler::new();
     let mut active: Vec<Active<E::Gen>> = Vec::new();
     let mut parked: Option<Job> = None;

@@ -1,0 +1,399 @@
+//! Device-mesh (tensor-parallel) serving properties, run against a mock
+//! engine so no AOT artifacts or PJRT devices are needed:
+//!
+//! * **tp_degree = 1 is the identity:** a pool whose engine runs the
+//!   mesh executor with one shard produces token-for-token identical
+//!   per-request streams — and an identical conservation ledger — as the
+//!   pre-refactor direct engine on the same workload. The mock mirrors
+//!   the real engine's structure (per-shard partials + host combine),
+//!   with one shard covering everything at D = 1.
+//! * **Shard invariance:** the combine step (concat attention outputs /
+//!   all-reduce partials) makes D = 2 and D = 4 groups emit the same
+//!   streams as D = 1 — sharding must never change results, only where
+//!   they are computed.
+//! * **Pooled group capacity:** admission charges KV bytes against the
+//!   device group's pooled budget (per-device budget × tp_degree), so a
+//!   request that is Oversize for a single device fits a tp = 2 group.
+
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use fastav::coordinator::{Event, GenRequest, Priority};
+use fastav::metrics::Registry;
+use fastav::model::{GenerateOptions, GenerateResult, PruningPlan, StepEvent};
+use fastav::serving::{PoolConfig, PoolStats, ReplicaEngine, ReplicaPool};
+use fastav::tokens::Segment;
+use fastav::util::proptest::{run_prop, Gen};
+
+// ---------------------------------------------------------------- mock
+
+/// Deterministic per-(request, step) token — the value every mesh degree
+/// must reproduce exactly.
+fn mock_token(seed: u64, step: usize) -> u32 {
+    let x = seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(step as u64)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    (x >> 33) as u32 % 1000
+}
+
+struct MeshGen {
+    seed: u64,
+    prefill_left: usize,
+    produced: usize,
+    total: usize,
+}
+
+/// Engine that mirrors the mesh executor's shape: every step computes
+/// one *partial* per shard and host-combines (sums) them into the
+/// token. The partials tile the direct value exactly, so any combine
+/// bug (lost shard, double count, wrong order) changes the stream.
+struct MeshMock {
+    tp: usize,
+    est_bytes: usize,
+}
+
+impl MeshMock {
+    fn combined_token(&self, seed: u64, step: usize) -> u32 {
+        let base = mock_token(seed, step);
+        // Shard s owns base/tp "heads"; shard 0 also owns the remainder
+        // (like the head ranges of a non-divisible logits slice). The
+        // all-reduce (sum) reconstructs base for every tp.
+        let share = base / self.tp as u32;
+        let mut sum = 0u32;
+        for s in 0..self.tp {
+            let partial = if s == 0 { share + base % self.tp as u32 } else { share };
+            sum += partial;
+        }
+        sum
+    }
+
+    fn advance(&self, gen: &mut MeshGen) -> StepEvent {
+        if gen.prefill_left > 0 {
+            gen.prefill_left -= 1;
+            if gen.prefill_left > 0 {
+                return StepEvent::Prefilled { layer: 0 };
+            }
+        } else if gen.produced >= gen.total {
+            return StepEvent::Done;
+        }
+        let tok = self.combined_token(gen.seed, gen.produced);
+        gen.produced += 1;
+        StepEvent::Token(tok)
+    }
+}
+
+impl ReplicaEngine for MeshMock {
+    type Gen = MeshGen;
+
+    fn begin(&mut self, req: &GenRequest) -> anyhow::Result<MeshGen> {
+        Ok(MeshGen {
+            seed: req.prompt.iter().fold(0u64, |a, &t| a * 31 + t as u64),
+            prefill_left: 2,
+            produced: 0,
+            total: req.opts.max_gen.max(1),
+        })
+    }
+
+    fn step(&mut self, gen: &mut MeshGen) -> anyhow::Result<StepEvent> {
+        Ok(self.advance(gen))
+    }
+
+    fn is_done(&self, gen: &MeshGen) -> bool {
+        gen.prefill_left == 0 && gen.produced >= gen.total
+    }
+
+    fn finish(&mut self, gen: MeshGen) -> GenerateResult {
+        GenerateResult {
+            tokens: (0..gen.produced)
+                .map(|s| self.combined_token(gen.seed, s))
+                .collect(),
+            prompt_len: 4,
+            flops: Default::default(),
+            relative_flops: 0.0,
+            peak_kv_bytes: self.est_bytes,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            decode_steps: gen.produced.saturating_sub(1),
+            live_counts: Vec::new(),
+            prefix_hit: false,
+            prefix_tokens_reused: 0,
+        }
+    }
+
+    fn kv_bytes(&self, _gen: &MeshGen) -> usize {
+        self.est_bytes
+    }
+
+    fn estimate_bytes(&self, _req: &GenRequest) -> usize {
+        self.est_bytes
+    }
+}
+
+/// The pre-refactor shape: one engine, one device, no combine step.
+struct DirectMock;
+
+impl ReplicaEngine for DirectMock {
+    type Gen = MeshGen;
+
+    fn begin(&mut self, req: &GenRequest) -> anyhow::Result<MeshGen> {
+        Ok(MeshGen {
+            seed: req.prompt.iter().fold(0u64, |a, &t| a * 31 + t as u64),
+            prefill_left: 2,
+            produced: 0,
+            total: req.opts.max_gen.max(1),
+        })
+    }
+
+    fn step(&mut self, gen: &mut MeshGen) -> anyhow::Result<StepEvent> {
+        if gen.prefill_left > 0 {
+            gen.prefill_left -= 1;
+            if gen.prefill_left > 0 {
+                return Ok(StepEvent::Prefilled { layer: 0 });
+            }
+        } else if gen.produced >= gen.total {
+            return Ok(StepEvent::Done);
+        }
+        let tok = mock_token(gen.seed, gen.produced);
+        gen.produced += 1;
+        Ok(StepEvent::Token(tok))
+    }
+
+    fn is_done(&self, gen: &MeshGen) -> bool {
+        gen.prefill_left == 0 && gen.produced >= gen.total
+    }
+
+    fn finish(&mut self, gen: MeshGen) -> GenerateResult {
+        GenerateResult {
+            tokens: (0..gen.produced).map(|s| mock_token(gen.seed, s)).collect(),
+            prompt_len: 4,
+            flops: Default::default(),
+            relative_flops: 0.0,
+            peak_kv_bytes: 1000,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            decode_steps: gen.produced.saturating_sub(1),
+            live_counts: Vec::new(),
+            prefix_hit: false,
+            prefix_tokens_reused: 0,
+        }
+    }
+
+    fn kv_bytes(&self, _gen: &MeshGen) -> usize {
+        1000
+    }
+
+    fn estimate_bytes(&self, _req: &GenRequest) -> usize {
+        1000
+    }
+}
+
+// ------------------------------------------------------------- harness
+
+fn request(seed_tok: u32, max_gen: usize) -> GenRequest {
+    GenRequest {
+        prompt: vec![seed_tok, 2, 3, 4],
+        segments: vec![Segment::Ctrl, Segment::Vis, Segment::Aud, Segment::Text],
+        frame_of: vec![-1, 0, -1, -1],
+        opts: GenerateOptions {
+            plan: PruningPlan::vanilla(),
+            max_gen,
+            ..Default::default()
+        },
+        priority: Priority::Normal,
+        deadline: None,
+    }
+}
+
+fn streams(receivers: Vec<Receiver<Event>>) -> Vec<Vec<u32>> {
+    receivers
+        .into_iter()
+        .map(|rx| {
+            let mut toks = Vec::new();
+            loop {
+                match rx.recv_timeout(Duration::from_secs(10)) {
+                    Ok(Event::Token(t)) => toks.push(t),
+                    Ok(Event::Done(res)) => {
+                        assert_eq!(res.tokens, toks, "Done result diverges from stream");
+                        return toks;
+                    }
+                    Ok(Event::Error(e)) => panic!("request failed: {}", e),
+                    Err(e) => panic!("stream stalled: {}", e),
+                }
+            }
+        })
+        .collect()
+}
+
+fn settled(pool: &ReplicaPool) -> PoolStats {
+    let t0 = Instant::now();
+    loop {
+        let s = pool.stats();
+        if (s.conserved() && s.in_flight == 0 && s.in_queue == 0)
+            || t0.elapsed() > Duration::from_secs(10)
+        {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Drive one workload on a mesh pool at `tp`, returning streams + ledger.
+fn drive_mesh(tp: usize, reqs: &[(u32, usize)], max_inflight: usize) -> (Vec<Vec<u32>>, PoolStats) {
+    let pool = ReplicaPool::start_with_factory(
+        PoolConfig {
+            replicas: 1,
+            queue_cap: 64,
+            max_inflight,
+            tp_degree: tp,
+            ..Default::default()
+        },
+        std::sync::Arc::new(Registry::default()),
+        move |_r| Ok(MeshMock { tp, est_bytes: 1000 }),
+    )
+    .expect("mesh mock pool starts");
+    let receivers: Vec<_> = reqs
+        .iter()
+        .map(|&(seed, max_gen)| pool.submit(request(seed, max_gen)).unwrap().1)
+        .collect();
+    let streams = streams(receivers);
+    let stats = settled(&pool);
+    (streams, stats)
+}
+
+// --------------------------------------------------------------- tests
+
+#[test]
+fn prop_tp1_identical_to_prerefactor_engine() {
+    run_prop("tp1_identity", 10, |g: &mut Gen| {
+        let n = g.usize_in(2, 10);
+        let max_inflight = g.usize_in(2, 6);
+        let reqs: Vec<(u32, usize)> = (0..n)
+            .map(|i| (100 + i as u32 * 7, g.usize_in(1, 12)))
+            .collect();
+
+        // Pre-refactor shape: the direct engine with no mesh plumbing.
+        let direct_pool = ReplicaPool::start_with_factory(
+            PoolConfig {
+                replicas: 1,
+                queue_cap: 64,
+                max_inflight,
+                ..Default::default()
+            },
+            std::sync::Arc::new(Registry::default()),
+            |_r| Ok(DirectMock),
+        )
+        .expect("direct pool starts");
+        let receivers: Vec<_> = reqs
+            .iter()
+            .map(|&(seed, max_gen)| direct_pool.submit(request(seed, max_gen)).unwrap().1)
+            .collect();
+        let direct_streams = streams(receivers);
+        let direct_stats = settled(&direct_pool);
+
+        let (mesh_streams, mesh_stats) = drive_mesh(1, &reqs, max_inflight);
+        assert_eq!(
+            mesh_streams, direct_streams,
+            "tp_degree=1 must be token-for-token identical to the direct engine"
+        );
+        assert!(mesh_stats.conserved() && direct_stats.conserved());
+        assert_eq!(mesh_stats.submitted, direct_stats.submitted);
+        assert_eq!(mesh_stats.completed, direct_stats.completed);
+        assert_eq!(mesh_stats.failed, direct_stats.failed);
+        assert_eq!(mesh_stats.completed, n as u64);
+    });
+}
+
+#[test]
+fn prop_shard_degree_invariant() {
+    run_prop("shard_degree_invariance", 10, |g: &mut Gen| {
+        let n = g.usize_in(2, 8);
+        let max_inflight = g.usize_in(2, 4);
+        let reqs: Vec<(u32, usize)> = (0..n)
+            .map(|i| (500 + i as u32 * 13, g.usize_in(1, 10)))
+            .collect();
+        let (s1, t1) = drive_mesh(1, &reqs, max_inflight);
+        let (s2, t2) = drive_mesh(2, &reqs, max_inflight);
+        let (s4, t4) = drive_mesh(4, &reqs, max_inflight);
+        assert_eq!(s1, s2, "tp=2 group must emit tp=1 streams");
+        assert_eq!(s1, s4, "tp=4 group must emit tp=1 streams");
+        assert_eq!(t1.completed, t2.completed);
+        assert_eq!(t1.completed, t4.completed);
+        assert!(t2.conserved() && t4.conserved());
+    });
+}
+
+#[test]
+fn group_pools_kv_capacity_across_devices() {
+    // Per-device budget 1000, request estimate 1500: Oversize for a
+    // single device, fits a tp=2 group's pooled 2000-byte capacity.
+    let run = |tp: usize| {
+        let pool = ReplicaPool::start_with_factory(
+            PoolConfig {
+                replicas: 1,
+                queue_cap: 16,
+                max_inflight: 2,
+                kv_budget_bytes: 1000,
+                tp_degree: tp,
+                ..Default::default()
+            },
+            std::sync::Arc::new(Registry::default()),
+            move |_r| Ok(MeshMock { tp, est_bytes: 1500 }),
+        )
+        .expect("pool starts");
+        let rx: Vec<_> = (0..3)
+            .map(|i| pool.submit(request(800 + i, 4)).unwrap().1)
+            .collect();
+        // Drain every stream to completion or error.
+        let mut completed = 0;
+        for r in rx {
+            loop {
+                match r.recv_timeout(Duration::from_secs(10)) {
+                    Ok(Event::Done(_)) => {
+                        completed += 1;
+                        break;
+                    }
+                    Ok(Event::Error(e)) => {
+                        assert!(
+                            e.contains("over the replica budget"),
+                            "unexpected error: {}",
+                            e
+                        );
+                        break;
+                    }
+                    Ok(Event::Token(_)) => {}
+                    Err(e) => panic!("stream stalled: {}", e),
+                }
+            }
+        }
+        let stats = settled(&pool);
+        (completed, stats)
+    };
+    let (done1, stats1) = run(1);
+    assert_eq!(done1, 0, "1500-byte requests cannot fit a 1000-byte device");
+    assert_eq!(stats1.failed, 3);
+    let (done2, stats2) = run(2);
+    assert_eq!(done2, 3, "tp=2 pools 2000 bytes; requests must fit");
+    assert_eq!(stats2.failed, 0);
+}
+
+#[test]
+fn pool_status_reports_group_shape() {
+    let pool = ReplicaPool::start_with_factory(
+        PoolConfig {
+            replicas: 2,
+            kv_budget_bytes: 1000,
+            tp_degree: 2,
+            ..Default::default()
+        },
+        std::sync::Arc::new(Registry::default()),
+        |_r| Ok(MeshMock { tp: 2, est_bytes: 10 }),
+    )
+    .expect("pool starts");
+    let status = pool.status();
+    assert_eq!(status.len(), 2);
+    for r in &status {
+        assert_eq!(r.tp_degree, 2);
+        assert_eq!(r.kv_budget_bytes, 2000, "budget reported per group, pooled");
+    }
+}
