@@ -21,6 +21,15 @@
 //! batch occupancy from the pool's `decode_batch` stats, and records
 //! everything in `BENCH_batch.json`.
 //!
+//! A fifth phase drives the **mixed-profile** workload the per-request
+//! policy API targets: one pool serving `/v2/generate` traffic that
+//! alternates between the `quality` and `aggressive` built-in profiles
+//! (different pruning-config hashes ⇒ isolated prefix-cache configs).
+//! It reports per-profile completion counts, latency, and mean
+//! `relative_flops` (the quality/latency tier split), plus the
+//! per-config prefix-cache rows from `GET /v1/pool`, and records
+//! everything in `BENCH_policy.json`.
+//!
 //! ```sh
 //! cargo run --release --example serve_load [model] [n_requests]
 //! ```
@@ -36,11 +45,21 @@ use fastav::avsynth::QuestionKind;
 use fastav::coordinator::Coordinator;
 use fastav::http::{api::make_handler, request, Server};
 use fastav::model::PruningPlan;
+use fastav::policy::{PolicyRegistry, PruningSpec};
 use fastav::serving::PoolConfig;
 use fastav::tokens::Layout;
 use fastav::util::bench::{stats_from, BenchStats};
 use fastav::util::json::Json;
 use fastav::util::threadpool::ThreadPool;
+
+/// Registry serving `plan` as the default `balanced` profile (plus the
+/// built-in `off`) — the pre-profile serving behavior.
+fn plan_registry(plan: &PruningPlan) -> Arc<PolicyRegistry> {
+    Arc::new(PolicyRegistry::with_default_spec(
+        "balanced",
+        PruningSpec::from_plan(plan.clone()).expect("calibrated plan is valid"),
+    ))
+}
 
 /// Short requests: an answer-length generation (≤ 8 tokens).
 const SHORT_MAX_GEN: usize = 2;
@@ -117,7 +136,8 @@ fn drive(
     );
     // The handler cap is the long-request length; each request asks for
     // its own max_gen below it.
-    let handler = make_handler(Arc::clone(&coord), layout, plan, LONG_MAX_GEN, 1234);
+    let handler =
+        make_handler(Arc::clone(&coord), layout, plan_registry(&plan), LONG_MAX_GEN, 1234);
     let server = Server::bind("127.0.0.1:0", 8, handler).expect("bind");
     let addr = server.local_addr().to_string();
     let stop = server.shutdown_handle();
@@ -271,7 +291,8 @@ fn drive_prefix(
         Coordinator::start_pool(common::artifact_root(), model.to_string(), cfg)
             .expect("start pool"),
     );
-    let handler = make_handler(Arc::clone(&coord), layout, plan, LONG_MAX_GEN, 1234);
+    let handler =
+        make_handler(Arc::clone(&coord), layout, plan_registry(&plan), LONG_MAX_GEN, 1234);
     let server = Server::bind("127.0.0.1:0", 8, handler).expect("bind");
     let addr = server.local_addr().to_string();
     let stop = server.shutdown_handle();
@@ -458,11 +479,9 @@ fn drive_batch(
                     prompt: s.prompt,
                     segments: s.segments,
                     frame_of: s.frame_of,
-                    opts: fastav::model::GenerateOptions {
-                        plan: plan.clone(),
-                        max_gen: BATCH_MAX_GEN,
-                        ..Default::default()
-                    },
+                    spec: PruningSpec::from_plan(plan.clone()).expect("valid plan"),
+                    max_gen: BATCH_MAX_GEN,
+                    sampling: Default::default(),
                     priority: fastav::coordinator::Priority::Normal,
                     deadline: None,
                 })
@@ -493,16 +512,154 @@ fn drive_batch(
     BatchRun { occupancy, batched, completed, tokens, wall, quanta, quanta_tokens }
 }
 
+/// One profile's slice of the mixed-profile (phase 5) workload.
+struct ProfileSlice {
+    profile: &'static str,
+    completed: usize,
+    rejected: usize,
+    mean_rel_flops: f64,
+    lat: BenchStats,
+}
+
+impl ProfileSlice {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("profile", Json::str(self.profile)),
+            ("completed", Json::num(self.completed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("mean_relative_flops", Json::num(self.mean_rel_flops)),
+            (
+                "latency",
+                Json::obj(vec![
+                    ("mean_s", Json::num(self.lat.mean)),
+                    ("p50_s", Json::num(self.lat.p50)),
+                    ("p95_s", Json::num(self.lat.p95)),
+                    ("max_s", Json::num(self.lat.max)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Phase 5: alternate `/v2/generate` requests between two built-in
+/// profiles on one pool; returns the per-profile slices plus the
+/// per-config prefix-cache rows the pool reported.
+fn drive_profiles(
+    model: &str,
+    n_requests: usize,
+    registry: Arc<PolicyRegistry>,
+    layout: Layout,
+) -> (Vec<ProfileSlice>, Json) {
+    let cfg = PoolConfig {
+        replicas: 2,
+        queue_cap: 256,
+        max_inflight: 4,
+        warmup: true,
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::start_pool(common::artifact_root(), model.to_string(), cfg)
+            .expect("start pool"),
+    );
+    let handler = make_handler(Arc::clone(&coord), layout, registry, LONG_MAX_GEN, 1234);
+    let server = Server::bind("127.0.0.1:0", 8, handler).expect("bind");
+    let addr = server.local_addr().to_string();
+    let stop = server.shutdown_handle();
+    let server_thread = std::thread::spawn(move || server.serve());
+
+    const PROFILES: [&str; 2] = ["quality", "aggressive"];
+    let lat: Vec<Arc<Mutex<Vec<f64>>>> =
+        (0..2).map(|_| Arc::new(Mutex::new(Vec::new()))).collect();
+    let flops: Vec<Arc<Mutex<Vec<f64>>>> =
+        (0..2).map(|_| Arc::new(Mutex::new(Vec::new()))).collect();
+    let completed: Vec<Arc<AtomicUsize>> =
+        (0..2).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+    let rejected: Vec<Arc<AtomicUsize>> =
+        (0..2).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+    let clients = ThreadPool::new(8);
+    for i in 0..n_requests {
+        let which = i % 2;
+        let addr = addr.clone();
+        let lat = Arc::clone(&lat[which]);
+        let flops = Arc::clone(&flops[which]);
+        let completed = Arc::clone(&completed[which]);
+        let rejected = Arc::clone(&rejected[which]);
+        clients.execute(move || {
+            // Few distinct samples so both profiles revisit prefixes —
+            // per-spec cache isolation is what phase 5 exercises.
+            let body = format!(
+                r#"{{"profile": "{}", "dataset": "avqa", "index": {}, "max_gen": 2, "question": "{}"}}"#,
+                PROFILES[which],
+                i % 4,
+                QuestionKind::nth(i / 4).name()
+            );
+            let t = Instant::now();
+            match request(&addr, "POST", "/v2/generate", body.as_bytes()) {
+                Ok((200, resp)) => {
+                    completed.fetch_add(1, Ordering::Relaxed);
+                    lat.lock().unwrap().push(t.elapsed().as_secs_f64());
+                    if let Ok(j) = Json::parse(&String::from_utf8_lossy(&resp)) {
+                        if let Some(f) = j.get("relative_flops").as_f64() {
+                            flops.lock().unwrap().push(f);
+                        }
+                    }
+                }
+                Ok((429, _)) => {
+                    rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok((code, resp)) => eprintln!(
+                    "profile request {} -> {}: {}",
+                    i,
+                    code,
+                    String::from_utf8_lossy(&resp)
+                ),
+                Err(e) => eprintln!("profile request {} failed: {}", i, e),
+            }
+        });
+    }
+    clients.wait_idle();
+    let per_config = match request(&addr, "GET", "/v1/pool", b"") {
+        Ok((200, body)) => Json::parse(std::str::from_utf8(&body).unwrap_or(""))
+            .map(|j| j.get("prefix_cache").get("per_config").clone())
+            .unwrap_or(Json::Null),
+        _ => Json::Null,
+    };
+    stop.store(true, Ordering::SeqCst);
+    let _ = server_thread.join();
+
+    let slices = (0..2)
+        .map(|w| {
+            let f = flops[w].lock().unwrap().clone();
+            ProfileSlice {
+                profile: PROFILES[w],
+                completed: completed[w].load(Ordering::Relaxed),
+                rejected: rejected[w].load(Ordering::Relaxed),
+                mean_rel_flops: if f.is_empty() {
+                    0.0
+                } else {
+                    f.iter().sum::<f64>() / f.len() as f64
+                },
+                lat: lat_stats(
+                    &format!("profile {}", PROFILES[w]),
+                    lat[w].lock().unwrap().clone(),
+                ),
+            }
+        })
+        .collect();
+    (slices, per_config)
+}
+
 fn main() {
     let model = common::model_arg();
     let n_requests = common::n_arg(48).max(8);
 
     // Calibrate once (separate engine instance; serving engines live on
     // their replica threads), and grab the layout for request assembly.
-    let (plan, layout) = {
+    let (calib, plan, layout) = {
         let mut engine = common::load_engine(&model);
         let calib = common::load_or_calibrate(&mut engine, 50);
-        (calib.plan(20.0), engine.cfg.layout.clone())
+        let plan = calib.plan(20.0);
+        (calib, plan, engine.cfg.layout.clone())
     };
 
     println!(
@@ -626,4 +783,44 @@ fn main() {
     ]);
     std::fs::write("BENCH_batch.json", out.to_string() + "\n").expect("write BENCH_batch.json");
     println!("wrote BENCH_batch.json");
+
+    // --- Phase 5: mixed-profile workload (per-request pruning policy). --
+    let registry = Arc::new(PolicyRegistry::builtin(&calib, 20.0));
+    println!(
+        "\ndriving mixed-profile workload: {} /v2/generate requests alternating \
+         quality/aggressive (pool of 2)",
+        n_requests
+    );
+    let (slices, per_config) = drive_profiles(&model, n_requests, registry, layout);
+    for s in &slices {
+        println!(
+            "[policy] {:<10} {} ok / {} rejected — mean rel FLOPs {:.1}",
+            s.profile, s.completed, s.rejected, s.mean_rel_flops
+        );
+        s.lat.report();
+    }
+    let out = Json::obj(vec![
+        ("benchmark", Json::str("serve_load_policy")),
+        ("model", Json::str(&model)),
+        ("replicas", Json::num(2.0)),
+        ("n_requests", Json::num(n_requests as f64)),
+        ("profiles", Json::arr(slices.iter().map(|s| s.to_json()))),
+        ("prefix_per_config", per_config),
+        ("measured", Json::Bool(true)),
+        (
+            "methodology",
+            Json::str(
+                "One pool of 2 replicas serving /v2/generate traffic that alternates \
+                 between the quality and aggressive built-in profiles over 4 repeated \
+                 samples x rotating questions (so both profiles revisit warm AV \
+                 prefixes). Per-profile mean relative_flops shows the quality/latency \
+                 tier split one pool sustains concurrently; prefix_per_config (from \
+                 GET /v1/pool) shows per-spec prefix-cache isolation — each profile's \
+                 pruning-config hash owns its own entries/hits/misses row.",
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_policy.json", out.to_string() + "\n")
+        .expect("write BENCH_policy.json");
+    println!("wrote BENCH_policy.json");
 }

@@ -51,9 +51,7 @@ fn main() {
                 global_budget: calib.budget,
                 fine,
                 fine_percent: 20.0,
-                seed: 0,
-                global_layer: None,
-                fine_during_decode: false,
+                ..PruningPlan::vanilla()
             },
         ));
     }

@@ -9,6 +9,7 @@ mod bench_common;
 use fastav::avsynth::{gen_sample, Dataset};
 use fastav::coordinator::{Coordinator, Event, GenRequest, Priority};
 use fastav::model::{GenerateOptions, PruningPlan, RequestInput};
+use fastav::policy::PruningSpec;
 use fastav::serving::PoolConfig;
 use fastav::util::bench::stats_from;
 
@@ -77,11 +78,9 @@ fn run_pool_comparison(model: &str) {
                     prompt: s.prompt,
                     segments: s.segments,
                     frame_of: s.frame_of,
-                    opts: GenerateOptions {
-                        plan: calib.plan(20.0),
-                        max_gen: if i % 4 == 3 { 16 } else { 2 },
-                        ..Default::default()
-                    },
+                    spec: PruningSpec::from_plan(calib.plan(20.0)).expect("valid plan"),
+                    max_gen: if i % 4 == 3 { 16 } else { 2 },
+                    sampling: Default::default(),
                     priority: Priority::Normal,
                     deadline: None,
                 };

@@ -66,9 +66,7 @@ impl Calibration {
             global_budget: self.budget,
             fine,
             fine_percent: p,
-            seed: 0,
-            global_layer: None,
-            fine_during_decode: false,
+            ..PruningPlan::vanilla()
         }
     }
 

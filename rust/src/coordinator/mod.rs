@@ -31,21 +31,64 @@ use anyhow::{anyhow, Result};
 pub use scheduler::{Priority, PushError, SchedStats, SchedulerQueue};
 
 use crate::metrics::Registry;
-use crate::model::{GenerateOptions, GenerateResult};
+use crate::model::{GenerateOptions, GenerateResult, Sampling};
+use crate::policy::PruningSpec;
 use crate::serving::{PoolConfig, PoolStats, ReplicaPool, ReplicaStatus, SubmitError};
 use crate::tokens::Segment;
 
-/// A generation request (owned data — crosses threads).
+/// A generation request (owned data — crosses threads). The pruning
+/// policy travels with the request as a validated [`PruningSpec`]; the
+/// engine resolves it to its [`crate::model::PruningPlan`] at `begin`,
+/// and the serving layers consult the spec directly for admission
+/// (effective keep budget), prefix affinity (pruning-config hash), and
+/// decode-batch compatibility.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
     pub prompt: Vec<u32>,
     pub segments: Vec<Segment>,
     pub frame_of: Vec<i32>,
-    pub opts: GenerateOptions,
+    /// Per-request pruning policy (profile-resolved at the API layer).
+    pub spec: PruningSpec,
+    /// Generation cap for this request.
+    pub max_gen: usize,
+    /// Token-selection parameters.
+    pub sampling: Sampling,
     pub priority: Priority,
     /// Optional per-request deadline, measured from submission; an
     /// expired request aborts between scheduling quanta.
     pub deadline: Option<Duration>,
+}
+
+impl GenRequest {
+    /// A request running `spec` with defaults for everything request-
+    /// shaping (normal priority, no deadline, default sampling).
+    pub fn with_spec(
+        prompt: Vec<u32>,
+        segments: Vec<Segment>,
+        frame_of: Vec<i32>,
+        spec: PruningSpec,
+        max_gen: usize,
+    ) -> GenRequest {
+        GenRequest {
+            prompt,
+            segments,
+            frame_of,
+            spec,
+            max_gen,
+            sampling: Sampling::default(),
+            priority: Priority::Normal,
+            deadline: None,
+        }
+    }
+
+    /// Resolve the spec into the engine's per-request options.
+    pub fn options(&self) -> GenerateOptions {
+        GenerateOptions {
+            plan: self.spec.to_plan(),
+            max_gen: self.max_gen,
+            sampling: self.sampling.clone(),
+        }
+    }
 }
 
 /// Streaming events delivered to the submitter.
@@ -154,6 +197,14 @@ impl Coordinator {
     /// AV-prefix cache accounting (hits/misses/evictions, entries, bytes).
     pub fn prefix_stats(&self) -> crate::kvcache::PrefixCacheStats {
         self.pool.prefix_stats()
+    }
+
+    /// Per-pruning-config prefix-cache accounting: one row per config
+    /// hash with its own entries/bytes/hit/miss counters, so
+    /// mixed-profile pools report per-spec reuse instead of one
+    /// aggregate (the `per_config` block of `GET /v1/pool`).
+    pub fn prefix_per_config(&self) -> Vec<crate::kvcache::PerConfigPrefixStats> {
+        self.pool.prefix_cache().per_config_stats()
     }
 
     /// Pool-wide decode-batch accounting: `(quanta, tokens)`; their

@@ -1,27 +1,37 @@
 //! HTTP API surface: the handler shared by `fastav serve`, the serving
 //! example, and the integration tests.
 //!
-//! Endpoints:
-//! * `POST /v1/generate` — body `{"dataset": "...", "index": N,
+//! ## Endpoints
+//!
+//! | Method | Path               | Purpose |
+//! |--------|--------------------|---------|
+//! | POST   | `/v2/generate`     | Generate under a **named pruning profile** with optional per-request spec overrides; returns the v1 payload plus the resolved `policy` block. |
+//! | POST   | `/v1/generate`     | Legacy surface: a thin adapter onto the registry's default profile (`no_pruning: true` → the `off` profile). **Responses** are byte-compatible with the pre-profile API (same key set, same values for the same config — golden-tested); requests are now strictly validated, so bodies with unknown fields that were silently tolerated before get a 400. |
+//! | GET    | `/v1/policies`     | The profile registry: default profile name + every profile's canonical spec, `spec_hash`, and prefix-shareability. |
+//! | POST   | `/v1/cancel`       | Cooperative cancellation by request id. |
+//! | POST   | `/v1/cache/flush`  | Evict every lease-free AV-prefix cache entry. |
+//! | GET    | `/v1/pool`         | Per-replica status, conservation ledger, prefix-cache stats (aggregate **and** per-pruning-config rows), KV block gauges, decode-batch occupancy. |
+//! | GET    | `/metrics`         | Prometheus text exposition (includes `fastav_requests_total{profile="..."}`). |
+//! | GET    | `/healthz`         | Liveness. |
+//!
+//! ## Request bodies
+//!
+//! Both generate endpoints take a JSON object and **reject unknown
+//! fields with a 400 listing them** (a typo like `"max_token"` fails
+//! loudly instead of silently using defaults).
+//!
+//! * `POST /v1/generate` — `{"dataset": "...", "index": N,
 //!   "no_pruning": bool, "priority": "high"?, "max_gen": N?,
 //!   "deadline_ms": N?, "question": "what_scene"|"what_sound"|
-//!   "scene_sound"?}`; generates the avsynth sample's answer and returns
-//!   tokens + efficiency metrics (including `prefix_hit` /
-//!   `prefix_tokens_reused` from the AV-prefix cache) + the pool request
-//!   id. The optional `question` override re-asks a *different* question
-//!   about the same sample — the workload shape the prefix cache
-//!   accelerates, since the AV prefix K/V is shared across questions.
-//! * `POST /v1/cancel` — body `{"request_id": N}`; cooperative
-//!   cancellation of a queued or running request.
-//! * `POST /v1/cache/flush` — evict every lease-free AV-prefix cache
-//!   entry; returns `{"flushed_entries": N, "freed_bytes": N}`.
-//! * `GET /v1/pool` — per-replica status, the pool conservation ledger,
-//!   prefix-cache stats (`hits`/`misses`/`evictions`/`entries`/`bytes`),
-//!   shared KV block-pool gauges (`used`/`shared`/`free`), and the
-//!   `decode_batch` block (`quanta`/`tokens`/`mean_occupancy` of the
-//!   fused continuous-batching decode path).
-//! * `GET /metrics` — Prometheus text exposition.
-//! * `GET /healthz` — liveness.
+//!   "scene_sound"?}`. The optional `question` override re-asks a
+//!   *different* question about the same sample — the workload shape the
+//!   AV-prefix cache accelerates.
+//! * `POST /v2/generate` — the same request fields minus `no_pruning`,
+//!   plus `"profile": "name"?` (default: the registry default) and
+//!   `"pruning": {spec overrides}?` (deep-merged onto the profile, then
+//!   re-validated; see `crate::policy`). The response adds
+//!   `"policy": {"profile", "spec", "spec_hash"}` with the fully
+//!   resolved spec the request actually ran under.
 //!
 //! Backpressure mapping: a full queue is `429` with `Retry-After`; a
 //! shutting-down pool is `503`. Every response echoes the client's
@@ -35,23 +45,39 @@ use super::{Handler, Request, Response};
 use crate::avsynth::{gen_sample, Dataset, QuestionKind};
 use crate::coordinator::{Coordinator, Event, GenRequest, Priority};
 use crate::eval::exact_match;
-use crate::model::{GenerateOptions, PruningPlan};
+use crate::metrics::labeled;
+use crate::model::Sampling;
+use crate::policy::{PolicyRegistry, PruningSpec};
 use crate::serving::SubmitError;
 use crate::tokens::{render_answer, Layout};
 use crate::util::json::Json;
 
-/// Build the request handler for a running coordinator. `max_gen` is
-/// the operator-configured generation cap: the default for requests
-/// that don't ask, and the ceiling for requests that do.
+/// Fields `POST /v1/generate` accepts; anything else is a 400.
+const V1_GENERATE_KEYS: &[&str] = &[
+    "dataset", "index", "no_pruning", "priority", "max_gen", "deadline_ms", "question",
+];
+
+/// Fields `POST /v2/generate` accepts (`no_pruning` is subsumed by the
+/// `off` profile).
+const V2_GENERATE_KEYS: &[&str] = &[
+    "dataset", "index", "priority", "max_gen", "deadline_ms", "question", "profile",
+    "pruning",
+];
+
+/// Build the request handler for a running coordinator. `registry` maps
+/// profile names to pruning specs (its default profile is what
+/// `/v1/generate` serves); `max_gen` is the operator-configured
+/// generation cap: the default for requests that don't ask, and the
+/// ceiling for requests that do.
 pub fn make_handler(
     coord: Arc<Coordinator>,
     layout: Layout,
-    plan: PruningPlan,
+    registry: Arc<PolicyRegistry>,
     max_gen: usize,
     base_seed: u64,
 ) -> Handler {
     Arc::new(move |req: &Request| {
-        let resp = route(req, &coord, &layout, &plan, max_gen, base_seed);
+        let resp = route(req, &coord, &layout, &registry, max_gen, base_seed);
         echo_request_id(req, resp)
     })
 }
@@ -71,7 +97,7 @@ fn route(
     req: &Request,
     coord: &Coordinator,
     layout: &Layout,
-    plan: &PruningPlan,
+    registry: &PolicyRegistry,
     max_gen: usize,
     base_seed: u64,
 ) -> Response {
@@ -79,7 +105,13 @@ fn route(
         ("GET", "/healthz") => Response::text(200, "ok"),
         ("GET", "/metrics") => Response::text(200, &coord.metrics.export()),
         ("GET", "/v1/pool") => pool_status(coord),
-        ("POST", "/v1/generate") => generate(req, coord, layout, plan, max_gen, base_seed),
+        ("GET", "/v1/policies") => Response::json(200, registry.to_json().to_string()),
+        ("POST", "/v1/generate") => {
+            generate(req, coord, layout, registry, max_gen, base_seed, ApiVersion::V1)
+        }
+        ("POST", "/v2/generate") => {
+            generate(req, coord, layout, registry, max_gen, base_seed, ApiVersion::V2)
+        }
         ("POST", "/v1/cancel") => cancel(req, coord),
         ("POST", "/v1/cache/flush") => cache_flush(coord),
         ("GET", _) | ("POST", _) => Response::text(404, "not found"),
@@ -92,6 +124,17 @@ fn parse_body(req: &Request) -> Result<Json, Response> {
         .map_err(|_| ())
         .and_then(|s| Json::parse(s).map_err(|_| ()))
         .map_err(|_| Response::text(400, "invalid JSON body"))
+}
+
+/// Strict body validation: the generate endpoints take an object and
+/// reject unknown fields by name (shared logic with the spec/profile
+/// parsers — `policy::check_keys`), so client typos fail loudly.
+fn check_body_keys(body: &Json, allowed: &[&str]) -> Result<(), Response> {
+    let Some(obj) = body.as_obj() else {
+        return Err(Response::text(400, "request body must be a JSON object"));
+    };
+    crate::policy::check_keys(obj, allowed, "request body")
+        .map_err(|e| Response::text(400, &e))
 }
 
 fn pool_status(coord: &Coordinator) -> Response {
@@ -114,6 +157,19 @@ fn pool_status(coord: &Coordinator) -> Response {
     let p = coord.prefix_stats();
     let b = coord.block_stats();
     let (bq, bt) = coord.decode_batch_stats();
+    // Per-pruning-config rows: mixed-profile pools report per-spec
+    // reuse instead of one profile-blind aggregate. Config keys are
+    // hashes; hex keeps them exact (f64 JSON numbers cannot hold u64).
+    let per_config = coord.prefix_per_config().into_iter().map(|r| {
+        Json::obj(vec![
+            ("config", Json::str(&format!("{:016x}", r.config))),
+            ("entries", Json::num(r.entries as f64)),
+            ("bytes", Json::num(r.bytes as f64)),
+            ("trie_nodes", Json::num(r.trie_nodes as f64)),
+            ("hits", Json::num(r.hits as f64)),
+            ("misses", Json::num(r.misses as f64)),
+        ])
+    });
     let out = Json::obj(vec![
         ("replicas", Json::arr(replicas)),
         (
@@ -140,6 +196,7 @@ fn pool_status(coord: &Coordinator) -> Response {
                 ("misses", Json::num(p.misses as f64)),
                 ("evictions", Json::num(p.evictions as f64)),
                 ("insertions", Json::num(p.insertions as f64)),
+                ("per_config", Json::arr(per_config)),
             ]),
         ),
         (
@@ -191,16 +248,87 @@ fn cancel(req: &Request, coord: &Coordinator) -> Response {
     Response::json(if found { 200 } else { 404 }, out.to_string())
 }
 
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ApiVersion {
+    V1,
+    V2,
+}
+
+/// Resolve the pruning policy a generate request runs under.
+///
+/// * v1: the registry's default profile, or `off` when
+///   `no_pruning: true` — byte-compatible with the pre-profile API.
+/// * v2: the named `profile` (default: registry default) with the
+///   optional `pruning` override object merged on and re-validated.
+fn resolve_policy(
+    body: &Json,
+    registry: &PolicyRegistry,
+    version: ApiVersion,
+) -> Result<(String, PruningSpec), Response> {
+    match version {
+        ApiVersion::V1 => {
+            if body.get("no_pruning").as_bool().unwrap_or(false) {
+                let spec = registry.get("off").cloned().unwrap_or_else(PruningSpec::off);
+                Ok(("off".to_string(), spec))
+            } else {
+                Ok((
+                    registry.default_name().to_string(),
+                    registry.default_spec().clone(),
+                ))
+            }
+        }
+        ApiVersion::V2 => {
+            let obj = body.as_obj().expect("checked by check_body_keys");
+            let name = match obj.get("profile") {
+                None => registry.default_name(),
+                Some(v) => v.as_str().ok_or_else(|| {
+                    Response::text(400, "profile must be a string")
+                })?,
+            };
+            let Some(base) = registry.get(name) else {
+                return Err(Response::text(
+                    400,
+                    &format!(
+                        "unknown profile '{}' (known: {})",
+                        name,
+                        registry.names().join(", ")
+                    ),
+                ));
+            };
+            let spec = match obj.get("pruning") {
+                None => base.clone(),
+                Some(overrides) => base.with_overrides(overrides).map_err(|e| {
+                    Response::text(400, &format!("invalid pruning override: {}", e))
+                })?,
+            };
+            Ok((name.to_string(), spec))
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn generate(
     req: &Request,
     coord: &Coordinator,
     layout: &Layout,
-    plan: &PruningPlan,
+    registry: &PolicyRegistry,
     max_gen: usize,
     base_seed: u64,
+    version: ApiVersion,
 ) -> Response {
     let body = match parse_body(req) {
         Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let allowed = match version {
+        ApiVersion::V1 => V1_GENERATE_KEYS,
+        ApiVersion::V2 => V2_GENERATE_KEYS,
+    };
+    if let Err(resp) = check_body_keys(&body, allowed) {
+        return resp;
+    }
+    let (profile, spec) = match resolve_policy(&body, registry, version) {
+        Ok(ok) => ok,
         Err(resp) => return resp,
     };
     let dataset = body
@@ -209,7 +337,6 @@ fn generate(
         .and_then(Dataset::parse)
         .unwrap_or(Dataset::Avqa);
     let index = body.get("index").as_usize().unwrap_or(0) as u64;
-    let vanilla = body.get("no_pruning").as_bool().unwrap_or(false);
     let high_priority = body.get("priority").as_str() == Some("high");
     let req_max_gen = body
         .get("max_gen")
@@ -238,14 +365,23 @@ fn generate(
         prompt: sample.prompt.clone(),
         segments: sample.segments.clone(),
         frame_of: sample.frame_of.clone(),
-        opts: GenerateOptions {
-            plan: if vanilla { PruningPlan::vanilla() } else { plan.clone() },
-            max_gen: req_max_gen,
-            ..Default::default()
-        },
+        spec: spec.clone(),
+        max_gen: req_max_gen,
+        sampling: Sampling::default(),
         priority: if high_priority { Priority::High } else { Priority::Normal },
         deadline,
     };
+    // Per-profile traffic accounting; label values are registry-bounded
+    // (only known profile names reach this point). Series semantics:
+    // the *labeled* `fastav_requests_total{profile=...}` series count
+    // HTTP generate requests after policy resolution (including ones
+    // later rejected with 429/503), while the unlabeled series counts
+    // every pool submission (HTTP or direct); sum the labeled series —
+    // never the whole family — for per-profile dashboards.
+    coord
+        .metrics
+        .counter(&labeled("fastav_requests_total", "profile", &profile))
+        .inc();
     let (id, rx) = match coord.submit_with_id(request) {
         Ok(ok) => ok,
         Err(SubmitError::Full(_)) => {
@@ -266,7 +402,7 @@ fn generate(
             Event::Token(_) => {}
             Event::Done(res) => {
                 let correct = exact_match(&res.tokens, &sample.answer);
-                let out = Json::obj(vec![
+                let mut fields = vec![
                     ("request_id", Json::num(id as f64)),
                     ("answer", Json::str(&render_answer(&res.tokens))),
                     ("expected", Json::str(&render_answer(&sample.answer))),
@@ -285,8 +421,20 @@ fn generate(
                         "prefix_tokens_reused",
                         Json::num(res.prefix_tokens_reused as f64),
                     ),
-                ]);
-                return Response::json(200, out.to_string())
+                ];
+                // v2 returns the resolved policy; v1 stays byte-compatible
+                // with the pre-profile response shape.
+                if version == ApiVersion::V2 {
+                    fields.push((
+                        "policy",
+                        Json::obj(vec![
+                            ("profile", Json::str(&profile)),
+                            ("spec", spec.to_json()),
+                            ("spec_hash", Json::str(&spec.spec_hash_hex())),
+                        ]),
+                    ));
+                }
+                return Response::json(200, Json::obj(fields).to_string())
                     .with_header("x-request-id", &id_str);
             }
             Event::Error(e) => {

@@ -32,7 +32,9 @@ pub mod block;
 pub mod prefix;
 
 pub use block::{block_bytes, BlockPool, BlockPoolStats, BLOCK_TOKENS};
-pub use prefix::{PrefixCache, PrefixCacheStats, PrefixEntry, PrefixLease};
+pub use prefix::{
+    PerConfigPrefixStats, PrefixCache, PrefixCacheStats, PrefixEntry, PrefixLease,
+};
 
 /// KV cache for one transformer layer: a refcounted block list plus the
 /// live length, logical capacity, and original token positions.

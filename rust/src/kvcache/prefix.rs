@@ -29,7 +29,7 @@
 //! the `fastav_prefix_cache_*` counters and `fastav_kv_blocks_*` gauges
 //! live in `/metrics`.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -42,6 +42,20 @@ use super::LayerCache;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over raw bytes — the one hash primitive behind
+/// [`hash_tokens`]/[`hash_mix`] and the policy layer's spec hashing
+/// ([`crate::policy::PruningSpec::spec_hash`]), so the constants can
+/// never drift between the cache keys and the spec identities that
+/// share the `/v1/pool` accounting namespace.
+pub fn hash_bytes(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
 
 /// FNV-1a over a `u32` stream (deterministic across runs/platforms, so
 /// cache keys are stable and loggable).
@@ -219,12 +233,35 @@ struct Slot {
     last_used: u64,
 }
 
+/// Bound on the per-config hit/miss counter map: config keys are
+/// unbounded across a server's lifetime (every distinct pruning spec ×
+/// layout makes one), so the map resets when it would exceed this —
+/// accounting degrades to fresh counters, never unbounded memory.
+const PER_CFG_CAP: usize = 512;
+
 #[derive(Default)]
 struct Inner {
     tries: HashMap<u64, Trie>,
     slots: HashMap<u64, Slot>,
     bytes: usize,
     tick: u64,
+    /// Per pruning-config `(hits, misses)` — the mixed-profile
+    /// observability split of the aggregate counters.
+    per_cfg: HashMap<u64, (u64, u64)>,
+}
+
+impl Inner {
+    fn count_cfg(&mut self, cfg: u64, hit: bool) {
+        if !self.per_cfg.contains_key(&cfg) && self.per_cfg.len() >= PER_CFG_CAP {
+            self.per_cfg.clear();
+        }
+        let e = self.per_cfg.entry(cfg).or_insert((0, 0));
+        if hit {
+            e.0 += 1;
+        } else {
+            e.1 += 1;
+        }
+    }
 }
 
 /// Counter/gauge handles bound by [`PrefixCache::bind_metrics`].
@@ -237,6 +274,21 @@ struct MetricSinks {
     blocks_used: Arc<Gauge>,
     blocks_shared: Arc<Gauge>,
     blocks_free: Arc<Gauge>,
+}
+
+/// Per-pruning-config slice of the cache accounting: entries/bytes/trie
+/// occupancy of one config's trie plus that config's own hit/miss
+/// counters. Mixed-profile pools report one row per config hash in
+/// `GET /v1/pool` instead of a profile-blind aggregate.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PerConfigPrefixStats {
+    /// The cache config key (pruning-config/layout/model hash).
+    pub config: u64,
+    pub entries: usize,
+    pub bytes: usize,
+    pub trie_nodes: usize,
+    pub hits: u64,
+    pub misses: u64,
 }
 
 /// Point-in-time cache accounting (the `/v1/pool` payload).
@@ -377,14 +429,16 @@ impl PrefixCache {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
             let tick = inner.tick;
-            match inner.slots.get_mut(&exact_key) {
+            let found = match inner.slots.get_mut(&exact_key) {
                 Some(slot) if pred(&slot.entry) => {
                     slot.active += 1;
                     slot.last_used = tick;
                     Some(Arc::clone(&slot.entry))
                 }
                 _ => None,
-            }
+            };
+            inner.count_cfg(cfg, found.is_some());
+            found
         };
         match found {
             Some(entry) => {
@@ -404,13 +458,15 @@ impl PrefixCache {
             inner.tick += 1;
             let tick = inner.tick;
             let key = inner.tries.get(&cfg).and_then(|t| t.longest(tokens));
-            key.and_then(|key| {
+            let found = key.and_then(|key| {
                 inner.slots.get_mut(&key).map(|slot| {
                     slot.active += 1;
                     slot.last_used = tick;
                     (key, Arc::clone(&slot.entry))
                 })
-            })
+            });
+            inner.count_cfg(cfg, found.is_some());
+            found
         };
         match found {
             Some((key, entry)) => {
@@ -552,6 +608,36 @@ impl PrefixCache {
         if let Some(slot) = inner.slots.get_mut(&key) {
             slot.active = slot.active.saturating_sub(1);
         }
+    }
+
+    /// Per-config accounting rows, sorted by config key. A config
+    /// appears when it has live entries, live trie nodes, or recorded
+    /// hit/miss traffic (counters survive eviction of the entries, up
+    /// to the [`PER_CFG_CAP`] reset).
+    pub fn per_config_stats(&self) -> Vec<PerConfigPrefixStats> {
+        fn row(
+            map: &mut BTreeMap<u64, PerConfigPrefixStats>,
+            cfg: u64,
+        ) -> &mut PerConfigPrefixStats {
+            map.entry(cfg)
+                .or_insert_with(|| PerConfigPrefixStats { config: cfg, ..Default::default() })
+        }
+        let inner = self.inner.lock().unwrap();
+        let mut map: BTreeMap<u64, PerConfigPrefixStats> = BTreeMap::new();
+        for slot in inner.slots.values() {
+            let e = row(&mut map, slot.cfg);
+            e.entries += 1;
+            e.bytes += slot.entry.bytes;
+        }
+        for (&cfg, trie) in &inner.tries {
+            row(&mut map, cfg).trie_nodes = trie.live_nodes();
+        }
+        for (&cfg, &(hits, misses)) in &inner.per_cfg {
+            let e = row(&mut map, cfg);
+            e.hits = hits;
+            e.misses = misses;
+        }
+        map.into_values().collect()
     }
 
     pub fn stats(&self) -> PrefixCacheStats {
@@ -759,6 +845,43 @@ mod tests {
         let s = cache.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
         assert_eq!(s.active_leases, 1);
+    }
+
+    #[test]
+    fn per_config_stats_split_mixed_configs() {
+        // Two pruning configs sharing one cache: the aggregate counters
+        // conflate them, the per-config rows must not.
+        let pool = BlockPool::new();
+        let cache = Arc::new(PrefixCache::new_in(pool.clone(), 0));
+        cache.insert(10, &[1, 2], entry_with(&pool, 2));
+        cache.insert(10, &[3, 4], entry_with(&pool, 2));
+        cache.insert(20, &[1, 2], entry_with(&pool, 2));
+        assert!(cache.lookup_exact(10, &[1, 2]).is_some()); // cfg 10 hit
+        assert!(cache.lookup_exact(10, &[9, 9]).is_none()); // cfg 10 miss
+        assert!(cache.lookup_exact(20, &[1, 2]).is_some()); // cfg 20 hit
+        assert!(cache.lookup_exact(30, &[1, 2]).is_none()); // cfg 30 miss only
+        let per = cache.per_config_stats();
+        assert_eq!(per.len(), 3);
+        let get = |cfg: u64| *per.iter().find(|r| r.config == cfg).unwrap();
+        let c10 = get(10);
+        assert_eq!((c10.entries, c10.hits, c10.misses), (2, 1, 1));
+        assert!(c10.bytes > 0 && c10.trie_nodes > 0);
+        let c20 = get(20);
+        assert_eq!((c20.entries, c20.hits, c20.misses), (1, 1, 0));
+        let c30 = get(30);
+        assert_eq!((c30.entries, c30.hits, c30.misses), (0, 0, 1));
+        // The per-config rows sum to the aggregate counters.
+        let s = cache.stats();
+        assert_eq!(per.iter().map(|r| r.hits).sum::<u64>(), s.hits);
+        assert_eq!(per.iter().map(|r| r.misses).sum::<u64>(), s.misses);
+        assert_eq!(per.iter().map(|r| r.entries).sum::<usize>(), s.entries);
+        assert_eq!(per.iter().map(|r| r.bytes).sum::<usize>(), s.bytes);
+        // Eviction clears a config's entries but keeps its traffic row.
+        cache.flush();
+        let per = cache.per_config_stats();
+        let c10 = *per.iter().find(|r| r.config == 10).unwrap();
+        assert_eq!((c10.entries, c10.bytes, c10.trie_nodes), (0, 0, 0));
+        assert_eq!((c10.hits, c10.misses), (1, 1), "counters survive eviction");
     }
 
     #[test]

@@ -23,6 +23,10 @@
 //!   pool, with copy-on-write compaction and a trie prefix cache that
 //!   shares the post-global-prune AV-prefix K/V across requests.
 //! * [`pruning`]     — FastAV global + fine pruning and all baselines.
+//! * [`policy`]      — per-request pruning policy: the typed/validated
+//!   `PruningSpec`, spec hashing, and the named profile registry behind
+//!   `/v2/generate` (`quality`/`balanced`/`aggressive`/`off` built-ins,
+//!   operator-extensible via `--policies`).
 //! * [`calibration`] — offline rollout calibration (paper Figs. 1–2).
 //! * [`flops`]       — theoretical FLOPs accounting (paper's protocol).
 //! * [`eval`]        — benchmark evaluation harness + scoring.
@@ -42,6 +46,7 @@ pub mod http;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod policy;
 pub mod pruning;
 pub mod runtime;
 pub mod serving;

@@ -4,10 +4,17 @@
 //! fastav serve     --model vl2sim --port 8077 [--no-pruning] [--p 20]
 //!                  [--replicas 4] [--max-inflight 4] [--kv-budget-mb 512]
 //!                  [--prefix-cache-mb 256] [--decode-batch 0] [--tp 1]
+//!                  [--policies policies.json] [--profile balanced]
 //! fastav eval      --model vl2sim --dataset avhbench --n 50 [--no-pruning]
 //! fastav calibrate --model vl2sim --n 100
 //! fastav info      --model vl2sim
 //! ```
+//!
+//! `serve` exposes the profile registry: the four built-ins (`quality`/
+//! `balanced`/`aggressive`/`off`) derived from the calibration, extended
+//! or overridden by the `--policies <json>` file (schema in ROADMAP.md;
+//! example in `examples/policies.example.json`), with `--profile`
+//! picking the default profile `/v1/generate` serves.
 
 use std::sync::Arc;
 
@@ -19,13 +26,14 @@ use fastav::coordinator::Coordinator;
 use fastav::eval::evaluate;
 use fastav::http::{Handler, Server};
 use fastav::model::{ModelEngine, PruningPlan};
+use fastav::policy::PolicyRegistry;
 use fastav::util::cli::Args;
 
 const OPTIONS: &[&str] = &[
     "model", "artifacts", "dataset", "n", "port", "p", "no-pruning", "seed",
     "max-gen", "queue-cap", "workers", "calibration", "replicas",
     "max-inflight", "kv-budget-mb", "deadline-ms", "prefix-cache-mb",
-    "decode-batch", "tp",
+    "decode-batch", "tp", "policies", "profile",
 ];
 
 fn main() {
@@ -76,6 +84,35 @@ fn plan_from_args(args: &Args, root: &std::path::Path, model: &str) -> Result<Pr
     let p = args.get_f64("p", 20.0).map_err(|e| anyhow!(e))?;
     let calib = load_calibration(args, root, model)?;
     Ok(calib.plan(p))
+}
+
+/// Build the serving profile registry: the calibrated built-ins (or the
+/// `off`-only registry under `--no-pruning`), extended by `--policies`,
+/// with `--profile` selecting the default.
+fn registry_from_args(
+    args: &Args,
+    root: &std::path::Path,
+    model: &str,
+) -> Result<PolicyRegistry> {
+    let mut registry = if args.has_flag("no-pruning") {
+        PolicyRegistry::off_only()
+    } else {
+        let p = args.get_f64("p", 20.0).map_err(|e| anyhow!(e))?;
+        let calib = load_calibration(args, root, model)?;
+        PolicyRegistry::builtin(&calib, p)
+    };
+    if let Some(path) = args.get("policies") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading --policies {}: {}", path, e))?;
+        let added = registry
+            .merge_policies_json(&text)
+            .map_err(|e| anyhow!("--policies {}: {}", path, e))?;
+        println!("loaded {} operator profile(s) from {}", added, path);
+    }
+    if let Some(name) = args.get("profile") {
+        registry.set_default(name).map_err(|e| anyhow!(e))?;
+    }
+    Ok(registry)
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
@@ -175,7 +212,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Tensor-parallel degree: each replica becomes a device group of
     // this many mesh devices (needs artifacts lowered with tp_degree).
     let tp = args.get_usize("tp", 1).map_err(|e| anyhow!(e))?;
-    let plan = plan_from_args(args, &root, &model)?;
+    let registry = Arc::new(registry_from_args(args, &root, &model)?);
 
     // Replica pool: each engine lives on its own thread.
     let cfg = fastav::serving::PoolConfig {
@@ -200,8 +237,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.layout
     };
 
-    let handler: Handler =
-        fastav::http::api::make_handler(Arc::clone(&coord), layout, plan.clone(), max_gen, 1234);
+    let handler: Handler = fastav::http::api::make_handler(
+        Arc::clone(&coord),
+        layout,
+        Arc::clone(&registry),
+        max_gen,
+        1234,
+    );
     let server = Server::bind(&format!("127.0.0.1:{}", port), workers, handler)?;
     println!(
         "fastav serving {} on http://{} ({} replica(s) × tp={})",
@@ -210,7 +252,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         coord.replica_count(),
         tp.max(1)
     );
+    println!(
+        "  profiles: [{}]  default: {}",
+        registry.names().join(", "),
+        registry.default_name()
+    );
+    println!("  POST /v2/generate     {{\"profile\": \"aggressive\", \"pruning\": {{...}}?, \"dataset\": \"avhbench\", \"index\": 0}}");
     println!("  POST /v1/generate     {{\"dataset\": \"avhbench\", \"index\": 0, \"question\": \"what_scene\"?}}");
+    println!("  GET  /v1/policies     (profile registry + spec hashes)");
     println!("  POST /v1/cancel       {{\"request_id\": 1}}");
     println!("  POST /v1/cache/flush  (evict lease-free AV-prefix entries)");
     println!("  GET  /v1/pool         GET /metrics      GET /healthz");

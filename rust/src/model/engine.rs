@@ -32,8 +32,17 @@ use crate::runtime::literals::{lit_f32, lit_i32, lit_i32_scalar, to_vec_f32};
 use crate::runtime::{ArtifactDir, DeviceMesh, ShardDispatch};
 use crate::tokens::{Segment, EOS};
 
-/// Complete pruning configuration for one request.
-#[derive(Debug, Clone)]
+/// Salt mixed into `plan.seed` for the global stage's RNG, shared by
+/// every site that computes a global keep set host-side (the prefill
+/// path, the prefix-resume path, and the admission keep-budget estimate)
+/// so they can never drift apart.
+pub(crate) const GLOBAL_SEED_SALT: u64 = 0x61E0;
+
+/// Complete pruning configuration for one request — the *resolved*,
+/// engine-level form. The serving API carries the validated/hashable
+/// [`crate::policy::PruningSpec`] wrapper and resolves it to this at the
+/// engine boundary.
+#[derive(Debug, Clone, PartialEq)]
 pub struct PruningPlan {
     pub global: GlobalStrategy,
     /// AV-token keep budget for the budget-matched ablation strategies.
@@ -48,6 +57,11 @@ pub struct PruningPlan {
     /// keep fine-pruning *during decode* using each step's importance row,
     /// compacting per-layer caches as generation proceeds.
     pub fine_during_decode: bool,
+    /// Modality keep floors applied after the global stage (the
+    /// earliest-position pruned tokens of a modality are added back
+    /// until the floor is met). `0` = no floor.
+    pub min_keep_vis: usize,
+    pub min_keep_aud: usize,
 }
 
 impl PruningPlan {
@@ -61,6 +75,8 @@ impl PruningPlan {
             seed: 0,
             global_layer: None,
             fine_during_decode: false,
+            min_keep_vis: 0,
+            min_keep_aud: 0,
         }
     }
 
@@ -74,14 +90,76 @@ impl PruningPlan {
     ) -> PruningPlan {
         PruningPlan {
             global: GlobalStrategy::FastAvPosition { vis_cutoff, keep_audio, keep_frames },
-            global_budget: 0,
             fine: FineStrategy::LowAttentive,
             fine_percent: p,
-            seed: 0,
-            global_layer: None,
-            fine_during_decode: false,
+            ..PruningPlan::vanilla()
         }
     }
+
+    /// Whether the global stage consumes layer-`g` attention scores
+    /// (those strategies run layer `g` unpruned first and apply the keep
+    /// set after it).
+    pub fn needs_scores(&self) -> bool {
+        matches!(
+            self.global,
+            GlobalStrategy::TopAttentive
+                | GlobalStrategy::LowAttentive
+                | GlobalStrategy::FastV { .. }
+        )
+    }
+
+    /// Whether the global stage consumes the attention-rollout probe.
+    pub fn needs_rollout(&self) -> bool {
+        matches!(
+            self.global,
+            GlobalStrategy::TopInformative | GlobalStrategy::LowInformative
+        )
+    }
+
+    /// Whether this plan's AV-prefix KV is query-independent and may be
+    /// published to / resumed from the shared prefix cache. Score- and
+    /// rollout-guided global stages look at the question, so their keep
+    /// sets are per-request and must never produce a positional-keep
+    /// prefix entry.
+    pub fn prefix_shareable(&self) -> bool {
+        plan_prefix_fingerprint(self).is_some()
+    }
+
+    /// Build the [`GlobalInputs`] this plan feeds to
+    /// [`crate::pruning::global_keep`] when no scores/rollout are needed.
+    fn global_inputs<'a>(
+        &self,
+        segments: &'a [Segment],
+        frame_of: &'a [i32],
+        scores: Option<&'a [f32]>,
+        rollout: Option<&'a [f32]>,
+    ) -> GlobalInputs<'a> {
+        GlobalInputs {
+            segments,
+            frame_of,
+            scores,
+            rollout,
+            budget: self.global_budget,
+            seed: self.seed ^ GLOBAL_SEED_SALT,
+            min_keep_vis: self.min_keep_vis,
+            min_keep_aud: self.min_keep_aud,
+        }
+    }
+}
+
+/// Host-side size of the live set entering the back layers under a
+/// query-independent plan: the global keep-set length over this prompt
+/// layout (the spec's *effective keep budget* — what serving admission
+/// charges KV against). `None` when the global stage needs scores or
+/// rollout, i.e. the keep set cannot be known before running the model.
+pub fn plan_effective_keep_len(
+    plan: &PruningPlan,
+    segments: &[Segment],
+    frame_of: &[i32],
+) -> Option<usize> {
+    plan_prefix_fingerprint(plan)?;
+    let keep = global_keep(&plan.global, &plan.global_inputs(segments, frame_of, None, None));
+    Some(keep.len())
 }
 
 /// Number of leading prompt tokens before the first text (question)
@@ -134,6 +212,11 @@ pub fn plan_prefix_fingerprint(plan: &PruningPlan) -> Option<u64> {
         plan.global_budget as u64,
         plan.seed,
         plan.global_layer.map(|g| g as u64 + 1).unwrap_or(0),
+        // Modality keep floors change the keep set, so they are part of
+        // the prefix identity (specs differing only in the *fine* stage
+        // still share entries — fine pruning happens after the split).
+        plan.min_keep_vis as u64,
+        plan.min_keep_aud as u64,
     ]))
 }
 
@@ -1178,16 +1261,8 @@ impl ModelEngine {
         // layer runs unpruned first and the keep applies after it.
         // Positional / random / rollout strategies prune before layer g
         // (paper semantics: tokens removed at the middle layer).
-        let needs_scores = matches!(
-            opts.plan.global,
-            GlobalStrategy::TopAttentive
-                | GlobalStrategy::LowAttentive
-                | GlobalStrategy::FastV { .. }
-        );
-        let needs_rollout = matches!(
-            opts.plan.global,
-            GlobalStrategy::TopInformative | GlobalStrategy::LowInformative
-        );
+        let needs_scores = opts.plan.needs_scores();
+        let needs_rollout = opts.plan.needs_rollout();
 
         let rollout_row: Option<Vec<f32>> = if needs_rollout {
             // Offline analysis pass; its FLOPs are calibration, not serving
@@ -1215,14 +1290,12 @@ impl ModelEngine {
             next_layer = g + 1;
         }
 
-        let ginp = GlobalInputs {
-            segments: &segments,
-            frame_of: input.frame_of,
-            scores: mid_scores.as_deref(),
-            rollout: rollout_row.as_deref(),
-            budget: opts.plan.global_budget,
-            seed: opts.plan.seed ^ 0x61E0,
-        };
+        let ginp = opts.plan.global_inputs(
+            &segments,
+            input.frame_of,
+            mid_scores.as_deref(),
+            rollout_row.as_deref(),
+        );
         let keep = global_keep(&opts.plan.global, &ginp);
         validate_keep(&keep, &segments).map_err(|e| anyhow!("global keep invalid: {}", e))?;
 
@@ -1246,16 +1319,17 @@ impl ModelEngine {
             ));
         }
         // Publish the AV prefix for future same-sample requests (no-op
-        // when the plan is query-dependent, no cache is attached, or the
-        // engine is sharded — prefix entries store full-head caches).
-        // Gated on `!needs_scores` explicitly: stage 2 advances `h_live`
-        // through layer g for score-based strategies, so the rows are
-        // post-front only when it did not run. Today every score-based
-        // strategy is also unfingerprintable (the insert would no-op
-        // anyway), but this ties the two conditions together instead of
-        // relying on that invariant — a future fingerprintable scores
-        // strategy skips the insert rather than caching post-g rows.
-        if !needs_scores {
+        // when no cache is attached or the engine is sharded — prefix
+        // entries store full-head caches). Gated on the plan itself:
+        // `prefix_shareable()` is the typed query-independence test (a
+        // spec with query-dependent global pruning must never insert a
+        // positional-keep entry), and `!needs_scores` additionally
+        // guards the row provenance — stage 2 advances `h_live` through
+        // layer g for score-based strategies, so the rows are post-front
+        // only when it did not run. Today `needs_scores` implies
+        // `!prefix_shareable()`, but stating both keeps a future
+        // fingerprintable scores strategy from caching post-g rows.
+        if opts.plan.prefix_shareable() && !needs_scores {
             self.maybe_insert_prefix(input, opts, g, &keep, &front, &h_live);
         }
         Self::compact_live(&mut h_live, &mut positions, &mut segments, &keep, d);
@@ -1329,14 +1403,7 @@ impl ModelEngine {
         // is computable host-side without running any layer — *before*
         // the lookup, so a keep-set mismatch below is counted as a miss
         // (nothing reused), never as a hit.
-        let ginp = GlobalInputs {
-            segments: input.segments,
-            frame_of: input.frame_of,
-            scores: None,
-            rollout: None,
-            budget: opts.plan.global_budget,
-            seed: opts.plan.seed ^ 0x61E0,
-        };
+        let ginp = opts.plan.global_inputs(input.segments, input.frame_of, None, None);
         let keep = global_keep(&opts.plan.global, &ginp);
         validate_keep(&keep, input.segments)
             .map_err(|e| anyhow!("global keep invalid: {}", e))?;
@@ -1562,6 +1629,8 @@ impl ModelEngine {
                 &gen.segments,
                 gen.opts.plan.fine_percent,
                 gen.opts.plan.seed ^ ((l as u64) << 8),
+                gen.opts.plan.min_keep_vis,
+                gen.opts.plan.min_keep_aud,
             );
             validate_keep(&keep, &gen.segments)
                 .map_err(|e| anyhow!("fine keep invalid at layer {}: {}", l, e))?;
@@ -1797,6 +1866,8 @@ impl ModelEngine {
             &segs,
             gen.opts.plan.fine_percent,
             gen.opts.plan.seed ^ ((l as u64) << 16) ^ gen.tokens.len() as u64,
+            gen.opts.plan.min_keep_vis,
+            gen.opts.plan.min_keep_aud,
         );
         if keep.len() < len {
             cache.compact(&keep);
@@ -2085,6 +2156,27 @@ impl ModelEngine {
         }
     }
 
+    /// [`Self::estimate_kv_bytes`] charged at the plan's *effective keep
+    /// budget*: for a query-independent global stage the keep set is
+    /// computable host-side, and every per-layer cache the request pins
+    /// is sized to at most `keep + max_gen` rows (front caches gather
+    /// keep rows; back-layer live sets only shrink from there). Falls
+    /// back to the dense prompt bound when the plan needs scores/rollout
+    /// (those plans also cache layer `g` over the full prompt). Serving
+    /// admission uses this, so mixed-profile pools charge each request
+    /// what its own pruning policy can actually pin.
+    pub fn estimate_kv_bytes_planned(
+        &self,
+        plan: &PruningPlan,
+        segments: &[Segment],
+        frame_of: &[i32],
+        max_gen: usize,
+    ) -> usize {
+        let live =
+            plan_effective_keep_len(plan, segments, frame_of).unwrap_or(segments.len());
+        self.estimate_kv_bytes(live, max_gen)
+    }
+
     /// Conservative upper bound on the KV bytes a request can pin:
     /// unpruned prompt + full generation budget, at bucket granularity,
     /// across every layer. Serving admission gates on this estimate.
@@ -2148,6 +2240,71 @@ mod tests {
         assert!(matches!(p.global, GlobalStrategy::FastAvPosition { .. }));
         assert_eq!(p.fine, FineStrategy::LowAttentive);
         assert!((p.fine_percent - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_stage_predicates() {
+        assert!(!PruningPlan::vanilla().needs_scores());
+        assert!(!PruningPlan::vanilla().needs_rollout());
+        assert!(PruningPlan::vanilla().prefix_shareable());
+        assert!(PruningPlan::fastav(8, 2, 0, 20.0).prefix_shareable());
+        let mut p = PruningPlan::vanilla();
+        p.global = GlobalStrategy::LowAttentive;
+        assert!(p.needs_scores());
+        assert!(!p.prefix_shareable(), "score-guided plans are per-request");
+        p.global = GlobalStrategy::TopInformative;
+        assert!(p.needs_rollout());
+        assert!(!p.prefix_shareable());
+        p.global = GlobalStrategy::Random;
+        assert!(!p.needs_scores() && !p.needs_rollout());
+        assert!(p.prefix_shareable(), "random is query-independent");
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_floors() {
+        let a = PruningPlan::fastav(8, 2, 0, 20.0);
+        let mut b = a.clone();
+        b.min_keep_aud = 4;
+        assert_ne!(
+            plan_prefix_fingerprint(&a),
+            plan_prefix_fingerprint(&b),
+            "floors change keep sets, so they must split prefix configs"
+        );
+        // Fine-stage-only differences share entries (pruning after the
+        // split never touches the prefix KV).
+        let mut c = a.clone();
+        c.fine_percent = 55.0;
+        assert_eq!(plan_prefix_fingerprint(&a), plan_prefix_fingerprint(&c));
+    }
+
+    #[test]
+    fn effective_keep_len_matches_global_keep() {
+        // 1 ctrl + 4 vis + 2 aud + 1 text.
+        let mut segments = vec![Segment::Ctrl];
+        segments.extend([Segment::Vis; 4]);
+        segments.extend([Segment::Aud; 2]);
+        segments.push(Segment::Text);
+        let frame_of = vec![-1i32; segments.len()];
+        // vis positions are 1..=4; cutoff 3 keeps vis 1,2. keep_audio 1.
+        let plan = PruningPlan::fastav(3, 1, 0, 20.0);
+        // ctrl + vis{1,2} + first aud + text = 5 live rows.
+        assert_eq!(plan_effective_keep_len(&plan, &segments, &frame_of), Some(5));
+        assert_eq!(
+            plan_effective_keep_len(&PruningPlan::vanilla(), &segments, &frame_of),
+            Some(segments.len())
+        );
+        let mut scored = PruningPlan::vanilla();
+        scored.global = GlobalStrategy::LowAttentive;
+        assert_eq!(
+            plan_effective_keep_len(&scored, &segments, &frame_of),
+            None,
+            "score-guided keep sets are unknowable host-side"
+        );
+        // Floors grow the host-side estimate the same way they grow the
+        // engine's keep set.
+        let mut floored = plan.clone();
+        floored.min_keep_aud = 2;
+        assert_eq!(plan_effective_keep_len(&floored, &segments, &frame_of), Some(6));
     }
 
     #[test]

@@ -12,8 +12,8 @@ pub mod weights;
 
 pub use config::ModelConfig;
 pub use engine::{
-    av_prefix_len, plan_prefix_fingerprint, request_prefix_affinity, CalibProbe,
-    GenerateOptions, GenerateResult, Generation, ModelEngine, PruningPlan, RequestInput,
-    StepEvent,
+    av_prefix_len, plan_effective_keep_len, plan_prefix_fingerprint, request_prefix_affinity,
+    CalibProbe, GenerateOptions, GenerateResult, Generation, ModelEngine, PruningPlan,
+    RequestInput, Sampling, StepEvent,
 };
 pub use weights::{ShardWeightLiterals, WeightLiterals, Weights};

@@ -1,0 +1,998 @@
+//! Per-request pruning policy: the typed [`PruningSpec`] and the named
+//! [`PolicyRegistry`] behind the versioned serving API.
+//!
+//! FastAV's contribution *is* a tunable two-stage pruning strategy, so
+//! the serving stack treats the pruning configuration as **request
+//! data**, not process configuration: every
+//! [`GenRequest`](crate::coordinator::GenRequest) carries a
+//! `PruningSpec`, the engine resolves it to a
+//! [`PruningPlan`] at `begin`, admission charges KV against the spec's
+//! effective keep budget, prefix-cache keys include the spec's pruning-
+//! config hash, and fused decode batches only mix spec-compatible
+//! requests. One pool therefore serves mixed quality/latency tiers, A/B
+//! pruning sweeps, and query-conditioned budgets concurrently.
+//!
+//! A `PruningSpec` is a *validated* wrapper over the engine's resolved
+//! [`PruningPlan`]:
+//!
+//! * constructed only through validating paths ([`PruningSpec::from_plan`],
+//!   [`PruningSpec::from_json`], [`PruningSpec::with_overrides`]) so an
+//!   in-flight spec is well-formed by construction;
+//! * canonicalized (an `off` fine stage zeroes its percent and decode
+//!   flag) so equal policies serialize — and therefore hash — equally;
+//! * hashable ([`PruningSpec::spec_hash`] — FNV over the canonical JSON)
+//!   for metrics, logs, and per-spec cache accounting;
+//! * JSON-codable with **strict unknown-key rejection** at every level,
+//!   so client typos fail loudly instead of silently using defaults.
+//!
+//! The [`PolicyRegistry`] maps operator-facing profile names to specs.
+//! Four built-ins ship with every calibrated server — `quality` /
+//! `balanced` / `aggressive` / `off` (the `off` profile subsumes the
+//! legacy `no_pruning` request flag) — and operators extend or override
+//! them with a JSON file via `fastav serve --policies <file>` (schema in
+//! `ROADMAP.md`, example in `examples/policies.example.json`).
+
+use std::collections::BTreeMap;
+
+use crate::calibration::Calibration;
+use crate::kvcache::prefix::hash_bytes;
+use crate::model::{plan_effective_keep_len, PruningPlan};
+use crate::pruning::{FineStrategy, GlobalStrategy};
+use crate::tokens::Segment;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------- spec
+
+/// A validated, hashable, per-request pruning policy. See the module
+/// docs; the inner [`PruningPlan`] is private so every spec in flight
+/// went through validation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PruningSpec {
+    plan: PruningPlan,
+}
+
+/// Names accepted for the global stage, in the order they are listed in
+/// error messages.
+const GLOBAL_NAMES: &str =
+    "off|fastav_position|random|top_attentive|low_attentive|top_informative|\
+     low_informative|vtw|fastv|streaming_window";
+const FINE_NAMES: &str = "off|random|top_attentive|low_attentive";
+
+fn global_name(g: &GlobalStrategy) -> &'static str {
+    match g {
+        GlobalStrategy::None => "off",
+        GlobalStrategy::FastAvPosition { .. } => "fastav_position",
+        GlobalStrategy::Random => "random",
+        GlobalStrategy::TopAttentive => "top_attentive",
+        GlobalStrategy::LowAttentive => "low_attentive",
+        GlobalStrategy::TopInformative => "top_informative",
+        GlobalStrategy::LowInformative => "low_informative",
+        GlobalStrategy::Vtw => "vtw",
+        GlobalStrategy::FastV { .. } => "fastv",
+        GlobalStrategy::StreamingWindow { .. } => "streaming_window",
+    }
+}
+
+fn fine_name(f: FineStrategy) -> &'static str {
+    match f {
+        FineStrategy::None => "off",
+        FineStrategy::Random => "random",
+        FineStrategy::TopAttentive => "top_attentive",
+        FineStrategy::LowAttentive => "low_attentive",
+    }
+}
+
+/// Strict unknown-key rejection shared by the spec/profile parsers and
+/// the HTTP body validators: any key outside `allowed` is an error
+/// naming both the offenders and the allowed set.
+pub fn check_keys(
+    o: &BTreeMap<String, Json>,
+    allowed: &[&str],
+    ctx: &str,
+) -> Result<(), String> {
+    let unknown: Vec<&str> = o
+        .keys()
+        .map(|s| s.as_str())
+        .filter(|k| !allowed.contains(k))
+        .collect();
+    if unknown.is_empty() {
+        Ok(())
+    } else {
+        Err(format!(
+            "unknown field(s) in {}: {} (allowed: {})",
+            ctx,
+            unknown.join(", "),
+            allowed.join(", ")
+        ))
+    }
+}
+
+fn usize_of(v: &Json, ctx: &str) -> Result<usize, String> {
+    v.as_usize()
+        .ok_or_else(|| format!("{} must be a non-negative integer", ctx))
+}
+
+fn f64_of(v: &Json, ctx: &str) -> Result<f64, String> {
+    v.as_f64().ok_or_else(|| format!("{} must be a number", ctx))
+}
+
+fn global_to_json(g: &GlobalStrategy) -> Json {
+    let mut pairs = vec![("strategy", Json::str(global_name(g)))];
+    match g {
+        GlobalStrategy::FastAvPosition { vis_cutoff, keep_audio, keep_frames } => {
+            pairs.push(("vis_cutoff", Json::num(*vis_cutoff as f64)));
+            pairs.push(("keep_audio", Json::num(*keep_audio as f64)));
+            pairs.push(("keep_frames", Json::num(*keep_frames as f64)));
+        }
+        GlobalStrategy::FastV { keep_ratio } => {
+            pairs.push(("keep_ratio", Json::num(*keep_ratio)));
+        }
+        GlobalStrategy::StreamingWindow { sink, recent } => {
+            pairs.push(("sink", Json::num(*sink as f64)));
+            pairs.push(("recent", Json::num(*recent as f64)));
+        }
+        _ => {}
+    }
+    Json::obj(pairs)
+}
+
+/// Parse a `"global"` object. `base` supplies defaults: when the object
+/// keeps the base's strategy, unmentioned parameters carry over; when it
+/// switches strategies, parameters start from zero-defaults (stale
+/// parameters of the old strategy are rejected as unknown keys).
+fn parse_global(j: &Json, base: &GlobalStrategy) -> Result<GlobalStrategy, String> {
+    let Some(o) = j.as_obj() else {
+        return Err("'global' must be a JSON object".into());
+    };
+    let name = match o.get("strategy") {
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| format!("global.strategy must be one of {}", GLOBAL_NAMES))?,
+        None => global_name(base),
+    };
+    let same = name == global_name(base);
+    match name {
+        "off" => {
+            check_keys(o, &["strategy"], "global (strategy 'off')")?;
+            Ok(GlobalStrategy::None)
+        }
+        "random" => {
+            check_keys(o, &["strategy"], "global (strategy 'random')")?;
+            Ok(GlobalStrategy::Random)
+        }
+        "top_attentive" => {
+            check_keys(o, &["strategy"], "global (strategy 'top_attentive')")?;
+            Ok(GlobalStrategy::TopAttentive)
+        }
+        "low_attentive" => {
+            check_keys(o, &["strategy"], "global (strategy 'low_attentive')")?;
+            Ok(GlobalStrategy::LowAttentive)
+        }
+        "top_informative" => {
+            check_keys(o, &["strategy"], "global (strategy 'top_informative')")?;
+            Ok(GlobalStrategy::TopInformative)
+        }
+        "low_informative" => {
+            check_keys(o, &["strategy"], "global (strategy 'low_informative')")?;
+            Ok(GlobalStrategy::LowInformative)
+        }
+        "vtw" => {
+            check_keys(o, &["strategy"], "global (strategy 'vtw')")?;
+            Ok(GlobalStrategy::Vtw)
+        }
+        "fastav_position" => {
+            check_keys(
+                o,
+                &["strategy", "vis_cutoff", "keep_audio", "keep_frames"],
+                "global (strategy 'fastav_position')",
+            )?;
+            let (mut vc, mut ka, mut kf) = match (same, base) {
+                (true, GlobalStrategy::FastAvPosition { vis_cutoff, keep_audio, keep_frames }) => {
+                    (*vis_cutoff, *keep_audio, *keep_frames)
+                }
+                _ => (0, 0, 0),
+            };
+            if let Some(v) = o.get("vis_cutoff") {
+                vc = usize_of(v, "global.vis_cutoff")?;
+            }
+            if let Some(v) = o.get("keep_audio") {
+                ka = usize_of(v, "global.keep_audio")?;
+            }
+            if let Some(v) = o.get("keep_frames") {
+                kf = usize_of(v, "global.keep_frames")?;
+            }
+            Ok(GlobalStrategy::FastAvPosition {
+                vis_cutoff: vc,
+                keep_audio: ka,
+                keep_frames: kf,
+            })
+        }
+        "fastv" => {
+            check_keys(o, &["strategy", "keep_ratio"], "global (strategy 'fastv')")?;
+            let mut kr = match (same, base) {
+                (true, GlobalStrategy::FastV { keep_ratio }) => *keep_ratio,
+                _ => 0.5,
+            };
+            if let Some(v) = o.get("keep_ratio") {
+                kr = f64_of(v, "global.keep_ratio")?;
+            }
+            if !kr.is_finite() || !(0.0..=1.0).contains(&kr) {
+                return Err("global.keep_ratio must be within [0, 1]".into());
+            }
+            Ok(GlobalStrategy::FastV { keep_ratio: kr })
+        }
+        "streaming_window" => {
+            check_keys(
+                o,
+                &["strategy", "sink", "recent"],
+                "global (strategy 'streaming_window')",
+            )?;
+            let (mut sink, mut recent) = match (same, base) {
+                (true, GlobalStrategy::StreamingWindow { sink, recent }) => (*sink, *recent),
+                _ => (0, 0),
+            };
+            if let Some(v) = o.get("sink") {
+                sink = usize_of(v, "global.sink")?;
+            }
+            if let Some(v) = o.get("recent") {
+                recent = usize_of(v, "global.recent")?;
+            }
+            Ok(GlobalStrategy::StreamingWindow { sink, recent })
+        }
+        other => Err(format!(
+            "unknown global strategy '{}' (one of {})",
+            other, GLOBAL_NAMES
+        )),
+    }
+}
+
+/// Parse a `"fine"` object with the same override semantics as the
+/// global stage: keeping the base's strategy merges parameters onto it,
+/// switching strategies resets `percent`/`during_decode` to defaults,
+/// and strategy `off` rejects stale parameters as unknown keys.
+fn parse_fine(j: &Json, plan: &mut PruningPlan) -> Result<(), String> {
+    let Some(o) = j.as_obj() else {
+        return Err("'fine' must be a JSON object".into());
+    };
+    let name = match o.get("strategy") {
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| format!("fine.strategy must be one of {}", FINE_NAMES))?,
+        None => fine_name(plan.fine),
+    };
+    let strategy = match name {
+        "off" => {
+            check_keys(o, &["strategy"], "fine (strategy 'off')")?;
+            plan.fine = FineStrategy::None;
+            plan.fine_percent = 0.0;
+            plan.fine_during_decode = false;
+            return Ok(());
+        }
+        "random" => FineStrategy::Random,
+        "top_attentive" => FineStrategy::TopAttentive,
+        "low_attentive" => FineStrategy::LowAttentive,
+        other => {
+            return Err(format!(
+                "unknown fine strategy '{}' (one of {})",
+                other, FINE_NAMES
+            ))
+        }
+    };
+    check_keys(o, &["strategy", "percent", "during_decode"], "fine")?;
+    if strategy != plan.fine {
+        // Strategy switch: parameters start from defaults, not the old
+        // strategy's leftovers.
+        plan.fine_percent = 0.0;
+        plan.fine_during_decode = false;
+    }
+    plan.fine = strategy;
+    if let Some(v) = o.get("percent") {
+        plan.fine_percent = f64_of(v, "fine.percent")?;
+    }
+    if let Some(v) = o.get("during_decode") {
+        plan.fine_during_decode = v
+            .as_bool()
+            .ok_or_else(|| "fine.during_decode must be a boolean".to_string())?;
+    }
+    Ok(())
+}
+
+impl PruningSpec {
+    /// The `off` spec: no pruning at all (subsumes the legacy
+    /// `no_pruning` request flag).
+    pub fn off() -> PruningSpec {
+        PruningSpec { plan: PruningPlan::vanilla() }
+    }
+
+    /// The deployed FastAV policy (positional global pruning +
+    /// low-attentive fine pruning at `p` percent).
+    pub fn fastav(vis_cutoff: usize, keep_audio: usize, keep_frames: usize, p: f64) -> PruningSpec {
+        PruningSpec::from_plan(PruningPlan::fastav(vis_cutoff, keep_audio, keep_frames, p))
+            .expect("fastav plan is always valid")
+    }
+
+    /// Validate and canonicalize an engine plan into a spec. Errors on
+    /// out-of-range numbers (`fine_percent` outside [0, 100], a zero
+    /// `global_layer`, a non-finite/off-range FastV `keep_ratio`).
+    pub fn from_plan(mut plan: PruningPlan) -> Result<PruningSpec, String> {
+        if !plan.fine_percent.is_finite() || !(0.0..=100.0).contains(&plan.fine_percent) {
+            return Err(format!(
+                "fine.percent must be within [0, 100], got {}",
+                plan.fine_percent
+            ));
+        }
+        if plan.global_layer == Some(0) {
+            return Err("global_layer must be >= 1 (layer 0 has no split)".into());
+        }
+        if let GlobalStrategy::FastV { keep_ratio } = plan.global {
+            if !keep_ratio.is_finite() || !(0.0..=1.0).contains(&keep_ratio) {
+                return Err("global.keep_ratio must be within [0, 1]".into());
+            }
+        }
+        // Seeds travel through JSON numbers (f64): anything past 2^53
+        // would round-trip to a *different* seed — and therefore a
+        // different keep set than the spec the API echoes back.
+        const SEED_MAX: u64 = 1 << 53;
+        if plan.seed > SEED_MAX {
+            return Err(format!(
+                "seed must be <= 2^53 ({}) to survive JSON round-trips, got {}",
+                SEED_MAX, plan.seed
+            ));
+        }
+        // Canonicalize: an off fine stage carries no percent/decode flag,
+        // so equal policies hash equally.
+        if plan.fine == FineStrategy::None {
+            plan.fine_percent = 0.0;
+            plan.fine_during_decode = false;
+        }
+        Ok(PruningSpec { plan })
+    }
+
+    /// The resolved engine plan (borrowed).
+    pub fn plan(&self) -> &PruningPlan {
+        &self.plan
+    }
+
+    /// The resolved engine plan (owned) — what `ModelEngine::begin`
+    /// executes.
+    pub fn to_plan(&self) -> PruningPlan {
+        self.plan.clone()
+    }
+
+    /// Whether this spec performs no pruning at all.
+    pub fn is_off(&self) -> bool {
+        self.plan.global == GlobalStrategy::None && self.plan.fine == FineStrategy::None
+    }
+
+    /// Whether the spec's AV-prefix KV is query-independent and may use
+    /// the shared prefix cache (insert *and* resume). The typed home of
+    /// the engine's former inline `!needs_scores` gating.
+    pub fn prefix_shareable(&self) -> bool {
+        self.plan.prefix_shareable()
+    }
+
+    /// Effective keep budget over a concrete prompt layout: live rows
+    /// entering the back layers, computable host-side for
+    /// query-independent specs ([`plan_effective_keep_len`]). Serving
+    /// admission charges KV bytes against this.
+    pub fn effective_keep_len(&self, segments: &[Segment], frame_of: &[i32]) -> Option<usize> {
+        plan_effective_keep_len(&self.plan, segments, frame_of)
+    }
+
+    /// Stable identity of this policy: FNV-1a over the canonical JSON
+    /// encoding (objects serialize key-sorted, so equal specs hash
+    /// equally across processes).
+    pub fn spec_hash(&self) -> u64 {
+        hash_bytes(self.to_json().to_string().as_bytes())
+    }
+
+    /// [`Self::spec_hash`] as the fixed-width hex string used in API
+    /// responses and `/v1/pool` per-config stats.
+    pub fn spec_hash_hex(&self) -> String {
+        format!("{:016x}", self.spec_hash())
+    }
+
+    /// Decode-batching compatibility class. Requests whose class matches
+    /// may advance in one fused `decode_batch` dispatch. Specs without
+    /// decode-time pruning all share class `0` (rows are independent, so
+    /// any such mix fuses); specs with `fine.during_decode` batch only
+    /// with identical decode policies — cache compaction mid-quantum
+    /// under mixed policies would make joint bucket picks thrash.
+    pub fn decode_class(&self) -> u64 {
+        if !self.plan.fine_during_decode || self.plan.fine == FineStrategy::None {
+            return 0;
+        }
+        // Everything that shapes a decode-time fine-pruning step is part
+        // of the class: strategy, percent, seed, and the modality floors
+        // (floors bind in the fine stage too, so they change keep sets).
+        hash_bytes(
+            format!(
+                "decode|{}|{:016x}|{}|{}|{}",
+                fine_name(self.plan.fine),
+                self.plan.fine_percent.to_bits(),
+                self.plan.seed,
+                self.plan.min_keep_vis,
+                self.plan.min_keep_aud
+            )
+            .as_bytes(),
+        )
+    }
+
+    /// Canonical JSON encoding (all fields present; `global_layer` is
+    /// `null` for the model default).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("global", global_to_json(&self.plan.global)),
+            ("global_budget", Json::num(self.plan.global_budget as f64)),
+            (
+                "global_layer",
+                match self.plan.global_layer {
+                    Some(g) => Json::num(g as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "fine",
+                Json::obj(vec![
+                    ("strategy", Json::str(fine_name(self.plan.fine))),
+                    ("percent", Json::num(self.plan.fine_percent)),
+                    ("during_decode", Json::Bool(self.plan.fine_during_decode)),
+                ]),
+            ),
+            (
+                "min_keep",
+                Json::obj(vec![
+                    ("vis", Json::num(self.plan.min_keep_vis as f64)),
+                    ("aud", Json::num(self.plan.min_keep_aud as f64)),
+                ]),
+            ),
+            ("seed", Json::num(self.plan.seed as f64)),
+        ])
+    }
+
+    /// Parse a spec from JSON. Missing fields take the `off` defaults;
+    /// unknown fields are rejected with a message listing them.
+    pub fn from_json(j: &Json) -> Result<PruningSpec, String> {
+        PruningSpec::off().with_overrides(j)
+    }
+
+    /// Apply a (possibly partial) JSON override object on top of this
+    /// spec and re-validate — the `/v2/generate` `"pruning"` body field
+    /// and the `--policies` profile entries both resolve through here.
+    /// `global`/`fine` objects merge field-wise while the strategy is
+    /// unchanged and reset to that strategy's defaults when it switches;
+    /// all other fields replace.
+    pub fn with_overrides(&self, overrides: &Json) -> Result<PruningSpec, String> {
+        let Some(o) = overrides.as_obj() else {
+            return Err("pruning spec must be a JSON object".into());
+        };
+        check_keys(
+            o,
+            &["global", "global_budget", "global_layer", "fine", "min_keep", "seed"],
+            "pruning spec",
+        )?;
+        let mut plan = self.plan.clone();
+        if let Some(g) = o.get("global") {
+            plan.global = parse_global(g, &self.plan.global)?;
+        }
+        if let Some(v) = o.get("global_budget") {
+            plan.global_budget = usize_of(v, "global_budget")?;
+        }
+        if let Some(v) = o.get("global_layer") {
+            plan.global_layer = match v {
+                Json::Null => None,
+                other => Some(usize_of(other, "global_layer")?),
+            };
+        }
+        if let Some(f) = o.get("fine") {
+            parse_fine(f, &mut plan)?;
+        }
+        if let Some(m) = o.get("min_keep") {
+            let Some(mo) = m.as_obj() else {
+                return Err("'min_keep' must be a JSON object".into());
+            };
+            check_keys(mo, &["vis", "aud"], "min_keep")?;
+            if let Some(v) = mo.get("vis") {
+                plan.min_keep_vis = usize_of(v, "min_keep.vis")?;
+            }
+            if let Some(v) = mo.get("aud") {
+                plan.min_keep_aud = usize_of(v, "min_keep.aud")?;
+            }
+        }
+        if let Some(v) = o.get("seed") {
+            plan.seed = usize_of(v, "seed")? as u64;
+        }
+        PruningSpec::from_plan(plan)
+    }
+}
+
+// ------------------------------------------------------------ registry
+
+/// Profile names must be metric-label and log safe.
+fn valid_profile_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+/// Named pruning profiles an operator serves. Always contains `off`.
+#[derive(Debug, Clone)]
+pub struct PolicyRegistry {
+    profiles: BTreeMap<String, PruningSpec>,
+    default_name: String,
+}
+
+impl PolicyRegistry {
+    /// A registry with only the `off` profile (serving without a
+    /// calibration — the `fastav serve --no-pruning` surface).
+    pub fn off_only() -> PolicyRegistry {
+        let mut profiles = BTreeMap::new();
+        profiles.insert("off".to_string(), PruningSpec::off());
+        PolicyRegistry { profiles, default_name: "off".to_string() }
+    }
+
+    /// A registry whose default is `spec` under `name`, plus `off` —
+    /// the adapter tests and examples use to serve one fixed plan.
+    pub fn with_default_spec(name: &str, spec: PruningSpec) -> PolicyRegistry {
+        assert!(valid_profile_name(name), "invalid profile name '{}'", name);
+        let mut r = PolicyRegistry::off_only();
+        r.profiles.insert(name.to_string(), spec);
+        r.default_name = name.to_string();
+        r
+    }
+
+    /// The four built-in profiles derived from a calibration, with
+    /// `balanced` (the paper's deployed policy at fine ratio `p`,
+    /// default 20) as the default:
+    ///
+    /// * `quality`   — calibrated cutoffs, fine at `p/2`: minimal
+    ///   accuracy risk, moderate savings.
+    /// * `balanced`  — `calibration.plan(p)` exactly (what `fastav
+    ///   serve` served before profiles existed, keeping `/v1/generate`
+    ///   behavior unchanged).
+    /// * `aggressive` — cutoffs scaled to 2/3, fine at `min(2p, 60)`,
+    ///   with an audio keep floor of 1 so the audio stream is never
+    ///   fully silenced.
+    /// * `off`       — no pruning (subsumes `no_pruning`).
+    pub fn builtin(calib: &Calibration, p: f64) -> PolicyRegistry {
+        let p = p.clamp(0.0, 100.0);
+        let scale23 = |n: usize| (n * 2 / 3).max(1);
+        let mut aggressive_plan = PruningPlan::fastav(
+            scale23(calib.vis_cutoff),
+            scale23(calib.keep_audio),
+            if calib.keep_frames > 0 { scale23(calib.keep_frames) } else { 0 },
+            (p * 2.0).min(60.0),
+        );
+        aggressive_plan.global_budget = scale23(calib.budget);
+        aggressive_plan.min_keep_aud = 1;
+        let mut r = PolicyRegistry::off_only();
+        r.profiles.insert(
+            "quality".into(),
+            PruningSpec::from_plan(calib.plan(p / 2.0)).expect("calibrated plan is valid"),
+        );
+        r.profiles.insert(
+            "balanced".into(),
+            PruningSpec::from_plan(calib.plan(p)).expect("calibrated plan is valid"),
+        );
+        r.profiles.insert(
+            "aggressive".into(),
+            PruningSpec::from_plan(aggressive_plan).expect("aggressive plan is valid"),
+        );
+        r.default_name = "balanced".into();
+        r
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.profiles.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&PruningSpec> {
+        self.profiles.get(name)
+    }
+
+    pub fn default_name(&self) -> &str {
+        &self.default_name
+    }
+
+    pub fn default_spec(&self) -> &PruningSpec {
+        &self.profiles[&self.default_name]
+    }
+
+    /// Add or replace a profile. The `off` name is reserved: it backs
+    /// the legacy `no_pruning` request flag, and redefining it would
+    /// silently turn "no pruning" into *some* pruning for v1 clients.
+    pub fn insert(&mut self, name: &str, spec: PruningSpec) -> Result<(), String> {
+        if !valid_profile_name(name) {
+            return Err(format!(
+                "invalid profile name '{}' (1-64 chars of [A-Za-z0-9_-])",
+                name
+            ));
+        }
+        if name == "off" {
+            return Err(
+                "the 'off' profile is reserved (it backs the legacy no_pruning flag) \
+                 and cannot be redefined"
+                    .into(),
+            );
+        }
+        self.profiles.insert(name.to_string(), spec);
+        Ok(())
+    }
+
+    /// Change the default profile; the name must exist.
+    pub fn set_default(&mut self, name: &str) -> Result<(), String> {
+        if !self.profiles.contains_key(name) {
+            return Err(format!(
+                "unknown profile '{}' (known: {})",
+                name,
+                self.names().join(", ")
+            ));
+        }
+        self.default_name = name.to_string();
+        Ok(())
+    }
+
+    /// Merge a `--policies` JSON document:
+    ///
+    /// ```json
+    /// {
+    ///   "default": "tier-gold",
+    ///   "profiles": {
+    ///     "tier-gold":  {"base": "quality", "fine": {"percent": 5.0}},
+    ///     "audio-safe": {"base": "balanced", "min_keep": {"aud": 8}}
+    ///   }
+    /// }
+    /// ```
+    ///
+    /// Each profile body is a spec-override object plus an optional
+    /// `"base"` naming the profile it starts from (default `off`); a
+    /// base must already exist — a built-in or a profile earlier in
+    /// alphabetical order, since entries merge in key order. Returns the
+    /// number of profiles added or replaced.
+    pub fn merge_policies_json(&mut self, text: &str) -> Result<usize, String> {
+        let root = Json::parse(text).map_err(|e| format!("policies file: {}", e))?;
+        let Some(o) = root.as_obj() else {
+            return Err("policies file must be a JSON object".into());
+        };
+        check_keys(o, &["default", "profiles"], "policies file")?;
+        let mut added = 0;
+        if let Some(profiles) = o.get("profiles") {
+            let Some(po) = profiles.as_obj() else {
+                return Err("'profiles' must be a JSON object".into());
+            };
+            for (name, body) in po {
+                let Some(bo) = body.as_obj() else {
+                    return Err(format!("profile '{}' must be a JSON object", name));
+                };
+                let base_name = match bo.get("base") {
+                    Some(v) => v
+                        .as_str()
+                        .ok_or_else(|| format!("profile '{}': 'base' must be a string", name))?,
+                    None => "off",
+                };
+                let base = self
+                    .get(base_name)
+                    .cloned()
+                    .ok_or_else(|| {
+                        format!(
+                            "profile '{}': unknown base '{}' (known: {})",
+                            name,
+                            base_name,
+                            self.names().join(", ")
+                        )
+                    })?;
+                let mut overrides = bo.clone();
+                overrides.remove("base");
+                let spec = base
+                    .with_overrides(&Json::Obj(overrides))
+                    .map_err(|e| format!("profile '{}': {}", name, e))?;
+                self.insert(name, spec)?;
+                added += 1;
+            }
+        }
+        if let Some(d) = o.get("default") {
+            let name = d
+                .as_str()
+                .ok_or_else(|| "'default' must be a string".to_string())?;
+            self.set_default(name)?;
+        }
+        Ok(added)
+    }
+
+    /// The `GET /v1/policies` payload: default name + every profile's
+    /// canonical spec, hash, and prefix-shareability.
+    pub fn to_json(&self) -> Json {
+        let profiles = Json::Obj(
+            self.profiles
+                .iter()
+                .map(|(name, spec)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("spec", spec.to_json()),
+                            ("spec_hash", Json::str(&spec.spec_hash_hex())),
+                            ("prefix_shareable", Json::Bool(spec.prefix_shareable())),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("default", Json::str(&self.default_name)),
+            ("profiles", profiles),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn calib() -> Calibration {
+        Calibration {
+            model: "tiny".into(),
+            samples: 8,
+            threshold: 0.01,
+            vis_cutoff: 6,
+            keep_audio: 3,
+            keep_frames: 0,
+            budget: 9,
+            profile: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn off_spec_subsumes_no_pruning() {
+        let off = PruningSpec::off();
+        assert!(off.is_off());
+        assert_eq!(off.to_plan(), PruningPlan::vanilla());
+        assert!(off.prefix_shareable());
+    }
+
+    #[test]
+    fn plan_roundtrip_is_identity() {
+        let plans = [
+            PruningPlan::vanilla(),
+            PruningPlan::fastav(40, 4, 2, 20.0),
+            {
+                let mut p = PruningPlan::fastav(8, 2, 0, 35.0);
+                p.fine_during_decode = true;
+                p.global_budget = 12;
+                p.global_layer = Some(3);
+                p.min_keep_aud = 2;
+                p.seed = 7;
+                p
+            },
+        ];
+        for plan in plans {
+            let spec = PruningSpec::from_plan(plan.clone()).unwrap();
+            assert_eq!(spec.to_plan(), plan, "from_plan/to_plan must round-trip");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_every_strategy() {
+        let globals = [
+            GlobalStrategy::None,
+            GlobalStrategy::FastAvPosition { vis_cutoff: 9, keep_audio: 2, keep_frames: 1 },
+            GlobalStrategy::Random,
+            GlobalStrategy::TopAttentive,
+            GlobalStrategy::LowAttentive,
+            GlobalStrategy::TopInformative,
+            GlobalStrategy::LowInformative,
+            GlobalStrategy::Vtw,
+            GlobalStrategy::FastV { keep_ratio: 0.5 },
+            GlobalStrategy::StreamingWindow { sink: 4, recent: 8 },
+        ];
+        for g in globals {
+            let mut plan = PruningPlan::fastav(0, 0, 0, 15.0);
+            plan.global = g;
+            plan.global_budget = 5;
+            let spec = PruningSpec::from_plan(plan).unwrap();
+            let back = PruningSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec, "JSON round-trip for {:?}", spec.plan().global);
+            assert_eq!(back.spec_hash(), spec.spec_hash());
+        }
+    }
+
+    #[test]
+    fn canonicalization_makes_equal_policies_hash_equal() {
+        let mut a = PruningPlan::vanilla();
+        a.fine_percent = 33.0; // meaningless with fine off
+        a.fine_during_decode = true;
+        let a = PruningSpec::from_plan(a).unwrap();
+        let b = PruningSpec::off();
+        assert_eq!(a, b);
+        assert_eq!(a.spec_hash(), b.spec_hash());
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range() {
+        let mut p = PruningPlan::fastav(8, 2, 0, 120.0);
+        assert!(PruningSpec::from_plan(p.clone()).is_err(), "percent > 100");
+        p.fine_percent = -1.0;
+        assert!(PruningSpec::from_plan(p.clone()).is_err(), "negative percent");
+        p.fine_percent = 20.0;
+        p.global_layer = Some(0);
+        assert!(PruningSpec::from_plan(p.clone()).is_err(), "layer 0");
+        p.global_layer = None;
+        p.global = GlobalStrategy::FastV { keep_ratio: 1.5 };
+        assert!(PruningSpec::from_plan(p).is_err(), "keep_ratio > 1");
+    }
+
+    #[test]
+    fn unknown_keys_rejected_at_every_level() {
+        let top = Json::parse(r#"{"globl": {"strategy": "off"}}"#).unwrap();
+        let err = PruningSpec::from_json(&top).unwrap_err();
+        assert!(err.contains("globl"), "message must name the typo: {}", err);
+        let nested =
+            Json::parse(r#"{"global": {"strategy": "vtw", "vis_cutoff": 3}}"#).unwrap();
+        let err = PruningSpec::from_json(&nested).unwrap_err();
+        assert!(err.contains("vis_cutoff"), "stale params rejected: {}", err);
+        let fine = Json::parse(r#"{"fine": {"pct": 10}}"#).unwrap();
+        assert!(PruningSpec::from_json(&fine).is_err());
+    }
+
+    #[test]
+    fn overrides_merge_params_and_reset_on_strategy_switch() {
+        let base = PruningSpec::fastav(40, 4, 2, 20.0);
+        // Same strategy: unmentioned params carry over.
+        let o = Json::parse(r#"{"global": {"vis_cutoff": 10}}"#).unwrap();
+        let merged = base.with_overrides(&o).unwrap();
+        assert_eq!(
+            merged.plan().global,
+            GlobalStrategy::FastAvPosition { vis_cutoff: 10, keep_audio: 4, keep_frames: 2 }
+        );
+        assert_eq!(merged.plan().fine_percent, 20.0, "fine stage untouched");
+        // Strategy switch: old params do not leak through.
+        let o = Json::parse(r#"{"global": {"strategy": "streaming_window", "sink": 3}}"#)
+            .unwrap();
+        let merged = base.with_overrides(&o).unwrap();
+        assert_eq!(
+            merged.plan().global,
+            GlobalStrategy::StreamingWindow { sink: 3, recent: 0 }
+        );
+        // Partial fine override.
+        let o = Json::parse(r#"{"fine": {"percent": 35.0}, "min_keep": {"aud": 2}}"#).unwrap();
+        let merged = base.with_overrides(&o).unwrap();
+        assert_eq!(merged.plan().fine_percent, 35.0);
+        assert_eq!(merged.plan().fine, FineStrategy::LowAttentive);
+        assert_eq!(merged.plan().min_keep_aud, 2);
+        assert_eq!(merged.plan().min_keep_vis, 0);
+        // Fine strategy switch resets percent/during_decode to defaults
+        // (no leftovers from the old strategy)...
+        let o = Json::parse(r#"{"fine": {"strategy": "random"}}"#).unwrap();
+        let merged = base.with_overrides(&o).unwrap();
+        assert_eq!(merged.plan().fine, FineStrategy::Random);
+        assert_eq!(merged.plan().fine_percent, 0.0, "switch resets percent");
+        // ...and `off` rejects stale parameters like the global stage.
+        let o = Json::parse(r#"{"fine": {"strategy": "off", "percent": 50}}"#).unwrap();
+        let err = base.with_overrides(&o).unwrap_err();
+        assert!(err.contains("percent"), "stale fine params rejected: {}", err);
+        // Seeds past 2^53 cannot survive a JSON round-trip: rejected.
+        let mut big = PruningPlan::vanilla();
+        big.seed = u64::MAX;
+        assert!(PruningSpec::from_plan(big).is_err());
+    }
+
+    #[test]
+    fn decode_class_groups_only_decode_pruners() {
+        let plain_a = PruningSpec::fastav(40, 4, 2, 20.0);
+        let plain_b = PruningSpec::off();
+        assert_eq!(plain_a.decode_class(), 0);
+        assert_eq!(plain_b.decode_class(), 0, "all non-decode-pruning specs fuse");
+        let mut p = PruningPlan::fastav(40, 4, 2, 20.0);
+        p.fine_during_decode = true;
+        let dec_a = PruningSpec::from_plan(p.clone()).unwrap();
+        assert_ne!(dec_a.decode_class(), 0);
+        assert_eq!(dec_a.decode_class(), dec_a.clone().decode_class());
+        p.fine_percent = 30.0;
+        let dec_b = PruningSpec::from_plan(p.clone()).unwrap();
+        assert_ne!(dec_a.decode_class(), dec_b.decode_class());
+        // Floors bind in the fine stage, so they split classes too.
+        p.min_keep_aud = 4;
+        let dec_c = PruningSpec::from_plan(p).unwrap();
+        assert_ne!(dec_b.decode_class(), dec_c.decode_class());
+    }
+
+    #[test]
+    fn builtin_registry_has_four_profiles() {
+        let r = PolicyRegistry::builtin(&calib(), 20.0);
+        assert_eq!(r.names(), vec!["aggressive", "balanced", "off", "quality"]);
+        assert_eq!(r.default_name(), "balanced");
+        // balanced == the pre-profile serving plan, byte-for-byte.
+        assert_eq!(r.default_spec().to_plan(), calib().plan(20.0));
+        assert!(r.get("off").unwrap().is_off());
+        let agg = r.get("aggressive").unwrap().plan();
+        assert_eq!(agg.min_keep_aud, 1, "aggressive never silences audio");
+        assert!(agg.fine_percent > 20.0);
+    }
+
+    #[test]
+    fn policies_file_merges_with_bases() {
+        let mut r = PolicyRegistry::builtin(&calib(), 20.0);
+        let n = r
+            .merge_policies_json(
+                r#"{
+                  "default": "tier-gold",
+                  "profiles": {
+                    "tier-gold": {"base": "quality", "fine": {"percent": 5.0}},
+                    "audio-safe": {"base": "balanced", "min_keep": {"aud": 8}}
+                  }
+                }"#,
+            )
+            .unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(r.default_name(), "tier-gold");
+        assert_eq!(r.get("tier-gold").unwrap().plan().fine_percent, 5.0);
+        assert_eq!(
+            r.get("tier-gold").unwrap().plan().global,
+            r.get("quality").unwrap().plan().global,
+            "base's global stage carries over"
+        );
+        assert_eq!(r.get("audio-safe").unwrap().plan().min_keep_aud, 8);
+        // Errors: unknown base, bad default, bad name, unknown key.
+        assert!(r
+            .merge_policies_json(r#"{"profiles": {"x": {"base": "nope"}}}"#)
+            .is_err());
+        assert!(r.merge_policies_json(r#"{"default": "nope"}"#).is_err());
+        assert!(r
+            .merge_policies_json(r#"{"profiles": {"bad name!": {}}}"#)
+            .is_err());
+        assert!(r.merge_policies_json(r#"{"profils": {}}"#).is_err());
+        // The off profile is reserved: a file cannot silently turn the
+        // legacy no_pruning flag into some pruning.
+        let err = r
+            .merge_policies_json(r#"{"profiles": {"off": {"base": "balanced"}}}"#)
+            .unwrap_err();
+        assert!(err.contains("reserved"), "{}", err);
+        assert!(r.get("off").unwrap().is_off(), "off profile untouched");
+    }
+
+    #[test]
+    fn registry_json_lists_profiles() {
+        let r = PolicyRegistry::builtin(&calib(), 20.0);
+        let j = r.to_json();
+        assert_eq!(j.get("default").as_str(), Some("balanced"));
+        let profiles = j.get("profiles").as_obj().unwrap();
+        assert_eq!(profiles.len(), 4);
+        let b = &profiles["balanced"];
+        assert!(b.get("spec").get("global").get("strategy").as_str().is_some());
+        assert_eq!(b.get("spec_hash").as_str().unwrap().len(), 16);
+        assert_eq!(b.get("prefix_shareable").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn spec_hash_is_stable_and_discriminating() {
+        let a = PruningSpec::fastav(40, 4, 2, 20.0);
+        assert_eq!(a.spec_hash(), a.clone().spec_hash());
+        let b = PruningSpec::fastav(40, 4, 2, 25.0);
+        assert_ne!(a.spec_hash(), b.spec_hash());
+        assert_eq!(a.spec_hash_hex().len(), 16);
+    }
+
+    #[test]
+    fn effective_keep_len_delegates() {
+        let mut segments = vec![Segment::Ctrl];
+        segments.extend([Segment::Vis; 4]);
+        segments.push(Segment::Text);
+        let frames = vec![-1i32; segments.len()];
+        let spec = PruningSpec::fastav(3, 0, 0, 0.0);
+        // ctrl + vis{1,2} + text = 4.
+        assert_eq!(spec.effective_keep_len(&segments, &frames), Some(4));
+        assert_eq!(
+            PruningSpec::off().effective_keep_len(&segments, &frames),
+            Some(segments.len())
+        );
+    }
+}

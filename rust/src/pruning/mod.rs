@@ -73,6 +73,14 @@ pub struct GlobalInputs<'a> {
     pub budget: usize,
     /// Seed for the random strategy.
     pub seed: u64,
+    /// Modality keep floor: whatever the strategy decides, at least this
+    /// many *visual* tokens survive (earliest-position pruned tokens are
+    /// added back). `0` = no floor.
+    pub min_keep_vis: usize,
+    /// Modality keep floor for *audio* tokens (the "Keep What Audio
+    /// Cannot Say" guarantee: aggressive budgets can never silence the
+    /// audio stream entirely). `0` = no floor.
+    pub min_keep_aud: usize,
 }
 
 /// Indices of AV (prunable) tokens.
@@ -121,6 +129,43 @@ fn budget_select(
     let mut chosen: Vec<usize> = ranked.into_iter().take(budget).collect();
     chosen.sort_unstable();
     chosen
+}
+
+/// Enforce the per-modality keep floors on a chosen AV keep set: when a
+/// strategy kept fewer than `min_keep_vis` visual (or `min_keep_aud`
+/// audio) tokens, the earliest-position pruned tokens of that modality
+/// are added back until the floor is met or the modality is exhausted.
+/// Floors only ever *grow* a keep set, so every safety invariant of the
+/// underlying strategy is preserved.
+fn apply_floors(segments: &[Segment], inp: &GlobalInputs, mut av_keep: Vec<usize>) -> Vec<usize> {
+    if inp.min_keep_vis == 0 && inp.min_keep_aud == 0 {
+        return av_keep;
+    }
+    let kept: std::collections::HashSet<usize> = av_keep.iter().copied().collect();
+    for (seg, floor) in [
+        (Segment::Vis, inp.min_keep_vis),
+        (Segment::Aud, inp.min_keep_aud),
+    ] {
+        if floor == 0 {
+            continue;
+        }
+        let have = av_keep.iter().filter(|&&i| segments[i] == seg).count();
+        if have >= floor {
+            continue;
+        }
+        let mut need = floor - have;
+        for (i, &g) in segments.iter().enumerate() {
+            if need == 0 {
+                break;
+            }
+            if g == seg && !kept.contains(&i) {
+                av_keep.push(i);
+                need -= 1;
+            }
+        }
+    }
+    av_keep.sort_unstable();
+    av_keep
 }
 
 /// Compute the global keep set (ascending indices into the original
@@ -225,7 +270,7 @@ pub fn global_keep(strategy: &GlobalStrategy, inp: &GlobalInputs) -> Vec<usize> 
             out
         }
     };
-    merge_keep(segments, av_keep)
+    merge_keep(segments, apply_floors(segments, inp, av_keep))
 }
 
 /// Fine-stage strategy selector (Table 3).
@@ -244,13 +289,20 @@ pub enum FineStrategy {
 /// `scores` are this layer's last-query importance over the *live* rows;
 /// `segments` gives each live row's modality; `percent` is the paper's P.
 /// Exactly `round(percent/100 * prunable)` AV rows are dropped (text/ctrl
-/// rows and the final row are untouchable).
+/// rows and the final row are untouchable) — except that the modality
+/// keep floors `min_keep_vis`/`min_keep_aud` are honored end-to-end:
+/// when a drop would leave fewer than the floor of a modality alive, the
+/// highest-scoring dropped rows of that modality are put back (so the
+/// floor a spec promises at the global stage cannot be eroded layer by
+/// layer; `0` = no floor, the exact-count paper semantics).
 pub fn fine_keep(
     strategy: FineStrategy,
     scores: &[f32],
     segments: &[Segment],
     percent: f64,
     seed: u64,
+    min_keep_vis: usize,
+    min_keep_aud: usize,
 ) -> Vec<usize> {
     let n = scores.len();
     assert_eq!(n, segments.len());
@@ -286,7 +338,38 @@ pub fn fine_keep(
             budget_select(&prunable, |i| scores[i], drop_n, false)
         }
     };
-    let drop_set: std::collections::HashSet<usize> = dropped.into_iter().collect();
+    let mut drop_set: std::collections::HashSet<usize> = dropped.into_iter().collect();
+    // Floor enforcement: put back the best-scoring dropped rows of any
+    // modality the drop would push under its floor.
+    for (seg, floor) in [(Segment::Vis, min_keep_vis), (Segment::Aud, min_keep_aud)] {
+        if floor == 0 {
+            continue;
+        }
+        let alive = (0..n)
+            .filter(|&i| segments[i] == seg && !drop_set.contains(&i))
+            .count();
+        if alive >= floor {
+            continue;
+        }
+        let mut need = floor - alive;
+        let mut candidates: Vec<usize> = drop_set
+            .iter()
+            .copied()
+            .filter(|&i| segments[i] == seg)
+            .collect();
+        // Highest score first (most informative survivors), position ties
+        // earlier-first — deterministic across runs.
+        candidates.sort_by(|&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+        });
+        for i in candidates {
+            if need == 0 {
+                break;
+            }
+            drop_set.remove(&i);
+            need -= 1;
+        }
+    }
     (0..n).filter(|i| !drop_set.contains(i)).collect()
 }
 
@@ -348,7 +431,16 @@ mod tests {
         rollout: Option<&'a [f32]>,
         budget: usize,
     ) -> GlobalInputs<'a> {
-        GlobalInputs { segments: s, frame_of: f, scores, rollout, budget, seed: 7 }
+        GlobalInputs {
+            segments: s,
+            frame_of: f,
+            scores,
+            rollout,
+            budget,
+            seed: 7,
+            min_keep_vis: 0,
+            min_keep_aud: 0,
+        }
     }
 
     #[test]
@@ -496,6 +588,41 @@ mod tests {
     }
 
     #[test]
+    fn floors_top_up_pruned_modalities() {
+        let (s, f) = segs();
+        // Vtw drops every AV token; a floor of 2 vis + 1 aud adds back
+        // the earliest-position tokens of each modality.
+        let mut inp = inputs(&s, &f, None, None, 0);
+        inp.min_keep_vis = 2;
+        inp.min_keep_aud = 1;
+        let keep = global_keep(&GlobalStrategy::Vtw, &inp);
+        // ctrl(0) + vis 1,2 + aud 7 + text 10,11.
+        assert_eq!(keep, vec![0, 1, 2, 7, 10, 11]);
+        validate_keep(&keep, &s).unwrap();
+    }
+
+    #[test]
+    fn floors_saturate_and_noop_when_met() {
+        let (s, f) = segs();
+        // Floor above the modality's token count keeps everything of it.
+        let mut inp = inputs(&s, &f, None, None, 0);
+        inp.min_keep_aud = 99;
+        let keep = global_keep(&GlobalStrategy::Vtw, &inp);
+        let aud_kept = keep.iter().filter(|&&i| s[i] == Segment::Aud).count();
+        assert_eq!(aud_kept, 3, "floor saturates at the audio token count");
+        // A floor already satisfied changes nothing.
+        let mut inp = inputs(&s, &f, None, None, 0);
+        inp.min_keep_vis = 3;
+        let strat = GlobalStrategy::FastAvPosition {
+            vis_cutoff: 4,
+            keep_audio: 1,
+            keep_frames: 0,
+        };
+        let keep = global_keep(&strat, &inp);
+        assert_eq!(keep, vec![0, 1, 2, 3, 7, 10, 11], "met floor is a no-op");
+    }
+
+    #[test]
     fn fine_keep_drops_exact_count() {
         // 8 live rows: ctrl, 5 vis, text, text(last).
         let segments = vec![
@@ -509,7 +636,7 @@ mod tests {
             Segment::Text,
         ];
         let scores = vec![0.5, 0.01, 0.2, 0.03, 0.4, 0.02, 0.9, 0.9];
-        let keep = fine_keep(FineStrategy::LowAttentive, &scores, &segments, 40.0, 0);
+        let keep = fine_keep(FineStrategy::LowAttentive, &scores, &segments, 40.0, 0, 0, 0);
         // prunable = 5 vis; drop round(0.4*5)=2 lowest (idx 1: .01, idx 5: .02).
         assert_eq!(keep, vec![0, 2, 3, 4, 6, 7]);
     }
@@ -518,15 +645,44 @@ mod tests {
     fn fine_top_attentive_drops_hottest() {
         let segments = vec![Segment::Ctrl, Segment::Vis, Segment::Vis, Segment::Text];
         let scores = vec![0.0, 0.9, 0.1, 0.0];
-        let keep = fine_keep(FineStrategy::TopAttentive, &scores, &segments, 50.0, 0);
+        let keep = fine_keep(FineStrategy::TopAttentive, &scores, &segments, 50.0, 0, 0, 0);
         assert_eq!(keep, vec![0, 2, 3]);
     }
 
     #[test]
     fn fine_none_keeps_all() {
         let segments = vec![Segment::Ctrl, Segment::Vis, Segment::Text];
-        let keep = fine_keep(FineStrategy::None, &[0.1, 0.2, 0.3], &segments, 20.0, 0);
+        let keep = fine_keep(FineStrategy::None, &[0.1, 0.2, 0.3], &segments, 20.0, 0, 0, 0);
         assert_eq!(keep, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn fine_floor_survives_aggressive_drops() {
+        // 1 ctrl + 3 vis + 2 aud + 1 text; 100% drop would erase every
+        // AV row — the floors must keep the best-scoring row of each
+        // floored modality alive at every layer.
+        let segments = vec![
+            Segment::Ctrl,
+            Segment::Vis,
+            Segment::Vis,
+            Segment::Vis,
+            Segment::Aud,
+            Segment::Aud,
+            Segment::Text,
+        ];
+        let scores = vec![0.0, 0.1, 0.9, 0.2, 0.3, 0.7, 0.0];
+        let keep =
+            fine_keep(FineStrategy::LowAttentive, &scores, &segments, 100.0, 0, 1, 1);
+        let vis: Vec<usize> =
+            keep.iter().copied().filter(|&i| segments[i] == Segment::Vis).collect();
+        let aud: Vec<usize> =
+            keep.iter().copied().filter(|&i| segments[i] == Segment::Aud).collect();
+        assert_eq!(vis, vec![2], "highest-scoring vis row survives the floor");
+        assert_eq!(aud, vec![5], "highest-scoring aud row survives the floor");
+        // Floors of zero keep the paper's exact-drop-count semantics.
+        let keep =
+            fine_keep(FineStrategy::LowAttentive, &scores, &segments, 100.0, 0, 0, 0);
+        assert_eq!(keep, vec![0, 6]);
     }
 
     #[test]
@@ -535,7 +691,7 @@ mod tests {
         let mut segments = segments;
         segments[5] = Segment::Vis; // last row is Vis but must survive
         let scores = vec![0.0; 6];
-        let keep = fine_keep(FineStrategy::LowAttentive, &scores, &segments, 100.0, 0);
+        let keep = fine_keep(FineStrategy::LowAttentive, &scores, &segments, 100.0, 0, 0, 0);
         assert!(keep.contains(&5));
     }
 

@@ -401,7 +401,10 @@ impl ReplicaPool {
             .or(self.cfg.default_deadline)
             .map(|d| Instant::now() + d);
         let prio = req.priority;
-        let affinity = request_prefix_affinity(&req.prompt, &req.segments, &req.opts.plan);
+        // Affinity key = AV-prefix tokens × the spec's pruning-config
+        // fingerprint: requests under different specs (different keep
+        // sets) never alias the same warm entry.
+        let affinity = request_prefix_affinity(&req.prompt, &req.segments, req.spec.plan());
         self.shared.submitted.fetch_add(1, Ordering::SeqCst);
         self.metrics.counter("fastav_requests_total").inc();
         let mut job = Job {

@@ -97,7 +97,10 @@ impl ReplicaEngine for ModelEngine {
             segments: &req.segments,
             frame_of: &req.frame_of,
         };
-        self.begin_generation(&input, &req.opts)
+        // Per-request plan resolution: the spec that traveled with the
+        // request becomes this generation's engine plan here, at the
+        // engine boundary — there is no engine-global plan.
+        self.begin_generation(&input, &req.options())
     }
 
     fn step(&mut self, gen: &mut Generation) -> Result<StepEvent> {
@@ -129,7 +132,16 @@ impl ReplicaEngine for ModelEngine {
     }
 
     fn estimate_bytes(&self, req: &GenRequest) -> usize {
-        self.estimate_kv_bytes(req.prompt.len(), req.opts.max_gen)
+        // Admission charges the spec's *effective keep budget*: for a
+        // query-independent global stage the post-prune live set is
+        // computable host-side, so an aggressive profile reserves far
+        // fewer KV bytes than a quality one on the same pool.
+        self.estimate_kv_bytes_planned(
+            req.spec.plan(),
+            &req.segments,
+            &req.frame_of,
+            req.max_gen,
+        )
     }
 
     fn attach_prefix_cache(&mut self, cache: Arc<PrefixCache>, _replica: usize) {
@@ -137,7 +149,7 @@ impl ReplicaEngine for ModelEngine {
     }
 
     fn prefix_probe(&self, req: &GenRequest) -> Option<PrefixCharge> {
-        self.prefix_shared_estimate(&req.prompt, &req.segments, &req.frame_of, &req.opts.plan)
+        self.prefix_shared_estimate(&req.prompt, &req.segments, &req.frame_of, req.spec.plan())
             .map(|(key, bytes)| PrefixCharge { key, bytes })
     }
 }
@@ -165,6 +177,10 @@ struct Active<G> {
     /// Shared-prefix charge reserved alongside (refcounted; see
     /// [`Admission::release_prefixed`]).
     prefix_charge: Option<PrefixCharge>,
+    /// Decode-batch compatibility class of the request's pruning spec
+    /// ([`crate::policy::PruningSpec::decode_class`]); fused quanta only
+    /// mix entries of one class.
+    spec_class: u64,
 }
 
 /// Pre-resolved metric handles for one replica thread.
@@ -305,6 +321,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                 }
             }
             m.queue_hist.observe(job.enqueued.elapsed().as_secs_f64());
+            let spec_class = job.req.spec.decode_class();
             match engine.begin(&job.req) {
                 Ok(gen) => {
                     sched.admit_with_affinity(
@@ -322,6 +339,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                         started: Instant::now(),
                         est_bytes: unique,
                         prefix_charge: charge,
+                        spec_class,
                     });
                 }
                 Err(e) => {
@@ -369,7 +387,8 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
             n => n.min(engine.max_decode_batch()),
         };
         let ready: Vec<bool> = active.iter().map(|a| engine.is_decoding(&a.gen)).collect();
-        let picked = sched.pick_batch(max_b, &ready);
+        let classes: Vec<u64> = active.iter().map(|a| a.spec_class).collect();
+        let picked = sched.pick_batch_classed(max_b, &ready, &classes);
         if picked.is_empty() {
             continue;
         }

@@ -143,7 +143,30 @@ impl StepScheduler {
     /// `ready` must be index-aligned with the entries (the replica's
     /// `active` vector). Returns ascending indices; empty iff no entries.
     pub fn pick_batch(&mut self, max_b: usize, ready: &[bool]) -> Vec<usize> {
+        self.pick_batch_classed(max_b, ready, &[])
+    }
+
+    /// [`Self::pick_batch`] with per-entry **spec-compatibility
+    /// classes** (aligned like `ready`; an empty slice means one shared
+    /// class). A fused batch drains only decode-ready entries whose
+    /// class matches the primary's — requests under decode-time pruning
+    /// policies fuse only with identical policies (their caches compact
+    /// mid-quantum, so mixing policies would thrash the joint bucket
+    /// pick), while everything else falls back to smaller batches or
+    /// single steps. Specs without decode-time pruning all share class
+    /// `0` ([`crate::policy::PruningSpec::decode_class`]), so ordinary
+    /// mixed-profile traffic still fuses at full occupancy.
+    pub fn pick_batch_classed(
+        &mut self,
+        max_b: usize,
+        ready: &[bool],
+        classes: &[u64],
+    ) -> Vec<usize> {
         assert_eq!(ready.len(), self.entries.len(), "ready mask misaligned");
+        assert!(
+            classes.is_empty() || classes.len() == self.entries.len(),
+            "classes misaligned"
+        );
         if self.entries.is_empty() {
             return Vec::new();
         }
@@ -155,11 +178,14 @@ impl StepScheduler {
         if max_b < 2 || !ready[primary] {
             return self.pick().into_iter().collect();
         }
+        let compatible = |i: usize| {
+            classes.is_empty() || classes[i] == classes[primary]
+        };
         let n = self.entries.len();
         let mut picked: Vec<usize> = Vec::new();
         for off in 0..n {
             let i = (primary + off) % n;
-            if ready[i] {
+            if ready[i] && compatible(i) {
                 picked.push(i);
                 if picked.len() == max_b {
                     break;
@@ -329,6 +355,31 @@ mod tests {
     fn pick_batch_empty_scheduler() {
         let mut s = StepScheduler::new();
         assert!(s.pick_batch(8, &[]).is_empty());
+    }
+
+    #[test]
+    fn pick_batch_classed_drains_only_compatible_entries() {
+        let mut s = StepScheduler::new();
+        for id in 0..4 {
+            s.admit(id, Priority::Normal, None);
+        }
+        let ready = vec![true; 4];
+        // Entries 0, 2 share class 7; entries 1, 3 share class 9.
+        let classes = vec![7u64, 9, 7, 9];
+        let picked = s.pick_batch_classed(8, &ready, &classes);
+        assert_eq!(picked, vec![0, 2], "only the primary's class fuses");
+        // Next quantum starts at entry 1: the other class fuses then.
+        let picked = s.pick_batch_classed(8, &ready, &classes);
+        assert_eq!(picked, vec![1, 3]);
+        assert_eq!(s.max_step_gap(), 0, "classes alternate without starvation");
+        // Cursor is now at entry 2: its class (7) fuses with entry 0,
+        // wrapping, and never with the 8/9 singletons.
+        let classes = vec![7u64, 8, 7, 9];
+        let picked = s.pick_batch_classed(8, &ready, &classes);
+        assert_eq!(picked, vec![0, 2]);
+        // An empty classes slice means one shared class — the legacy
+        // pick_batch behavior drains everyone.
+        assert_eq!(s.pick_batch(8, &ready), vec![0, 1, 2, 3]);
     }
 
     #[test]

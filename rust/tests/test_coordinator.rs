@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use fastav::avsynth::{gen_sample, Dataset};
 use fastav::coordinator::{Coordinator, Event, GenRequest, Priority};
-use fastav::model::{GenerateOptions, PruningPlan};
+use fastav::policy::PruningSpec;
 use fastav::tokens::Layout;
 
 fn layout() -> Layout {
@@ -20,7 +20,9 @@ fn request(idx: u64, priority: Priority) -> GenRequest {
         prompt: s.prompt,
         segments: s.segments,
         frame_of: s.frame_of,
-        opts: GenerateOptions { plan: PruningPlan::fastav(5, 2, 0, 20.0), max_gen: 3, ..Default::default() },
+        spec: PruningSpec::fastav(5, 2, 0, 20.0),
+        max_gen: 3,
+        sampling: Default::default(),
         priority,
         deadline: None,
     }

@@ -97,7 +97,7 @@ fn vtw_drops_all_av_tokens() {
         fine_percent: 0.0,
         seed: 0,
         global_layer: None,
-        fine_during_decode: false,
+        ..PruningPlan::vanilla()
     };
     let res = eng
         .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 2, ..Default::default() })
@@ -123,7 +123,7 @@ fn random_strategy_respects_budget() {
         fine_percent: 0.0,
         seed: 99,
         global_layer: None,
-        fine_during_decode: false,
+        ..PruningPlan::vanilla()
     };
     let res = eng
         .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 2, ..Default::default() })
@@ -148,7 +148,7 @@ fn attentive_strategies_run_score_capture() {
             fine_percent: 0.0,
             seed: 0,
             global_layer: None,
-            fine_during_decode: false,
+            ..PruningPlan::vanilla()
         };
         let res = eng
             .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 2, ..Default::default() })
@@ -179,7 +179,7 @@ fn informative_strategies_use_rollout() {
             fine_percent: 0.0,
             seed: 0,
             global_layer: None,
-            fine_during_decode: false,
+            ..PruningPlan::vanilla()
         };
         let res = eng
             .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 2, ..Default::default() })
@@ -204,7 +204,7 @@ fn fine_pruning_drops_expected_counts() {
         fine_percent: 25.0,
         seed: 0,
         global_layer: None,
-        fine_during_decode: false,
+        ..PruningPlan::vanilla()
     };
     let res = eng
         .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 2, ..Default::default() })
@@ -239,7 +239,7 @@ fn frontsplit_layer_sweep_runs() {
             fine_percent: 20.0,
             seed: 0,
             global_layer: Some(g),
-            fine_during_decode: false,
+            ..PruningPlan::vanilla()
         };
         let res = eng
             .generate(&RequestInput::from_sample(&s), &GenerateOptions { plan, max_gen: 2, ..Default::default() })

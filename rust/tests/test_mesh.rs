@@ -20,7 +20,8 @@ use std::time::{Duration, Instant};
 
 use fastav::coordinator::{Event, GenRequest, Priority};
 use fastav::metrics::Registry;
-use fastav::model::{GenerateOptions, GenerateResult, PruningPlan, StepEvent};
+use fastav::model::{GenerateResult, StepEvent};
+use fastav::policy::PruningSpec;
 use fastav::serving::{PoolConfig, PoolStats, ReplicaEngine, ReplicaPool};
 use fastav::tokens::Segment;
 use fastav::util::proptest::{run_prop, Gen};
@@ -91,7 +92,7 @@ impl ReplicaEngine for MeshMock {
             seed: req.prompt.iter().fold(0u64, |a, &t| a * 31 + t as u64),
             prefill_left: 2,
             produced: 0,
-            total: req.opts.max_gen.max(1),
+            total: req.max_gen.max(1),
         })
     }
 
@@ -141,7 +142,7 @@ impl ReplicaEngine for DirectMock {
             seed: req.prompt.iter().fold(0u64, |a, &t| a * 31 + t as u64),
             prefill_left: 2,
             produced: 0,
-            total: req.opts.max_gen.max(1),
+            total: req.max_gen.max(1),
         })
     }
 
@@ -195,11 +196,9 @@ fn request(seed_tok: u32, max_gen: usize) -> GenRequest {
         prompt: vec![seed_tok, 2, 3, 4],
         segments: vec![Segment::Ctrl, Segment::Vis, Segment::Aud, Segment::Text],
         frame_of: vec![-1, 0, -1, -1],
-        opts: GenerateOptions {
-            plan: PruningPlan::vanilla(),
-            max_gen,
-            ..Default::default()
-        },
+        spec: PruningSpec::off(),
+        max_gen,
+        sampling: Default::default(),
         priority: Priority::Normal,
         deadline: None,
     }

@@ -1,0 +1,321 @@
+//! Spec-equivalence and spec-compatibility properties of the policy
+//! redesign, run against mock engines so no AOT artifacts are needed
+//! (alongside `test_batching.rs`, whose harness style this follows):
+//!
+//! * **Spec equivalence:** a request built from a *profile-resolved*
+//!   `PruningSpec` drives the pool to a token-for-token identical stream
+//!   as the same request built the pre-refactor way (from the raw
+//!   engine `PruningPlan`). The mock derives every token from the spec
+//!   hash it saw at `begin`, so any drift between the two resolution
+//!   paths — profile lookup vs `from_plan` — changes a stream.
+//! * **Round-trip:** random-ish plans survive
+//!   `PruningSpec::from_plan(..).to_plan()` unchanged, and JSON
+//!   round-trips preserve the hash.
+//! * **Classed batching:** fused decode batches never mix decode-prune
+//!   specs with plain specs (the replica feeds
+//!   `PruningSpec::decode_class` into the scheduler); streams and the
+//!   conservation ledger stay identical to the unbatched run anyway.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastav::coordinator::{Event, GenRequest, Priority};
+use fastav::metrics::Registry;
+use fastav::model::{GenerateResult, PruningPlan, StepEvent};
+use fastav::policy::{PolicyRegistry, PruningSpec};
+use fastav::pruning::{FineStrategy, GlobalStrategy};
+use fastav::serving::{PoolConfig, ReplicaEngine, ReplicaPool};
+use fastav::tokens::Segment;
+use fastav::util::proptest::{run_prop, Gen};
+
+// ---------------------------------------------------------------- mock
+
+/// Token stream derived from (spec hash, step): resolution drift between
+/// two supposedly-equal specs changes every token.
+fn spec_token(spec_hash: u64, step: usize) -> u32 {
+    let x = spec_hash
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(step as u64)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    (x >> 33) as u32 % 1000
+}
+
+struct SpecGen {
+    spec_hash: u64,
+    class: u64,
+    prefill_left: usize,
+    produced: usize,
+    total: usize,
+}
+
+/// Mock engine that fuses decode batches and asserts every fused batch
+/// is class-homogeneous (the spec-compatibility contract).
+struct SpecMock {
+    max_batch: usize,
+    mixed_class_batches: Arc<AtomicUsize>,
+}
+
+impl SpecMock {
+    fn advance(&self, gen: &mut SpecGen) -> StepEvent {
+        if gen.prefill_left > 0 {
+            gen.prefill_left -= 1;
+            if gen.prefill_left > 0 {
+                return StepEvent::Prefilled { layer: 0 };
+            }
+        } else if gen.produced >= gen.total {
+            return StepEvent::Done;
+        }
+        let tok = spec_token(gen.spec_hash, gen.produced);
+        gen.produced += 1;
+        StepEvent::Token(tok)
+    }
+}
+
+impl ReplicaEngine for SpecMock {
+    type Gen = SpecGen;
+
+    fn begin(&mut self, req: &GenRequest) -> anyhow::Result<SpecGen> {
+        Ok(SpecGen {
+            spec_hash: req.spec.spec_hash(),
+            class: req.spec.decode_class(),
+            prefill_left: 2,
+            produced: 0,
+            total: req.max_gen.max(1),
+        })
+    }
+
+    fn step(&mut self, gen: &mut SpecGen) -> anyhow::Result<StepEvent> {
+        Ok(self.advance(gen))
+    }
+
+    fn is_decoding(&self, gen: &SpecGen) -> bool {
+        gen.prefill_left == 0 && gen.produced > 0 && gen.produced < gen.total
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn step_batch(&mut self, gens: &mut [&mut SpecGen]) -> anyhow::Result<Vec<StepEvent>> {
+        if gens.len() >= 2 && gens.iter().any(|g| g.class != gens[0].class) {
+            self.mixed_class_batches.fetch_add(1, Ordering::SeqCst);
+        }
+        Ok(gens.iter_mut().map(|g| self.advance(g)).collect())
+    }
+
+    fn is_done(&self, gen: &SpecGen) -> bool {
+        gen.prefill_left == 0 && gen.produced >= gen.total
+    }
+
+    fn finish(&mut self, gen: SpecGen) -> GenerateResult {
+        GenerateResult {
+            tokens: (0..gen.produced).map(|s| spec_token(gen.spec_hash, s)).collect(),
+            prompt_len: 4,
+            flops: Default::default(),
+            relative_flops: 0.0,
+            peak_kv_bytes: 1000,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            decode_steps: gen.produced.saturating_sub(1),
+            live_counts: Vec::new(),
+            prefix_hit: false,
+            prefix_tokens_reused: 0,
+        }
+    }
+
+    fn kv_bytes(&self, _gen: &SpecGen) -> usize {
+        1000
+    }
+
+    fn estimate_bytes(&self, _req: &GenRequest) -> usize {
+        1000
+    }
+}
+
+fn spec_request(spec: PruningSpec, max_gen: usize) -> GenRequest {
+    GenRequest::with_spec(
+        vec![1, 2, 3, 4],
+        vec![Segment::Ctrl, Segment::Vis, Segment::Aud, Segment::Text],
+        vec![-1, 0, -1, -1],
+        spec,
+        max_gen,
+    )
+}
+
+struct Run {
+    pool: ReplicaPool,
+    mixed: Arc<AtomicUsize>,
+}
+
+fn spec_pool(max_inflight: usize, max_batch: usize) -> Run {
+    let mixed = Arc::new(AtomicUsize::new(0));
+    let m2 = Arc::clone(&mixed);
+    let pool = ReplicaPool::start_with_factory(
+        PoolConfig { replicas: 1, queue_cap: 64, max_inflight, ..Default::default() },
+        Arc::new(Registry::default()),
+        move |_r| Ok(SpecMock { max_batch, mixed_class_batches: Arc::clone(&m2) }),
+    )
+    .expect("mock pool starts");
+    Run { pool, mixed }
+}
+
+fn streams(receivers: Vec<std::sync::mpsc::Receiver<Event>>) -> Vec<Vec<u32>> {
+    receivers
+        .into_iter()
+        .map(|rx| {
+            let mut toks = Vec::new();
+            loop {
+                match rx.recv_timeout(Duration::from_secs(10)) {
+                    Ok(Event::Token(t)) => toks.push(t),
+                    Ok(Event::Done(res)) => {
+                        assert_eq!(res.tokens, toks);
+                        return toks;
+                    }
+                    Ok(Event::Error(e)) => panic!("request failed: {}", e),
+                    Err(e) => panic!("stream stalled: {}", e),
+                }
+            }
+        })
+        .collect()
+}
+
+fn drive(specs: &[PruningSpec], max_gen: usize) -> Vec<Vec<u32>> {
+    let run = spec_pool(specs.len().max(2), 8);
+    let receivers: Vec<_> = specs
+        .iter()
+        .map(|s| run.pool.submit(spec_request(s.clone(), max_gen)).unwrap().1)
+        .collect();
+    streams(receivers)
+}
+
+fn calib() -> fastav::calibration::Calibration {
+    fastav::calibration::Calibration {
+        model: "mock".into(),
+        samples: 8,
+        threshold: 0.01,
+        vis_cutoff: 6,
+        keep_audio: 3,
+        keep_frames: 0,
+        budget: 9,
+        profile: Vec::new(),
+    }
+}
+
+// --------------------------------------------------------------- tests
+
+/// The acceptance property: a `/v2/generate`-style request resolved
+/// through the default profile streams token-for-token identically to
+/// the pre-refactor path that carried the raw global plan.
+#[test]
+fn default_profile_equals_global_plan_path() {
+    let calib = calib();
+    let registry = PolicyRegistry::builtin(&calib, 20.0);
+    // Pre-refactor: make_handler closed over `calib.plan(p)` and every
+    // request carried that plan. Post-refactor: requests resolve the
+    // registry's default profile.
+    let pre_refactor = PruningSpec::from_plan(calib.plan(20.0)).unwrap();
+    let via_profile = registry.default_spec().clone();
+    assert_eq!(via_profile, pre_refactor);
+    let a = drive(&[pre_refactor], 8);
+    let b = drive(&[via_profile], 8);
+    assert_eq!(a, b, "profile resolution must not change the stream");
+    // And a JSON round-trip of the profile (what /v2 echoes back /
+    // what an operator pastes into --policies) is still the same policy.
+    let round =
+        PruningSpec::from_json(&registry.default_spec().to_json()).unwrap();
+    assert_eq!(drive(&[round], 8), a);
+}
+
+#[test]
+fn prop_spec_roundtrip_preserves_plan_and_stream() {
+    run_prop("spec_roundtrip", 20, |g: &mut Gen| {
+        let mut plan = PruningPlan::vanilla();
+        plan.global = match g.usize_in(0, 4) {
+            0 => GlobalStrategy::None,
+            1 => GlobalStrategy::FastAvPosition {
+                vis_cutoff: g.usize_in(0, 50),
+                keep_audio: g.usize_in(0, 8),
+                keep_frames: g.usize_in(0, 4),
+            },
+            2 => GlobalStrategy::Random,
+            3 => GlobalStrategy::Vtw,
+            _ => GlobalStrategy::StreamingWindow {
+                sink: g.usize_in(0, 8),
+                recent: g.usize_in(0, 8),
+            },
+        };
+        plan.global_budget = g.usize_in(0, 64);
+        plan.fine = if g.usize_in(0, 1) == 0 {
+            FineStrategy::None
+        } else {
+            FineStrategy::LowAttentive
+        };
+        if plan.fine != FineStrategy::None {
+            plan.fine_percent = g.usize_in(0, 100) as f64;
+            plan.fine_during_decode = g.usize_in(0, 1) == 1;
+        }
+        plan.min_keep_vis = g.usize_in(0, 4);
+        plan.min_keep_aud = g.usize_in(0, 4);
+        plan.seed = g.usize_in(0, 1000) as u64;
+        let spec = PruningSpec::from_plan(plan.clone()).expect("generated plan valid");
+        assert_eq!(spec.to_plan(), plan, "from_plan/to_plan round-trip");
+        let json_round = PruningSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(json_round, spec, "JSON round-trip");
+        assert_eq!(json_round.spec_hash(), spec.spec_hash());
+    });
+}
+
+#[test]
+fn fused_batches_never_mix_decode_classes() {
+    // 3 plain requests + 3 decode-pruning requests in one replica: the
+    // classed scheduler must keep every fused batch class-homogeneous.
+    let mut decode_plan = PruningPlan::fastav(32, 4, 2, 25.0);
+    decode_plan.fine_during_decode = true;
+    let decode_spec = PruningSpec::from_plan(decode_plan).unwrap();
+    let plain_spec = PruningSpec::fastav(32, 4, 2, 25.0);
+    assert_ne!(decode_spec.decode_class(), plain_spec.decode_class());
+
+    let run = spec_pool(6, 8);
+    let mut receivers = Vec::new();
+    for i in 0..6 {
+        let spec = if i % 2 == 0 { plain_spec.clone() } else { decode_spec.clone() };
+        receivers.push(run.pool.submit(spec_request(spec, 24)).unwrap().1);
+    }
+    let streams = streams(receivers);
+    for (i, s) in streams.iter().enumerate() {
+        assert_eq!(s.len(), 24, "request {} stream truncated", i);
+    }
+    assert_eq!(
+        run.mixed.load(Ordering::SeqCst),
+        0,
+        "a fused decode batch mixed incompatible spec classes"
+    );
+    // Equal-class requests still produced per-spec streams (hash-seeded).
+    assert_eq!(streams[0], streams[2]);
+    assert_ne!(streams[0], streams[1]);
+}
+
+/// Same-class mixed-profile traffic (no decode-time pruning) still fuses
+/// and still streams exactly what the sequential path streams.
+#[test]
+fn mixed_profiles_without_decode_pruning_stream_identically_batched_or_not() {
+    let specs: Vec<PruningSpec> = (0..6)
+        .map(|i| {
+            if i % 2 == 0 {
+                PruningSpec::fastav(40, 4, 2, 20.0)
+            } else {
+                PruningSpec::off()
+            }
+        })
+        .collect();
+    let batched = drive(&specs, 16);
+    // Sequential pool: force single-step decode.
+    let run = spec_pool(6, 1);
+    let receivers: Vec<_> = specs
+        .iter()
+        .map(|s| run.pool.submit(spec_request(s.clone(), 16)).unwrap().1)
+        .collect();
+    let sequential = streams(receivers);
+    assert_eq!(batched, sequential);
+}

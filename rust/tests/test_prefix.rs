@@ -25,9 +25,8 @@ use fastav::kvcache::{
     BlockPool, LayerCache, PrefixCache, PrefixEntry, PrefixLease, BLOCK_TOKENS,
 };
 use fastav::metrics::Registry;
-use fastav::model::{
-    av_prefix_len, GenerateOptions, GenerateResult, PruningPlan, StepEvent,
-};
+use fastav::model::{av_prefix_len, GenerateResult, StepEvent};
+use fastav::policy::PruningSpec;
 use fastav::serving::{PoolConfig, PrefixCharge, ReplicaEngine, ReplicaPool};
 use fastav::tokens::Segment;
 use fastav::util::proptest::{run_prop, Gen};
@@ -314,7 +313,7 @@ impl ReplicaEngine for PrefixMockEngine {
             front_left: front,
             back_left: 2,
             produced: 0,
-            total: req.opts.max_gen.max(1),
+            total: req.max_gen.max(1),
             hit,
             reused,
             _lease: lease,
@@ -402,12 +401,10 @@ fn prefix_request(sample: u32, question: u32, max_gen: usize) -> GenRequest {
         prompt,
         segments,
         frame_of,
-        opts: GenerateOptions {
-            // Positional (query-independent) plan: cacheable + affine.
-            plan: PruningPlan::fastav(32, 4, 2, 20.0),
-            max_gen,
-            ..Default::default()
-        },
+        // Positional (query-independent) spec: cacheable + affine.
+        spec: PruningSpec::fastav(32, 4, 2, 20.0),
+        max_gen,
+        sampling: Default::default(),
         priority: Priority::Normal,
         deadline: None,
     }
@@ -420,11 +417,9 @@ fn filler_request(max_gen: usize) -> GenRequest {
         prompt: (0..n as u32).collect(),
         segments: vec![Segment::Text; n],
         frame_of: vec![-1; n],
-        opts: GenerateOptions {
-            plan: PruningPlan::vanilla(),
-            max_gen,
-            ..Default::default()
-        },
+        spec: PruningSpec::off(),
+        max_gen,
+        sampling: Default::default(),
         priority: Priority::Normal,
         deadline: None,
     }

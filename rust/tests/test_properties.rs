@@ -74,6 +74,8 @@ fn prop_global_keep_always_valid() {
             rollout: Some(&rollout),
             budget,
             seed: g.u64(),
+            min_keep_vis: 0,
+            min_keep_aud: 0,
         };
         let keep = global_keep(&strat, &inp);
         validate_keep(&keep, &segs).unwrap_or_else(|e| {
@@ -109,7 +111,7 @@ fn prop_fine_keep_exact_drop_count() {
             FineStrategy::TopAttentive,
             FineStrategy::LowAttentive,
         ]);
-        let keep = fine_keep(strat, &scores, &segs, percent, g.u64());
+        let keep = fine_keep(strat, &scores, &segs, percent, g.u64(), 0, 0);
         validate_keep(&keep, &segs).unwrap();
         let prunable = (0..n)
             .filter(|&i| i != n - 1 && matches!(segs[i], Segment::Vis | Segment::Aud))
@@ -126,7 +128,7 @@ fn prop_fine_keep_low_attentive_drops_lowest() {
         let n = segs.len();
         // Distinct scores so the ordering is unambiguous.
         let scores: Vec<f32> = (0..n).map(|i| (i as f32) * 0.001 + g.f64_unit() as f32 * 0.0001).collect();
-        let keep = fine_keep(FineStrategy::LowAttentive, &scores, &segs, 50.0, 0);
+        let keep = fine_keep(FineStrategy::LowAttentive, &scores, &segs, 50.0, 0, 0, 0);
         let dropped: Vec<usize> = (0..n).filter(|i| !keep.contains(i)).collect();
         // Every dropped AV token must score <= every kept prunable AV token.
         let kept_av_min = keep

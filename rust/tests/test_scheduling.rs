@@ -9,7 +9,8 @@ use std::time::{Duration, Instant};
 
 use fastav::coordinator::{Event, GenRequest, Priority};
 use fastav::metrics::Registry;
-use fastav::model::{GenerateOptions, GenerateResult, PruningPlan, StepEvent};
+use fastav::model::{GenerateResult, StepEvent};
+use fastav::policy::PruningSpec;
 use fastav::serving::{PoolConfig, ReplicaEngine, ReplicaPool};
 use fastav::tokens::Segment;
 use fastav::util::proptest::{run_prop, Gen};
@@ -37,7 +38,7 @@ impl ReplicaEngine for MockEngine {
         Ok(MockGen {
             prefill_left: 2,
             produced: 0,
-            total: req.opts.max_gen.max(1),
+            total: req.max_gen.max(1),
             kv_bytes: req.prompt.len() * 1000,
         })
     }
@@ -93,11 +94,9 @@ fn mock_request(max_gen: usize, priority: Priority) -> GenRequest {
         prompt: vec![1, 2, 3, 4],
         segments: vec![Segment::Ctrl, Segment::Vis, Segment::Aud, Segment::Text],
         frame_of: vec![-1, 0, -1, -1],
-        opts: GenerateOptions {
-            plan: PruningPlan::vanilla(),
-            max_gen,
-            ..Default::default()
-        },
+        spec: PruningSpec::off(),
+        max_gen,
+        sampling: Default::default(),
         priority,
         deadline: None,
     }

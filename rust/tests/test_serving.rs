@@ -8,12 +8,33 @@ use std::sync::Arc;
 
 use fastav::coordinator::Coordinator;
 use fastav::http::{api::make_handler, request, request_with_headers, Server};
-use fastav::model::PruningPlan;
+use fastav::policy::{PolicyRegistry, PruningSpec};
 use fastav::tokens::Layout;
 use fastav::util::json::Json;
 
 fn layout() -> Layout {
     Layout { frames: 2, vis_per_frame: 4, aud_len: 6, aud_per_frame: 3, interleaved: false }
+}
+
+/// The registry every test serves: the four calibrated built-ins
+/// (`quality`/`balanced`/`aggressive`/`off`; `balanced` — the default —
+/// matches the plan the pre-profile tests passed to `make_handler`),
+/// plus a `tight` profile with different positional cutoffs (⇒ a
+/// different pruning-config hash) for the mixed-profile isolation test.
+fn test_registry() -> Arc<PolicyRegistry> {
+    let calib = fastav::calibration::Calibration {
+        model: "tiny".into(),
+        samples: 8,
+        threshold: 0.01,
+        vis_cutoff: 5,
+        keep_audio: 2,
+        keep_frames: 0,
+        budget: 6,
+        profile: Vec::new(),
+    };
+    let mut r = PolicyRegistry::builtin(&calib, 20.0);
+    r.insert("tight", PruningSpec::fastav(3, 1, 0, 20.0)).unwrap();
+    Arc::new(r)
 }
 
 struct Running {
@@ -34,13 +55,7 @@ impl Drop for Running {
 
 fn spin_up(root: std::path::PathBuf) -> Running {
     let coord = Arc::new(Coordinator::start(root, "tiny".into(), 16, false).unwrap());
-    let handler = make_handler(
-        Arc::clone(&coord),
-        layout(),
-        PruningPlan::fastav(5, 2, 0, 20.0),
-        3,
-        1234,
-    );
+    let handler = make_handler(Arc::clone(&coord), layout(), test_registry(), 3, 1234);
     let server = Server::bind("127.0.0.1:0", 2, handler).unwrap();
     let addr = server.local_addr().to_string();
     let stop = server.shutdown_handle();
@@ -171,6 +186,163 @@ fn question_override_and_cache_flush_roundtrip() {
     let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
     assert!(j.get("flushed_entries").as_usize().is_some());
     assert!(j.get("freed_bytes").as_usize().is_some());
+}
+
+/// Golden test: the `/v1/generate` response shape is byte-compatible
+/// with the pre-profile API — exactly the PR 4 key set (notably no
+/// `policy` block), same types — and a `/v2/generate` request under the
+/// default profile streams the identical result.
+#[test]
+fn v1_golden_response_shape_and_v2_default_equivalence() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+    let body = br#"{"dataset": "avqa", "index": 3}"#;
+    let (code, v1) = request(&run.addr, "POST", "/v1/generate", body).unwrap();
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&v1));
+    let v1 = Json::parse(std::str::from_utf8(&v1).unwrap()).unwrap();
+    // The exact legacy key set, in the serializer's (sorted) order.
+    let keys: Vec<&str> = v1.as_obj().unwrap().keys().map(|s| s.as_str()).collect();
+    assert_eq!(
+        keys,
+        vec![
+            "answer",
+            "correct",
+            "decode_seconds",
+            "expected",
+            "peak_kv_bytes",
+            "prefill_seconds",
+            "prefix_hit",
+            "prefix_tokens_reused",
+            "relative_flops",
+            "request_id",
+            "subtask",
+            "tokens",
+        ],
+        "v1 response must stay byte-compatible (no new/renamed keys)"
+    );
+    // Same request through v2 with no profile = the default profile:
+    // token-for-token identical, plus the resolved policy block. (Flush
+    // the prefix cache first so both requests take the identical cold
+    // path; warm-resume equivalence is covered elsewhere.)
+    let (code, _) = request(&run.addr, "POST", "/v1/cache/flush", b"").unwrap();
+    assert_eq!(code, 200);
+    let (code, v2) = request(&run.addr, "POST", "/v2/generate", body).unwrap();
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&v2));
+    let v2 = Json::parse(std::str::from_utf8(&v2).unwrap()).unwrap();
+    assert_eq!(v2.get("tokens"), v1.get("tokens"));
+    assert_eq!(v2.get("answer"), v1.get("answer"));
+    assert_eq!(v2.get("relative_flops"), v1.get("relative_flops"));
+    let policy = v2.get("policy");
+    assert_eq!(policy.get("profile").as_str(), Some("balanced"));
+    assert_eq!(policy.get("spec_hash").as_str().unwrap().len(), 16);
+    assert_eq!(
+        policy.get("spec").get("global").get("strategy").as_str(),
+        Some("fastav_position")
+    );
+}
+
+#[test]
+fn unknown_body_fields_are_rejected_with_400() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+    // v1 typo: "max_token" instead of "max_gen".
+    let (code, body) = request(
+        &run.addr,
+        "POST",
+        "/v1/generate",
+        br#"{"dataset": "avqa", "max_token": 4}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400);
+    let msg = String::from_utf8_lossy(&body);
+    assert!(msg.contains("max_token"), "400 must name the typo: {}", msg);
+    // v2: no_pruning moved to the off profile.
+    let (code, body) = request(
+        &run.addr,
+        "POST",
+        "/v2/generate",
+        br#"{"no_pruning": true}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400);
+    assert!(String::from_utf8_lossy(&body).contains("no_pruning"));
+    // Non-object bodies are rejected too.
+    let (code, _) = request(&run.addr, "POST", "/v1/generate", b"[1, 2]").unwrap();
+    assert_eq!(code, 400);
+}
+
+#[test]
+fn policies_endpoint_lists_registry() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+    let (code, body) = request(&run.addr, "GET", "/v1/policies", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("default").as_str(), Some("balanced"));
+    let profiles = j.get("profiles").as_obj().unwrap();
+    assert!(profiles.len() >= 4, "registry must list the 4 built-ins");
+    for name in ["quality", "balanced", "aggressive", "off", "tight"] {
+        let p = &profiles[name];
+        assert!(p.get("spec").get("fine").get("percent").as_f64().is_some(), "{}", name);
+        assert_eq!(p.get("spec_hash").as_str().unwrap().len(), 16, "{}", name);
+    }
+    // Unknown profile on generate is a 400 naming the known set.
+    let (code, body) = request(
+        &run.addr,
+        "POST",
+        "/v2/generate",
+        br#"{"profile": "nope"}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400);
+    assert!(String::from_utf8_lossy(&body).contains("balanced"));
+}
+
+/// One pool, two profiles, same sample: per-spec prefix-cache isolation.
+/// Each profile builds its own AV-prefix entry (different pruning-config
+/// hash ⇒ different trie), re-use happens within a profile, and the
+/// per-config rows of `GET /v1/pool` report the split.
+#[test]
+fn mixed_profiles_isolate_prefix_cache_per_spec() {
+    let Some(root) = common::tiny_ready() else { return };
+    let run = spin_up(root);
+    for profile in ["balanced", "tight", "balanced", "tight"] {
+        let body = format!(
+            r#"{{"dataset": "avqa", "index": 5, "profile": "{}"}}"#,
+            profile
+        );
+        let (code, resp) =
+            request(&run.addr, "POST", "/v2/generate", body.as_bytes()).unwrap();
+        assert_eq!(code, 200, "{}: {}", profile, String::from_utf8_lossy(&resp));
+        let j = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+        assert_eq!(j.get("policy").get("profile").as_str(), Some(profile));
+    }
+    let (code, body) = request(&run.addr, "GET", "/v1/pool", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let per = j.get("prefix_cache").get("per_config").as_arr().unwrap();
+    let with_entries: Vec<_> = per
+        .iter()
+        .filter(|r| r.get("entries").as_usize().unwrap_or(0) > 0)
+        .collect();
+    assert!(
+        with_entries.len() >= 2,
+        "two positional profiles must build two isolated prefix configs: {}",
+        j.get("prefix_cache").to_string()
+    );
+    for r in &with_entries {
+        assert_eq!(r.get("config").as_str().unwrap().len(), 16);
+        assert!(r.get("bytes").as_usize().unwrap() > 0);
+    }
+    // Per-profile traffic shows up in /metrics with the profile label.
+    let (code, body) = request(&run.addr, "GET", "/metrics", b"").unwrap();
+    assert_eq!(code, 200);
+    let text = String::from_utf8_lossy(&body);
+    assert!(
+        text.contains(r#"fastav_requests_total{profile="balanced"}"#),
+        "labeled per-profile counter missing from /metrics"
+    );
+    assert!(text.contains(r#"fastav_requests_total{profile="tight"}"#));
 }
 
 #[test]
