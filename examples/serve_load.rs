@@ -484,6 +484,7 @@ fn drive_batch(
                     sampling: Default::default(),
                     priority: fastav::coordinator::Priority::Normal,
                     deadline: None,
+                    profile: None,
                 })
                 .expect("submit")
         })

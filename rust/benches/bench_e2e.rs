@@ -83,6 +83,7 @@ fn run_pool_comparison(model: &str) {
                     sampling: Default::default(),
                     priority: Priority::Normal,
                     deadline: None,
+                    profile: None,
                 };
                 coord.submit(req).expect("submit")
             })

@@ -57,6 +57,9 @@ pub struct GenRequest {
     /// Optional per-request deadline, measured from submission; an
     /// expired request aborts between scheduling quanta.
     pub deadline: Option<Duration>,
+    /// Policy profile this request resolved from (observability only:
+    /// labels the per-profile latency histogram and sampled traces).
+    pub profile: Option<String>,
 }
 
 impl GenRequest {
@@ -78,6 +81,7 @@ impl GenRequest {
             sampling: Sampling::default(),
             priority: Priority::Normal,
             deadline: None,
+            profile: None,
         }
     }
 
@@ -192,6 +196,12 @@ impl Coordinator {
     /// Per-replica status snapshots.
     pub fn pool_status(&self) -> Vec<ReplicaStatus> {
         self.pool.status()
+    }
+
+    /// Request-lifecycle trace recorder (sampled; see the `trace`
+    /// module and `GET /v1/traces`).
+    pub fn tracer(&self) -> &Arc<crate::trace::TraceRecorder> {
+        self.pool.tracer()
     }
 
     /// AV-prefix cache accounting (hits/misses/evictions, entries, bytes).

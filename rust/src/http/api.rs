@@ -10,7 +10,9 @@
 //! | GET    | `/v1/policies`     | The profile registry: default profile name + every profile's canonical spec, `spec_hash`, and prefix-shareability. |
 //! | POST   | `/v1/cancel`       | Cooperative cancellation by request id. |
 //! | POST   | `/v1/cache/flush`  | Evict every lease-free AV-prefix cache entry. |
-//! | GET    | `/v1/pool`         | Per-replica status, conservation ledger, prefix-cache stats (aggregate **and** per-pruning-config rows), KV block gauges, decode-batch occupancy. |
+//! | GET    | `/v1/pool`         | Per-replica status, conservation ledger, prefix-cache stats (aggregate **and** per-pruning-config rows), KV block gauges, decode-batch occupancy, latency summaries (TTFT + per-profile generate). |
+//! | GET    | `/v1/traces`       | Recent sampled request traces, newest first: per-request phase breakdown (queue/admit/prefill/decode seconds), TTFT, FLOP totals. Empty with `enabled: false` when tracing is off. |
+//! | GET    | `/v1/trace/{id}`   | One request's full span tree (`?format=chrome` → Chrome trace-event JSON loadable in Perfetto, replica/shard tracks as threads). 404 when the id was never sampled or has aged out of the ring. |
 //! | GET    | `/metrics`         | Prometheus text exposition (includes `fastav_requests_total{profile="..."}`). |
 //! | GET    | `/healthz`         | Liveness. |
 //!
@@ -114,6 +116,8 @@ fn route(
         }
         ("POST", "/v1/cancel") => cancel(req, coord),
         ("POST", "/v1/cache/flush") => cache_flush(coord),
+        ("GET", "/v1/traces") => traces_list(coord),
+        ("GET", p) if p.starts_with("/v1/trace/") => trace_get(p, coord),
         ("GET", _) | ("POST", _) => Response::text(404, "not found"),
         _ => Response::text(405, "method not allowed"),
     }
@@ -219,7 +223,85 @@ fn pool_status(coord: &Coordinator) -> Response {
                 ),
             ]),
         ),
+        ("latency", latency_summary(coord)),
     ]);
+    Response::json(200, out.to_string())
+}
+
+/// Summarize a histogram as count/mean/p50/p95/p99 (all seconds).
+fn hist_summary(h: &crate::metrics::Histogram) -> Json {
+    let count = h.count();
+    let sum = h.sum_seconds();
+    Json::obj(vec![
+        ("count", Json::num(count as f64)),
+        ("mean_seconds", Json::num(if count == 0 { 0.0 } else { sum / count as f64 })),
+        ("p50_seconds", Json::num(h.quantile(0.5))),
+        ("p95_seconds", Json::num(h.quantile(0.95))),
+        ("p99_seconds", Json::num(h.quantile(0.99))),
+    ])
+}
+
+/// SLO latency block for `/v1/pool`: TTFT and end-to-end generate
+/// latency, the latter also broken out per pruning profile (the labeled
+/// `fastav_generate_seconds{profile=...}` series).
+fn latency_summary(coord: &Coordinator) -> Json {
+    let ttft = coord.metrics.histogram("fastav_ttft_seconds");
+    let gen = coord.metrics.histogram("fastav_generate_seconds");
+    let mut per_profile = Vec::new();
+    for (name, h) in coord.metrics.histogram_entries() {
+        if let Some(p) = name
+            .strip_prefix("fastav_generate_seconds{profile=\"")
+            .and_then(|r| r.strip_suffix("\"}"))
+        {
+            per_profile.push(Json::obj(vec![
+                ("profile", Json::str(p)),
+                ("generate", hist_summary(&h)),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("ttft", hist_summary(&ttft)),
+        ("generate", hist_summary(&gen)),
+        ("per_profile", Json::arr(per_profile)),
+    ])
+}
+
+/// `GET /v1/traces`: summaries of the most recent sampled traces across
+/// every replica ring, newest first.
+fn traces_list(coord: &Coordinator) -> Response {
+    let tracer = coord.tracer();
+    let traces = tracer
+        .recent(64)
+        .iter()
+        .map(|t| crate::trace::export::summary_json(t))
+        .collect::<Vec<_>>();
+    let out = Json::obj(vec![
+        ("enabled", Json::Bool(tracer.enabled())),
+        ("traces", Json::arr(traces)),
+    ]);
+    Response::json(200, out.to_string())
+}
+
+/// `GET /v1/trace/{id}`: one request's span tree, or the Chrome
+/// trace-event form with `?format=chrome`.
+fn trace_get(path: &str, coord: &Coordinator) -> Response {
+    let rest = &path["/v1/trace/".len()..];
+    let (id_str, query) = match rest.split_once('?') {
+        Some((i, q)) => (i, q),
+        None => (rest, ""),
+    };
+    let Ok(id) = id_str.parse::<u64>() else {
+        return Response::text(400, "trace id must be an integer request id");
+    };
+    let Some(trace) = coord.tracer().get(id) else {
+        return Response::text(404, "no sampled trace for that request id");
+    };
+    let chrome = query.split('&').any(|kv| kv == "format=chrome");
+    let out = if chrome {
+        crate::trace::export::chrome_json(&trace)
+    } else {
+        crate::trace::export::trace_json(&trace)
+    };
     Response::json(200, out.to_string())
 }
 
@@ -370,6 +452,7 @@ fn generate(
         sampling: Sampling::default(),
         priority: if high_priority { Priority::High } else { Priority::Normal },
         deadline,
+        profile: Some(profile.clone()),
     };
     // Per-profile traffic accounting; label values are registry-bounded
     // (only known profile names reach this point). Series semantics:
@@ -433,6 +516,12 @@ fn generate(
                             ("spec_hash", Json::str(&spec.spec_hash_hex())),
                         ]),
                     ));
+                    // Sampled requests carry their lifecycle timing
+                    // inline (the same summary `/v1/traces` serves);
+                    // unsampled requests omit the block entirely.
+                    if let Some(t) = coord.tracer().get(id) {
+                        fields.push(("timing", crate::trace::export::summary_json(&t)));
+                    }
                 }
                 return Response::json(200, Json::obj(fields).to_string())
                     .with_header("x-request-id", &id_str);

@@ -424,6 +424,7 @@ impl PrefixCache {
         tokens: &[u32],
         pred: impl FnOnce(&PrefixEntry) -> bool,
     ) -> Option<PrefixLease> {
+        let seg_t0 = crate::trace::seg_begin();
         let exact_key = hash_mix(&[cfg, hash_tokens(0, tokens)]);
         let found = {
             let mut inner = self.inner.lock().unwrap();
@@ -440,7 +441,7 @@ impl PrefixCache {
             inner.count_cfg(cfg, found.is_some());
             found
         };
-        match found {
+        let lease = match found {
             Some(entry) => {
                 self.count_hit();
                 Some(PrefixLease { cache: Arc::clone(self), key: exact_key, entry })
@@ -449,7 +450,9 @@ impl PrefixCache {
                 self.count_miss();
                 None
             }
-        }
+        };
+        crate::trace::seg_end("prefix_lookup", None, seg_t0);
+        lease
     }
 
     fn lookup_longest(self: &Arc<Self>, cfg: u64, tokens: &[u32]) -> Option<PrefixLease> {

@@ -31,6 +31,9 @@
 //! * [`flops`]       — theoretical FLOPs accounting (paper's protocol).
 //! * [`eval`]        — benchmark evaluation harness + scoring.
 //! * [`metrics`]    — counters/histograms with Prometheus-style export.
+//! * [`trace`]       — sampled request-lifecycle tracer + per-quantum
+//!   engine profiler: well-nested span trees in per-replica rings,
+//!   Chrome trace-event export, mock-clock deterministic in tests.
 //! * [`serving`]     — continuous-batching replica pool: N engine threads,
 //!   per-replica step scheduler (chunked prefill + iteration-level decode),
 //!   KV-byte admission, cancellation/deadlines.
@@ -51,4 +54,5 @@ pub mod pruning;
 pub mod runtime;
 pub mod serving;
 pub mod tokens;
+pub mod trace;
 pub mod util;

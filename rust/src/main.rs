@@ -33,7 +33,7 @@ const OPTIONS: &[&str] = &[
     "model", "artifacts", "dataset", "n", "port", "p", "no-pruning", "seed",
     "max-gen", "queue-cap", "workers", "calibration", "replicas",
     "max-inflight", "kv-budget-mb", "deadline-ms", "prefix-cache-mb",
-    "decode-batch", "tp", "policies", "profile",
+    "decode-batch", "tp", "policies", "profile", "trace-sample", "trace-ring",
 ];
 
 fn main() {
@@ -212,6 +212,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Tensor-parallel degree: each replica becomes a device group of
     // this many mesh devices (needs artifacts lowered with tp_degree).
     let tp = args.get_usize("tp", 1).map_err(|e| anyhow!(e))?;
+    // Request-lifecycle tracing: sample rate in [0, 1] (0 = off, the
+    // default — the untraced path takes one branch and allocates
+    // nothing) and per-replica completed-trace ring capacity.
+    let trace_sample = args.get_f64("trace-sample", 0.0).map_err(|e| anyhow!(e))?;
+    let trace_ring = args.get_usize("trace-ring", 256).map_err(|e| anyhow!(e))?;
     let registry = Arc::new(registry_from_args(args, &root, &model)?);
 
     // Replica pool: each engine lives on its own thread.
@@ -229,6 +234,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         max_decode_batch: decode_batch,
         tp_degree: tp,
+        trace_sample,
+        trace_ring,
     };
     let coord = Arc::new(Coordinator::start_pool(root.clone(), model.clone(), cfg)?);
     let layout = {
@@ -262,6 +269,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  GET  /v1/policies     (profile registry + spec hashes)");
     println!("  POST /v1/cancel       {{\"request_id\": 1}}");
     println!("  POST /v1/cache/flush  (evict lease-free AV-prefix entries)");
+    if trace_sample > 0.0 {
+        println!(
+            "  GET  /v1/traces       GET /v1/trace/{{id}}[?format=chrome]  (sampling 1/{} requests)",
+            (1.0 / trace_sample.min(1.0)).round().max(1.0) as u64
+        );
+    }
     println!("  GET  /v1/pool         GET /metrics      GET /healthz");
     let shutdown = server.shutdown_handle();
     ctrlc_fallback(&shutdown);

@@ -11,9 +11,26 @@ use std::sync::Mutex;
 /// Format a labeled series name: `labeled("x_total", "replica", "0")`
 /// → `x_total{replica="0"}`. [`Registry::export`] emits one `# TYPE`
 /// line per base family, so labeled series group correctly under
-/// Prometheus scraping.
+/// Prometheus scraping. Values are escaped per the Prometheus text
+/// format (`\\`, `\"`, `\n`), so operator-supplied strings (policy
+/// profile names, error classes) cannot corrupt the exposition.
 pub fn labeled(base: &str, key: &str, value: &str) -> String {
-    format!("{}{{{}=\"{}\"}}", base, key, value)
+    format!("{}{{{}=\"{}\"}}", base, key, escape_label_value(value))
+}
+
+/// Escape a label value for the Prometheus text exposition format:
+/// backslash → `\\`, double-quote → `\"`, line-feed → `\n`.
+pub fn escape_label_value(value: &str) -> String {
+    let mut out = String::with_capacity(value.len());
+    for c in value.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Fixed size-class labels for the decode-batch occupancy distribution
@@ -126,6 +143,11 @@ impl Histogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / 1e6 / c as f64
     }
 
+    /// Total observed seconds (the Prometheus `_sum` series).
+    pub fn sum_seconds(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
     /// Approximate quantile from bucket upper bounds.
     pub fn quantile(&self, q: f64) -> f64 {
         let total = self.count();
@@ -184,6 +206,18 @@ impl Registry {
             .clone()
     }
 
+    /// Snapshot of every registered histogram, as `(name, handle)`
+    /// pairs in family order — lets `/v1/pool` summarize the
+    /// per-profile latency families without re-deriving the names.
+    pub fn histogram_entries(&self) -> Vec<(String, std::sync::Arc<Histogram>)> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
     /// Prometheus text exposition. Labeled series (`name{k="v"}`) emit
     /// one `# TYPE` line per base family, in the family's first
     /// position (BTreeMap order keeps families contiguous).
@@ -210,23 +244,39 @@ impl Registry {
             }
             out.push_str(&format!("{} {}\n", name, g.get()));
         }
+        // Histograms render as Prometheus summaries. A registered name
+        // may carry labels (`fam{k="v"}`): the suffix and quantile
+        // label must merge INSIDE the braces — `fam_count{k="v"}` and
+        // `fam{k="v",quantile="0.5"}` — never `fam{k="v"}_count`,
+        // which is invalid exposition.
+        last_family.clear();
         for (name, h) in self.histograms.lock().unwrap().iter() {
-            out.push_str(&format!(
-                "# TYPE {} summary\n{}_count {}\n{}_mean_seconds {:.6}\n\
-                 {}{{quantile=\"0.5\"}} {:.6}\n{}{{quantile=\"0.95\"}} {:.6}\n\
-                 {}{{quantile=\"0.99\"}} {:.6}\n",
-                name,
-                name,
-                h.count(),
-                name,
-                h.mean(),
-                name,
-                h.quantile(0.5),
-                name,
-                h.quantile(0.95),
-                name,
-                h.quantile(0.99),
-            ));
+            let (fam, labels) = match name.split_once('{') {
+                Some((fam, rest)) => (fam, rest.trim_end_matches('}')),
+                None => (name.as_str(), ""),
+            };
+            if fam != last_family {
+                out.push_str(&format!("# TYPE {} summary\n", fam));
+                last_family = fam.to_string();
+            }
+            let braced = |extra: &str| -> String {
+                match (labels.is_empty(), extra.is_empty()) {
+                    (true, true) => String::new(),
+                    (true, false) => format!("{{{}}}", extra),
+                    (false, true) => format!("{{{}}}", labels),
+                    (false, false) => format!("{{{},{}}}", labels, extra),
+                }
+            };
+            out.push_str(&format!("{}_count{} {}\n", fam, braced(""), h.count()));
+            out.push_str(&format!("{}_sum{} {:.6}\n", fam, braced(""), h.sum_seconds()));
+            for q in ["0.5", "0.95", "0.99"] {
+                out.push_str(&format!(
+                    "{}{} {:.6}\n",
+                    fam,
+                    braced(&format!("quantile=\"{}\"", q)),
+                    h.quantile(q.parse().unwrap()),
+                ));
+            }
         }
         out
     }
@@ -312,6 +362,49 @@ mod tests {
             assert!(c >= last);
             last = c;
         }
+    }
+
+    #[test]
+    fn labeled_escapes_hostile_values() {
+        assert_eq!(labeled("m", "k", "plain"), "m{k=\"plain\"}");
+        assert_eq!(labeled("m", "k", "a\"b"), "m{k=\"a\\\"b\"}");
+        assert_eq!(labeled("m", "k", "a\\b"), "m{k=\"a\\\\b\"}");
+        assert_eq!(labeled("m", "k", "a\nb"), "m{k=\"a\\nb\"}");
+        // A value trying to terminate the series and inject its own
+        // sample line stays inside the quotes.
+        let evil = labeled("m", "profile", "x\"} 999\nother_metric 1");
+        assert_eq!(evil, "m{profile=\"x\\\"} 999\\nother_metric 1\"}");
+        assert_eq!(evil.matches('\n').count(), 0);
+    }
+
+    #[test]
+    fn histogram_exposition_is_spec_shaped() {
+        // Golden test: unlabeled + labeled summaries render with the
+        // suffix before the braces and quantile merged into them.
+        let r = Registry::default();
+        r.histogram("gen_seconds").observe(1.0);
+        r.histogram("gen_seconds").observe(3.0);
+        r.histogram(&labeled("gen_seconds", "profile", "fast")).observe(0.5);
+        let text = r.export();
+        assert_eq!(text.matches("# TYPE gen_seconds summary").count(), 1);
+        assert!(text.contains("gen_seconds_count 2\n"));
+        assert!(text.contains("gen_seconds_sum 4.000000\n"));
+        assert!(text.contains("gen_seconds_count{profile=\"fast\"} 1\n"));
+        assert!(text.contains("gen_seconds_sum{profile=\"fast\"} 0.500000\n"));
+        assert!(text.contains("gen_seconds{quantile=\"0.5\"}"));
+        assert!(text.contains("gen_seconds{profile=\"fast\",quantile=\"0.99\"}"));
+        // The pre-fix invalid shapes must be gone.
+        assert!(!text.contains("}_count"));
+        assert!(!text.contains("}_sum"));
+        assert!(!text.contains("_mean_seconds"));
+    }
+
+    #[test]
+    fn histogram_sum_tracks_observations() {
+        let h = Histogram::default();
+        h.observe(0.25);
+        h.observe(0.75);
+        assert!((h.sum_seconds() - 1.0).abs() < 1e-9);
     }
 
     #[test]

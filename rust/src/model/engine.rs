@@ -963,6 +963,7 @@ impl ModelEngine {
         let tp = self.tp;
         let hs_width = d / tp; // Hs * dh
         let n_live = live_positions.len();
+        let up_t0 = crate::trace::seg_begin();
         let mut h_pad = vec![0.0f32; bucket * d];
         h_pad[..n_live * d].copy_from_slice(&h_live[..n_live * d]);
         let h_lit = lit_f32(&[bucket, d], &h_pad)?;
@@ -984,7 +985,9 @@ impl ModelEngine {
                 }
             })
             .collect();
+        crate::trace::seg_end("upload", None, up_t0);
         let outs = self.mesh.execute_sharded(&dispatches)?;
+        let dl_t0 = crate::trace::seg_begin();
         // Combine: attention concat (head order), importance all-reduce.
         let mut attn = vec![0.0f32; bucket * d];
         let mut s_sum = vec![0.0f32; bucket];
@@ -1002,6 +1005,8 @@ impl ModelEngine {
             add_partial(&mut s_sum, sp)?;
             kv.push((to_vec_f32(k)?, to_vec_f32(v)?));
         }
+        crate::trace::seg_end("download", None, dl_t0);
+        let cb_t0 = crate::trace::seg_begin();
         let attn_lit = lit_f32(&[bucket, d], &attn)?;
         let tail_path = self.art.path("layer_tail", Some(bucket));
         let pl = &self.wlit.per_layer[layer];
@@ -1011,6 +1016,7 @@ impl ModelEngine {
         }
         let outs = self.mesh.execute(&tail_path, &tail_inputs)?;
         let h_out = to_vec_f32(&outs[0])?;
+        crate::trace::seg_end("combine", None, cb_t0);
         Ok((h_out, kv, s_sum))
     }
 
@@ -1733,6 +1739,7 @@ impl ModelEngine {
         }
         let cap = cache.cap();
         let cur_idx = cache.len();
+        let up_t0 = crate::trace::seg_begin();
         let mut mask = cache.mask();
         mask[cur_idx] = 1.0;
         let x_lit = lit_f32(&[d], x)?;
@@ -1772,7 +1779,9 @@ impl ModelEngine {
                 }
             })
             .collect();
+        crate::trace::seg_end("upload", None, up_t0);
         let outs = self.mesh.execute_sharded(&dispatches)?;
+        let dl_t0 = crate::trace::seg_begin();
         let mut attn = vec![0.0f32; d];
         let mut k_new = vec![0.0f32; d];
         let mut v_new = vec![0.0f32; d];
@@ -1787,6 +1796,8 @@ impl ModelEngine {
             v_new[s * hs_width..(s + 1) * hs_width].copy_from_slice(&to_vec_f32(vn)?);
             add_partial(&mut s_sum, sp)?;
         }
+        crate::trace::seg_end("download", None, dl_t0);
+        let cb_t0 = crate::trace::seg_begin();
         let attn_lit = lit_f32(&[d], &attn)?;
         let tail_path = self.art.path("decode_tail", None);
         let pl = &self.wlit.per_layer[layer];
@@ -1795,7 +1806,9 @@ impl ModelEngine {
             tail_inputs.push(p);
         }
         let outs = self.mesh.execute(&tail_path, &tail_inputs)?;
-        Ok((to_vec_f32(&outs[0])?, k_new, v_new, s_sum))
+        let res = (to_vec_f32(&outs[0])?, k_new, v_new, s_sum);
+        crate::trace::seg_end("combine", None, cb_t0);
+        Ok(res)
     }
 
     /// One decode step over the per-layer caches: every layer advances

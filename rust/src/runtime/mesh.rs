@@ -122,25 +122,47 @@ impl DeviceMesh {
         }
         if dispatches.len() == 1 {
             let d = &dispatches[0];
-            return Ok(vec![self.devices[0].execute(&d.path, &d.inputs)?]);
+            let t0 = crate::trace::seg_begin();
+            let out = self.devices[0].execute(&d.path, &d.inputs);
+            crate::trace::seg_end("dispatch", Some(0), t0);
+            return Ok(vec![out?]);
         }
         // Shard 0 on the caller's thread, shards 1.. on scoped workers;
-        // join everything before combining (all-or-nothing).
+        // join everything before combining (all-or-nothing). Traced
+        // quanta (a segment collector is active on the replica thread)
+        // time each shard on the trace clock — workers can't see the
+        // caller's thread-local, so they carry a clone of the clock and
+        // return their interval for the caller to report after the
+        // join. Untraced dispatches have `clock = None` and skip every
+        // timestamp.
+        let clock = crate::trace::seg_clock();
         let (first, rest) = self.devices.split_at_mut(1);
         let (d0, drest) = dispatches.split_at(1);
-        let results: Vec<Result<Vec<xla::Literal>>> = std::thread::scope(|scope| {
+        type ShardOut = (Result<Vec<xla::Literal>>, Option<(u64, u64)>);
+        let results: Vec<ShardOut> = std::thread::scope(|scope| {
             let handles: Vec<_> = rest
                 .iter_mut()
                 .zip(drest)
-                .map(|(rt, d)| scope.spawn(move || rt.execute(&d.path, &d.inputs)))
+                .map(|(rt, d)| {
+                    let clock = clock.clone();
+                    scope.spawn(move || {
+                        let t0 = clock.as_ref().map(|c| c.now_ns());
+                        let r = rt.execute(&d.path, &d.inputs);
+                        let t1 = clock.as_ref().map(|c| c.now_ns());
+                        (r, t0.zip(t1))
+                    })
+                })
                 .collect();
-            let mut out = vec![first[0].execute(&d0[0].path, &d0[0].inputs)];
+            let t0 = clock.as_ref().map(|c| c.now_ns());
+            let r0 = first[0].execute(&d0[0].path, &d0[0].inputs);
+            let t1 = clock.as_ref().map(|c| c.now_ns());
+            let mut out: Vec<ShardOut> = vec![(r0, t0.zip(t1))];
             for h in handles {
                 // A panicking worker must fail this dispatch (with shard
                 // attribution below), not take down the replica thread
                 // that owns the whole device group.
                 out.push(h.join().unwrap_or_else(|_| {
-                    Err(anyhow!("shard worker thread panicked"))
+                    (Err(anyhow!("shard worker thread panicked")), None)
                 }));
             }
             out
@@ -148,7 +170,12 @@ impl DeviceMesh {
         results
             .into_iter()
             .enumerate()
-            .map(|(s, r)| r.map_err(|e| anyhow!("shard {}: {:#}", s, e)))
+            .map(|(s, (r, interval))| {
+                if let Some((t0, t1)) = interval {
+                    crate::trace::push_seg("dispatch", Some(s as u32), t0, t1);
+                }
+                r.map_err(|e| anyhow!("shard {}: {:#}", s, e))
+            })
             .collect()
     }
 }

@@ -48,6 +48,18 @@ pub enum Admit {
     Oversize,
 }
 
+impl Admit {
+    /// Stable lowercase label (the `outcome` attribute on a trace's
+    /// `admit` span).
+    pub fn name(self) -> &'static str {
+        match self {
+            Admit::Granted => "granted",
+            Admit::Defer => "defer",
+            Admit::Oversize => "oversize",
+        }
+    }
+}
+
 /// KV-byte + slot accounting for one replica.
 #[derive(Debug)]
 pub struct Admission {

@@ -79,6 +79,7 @@ use crate::coordinator::{Event, GenRequest, PushError, SchedStats, SchedulerQueu
 use crate::kvcache::{PrefixCache, PrefixCacheStats};
 use crate::metrics::Registry;
 use crate::model::{request_prefix_affinity, ModelEngine};
+use crate::trace::{Clock, MonotonicClock, TraceRecorder};
 
 pub use admission::PrefixCharge;
 pub use replica::ReplicaEngine;
@@ -113,6 +114,13 @@ pub struct PoolConfig {
     /// against the group's pooled capacity (`kv_budget_bytes` ×
     /// `tp_degree`). `1` (or `0`) = today's one-device replicas.
     pub tp_degree: usize,
+    /// Request-trace sampling rate in [0, 1] (`fastav serve
+    /// --trace-sample`). `0` disables tracing: one branch at submit,
+    /// nothing allocated on the request path.
+    pub trace_sample: f64,
+    /// Completed traces retained per replica (`--trace-ring`); bounds
+    /// tracer memory regardless of uptime.
+    pub trace_ring: usize,
 }
 
 impl Default for PoolConfig {
@@ -127,6 +135,8 @@ impl Default for PoolConfig {
             default_deadline: None,
             max_decode_batch: 0,
             tp_degree: 1,
+            trace_sample: 0.0,
+            trace_ring: 256,
         }
     }
 }
@@ -255,6 +265,8 @@ pub struct ReplicaPool {
     prefix: Arc<PrefixCache>,
     /// Affinity key → replica that first served it (= owns the entry).
     router: Mutex<HashMap<u64, usize>>,
+    /// Sampled request-lifecycle tracer (see the `trace` module).
+    tracer: Arc<TraceRecorder>,
 }
 
 /// Bound on remembered affinity routes; the map resets when exceeded
@@ -295,9 +307,32 @@ impl ReplicaPool {
         E: ReplicaEngine + 'static,
         F: Fn(usize) -> Result<E> + Send + Sync + 'static,
     {
+        Self::start_with_factory_clocked(cfg, metrics, factory, Arc::new(MonotonicClock::new()))
+    }
+
+    /// [`Self::start_with_factory`] with an explicit trace clock — the
+    /// mock-pool trace tests drive a [`crate::trace::MockClock`] so span
+    /// timestamps (and the root-duration = `fastav_generate_seconds`
+    /// identity) are exactly assertable.
+    pub fn start_with_factory_clocked<E, F>(
+        cfg: PoolConfig,
+        metrics: Arc<Registry>,
+        factory: F,
+        clock: Arc<dyn Clock>,
+    ) -> Result<ReplicaPool>
+    where
+        E: ReplicaEngine + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    {
         let cfg = cfg.normalized();
         register_metrics(&metrics);
         metrics.gauge("fastav_tp_degree").set(cfg.tp_degree as u64);
+        let tracer = Arc::new(TraceRecorder::new(
+            cfg.trace_sample,
+            cfg.trace_ring,
+            cfg.replicas,
+            clock,
+        ));
         let factory = Arc::new(factory);
         let shared = Arc::new(PoolShared::default());
         // One process-wide prefix cache shared by every replica; each
@@ -316,6 +351,7 @@ impl ReplicaPool {
                 let metrics = Arc::clone(&metrics);
                 let factory = Arc::clone(&factory);
                 let prefix = Arc::clone(&prefix);
+                let tracer = Arc::clone(&tracer);
                 let cfg = cfg.clone();
                 std::thread::Builder::new()
                     .name(format!("replica-{}", i))
@@ -337,6 +373,7 @@ impl ReplicaPool {
                             &pshared,
                             &metrics,
                             Some(prefix),
+                            &tracer,
                         );
                     })
             };
@@ -367,6 +404,7 @@ impl ReplicaPool {
             metrics,
             prefix,
             router: Mutex::new(HashMap::new()),
+            tracer,
         })
     }
 
@@ -407,6 +445,14 @@ impl ReplicaPool {
         let affinity = request_prefix_affinity(&req.prompt, &req.segments, req.spec.plan());
         self.shared.submitted.fetch_add(1, Ordering::SeqCst);
         self.metrics.counter("fastav_requests_total").inc();
+        // One sampling branch; on the untraced path `trace` is `None`
+        // and nothing below allocates for it. A sampled request opens
+        // its `queue` span here and carries the trace inside the Job
+        // (a rejected push drops the Job — and the trace — with it).
+        let mut trace = self.tracer.try_sample(id, req.profile.as_deref());
+        if let Some(t) = trace.as_mut() {
+            t.begin("queue");
+        }
         let mut job = Job {
             id,
             req,
@@ -414,6 +460,7 @@ impl ReplicaPool {
             deadline,
             cancel: Arc::clone(&cancel),
             events: tx,
+            trace,
         };
         // Register the cancel flag *before* the push: the replica may
         // pop, finish, and clean up the entry before try_push returns.
@@ -553,6 +600,11 @@ impl ReplicaPool {
         &self.prefix
     }
 
+    /// The pool's request-lifecycle trace recorder.
+    pub fn tracer(&self) -> &Arc<TraceRecorder> {
+        &self.tracer
+    }
+
     /// Prefix-cache accounting snapshot (the `/v1/pool` payload).
     pub fn prefix_stats(&self) -> PrefixCacheStats {
         self.prefix.stats()
@@ -603,6 +655,8 @@ fn register_metrics(metrics: &Registry) {
             sz,
         ));
     }
+    metrics.histogram("fastav_ttft_seconds");
+    metrics.histogram("fastav_generate_seconds");
     metrics.gauge("fastav_queue_depth");
     metrics.gauge("fastav_kv_peak_bytes");
     metrics.gauge("fastav_tp_degree");

@@ -21,6 +21,9 @@ use crate::coordinator::{Event, GenRequest, SchedulerQueue};
 use crate::kvcache::PrefixCache;
 use crate::metrics::{labeled, occupancy_bucket, Registry, OCCUPANCY_BUCKETS};
 use crate::model::{GenerateResult, Generation, ModelEngine, RequestInput, StepEvent};
+use crate::trace::{
+    collect_segs, Outcome, ReqTrace, Seg, TraceRecorder, TraceStats, TRACK_REQUEST,
+};
 
 use super::admission::{Admission, Admit, PrefixCharge};
 use super::step_scheduler::StepScheduler;
@@ -85,6 +88,12 @@ pub trait ReplicaEngine {
     /// across concurrent borrowers. `None` = everything is unique.
     fn prefix_probe(&self, _req: &GenRequest) -> Option<PrefixCharge> {
         None
+    }
+
+    /// Whether `gen` resumed from a cached AV prefix (observability
+    /// only: names the trace's startup span `prefix_resume` vs `begin`).
+    fn prefix_hit(&self, _gen: &Self::Gen) -> bool {
+        false
     }
 }
 
@@ -152,6 +161,10 @@ impl ReplicaEngine for ModelEngine {
         self.prefix_shared_estimate(&req.prompt, &req.segments, &req.frame_of, req.spec.plan())
             .map(|(key, bytes)| PrefixCharge { key, bytes })
     }
+
+    fn prefix_hit(&self, gen: &Generation) -> bool {
+        gen.prefix_hit()
+    }
 }
 
 /// A queued request (pool-internal).
@@ -162,6 +175,9 @@ pub(crate) struct Job {
     pub deadline: Option<Instant>,
     pub cancel: Arc<std::sync::atomic::AtomicBool>,
     pub events: Sender<Event>,
+    /// Sampled lifecycle trace (None on the untraced path — which is
+    /// every request when `--trace-sample 0`).
+    pub trace: Option<Box<ReqTrace>>,
 }
 
 /// One admitted, in-flight generation.
@@ -171,7 +187,9 @@ struct Active<G> {
     cancel: Arc<std::sync::atomic::AtomicBool>,
     deadline: Option<Instant>,
     events: Sender<Event>,
-    started: Instant,
+    /// Submission time — end-to-end `fastav_generate_seconds` and TTFT
+    /// measure from here (SLO semantics: queue time counts).
+    enqueued: Instant,
     /// Unique (non-shared) bytes reserved with the admission controller.
     est_bytes: usize,
     /// Shared-prefix charge reserved alongside (refcounted; see
@@ -181,6 +199,11 @@ struct Active<G> {
     /// ([`crate::policy::PruningSpec::decode_class`]); fused quanta only
     /// mix entries of one class.
     spec_class: u64,
+    /// Policy profile label for the per-profile latency histogram.
+    profile: Option<String>,
+    /// Whether the first token was already streamed (TTFT fires once).
+    got_first_token: bool,
+    trace: Option<Box<ReqTrace>>,
 }
 
 /// Pre-resolved metric handles for one replica thread.
@@ -191,6 +214,7 @@ struct ReplicaMetrics {
     steps_c: Arc<crate::metrics::Counter>,
     queue_hist: Arc<crate::metrics::Histogram>,
     gen_hist: Arc<crate::metrics::Histogram>,
+    ttft_hist: Arc<crate::metrics::Histogram>,
     prefill_hist: Arc<crate::metrics::Histogram>,
     tok_hist: Arc<crate::metrics::Histogram>,
     completed_c: Arc<crate::metrics::Counter>,
@@ -217,6 +241,7 @@ impl ReplicaMetrics {
             steps_c: metrics.counter(&labeled("fastav_replica_steps_total", "replica", &l)),
             queue_hist: metrics.histogram("fastav_queue_seconds"),
             gen_hist: metrics.histogram("fastav_generate_seconds"),
+            ttft_hist: metrics.histogram("fastav_ttft_seconds"),
             prefill_hist: metrics.histogram("fastav_prefill_seconds"),
             tok_hist: metrics.histogram("fastav_decode_token_seconds"),
             completed_c: metrics.counter("fastav_requests_completed_total"),
@@ -248,6 +273,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
     pshared: &PoolShared,
     metrics: &Registry,
     prefix: Option<Arc<PrefixCache>>,
+    tracer: &Arc<TraceRecorder>,
 ) {
     let m = ReplicaMetrics::new(metrics, replica_id);
     if let Some(c) = prefix.clone() {
@@ -279,24 +305,47 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
             } else {
                 queue.try_pop_fair()
             };
-            let Some(job) = job else { break };
+            let Some(mut job) = job else { break };
             if !counted {
                 rshared.active.fetch_add(1, Ordering::SeqCst);
             }
+            // A freshly popped trace has its `queue` span open — close
+            // it now. On a parked retry the stack is already back at
+            // the root and `end()` is a no-op.
+            if let Some(t) = job.trace.as_mut() {
+                t.end();
+            }
             if job.cancel.load(Ordering::SeqCst) {
+                commit_job_trace(tracer, replica_id, &mut job, Outcome::Canceled);
                 settle_job(&job, Terminal::Canceled, "canceled before start", rshared, pshared, &m);
                 continue;
             }
             if job.deadline.is_some_and(|d| Instant::now() >= d) {
+                commit_job_trace(tracer, replica_id, &mut job, Outcome::Expired);
                 settle_job(&job, Terminal::Expired, "deadline exceeded in queue", rshared, pshared, &m);
                 continue;
+            }
+            if let Some(t) = job.trace.as_mut() {
+                t.begin("admit");
             }
             let est = engine.estimate_bytes(&job.req);
             // Split the estimate: bytes the request will borrow from a
             // resident prefix entry are charged once across borrowers.
+            let probe_t0 = job.trace.as_ref().map(|t| t.now_ns());
             let charge = engine.prefix_probe(&job.req);
-            let unique = est.saturating_sub(charge.map(|c| c.bytes).unwrap_or(0));
-            match admission.check_prefixed(unique, charge) {
+            if let Some(t) = job.trace.as_mut() {
+                let now = t.now_ns();
+                let s = t.record("prefix_probe", TRACK_REQUEST, probe_t0.unwrap_or(now), now);
+                if let Some(c) = &charge {
+                    t.attr_u64_on(s, "shared_bytes", c.bytes as u64);
+                }
+            }
+            let verdict = admission.check_prefixed(unique_of(est, &charge), charge);
+            if let Some(t) = job.trace.as_mut() {
+                t.attr_str("outcome", verdict.name());
+                t.end();
+            }
+            match verdict {
                 Admit::Granted => {}
                 Admit::Defer => {
                     // Re-examined once a running generation releases
@@ -305,6 +354,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                     break;
                 }
                 Admit::Oversize => {
+                    commit_job_trace(tracer, replica_id, &mut job, Outcome::Failed);
                     settle_job(
                         &job,
                         Terminal::Failed,
@@ -320,10 +370,29 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                     continue;
                 }
             }
+            let unique = unique_of(est, &charge);
             m.queue_hist.observe(job.enqueued.elapsed().as_secs_f64());
             let spec_class = job.req.spec.decode_class();
-            match engine.begin(&job.req) {
+            // `begin` is one quantum-sized unit of engine work (embed +
+            // fused front + global prune, or a prefix-cache resume);
+            // traced requests time it and collect the engine's internal
+            // segments (prefix lookups, mesh upload/dispatch/download).
+            let begin_t0 = job.trace.as_ref().map(|t| t.now_ns());
+            let (begun, begin_segs) = if job.trace.is_some() {
+                collect_segs(tracer.clock(), || engine.begin(&job.req))
+            } else {
+                (engine.begin(&job.req), Vec::new())
+            };
+            match begun {
                 Ok(gen) => {
+                    if let Some(t) = job.trace.as_mut() {
+                        let name =
+                            if engine.prefix_hit(&gen) { "prefix_resume" } else { "begin" };
+                        let now = t.now_ns();
+                        let s = t.record(name, TRACK_REQUEST, begin_t0.unwrap_or(now), now);
+                        t.attr_u64_on(s, "prompt_tokens", job.req.prompt.len() as u64);
+                        record_segs(t, s, &begin_segs);
+                    }
                     sched.admit_with_affinity(
                         job.id,
                         job.req.priority,
@@ -336,14 +405,22 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                         cancel: job.cancel,
                         deadline: job.deadline,
                         events: job.events,
-                        started: Instant::now(),
+                        enqueued: job.enqueued,
                         est_bytes: unique,
                         prefix_charge: charge,
                         spec_class,
+                        profile: job.req.profile.clone(),
+                        got_first_token: false,
+                        trace: job.trace.take(),
                     });
                 }
                 Err(e) => {
+                    if let Some(t) = job.trace.as_mut() {
+                        let now = t.now_ns();
+                        t.record("begin", TRACK_REQUEST, begin_t0.unwrap_or(now), now);
+                    }
                     admission.release_prefixed(unique, charge);
+                    commit_job_trace(tracer, replica_id, &mut job, Outcome::Failed);
                     settle_job(&job, Terminal::Failed, &format!("{:#}", e), rshared, pshared, &m);
                 }
             }
@@ -369,7 +446,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
             match kind {
                 Some((kind, msg)) => {
                     retire_at(&mut engine, &mut active, &mut sched, i, kind, msg,
-                              &mut admission, rshared, pshared, &m);
+                              &mut admission, rshared, pshared, &m, tracer, replica_id);
                 }
                 None => i += 1,
             }
@@ -394,21 +471,18 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
         }
         let decode_quantum = ready[picked[0]];
 
-        let stepped: Result<Vec<StepEvent>> = if picked.len() == 1 {
-            engine.step(&mut active[picked[0]].gen).map(|ev| vec![ev])
+        // Traced participants share one quantum timing: measure the
+        // dispatch once on the recorder clock, collect the engine's
+        // internal segments, and record a closed span into each traced
+        // trace below. Untraced quanta skip all of it.
+        let any_traced = picked.iter().any(|&i| active[i].trace.is_some());
+        let q_t0 = if any_traced { Some(tracer.clock().now_ns()) } else { None };
+        let (stepped, q_segs) = if any_traced {
+            collect_segs(tracer.clock(), || step_picked(&mut engine, &mut active, &picked))
         } else {
-            // Disjoint &mut borrows of the picked generations (ascending
-            // indices) for one fused dispatch.
-            let mut gens: Vec<&mut E::Gen> = Vec::with_capacity(picked.len());
-            let mut want = picked.iter().copied().peekable();
-            for (i, a) in active.iter_mut().enumerate() {
-                if want.peek() == Some(&i) {
-                    want.next();
-                    gens.push(&mut a.gen);
-                }
-            }
-            engine.step_batch(&mut gens)
+            (step_picked(&mut engine, &mut active, &picked), Vec::new())
         };
+        let q_t1 = q_t0.map(|_| tracer.clock().now_ns());
 
         match stepped {
             Ok(events) => {
@@ -426,9 +500,34 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                 let mut finished: Vec<usize> = Vec::new();
                 for (&idx, ev) in picked.iter().zip(&events) {
                     let entry = &mut active[idx];
+                    if let (Some(t0), Some(t1)) = (q_t0, q_t1) {
+                        if let Some(t) = entry.trace.as_mut() {
+                            let s = if decode_quantum {
+                                let s = t.record("decode_quantum", TRACK_REQUEST, t0, t1);
+                                t.attr_u64_on(s, "batch", picked.len() as u64);
+                                t.attr_u64_on(s, "class", entry.spec_class);
+                                s
+                            } else {
+                                let s = t.record("prefill_chunk", TRACK_REQUEST, t0, t1);
+                                if let StepEvent::Prefilled { layer } = ev {
+                                    t.attr_u64_on(s, "layer", *layer as u64);
+                                }
+                                s
+                            };
+                            t.attr_u64_on(s, "seq", sched.quantum_seq());
+                            record_segs(t, s, &q_segs);
+                        }
+                    }
                     match ev {
                         StepEvent::Token(t) => {
                             let _ = entry.events.send(Event::Token(*t));
+                            if !entry.got_first_token {
+                                entry.got_first_token = true;
+                                m.ttft_hist.observe(entry.enqueued.elapsed().as_secs_f64());
+                                if let Some(tr) = entry.trace.as_mut() {
+                                    tr.mark_first_token();
+                                }
+                            }
                             m.steps_c.inc();
                             rshared.steps_total.fetch_add(1, Ordering::Relaxed);
                             rate_steps += 1;
@@ -447,10 +546,28 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                 // Retire completed generations back-to-front so the
                 // remaining indices stay valid.
                 for &idx in finished.iter().rev() {
-                    let a = active.remove(idx);
+                    let mut a = active.remove(idx);
                     sched.remove(idx);
                     let res = engine.finish(a.gen);
-                    m.gen_hist.observe(a.started.elapsed().as_secs_f64());
+                    // End-to-end latency (submit → finish). For traced
+                    // requests the histogram observes *exactly* the
+                    // trace root's duration, so `/v1/trace/{id}` and
+                    // `fastav_generate_seconds` can never disagree.
+                    let gen_secs = match a.trace.take() {
+                        Some(t) => tracer.commit(
+                            t,
+                            replica_id,
+                            Outcome::Completed,
+                            stats_of(&res),
+                        ),
+                        None => a.enqueued.elapsed().as_secs_f64(),
+                    };
+                    m.gen_hist.observe(gen_secs);
+                    if let Some(p) = &a.profile {
+                        metrics
+                            .histogram(&labeled("fastav_generate_seconds", "profile", p))
+                            .observe(gen_secs);
+                    }
                     m.prefill_hist.observe(res.prefill_seconds);
                     if res.decode_steps > 0 {
                         m.tok_hist.observe(res.decode_seconds / res.decode_steps as f64);
@@ -473,7 +590,8 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                 let msg = format!("{:#}", e);
                 for &idx in picked.iter().rev() {
                     retire_at(&mut engine, &mut active, &mut sched, idx,
-                              Terminal::Failed, &msg, &mut admission, rshared, pshared, &m);
+                              Terminal::Failed, &msg, &mut admission, rshared, pshared, &m,
+                              tracer, replica_id);
                 }
             }
         }
@@ -499,6 +617,69 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
     }
 }
 
+/// Advance the picked set by one quantum: a single step when the pick
+/// is one generation, one fused decode dispatch otherwise.
+fn step_picked<E: ReplicaEngine>(
+    engine: &mut E,
+    active: &mut [Active<E::Gen>],
+    picked: &[usize],
+) -> Result<Vec<StepEvent>> {
+    if picked.len() == 1 {
+        return engine.step(&mut active[picked[0]].gen).map(|ev| vec![ev]);
+    }
+    // Disjoint &mut borrows of the picked generations (ascending
+    // indices) for one fused dispatch.
+    let mut gens: Vec<&mut E::Gen> = Vec::with_capacity(picked.len());
+    let mut want = picked.iter().copied().peekable();
+    for (i, a) in active.iter_mut().enumerate() {
+        if want.peek() == Some(&i) {
+            want.next();
+            gens.push(&mut a.gen);
+        }
+    }
+    engine.step_batch(&mut gens)
+}
+
+/// Bytes of `est` not covered by the shared-prefix charge.
+fn unique_of(est: usize, charge: &Option<PrefixCharge>) -> usize {
+    est.saturating_sub(charge.as_ref().map(|c| c.bytes).unwrap_or(0))
+}
+
+/// Hang collected engine segments (upload/dispatch/download/combine,
+/// prefix lookups) under span `parent`, each on its own track.
+fn record_segs(t: &mut ReqTrace, parent: usize, segs: &[Seg]) {
+    for sg in segs {
+        let i = t.record_under(parent, sg.name, sg.track(), sg.start_ns, sg.end_ns);
+        if let Some(sh) = sg.shard {
+            t.attr_u64_on(i, "shard", sh as u64);
+        }
+    }
+}
+
+/// Trace stats from a finished generation's result.
+fn stats_of(res: &GenerateResult) -> TraceStats {
+    TraceStats {
+        tokens: res.tokens.len() as u64,
+        flops_total: res.flops.total,
+        relative_flops: res.relative_flops,
+        prefix_hit: res.prefix_hit,
+    }
+}
+
+/// Commit a job's trace (if sampled) for a request that never reached
+/// the step scheduler. Runs *before* the terminal event is sent, so the
+/// HTTP layer can fetch the trace as soon as the stream ends.
+fn commit_job_trace(
+    tracer: &TraceRecorder,
+    replica_id: usize,
+    job: &mut Job,
+    outcome: Outcome,
+) {
+    if let Some(t) = job.trace.take() {
+        tracer.commit(t, replica_id, outcome, TraceStats::default());
+    }
+}
+
 /// Retire in-flight entry `idx` into a terminal state: drop its partial
 /// generation, settle counters/events, and release its admission charge.
 #[allow(clippy::too_many_arguments)]
@@ -513,10 +694,21 @@ fn retire_at<E: ReplicaEngine>(
     rshared: &ReplicaShared,
     pshared: &PoolShared,
     m: &ReplicaMetrics,
+    tracer: &TraceRecorder,
+    replica_id: usize,
 ) {
-    let a = active.remove(idx);
+    let mut a = active.remove(idx);
     sched.remove(idx);
-    drop(engine.finish(a.gen));
+    let res = engine.finish(a.gen);
+    if let Some(t) = a.trace.take() {
+        let outcome = match kind {
+            Terminal::Canceled => Outcome::Canceled,
+            Terminal::Expired => Outcome::Expired,
+            Terminal::Failed => Outcome::Failed,
+        };
+        tracer.commit(t, replica_id, outcome, stats_of(&res));
+    }
+    drop(res);
     settle_terminal(kind, msg, &a.events, rshared, pshared, m, false);
     admission.release_prefixed(a.est_bytes, a.prefix_charge);
     pshared.cancels.lock().unwrap().remove(&a.id);

@@ -70,6 +70,13 @@ impl StepScheduler {
         self.total_steps
     }
 
+    /// Sequence number of the most recent quantum (1-based; 0 before
+    /// any pick). Quantum spans carry it as their `seq` attribute so a
+    /// trace can be lined up against the replica's scheduling order.
+    pub fn quantum_seq(&self) -> u64 {
+        self.total_steps
+    }
+
     pub fn entry(&self, idx: usize) -> &EntryMeta {
         &self.entries[idx]
     }

@@ -1,0 +1,223 @@
+//! Trace serialization: span-tree JSON (`/v1/trace/{id}`), one-line
+//! summaries (`/v1/traces` and the `/v2/generate` `timing` block), and
+//! Chrome trace-event JSON (`?format=chrome`, loadable in Perfetto /
+//! `chrome://tracing` — the replica is the process, each trace track a
+//! thread, so parallel mesh shards render as parallel lanes).
+
+use crate::util::json::Json;
+
+use super::{AttrValue, CompletedTrace, Span};
+
+fn attr_json(v: &AttrValue) -> Json {
+    match v {
+        AttrValue::U64(n) => Json::num(*n as f64),
+        AttrValue::F64(f) => Json::num(*f),
+        AttrValue::Str(s) => Json::str(s),
+    }
+}
+
+fn attrs_json(span: &Span) -> Json {
+    Json::Obj(
+        span.attrs
+            .iter()
+            .map(|(k, v)| (k.to_string(), attr_json(v)))
+            .collect(),
+    )
+}
+
+fn span_json(t: &CompletedTrace, idx: usize) -> Json {
+    let s = &t.spans[idx];
+    // Children always follow their parent in the span vector, so this
+    // recursion is over strictly increasing indices and terminates.
+    let children: Vec<Json> = (idx + 1..t.spans.len())
+        .filter(|&j| t.spans[j].parent == Some(idx as u32))
+        .map(|j| span_json(t, j))
+        .collect();
+    let mut fields = vec![
+        ("name", Json::str(s.name)),
+        ("track", Json::num(s.track as f64)),
+        ("start_us", Json::num(s.start_ns as f64 / 1e3)),
+        ("duration_us", Json::num(s.duration_ns() as f64 / 1e3)),
+    ];
+    if !s.attrs.is_empty() {
+        fields.push(("attrs", attrs_json(s)));
+    }
+    if !children.is_empty() {
+        fields.push(("children", Json::arr(children)));
+    }
+    Json::obj(fields)
+}
+
+fn opt_str(s: &Option<String>) -> Json {
+    s.as_deref().map(Json::str).unwrap_or(Json::Null)
+}
+
+/// Full span tree for `GET /v1/trace/{id}`.
+pub fn trace_json(t: &CompletedTrace) -> Json {
+    Json::obj(vec![
+        ("request_id", Json::num(t.id as f64)),
+        ("profile", opt_str(&t.profile)),
+        ("replica", Json::num(t.replica as f64)),
+        ("outcome", Json::str(t.outcome.name())),
+        ("root", span_json(t, 0)),
+    ])
+}
+
+/// One-line breakdown for `/v1/traces` and the `/v2/generate` `timing`
+/// block. Phase seconds are sums over the span vocabulary, so gaps
+/// (scheduler waits between quanta) show up as
+/// `total - (queue + admit + prefill + decode)`.
+pub fn summary_json(t: &CompletedTrace) -> Json {
+    let queue = t.sum_named_seconds(&["queue"]);
+    let admit = t.sum_named_seconds(&["admit"]);
+    let prefill = t.sum_named_seconds(&["begin", "prefix_resume", "prefill_chunk"]);
+    let decode = t.sum_named_seconds(&["decode_quantum"]);
+    Json::obj(vec![
+        ("request_id", Json::num(t.id as f64)),
+        ("profile", opt_str(&t.profile)),
+        ("replica", Json::num(t.replica as f64)),
+        ("outcome", Json::str(t.outcome.name())),
+        ("total_seconds", Json::num(t.duration_seconds())),
+        (
+            "ttft_seconds",
+            t.ttft_ns
+                .map(|ns| Json::num(ns as f64 / 1e9))
+                .unwrap_or(Json::Null),
+        ),
+        ("queue_seconds", Json::num(queue)),
+        ("admit_seconds", Json::num(admit)),
+        ("prefill_seconds", Json::num(prefill)),
+        ("decode_seconds", Json::num(decode)),
+        ("tokens", Json::num(t.stats.tokens as f64)),
+        ("flops_total", Json::num(t.stats.flops_total as f64)),
+        ("relative_flops", Json::num(t.stats.relative_flops)),
+        ("prefix_hit", Json::Bool(t.stats.prefix_hit)),
+        ("spans", Json::num(t.spans.len() as f64)),
+    ])
+}
+
+/// Chrome trace-event JSON (the `{"traceEvents": [...]}` object form).
+/// `pid` = replica, `tid` = trace track; one `M` (metadata) event names
+/// each track, then every span is a `ph:"X"` complete event with µs
+/// timestamps.
+pub fn chrome_json(t: &CompletedTrace) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(t.spans.len() + 4);
+    let mut tracks: Vec<u32> = t.spans.iter().map(|s| s.track).collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+    for track in tracks {
+        let label = if track == super::TRACK_REQUEST {
+            format!("replica {} request", t.replica)
+        } else {
+            format!("replica {} shard {}", t.replica, track - 1)
+        };
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::num(t.replica as f64)),
+            ("tid", Json::num(track as f64)),
+            ("args", Json::obj(vec![("name", Json::str(&label))])),
+        ]));
+    }
+    for s in &t.spans {
+        events.push(Json::obj(vec![
+            ("ph", Json::str("X")),
+            ("name", Json::str(s.name)),
+            ("cat", Json::str("fastav")),
+            ("pid", Json::num(t.replica as f64)),
+            ("tid", Json::num(s.track as f64)),
+            ("ts", Json::num(s.start_ns as f64 / 1e3)),
+            ("dur", Json::num(s.duration_ns() as f64 / 1e3)),
+            ("args", attrs_json(s)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::{Clock, MockClock, Outcome, TraceRecorder, TraceStats, TRACK_REQUEST};
+    use super::*;
+
+    fn sample_trace() -> Arc<CompletedTrace> {
+        let clock = Arc::new(MockClock::new());
+        let rec = TraceRecorder::new(1.0, 4, 1, clock.clone() as Arc<dyn Clock>);
+        let mut t = rec.try_sample(11, Some("fast")).unwrap();
+        t.begin("queue");
+        clock.advance_ns(2_000);
+        t.end();
+        clock.advance_ns(1_000);
+        let q = t.record("decode_quantum", TRACK_REQUEST, 2_000, 3_000);
+        t.attr_u64_on(q, "batch", 2);
+        t.record_under(q, "dispatch", 1, 2_100, 2_900);
+        t.mark_first_token();
+        rec.commit(
+            t,
+            0,
+            Outcome::Completed,
+            TraceStats { tokens: 5, flops_total: 1_000, relative_flops: 0.55, prefix_hit: true },
+        );
+        rec.get(11).unwrap()
+    }
+
+    #[test]
+    fn tree_export_nests_children_and_roundtrips() {
+        let t = sample_trace();
+        let v = Json::parse(&trace_json(&t).to_string()).unwrap();
+        assert_eq!(v.get("request_id").as_usize(), Some(11));
+        assert_eq!(v.get("outcome").as_str(), Some("completed"));
+        let root = v.get("root");
+        assert_eq!(root.get("name").as_str(), Some("request"));
+        let kids = root.get("children").as_arr().unwrap();
+        let names: Vec<&str> = kids.iter().map(|k| k.get("name").as_str().unwrap()).collect();
+        assert_eq!(names, vec!["queue", "decode_quantum"]);
+        let quantum = &kids[1];
+        assert_eq!(quantum.get("attrs").get("batch").as_usize(), Some(2));
+        let seg = &quantum.get("children").as_arr().unwrap()[0];
+        assert_eq!(seg.get("name").as_str(), Some("dispatch"));
+        assert_eq!(seg.get("track").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn summary_breaks_down_phases() {
+        let t = sample_trace();
+        let v = Json::parse(&summary_json(&t).to_string()).unwrap();
+        assert_eq!(v.get("profile").as_str(), Some("fast"));
+        assert!((v.get("queue_seconds").as_f64().unwrap() - 2e-6).abs() < 1e-12);
+        assert!((v.get("decode_seconds").as_f64().unwrap() - 1e-6).abs() < 1e-12);
+        assert!((v.get("total_seconds").as_f64().unwrap() - 3e-6).abs() < 1e-12);
+        assert_eq!(v.get("tokens").as_usize(), Some(5));
+        assert_eq!(v.get("prefix_hit").as_bool(), Some(true));
+        assert!((v.get("relative_flops").as_f64().unwrap() - 0.55).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_trace_event_json() {
+        let t = sample_trace();
+        let v = Json::parse(&chrome_json(&t).to_string()).unwrap();
+        let events = v.get("traceEvents").as_arr().unwrap();
+        // 2 tracks (request + shard 1) + 4 spans.
+        let metas: Vec<&Json> =
+            events.iter().filter(|e| e.get("ph").as_str() == Some("M")).collect();
+        let xs: Vec<&Json> =
+            events.iter().filter(|e| e.get("ph").as_str() == Some("X")).collect();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(xs.len(), t.spans.len());
+        for e in &xs {
+            assert!(e.get("ts").as_f64().is_some());
+            assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+            assert!(e.get("pid").as_usize().is_some());
+            assert!(e.get("tid").as_usize().is_some());
+        }
+        assert!(xs.iter().any(|e| e.get("name").as_str() == Some("request")));
+        assert!(xs
+            .iter()
+            .any(|e| e.get("name").as_str() == Some("dispatch")
+                && e.get("tid").as_usize() == Some(1)));
+    }
+}

@@ -1,0 +1,698 @@
+//! Request-lifecycle tracing + per-quantum engine profiling.
+//!
+//! A [`TraceRecorder`] samples submitted requests (counter-based, so a
+//! rate of `1/n` traces exactly every n-th submission) and collects a
+//! **well-nested span tree** per sampled request:
+//!
+//! ```text
+//!   request                          (root; duration == the request's
+//!   ├─ queue                          fastav_generate_seconds sample)
+//!   ├─ admit
+//!   │  └─ prefix_probe
+//!   ├─ begin | prefix_resume         (embed + front prefill, or a
+//!   ├─ prefill_chunk ×L               mid-sequence cache resume)
+//!   └─ decode_quantum ×T             (batch size + decode class attrs)
+//!      ├─ upload / download / combine   (engine host work, track 0)
+//!      └─ dispatch ×D                   (per-shard, tracks 1..=D)
+//! ```
+//!
+//! Spans live on **tracks**: track 0 is the request's serial timeline
+//! on its replica thread; track `1 + s` is mesh shard `s`, so per-shard
+//! `dispatch` segments that genuinely overlap in wall time never
+//! overlap *within* a track (the Chrome exporter maps tracks to
+//! threads, one Perfetto lane each).
+//!
+//! **Cost model:** sampling off (`--trace-sample 0`) is one branch in
+//! `try_sample` per submit — no allocation, no clock read, nothing on
+//! the per-token path. Sampled requests pay one `Box<ReqTrace>` plus a
+//! few clock reads per scheduling quantum. Completed traces land in
+//! per-replica ring buffers (`--trace-ring` entries each), so memory is
+//! bounded however long the server runs.
+//!
+//! The clock is a trait ([`Clock`]) so the mock-pool tests drive a
+//! [`MockClock`] and assert exact timing identities; production uses
+//! the [`MonotonicClock`] (one `Instant` origin per recorder).
+//!
+//! Engine internals report sub-quantum segments (upload/dispatch/
+//! download/combine, prefix lookups) through a **thread-local segment
+//! collector** ([`collect_segs`]): the replica loop installs it around
+//! a traced quantum, the engine and mesh call [`seg_begin`]/[`seg_end`]
+//! /[`push_seg`] unconditionally (a no-op when no collector is active),
+//! and no engine trait signature changes — which is what keeps the
+//! mock-pool streaming-equivalence tests pinning the untraced path.
+
+pub mod export;
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Monotonic time source for span timestamps. `Send + Sync` because one
+/// recorder (and its clock) is shared by the submit path and every
+/// replica thread.
+pub trait Clock: Send + Sync {
+    /// Nanoseconds since the clock's origin (monotone, never wraps in
+    /// practice: u64 ns ≈ 584 years).
+    fn now_ns(&self) -> u64;
+}
+
+/// Production clock: `Instant` elapsed since recorder construction.
+#[derive(Debug)]
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+}
+
+/// Test clock: time advances only when the test says so, making span
+/// timestamps (and the root-duration == histogram-sample identity)
+/// exactly assertable.
+#[derive(Debug, Default)]
+pub struct MockClock {
+    t: AtomicU64,
+}
+
+impl MockClock {
+    pub fn new() -> MockClock {
+        MockClock::default()
+    }
+
+    pub fn advance_ns(&self, d: u64) {
+        self.t.fetch_add(d, Ordering::SeqCst);
+    }
+
+    pub fn set_ns(&self, t: u64) {
+        self.t.store(t, Ordering::SeqCst);
+    }
+}
+
+impl Clock for MockClock {
+    fn now_ns(&self) -> u64 {
+        self.t.load(Ordering::SeqCst)
+    }
+}
+
+/// Track index of the request's serial timeline (its replica thread).
+/// Mesh shard `s` segments go on track `1 + s`.
+pub const TRACK_REQUEST: u32 = 0;
+
+/// A span attribute value (kept closed over `'static` names so traces
+/// allocate only for the span vector itself).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    U64(u64),
+    F64(f64),
+    Str(&'static str),
+}
+
+/// One timed interval in a request's trace.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: &'static str,
+    /// 0 = request timeline; `1 + s` = mesh shard `s`.
+    pub track: u32,
+    /// Index of the parent span in [`CompletedTrace::spans`]; `None`
+    /// only for the root. Parents always precede children, so the span
+    /// vector is a topologically ordered tree.
+    pub parent: Option<u32>,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub attrs: Vec<(&'static str, AttrValue)>,
+}
+
+impl Span {
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// How a traced request left the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Completed,
+    Canceled,
+    Expired,
+    Failed,
+}
+
+impl Outcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Completed => "completed",
+            Outcome::Canceled => "canceled",
+            Outcome::Expired => "expired",
+            Outcome::Failed => "failed",
+        }
+    }
+}
+
+/// Result-derived numbers attached at commit (zeroed for requests that
+/// never produced a [`crate::model::GenerateResult`]).
+#[derive(Debug, Clone, Default)]
+pub struct TraceStats {
+    pub tokens: u64,
+    /// Theoretical FLOPs charged at the resolved pruning spec (the
+    /// paper's accounting, from the `flops` module via the engine).
+    pub flops_total: u64,
+    /// FLOPs relative to the unpruned baseline (×100 = percent).
+    pub relative_flops: f64,
+    pub prefix_hit: bool,
+}
+
+/// An in-flight trace: the open root span plus a stack of open child
+/// spans. Travels with the request (inside its pool `Job` / `Active`
+/// entry), so all mutation is single-threaded — no locks on the traced
+/// path either.
+pub struct ReqTrace {
+    id: u64,
+    profile: Option<String>,
+    clock: Arc<dyn Clock>,
+    spans: Vec<Span>,
+    /// Indices of open spans, innermost last. `stack[0]` is the root,
+    /// which only [`TraceRecorder::commit`] closes — so spans are
+    /// well-nested by construction.
+    stack: Vec<u32>,
+    ttft_ns: Option<u64>,
+}
+
+impl ReqTrace {
+    fn new(id: u64, profile: Option<String>, clock: Arc<dyn Clock>) -> Box<ReqTrace> {
+        let start = clock.now_ns();
+        let mut t = Box::new(ReqTrace {
+            id,
+            profile,
+            clock,
+            spans: Vec::with_capacity(16),
+            stack: Vec::with_capacity(4),
+            ttft_ns: None,
+        });
+        t.spans.push(Span {
+            name: "request",
+            track: TRACK_REQUEST,
+            parent: None,
+            start_ns: start,
+            end_ns: start,
+            attrs: Vec::new(),
+        });
+        t.stack.push(0);
+        t
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Current time on the recorder clock (for spans measured by the
+    /// caller and recorded afterwards, e.g. around `engine.begin`).
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Open a span as a child of the innermost open span.
+    pub fn begin(&mut self, name: &'static str) {
+        let parent = self.stack.last().copied();
+        let now = self.clock.now_ns();
+        let idx = self.spans.len() as u32;
+        self.spans.push(Span {
+            name,
+            track: TRACK_REQUEST,
+            parent,
+            start_ns: now,
+            end_ns: now,
+            attrs: Vec::new(),
+        });
+        self.stack.push(idx);
+    }
+
+    /// Close the innermost open span. The root is never closed here
+    /// (commit does that), so an extra `end()` is a safe no-op.
+    pub fn end(&mut self) {
+        if self.stack.len() <= 1 {
+            return;
+        }
+        let idx = self.stack.pop().expect("stack non-empty") as usize;
+        self.spans[idx].end_ns = self.clock.now_ns();
+    }
+
+    /// Attach an attribute to the innermost open span.
+    pub fn attr_u64(&mut self, key: &'static str, v: u64) {
+        if let Some(&i) = self.stack.last() {
+            self.spans[i as usize].attrs.push((key, AttrValue::U64(v)));
+        }
+    }
+
+    pub fn attr_str(&mut self, key: &'static str, v: &'static str) {
+        if let Some(&i) = self.stack.last() {
+            self.spans[i as usize].attrs.push((key, AttrValue::Str(v)));
+        }
+    }
+
+    /// Record an already-measured closed span as a child of the
+    /// innermost open span; returns its index for [`Self::record_under`]
+    /// / `attr_*_on`.
+    pub fn record(
+        &mut self,
+        name: &'static str,
+        track: u32,
+        start_ns: u64,
+        end_ns: u64,
+    ) -> usize {
+        let parent = self.stack.last().copied();
+        self.spans.push(Span { name, track, parent, start_ns, end_ns, attrs: Vec::new() });
+        self.spans.len() - 1
+    }
+
+    /// Record a closed span under an explicit parent (a span returned by
+    /// [`Self::record`] — used to hang engine segments off their quantum).
+    pub fn record_under(
+        &mut self,
+        parent: usize,
+        name: &'static str,
+        track: u32,
+        start_ns: u64,
+        end_ns: u64,
+    ) -> usize {
+        self.spans.push(Span {
+            name,
+            track,
+            parent: Some(parent as u32),
+            start_ns,
+            end_ns,
+            attrs: Vec::new(),
+        });
+        self.spans.len() - 1
+    }
+
+    pub fn attr_u64_on(&mut self, idx: usize, key: &'static str, v: u64) {
+        self.spans[idx].attrs.push((key, AttrValue::U64(v)));
+    }
+
+    pub fn attr_str_on(&mut self, idx: usize, key: &'static str, v: &'static str) {
+        self.spans[idx].attrs.push((key, AttrValue::Str(v)));
+    }
+
+    /// Stamp time-to-first-token (first call wins; later calls no-op).
+    pub fn mark_first_token(&mut self) {
+        if self.ttft_ns.is_none() {
+            let start = self.spans[0].start_ns;
+            self.ttft_ns = Some(self.clock.now_ns().saturating_sub(start));
+        }
+    }
+}
+
+/// A finished trace, as stored in the ring and served over HTTP.
+#[derive(Debug, Clone)]
+pub struct CompletedTrace {
+    pub id: u64,
+    pub profile: Option<String>,
+    pub replica: usize,
+    pub outcome: Outcome,
+    pub ttft_ns: Option<u64>,
+    pub stats: TraceStats,
+    /// Topologically ordered span tree; `spans[0]` is the root.
+    pub spans: Vec<Span>,
+}
+
+impl CompletedTrace {
+    pub fn duration_ns(&self) -> u64 {
+        self.spans[0].duration_ns()
+    }
+
+    pub fn duration_seconds(&self) -> f64 {
+        self.duration_ns() as f64 / 1e9
+    }
+
+    /// Summed duration (seconds) of every span with one of `names`.
+    pub fn sum_named_seconds(&self, names: &[&str]) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| names.contains(&s.name))
+            .map(|s| s.duration_ns() as f64 / 1e9)
+            .sum()
+    }
+}
+
+/// Sampling recorder + per-replica rings of completed traces.
+pub struct TraceRecorder {
+    /// Trace every `period`-th submission; 0 = tracing off.
+    period: u64,
+    counter: AtomicU64,
+    ring_cap: usize,
+    clock: Arc<dyn Clock>,
+    rings: Vec<Mutex<VecDeque<Arc<CompletedTrace>>>>,
+}
+
+impl TraceRecorder {
+    /// `sample_rate` ∈ [0, 1]: 1.0 traces everything, 0.01 every 100th,
+    /// ≤ 0 disables tracing entirely. `ring_cap` bounds each replica's
+    /// completed-trace ring.
+    pub fn new(
+        sample_rate: f64,
+        ring_cap: usize,
+        replicas: usize,
+        clock: Arc<dyn Clock>,
+    ) -> TraceRecorder {
+        let period = if sample_rate <= 0.0 {
+            0
+        } else {
+            (1.0 / sample_rate.min(1.0)).round().max(1.0) as u64
+        };
+        TraceRecorder {
+            period,
+            counter: AtomicU64::new(0),
+            ring_cap: ring_cap.max(1),
+            clock,
+            rings: (0..replicas.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+        }
+    }
+
+    /// A disabled recorder (every `try_sample` is the one cheap branch).
+    pub fn off() -> TraceRecorder {
+        TraceRecorder::new(0.0, 1, 1, Arc::new(MonotonicClock::new()))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.period != 0
+    }
+
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
+    }
+
+    /// Decide whether to trace one submission. **The untraced path is
+    /// exactly one branch** when sampling is off — no counter bump, no
+    /// clock read, no allocation.
+    pub fn try_sample(&self, id: u64, profile: Option<&str>) -> Option<Box<ReqTrace>> {
+        if self.period == 0 {
+            return None;
+        }
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        if n % self.period != 0 {
+            return None;
+        }
+        Some(ReqTrace::new(id, profile.map(|s| s.to_string()), Arc::clone(&self.clock)))
+    }
+
+    /// Close every open span (root last) and move the trace into
+    /// `replica`'s ring. Returns the root duration in seconds — the
+    /// replica loop observes exactly this value into
+    /// `fastav_generate_seconds`, which is what makes the acceptance
+    /// identity (root duration == histogram sample) exact.
+    pub fn commit(
+        &self,
+        mut trace: Box<ReqTrace>,
+        replica: usize,
+        outcome: Outcome,
+        stats: TraceStats,
+    ) -> f64 {
+        let now = trace.clock.now_ns();
+        while trace.stack.len() > 1 {
+            let i = trace.stack.pop().expect("stack non-empty") as usize;
+            trace.spans[i].end_ns = now;
+        }
+        trace.spans[0].end_ns = now;
+        let done = CompletedTrace {
+            id: trace.id,
+            profile: trace.profile.take(),
+            replica,
+            outcome,
+            ttft_ns: trace.ttft_ns,
+            stats,
+            spans: std::mem::take(&mut trace.spans),
+        };
+        let secs = done.duration_seconds();
+        let ring = &self.rings[replica.min(self.rings.len() - 1)];
+        let mut r = ring.lock().unwrap();
+        if r.len() >= self.ring_cap {
+            r.pop_front();
+        }
+        r.push_back(Arc::new(done));
+        secs
+    }
+
+    /// Fetch a completed trace by request id (newest first within a
+    /// ring, so a reused id returns the latest trace).
+    pub fn get(&self, id: u64) -> Option<Arc<CompletedTrace>> {
+        for ring in &self.rings {
+            let r = ring.lock().unwrap();
+            if let Some(t) = r.iter().rev().find(|t| t.id == id) {
+                return Some(Arc::clone(t));
+            }
+        }
+        None
+    }
+
+    /// Most recently finished traces across every replica ring, newest
+    /// first (by root end timestamp, then id).
+    pub fn recent(&self, limit: usize) -> Vec<Arc<CompletedTrace>> {
+        let mut all: Vec<Arc<CompletedTrace>> = Vec::new();
+        for ring in &self.rings {
+            all.extend(ring.lock().unwrap().iter().cloned());
+        }
+        all.sort_by(|a, b| {
+            b.spans[0]
+                .end_ns
+                .cmp(&a.spans[0].end_ns)
+                .then(b.id.cmp(&a.id))
+        });
+        all.truncate(limit);
+        all
+    }
+
+    /// Completed traces currently held across all rings.
+    pub fn total(&self) -> usize {
+        self.rings.iter().map(|r| r.lock().unwrap().len()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Thread-local segment collector: how engine/mesh internals report
+// sub-quantum timing without trait-signature changes.
+
+/// One engine-internal segment (upload/dispatch/download/combine/
+/// prefix_lookup), measured on the recorder clock.
+#[derive(Debug, Clone)]
+pub struct Seg {
+    pub name: &'static str,
+    /// Mesh shard for per-shard segments; `None` = replica-thread work.
+    pub shard: Option<u32>,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl Seg {
+    /// Trace track this segment belongs on.
+    pub fn track(&self) -> u32 {
+        self.shard.map(|s| s + 1).unwrap_or(TRACK_REQUEST)
+    }
+}
+
+struct SegCtx {
+    clock: Arc<dyn Clock>,
+    segs: Vec<Seg>,
+}
+
+thread_local! {
+    static SEG_CTX: RefCell<Option<SegCtx>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with a segment collector installed on this thread; returns
+/// `f`'s result and the segments the engine reported. Untraced quanta
+/// never install a collector, so [`seg_begin`] stays a cheap
+/// thread-local read + `None` on the hot path.
+pub fn collect_segs<R>(clock: &Arc<dyn Clock>, f: impl FnOnce() -> R) -> (R, Vec<Seg>) {
+    SEG_CTX.with(|c| {
+        *c.borrow_mut() = Some(SegCtx { clock: Arc::clone(clock), segs: Vec::new() })
+    });
+    let r = f();
+    let segs = SEG_CTX
+        .with(|c| c.borrow_mut().take())
+        .map(|ctx| ctx.segs)
+        .unwrap_or_default();
+    (r, segs)
+}
+
+/// Start timestamp for a segment, if a collector is active on this
+/// thread (`None` otherwise — the caller passes it straight to
+/// [`seg_end`], which then no-ops).
+pub fn seg_begin() -> Option<u64> {
+    SEG_CTX.with(|c| c.borrow().as_ref().map(|ctx| ctx.clock.now_ns()))
+}
+
+/// Close a segment opened by [`seg_begin`].
+pub fn seg_end(name: &'static str, shard: Option<u32>, started: Option<u64>) {
+    let Some(start_ns) = started else { return };
+    SEG_CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            let end_ns = ctx.clock.now_ns();
+            ctx.segs.push(Seg { name, shard, start_ns, end_ns });
+        }
+    });
+}
+
+/// The active collector's clock, for work timed off-thread (mesh shard
+/// workers measure themselves with a clone and report via [`push_seg`]
+/// after the join).
+pub fn seg_clock() -> Option<Arc<dyn Clock>> {
+    SEG_CTX.with(|c| c.borrow().as_ref().map(|ctx| Arc::clone(&ctx.clock)))
+}
+
+/// Report a pre-measured segment (no-op without a collector).
+pub fn push_seg(name: &'static str, shard: Option<u32>, start_ns: u64, end_ns: u64) {
+    SEG_CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            ctx.segs.push(Seg { name, shard, start_ns, end_ns });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mock_recorder(rate: f64) -> (TraceRecorder, Arc<MockClock>) {
+        let clock = Arc::new(MockClock::new());
+        let r = TraceRecorder::new(rate, 8, 2, clock.clone() as Arc<dyn Clock>);
+        (r, clock)
+    }
+
+    #[test]
+    fn sampling_period_is_exact() {
+        let (r, _) = mock_recorder(0.5);
+        let sampled = (0..10).filter(|&i| r.try_sample(i, None).is_some()).count();
+        assert_eq!(sampled, 5, "rate 0.5 must trace every 2nd submission");
+        let (r, _) = mock_recorder(1.0);
+        assert!((0..5).all(|i| r.try_sample(i, None).is_some()));
+    }
+
+    #[test]
+    fn disabled_recorder_never_samples() {
+        let (r, _) = mock_recorder(0.0);
+        assert!(!r.enabled());
+        assert!((0..100).all(|i| r.try_sample(i, None).is_none()));
+        assert_eq!(r.total(), 0);
+    }
+
+    #[test]
+    fn spans_are_well_nested_and_root_spans_everything() {
+        let (r, clock) = mock_recorder(1.0);
+        let mut t = r.try_sample(7, Some("balanced")).unwrap();
+        t.begin("queue");
+        clock.advance_ns(1_000);
+        t.end();
+        t.begin("admit");
+        clock.advance_ns(500);
+        let p0 = t.now_ns();
+        clock.advance_ns(200);
+        t.record("prefix_probe", TRACK_REQUEST, p0, t.now_ns());
+        t.end();
+        clock.advance_ns(2_000);
+        let q = t.record("decode_quantum", TRACK_REQUEST, 1_700, 3_700);
+        t.attr_u64_on(q, "batch", 3);
+        t.record_under(q, "dispatch", 1, 1_800, 3_600);
+        let secs = r.commit(t, 0, Outcome::Completed, TraceStats::default());
+        assert!((secs - 3.7e-6).abs() < 1e-12);
+        let done = r.get(7).expect("committed trace is fetchable");
+        assert_eq!(done.spans[0].name, "request");
+        assert_eq!(done.profile.as_deref(), Some("balanced"));
+        for (i, s) in done.spans.iter().enumerate() {
+            assert!(s.start_ns <= s.end_ns, "span {} inverted", s.name);
+            if let Some(p) = s.parent {
+                let p = &done.spans[p as usize];
+                assert!((p as *const Span as usize) != (s as *const Span as usize));
+                assert!(
+                    p.start_ns <= s.start_ns && s.end_ns <= p.end_ns,
+                    "span {} (#{}) escapes its parent {}",
+                    s.name,
+                    i,
+                    p.name
+                );
+            } else {
+                assert_eq!(i, 0, "only the root may be parentless");
+            }
+        }
+    }
+
+    #[test]
+    fn commit_closes_dangling_open_spans() {
+        let (r, clock) = mock_recorder(1.0);
+        let mut t = r.try_sample(1, None).unwrap();
+        t.begin("queue"); // never explicitly ended
+        clock.advance_ns(5_000);
+        r.commit(t, 1, Outcome::Canceled, TraceStats::default());
+        let done = r.get(1).unwrap();
+        assert_eq!(done.outcome, Outcome::Canceled);
+        let q = done.spans.iter().find(|s| s.name == "queue").unwrap();
+        assert_eq!(q.end_ns, 5_000, "commit must close open spans at commit time");
+        assert_eq!(done.duration_ns(), 5_000);
+    }
+
+    #[test]
+    fn rings_are_bounded_and_recent_is_newest_first() {
+        let clock = Arc::new(MockClock::new());
+        let r = TraceRecorder::new(1.0, 2, 1, clock.clone() as Arc<dyn Clock>);
+        for id in 0..5 {
+            let t = r.try_sample(id, None).unwrap();
+            clock.advance_ns(10);
+            r.commit(t, 0, Outcome::Completed, TraceStats::default());
+        }
+        assert_eq!(r.total(), 2, "ring cap must bound memory");
+        let recent = r.recent(10);
+        assert_eq!(recent.len(), 2);
+        assert_eq!(recent[0].id, 4, "newest first");
+        assert_eq!(recent[1].id, 3);
+        assert!(r.get(0).is_none(), "evicted traces are gone");
+        assert!(r.get(4).is_some());
+    }
+
+    #[test]
+    fn ttft_is_first_token_only() {
+        let (r, clock) = mock_recorder(1.0);
+        let mut t = r.try_sample(3, None).unwrap();
+        clock.advance_ns(1_500);
+        t.mark_first_token();
+        clock.advance_ns(9_000);
+        t.mark_first_token(); // later tokens must not move it
+        r.commit(t, 0, Outcome::Completed, TraceStats::default());
+        assert_eq!(r.get(3).unwrap().ttft_ns, Some(1_500));
+    }
+
+    #[test]
+    fn segment_collector_is_scoped_to_the_closure() {
+        assert!(seg_begin().is_none(), "no collector outside collect_segs");
+        let clock: Arc<dyn Clock> = Arc::new(MockClock::new());
+        let (out, segs) = collect_segs(&clock, || {
+            let s = seg_begin();
+            assert!(s.is_some());
+            seg_end("upload", None, s);
+            push_seg("dispatch", Some(1), 5, 9);
+            42
+        });
+        assert_eq!(out, 42);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].name, "upload");
+        assert_eq!(segs[1].track(), 2);
+        assert!(seg_begin().is_none(), "collector uninstalled after the closure");
+        // And the no-collector path is inert.
+        seg_end("upload", None, None);
+        push_seg("x", None, 0, 1);
+    }
+}

@@ -170,6 +170,7 @@ fn batch_request(seed_tok: u32, max_gen: usize) -> GenRequest {
         sampling: Default::default(),
         priority: Priority::Normal,
         deadline: None,
+        profile: None,
     }
 }
 

@@ -25,6 +25,7 @@ fn request(idx: u64, priority: Priority) -> GenRequest {
         sampling: Default::default(),
         priority,
         deadline: None,
+        profile: None,
     }
 }
 

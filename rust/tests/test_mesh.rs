@@ -201,6 +201,7 @@ fn request(seed_tok: u32, max_gen: usize) -> GenRequest {
         sampling: Default::default(),
         priority: Priority::Normal,
         deadline: None,
+        profile: None,
     }
 }
 

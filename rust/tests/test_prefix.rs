@@ -407,6 +407,7 @@ fn prefix_request(sample: u32, question: u32, max_gen: usize) -> GenRequest {
         sampling: Default::default(),
         priority: Priority::Normal,
         deadline: None,
+        profile: None,
     }
 }
 
@@ -422,6 +423,7 @@ fn filler_request(max_gen: usize) -> GenRequest {
         sampling: Default::default(),
         priority: Priority::Normal,
         deadline: None,
+        profile: None,
     }
 }
 

@@ -99,6 +99,7 @@ fn mock_request(max_gen: usize, priority: Priority) -> GenRequest {
         sampling: Default::default(),
         priority,
         deadline: None,
+        profile: None,
     }
 }
 

@@ -1,0 +1,476 @@
+//! Request-lifecycle tracing properties against the mock pool (no AOT
+//! artifacts): trace conservation — every accepted submission, whatever
+//! its outcome, yields exactly one well-nested trace — the exact
+//! root-duration == `fastav_generate_seconds` identity under a
+//! [`MockClock`], Chrome-export shape through a real pool trace, and
+//! the sampling-off path recording nothing while streams still work.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastav::coordinator::{Event, GenRequest, Priority};
+use fastav::metrics::{labeled, Registry};
+use fastav::model::{GenerateResult, StepEvent};
+use fastav::policy::PruningSpec;
+use fastav::serving::{PoolConfig, ReplicaEngine, ReplicaPool};
+use fastav::tokens::Segment;
+use fastav::trace::{Clock, CompletedTrace, MockClock, Outcome};
+use fastav::util::json::Json;
+
+// ---------------------------------------------------------------- mock
+
+struct MockGen {
+    prefill_left: usize,
+    produced: usize,
+    total: usize,
+    kv_bytes: usize,
+}
+
+/// Engine stand-in. When `tick` is set, every quantum of engine work
+/// advances the shared [`MockClock`] by that many nanoseconds *inside a
+/// traced segment*, so span durations are exact and the engine-internal
+/// segment path (upload + per-shard dispatch) is exercised end-to-end.
+struct MockEngine {
+    step_cost: Duration,
+    tick: Option<(Arc<MockClock>, u64)>,
+}
+
+impl MockEngine {
+    /// One quantum of "engine work" on the mock clock, reported through
+    /// the thread-local segment collector exactly like the real engine.
+    fn burn(&self) {
+        let Some((clock, d)) = &self.tick else { return };
+        let t0 = fastav::trace::seg_begin();
+        let s0 = clock.now_ns();
+        clock.advance_ns(*d);
+        fastav::trace::seg_end("upload", None, t0);
+        fastav::trace::push_seg("dispatch", Some(0), s0, clock.now_ns());
+    }
+}
+
+impl ReplicaEngine for MockEngine {
+    type Gen = MockGen;
+
+    fn begin(&mut self, req: &GenRequest) -> anyhow::Result<MockGen> {
+        self.burn();
+        Ok(MockGen {
+            prefill_left: 2,
+            produced: 0,
+            total: req.max_gen.max(1),
+            kv_bytes: req.prompt.len() * 1000,
+        })
+    }
+
+    fn step(&mut self, gen: &mut MockGen) -> anyhow::Result<StepEvent> {
+        if !self.step_cost.is_zero() {
+            std::thread::sleep(self.step_cost);
+        }
+        self.burn();
+        if gen.prefill_left > 0 {
+            gen.prefill_left -= 1;
+            if gen.prefill_left > 0 {
+                return Ok(StepEvent::Prefilled { layer: 2 - gen.prefill_left });
+            }
+        }
+        if gen.produced >= gen.total {
+            return Ok(StepEvent::Done);
+        }
+        gen.produced += 1;
+        Ok(StepEvent::Token(7))
+    }
+
+    fn is_decoding(&self, gen: &MockGen) -> bool {
+        // Without this override every quantum is classified (and traced)
+        // as prefill; the replica tags quanta from the same eligibility
+        // test it batches with.
+        gen.prefill_left == 0 && gen.produced > 0 && gen.produced < gen.total
+    }
+
+    fn is_done(&self, gen: &MockGen) -> bool {
+        gen.prefill_left == 0 && gen.produced >= gen.total
+    }
+
+    fn finish(&mut self, gen: MockGen) -> GenerateResult {
+        GenerateResult {
+            tokens: vec![7; gen.produced],
+            prompt_len: 4,
+            flops: Default::default(),
+            relative_flops: 0.0,
+            peak_kv_bytes: gen.kv_bytes,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            decode_steps: gen.produced.saturating_sub(1),
+            live_counts: Vec::new(),
+            prefix_hit: false,
+            prefix_tokens_reused: 0,
+        }
+    }
+
+    fn kv_bytes(&self, gen: &MockGen) -> usize {
+        gen.kv_bytes
+    }
+
+    fn estimate_bytes(&self, req: &GenRequest) -> usize {
+        req.prompt.len() * 1000
+    }
+}
+
+fn mock_request(max_gen: usize, priority: Priority) -> GenRequest {
+    GenRequest {
+        prompt: vec![1, 2, 3, 4],
+        segments: vec![Segment::Ctrl, Segment::Vis, Segment::Aud, Segment::Text],
+        frame_of: vec![-1, 0, -1, -1],
+        spec: PruningSpec::off(),
+        max_gen,
+        sampling: Default::default(),
+        priority,
+        deadline: None,
+        profile: None,
+    }
+}
+
+/// A traced pool on a [`MockClock`]: every submission sampled, engine
+/// quanta tick the clock by `tick_ns`.
+fn traced_pool(
+    cfg: PoolConfig,
+    metrics: Arc<Registry>,
+    clock: Arc<MockClock>,
+    step_cost: Duration,
+    tick_ns: u64,
+) -> ReplicaPool {
+    let engine_clock = Arc::clone(&clock);
+    ReplicaPool::start_with_factory_clocked(
+        cfg,
+        metrics,
+        move |_replica| {
+            Ok(MockEngine {
+                step_cost,
+                tick: Some((Arc::clone(&engine_clock), tick_ns)),
+            })
+        },
+        clock as Arc<dyn Clock>,
+    )
+    .expect("traced mock pool starts")
+}
+
+fn settled_stats(pool: &ReplicaPool) -> fastav::serving::PoolStats {
+    let t0 = Instant::now();
+    loop {
+        let s = pool.stats();
+        if (s.conserved() && s.in_flight == 0 && s.in_queue == 0)
+            || t0.elapsed() > Duration::from_secs(10)
+        {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn drain(rx: std::sync::mpsc::Receiver<Event>) -> Result<usize, String> {
+    let mut tokens = 0;
+    loop {
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(Event::Token(_)) => tokens += 1,
+            Ok(Event::Done(_)) => return Ok(tokens),
+            Ok(Event::Error(e)) => return Err(e),
+            Err(e) => panic!("stream stalled: {}", e),
+        }
+    }
+}
+
+/// Structural well-nestedness: `spans[0]` is the root, every other span
+/// sits inside its parent's interval, no interval is inverted.
+fn assert_well_nested(t: &CompletedTrace) {
+    assert_eq!(t.spans[0].name, "request");
+    for (i, s) in t.spans.iter().enumerate() {
+        assert!(s.start_ns <= s.end_ns, "span {} inverted", s.name);
+        match s.parent {
+            None => assert_eq!(i, 0, "only the root may be parentless"),
+            Some(p) => {
+                let p = &t.spans[p as usize];
+                assert!(
+                    p.start_ns <= s.start_ns && s.end_ns <= p.end_ns,
+                    "span {} [{}, {}] escapes parent {} [{}, {}] (trace {})",
+                    s.name,
+                    s.start_ns,
+                    s.end_ns,
+                    p.name,
+                    p.start_ns,
+                    p.end_ns,
+                    t.id
+                );
+            }
+        }
+    }
+}
+
+/// Per-track laminarity: any two spans sharing a track are either
+/// disjoint or one contains the other — a track never shows two
+/// half-overlapping intervals (what makes the Chrome/Perfetto lanes
+/// render without artifacts).
+fn assert_laminar_per_track(t: &CompletedTrace) {
+    for (i, a) in t.spans.iter().enumerate() {
+        for b in t.spans.iter().skip(i + 1) {
+            if a.track != b.track {
+                continue;
+            }
+            let disjoint = a.end_ns <= b.start_ns || b.end_ns <= a.start_ns;
+            let nested = (a.start_ns <= b.start_ns && b.end_ns <= a.end_ns)
+                || (b.start_ns <= a.start_ns && a.end_ns <= b.end_ns);
+            assert!(
+                disjoint || nested,
+                "track {} spans {} [{}, {}] and {} [{}, {}] half-overlap (trace {})",
+                a.track,
+                a.name,
+                a.start_ns,
+                a.end_ns,
+                b.name,
+                b.start_ns,
+                b.end_ns,
+                t.id
+            );
+        }
+    }
+}
+
+// --------------------------------------------------------------- tests
+
+#[test]
+fn sampling_off_records_nothing_and_streams_still_work() {
+    // Default PoolConfig: trace_sample = 0.0.
+    let pool = ReplicaPool::start_with_factory(
+        PoolConfig { replicas: 1, queue_cap: 8, max_inflight: 2, ..Default::default() },
+        Arc::new(Registry::default()),
+        |_r| Ok(MockEngine { step_cost: Duration::from_micros(50), tick: None }),
+    )
+    .expect("pool starts");
+    assert!(!pool.tracer().enabled());
+    let rxs: Vec<_> = (0..3)
+        .map(|_| pool.submit(mock_request(3, Priority::Normal)).unwrap())
+        .collect();
+    for (_, rx) in rxs {
+        assert_eq!(drain(rx).expect("untraced request completes"), 3);
+    }
+    let stats = settled_stats(&pool);
+    assert!(stats.conserved(), "{:?}", stats);
+    assert_eq!(pool.tracer().total(), 0, "sampling off must record no traces");
+}
+
+#[test]
+fn every_outcome_yields_exactly_one_well_nested_trace() {
+    let clock = Arc::new(MockClock::new());
+    let pool = traced_pool(
+        PoolConfig {
+            replicas: 1,
+            queue_cap: 8,
+            max_inflight: 1,
+            kv_budget_bytes: 5000,
+            trace_sample: 1.0,
+            trace_ring: 64,
+            ..Default::default()
+        },
+        Arc::new(Registry::default()),
+        Arc::clone(&clock),
+        Duration::from_micros(300),
+        1_000,
+    );
+    let mut expected: Vec<(u64, Outcome)> = Vec::new();
+
+    // Completed: a short request drained to Done.
+    let (id, rx) = pool.submit(mock_request(2, Priority::Normal)).unwrap();
+    assert_eq!(drain(rx).expect("completes"), 2);
+    expected.push((id, Outcome::Completed));
+
+    // Canceled: a long generation canceled mid-flight (or at pop — both
+    // paths commit a Canceled trace).
+    let (id, rx) = pool.submit(mock_request(64, Priority::Normal)).unwrap();
+    pool.cancel(id);
+    let err = drain(rx).expect_err("canceled request errors");
+    assert!(err.contains("cancel"), "unexpected error: {}", err);
+    expected.push((id, Outcome::Canceled));
+
+    // Expired: the only slot is busy, so a 1 ms deadline can only lapse
+    // in the queue.
+    let (busy_id, busy) = pool.submit(mock_request(24, Priority::Normal)).unwrap();
+    let mut doomed = mock_request(4, Priority::Normal);
+    doomed.deadline = Some(Duration::from_millis(1));
+    let (id, rx) = pool.submit(doomed).unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+    let err = drain(rx).expect_err("deadline expires the queued request");
+    assert!(err.contains("deadline"), "unexpected error: {}", err);
+    expected.push((id, Outcome::Expired));
+    drain(busy).expect("busy request completes");
+    expected.push((busy_id, Outcome::Completed));
+
+    // Failed: an estimate over the whole budget is rejected at admission.
+    let mut big = mock_request(2, Priority::Normal);
+    big.prompt = vec![1; 10]; // 10_000 estimated bytes > 5000 budget
+    big.segments = vec![Segment::Text; 10];
+    big.frame_of = vec![-1; 10];
+    let (id, rx) = pool.submit(big).unwrap();
+    let err = drain(rx).expect_err("oversize request fails");
+    assert!(err.contains("budget"), "unexpected error: {}", err);
+    expected.push((id, Outcome::Failed));
+
+    let stats = settled_stats(&pool);
+    assert!(stats.conserved(), "{:?}", stats);
+
+    // Conservation: one trace per accepted submission, no extras.
+    assert_eq!(pool.tracer().total(), expected.len());
+    for (id, outcome) in &expected {
+        let t = pool
+            .tracer()
+            .get(*id)
+            .unwrap_or_else(|| panic!("request {} left no trace", id));
+        assert_eq!(t.outcome, *outcome, "request {}", id);
+        assert_eq!(t.id, *id);
+        assert_well_nested(&t);
+        assert_laminar_per_track(&t);
+        // Every trace covers admission onward: the root spans all.
+        assert!(t.spans.iter().all(|s| s.name != "request" || s.parent.is_none()));
+    }
+
+    // Completed traces carry the full lifecycle vocabulary, including
+    // the engine-internal segments hung under their quanta.
+    let done = pool.tracer().get(expected[0].0).unwrap();
+    for phase in ["queue", "admit", "prefix_probe", "begin", "prefill_chunk", "decode_quantum"]
+    {
+        assert!(
+            done.spans.iter().any(|s| s.name == phase),
+            "completed trace missing {:?}: {:?}",
+            phase,
+            done.spans.iter().map(|s| s.name).collect::<Vec<_>>()
+        );
+    }
+    assert_eq!(done.stats.tokens, 2);
+    assert!(done.ttft_ns.is_some(), "completed trace must stamp TTFT");
+    let quantum = done
+        .spans
+        .iter()
+        .position(|s| s.name == "decode_quantum")
+        .expect("decode quantum span");
+    assert!(
+        done.spans
+            .iter()
+            .any(|s| s.name == "upload" && s.parent == Some(quantum as u32)),
+        "engine segment must hang under its quantum"
+    );
+    assert!(
+        done.spans.iter().any(|s| s.name == "dispatch" && s.track == 1),
+        "per-shard dispatch segment must land on the shard track"
+    );
+}
+
+#[test]
+fn root_duration_equals_generate_histogram_observation() {
+    let clock = Arc::new(MockClock::new());
+    let metrics = Arc::new(Registry::default());
+    let pool = traced_pool(
+        PoolConfig {
+            replicas: 1,
+            queue_cap: 8,
+            max_inflight: 2,
+            trace_sample: 1.0,
+            trace_ring: 64,
+            ..Default::default()
+        },
+        Arc::clone(&metrics),
+        Arc::clone(&clock),
+        Duration::from_micros(50),
+        10_000, // 10 µs per quantum: histogram µs truncation is exact
+    );
+    let mut profiled = mock_request(3, Priority::Normal);
+    profiled.profile = Some("balanced".to_string());
+    let rxs = vec![
+        pool.submit(mock_request(2, Priority::Normal)).unwrap(),
+        pool.submit(profiled).unwrap(),
+        pool.submit(mock_request(5, Priority::Normal)).unwrap(),
+    ];
+    let profiled_id = rxs[1].0;
+    for (_, rx) in rxs {
+        drain(rx).expect("completes");
+    }
+    settled_stats(&pool);
+
+    let hist = metrics.histogram("fastav_generate_seconds");
+    assert_eq!(hist.count(), 3);
+    let traces = pool.tracer().recent(10);
+    assert_eq!(traces.len(), 3);
+    assert!(traces.iter().all(|t| t.outcome == Outcome::Completed));
+    // The acceptance identity: each completed trace's root duration IS
+    // the histogram observation (the replica loop observes commit's
+    // return value), so the sums match to µs truncation exactly.
+    let roots: f64 = traces.iter().map(|t| t.duration_seconds()).sum();
+    assert!(
+        (hist.sum_seconds() - roots).abs() < 5e-6,
+        "histogram sum {} != Σ root durations {}",
+        hist.sum_seconds(),
+        roots
+    );
+    assert!(roots > 0.0, "mock clock ticks must produce nonzero durations");
+
+    // Per-profile series: exactly the profiled request, same identity.
+    let labeled_hist =
+        metrics.histogram(&labeled("fastav_generate_seconds", "profile", "balanced"));
+    assert_eq!(labeled_hist.count(), 1);
+    let pt = pool.tracer().get(profiled_id).unwrap();
+    assert_eq!(pt.profile.as_deref(), Some("balanced"));
+    assert!((labeled_hist.sum_seconds() - pt.duration_seconds()).abs() < 2e-6);
+
+    // TTFT fires once per request.
+    assert_eq!(metrics.histogram("fastav_ttft_seconds").count(), 3);
+}
+
+#[test]
+fn chrome_export_of_a_pool_trace_is_loadable() {
+    let clock = Arc::new(MockClock::new());
+    let pool = traced_pool(
+        PoolConfig {
+            replicas: 1,
+            queue_cap: 4,
+            max_inflight: 1,
+            trace_sample: 1.0,
+            trace_ring: 8,
+            ..Default::default()
+        },
+        Arc::new(Registry::default()),
+        Arc::clone(&clock),
+        Duration::from_micros(50),
+        1_000,
+    );
+    let (id, rx) = pool.submit(mock_request(2, Priority::Normal)).unwrap();
+    drain(rx).expect("completes");
+    let t = pool.tracer().get(id).expect("trace committed before Done");
+    let v = Json::parse(&fastav::trace::export::chrome_json(&t).to_string())
+        .expect("chrome export is valid JSON");
+    let events = v.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty());
+    let mut saw_request = false;
+    let mut saw_meta = false;
+    for e in events {
+        match e.get("ph").as_str() {
+            Some("M") => {
+                saw_meta = true;
+                assert_eq!(e.get("name").as_str(), Some("thread_name"));
+            }
+            Some("X") => {
+                assert!(e.get("ts").as_f64().is_some());
+                assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+                assert!(e.get("pid").as_usize().is_some());
+                assert!(e.get("tid").as_usize().is_some());
+                assert_eq!(e.get("cat").as_str(), Some("fastav"));
+                if e.get("name").as_str() == Some("request") {
+                    saw_request = true;
+                }
+            }
+            other => panic!("unexpected ph {:?}", other),
+        }
+    }
+    assert!(saw_request, "root request span must export");
+    assert!(saw_meta, "track metadata must export");
+    // The engine's shard-0 dispatch segment lands on tid 1 ("shard 0").
+    assert!(events
+        .iter()
+        .any(|e| e.get("name").as_str() == Some("dispatch")
+            && e.get("tid").as_usize() == Some(1)));
+}
