@@ -30,6 +30,14 @@
 //! per-config prefix-cache rows from `GET /v1/pool`, and records
 //! everything in `BENCH_policy.json`.
 //!
+//! A sixth phase is a **chaos soak**: the same engines wrapped in the
+//! seeded [`ChaosEngine`] fault injector (transient step errors, engine
+//! panics, begin-latency spikes from a fixed `FaultPlan`), driven with
+//! direct pool submissions. Every request must still reach exactly one
+//! terminal event: the phase reports completed/retried/failed counts,
+//! replica restarts/panics, and the final conservation ledger, and
+//! records them in `BENCH_chaos.json`.
+//!
 //! ```sh
 //! cargo run --release --example serve_load [model] [n_requests]
 //! ```
@@ -39,14 +47,18 @@ mod common;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use fastav::avsynth::QuestionKind;
 use fastav::coordinator::Coordinator;
 use fastav::http::{api::make_handler, request, Server};
-use fastav::model::PruningPlan;
+use fastav::metrics::Registry;
+use fastav::model::{ModelEngine, PruningPlan};
 use fastav::policy::{PolicyRegistry, PruningSpec};
-use fastav::serving::PoolConfig;
+use fastav::serving::{
+    ChaosEngine, FaultKind, FaultPlan, FaultRule, FaultSite, FaultState, FaultWhen,
+    PoolConfig, ReplicaPool,
+};
 use fastav::tokens::Layout;
 use fastav::util::bench::{stats_from, BenchStats};
 use fastav::util::json::Json;
@@ -650,6 +662,139 @@ fn drive_profiles(
     (slices, per_config)
 }
 
+/// Phase 6 result: the workload's fate under the seeded fault plan.
+struct ChaosRun {
+    n: usize,
+    completed: u64,
+    failed: u64,
+    retried: u64,
+    restarts: u64,
+    panics: u64,
+    injected_errs: u64,
+    injected_panics: u64,
+    wall: f64,
+    conserved: bool,
+}
+
+impl ChaosRun {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_requests", Json::num(self.n as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("retried", Json::num(self.retried as f64)),
+            ("replica_restarts", Json::num(self.restarts as f64)),
+            ("replica_panics", Json::num(self.panics as f64)),
+            ("injected_errs", Json::num(self.injected_errs as f64)),
+            ("injected_panics", Json::num(self.injected_panics as f64)),
+            ("wall_s", Json::num(self.wall)),
+            ("ledger_conserved", Json::Bool(self.conserved)),
+        ])
+    }
+}
+
+/// Drive `n` direct submissions through a pool whose engines are
+/// wrapped in the seeded chaos injector. Every stream is drained to its
+/// terminal event — a stall here is a stranded request, the exact bug
+/// the supervision layer exists to prevent.
+fn drive_chaos(model: &str, n: usize, plan: PruningPlan, layout: &Layout) -> ChaosRun {
+    let state = FaultState::new(FaultPlan {
+        seed: 42,
+        rules: vec![
+            // A transient engine error every ~300 steps (bounded).
+            FaultRule {
+                site: FaultSite::Step,
+                when: FaultWhen::Every(300),
+                kind: FaultKind::Err,
+                max_injections: 4,
+            },
+            // Two engine panics over the run: each poisons its replica
+            // and forces a supervised respawn.
+            FaultRule {
+                site: FaultSite::Step,
+                when: FaultWhen::Every(701),
+                kind: FaultKind::Panic,
+                max_injections: 2,
+            },
+            // Occasional begin-latency spikes (tail-latency injection).
+            FaultRule {
+                site: FaultSite::Begin,
+                when: FaultWhen::WithProbability(0.05),
+                kind: FaultKind::Latency(Duration::from_millis(5)),
+                max_injections: 0,
+            },
+        ],
+    });
+    let cfg = PoolConfig {
+        replicas: 2,
+        queue_cap: 256,
+        max_inflight: 4,
+        restart_backoff: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let metrics = Arc::new(Registry::default());
+    let root = common::artifact_root();
+    let model_name = model.to_string();
+    let pool = {
+        let state = Arc::clone(&state);
+        ReplicaPool::start_with_factory(cfg, Arc::clone(&metrics), move |_replica| {
+            // Engines are built on their replica threads (PJRT handles
+            // never cross threads) — including supervised respawns.
+            Ok(ChaosEngine::new(
+                ModelEngine::load(&root, &model_name)?,
+                Arc::clone(&state),
+            ))
+        })
+        .expect("start chaos pool")
+    };
+
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..n)
+        .map(|i| {
+            let s = fastav::avsynth::gen_sample(
+                layout,
+                fastav::avsynth::Dataset::Avqa,
+                i as u64,
+                1234,
+            );
+            pool.submit(fastav::coordinator::GenRequest::with_spec(
+                s.prompt,
+                s.segments,
+                s.frame_of,
+                PruningSpec::from_plan(plan.clone()).expect("valid plan"),
+                if i % LONG_EVERY == LONG_EVERY - 1 { LONG_MAX_GEN } else { SHORT_MAX_GEN },
+            ))
+        })
+        .filter_map(|r| r.ok().map(|(_, rx)| rx))
+        .collect();
+    for rx in receivers {
+        // Done and Error are both terminal; the receiver iterator ends
+        // when the pool drops its sender after the terminal event.
+        for ev in rx {
+            if matches!(
+                ev,
+                fastav::coordinator::Event::Done(_) | fastav::coordinator::Event::Error(_)
+            ) {
+                break;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = pool.stats();
+    ChaosRun {
+        n,
+        completed: stats.completed,
+        failed: stats.failed,
+        retried: stats.retried,
+        restarts: metrics.counter("fastav_replica_restarts_total").get(),
+        panics: metrics.counter("fastav_replica_panics_total").get(),
+        injected_errs: state.errs(),
+        injected_panics: state.panics(),
+        wall,
+        conserved: stats.conserved(),
+    }
+}
+
 fn main() {
     let model = common::model_arg();
     let n_requests = common::n_arg(48).max(8);
@@ -792,7 +937,7 @@ fn main() {
          quality/aggressive (pool of 2)",
         n_requests
     );
-    let (slices, per_config) = drive_profiles(&model, n_requests, registry, layout);
+    let (slices, per_config) = drive_profiles(&model, n_requests, registry, layout.clone());
     for s in &slices {
         println!(
             "[policy] {:<10} {} ok / {} rejected — mean rel FLOPs {:.1}",
@@ -824,4 +969,46 @@ fn main() {
     std::fs::write("BENCH_policy.json", out.to_string() + "\n")
         .expect("write BENCH_policy.json");
     println!("wrote BENCH_policy.json");
+
+    // --- Phase 6: chaos soak (fault-domain supervision). ---------------
+    println!(
+        "\ndriving chaos soak: {} requests under a seeded FaultPlan (pool of 2)",
+        n_requests
+    );
+    let chaos = drive_chaos(&model, n_requests, plan, &layout);
+    println!(
+        "[chaos] {} completed / {} failed / {} retried in {:.2}s — \
+         {} restarts, {} caught panics ({} injected errs, {} injected panics), \
+         ledger conserved: {}",
+        chaos.completed,
+        chaos.failed,
+        chaos.retried,
+        chaos.wall,
+        chaos.restarts,
+        chaos.panics,
+        chaos.injected_errs,
+        chaos.injected_panics,
+        chaos.conserved
+    );
+    let out = Json::obj(vec![
+        ("benchmark", Json::str("serve_load_chaos")),
+        ("model", Json::str(&model)),
+        ("replicas", Json::num(2.0)),
+        ("chaos", chaos.to_json()),
+        ("measured", Json::Bool(true)),
+        (
+            "methodology",
+            Json::str(
+                "One pool of 2 replicas whose engines are wrapped in the seeded \
+                 ChaosEngine injector (FaultPlan seed 42: transient step errors, two \
+                 engine panics, 5% begin-latency spikes). Every submission is drained \
+                 to its terminal event; completed/failed/retried come from the pool \
+                 ledger, replica_restarts/panics from the supervision counters. The \
+                 soak passes when every request reaches exactly one terminal event \
+                 and ledger_conserved is true.",
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_chaos.json", out.to_string() + "\n").expect("write BENCH_chaos.json");
+    println!("wrote BENCH_chaos.json");
 }

@@ -143,6 +143,14 @@ impl Coordinator {
         Ok(Coordinator { pool, metrics })
     }
 
+    /// Wrap an already-running pool (mock-engine pools in tests, chaos
+    /// harness runs) in the coordinator facade, so the HTTP layer can be
+    /// exercised against any [`crate::serving::ReplicaEngine`].
+    pub fn from_pool(pool: ReplicaPool) -> Coordinator {
+        let metrics = Arc::clone(pool.metrics());
+        Coordinator { pool, metrics }
+    }
+
     /// Submit a request; returns the streaming event receiver, or a
     /// [`SubmitError`] carrying the request back on backpressure.
     pub fn submit(&self, req: GenRequest) -> Result<Receiver<Event>, SubmitError> {
@@ -237,6 +245,17 @@ impl Coordinator {
 
     pub fn replica_count(&self) -> usize {
         self.pool.replica_count()
+    }
+
+    /// Replicas currently healthy (serving, not restarting or dead).
+    pub fn healthy_count(&self) -> usize {
+        self.pool.healthy_count()
+    }
+
+    /// Whether every replica is dead (circuit breaker / rebuild
+    /// failure) — `GET /v1/health` reports 503 exactly then.
+    pub fn all_dead(&self) -> bool {
+        self.pool.all_dead()
     }
 
     /// Drain and stop every replica.

@@ -10,7 +10,8 @@
 //! | GET    | `/v1/policies`     | The profile registry: default profile name + every profile's canonical spec, `spec_hash`, and prefix-shareability. |
 //! | POST   | `/v1/cancel`       | Cooperative cancellation by request id. |
 //! | POST   | `/v1/cache/flush`  | Evict every lease-free AV-prefix cache entry. |
-//! | GET    | `/v1/pool`         | Per-replica status, conservation ledger, prefix-cache stats (aggregate **and** per-pruning-config rows), KV block gauges, decode-batch occupancy, latency summaries (TTFT + per-profile generate). |
+//! | GET    | `/v1/pool`         | Per-replica status (incl. health/restarts/panics), conservation ledger, supervision summary, prefix-cache stats (aggregate **and** per-pruning-config rows), KV block gauges, decode-batch occupancy, latency summaries (TTFT + per-profile generate). |
+//! | GET    | `/v1/health`       | Readiness: `200 {"status":"ok"}` when every replica is healthy, `200 {"status":"degraded"}` while some are restarting or dead but at least one can serve, `503 {"status":"unavailable"}` only when **all** replicas are dead (circuit breaker tripped everywhere). Per-replica health/restart/panic detail inline. |
 //! | GET    | `/v1/traces`       | Recent sampled request traces, newest first: per-request phase breakdown (queue/admit/prefill/decode seconds), TTFT, FLOP totals. Empty with `enabled: false` when tracing is off. |
 //! | GET    | `/v1/trace/{id}`   | One request's full span tree (`?format=chrome` → Chrome trace-event JSON loadable in Perfetto, replica/shard tracks as threads). 404 when the id was never sampled or has aged out of the ring. |
 //! | GET    | `/metrics`         | Prometheus text exposition (includes `fastav_requests_total{profile="..."}`). |
@@ -50,7 +51,7 @@ use crate::eval::exact_match;
 use crate::metrics::labeled;
 use crate::model::Sampling;
 use crate::policy::{PolicyRegistry, PruningSpec};
-use crate::serving::SubmitError;
+use crate::serving::{ReplicaHealth, SubmitError};
 use crate::tokens::{render_answer, Layout};
 use crate::util::json::Json;
 
@@ -107,6 +108,7 @@ fn route(
         ("GET", "/healthz") => Response::text(200, "ok"),
         ("GET", "/metrics") => Response::text(200, &coord.metrics.export()),
         ("GET", "/v1/pool") => pool_status(coord),
+        ("GET", "/v1/health") => health(coord),
         ("GET", "/v1/policies") => Response::json(200, registry.to_json().to_string()),
         ("POST", "/v1/generate") => {
             generate(req, coord, layout, registry, max_gen, base_seed, ApiVersion::V1)
@@ -155,6 +157,9 @@ fn pool_status(coord: &Coordinator) -> Response {
             ("completed", Json::num(r.completed as f64)),
             ("decode_batch_quanta", Json::num(r.decode_batch_quanta as f64)),
             ("decode_batch_tokens", Json::num(r.decode_batch_tokens as f64)),
+            ("health", Json::str(r.health.name())),
+            ("restarts", Json::num(r.restarts as f64)),
+            ("panics", Json::num(r.panics as f64)),
         ])
     });
     let s = coord.pool_stats();
@@ -185,10 +190,12 @@ fn pool_status(coord: &Coordinator) -> Response {
                 ("failed", Json::num(s.failed as f64)),
                 ("canceled", Json::num(s.canceled as f64)),
                 ("expired", Json::num(s.expired as f64)),
+                ("retried", Json::num(s.retried as f64)),
                 ("in_queue", Json::num(s.in_queue as f64)),
                 ("in_flight", Json::num(s.in_flight as f64)),
             ]),
         ),
+        ("supervision", supervision_summary(coord)),
         (
             "prefix_cache",
             Json::obj(vec![
@@ -226,6 +233,66 @@ fn pool_status(coord: &Coordinator) -> Response {
         ("latency", latency_summary(coord)),
     ]);
     Response::json(200, out.to_string())
+}
+
+/// Supervision block for `/v1/pool`: replica health census plus the
+/// pool-wide restart/panic totals the supervisor maintains.
+fn supervision_summary(coord: &Coordinator) -> Json {
+    let status = coord.pool_status();
+    let count = |h: ReplicaHealth| status.iter().filter(|r| r.health == h).count();
+    let restarts: u64 = status.iter().map(|r| r.restarts).sum();
+    let panics: u64 = status.iter().map(|r| r.panics).sum();
+    Json::obj(vec![
+        ("healthy", Json::num(count(ReplicaHealth::Healthy) as f64)),
+        ("restarting", Json::num(count(ReplicaHealth::Restarting) as f64)),
+        ("dead", Json::num(count(ReplicaHealth::Dead) as f64)),
+        ("restarts_total", Json::num(restarts as f64)),
+        ("panics_total", Json::num(panics as f64)),
+    ])
+}
+
+/// `GET /v1/health`: readiness for load balancers. `503` **only** when
+/// every replica is dead — a pool with any serving capacity left
+/// answers `200`, with `"degraded"` flagging partial outages so
+/// dashboards can alert before total loss.
+fn health(coord: &Coordinator) -> Response {
+    let status = coord.pool_status();
+    let replicas = status.iter().map(|r| {
+        Json::obj(vec![
+            ("id", Json::num(r.id as f64)),
+            ("health", Json::str(r.health.name())),
+            ("restarts", Json::num(r.restarts as f64)),
+            ("panics", Json::num(r.panics as f64)),
+        ])
+    });
+    let all_dead = coord.all_dead();
+    let healthy = coord.healthy_count();
+    let state = if all_dead {
+        "unavailable"
+    } else if healthy == status.len() {
+        "ok"
+    } else {
+        "degraded"
+    };
+    let out = Json::obj(vec![
+        ("status", Json::str(state)),
+        ("replicas", Json::arr(replicas)),
+        ("healthy", Json::num(healthy as f64)),
+        (
+            "restarting",
+            Json::num(
+                status.iter().filter(|r| r.health == ReplicaHealth::Restarting).count()
+                    as f64,
+            ),
+        ),
+        (
+            "dead",
+            Json::num(
+                status.iter().filter(|r| r.health == ReplicaHealth::Dead).count() as f64,
+            ),
+        ),
+    ]);
+    Response::json(if all_dead { 503 } else { 200 }, out.to_string())
 }
 
 /// Summarize a histogram as count/mean/p50/p95/p99 (all seconds).

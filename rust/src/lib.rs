@@ -36,7 +36,9 @@
 //!   Chrome trace-event export, mock-clock deterministic in tests.
 //! * [`serving`]     — continuous-batching replica pool: N engine threads,
 //!   per-replica step scheduler (chunked prefill + iteration-level decode),
-//!   KV-byte admission, cancellation/deadlines.
+//!   KV-byte admission, cancellation/deadlines, and fault-domain
+//!   supervision (panic-isolated quanta, respawn with backoff + circuit
+//!   breaker, poison-batch quarantine, seeded chaos harness).
 //! * [`coordinator`] — serving facade: request ids, streaming, shutdown.
 //! * [`http`]        — minimal HTTP/1.1 server (std::net, no framework).
 

@@ -275,7 +275,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             (1.0 / trace_sample.min(1.0)).round().max(1.0) as u64
         );
     }
-    println!("  GET  /v1/pool         GET /metrics      GET /healthz");
+    println!("  GET  /v1/pool         GET /v1/health    GET /metrics      GET /healthz");
     let shutdown = server.shutdown_handle();
     ctrlc_fallback(&shutdown);
     server.serve();

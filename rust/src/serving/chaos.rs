@@ -1,0 +1,437 @@
+//! Deterministic chaos harness: a [`ReplicaEngine`] wrapper that
+//! injects faults at the four engine call sites from a seeded
+//! [`FaultPlan`].
+//!
+//! [`ChaosEngine`] wraps any engine and consults the plan before every
+//! delegated `begin` / `step` / `step_batch` / `finish`. A matching
+//! [`FaultRule`] injects an [`anyhow`] error, a panic (caught by the
+//! replica loop's quantum isolation and converted into a poisoning), or
+//! extra latency. Matching is driven by **per-site call counters** and a
+//! **seeded SplitMix64** stream held in a shared [`FaultState`] — two
+//! runs with the same plan, seed, and call sequence inject exactly the
+//! same faults, which is what lets `rust/tests/test_chaos.rs` pin the
+//! conservation-ledger / admission-byte / prefix-lease invariants under
+//! fault storms instead of merely sampling them.
+//!
+//! The [`FaultState`] is `Arc`-shared *outside* the engine, so a
+//! factory closure can hold it across engine rebuilds: a respawned
+//! replica keeps consuming the same fault schedule rather than
+//! restarting it, and tests can read injection counts after the run.
+//!
+//! ```no_run
+//! # use std::sync::Arc;
+//! # use fastav::serving::{ChaosEngine, FaultKind, FaultPlan, FaultRule, FaultSite, FaultState, FaultWhen};
+//! # fn make_engine() -> anyhow::Result<()> { unimplemented!() }
+//! let state = FaultState::new(FaultPlan {
+//!     seed: 7,
+//!     rules: vec![FaultRule {
+//!         site: FaultSite::Step,
+//!         when: FaultWhen::AtCall(3),
+//!         kind: FaultKind::Panic,
+//!         max_injections: 1,
+//!     }],
+//! });
+//! // inside a pool factory: move a clone of `state` in, so the fault
+//! // schedule survives supervisor respawns:
+//! // ReplicaPool::start_with_factory(cfg, metrics, move |_| {
+//! //     Ok(ChaosEngine::new(build_mock(), Arc::clone(&state)))
+//! // })
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::GenRequest;
+use crate::kvcache::PrefixCache;
+use crate::model::{GenerateResult, StepEvent};
+
+use super::admission::PrefixCharge;
+use super::replica::ReplicaEngine;
+
+/// Engine call sites a fault can target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    Begin = 0,
+    Step = 1,
+    StepBatch = 2,
+    Finish = 3,
+}
+
+const SITES: usize = 4;
+
+impl FaultSite {
+    fn idx(self) -> usize {
+        self as usize
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            FaultSite::Begin => "begin",
+            FaultSite::Step => "step",
+            FaultSite::StepBatch => "step_batch",
+            FaultSite::Finish => "finish",
+        }
+    }
+}
+
+/// When a rule fires, against the 1-based per-site call counter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultWhen {
+    /// Exactly the n-th call to the site (1-based).
+    AtCall(u64),
+    /// Every n-th call (n = 0 never fires).
+    Every(u64),
+    /// Each call independently with probability `p`, drawn from the
+    /// plan's seeded stream (deterministic for a fixed call sequence).
+    WithProbability(f64),
+}
+
+/// What an injection does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Return an `anyhow` error: a transient engine fault (the replica
+    /// loop attributes it to the request or quarantines the batch).
+    Err,
+    /// Panic: caught by quantum isolation, poisons the engine, and
+    /// drives the supervisor's respawn path. At the infallible `finish`
+    /// site, [`FaultKind::Err`] also panics.
+    Panic,
+    /// Sleep this long, then proceed normally (tail-latency injection).
+    Latency(Duration),
+}
+
+/// One injection rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultRule {
+    pub site: FaultSite,
+    pub when: FaultWhen,
+    pub kind: FaultKind,
+    /// Cap on how many times this rule may fire; `0` = unlimited.
+    pub max_injections: u64,
+}
+
+/// A seeded fault schedule.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Seed for the [`FaultWhen::WithProbability`] stream.
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+/// SplitMix64: tiny, seedable, and good enough for fault sampling.
+/// (No `rand` dependency — the container is offline.)
+struct SplitMix64(u64);
+
+impl SplitMix64 {
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// Shared, thread-safe fault bookkeeping: per-site call counters,
+/// per-rule injection counters, the seeded probability stream, and
+/// aggregate injection counts for test assertions. Held in an `Arc` by
+/// both the [`ChaosEngine`] and the test (and the pool factory closure,
+/// so the schedule survives engine rebuilds).
+pub struct FaultState {
+    rules: Vec<FaultRule>,
+    calls: [AtomicU64; SITES],
+    injected: Vec<AtomicU64>,
+    errs: AtomicU64,
+    panics: AtomicU64,
+    delays: AtomicU64,
+    rng: Mutex<SplitMix64>,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Arc<FaultState> {
+        let injected = plan.rules.iter().map(|_| AtomicU64::new(0)).collect();
+        Arc::new(FaultState {
+            injected,
+            calls: Default::default(),
+            errs: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            delays: AtomicU64::new(0),
+            rng: Mutex::new(SplitMix64(plan.seed)),
+            rules: plan.rules,
+        })
+    }
+
+    /// Total calls observed at a site.
+    pub fn calls(&self, site: FaultSite) -> u64 {
+        self.calls[site.idx()].load(Ordering::SeqCst)
+    }
+
+    /// Times rule `i` (plan order) has fired.
+    pub fn injections(&self, i: usize) -> u64 {
+        self.injected.get(i).map(|c| c.load(Ordering::SeqCst)).unwrap_or(0)
+    }
+
+    /// Injected `Err` faults (including those escalated to panics at
+    /// the `Finish` site).
+    pub fn errs(&self) -> u64 {
+        self.errs.load(Ordering::SeqCst)
+    }
+
+    /// Injected panics.
+    pub fn panics(&self) -> u64 {
+        self.panics.load(Ordering::SeqCst)
+    }
+
+    /// Injected latency sleeps.
+    pub fn delays(&self) -> u64 {
+        self.delays.load(Ordering::SeqCst)
+    }
+
+    /// Record one call at `site` and return the fault to inject, if any.
+    /// The first matching rule (plan order) with injection budget wins.
+    fn decide(&self, site: FaultSite) -> Option<(FaultKind, u64)> {
+        let call = self.calls[site.idx()].fetch_add(1, Ordering::SeqCst) + 1; // 1-based
+        for (i, r) in self.rules.iter().enumerate() {
+            if r.site != site {
+                continue;
+            }
+            if r.max_injections != 0 && self.injected[i].load(Ordering::SeqCst) >= r.max_injections
+            {
+                continue;
+            }
+            let hit = match r.when {
+                FaultWhen::AtCall(n) => call == n,
+                FaultWhen::Every(n) => n != 0 && call % n == 0,
+                FaultWhen::WithProbability(p) => {
+                    super::lock_clean(&self.rng).next_f64() < p
+                }
+            };
+            if hit {
+                self.injected[i].fetch_add(1, Ordering::SeqCst);
+                return Some((r.kind, call));
+            }
+        }
+        None
+    }
+
+    /// Apply the decision for a fallible site: `Ok(())` to proceed.
+    fn inject(&self, site: FaultSite) -> Result<()> {
+        match self.decide(site) {
+            None => Ok(()),
+            Some((FaultKind::Latency(d), _)) => {
+                self.delays.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(d);
+                Ok(())
+            }
+            Some((FaultKind::Err, call)) => {
+                self.errs.fetch_add(1, Ordering::SeqCst);
+                Err(anyhow!("chaos: injected error at {} call #{}", site.name(), call))
+            }
+            Some((FaultKind::Panic, call)) => {
+                self.panics.fetch_add(1, Ordering::SeqCst);
+                panic!("chaos: injected panic at {} call #{}", site.name(), call);
+            }
+        }
+    }
+
+    /// Apply the decision at the infallible `finish` site: `Err`
+    /// escalates to a panic (there is no error channel to return it on).
+    fn inject_infallible(&self, site: FaultSite) {
+        match self.decide(site) {
+            None => {}
+            Some((FaultKind::Latency(d), _)) => {
+                self.delays.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(d);
+            }
+            Some((FaultKind::Err, call)) | Some((FaultKind::Panic, call)) => {
+                self.panics.fetch_add(1, Ordering::SeqCst);
+                panic!("chaos: injected panic at {} call #{}", site.name(), call);
+            }
+        }
+    }
+}
+
+/// A [`ReplicaEngine`] wrapper that injects the plan's faults before
+/// delegating to the inner engine. Everything the plan does not target
+/// passes straight through, so a `ChaosEngine<MockEngine>` behaves
+/// byte-identically to the bare mock on fault-free call sequences.
+pub struct ChaosEngine<E> {
+    inner: E,
+    state: Arc<FaultState>,
+}
+
+impl<E> ChaosEngine<E> {
+    pub fn new(inner: E, state: Arc<FaultState>) -> ChaosEngine<E> {
+        ChaosEngine { inner, state }
+    }
+
+    /// The shared fault bookkeeping (test assertions).
+    pub fn state(&self) -> &Arc<FaultState> {
+        &self.state
+    }
+}
+
+impl<E: ReplicaEngine> ReplicaEngine for ChaosEngine<E> {
+    type Gen = E::Gen;
+
+    fn begin(&mut self, req: &GenRequest) -> Result<Self::Gen> {
+        self.state.inject(FaultSite::Begin)?;
+        self.inner.begin(req)
+    }
+
+    fn step(&mut self, gen: &mut Self::Gen) -> Result<StepEvent> {
+        self.state.inject(FaultSite::Step)?;
+        self.inner.step(gen)
+    }
+
+    fn is_decoding(&self, gen: &Self::Gen) -> bool {
+        self.inner.is_decoding(gen)
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        self.inner.max_decode_batch()
+    }
+
+    fn step_batch(&mut self, gens: &mut [&mut Self::Gen]) -> Result<Vec<StepEvent>> {
+        // Injected *before* delegation, honoring the transactional
+        // step_batch contract: an injected batch error advances nobody,
+        // so the quarantine bisect may re-step members safely.
+        self.state.inject(FaultSite::StepBatch)?;
+        self.inner.step_batch(gens)
+    }
+
+    fn is_done(&self, gen: &Self::Gen) -> bool {
+        self.inner.is_done(gen)
+    }
+
+    fn finish(&mut self, gen: Self::Gen) -> GenerateResult {
+        self.state.inject_infallible(FaultSite::Finish);
+        self.inner.finish(gen)
+    }
+
+    fn kv_bytes(&self, gen: &Self::Gen) -> usize {
+        self.inner.kv_bytes(gen)
+    }
+
+    fn estimate_bytes(&self, req: &GenRequest) -> usize {
+        self.inner.estimate_bytes(req)
+    }
+
+    fn attach_prefix_cache(&mut self, cache: Arc<PrefixCache>, replica: usize) {
+        self.inner.attach_prefix_cache(cache, replica);
+    }
+
+    fn prefix_probe(&self, req: &GenRequest) -> Option<PrefixCharge> {
+        self.inner.prefix_probe(req)
+    }
+
+    fn prefix_hit(&self, gen: &Self::Gen) -> bool {
+        self.inner.prefix_hit(gen)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(rules: Vec<FaultRule>, seed: u64) -> Arc<FaultState> {
+        FaultState::new(FaultPlan { seed, rules })
+    }
+
+    #[test]
+    fn at_call_fires_exactly_once_at_the_named_call() {
+        let s = plan(
+            vec![FaultRule {
+                site: FaultSite::Step,
+                when: FaultWhen::AtCall(3),
+                kind: FaultKind::Err,
+                max_injections: 0,
+            }],
+            0,
+        );
+        let outcomes: Vec<bool> = (0..6).map(|_| s.inject(FaultSite::Step).is_err()).collect();
+        assert_eq!(outcomes, vec![false, false, true, false, false, false]);
+        assert_eq!(s.errs(), 1);
+        assert_eq!(s.calls(FaultSite::Step), 6);
+    }
+
+    #[test]
+    fn every_n_fires_periodically_and_sites_count_independently() {
+        let s = plan(
+            vec![FaultRule {
+                site: FaultSite::Begin,
+                when: FaultWhen::Every(2),
+                kind: FaultKind::Err,
+                max_injections: 0,
+            }],
+            0,
+        );
+        let begins: Vec<bool> = (0..6).map(|_| s.inject(FaultSite::Begin).is_err()).collect();
+        assert_eq!(begins, vec![false, true, false, true, false, true]);
+        // Step calls do not consume Begin's schedule.
+        for _ in 0..10 {
+            assert!(s.inject(FaultSite::Step).is_ok());
+        }
+        assert_eq!(s.calls(FaultSite::Begin), 6);
+        assert_eq!(s.calls(FaultSite::Step), 10);
+        assert_eq!(s.errs(), 3);
+    }
+
+    #[test]
+    fn max_injections_caps_a_rule() {
+        let s = plan(
+            vec![FaultRule {
+                site: FaultSite::Step,
+                when: FaultWhen::Every(1),
+                kind: FaultKind::Err,
+                max_injections: 2,
+            }],
+            0,
+        );
+        let outcomes: Vec<bool> = (0..5).map(|_| s.inject(FaultSite::Step).is_err()).collect();
+        assert_eq!(outcomes, vec![true, true, false, false, false]);
+        assert_eq!(s.injections(0), 2);
+    }
+
+    #[test]
+    fn probability_stream_is_seed_deterministic() {
+        let run = |seed: u64| -> Vec<bool> {
+            let s = plan(
+                vec![FaultRule {
+                    site: FaultSite::Step,
+                    when: FaultWhen::WithProbability(0.5),
+                    kind: FaultKind::Err,
+                    max_injections: 0,
+                }],
+                seed,
+            );
+            (0..64).map(|_| s.inject(FaultSite::Step).is_err()).collect()
+        };
+        assert_eq!(run(42), run(42), "same seed, same schedule");
+        assert_ne!(run(42), run(43), "different seeds diverge");
+        let fired = run(42).iter().filter(|&&b| b).count();
+        assert!((10..=54).contains(&fired), "p=0.5 should fire roughly half: {}", fired);
+    }
+
+    #[test]
+    #[should_panic(expected = "chaos: injected panic at finish")]
+    fn finish_site_escalates_err_to_panic() {
+        let s = plan(
+            vec![FaultRule {
+                site: FaultSite::Finish,
+                when: FaultWhen::AtCall(1),
+                kind: FaultKind::Err,
+                max_injections: 0,
+            }],
+            0,
+        );
+        s.inject_infallible(FaultSite::Finish);
+    }
+}

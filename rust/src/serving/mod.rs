@@ -58,17 +58,33 @@
 //! same-prefix requests grows sub-linearly in K. `GET /v1/pool` exposes
 //! the cache stats; `POST /v1/cache/flush` evicts lease-free entries.
 //!
+//! **Fault domains (see `docs/RELIABILITY.md`):** every engine call in
+//! the replica loop runs under `catch_unwind`, so a panicking dispatch
+//! becomes an attributed per-request failure instead of thread death.
+//! A panic poisons the engine; the in-thread supervisor ([`supervise`])
+//! rebuilds it through the factory with exponential backoff, redirects
+//! stranded jobs to healthy peers (bounded per-request retries — only
+//! requests that have not streamed a token are retried), and a
+//! sliding-window circuit breaker marks a flapping replica
+//! [`ReplicaHealth::Dead`]. `submit` routes healthy-first, excludes dead
+//! replicas, and returns `Closed` (503) only when the whole pool is
+//! dead. A failed *fused* decode dispatch is bisected by single-request
+//! retries so only the poison generation fails. The deterministic
+//! [`chaos::ChaosEngine`] wrapper injects seeded faults at every engine
+//! call site to property-test all of this (`rust/tests/test_chaos.rs`).
+//!
 //! The pool is generic over [`replica::ReplicaEngine`], so every
 //! scheduling/conservation property is testable with a mock engine and
 //! no AOT artifacts (`rust/tests/test_scheduling.rs`,
 //! `rust/tests/test_prefix.rs`).
 
 pub mod admission;
+pub mod chaos;
 pub mod replica;
 pub mod step_scheduler;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -82,6 +98,7 @@ use crate::model::{request_prefix_affinity, ModelEngine};
 use crate::trace::{Clock, MonotonicClock, TraceRecorder};
 
 pub use admission::PrefixCharge;
+pub use chaos::{ChaosEngine, FaultKind, FaultPlan, FaultRule, FaultSite, FaultState, FaultWhen};
 pub use replica::ReplicaEngine;
 use replica::Job;
 
@@ -121,6 +138,22 @@ pub struct PoolConfig {
     /// Completed traces retained per replica (`--trace-ring`); bounds
     /// tracer memory regardless of uptime.
     pub trace_ring: usize,
+    /// First respawn delay after an engine panic; doubles per restart
+    /// inside the circuit window up to [`Self::restart_backoff_max`].
+    pub restart_backoff: Duration,
+    /// Ceiling on the exponential respawn backoff.
+    pub restart_backoff_max: Duration,
+    /// Circuit breaker: more than this many restarts inside
+    /// [`Self::circuit_window`] marks the replica [`ReplicaHealth::Dead`]
+    /// (its queue closes and `submit` stops routing to it).
+    pub circuit_restarts: usize,
+    /// Sliding window the circuit breaker counts restarts over.
+    pub circuit_window: Duration,
+    /// Times one request may be re-enqueued after its replica poisons
+    /// before it fails with the attributed engine error. Only requests
+    /// that have not yet streamed a token are retried (re-running a
+    /// partially streamed generation would duplicate tokens client-side).
+    pub max_request_retries: u32,
 }
 
 impl Default for PoolConfig {
@@ -137,6 +170,11 @@ impl Default for PoolConfig {
             tp_degree: 1,
             trace_sample: 0.0,
             trace_ring: 256,
+            restart_backoff: Duration::from_millis(20),
+            restart_backoff_max: Duration::from_secs(2),
+            circuit_restarts: 5,
+            circuit_window: Duration::from_secs(60),
+            max_request_retries: 2,
         }
     }
 }
@@ -165,6 +203,56 @@ pub enum Terminal {
     Expired,
 }
 
+/// Lock a mutex, recovering from poisoning. The maps these guard
+/// (cancellation flags, affinity routes, replica slots) hold plain data
+/// that is valid at every instruction boundary, so a thread that
+/// panicked while holding the lock cannot have left them torn — and one
+/// panicked request must not cascade panics through submit/cancel.
+pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Supervision state of one replica thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// Engine up, serving its queue.
+    Healthy,
+    /// Engine poisoned by a panic; the supervisor is rebuilding it
+    /// (backoff + factory). The queue stays open and drains on recovery.
+    Restarting,
+    /// Circuit breaker tripped (too many restarts in the window) or the
+    /// factory can no longer produce an engine. The queue is closed,
+    /// stranded jobs were redirected or failed, and `submit` no longer
+    /// routes here. Terminal for the replica, not the pool.
+    Dead,
+}
+
+impl ReplicaHealth {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicaHealth::Healthy => "healthy",
+            ReplicaHealth::Restarting => "restarting",
+            ReplicaHealth::Dead => "dead",
+        }
+    }
+
+    pub(crate) fn from_u8(v: u8) -> ReplicaHealth {
+        match v {
+            1 => ReplicaHealth::Restarting,
+            2 => ReplicaHealth::Dead,
+            _ => ReplicaHealth::Healthy,
+        }
+    }
+}
+
+/// A peer replica's ingress, visible pool-wide so a poisoned replica
+/// can redirect its stranded jobs without going through `submit`
+/// (which would double-count them).
+pub(crate) struct ReplicaSlot {
+    pub queue: Arc<SchedulerQueue<Job>>,
+    pub shared: Arc<ReplicaShared>,
+}
+
 /// Pool-wide counters (the conservation ledger) + cancellation flags.
 #[derive(Default)]
 pub(crate) struct PoolShared {
@@ -174,7 +262,25 @@ pub(crate) struct PoolShared {
     pub failed: AtomicU64,
     pub canceled: AtomicU64,
     pub expired: AtomicU64,
+    /// Requests re-enqueued after a replica poisoning (not a ledger
+    /// term: a retried request is still exactly one submission).
+    pub retried: AtomicU64,
     pub cancels: Mutex<HashMap<u64, Arc<AtomicBool>>>,
+    /// Every replica's queue + shared counters, registered before the
+    /// replica threads spawn; the redirect path and the healthy-replica
+    /// gauge read it.
+    pub slots: Mutex<Vec<ReplicaSlot>>,
+}
+
+impl PoolShared {
+    /// Refresh the `fastav_replicas_healthy` gauge from the slots.
+    pub(crate) fn refresh_health_gauge(&self, metrics: &Registry) {
+        let n = lock_clean(&self.slots)
+            .iter()
+            .filter(|s| s.shared.health() == ReplicaHealth::Healthy)
+            .count();
+        metrics.gauge("fastav_replicas_healthy").set(n as u64);
+    }
 }
 
 /// Per-replica live counters, readable from any thread.
@@ -190,6 +296,22 @@ pub(crate) struct ReplicaShared {
     /// advanced; their ratio is the mean decode-batch occupancy.
     pub batch_quanta: AtomicU64,
     pub batch_tokens: AtomicU64,
+    /// [`ReplicaHealth`] as a u8 (0 healthy / 1 restarting / 2 dead).
+    pub health: AtomicU8,
+    /// Successful engine respawns after a poisoning.
+    pub restarts: AtomicU64,
+    /// Engine panics caught by quantum isolation on this replica.
+    pub panics: AtomicU64,
+}
+
+impl ReplicaShared {
+    pub(crate) fn health(&self) -> ReplicaHealth {
+        ReplicaHealth::from_u8(self.health.load(Ordering::SeqCst))
+    }
+
+    pub(crate) fn set_health(&self, h: ReplicaHealth) {
+        self.health.store(h as u8, Ordering::SeqCst);
+    }
 }
 
 /// Point-in-time view of one replica (the `/v1/pool` payload).
@@ -211,6 +333,12 @@ pub struct ReplicaStatus {
     /// (`decode_batch_tokens / decode_batch_quanta` = mean occupancy).
     pub decode_batch_quanta: u64,
     pub decode_batch_tokens: u64,
+    /// Supervision state (`healthy` / `restarting` / `dead`).
+    pub health: ReplicaHealth,
+    /// Successful engine respawns after poisonings.
+    pub restarts: u64,
+    /// Engine panics caught by quantum isolation.
+    pub panics: u64,
 }
 
 /// Pool-wide request accounting. At any quiescent point,
@@ -226,6 +354,10 @@ pub struct PoolStats {
     pub expired: u64,
     pub in_queue: u64,
     pub in_flight: u64,
+    /// Requests re-enqueued after a replica poisoning. Not a ledger
+    /// term: a retried request is still exactly one submission and
+    /// reaches exactly one terminal state.
+    pub retried: u64,
 }
 
 impl PoolStats {
@@ -339,10 +471,25 @@ impl ReplicaPool {
         // engine gets it via `ReplicaEngine::attach_prefix_cache`.
         let prefix = Arc::new(PrefixCache::new(cfg.prefix_cache_bytes));
         prefix.bind_metrics(&metrics);
+        // Create every replica's queue + shared counters and register
+        // the slots *before* any thread spawns: a replica that poisons
+        // during warm-up traffic must already see its peers to redirect
+        // stranded jobs.
+        let queues: Vec<Arc<SchedulerQueue<Job>>> = (0..cfg.replicas)
+            .map(|_| Arc::new(SchedulerQueue::new(cfg.queue_cap)))
+            .collect();
+        let rshareds: Vec<Arc<ReplicaShared>> =
+            (0..cfg.replicas).map(|_| Arc::new(ReplicaShared::default())).collect();
+        *lock_clean(&shared.slots) = queues
+            .iter()
+            .zip(&rshareds)
+            .map(|(q, s)| ReplicaSlot { queue: Arc::clone(q), shared: Arc::clone(s) })
+            .collect();
+        metrics.gauge("fastav_replicas_healthy").set(cfg.replicas as u64);
         let mut replicas: Vec<ReplicaHandle> = Vec::with_capacity(cfg.replicas);
         for i in 0..cfg.replicas {
-            let queue: Arc<SchedulerQueue<Job>> = Arc::new(SchedulerQueue::new(cfg.queue_cap));
-            let rshared = Arc::new(ReplicaShared::default());
+            let queue = Arc::clone(&queues[i]);
+            let rshared = Arc::clone(&rshareds[i]);
             let (ready_tx, ready_rx) = channel::<Result<(), String>>();
             let spawn = {
                 let queue = Arc::clone(&queue);
@@ -364,16 +511,9 @@ impl ReplicaPool {
                             }
                         };
                         let _ = ready_tx.send(Ok(()));
-                        replica::replica_loop(
-                            i,
-                            engine,
-                            &cfg,
-                            &queue,
-                            &rshared,
-                            &pshared,
-                            &metrics,
-                            Some(prefix),
-                            &tracer,
+                        supervise(
+                            i, engine, &factory, &cfg, &queue, &rshared, &pshared, &metrics,
+                            &prefix, &tracer,
                         );
                     })
             };
@@ -460,15 +600,24 @@ impl ReplicaPool {
             deadline,
             cancel: Arc::clone(&cancel),
             events: tx,
+            retries: 0,
             trace,
         };
         // Register the cancel flag *before* the push: the replica may
         // pop, finish, and clean up the entry before try_push returns.
-        self.shared.cancels.lock().unwrap().insert(id, cancel);
-        let mut order: Vec<usize> = (0..self.replicas.len()).collect();
-        order.sort_by_key(|&i| self.load(i));
+        lock_clean(&self.shared.cancels).insert(id, cancel);
+        // Dead replicas are excluded from routing outright (their queues
+        // are closed anyway); restarting ones sort after healthy ones so
+        // traffic prefers live engines but can still park in a
+        // recovering replica's queue under pressure.
+        let mut order: Vec<usize> = (0..self.replicas.len())
+            .filter(|&i| self.replicas[i].shared.health() != ReplicaHealth::Dead)
+            .collect();
+        order.sort_by_key(|&i| {
+            (self.replicas[i].shared.health() != ReplicaHealth::Healthy, self.load(i))
+        });
         if let Some(aff) = affinity {
-            let owner = self.router.lock().unwrap().get(&aff).copied();
+            let owner = lock_clean(&self.router).get(&aff).copied();
             if let Some(owner) = owner {
                 if let Some(pos) = order.iter().position(|&i| i == owner) {
                     order.remove(pos);
@@ -481,7 +630,7 @@ impl ReplicaPool {
             match self.replicas[i].queue.try_push(job, prio) {
                 Ok(()) => {
                     if let Some(aff) = affinity {
-                        let mut router = self.router.lock().unwrap();
+                        let mut router = lock_clean(&self.router);
                         if router.len() >= ROUTER_CAP {
                             router.clear();
                         }
@@ -500,7 +649,7 @@ impl ReplicaPool {
                 }
             }
         }
-        self.shared.cancels.lock().unwrap().remove(&id);
+        lock_clean(&self.shared.cancels).remove(&id);
         self.shared.rejected.fetch_add(1, Ordering::SeqCst);
         self.metrics.counter("fastav_requests_rejected_total").inc();
         if all_closed {
@@ -514,7 +663,7 @@ impl ReplicaPool {
     /// unknown or already terminal. A queued request is dropped at pop;
     /// a running one stops within one scheduling quantum.
     pub fn cancel(&self, id: u64) -> bool {
-        match self.shared.cancels.lock().unwrap().get(&id) {
+        match lock_clean(&self.shared.cancels).get(&id) {
             Some(flag) => {
                 flag.store(true, Ordering::SeqCst);
                 true
@@ -559,6 +708,7 @@ impl ReplicaPool {
                 .iter()
                 .map(|r| r.shared.active.load(Ordering::SeqCst) as u64)
                 .sum(),
+            retried: self.shared.retried.load(Ordering::SeqCst),
         }
     }
 
@@ -579,8 +729,31 @@ impl ReplicaPool {
                 completed: r.shared.completed.load(Ordering::SeqCst),
                 decode_batch_quanta: r.shared.batch_quanta.load(Ordering::Relaxed),
                 decode_batch_tokens: r.shared.batch_tokens.load(Ordering::Relaxed),
+                health: r.shared.health(),
+                restarts: r.shared.restarts.load(Ordering::SeqCst),
+                panics: r.shared.panics.load(Ordering::SeqCst),
             })
             .collect()
+    }
+
+    /// Replicas currently [`ReplicaHealth::Healthy`].
+    pub fn healthy_count(&self) -> usize {
+        self.replicas
+            .iter()
+            .filter(|r| r.shared.health() == ReplicaHealth::Healthy)
+            .count()
+    }
+
+    /// Whether every replica is [`ReplicaHealth::Dead`] — the only
+    /// condition under which `GET /v1/health` reports 503 (and `submit`
+    /// returns `Closed` with no shutdown in progress).
+    pub fn all_dead(&self) -> bool {
+        self.replicas.iter().all(|r| r.shared.health() == ReplicaHealth::Dead)
+    }
+
+    /// The metric registry the pool reports into.
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
     }
 
     /// Pool-wide decode-batch accounting: `(quanta, tokens)` summed over
@@ -628,6 +801,163 @@ impl Drop for ReplicaPool {
     }
 }
 
+/// The replica thread body around [`replica::replica_loop`]: run the
+/// engine until the queue drains, and on a poisoning (a caught engine
+/// panic) rebuild the engine through the factory with exponential
+/// backoff. A sliding-window circuit breaker bounds the blast radius:
+/// more than `circuit_restarts` rebuilds inside `circuit_window` marks
+/// the replica [`ReplicaHealth::Dead`], closes its queue, and redirects
+/// or fails whatever was still queued. The supervisor runs *on* the
+/// replica thread because engines are built on the thread that owns
+/// them (PJRT handles are not `Send`).
+#[allow(clippy::too_many_arguments)]
+fn supervise<E, F>(
+    id: usize,
+    first: E,
+    factory: &Arc<F>,
+    cfg: &PoolConfig,
+    queue: &Arc<SchedulerQueue<Job>>,
+    rshared: &Arc<ReplicaShared>,
+    pshared: &Arc<PoolShared>,
+    metrics: &Arc<Registry>,
+    prefix: &Arc<PrefixCache>,
+    tracer: &Arc<TraceRecorder>,
+) where
+    E: ReplicaEngine + 'static,
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+{
+    let mut engine = Some(first);
+    // Restart timestamps inside the sliding circuit window.
+    let mut recent: Vec<Instant> = Vec::new();
+    loop {
+        let e = engine.take().expect("supervise refills the engine every iteration");
+        let exit = replica::replica_loop(
+            id,
+            e,
+            cfg,
+            queue,
+            rshared,
+            pshared,
+            metrics,
+            Some(Arc::clone(prefix)),
+            tracer,
+        );
+        let poison_msg = match exit {
+            replica::ReplicaExit::Drained => return, // queue closed + drained
+            replica::ReplicaExit::Poisoned(msg) => msg,
+        };
+        if trip_circuit(&mut recent, cfg) {
+            go_dead(
+                id,
+                &format!("replica {}: circuit breaker open ({})", id, poison_msg),
+                cfg,
+                queue,
+                rshared,
+                pshared,
+                metrics,
+                tracer,
+            );
+            return;
+        }
+        rshared.set_health(ReplicaHealth::Restarting);
+        pshared.refresh_health_gauge(metrics);
+        // Rebuild with backoff; a failing factory consumes circuit
+        // budget exactly like a panic does.
+        loop {
+            let attempt = recent.len().saturating_sub(1).min(16) as u32;
+            let delay = cfg
+                .restart_backoff
+                .saturating_mul(1u32 << attempt)
+                .min(cfg.restart_backoff_max.max(cfg.restart_backoff));
+            if !sleep_unless_closed(queue, delay) {
+                // Shutdown arrived mid-backoff: there is no engine to
+                // drain with, so settle whatever is still queued.
+                go_dead(
+                    id,
+                    &format!("replica {}: shut down while restarting ({})", id, poison_msg),
+                    cfg,
+                    queue,
+                    rshared,
+                    pshared,
+                    metrics,
+                    tracer,
+                );
+                return;
+            }
+            match factory(id) {
+                Ok(e) => {
+                    engine = Some(e);
+                    break;
+                }
+                Err(err) => {
+                    if trip_circuit(&mut recent, cfg) {
+                        go_dead(
+                            id,
+                            &format!("replica {}: engine rebuild failed: {:#}", id, err),
+                            cfg,
+                            queue,
+                            rshared,
+                            pshared,
+                            metrics,
+                            tracer,
+                        );
+                        return;
+                    }
+                }
+            }
+        }
+        rshared.restarts.fetch_add(1, Ordering::SeqCst);
+        metrics.counter("fastav_replica_restarts_total").inc();
+        rshared.set_health(ReplicaHealth::Healthy);
+        pshared.refresh_health_gauge(metrics);
+    }
+}
+
+/// Record one restart attempt in the sliding window; true = the
+/// circuit breaker is now open.
+fn trip_circuit(recent: &mut Vec<Instant>, cfg: &PoolConfig) -> bool {
+    let now = Instant::now();
+    recent.retain(|t| now.duration_since(*t) < cfg.circuit_window);
+    recent.push(now);
+    recent.len() > cfg.circuit_restarts
+}
+
+/// Sleep `delay` in small increments, returning false early if the
+/// queue closes (pool shutdown) so a dying replica never delays drop.
+fn sleep_unless_closed(queue: &SchedulerQueue<Job>, delay: Duration) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < delay {
+        if queue.is_closed() {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(1).min(delay));
+    }
+    !queue.is_closed()
+}
+
+/// Terminal transition for one replica: mark it [`ReplicaHealth::Dead`],
+/// close its queue, and redirect (bounded retries) or fail every job
+/// still queued. The pool keeps serving on the surviving replicas;
+/// `submit` returns `Closed` (HTTP 503) only when all are dead.
+#[allow(clippy::too_many_arguments)]
+fn go_dead(
+    id: usize,
+    reason: &str,
+    cfg: &PoolConfig,
+    queue: &SchedulerQueue<Job>,
+    rshared: &ReplicaShared,
+    pshared: &PoolShared,
+    metrics: &Registry,
+    tracer: &TraceRecorder,
+) {
+    rshared.set_health(ReplicaHealth::Dead);
+    queue.close();
+    while let Some(job) = queue.try_pop() {
+        replica::strand_queued_job(job, id, reason, cfg, pshared, metrics, tracer);
+    }
+    pshared.refresh_health_gauge(metrics);
+}
+
 /// Pre-register the serving metric families so `/metrics` is complete
 /// from the first scrape, before any traffic.
 fn register_metrics(metrics: &Registry) {
@@ -645,9 +975,15 @@ fn register_metrics(metrics: &Registry) {
         "fastav_prefix_cache_evictions_total",
         "fastav_decode_batched_steps_total",
         "fastav_decode_batched_tokens_total",
+        "fastav_replica_restarts_total",
+        "fastav_replica_panics_total",
+        "fastav_requests_retried_total",
+        "fastav_requests_quarantined_total",
+        "fastav_client_disconnects_total",
     ] {
         metrics.counter(c);
     }
+    metrics.gauge("fastav_replicas_healthy");
     for sz in crate::metrics::OCCUPANCY_BUCKETS {
         metrics.counter(&crate::metrics::labeled(
             "fastav_decode_batch_occupancy",

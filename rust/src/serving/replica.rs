@@ -9,7 +9,21 @@
 //! by one quantum, as chosen by the [`StepScheduler`]. Cancellation and
 //! deadlines are checked at every admission and before every quantum,
 //! so a canceled long generation stops within one step.
+//!
+//! **Fault isolation (see `docs/RELIABILITY.md`):** every engine call
+//! (`begin` / `step` / `step_batch` / `finish`) runs under
+//! [`std::panic::catch_unwind`]. An ordinary `Err` stays what it always
+//! was — an attributed per-request failure. A *panic* additionally
+//! poisons the engine: the loop stops dispatching into it, strands every
+//! in-flight generation uniformly (redirecting the ones that never
+//! streamed a token to a healthy peer, bounded by
+//! [`PoolConfig::max_request_retries`]), and returns
+//! [`ReplicaExit::Poisoned`] so the supervisor in `serving/mod.rs` can
+//! rebuild the engine. A failed *fused* decode dispatch is quarantined
+//! instead: members are re-stepped individually so only the poison
+//! generation fails and innocent batchmates keep streaming.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -27,7 +41,7 @@ use crate::trace::{
 
 use super::admission::{Admission, Admit, PrefixCharge};
 use super::step_scheduler::StepScheduler;
-use super::{PoolConfig, PoolShared, ReplicaShared, Terminal};
+use super::{lock_clean, PoolConfig, PoolShared, ReplicaHealth, ReplicaShared, Terminal};
 
 /// The engine surface a replica drives. [`ModelEngine`] is the real
 /// implementation; tests swap in a mock so the pool's scheduling and
@@ -58,6 +72,15 @@ pub trait ReplicaEngine {
     /// Advance several decode-ready generations one token each in a
     /// single fused dispatch, returning one event per generation in
     /// order. Default: sequential single steps.
+    ///
+    /// **Contract: the dispatch is transactional.** On `Err`, no
+    /// generation in the batch may have advanced — the pool's
+    /// poison-batch quarantine re-steps members individually after a
+    /// batch error, which would double-step any member the failed
+    /// dispatch had already moved. (The fused `ModelEngine` path
+    /// validates and uploads the whole batch before any KV append; the
+    /// sequential default is only reachable with `max_decode_batch() ==
+    /// 1`, where quarantine never engages.)
     fn step_batch(&mut self, gens: &mut [&mut Self::Gen]) -> Result<Vec<StepEvent>> {
         let mut out = Vec::with_capacity(gens.len());
         for g in gens.iter_mut() {
@@ -167,6 +190,59 @@ impl ReplicaEngine for ModelEngine {
     }
 }
 
+/// Why `replica_loop` returned: a clean drain (queue closed and empty,
+/// nothing in flight) or an engine poisoning that needs a rebuild.
+pub(crate) enum ReplicaExit {
+    /// Queue closed + drained; the thread can exit.
+    Drained,
+    /// A caught engine panic poisoned the engine. Every in-flight
+    /// request has been stranded (redirected or failed); the supervisor
+    /// should rebuild the engine and re-enter the loop.
+    Poisoned(String),
+}
+
+/// What a guarded engine call produced when it did not succeed.
+pub(crate) enum EngineFault {
+    /// The engine returned an ordinary error: attributed to the
+    /// request(s), engine still usable.
+    Err(anyhow::Error),
+    /// The engine panicked: the panic was caught, the engine is
+    /// poisoned, and the payload (if stringy) is preserved.
+    Panic(String),
+}
+
+impl EngineFault {
+    fn message(&self) -> String {
+        match self {
+            EngineFault::Err(e) => format!("{:#}", e),
+            EngineFault::Panic(p) => format!("engine panicked: {}", p),
+        }
+    }
+}
+
+/// Run one engine call under `catch_unwind`, folding panic and `Err`
+/// into [`EngineFault`]. `AssertUnwindSafe` is justified: after a panic
+/// the caller poisons the engine and never dispatches into it again, so
+/// broken interior state is unobservable.
+fn guard<R>(f: impl FnOnce() -> Result<R>) -> std::result::Result<R, EngineFault> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(Ok(r)) => Ok(r),
+        Ok(Err(e)) => Err(EngineFault::Err(e)),
+        Err(p) => Err(EngineFault::Panic(panic_msg(p))),
+    }
+}
+
+/// Best-effort human-readable panic payload.
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// A queued request (pool-internal).
 pub(crate) struct Job {
     pub id: u64,
@@ -175,6 +251,9 @@ pub(crate) struct Job {
     pub deadline: Option<Instant>,
     pub cancel: Arc<std::sync::atomic::AtomicBool>,
     pub events: Sender<Event>,
+    /// Times this request has been re-enqueued after a replica
+    /// poisoning; bounded by [`PoolConfig::max_request_retries`].
+    pub retries: u32,
     /// Sampled lifecycle trace (None on the untraced path — which is
     /// every request when `--trace-sample 0`).
     pub trace: Option<Box<ReqTrace>>,
@@ -184,6 +263,10 @@ pub(crate) struct Job {
 struct Active<G> {
     id: u64,
     gen: G,
+    /// The original request, kept so a stranded generation that never
+    /// streamed a token can be rebuilt into a [`Job`] and redirected to
+    /// a healthy replica.
+    req: GenRequest,
     cancel: Arc<std::sync::atomic::AtomicBool>,
     deadline: Option<Instant>,
     events: Sender<Event>,
@@ -201,8 +284,12 @@ struct Active<G> {
     spec_class: u64,
     /// Policy profile label for the per-profile latency histogram.
     profile: Option<String>,
-    /// Whether the first token was already streamed (TTFT fires once).
+    /// Whether the first token was already streamed (TTFT fires once;
+    /// also the retry gate — a partially streamed generation is never
+    /// re-run, it would duplicate tokens client-side).
     got_first_token: bool,
+    /// Retry count carried over from the job.
+    retries: u32,
     trace: Option<Box<ReqTrace>>,
 }
 
@@ -229,6 +316,14 @@ struct ReplicaMetrics {
     occ: Vec<Arc<crate::metrics::Counter>>,
     batched_steps_c: Arc<crate::metrics::Counter>,
     batched_tokens_c: Arc<crate::metrics::Counter>,
+    /// Engine panics caught by quantum isolation.
+    panics_c: Arc<crate::metrics::Counter>,
+    /// Requests re-enqueued to a peer after a poisoning.
+    retried_c: Arc<crate::metrics::Counter>,
+    /// Requests failed individually by the poison-batch quarantine.
+    quarantined_c: Arc<crate::metrics::Counter>,
+    /// Token sends that found the client receiver gone.
+    disconnects_c: Arc<crate::metrics::Counter>,
 }
 
 impl ReplicaMetrics {
@@ -257,12 +352,32 @@ impl ReplicaMetrics {
                 .collect(),
             batched_steps_c: metrics.counter("fastav_decode_batched_steps_total"),
             batched_tokens_c: metrics.counter("fastav_decode_batched_tokens_total"),
+            panics_c: metrics.counter("fastav_replica_panics_total"),
+            retried_c: metrics.counter("fastav_requests_retried_total"),
+            quarantined_c: metrics.counter("fastav_requests_quarantined_total"),
+            disconnects_c: metrics.counter("fastav_client_disconnects_total"),
         }
     }
 }
 
+/// Count one caught engine panic (replica counter + pool metric).
+fn note_panic(m: &ReplicaMetrics, rshared: &ReplicaShared) {
+    m.panics_c.inc();
+    rshared.panics.fetch_add(1, Ordering::SeqCst);
+}
+
+/// What to do with one in-flight entry after a quantum.
+enum RetireAction {
+    /// The generation emitted its final token: finish + Done event.
+    Complete,
+    /// Fail with this attributed message.
+    Fail(String),
+}
+
 /// The replica thread body: admit → step → account, until the queue is
-/// closed and drained and no generation is in flight.
+/// closed and drained and no generation is in flight
+/// ([`ReplicaExit::Drained`]) or the engine is poisoned by a caught
+/// panic ([`ReplicaExit::Poisoned`]).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn replica_loop<E: ReplicaEngine>(
     replica_id: usize,
@@ -274,7 +389,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
     metrics: &Registry,
     prefix: Option<Arc<PrefixCache>>,
     tracer: &Arc<TraceRecorder>,
-) {
+) -> ReplicaExit {
     let m = ReplicaMetrics::new(metrics, replica_id);
     if let Some(c) = prefix.clone() {
         engine.attach_prefix_cache(c, replica_id);
@@ -287,10 +402,13 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
     let mut parked: Option<Job> = None;
     let mut rate_steps = 0u64;
     let mut rate_t0 = Instant::now();
+    // Set the moment a caught panic poisons the engine; once set, the
+    // loop stops dispatching and falls through to `strand_all`.
+    let mut poison: Option<String> = None;
 
     'outer: loop {
         // ---- Admission: pull queued jobs into the step scheduler. ----
-        while admission.has_slot() {
+        while poison.is_none() && admission.has_slot() {
             // A parked (budget-deferred) job is already counted as
             // in-flight; fresh pops are counted on arrival.
             let mut counted = false;
@@ -300,7 +418,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
             } else if active.is_empty() {
                 match queue.pop_blocking() {
                     Some(j) => Some(j),
-                    None => break 'outer, // closed + drained, nothing running
+                    None => return ReplicaExit::Drained, // closed + drained, nothing running
                 }
             } else {
                 queue.try_pop_fair()
@@ -379,9 +497,9 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
             // segments (prefix lookups, mesh upload/dispatch/download).
             let begin_t0 = job.trace.as_ref().map(|t| t.now_ns());
             let (begun, begin_segs) = if job.trace.is_some() {
-                collect_segs(tracer.clock(), || engine.begin(&job.req))
+                collect_segs(tracer.clock(), || guard(|| engine.begin(&job.req)))
             } else {
-                (engine.begin(&job.req), Vec::new())
+                (guard(|| engine.begin(&job.req)), Vec::new())
             };
             match begun {
                 Ok(gen) => {
@@ -411,10 +529,12 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                         spec_class,
                         profile: job.req.profile.clone(),
                         got_first_token: false,
-                        trace: job.trace.take(),
+                        retries: job.retries,
+                        req: job.req,
+                        trace: job.trace,
                     });
                 }
-                Err(e) => {
+                Err(EngineFault::Err(e)) => {
                     if let Some(t) = job.trace.as_mut() {
                         let now = t.now_ns();
                         t.record("begin", TRACK_REQUEST, begin_t0.unwrap_or(now), now);
@@ -423,9 +543,29 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                     commit_job_trace(tracer, replica_id, &mut job, Outcome::Failed);
                     settle_job(&job, Terminal::Failed, &format!("{:#}", e), rshared, pshared, &m);
                 }
+                Err(EngineFault::Panic(p)) => {
+                    // The job itself never began — it is redirectable.
+                    // Park it so `strand_all` treats it like every other
+                    // stranded request, and poison the engine.
+                    if let Some(t) = job.trace.as_mut() {
+                        let now = t.now_ns();
+                        t.record("begin", TRACK_REQUEST, begin_t0.unwrap_or(now), now);
+                    }
+                    admission.release_prefixed(unique, charge);
+                    note_panic(&m, rshared);
+                    poison = Some(format!(
+                        "replica {}: engine panicked during begin: {}",
+                        replica_id, p
+                    ));
+                    parked = Some(job);
+                    break;
+                }
             }
         }
         m.active_g.set(active.len() as u64);
+        if poison.is_some() {
+            break 'outer;
+        }
         if active.is_empty() {
             continue; // back to the blocking pop (or retry the parked job)
         }
@@ -445,13 +585,21 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
             };
             match kind {
                 Some((kind, msg)) => {
-                    retire_at(&mut engine, &mut active, &mut sched, i, kind, msg,
-                              &mut admission, rshared, pshared, &m, tracer, replica_id);
+                    if let Some(p) = retire_at(
+                        &mut engine, &mut active, &mut sched, i, kind, msg,
+                        &mut admission, rshared, pshared, &m, tracer, replica_id, true,
+                    ) {
+                        poison = Some(p);
+                        break;
+                    }
                 }
                 None => i += 1,
             }
         }
         m.active_g.set(active.len() as u64);
+        if poison.is_some() {
+            break 'outer;
+        }
         if active.is_empty() {
             continue;
         }
@@ -478,9 +626,11 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
         let any_traced = picked.iter().any(|&i| active[i].trace.is_some());
         let q_t0 = if any_traced { Some(tracer.clock().now_ns()) } else { None };
         let (stepped, q_segs) = if any_traced {
-            collect_segs(tracer.clock(), || step_picked(&mut engine, &mut active, &picked))
+            collect_segs(tracer.clock(), || {
+                guard(|| step_picked(&mut engine, &mut active, &picked))
+            })
         } else {
-            (step_picked(&mut engine, &mut active, &picked), Vec::new())
+            (guard(|| step_picked(&mut engine, &mut active, &picked)), Vec::new())
         };
         let q_t1 = q_t0.map(|_| tracer.clock().now_ns());
 
@@ -497,105 +647,99 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                         m.batched_tokens_c.add(b as u64);
                     }
                 }
-                let mut finished: Vec<usize> = Vec::new();
-                for (&idx, ev) in picked.iter().zip(&events) {
-                    let entry = &mut active[idx];
-                    if let (Some(t0), Some(t1)) = (q_t0, q_t1) {
-                        if let Some(t) = entry.trace.as_mut() {
-                            let s = if decode_quantum {
-                                let s = t.record("decode_quantum", TRACK_REQUEST, t0, t1);
-                                t.attr_u64_on(s, "batch", picked.len() as u64);
-                                t.attr_u64_on(s, "class", entry.spec_class);
-                                s
-                            } else {
-                                let s = t.record("prefill_chunk", TRACK_REQUEST, t0, t1);
-                                if let StepEvent::Prefilled { layer } = ev {
-                                    t.attr_u64_on(s, "layer", *layer as u64);
-                                }
-                                s
-                            };
-                            t.attr_u64_on(s, "seq", sched.quantum_seq());
-                            record_segs(t, s, &q_segs);
-                        }
-                    }
-                    match ev {
-                        StepEvent::Token(t) => {
-                            let _ = entry.events.send(Event::Token(*t));
-                            if !entry.got_first_token {
-                                entry.got_first_token = true;
-                                m.ttft_hist.observe(entry.enqueued.elapsed().as_secs_f64());
-                                if let Some(tr) = entry.trace.as_mut() {
-                                    tr.mark_first_token();
-                                }
-                            }
-                            m.steps_c.inc();
-                            rshared.steps_total.fetch_add(1, Ordering::Relaxed);
-                            rate_steps += 1;
-                            if engine.is_done(&entry.gen) {
-                                finished.push(idx);
-                            }
-                        }
-                        StepEvent::Prefilled { .. } => {
-                            m.steps_c.inc();
-                            rshared.steps_total.fetch_add(1, Ordering::Relaxed);
-                            rate_steps += 1;
-                        }
-                        StepEvent::Done => finished.push(idx),
-                    }
-                }
-                // Retire completed generations back-to-front so the
-                // remaining indices stay valid.
-                for &idx in finished.iter().rev() {
-                    let mut a = active.remove(idx);
-                    sched.remove(idx);
-                    let res = engine.finish(a.gen);
-                    // End-to-end latency (submit → finish). For traced
-                    // requests the histogram observes *exactly* the
-                    // trace root's duration, so `/v1/trace/{id}` and
-                    // `fastav_generate_seconds` can never disagree.
-                    let gen_secs = match a.trace.take() {
-                        Some(t) => tracer.commit(
-                            t,
-                            replica_id,
-                            Outcome::Completed,
-                            stats_of(&res),
-                        ),
-                        None => a.enqueued.elapsed().as_secs_f64(),
-                    };
-                    m.gen_hist.observe(gen_secs);
-                    if let Some(p) = &a.profile {
-                        metrics
-                            .histogram(&labeled("fastav_generate_seconds", "profile", p))
-                            .observe(gen_secs);
-                    }
-                    m.prefill_hist.observe(res.prefill_seconds);
-                    if res.decode_steps > 0 {
-                        m.tok_hist.observe(res.decode_seconds / res.decode_steps as f64);
-                    }
-                    m.kv_peak.max(res.peak_kv_bytes as u64);
-                    m.tokens_c.add(res.tokens.len() as u64);
-                    m.prefix_tokens_c.add(res.prefix_tokens_reused as u64);
-                    m.completed_c.inc();
-                    pshared.completed.fetch_add(1, Ordering::SeqCst);
-                    rshared.completed.fetch_add(1, Ordering::SeqCst);
-                    let _ = a.events.send(Event::Done(Box::new(res)));
-                    admission.release_prefixed(a.est_bytes, a.prefix_charge);
-                    pshared.cancels.lock().unwrap().remove(&a.id);
-                    rshared.active.fetch_sub(1, Ordering::SeqCst);
-                }
+                let pairs: Vec<(usize, StepEvent)> =
+                    picked.iter().copied().zip(events).collect();
+                let finished = deliver(
+                    &engine, &mut active, &pairs, decode_quantum, picked.len(),
+                    sched.quantum_seq(), q_t0, q_t1, &q_segs, &m, rshared, &mut rate_steps,
+                );
+                let actions: Vec<(usize, RetireAction)> =
+                    finished.into_iter().map(|i| (i, RetireAction::Complete)).collect();
+                retire_set(
+                    &mut engine, &mut active, &mut sched, actions, &mut admission,
+                    rshared, pshared, &m, metrics, tracer, replica_id, &mut poison,
+                );
             }
-            Err(e) => {
-                // The fused dispatch is all-or-nothing: every generation
-                // in it fails with the same engine error.
-                let msg = format!("{:#}", e);
-                for &idx in picked.iter().rev() {
-                    retire_at(&mut engine, &mut active, &mut sched, idx,
-                              Terminal::Failed, &msg, &mut admission, rshared, pshared, &m,
-                              tracer, replica_id);
+            Err(EngineFault::Err(e)) if decode_quantum && picked.len() >= 2 => {
+                // Poison-batch quarantine: the fused dispatch is
+                // transactional (no member advanced on Err — see the
+                // `step_batch` contract), so re-step every member alone.
+                // Only the poison generation(s) fail; innocent
+                // batchmates keep token streams byte-identical to a
+                // fault-free run.
+                let batch_msg = format!("{:#}", e);
+                let mut actions: Vec<(usize, RetireAction)> = Vec::new();
+                let mut ok_pairs: Vec<(usize, StepEvent)> = Vec::new();
+                for &idx in &picked {
+                    if poison.is_some() {
+                        actions.push((idx, RetireAction::Fail(format!(
+                            "replica {} poisoned during quarantine of a failed batch ({})",
+                            replica_id, batch_msg
+                        ))));
+                        continue;
+                    }
+                    match guard(|| engine.step(&mut active[idx].gen)) {
+                        Ok(ev) => ok_pairs.push((idx, ev)),
+                        Err(EngineFault::Err(e2)) => {
+                            m.quarantined_c.inc();
+                            actions.push((idx, RetireAction::Fail(format!("{:#}", e2))));
+                        }
+                        Err(EngineFault::Panic(p)) => {
+                            note_panic(&m, rshared);
+                            m.quarantined_c.inc();
+                            let msg = format!(
+                                "replica {}: engine panicked during quarantine retry: {}",
+                                replica_id, p
+                            );
+                            actions.push((idx, RetireAction::Fail(msg.clone())));
+                            poison = Some(msg);
+                        }
+                    }
                 }
+                let q_t1 = q_t0.map(|_| tracer.clock().now_ns());
+                let finished = deliver(
+                    &engine, &mut active, &ok_pairs, true, 1,
+                    sched.quantum_seq(), q_t0, q_t1, &q_segs, &m, rshared, &mut rate_steps,
+                );
+                for i in finished {
+                    actions.push((i, RetireAction::Complete));
+                }
+                retire_set(
+                    &mut engine, &mut active, &mut sched, actions, &mut admission,
+                    rshared, pshared, &m, metrics, tracer, replica_id, &mut poison,
+                );
+            }
+            Err(EngineFault::Err(e)) => {
+                // Single-generation quantum (or an engine without fused
+                // batching): the error is attributed to the picked set
+                // as a whole.
+                let msg = format!("{:#}", e);
+                let actions: Vec<(usize, RetireAction)> =
+                    picked.iter().map(|&i| (i, RetireAction::Fail(msg.clone()))).collect();
+                retire_set(
+                    &mut engine, &mut active, &mut sched, actions, &mut admission,
+                    rshared, pshared, &m, metrics, tracer, replica_id, &mut poison,
+                );
+            }
+            Err(EngineFault::Panic(p)) => {
+                // A panic mid-dispatch leaves the engine state
+                // unknowable — do not retire the picked set here. Poison
+                // the replica and let `strand_all` treat every in-flight
+                // generation uniformly (the ones that never streamed a
+                // token are redirected to a healthy peer).
+                note_panic(&m, rshared);
+                poison = Some(format!(
+                    "replica {}: engine panicked during {}: {}",
+                    replica_id,
+                    if decode_quantum { "decode quantum" } else { "prefill chunk" },
+                    p
+                ));
             }
         }
         m.active_g.set(active.len() as u64);
+        if poison.is_some() {
+            break 'outer;
+        }
 
         // ---- Gauges: KV footprint + steps/s. ----
         let kv_now: usize = active.iter().map(|a| engine.kv_bytes(&a.gen)).sum();
@@ -615,6 +759,15 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
             rate_t0 = Instant::now();
         }
     }
+
+    // Poisoned exit: the engine is unusable. Strand every in-flight
+    // generation (and a parked job, if any) uniformly, then hand the
+    // thread back to the supervisor for an engine rebuild.
+    let msg = poison.unwrap_or_else(|| format!("replica {} poisoned", replica_id));
+    strand_all(
+        active, parked, &msg, cfg, &mut admission, rshared, pshared, &m, tracer, replica_id,
+    );
+    ReplicaExit::Poisoned(msg)
 }
 
 /// Advance the picked set by one quantum: a single step when the pick
@@ -638,6 +791,426 @@ fn step_picked<E: ReplicaEngine>(
         }
     }
     engine.step_batch(&mut gens)
+}
+
+/// Deliver one quantum's events to their requests: trace spans, token
+/// sends (flipping the cancel flag on client disconnect), TTFT, and
+/// step counters. Returns the indices whose generations finished.
+#[allow(clippy::too_many_arguments)]
+fn deliver<E: ReplicaEngine>(
+    engine: &E,
+    active: &mut [Active<E::Gen>],
+    pairs: &[(usize, StepEvent)],
+    decode_quantum: bool,
+    batch: usize,
+    seq: u64,
+    q_t0: Option<u64>,
+    q_t1: Option<u64>,
+    q_segs: &[Seg],
+    m: &ReplicaMetrics,
+    rshared: &ReplicaShared,
+    rate_steps: &mut u64,
+) -> Vec<usize> {
+    let mut finished: Vec<usize> = Vec::new();
+    for (idx, ev) in pairs {
+        let idx = *idx;
+        let entry = &mut active[idx];
+        if let (Some(t0), Some(t1)) = (q_t0, q_t1) {
+            if let Some(t) = entry.trace.as_mut() {
+                let s = if decode_quantum {
+                    let s = t.record("decode_quantum", TRACK_REQUEST, t0, t1);
+                    t.attr_u64_on(s, "batch", batch as u64);
+                    t.attr_u64_on(s, "class", entry.spec_class);
+                    s
+                } else {
+                    let s = t.record("prefill_chunk", TRACK_REQUEST, t0, t1);
+                    if let StepEvent::Prefilled { layer } = ev {
+                        t.attr_u64_on(s, "layer", *layer as u64);
+                    }
+                    s
+                };
+                t.attr_u64_on(s, "seq", seq);
+                record_segs(t, s, q_segs);
+            }
+        }
+        match ev {
+            StepEvent::Token(t) => {
+                // A failed send means the client receiver is gone: flip
+                // the cancel flag so the disconnected request stops
+                // consuming quanta within one step instead of running to
+                // its deadline. `swap` counts each disconnect once.
+                if entry.events.send(Event::Token(*t)).is_err()
+                    && !entry.cancel.swap(true, Ordering::SeqCst)
+                {
+                    m.disconnects_c.inc();
+                }
+                if !entry.got_first_token {
+                    entry.got_first_token = true;
+                    m.ttft_hist.observe(entry.enqueued.elapsed().as_secs_f64());
+                    if let Some(tr) = entry.trace.as_mut() {
+                        tr.mark_first_token();
+                    }
+                }
+                m.steps_c.inc();
+                rshared.steps_total.fetch_add(1, Ordering::Relaxed);
+                *rate_steps += 1;
+                if engine.is_done(&entry.gen) {
+                    finished.push(idx);
+                }
+            }
+            StepEvent::Prefilled { .. } => {
+                m.steps_c.inc();
+                rshared.steps_total.fetch_add(1, Ordering::Relaxed);
+                *rate_steps += 1;
+            }
+            StepEvent::Done => finished.push(idx),
+        }
+    }
+    finished
+}
+
+/// Retire a set of entries (descending-index order so positions stay
+/// valid): completions run the full result path through a *guarded*
+/// `finish`; failures go through [`retire_at`]. A panic inside `finish`
+/// sets `poison` — later entries in the same set are then settled
+/// without touching the engine.
+#[allow(clippy::too_many_arguments)]
+fn retire_set<E: ReplicaEngine>(
+    engine: &mut E,
+    active: &mut Vec<Active<E::Gen>>,
+    sched: &mut StepScheduler,
+    mut actions: Vec<(usize, RetireAction)>,
+    admission: &mut Admission,
+    rshared: &ReplicaShared,
+    pshared: &PoolShared,
+    m: &ReplicaMetrics,
+    metrics: &Registry,
+    tracer: &TraceRecorder,
+    replica_id: usize,
+    poison: &mut Option<String>,
+) {
+    actions.sort_by(|a, b| b.0.cmp(&a.0));
+    for (idx, action) in actions {
+        match action {
+            RetireAction::Complete => {
+                let mut a = active.remove(idx);
+                sched.remove(idx);
+                if poison.is_some() {
+                    // The engine died before this result could be
+                    // assembled; the tokens streamed but the final
+                    // GenerateResult is unrecoverable.
+                    if let Some(t) = a.trace.take() {
+                        tracer.commit(t, replica_id, Outcome::Failed, TraceStats::default());
+                    }
+                    settle_terminal(
+                        Terminal::Failed,
+                        &format!("replica {} poisoned before result assembly", replica_id),
+                        &a.events, rshared, pshared, m, true,
+                    );
+                    admission.release_prefixed(a.est_bytes, a.prefix_charge);
+                    lock_clean(&pshared.cancels).remove(&a.id);
+                    continue;
+                }
+                let gen = a.gen;
+                match guard(|| Ok(engine.finish(gen))) {
+                    Ok(res) => {
+                        // End-to-end latency (submit → finish). For
+                        // traced requests the histogram observes
+                        // *exactly* the trace root's duration, so
+                        // `/v1/trace/{id}` and `fastav_generate_seconds`
+                        // can never disagree.
+                        let gen_secs = match a.trace.take() {
+                            Some(t) => tracer.commit(
+                                t,
+                                replica_id,
+                                Outcome::Completed,
+                                stats_of(&res),
+                            ),
+                            None => a.enqueued.elapsed().as_secs_f64(),
+                        };
+                        m.gen_hist.observe(gen_secs);
+                        if let Some(p) = &a.profile {
+                            metrics
+                                .histogram(&labeled("fastav_generate_seconds", "profile", p))
+                                .observe(gen_secs);
+                        }
+                        m.prefill_hist.observe(res.prefill_seconds);
+                        if res.decode_steps > 0 {
+                            m.tok_hist.observe(res.decode_seconds / res.decode_steps as f64);
+                        }
+                        m.kv_peak.max(res.peak_kv_bytes as u64);
+                        m.tokens_c.add(res.tokens.len() as u64);
+                        m.prefix_tokens_c.add(res.prefix_tokens_reused as u64);
+                        m.completed_c.inc();
+                        pshared.completed.fetch_add(1, Ordering::SeqCst);
+                        rshared.completed.fetch_add(1, Ordering::SeqCst);
+                        // The receiver may be gone (disconnect): the
+                        // request is complete either way.
+                        let _ = a.events.send(Event::Done(Box::new(res)));
+                        admission.release_prefixed(a.est_bytes, a.prefix_charge);
+                        lock_clean(&pshared.cancels).remove(&a.id);
+                        rshared.active.fetch_sub(1, Ordering::SeqCst);
+                    }
+                    Err(fault) => {
+                        note_panic(m, rshared);
+                        let msg = format!(
+                            "replica {} poisoned at finish: {}",
+                            replica_id,
+                            fault.message()
+                        );
+                        if let Some(t) = a.trace.take() {
+                            tracer.commit(t, replica_id, Outcome::Failed, TraceStats::default());
+                        }
+                        settle_terminal(Terminal::Failed, &msg, &a.events, rshared, pshared, m, true);
+                        admission.release_prefixed(a.est_bytes, a.prefix_charge);
+                        lock_clean(&pshared.cancels).remove(&a.id);
+                        *poison = Some(msg);
+                    }
+                }
+            }
+            RetireAction::Fail(msg) => {
+                let engine_ok = poison.is_none();
+                if let Some(p) = retire_at(
+                    engine, active, sched, idx, Terminal::Failed, &msg, admission,
+                    rshared, pshared, m, tracer, replica_id, engine_ok,
+                ) {
+                    *poison = Some(p);
+                }
+            }
+        }
+    }
+}
+
+/// Retire in-flight entry `idx` into a terminal state: finish (guarded;
+/// skipped entirely when `engine_ok` is false) and drop its partial
+/// generation, settle counters/events, and release its admission charge.
+/// Returns a poison message if `finish` itself panicked.
+#[allow(clippy::too_many_arguments)]
+fn retire_at<E: ReplicaEngine>(
+    engine: &mut E,
+    active: &mut Vec<Active<E::Gen>>,
+    sched: &mut StepScheduler,
+    idx: usize,
+    kind: Terminal,
+    msg: &str,
+    admission: &mut Admission,
+    rshared: &ReplicaShared,
+    pshared: &PoolShared,
+    m: &ReplicaMetrics,
+    tracer: &TraceRecorder,
+    replica_id: usize,
+    engine_ok: bool,
+) -> Option<String> {
+    let mut a = active.remove(idx);
+    sched.remove(idx);
+    let mut poison = None;
+    let stats = if engine_ok {
+        let gen = a.gen;
+        match guard(|| Ok(engine.finish(gen))) {
+            Ok(res) => stats_of(&res),
+            Err(fault) => {
+                note_panic(m, rshared);
+                poison = Some(format!(
+                    "replica {} poisoned at finish: {}",
+                    replica_id,
+                    fault.message()
+                ));
+                TraceStats::default()
+            }
+        }
+    } else {
+        // Poisoned engine: drop the generation without an engine call.
+        TraceStats::default()
+    };
+    if let Some(t) = a.trace.take() {
+        let outcome = match kind {
+            Terminal::Canceled => Outcome::Canceled,
+            Terminal::Expired => Outcome::Expired,
+            Terminal::Failed => Outcome::Failed,
+        };
+        tracer.commit(t, replica_id, outcome, stats);
+    }
+    settle_terminal(kind, msg, &a.events, rshared, pshared, m, true);
+    admission.release_prefixed(a.est_bytes, a.prefix_charge);
+    lock_clean(&pshared.cancels).remove(&a.id);
+    poison
+}
+
+/// Strand every in-flight generation (plus a parked job) after a
+/// poisoning: requests that never streamed a token and still have retry
+/// budget are rebuilt into jobs and pushed to the healthiest peer
+/// (possibly this replica's own queue — it drains after the respawn);
+/// everything else fails with the attributed engine error.
+#[allow(clippy::too_many_arguments)]
+fn strand_all<G>(
+    active: Vec<Active<G>>,
+    parked: Option<Job>,
+    reason: &str,
+    cfg: &PoolConfig,
+    admission: &mut Admission,
+    rshared: &ReplicaShared,
+    pshared: &PoolShared,
+    m: &ReplicaMetrics,
+    tracer: &TraceRecorder,
+    replica_id: usize,
+) {
+    if let Some(mut job) = parked {
+        // A parked job is counted in-flight but never began — always
+        // redirect-eligible while retry budget remains.
+        if job.retries < cfg.max_request_retries {
+            job.retries += 1;
+            mark_redirect(&mut job.trace, true);
+            match push_to_peer(job, replica_id, pshared) {
+                Ok(()) => {
+                    pshared.retried.fetch_add(1, Ordering::SeqCst);
+                    m.retried_c.inc();
+                    rshared.active.fetch_sub(1, Ordering::SeqCst);
+                }
+                Err(mut j) => {
+                    commit_job_trace(tracer, replica_id, &mut j, Outcome::Failed);
+                    settle_job(
+                        &j,
+                        Terminal::Failed,
+                        &format!("{} (no replica accepted the retry)", reason),
+                        rshared, pshared, m,
+                    );
+                }
+            }
+        } else {
+            commit_job_trace(tracer, replica_id, &mut job, Outcome::Failed);
+            settle_job(
+                &job,
+                Terminal::Failed,
+                &format!("{} (retry budget exhausted)", reason),
+                rshared, pshared, m,
+            );
+        }
+    }
+    for mut a in active {
+        admission.release_prefixed(a.est_bytes, a.prefix_charge);
+        let retryable = !a.got_first_token && a.retries < cfg.max_request_retries;
+        if retryable {
+            let mut job = Job {
+                id: a.id,
+                req: a.req,
+                enqueued: a.enqueued,
+                deadline: a.deadline,
+                cancel: a.cancel,
+                events: a.events,
+                retries: a.retries + 1,
+                trace: a.trace,
+            };
+            mark_redirect(&mut job.trace, true);
+            match push_to_peer(job, replica_id, pshared) {
+                Ok(()) => {
+                    pshared.retried.fetch_add(1, Ordering::SeqCst);
+                    m.retried_c.inc();
+                    rshared.active.fetch_sub(1, Ordering::SeqCst);
+                }
+                Err(mut j) => {
+                    commit_job_trace(tracer, replica_id, &mut j, Outcome::Failed);
+                    settle_job(
+                        &j,
+                        Terminal::Failed,
+                        &format!("{} (no replica accepted the retry)", reason),
+                        rshared, pshared, m,
+                    );
+                }
+            }
+        } else {
+            let why = if a.got_first_token {
+                format!("{} (generation already streamed tokens; not retryable)", reason)
+            } else {
+                format!("{} (retry budget exhausted)", reason)
+            };
+            if let Some(t) = a.trace.take() {
+                tracer.commit(t, replica_id, Outcome::Failed, TraceStats::default());
+            }
+            settle_terminal(Terminal::Failed, &why, &a.events, rshared, pshared, m, true);
+            lock_clean(&pshared.cancels).remove(&a.id);
+        }
+    }
+    m.active_g.set(0);
+    m.kv_g.set(0);
+    rshared.kv_bytes.store(0, Ordering::Relaxed);
+}
+
+/// Settle a job popped from a dying replica's queue (`go_dead` in
+/// `serving/mod.rs`): redirect it to a peer while retry budget remains,
+/// otherwise fail it with the attributed reason. Queued jobs were never
+/// counted in `rshared.active`, so no in-flight accounting moves here —
+/// a redirected job re-enters a peer's `in_queue`, a failed one counts
+/// terminal.
+pub(crate) fn strand_queued_job(
+    mut job: Job,
+    from: usize,
+    reason: &str,
+    cfg: &PoolConfig,
+    pshared: &PoolShared,
+    metrics: &Registry,
+    tracer: &TraceRecorder,
+) {
+    if job.retries < cfg.max_request_retries {
+        job.retries += 1;
+        // The queue span is still open (the job was never popped by a
+        // replica loop) — record the redirect and keep it open for the
+        // peer to close at pop.
+        mark_redirect(&mut job.trace, false);
+        match push_to_peer(job, from, pshared) {
+            Ok(()) => {
+                pshared.retried.fetch_add(1, Ordering::SeqCst);
+                metrics.counter("fastav_requests_retried_total").inc();
+                return;
+            }
+            Err(j) => job = j,
+        }
+    }
+    if let Some(t) = job.trace.as_mut() {
+        t.end(); // close the still-open queue span
+    }
+    commit_job_trace(tracer, from, &mut job, Outcome::Failed);
+    metrics.counter("fastav_requests_failed_total").inc();
+    pshared.failed.fetch_add(1, Ordering::SeqCst);
+    let _ = job.events.send(Event::Error(reason.to_string()));
+    lock_clean(&pshared.cancels).remove(&job.id);
+}
+
+/// Push a stranded job to the best peer replica: healthy first, this
+/// replica's own queue last (it only drains after a successful respawn),
+/// least-loaded within each tier. Dead replicas' queues are closed and
+/// reject the push naturally. Lock order is slots → queue everywhere.
+fn push_to_peer(mut job: Job, from: usize, pshared: &PoolShared) -> std::result::Result<(), Job> {
+    let slots = lock_clean(&pshared.slots);
+    let mut order: Vec<usize> = (0..slots.len()).collect();
+    order.sort_by_key(|&i| {
+        (
+            slots[i].shared.health() != ReplicaHealth::Healthy,
+            i == from,
+            slots[i].queue.len() + slots[i].shared.active.load(Ordering::SeqCst),
+        )
+    });
+    let prio = job.req.priority;
+    for &i in &order {
+        match slots[i].queue.try_push(job, prio) {
+            Ok(()) => return Ok(()),
+            Err(e) => job = e.into_inner(),
+        }
+    }
+    Err(job)
+}
+
+/// Mark a redirect on a sampled trace: an instant `redirect` span, plus
+/// (for jobs whose queue span was already closed) a reopened `queue`
+/// span covering the time back in a peer's queue. One submission still
+/// commits exactly one trace — redirects extend it, never fork it.
+fn mark_redirect(trace: &mut Option<Box<ReqTrace>>, reopen_queue: bool) {
+    if let Some(t) = trace.as_mut() {
+        let now = t.now_ns();
+        t.record("redirect", TRACK_REQUEST, now, now);
+        if reopen_queue {
+            t.begin("queue");
+        }
+    }
 }
 
 /// Bytes of `est` not covered by the shared-prefix charge.
@@ -680,41 +1253,6 @@ fn commit_job_trace(
     }
 }
 
-/// Retire in-flight entry `idx` into a terminal state: drop its partial
-/// generation, settle counters/events, and release its admission charge.
-#[allow(clippy::too_many_arguments)]
-fn retire_at<E: ReplicaEngine>(
-    engine: &mut E,
-    active: &mut Vec<Active<E::Gen>>,
-    sched: &mut StepScheduler,
-    idx: usize,
-    kind: Terminal,
-    msg: &str,
-    admission: &mut Admission,
-    rshared: &ReplicaShared,
-    pshared: &PoolShared,
-    m: &ReplicaMetrics,
-    tracer: &TraceRecorder,
-    replica_id: usize,
-) {
-    let mut a = active.remove(idx);
-    sched.remove(idx);
-    let res = engine.finish(a.gen);
-    if let Some(t) = a.trace.take() {
-        let outcome = match kind {
-            Terminal::Canceled => Outcome::Canceled,
-            Terminal::Expired => Outcome::Expired,
-            Terminal::Failed => Outcome::Failed,
-        };
-        tracer.commit(t, replica_id, outcome, stats_of(&res));
-    }
-    drop(res);
-    settle_terminal(kind, msg, &a.events, rshared, pshared, m, false);
-    admission.release_prefixed(a.est_bytes, a.prefix_charge);
-    pshared.cancels.lock().unwrap().remove(&a.id);
-    rshared.active.fetch_sub(1, Ordering::SeqCst);
-}
-
 /// Account a job that never entered the step scheduler (canceled,
 /// expired, oversize, or failed at begin). The caller has already
 /// counted it in `rshared.active`.
@@ -727,7 +1265,7 @@ fn settle_job(
     m: &ReplicaMetrics,
 ) {
     settle_terminal(kind, msg, &job.events, rshared, pshared, m, true);
-    pshared.cancels.lock().unwrap().remove(&job.id);
+    lock_clean(&pshared.cancels).remove(&job.id);
 }
 
 fn settle_terminal(
@@ -753,6 +1291,8 @@ fn settle_terminal(
             pshared.failed.fetch_add(1, Ordering::SeqCst);
         }
     }
+    // The receiver may be gone (client disconnect) — terminal
+    // accounting must not depend on anyone listening.
     let _ = events.send(Event::Error(msg.to_string()));
     if decrement_active {
         rshared.active.fetch_sub(1, Ordering::SeqCst);

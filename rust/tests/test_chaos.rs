@@ -1,0 +1,602 @@
+//! Fault-domain supervision, pinned on the mock pool under the seeded
+//! chaos harness: an injected engine panic poisons (not kills) the
+//! replica, the supervisor respawns it, stranded requests redirect, and
+//! the conservation ledger balances across every injected fault. No AOT
+//! artifacts needed — everything here is deterministic and
+//! toolchain-runnable.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastav::coordinator::{Coordinator, Event, GenRequest, Priority};
+use fastav::http::{api::make_handler, request, Server};
+use fastav::metrics::Registry;
+use fastav::model::{GenerateResult, StepEvent};
+use fastav::policy::{PolicyRegistry, PruningSpec};
+use fastav::serving::{
+    ChaosEngine, FaultKind, FaultPlan, FaultRule, FaultSite, FaultState, FaultWhen,
+    PoolConfig, ReplicaEngine, ReplicaHealth, ReplicaPool, SubmitError,
+};
+use fastav::tokens::{Layout, Segment};
+use fastav::util::json::Json;
+use fastav::util::proptest::{run_prop, Gen};
+
+// ------------------------------------------------------------- helpers
+
+/// Chaos-injected panics are *expected* here: silence the default
+/// panic-hook stderr spew for replica threads (quantum isolation
+/// catches the unwind; the hook still runs first). Everything else —
+/// including real assertion failures on test threads — prints as usual.
+fn quiet_replica_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let on_replica = std::thread::current()
+                .name()
+                .is_some_and(|n| n.starts_with("replica-"));
+            if !on_replica {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// A generation that takes `prefill_left + max_gen` quanta; token
+/// values are position-dependent (`base*100 + n`) so streams can be
+/// compared byte-for-byte across runs.
+struct MockGen {
+    prefill_left: usize,
+    produced: usize,
+    total: usize,
+    kv_bytes: usize,
+    base: u32,
+}
+
+struct MockEngine {
+    step_cost: Duration,
+    prefill: usize,
+}
+
+impl MockEngine {
+    fn gen_for(&self, req: &GenRequest) -> MockGen {
+        MockGen {
+            prefill_left: self.prefill,
+            produced: 0,
+            total: req.max_gen.max(1),
+            kv_bytes: req.prompt.len() * 1000,
+            base: req.prompt.first().copied().unwrap_or(0),
+        }
+    }
+}
+
+fn mock_result(gen: &MockGen) -> GenerateResult {
+    GenerateResult {
+        tokens: (1..=gen.produced).map(|n| gen.base * 100 + n as u32).collect(),
+        prompt_len: 4,
+        flops: Default::default(),
+        relative_flops: 0.0,
+        peak_kv_bytes: gen.kv_bytes,
+        prefill_seconds: 0.0,
+        decode_seconds: 0.0,
+        decode_steps: gen.produced.saturating_sub(1),
+        live_counts: Vec::new(),
+        prefix_hit: false,
+        prefix_tokens_reused: 0,
+    }
+}
+
+impl ReplicaEngine for MockEngine {
+    type Gen = MockGen;
+
+    fn begin(&mut self, req: &GenRequest) -> anyhow::Result<MockGen> {
+        Ok(self.gen_for(req))
+    }
+
+    fn step(&mut self, gen: &mut MockGen) -> anyhow::Result<StepEvent> {
+        if !self.step_cost.is_zero() {
+            std::thread::sleep(self.step_cost);
+        }
+        if gen.prefill_left > 0 {
+            gen.prefill_left -= 1;
+            if gen.prefill_left > 0 {
+                return Ok(StepEvent::Prefilled { layer: self.prefill - gen.prefill_left });
+            }
+        }
+        if gen.produced >= gen.total {
+            return Ok(StepEvent::Done);
+        }
+        gen.produced += 1;
+        Ok(StepEvent::Token(gen.base * 100 + gen.produced as u32))
+    }
+
+    fn is_done(&self, gen: &MockGen) -> bool {
+        gen.prefill_left == 0 && gen.produced >= gen.total
+    }
+
+    fn finish(&mut self, gen: MockGen) -> GenerateResult {
+        mock_result(&gen)
+    }
+
+    fn kv_bytes(&self, gen: &MockGen) -> usize {
+        gen.kv_bytes
+    }
+
+    fn estimate_bytes(&self, req: &GenRequest) -> usize {
+        req.prompt.len() * 1000
+    }
+}
+
+fn mock_request(base: u32, max_gen: usize) -> GenRequest {
+    GenRequest {
+        prompt: vec![base, 2, 3, 4],
+        segments: vec![Segment::Ctrl, Segment::Vis, Segment::Aud, Segment::Text],
+        frame_of: vec![-1, 0, -1, -1],
+        spec: PruningSpec::off(),
+        max_gen,
+        sampling: Default::default(),
+        priority: Priority::Normal,
+        deadline: None,
+        profile: None,
+    }
+}
+
+/// Pool config tuned for tests: near-instant respawn backoff.
+fn chaos_cfg(replicas: usize) -> PoolConfig {
+    PoolConfig {
+        replicas,
+        queue_cap: 32,
+        max_inflight: 2,
+        restart_backoff: Duration::from_millis(1),
+        restart_backoff_max: Duration::from_millis(4),
+        circuit_restarts: 100,
+        circuit_window: Duration::from_secs(60),
+        ..Default::default()
+    }
+}
+
+/// Wait (bounded) for the pool to reach a quiescent, conserved state.
+fn settled_stats(pool: &ReplicaPool) -> fastav::serving::PoolStats {
+    let t0 = Instant::now();
+    loop {
+        let s = pool.stats();
+        if (s.conserved() && s.in_flight == 0 && s.in_queue == 0)
+            || t0.elapsed() > Duration::from_secs(10)
+        {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Drain a stream to its terminal event: the final token vector on
+/// `Done`, the error message on `Error`. Panics on a stall — a request
+/// that never reaches a terminal event is exactly the stranding bug
+/// this suite exists to catch.
+fn drain(rx: std::sync::mpsc::Receiver<Event>) -> Result<Vec<u32>, String> {
+    loop {
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(Event::Token(_)) => {}
+            Ok(Event::Done(res)) => return Ok(res.tokens),
+            Ok(Event::Error(e)) => return Err(e),
+            Err(e) => panic!("stream stalled (request stranded): {}", e),
+        }
+    }
+}
+
+// --------------------------------------------------------------- tests
+
+/// The acceptance scenario: a seeded panic at the first step quantum
+/// poisons the replica before any token streams. The supervisor
+/// respawns the engine, the stranded requests redirect (here: back to
+/// the same replica's still-open queue), and the *entire* workload
+/// completes — zero stranded requests, balanced ledger,
+/// `fastav_replica_restarts_total` > 0, and no admission-byte or
+/// prefix-lease leak afterwards.
+#[test]
+fn injected_panic_respawns_replica_and_completes_workload() {
+    quiet_replica_panics();
+    let state = FaultState::new(FaultPlan {
+        seed: 7,
+        rules: vec![FaultRule {
+            site: FaultSite::Step,
+            when: FaultWhen::AtCall(1),
+            kind: FaultKind::Panic,
+            max_injections: 1,
+        }],
+    });
+    let metrics = Arc::new(Registry::default());
+    // KV budget fits exactly one 4000-byte request: the Defer/parked
+    // path is exercised under the panic too.
+    let cfg = PoolConfig { kv_budget_bytes: 4000, ..chaos_cfg(1) };
+    let pool = {
+        let state = Arc::clone(&state);
+        ReplicaPool::start_with_factory(cfg, Arc::clone(&metrics), move |_r| {
+            Ok(ChaosEngine::new(
+                MockEngine { step_cost: Duration::from_micros(50), prefill: 2 },
+                Arc::clone(&state),
+            ))
+        })
+        .expect("pool starts")
+    };
+
+    let n = 5;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| pool.submit(mock_request(i as u32 + 1, 3)).expect("accepted").1)
+        .collect();
+    for rx in rxs {
+        let tokens = drain(rx).expect("request must survive the injected panic");
+        assert_eq!(tokens.len(), 3);
+    }
+
+    let stats = settled_stats(&pool);
+    assert!(stats.conserved(), "ledger out of balance: {:?}", stats);
+    assert_eq!(stats.completed, n, "{:?}", stats);
+    assert_eq!(stats.failed, 0, "{:?}", stats);
+    assert!(stats.retried >= 1, "panic must have redirected a request: {:?}", stats);
+    assert_eq!(state.panics(), 1, "exactly the seeded panic fired");
+    assert!(metrics.counter("fastav_replica_restarts_total").get() >= 1);
+    assert!(metrics.counter("fastav_replica_panics_total").get() >= 1);
+    assert!(metrics.counter("fastav_requests_retried_total").get() >= 1);
+
+    let status = pool.status();
+    assert_eq!(status[0].health, ReplicaHealth::Healthy, "replica recovered");
+    assert_eq!(status[0].restarts, 1);
+    assert_eq!(status[0].panics, 1);
+
+    // No admission-byte leak: the budget fits exactly one request, so a
+    // fresh full-budget submission only completes if every stranded
+    // generation released its charge.
+    let (_, rx) = pool.submit(mock_request(9, 2)).expect("accepted");
+    drain(rx).expect("post-chaos request must admit and complete");
+    // No prefix-lease leak (the mock never takes leases; pinned anyway).
+    assert_eq!(pool.prefix_stats().active_leases, 0);
+}
+
+/// Chaos storm: random bounded fault plans (transient errors and
+/// panics at begin/step) over random pool shapes. Every accepted
+/// request reaches exactly one terminal event and the ledger balances —
+/// the invariant holds for *all* plans, not one golden schedule.
+#[test]
+fn prop_chaos_storm_every_request_reaches_one_terminal() {
+    quiet_replica_panics();
+    run_prop("chaos_storm", 8, |g: &mut Gen| {
+        let mut rules = Vec::new();
+        for _ in 0..g.usize_in(1, 3) {
+            rules.push(FaultRule {
+                site: *g.choose(&[FaultSite::Begin, FaultSite::Step]),
+                when: FaultWhen::Every(g.usize_in(2, 7) as u64),
+                kind: if g.bool() { FaultKind::Err } else { FaultKind::Panic },
+                max_injections: g.usize_in(1, 4) as u64,
+            });
+        }
+        let state = FaultState::new(FaultPlan { seed: g.u64(), rules });
+        let cfg = PoolConfig {
+            queue_cap: g.usize_in(4, 16),
+            max_inflight: g.usize_in(1, 3),
+            ..chaos_cfg(g.usize_in(1, 3))
+        };
+        let metrics = Arc::new(Registry::default());
+        let pool = {
+            let state = Arc::clone(&state);
+            ReplicaPool::start_with_factory(cfg, Arc::clone(&metrics), move |_r| {
+                Ok(ChaosEngine::new(
+                    MockEngine { step_cost: Duration::from_micros(30), prefill: 2 },
+                    Arc::clone(&state),
+                ))
+            })
+            .expect("pool starts")
+        };
+        let n = g.usize_in(5, 25);
+        let mut accepted = Vec::new();
+        let mut rejected = 0u64;
+        for i in 0..n {
+            match pool.submit(mock_request(i as u32 + 1, g.usize_in(1, 5))) {
+                Ok((_, rx)) => accepted.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        let mut terminal = 0u64;
+        for rx in accepted {
+            let _ = drain(rx); // Done and Error both count; a stall panics
+            terminal += 1;
+        }
+        let stats = settled_stats(&pool);
+        assert!(stats.conserved(), "not conserved: {:?}", stats);
+        assert_eq!(stats.submitted, n as u64);
+        assert_eq!(stats.rejected, rejected);
+        assert_eq!(stats.terminal(), terminal);
+        assert_eq!(pool.prefix_stats().active_leases, 0, "lease leak");
+    });
+}
+
+// ---- poison-batch quarantine ----------------------------------------
+
+/// Fused-batching mock: decode-ready from `begin` (no prefill), batch
+/// width 8, and — when armed — a *transactional* failure whenever the
+/// poison member (prompt base 99) is about to take its third token:
+/// the fused dispatch errors before advancing anyone, and the solo
+/// quarantine re-step of that member errors too. `begin` gates on `go`
+/// so every submission is admitted before the first quantum (the first
+/// pick is one fused batch of all four).
+struct BatchMock {
+    poison_armed: bool,
+    go: Arc<AtomicBool>,
+}
+
+const POISON_BASE: u32 = 99;
+
+impl BatchMock {
+    fn poisoned_now(&self, gen: &MockGen) -> bool {
+        self.poison_armed && gen.base == POISON_BASE && gen.produced == 2
+    }
+}
+
+impl ReplicaEngine for BatchMock {
+    type Gen = MockGen;
+
+    fn begin(&mut self, req: &GenRequest) -> anyhow::Result<MockGen> {
+        while !self.go.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        Ok(MockGen {
+            prefill_left: 0,
+            produced: 0,
+            total: req.max_gen.max(1),
+            kv_bytes: req.prompt.len() * 1000,
+            base: req.prompt.first().copied().unwrap_or(0),
+        })
+    }
+
+    fn step(&mut self, gen: &mut MockGen) -> anyhow::Result<StepEvent> {
+        if self.poisoned_now(gen) {
+            anyhow::bail!("poison generation rejected by the kernel");
+        }
+        if gen.produced >= gen.total {
+            return Ok(StepEvent::Done);
+        }
+        gen.produced += 1;
+        Ok(StepEvent::Token(gen.base * 100 + gen.produced as u32))
+    }
+
+    fn is_decoding(&self, gen: &MockGen) -> bool {
+        !self.is_done(gen)
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        8
+    }
+
+    fn step_batch(&mut self, gens: &mut [&mut MockGen]) -> anyhow::Result<Vec<StepEvent>> {
+        // Transactional: validate the whole batch before advancing any
+        // member (the `step_batch` contract quarantine relies on).
+        if gens.iter().any(|g| self.poisoned_now(g)) {
+            anyhow::bail!("fused decode dispatch failed (bad member)");
+        }
+        let mut out = Vec::with_capacity(gens.len());
+        for g in gens.iter_mut() {
+            out.push(self.step(g)?);
+        }
+        Ok(out)
+    }
+
+    fn is_done(&self, gen: &MockGen) -> bool {
+        gen.produced >= gen.total
+    }
+
+    fn finish(&mut self, gen: MockGen) -> GenerateResult {
+        mock_result(&gen)
+    }
+
+    fn kv_bytes(&self, gen: &MockGen) -> usize {
+        gen.kv_bytes
+    }
+
+    fn estimate_bytes(&self, req: &GenRequest) -> usize {
+        req.prompt.len() * 1000
+    }
+}
+
+/// Run four requests (bases `1, 2, 3, 99`) through a one-replica fused
+/// pool; returns each stream's terminal, by base.
+fn batch_run(poison_armed: bool) -> (Vec<(u32, Result<Vec<u32>, String>)>, Arc<Registry>) {
+    let metrics = Arc::new(Registry::default());
+    let outcomes = {
+        let metrics = Arc::clone(&metrics);
+        let go = Arc::new(AtomicBool::new(false));
+        let pool = ReplicaPool::start_with_factory(
+            PoolConfig { max_inflight: 4, ..chaos_cfg(1) },
+            metrics,
+            {
+                let go = Arc::clone(&go);
+                move |_r| Ok(BatchMock { poison_armed, go: Arc::clone(&go) })
+            },
+        )
+        .expect("pool starts");
+        let rxs: Vec<_> = [1u32, 2, 3, POISON_BASE]
+            .iter()
+            .map(|&b| (b, pool.submit(mock_request(b, 8)).expect("accepted").1))
+            .collect();
+        go.store(true, Ordering::SeqCst);
+        let outcomes: Vec<_> = rxs.into_iter().map(|(b, rx)| (b, drain(rx))).collect();
+        let stats = settled_stats(&pool);
+        assert!(stats.conserved(), "{:?}", stats);
+        assert_eq!(pool.status()[0].restarts, 0, "quarantine must not respawn");
+        outcomes
+    };
+    (outcomes, metrics)
+}
+
+/// A poison member inside a fused decode batch fails alone; its three
+/// innocent batchmates complete with token streams byte-identical to a
+/// fault-free control run, and the engine is never respawned.
+#[test]
+fn poison_batch_quarantine_fails_only_the_poison_member() {
+    quiet_replica_panics();
+    let (chaos, metrics) = batch_run(true);
+    let (control, _) = batch_run(false);
+
+    let failed: Vec<u32> =
+        chaos.iter().filter(|(_, r)| r.is_err()).map(|(b, _)| *b).collect();
+    assert_eq!(failed, vec![POISON_BASE], "exactly the poison member fails");
+    let err = chaos.iter().find(|(b, _)| *b == POISON_BASE).unwrap().1.clone();
+    assert!(
+        err.unwrap_err().contains("poison generation"),
+        "failure must carry the attributed engine error"
+    );
+    for (base, result) in &chaos {
+        if *base == POISON_BASE {
+            continue;
+        }
+        let mine = result.as_ref().expect("innocent batchmate completes");
+        let control_tokens = control
+            .iter()
+            .find(|(b, _)| b == base)
+            .and_then(|(_, r)| r.as_ref().ok())
+            .expect("control run completes everything");
+        assert_eq!(
+            mine, control_tokens,
+            "batchmate {} diverged from the fault-free run",
+            base
+        );
+    }
+    assert!(
+        metrics.counter("fastav_requests_quarantined_total").get() >= 1,
+        "quarantine path must have engaged"
+    );
+    assert_eq!(metrics.counter("fastav_replica_restarts_total").get(), 0);
+}
+
+// ---- circuit breaker / readiness ------------------------------------
+
+fn test_registry() -> Arc<PolicyRegistry> {
+    let calib = fastav::calibration::Calibration {
+        model: "tiny".into(),
+        samples: 8,
+        threshold: 0.01,
+        vis_cutoff: 5,
+        keep_audio: 2,
+        keep_frames: 0,
+        budget: 6,
+        profile: Vec::new(),
+    };
+    Arc::new(PolicyRegistry::builtin(&calib, 20.0))
+}
+
+fn layout() -> Layout {
+    Layout { frames: 2, vis_per_frame: 4, aud_len: 6, aud_per_frame: 3, interleaved: false }
+}
+
+/// Unrecoverable replicas trip the circuit breaker into `Dead`; with
+/// every replica dead, `submit` returns `SubmitError::Closed`
+/// immediately (never hangs) and `GET /v1/health` flips from
+/// `200 "ok"` to `503 "unavailable"`.
+#[test]
+fn all_replicas_dead_rejects_submits_and_reports_503() {
+    quiet_replica_panics();
+    let state = FaultState::new(FaultPlan {
+        seed: 3,
+        rules: vec![FaultRule {
+            site: FaultSite::Begin,
+            when: FaultWhen::Every(1),
+            kind: FaultKind::Panic,
+            max_injections: 0, // unlimited: the engine never recovers
+        }],
+    });
+    let cfg = PoolConfig { circuit_restarts: 1, ..chaos_cfg(2) };
+    let metrics = Arc::new(Registry::default());
+    let pool = {
+        let state = Arc::clone(&state);
+        ReplicaPool::start_with_factory(cfg, Arc::clone(&metrics), move |_r| {
+            Ok(ChaosEngine::new(
+                MockEngine { step_cost: Duration::ZERO, prefill: 1 },
+                Arc::clone(&state),
+            ))
+        })
+        .expect("pool starts")
+    };
+    let coord = Arc::new(Coordinator::from_pool(pool));
+    let handler = make_handler(Arc::clone(&coord), layout(), test_registry(), 3, 1);
+    let server = Server::bind("127.0.0.1:0", 1, handler).unwrap();
+    let addr = server.local_addr().to_string();
+    let stop = server.shutdown_handle();
+    let http = std::thread::spawn(move || server.serve());
+
+    // Fresh pool: both replicas healthy, readiness is 200 "ok".
+    let (code, body) = request(&addr, "GET", "/v1/health", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("status").as_str(), Some("ok"));
+    assert_eq!(j.get("healthy").as_usize(), Some(2));
+
+    // Feed the pool until every begin-panic has tripped both breakers.
+    let t0 = Instant::now();
+    while !coord.all_dead() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "breakers never tripped");
+        match coord.submit_with_id(mock_request(1, 2)) {
+            Ok((_, rx)) => {
+                let _ = drain(rx); // must reach a terminal event regardless
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+
+    // Dead pool: routing is closed, not hanging.
+    match coord.submit_with_id(mock_request(1, 2)) {
+        Err(SubmitError::Closed(_)) => {}
+        Ok(_) => panic!("submit accepted by an all-dead pool"),
+        Err(e) => panic!("expected Closed, got {:?}", e),
+    }
+    assert_eq!(coord.healthy_count(), 0);
+    let stats = coord.pool_stats();
+    assert!(stats.conserved(), "{:?}", stats);
+
+    // Readiness flips to 503 "unavailable" — and only now.
+    let (code, body) = request(&addr, "GET", "/v1/health", b"").unwrap();
+    assert_eq!(code, 503);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("status").as_str(), Some("unavailable"));
+    assert_eq!(j.get("dead").as_usize(), Some(2));
+
+    // `/v1/pool` carries the supervision census + per-replica health.
+    let (code, body) = request(&addr, "GET", "/v1/pool", b"").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("supervision").get("dead").as_usize(), Some(2));
+    assert!(j.get("supervision").get("panics_total").as_f64().unwrap() >= 2.0);
+    for r in j.get("replicas").as_arr().unwrap() {
+        assert_eq!(r.get("health").as_str(), Some("dead"));
+    }
+
+    stop.store(true, Ordering::SeqCst);
+    let _ = http.join();
+}
+
+// ---- client disconnect ----------------------------------------------
+
+/// Dropping the event receiver mid-stream sets the request's cancel
+/// flag within one quantum: the disconnected client stops burning
+/// engine steps instead of decoding to its generation cap.
+#[test]
+fn client_disconnect_cancels_within_a_step() {
+    quiet_replica_panics();
+    let metrics = Arc::new(Registry::default());
+    let pool = ReplicaPool::start_with_factory(
+        chaos_cfg(1),
+        Arc::clone(&metrics),
+        |_r| Ok(MockEngine { step_cost: Duration::from_micros(100), prefill: 1 }),
+    )
+    .expect("pool starts");
+    let (_, rx) = pool.submit(mock_request(1, 50_000)).expect("accepted");
+    // Wait for the stream to start, then walk away.
+    match rx.recv_timeout(Duration::from_secs(10)).expect("first token") {
+        Event::Token(_) => {}
+        other => panic!("expected a token first, got {:?}", other),
+    }
+    drop(rx);
+    let stats = settled_stats(&pool);
+    assert_eq!(stats.canceled, 1, "{:?}", stats);
+    assert!(stats.conserved(), "{:?}", stats);
+    assert_eq!(metrics.counter("fastav_client_disconnects_total").get(), 1);
+}
