@@ -326,9 +326,16 @@ fn latency_summary(coord: &Coordinator) -> Json {
             ]));
         }
     }
+    // Mesh pipeline health (traced quanta only): per-shard dispatch
+    // latency and the fraction of KV-upload time hidden under an
+    // in-flight dispatch (gauge stored in permille).
+    let dispatch = coord.metrics.histogram("fastav_mesh_dispatch_seconds");
+    let overlap = coord.metrics.gauge("fastav_upload_overlap_ratio").get();
     Json::obj(vec![
         ("ttft", hist_summary(&ttft)),
         ("generate", hist_summary(&gen)),
+        ("mesh_dispatch", hist_summary(&dispatch)),
+        ("upload_overlap_ratio", Json::num(overlap as f64 / 1000.0)),
         ("per_profile", Json::arr(per_profile)),
     ])
 }

@@ -1,0 +1,342 @@
+//! Stateful batched-decode upload buffers: remember what each `[H, cap,
+//! dh]` batch row holds so the next quantum's gather can skip work.
+//!
+//! The stateless [`LayerCache::padded_kv_batch_into`] re-gathers every
+//! live row and re-zeroes the full padding region on every call. During
+//! steady-state decode that is almost all waste: a generation's block
+//! list changes by exactly one appended row per step, and the batch
+//! composition is stable for quanta at a time. A [`GatherBuf`] tracks,
+//! per batch row, *which cache at which epoch and length* it gathered
+//! last time:
+//!
+//! * same cache ([`LayerCache::id`]), same row-stability epoch
+//!   ([`LayerCache::epoch`]), longer-or-equal length → **delta-append**:
+//!   copy only the new tail rows ([`LayerCache::padded_kv_fill_tail`]),
+//!   typically one row per head per step;
+//! * anything else → full re-gather, but zeroing only the extent the
+//!   previous occupant actually wrote
+//!   ([`LayerCache::padded_kv_fill_ext`]) instead of the whole slice.
+//!
+//! Validity is airtight because the (`id`, `epoch`) tuple changes on
+//! exactly the operations that could invalidate previously-gathered
+//! rows: `compact` moves rows (epoch bump), `clone` can diverge through
+//! copy-on-write (fresh id), while `append`/`grow`/COW tail forks
+//! preserve the live prefix byte-for-byte (no change). The capacity and
+//! head geometry are part of the buffer's own state: any restride marks
+//! every row stale. Equivalence with the stateless gather is
+//! property-tested below against random append/compact/grow/clone/
+//! batch-shuffle sequences.
+
+use super::LayerCache;
+
+/// What one `[H, cap, dh]` batch row of the buffer currently holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RowFill {
+    /// Unknown contents (fresh slice, or the buffer was restrided):
+    /// must be fully rewritten, zeroing the whole row band.
+    Stale,
+    /// All-zero padding row from the previous fill.
+    Zero,
+    /// Gathered from cache `id` at row-stability `epoch`, with rows
+    /// `0..len` live (and `len..` zero).
+    Cache { id: u64, epoch: u64, len: usize },
+}
+
+/// Per-fill accounting: how many batch rows took the cheap delta path
+/// vs a full re-gather (surfaced by the mesh-overhead bench).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct GatherStats {
+    pub delta_rows: usize,
+    pub full_rows: usize,
+}
+
+/// A persistent `[rows, H, cap, dh]` upload buffer pair with per-row
+/// validity tracking. One per layer in the pipelined engine (the row
+/// state is only reusable if the same layer's caches land in the same
+/// buffer every quantum). High-water sized, never shrunk.
+#[derive(Debug, Default)]
+pub struct GatherBuf {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    cap: usize,
+    n_heads: usize,
+    d_head: usize,
+    rows: Vec<RowFill>,
+}
+
+impl GatherBuf {
+    pub fn new() -> GatherBuf {
+        GatherBuf::default()
+    }
+
+    /// The gathered K slab; only the first `rows * H * cap * dh`
+    /// elements of the most recent [`Self::fill`] are meaningful.
+    pub fn k(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Drop all validity state (the buffers stay allocated). The next
+    /// fill re-gathers everything — used when the pipelined path is
+    /// switched off/on at runtime so stale state can never leak across.
+    pub fn invalidate(&mut self) {
+        for r in self.rows.iter_mut() {
+            *r = RowFill::Stale;
+        }
+    }
+
+    /// Gather `caches[b]` into batch row `b` at joint capacity `cap`
+    /// (rows `caches.len()..rows` are padding and read zero), exactly
+    /// like [`LayerCache::padded_kv_batch_into`] — but reusing whatever
+    /// this buffer already holds from the previous fill.
+    pub fn fill(&mut self, caches: &[&LayerCache], rows: usize, cap: usize) -> GatherStats {
+        let mut stats = GatherStats::default();
+        assert!(caches.len() <= rows, "{} caches > {} batch rows", caches.len(), rows);
+        let Some(first) = caches.first() else {
+            assert_eq!(rows, 0, "empty batch cannot have padding rows");
+            return stats;
+        };
+        let (h_n, dh) = (first.n_heads, first.d_head);
+        if (self.cap, self.n_heads, self.d_head) != (cap, h_n, dh) {
+            // Restride: every existing row's layout is wrong now.
+            self.invalidate();
+            self.cap = cap;
+            self.n_heads = h_n;
+            self.d_head = dh;
+        }
+        let per = h_n * cap * dh;
+        let elems = per * rows;
+        if self.k.len() < elems {
+            self.k.resize(elems, 0.0);
+            self.v.resize(elems, 0.0);
+        }
+        // New batch rows may land on bytes an earlier, larger config
+        // wrote (high-water buffers): conservatively stale.
+        if self.rows.len() < rows {
+            self.rows.resize(rows, RowFill::Stale);
+        }
+        for b in 0..rows {
+            let prev = self.rows[b];
+            let ks = &mut self.k[b * per..(b + 1) * per];
+            let vs = &mut self.v[b * per..(b + 1) * per];
+            if let Some(c) = caches.get(b) {
+                assert_eq!(
+                    (c.n_heads, c.d_head),
+                    (h_n, dh),
+                    "batch caches must share one head geometry"
+                );
+                match prev {
+                    RowFill::Cache { id, epoch, len }
+                        if id == c.id() && epoch == c.epoch() && len <= c.len() =>
+                    {
+                        c.padded_kv_fill_tail(cap, len, ks, vs);
+                        stats.delta_rows += 1;
+                    }
+                    _ => {
+                        let prev_rows = match prev {
+                            RowFill::Zero => 0,
+                            RowFill::Stale => cap,
+                            RowFill::Cache { len, .. } => len,
+                        };
+                        c.padded_kv_fill_ext(cap, ks, vs, prev_rows);
+                        stats.full_rows += 1;
+                    }
+                }
+                self.rows[b] = RowFill::Cache { id: c.id(), epoch: c.epoch(), len: c.len() };
+            } else {
+                // Padding row: zero only what the previous occupant wrote.
+                match prev {
+                    RowFill::Zero => {}
+                    RowFill::Stale => {
+                        ks.fill(0.0);
+                        vs.fill(0.0);
+                    }
+                    RowFill::Cache { len, .. } => {
+                        for h in 0..h_n {
+                            let base = h * cap * dh;
+                            ks[base..base + len * dh].fill(0.0);
+                            vs[base..base + len * dh].fill(0.0);
+                        }
+                    }
+                }
+                self.rows[b] = RowFill::Zero;
+            }
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{BlockPool, BLOCK_TOKENS};
+    use crate::util::proptest::{run_prop, Gen};
+
+    fn rand_row(g: &mut Gen, w: usize, tag: f32) -> Vec<f32> {
+        (0..w).map(|_| tag + (g.f64_unit() as f32)).collect()
+    }
+
+    /// Reference oracle: the stateless batch gather into fresh buffers.
+    fn oracle(caches: &[&LayerCache], rows: usize, cap: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        LayerCache::padded_kv_batch_into(caches, rows, cap, &mut k, &mut v);
+        (k, v)
+    }
+
+    #[test]
+    fn delta_fill_matches_stateless_gather_under_random_mutation() {
+        // The core delta-append validity property: across arbitrary
+        // interleavings of append / compact / grow / clone-swap /
+        // batch reshuffles / cap changes, a persistent GatherBuf must
+        // produce byte-identical upload slabs to a fresh stateless
+        // gather every single quantum.
+        run_prop("gatherbuf_matches_stateless", 40, |g| {
+            let pool = BlockPool::new();
+            let (h_n, dh) = (g.usize_in(1, 3), g.usize_in(1, 4));
+            let w = h_n * dh;
+            let mut caps = vec![2 * BLOCK_TOKENS, 4 * BLOCK_TOKENS];
+            let mut caches: Vec<LayerCache> = (0..g.usize_in(2, 4))
+                .map(|i| {
+                    let mut c = LayerCache::new_in(pool.clone(), h_n, dh, caps[0]);
+                    for r in 0..g.usize_in(1, BLOCK_TOKENS + 4) {
+                        let k = rand_row(g, w, (i * 100 + r) as f32);
+                        let v = rand_row(g, w, -((i * 100 + r) as f32));
+                        c.append(&k, &v, r as i32);
+                    }
+                    c
+                })
+                .collect();
+            let mut buf = GatherBuf::new();
+            for _step in 0..12 {
+                // Mutate a random cache with a random operation.
+                let ci = g.usize_in(0, caches.len() - 1);
+                match g.usize_in(0, 4) {
+                    0 => {
+                        let c = &mut caches[ci];
+                        if c.len() < c.cap() {
+                            let pos = c.len() as i32;
+                            let k = rand_row(g, w, 7_000.0 + pos as f32);
+                            let v = rand_row(g, w, -7_000.0 - pos as f32);
+                            c.append(&k, &v, pos);
+                        }
+                    }
+                    1 => {
+                        let c = &mut caches[ci];
+                        if c.len() > 1 {
+                            let keep: Vec<usize> =
+                                (0..c.len()).filter(|_| g.f64_unit() < 0.7).collect();
+                            if !keep.is_empty() {
+                                c.compact(&keep);
+                            }
+                        }
+                    }
+                    2 => {
+                        let c = &mut caches[ci];
+                        let cur = c.cap();
+                        c.grow(cur + BLOCK_TOKENS);
+                        caps.push(cur + BLOCK_TOKENS);
+                    }
+                    3 => {
+                        // Replace with a clone that then diverges: the
+                        // fresh id must force a full re-gather.
+                        let mut c = caches[ci].clone();
+                        if c.len() > 1 {
+                            let keep: Vec<usize> = (0..c.len() - 1).collect();
+                            c.compact(&keep);
+                        }
+                        caches[ci] = c;
+                    }
+                    _ => {} // no mutation this step (pure re-gather)
+                }
+                // Random batch composition + joint cap each quantum.
+                let n_live = g.usize_in(1, caches.len());
+                let rows = n_live + g.usize_in(0, 2);
+                let need = caches[..n_live].iter().map(|c| c.len()).max().unwrap();
+                let cap = caps
+                    .iter()
+                    .copied()
+                    .filter(|&c| c >= need)
+                    .min()
+                    .unwrap_or(need)
+                    .max(need);
+                for c in caches[..n_live].iter_mut() {
+                    if c.cap() < cap {
+                        c.grow(cap);
+                    }
+                }
+                let refs: Vec<&LayerCache> = caches[..n_live].iter().collect();
+                buf.fill(&refs, rows, cap);
+                let (ko, vo) = oracle(&refs, rows, cap);
+                let per = h_n * cap * dh;
+                assert_eq!(
+                    &buf.k()[..rows * per],
+                    &ko[..],
+                    "K slab diverged from the stateless gather"
+                );
+                assert_eq!(&buf.v()[..rows * per], &vo[..], "V slab diverged");
+            }
+        });
+    }
+
+    #[test]
+    fn steady_state_decode_takes_the_delta_path() {
+        let pool = BlockPool::new();
+        let (h_n, dh) = (2, 3);
+        let cap = 2 * BLOCK_TOKENS;
+        let mut a = LayerCache::new_in(pool.clone(), h_n, dh, cap);
+        let mut b = LayerCache::new_in(pool.clone(), h_n, dh, cap);
+        for i in 0..5 {
+            a.append(&[i as f32; 6], &[-(i as f32); 6], i as i32);
+            b.append(&[10.0 + i as f32; 6], &[-10.0 - (i as f32); 6], i as i32);
+        }
+        let mut buf = GatherBuf::new();
+        let s0 = buf.fill(&[&a, &b], 3, cap);
+        assert_eq!((s0.delta_rows, s0.full_rows), (0, 2), "first fill is all full gathers");
+        // One appended row per generation: both rows go delta.
+        a.append(&[99.0; 6], &[-99.0; 6], 5);
+        b.append(&[88.0; 6], &[-88.0; 6], 5);
+        let s1 = buf.fill(&[&a, &b], 3, cap);
+        assert_eq!((s1.delta_rows, s1.full_rows), (2, 0), "steady state must delta");
+        // A compaction invalidates exactly that generation's row.
+        a.compact(&[0, 2, 4]);
+        let s2 = buf.fill(&[&a, &b], 3, cap);
+        assert_eq!((s2.delta_rows, s2.full_rows), (1, 1));
+        // Unchanged batch: zero-row deltas, still correct.
+        let s3 = buf.fill(&[&a, &b], 3, cap);
+        assert_eq!((s3.delta_rows, s3.full_rows), (2, 0));
+        let (ko, vo) = {
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            LayerCache::padded_kv_batch_into(&[&a, &b], 3, cap, &mut k, &mut v);
+            (k, v)
+        };
+        let per = h_n * cap * dh;
+        assert_eq!(&buf.k()[..3 * per], &ko[..]);
+        assert_eq!(&buf.v()[..3 * per], &vo[..]);
+    }
+
+    #[test]
+    fn shrinking_batch_zeroes_vacated_rows() {
+        let pool = BlockPool::new();
+        let cap = BLOCK_TOKENS;
+        let mut a = LayerCache::new_in(pool.clone(), 1, 2, cap);
+        let mut b = LayerCache::new_in(pool.clone(), 1, 2, cap);
+        for i in 0..4 {
+            a.append(&[1.0 + i as f32; 2], &[-1.0; 2], i as i32);
+            b.append(&[5.0 + i as f32; 2], &[-5.0; 2], i as i32);
+        }
+        let mut buf = GatherBuf::new();
+        buf.fill(&[&a, &b], 2, cap);
+        // b leaves the batch; its old row must read zero again.
+        buf.fill(&[&a], 2, cap);
+        let per = cap * 2;
+        assert!(buf.k()[per..2 * per].iter().all(|&x| x == 0.0), "vacated row re-zeroed");
+        assert!(buf.v()[per..2 * per].iter().all(|&x| x == 0.0));
+        let (ko, _) = oracle(&[&a], 2, cap);
+        assert_eq!(&buf.k()[..2 * per], &ko[..]);
+    }
+}

@@ -29,12 +29,25 @@
 //!   as `[H, cap, dh]` row-major f32 — the artifact ABI is unchanged.
 
 pub mod block;
+pub mod gather;
 pub mod prefix;
 
 pub use block::{block_bytes, BlockPool, BlockPoolStats, BLOCK_TOKENS};
+pub use gather::{GatherBuf, GatherStats};
 pub use prefix::{
     PerConfigPrefixStats, PrefixCache, PrefixCacheStats, PrefixEntry, PrefixLease,
 };
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide cache-identity counter for delta-upload validity
+/// tracking (see [`LayerCache::id`]). Never reused; a u64 cannot wrap
+/// in practice.
+static NEXT_CACHE_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_cache_id() -> u64 {
+    NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed)
+}
 
 /// KV cache for one transformer layer: a refcounted block list plus the
 /// live length, logical capacity, and original token positions.
@@ -47,6 +60,16 @@ pub struct LayerCache {
     blocks: Vec<usize>,
     positions: Vec<i32>,
     pool: BlockPool,
+    /// Unique identity for upload-buffer validity tracking. Fresh on
+    /// construction *and on clone*: a clone shares blocks but can
+    /// diverge through copy-on-write, so it must never pass for the
+    /// cache a [`GatherBuf`] row was gathered from.
+    id: u64,
+    /// Bumped whenever existing rows move or change ([`Self::compact`]).
+    /// `append` and `grow` preserve the live prefix rows byte-for-byte
+    /// and do NOT bump — that is exactly what makes delta-append uploads
+    /// (copy only rows past the previous fill) valid.
+    epoch: u64,
 }
 
 impl Clone for LayerCache {
@@ -63,6 +86,8 @@ impl Clone for LayerCache {
             blocks: self.blocks.clone(),
             positions: self.positions.clone(),
             pool: self.pool.clone(),
+            id: next_cache_id(),
+            epoch: self.epoch,
         }
     }
 }
@@ -93,6 +118,8 @@ impl LayerCache {
             blocks: Vec::new(),
             positions: Vec::with_capacity(cap.min(1024)),
             pool,
+            id: next_cache_id(),
+            epoch: 0,
         }
     }
 
@@ -180,6 +207,21 @@ impl LayerCache {
 
     pub fn positions(&self) -> &[i32] {
         &self.positions
+    }
+
+    /// Unique cache identity: never shared between two live caches
+    /// (cloning mints a new one). Together with [`Self::epoch`] and the
+    /// live length, this is the validity tuple a [`GatherBuf`] row
+    /// stores to decide whether a delta-append copy (new tail rows
+    /// only) can replace a full re-gather.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Row-stability epoch: bumped by [`Self::compact`] (rows move),
+    /// preserved by `append`/`grow` (the live prefix is untouched).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// The pool this cache allocates from.
@@ -275,12 +317,39 @@ impl LayerCache {
     /// written at one *joint* capacity regardless of each cache's own
     /// logical `cap`.
     pub fn padded_kv_fill(&self, cap: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        self.padded_kv_fill_ext(cap, k_out, v_out, cap);
+    }
+
+    /// [`Self::padded_kv_fill`] with an explicit previous fill extent:
+    /// only slots `len..min(prev_rows, cap)` are zeroed (everything the
+    /// last occupant of these slices could have written), and slots
+    /// beyond `prev_rows` are trusted to already read zero. With
+    /// `prev_rows == cap` this is exactly the stateless fill; with the
+    /// extent tracked per buffer row (see [`GatherBuf`]) it skips the
+    /// redundant re-zero of never-occupied padding that the old
+    /// full-buffer `fill(0.0)` paid on every call.
+    pub fn padded_kv_fill_ext(
+        &self,
+        cap: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        prev_rows: usize,
+    ) {
         let (h_n, dh, w) = (self.n_heads, self.d_head, self.row_elems());
         assert!(cap >= self.len, "fill cap {} below live length {}", cap, self.len);
         assert_eq!(k_out.len(), h_n * cap * dh);
         assert_eq!(v_out.len(), h_n * cap * dh);
-        k_out.fill(0.0);
-        v_out.fill(0.0);
+        // Zero only the potentially-stale padding band: live rows are
+        // fully overwritten by the copy below, and rows past prev_rows
+        // were never written by the previous occupant.
+        let stale_to = prev_rows.min(cap);
+        if stale_to > self.len {
+            for h in 0..h_n {
+                let base = h * cap * dh;
+                k_out[base + self.len * dh..base + stale_to * dh].fill(0.0);
+                v_out[base + self.len * dh..base + stale_to * dh].fill(0.0);
+            }
+        }
         for (bi, &id) in self.blocks.iter().enumerate() {
             let base_tok = bi * BLOCK_TOKENS;
             let rows = BLOCK_TOKENS.min(self.len.saturating_sub(base_tok));
@@ -301,12 +370,62 @@ impl LayerCache {
         }
     }
 
+    /// Delta-append copy: write only rows `from..len` into an upload
+    /// slice pair that already holds this cache's rows `0..from` (and
+    /// zero padding) at the same `cap` — the per-step decode case where
+    /// the block list is unchanged except newly appended rows. The
+    /// caller proves validity with the ([`Self::id`], [`Self::epoch`])
+    /// tuple; [`GatherBuf::fill`] is the checked entry point.
+    pub fn padded_kv_fill_tail(
+        &self,
+        cap: usize,
+        from: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        let (h_n, dh, w) = (self.n_heads, self.d_head, self.row_elems());
+        assert!(from <= self.len, "tail from {} past live length {}", from, self.len);
+        assert!(cap >= self.len, "fill cap {} below live length {}", cap, self.len);
+        assert_eq!(k_out.len(), h_n * cap * dh);
+        assert_eq!(v_out.len(), h_n * cap * dh);
+        for (bi, &id) in self.blocks.iter().enumerate() {
+            let base_tok = bi * BLOCK_TOKENS;
+            let rows = BLOCK_TOKENS.min(self.len.saturating_sub(base_tok));
+            if rows == 0 {
+                break;
+            }
+            if base_tok + rows <= from {
+                continue; // block entirely within the already-uploaded prefix
+            }
+            let start = from.saturating_sub(base_tok);
+            self.pool.with_kv(id, |k, v| {
+                for s in start..rows {
+                    let tok = base_tok + s;
+                    for h in 0..h_n {
+                        let src = s * w + h * dh;
+                        let dst = h * cap * dh + tok * dh;
+                        k_out[dst..dst + dh].copy_from_slice(&k[src..src + dh]);
+                        v_out[dst..dst + dh].copy_from_slice(&v[src..src + dh]);
+                    }
+                }
+            });
+        }
+    }
+
     /// Materialize a whole decode batch in one pass: `caches[b]`'s block
     /// list lands at row `b` of a `[rows, H, cap, dh]` upload pair, each
     /// at the joint capacity `cap`; rows beyond `caches.len()` (batch
     /// padding slots) are zeroed. No per-request slabs are allocated —
     /// the buffers grow to the high-water mark and are reused. All
     /// caches must share one (n_heads, d_head) geometry.
+    ///
+    /// Stateless: every call re-gathers every row and re-zeroes the
+    /// full padding region. The pipelined decode path uses the stateful
+    /// [`GatherBuf`] instead, which remembers what each buffer row
+    /// holds and downgrades unchanged-prefix refills to delta-append
+    /// copies (and zeroing to the previously occupied extent). This
+    /// entry point remains for one-shot gathers and as the
+    /// reference-oracle the `GatherBuf` property tests compare against.
     pub fn padded_kv_batch_into(
         caches: &[&LayerCache],
         rows: usize,
@@ -477,6 +596,10 @@ impl LayerCache {
         let new_pos: Vec<i32> = keep.iter().map(|&i| self.positions[i]).collect();
         self.positions = new_pos;
         self.len = keep.len();
+        // Rows moved: any delta-upload state gathered from this cache
+        // is now invalid (the no-op compaction above returns early and
+        // keeps the epoch — its rows are untouched).
+        self.epoch += 1;
     }
 
     /// Re-target the logical capacity (next compiled bucket). Paged
@@ -1010,6 +1133,76 @@ mod tests {
         assert_eq!(sc.len(), 3);
         assert_eq!(sc.bytes(), bytes);
         assert_eq!(sc.primary().block_ids(), &ids[..], "no copy on wrap");
+    }
+
+    #[test]
+    fn id_epoch_form_the_delta_validity_tuple() {
+        let pool = BlockPool::new();
+        let mut a = filled_in(&pool, 1, 2, 64, 5);
+        let id0 = a.id();
+        let ep0 = a.epoch();
+        // append + grow preserve the live prefix -> epoch unchanged.
+        a.append(&[1.0, 1.0], &[2.0, 2.0], 99);
+        a.grow(128);
+        assert_eq!((a.id(), a.epoch()), (id0, ep0));
+        // A clone may diverge through COW: it must not share the id.
+        let b = a.clone();
+        assert_ne!(b.id(), a.id());
+        // compact moves rows -> epoch bump; identity no-op keeps it.
+        a.compact(&[0, 1, 2, 3, 4, 5]);
+        assert_eq!(a.epoch(), ep0, "identity compaction leaves rows untouched");
+        a.compact(&[0, 2]);
+        assert_eq!(a.epoch(), ep0 + 1);
+    }
+
+    #[test]
+    fn fill_ext_zeroes_exactly_the_stale_extent() {
+        let c = filled(2, 3, 8, 5);
+        let cap = 8;
+        let mut k = vec![9.0f32; 2 * cap * 3]; // sentinel everywhere
+        let mut v = vec![9.0f32; 2 * cap * 3];
+        // Previous occupant wrote 6 rows: slots 5..6 must be zeroed,
+        // slots 6.. are trusted (and must keep the sentinel).
+        c.padded_kv_fill_ext(cap, &mut k, &mut v, 6);
+        for h in 0..2 {
+            for i in 0..5 {
+                assert_eq!(k[h * cap * 3 + i * 3], (100 * h + i) as f32);
+            }
+            assert_eq!(k[h * cap * 3 + 5 * 3], 0.0, "stale band re-zeroed");
+            for i in 6..cap {
+                assert_eq!(k[h * cap * 3 + i * 3], 9.0, "never-occupied rows untouched");
+                assert_eq!(v[h * cap * 3 + i * 3], 9.0);
+            }
+        }
+        // prev_rows == cap reproduces the stateless fill exactly.
+        let mut k2 = vec![9.0f32; 2 * cap * 3];
+        let mut v2 = vec![9.0f32; 2 * cap * 3];
+        c.padded_kv_fill_ext(cap, &mut k2, &mut v2, cap);
+        let mut kf = vec![0.0f32; 2 * cap * 3];
+        let mut vf = vec![0.0f32; 2 * cap * 3];
+        c.padded_kv_fill(cap, &mut kf, &mut vf);
+        assert_eq!(k2, kf);
+        assert_eq!(v2, vf);
+    }
+
+    #[test]
+    fn fill_tail_completes_a_prefix_fill() {
+        let pool = BlockPool::new();
+        let cap = 2 * BLOCK_TOKENS;
+        let mut c = filled_in(&pool, 2, 3, cap, BLOCK_TOKENS + 2);
+        let mut k = vec![0.0f32; 2 * cap * 3];
+        let mut v = vec![0.0f32; 2 * cap * 3];
+        c.padded_kv_fill(cap, &mut k, &mut v);
+        let from = c.len();
+        // Append two rows (crossing nothing / staying in the tail block).
+        c.append(&[7.0; 6], &[-7.0; 6], 70);
+        c.append(&[8.0; 6], &[-8.0; 6], 80);
+        c.padded_kv_fill_tail(cap, from, &mut k, &mut v);
+        let mut kf = vec![0.0f32; 2 * cap * 3];
+        let mut vf = vec![0.0f32; 2 * cap * 3];
+        c.padded_kv_fill(cap, &mut kf, &mut vf);
+        assert_eq!(k, kf, "prefix fill + tail delta must equal a fresh fill");
+        assert_eq!(v, vf);
     }
 
     #[test]

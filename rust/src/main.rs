@@ -5,6 +5,7 @@
 //!                  [--replicas 4] [--max-inflight 4] [--kv-budget-mb 512]
 //!                  [--prefix-cache-mb 256] [--decode-batch 0] [--tp 1]
 //!                  [--policies policies.json] [--profile balanced]
+//!                  [--pipeline on|off]
 //! fastav eval      --model vl2sim --dataset avhbench --n 50 [--no-pruning]
 //! fastav calibrate --model vl2sim --n 100
 //! fastav info      --model vl2sim
@@ -34,6 +35,7 @@ const OPTIONS: &[&str] = &[
     "max-gen", "queue-cap", "workers", "calibration", "replicas",
     "max-inflight", "kv-budget-mb", "deadline-ms", "prefix-cache-mb",
     "decode-batch", "tp", "policies", "profile", "trace-sample", "trace-ring",
+    "pipeline",
 ];
 
 fn main() {
@@ -217,6 +219,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // nothing) and per-replica completed-trace ring capacity.
     let trace_sample = args.get_f64("trace-sample", 0.0).map_err(|e| anyhow!(e))?;
     let trace_ring = args.get_usize("trace-ring", 256).map_err(|e| anyhow!(e))?;
+    // Pipelined quantum execution (overlap next layer's KV upload with
+    // the in-flight dispatch). On by default; `--pipeline off` forces
+    // the strict sequential ordering for A/B comparison.
+    let pipeline = match args.get_or("pipeline", "on") {
+        "on" => true,
+        "off" => false,
+        other => return Err(anyhow!("--pipeline must be on|off, got {:?}", other)),
+    };
     let registry = Arc::new(registry_from_args(args, &root, &model)?);
 
     // Replica pool: each engine lives on its own thread.
@@ -236,6 +246,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         tp_degree: tp,
         trace_sample,
         trace_ring,
+        pipeline,
+        ..Default::default()
     };
     let coord = Arc::new(Coordinator::start_pool(root.clone(), model.clone(), cfg)?);
     let layout = {

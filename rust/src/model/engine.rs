@@ -23,7 +23,8 @@ use super::weights::{ShardWeightLiterals, WeightLiterals, Weights};
 use crate::flops::FlopsTally;
 use crate::kvcache::prefix::{hash_mix, hash_tokens};
 use crate::kvcache::{
-    BlockPool, CacheSet, LayerCache, PrefixCache, PrefixEntry, PrefixLease, ShardedLayerCache,
+    BlockPool, CacheSet, GatherBuf, LayerCache, PrefixCache, PrefixEntry, PrefixLease,
+    ShardedLayerCache,
 };
 use crate::pruning::{
     fine_keep, global_keep, validate_keep, FineStrategy, GlobalInputs, GlobalStrategy,
@@ -534,6 +535,20 @@ impl FrontKv {
     }
 }
 
+/// One fully staged batched-decode layer: everything the dispatch needs
+/// except the hidden-state literal (which depends on the previous
+/// layer's output). Built by `ModelEngine::stage_batch_layer`, one layer
+/// ahead of the in-flight dispatch on the pipelined path.
+struct StagedBatchLayer {
+    cap: usize,
+    /// Pre-append live length per generation (FLOPs + append bookkeeping).
+    ctxs: Vec<usize>,
+    m_lit: xla::Literal,
+    ci_lit: xla::Literal,
+    kc: xla::Literal,
+    vc: xla::Literal,
+}
+
 /// The engine: one model on a device mesh (one PJRT runtime per logical
 /// device), prebuilt weight literals. The single-device engine is the
 /// `tp_degree = 1` case of the mesh executor — same struct, same code
@@ -565,6 +580,17 @@ pub struct ModelEngine {
     /// (batch-bucket, seq-bucket) high-water mark, grow-only.
     scratch_bk: Vec<f32>,
     scratch_bv: Vec<f32>,
+    /// Pipelined batched decode (tp_degree = 1): overlap layer `l+1`'s
+    /// paged-cache gather + literal build with layer `l`'s in-flight
+    /// dispatch, and reuse per-layer staging buffers for delta-append
+    /// uploads. Token-for-token identical to the sequential ordering
+    /// (`--pipeline off`); pinned by `rust/tests/test_pipeline.rs` and
+    /// the `GatherBuf` property tests.
+    pipeline: bool,
+    /// One persistent [`GatherBuf`] per layer: cross-quantum delta
+    /// validity needs the same layer's caches to land in the same
+    /// buffer every quantum. Sized lazily; freed by `set_pipeline(false)`.
+    batch_gather: Vec<GatherBuf>,
 }
 
 impl ModelEngine {
@@ -639,12 +665,31 @@ impl ModelEngine {
             scratch_v: vec![0.0; hw],
             scratch_bk: Vec::new(),
             scratch_bv: Vec::new(),
+            pipeline: true,
+            batch_gather: Vec::new(),
         })
     }
 
     /// Tensor-parallel degree this engine executes at (mesh devices).
     pub fn tp_degree(&self) -> usize {
         self.tp
+    }
+
+    /// Enable/disable the pipelined batched-decode path (`--pipeline`).
+    /// Off forces the original strict upload → dispatch ordering for
+    /// A/B comparison and drops the per-layer staging buffers (their
+    /// validity state must not survive a disable/enable cycle — the
+    /// fresh buffers re-gather everything).
+    pub fn set_pipeline(&mut self, on: bool) {
+        self.pipeline = on;
+        if !on {
+            self.batch_gather = Vec::new();
+        }
+    }
+
+    /// Whether the pipelined batched-decode path is active.
+    pub fn pipeline(&self) -> bool {
+        self.pipeline
     }
 
     /// Attach a shared prefix cache. Subsequent `begin_generation` calls
@@ -1950,6 +1995,13 @@ impl ModelEngine {
             }
             return Ok(out);
         }
+        // Pipelined variant (tp_degree = 1): overlap layer l+1's gather
+        // + literal build with layer l's in-flight dispatch, with
+        // delta-append staging buffers. Token-for-token identical;
+        // `set_pipeline(false)` keeps the strict ordering below.
+        if self.tp == 1 && self.pipeline {
+            return self.step_decode_batch_pipelined(gens);
+        }
         let t0 = Instant::now();
         let fm = self.fm();
         let (d, n_heads, d_head, n_layers) = (
@@ -2129,6 +2181,180 @@ impl ModelEngine {
         // Logits head + sampling: one batched-head dispatch for the whole
         // quantum when the artifact set carries `logits_batch` buckets
         // (per-request single-vector dispatches otherwise).
+        let rows = self.logits_rows(&x_all[..b * d], b)?;
+        let mut out = Vec::with_capacity(b);
+        for (i, g) in gens.iter_mut().enumerate() {
+            g.caches.update_peak();
+            let tok = select_token(&rows[i], &g.opts.sampling, g.tokens.len());
+            g.flops.add_logits(&fm);
+            g.tokens.push(tok);
+            g.decode_steps += 1;
+            g.update_done();
+            out.push(StepEvent::Token(tok));
+        }
+        let dt = t0.elapsed().as_secs_f64() / b as f64;
+        for g in gens.iter_mut() {
+            g.decode_seconds += dt;
+        }
+        Ok(out)
+    }
+
+    /// Stage one batched-decode layer: pick the joint bucket, grow
+    /// caches, build the mask/current-index literals, and gather every
+    /// cache into the layer's persistent [`GatherBuf`] (a delta-append
+    /// copy when a row is provably unchanged except appended tokens —
+    /// see `kvcache::gather`). Associated rather than `&mut self` so
+    /// the pipelined loop can stage layer `l+1` through disjoint field
+    /// borrows while literals borrowed from `self.wlit` sit in an
+    /// in-flight dispatch.
+    ///
+    /// Staging layer `l+1` during layer `l`'s dispatch is safe for
+    /// token equivalence because it touches only layer `l+1` state
+    /// (bucket pick, logical `grow`, gather), which the sequential
+    /// ordering leaves untouched until its own iteration — layer `l`'s
+    /// append/prune mutate layer `l` only.
+    #[allow(clippy::too_many_arguments)]
+    fn stage_batch_layer(
+        art: &ArtifactDir,
+        entry: &str,
+        gens: &mut [&mut Generation],
+        l: usize,
+        bb: usize,
+        gather: &mut GatherBuf,
+        n_heads: usize,
+        d_head: usize,
+    ) -> Result<StagedBatchLayer> {
+        let need = gens
+            .iter()
+            .map(|g| g.caches.layers[l].len() + 1)
+            .max()
+            .unwrap_or(1);
+        let cap = art.pick_bucket(entry, need)?;
+        for g in gens.iter_mut() {
+            let c = &mut g.caches.layers[l];
+            if c.len() + 1 > c.cap() {
+                c.grow(cap); // logical re-target; paged — no copy
+            }
+        }
+        let ctxs: Vec<usize> = gens.iter().map(|g| g.caches.layers[l].len()).collect();
+        let mut mask = vec![0.0f32; bb * cap];
+        let mut cur_idx = vec![0i32; bb];
+        for (i, &ctx) in ctxs.iter().enumerate() {
+            // Live rows + the slot this step's K/V is written into.
+            mask[i * cap..i * cap + ctx + 1].fill(1.0);
+            cur_idx[i] = ctx as i32;
+        }
+        let m_lit = lit_f32(&[bb, cap], &mask)?;
+        let ci_lit = lit_i32(&[bb], &cur_idx)?;
+        {
+            let caches: Vec<&LayerCache> =
+                gens.iter().map(|g| g.caches.layers[l].primary()).collect();
+            gather.fill(&caches, bb, cap);
+        }
+        let elems = bb * n_heads * cap * d_head;
+        let kc = lit_f32(&[bb, n_heads, cap, d_head], &gather.k()[..elems])?;
+        let vc = lit_f32(&[bb, n_heads, cap, d_head], &gather.v()[..elems])?;
+        Ok(StagedBatchLayer { cap, ctxs, m_lit, ci_lit, kc, vc })
+    }
+
+    /// [`Self::step_decode_batch`], pipelined: layer `l` is dispatched
+    /// through the device-0 worker's queue without blocking
+    /// ([`DeviceMesh::execute_queued`]) and layer `l+1`'s upload —
+    /// paged-cache gather + literal build — is staged while it runs;
+    /// only then does the loop wait on the completion channel. Traced
+    /// quanta record the staged uploads with `overlap = true`, visible
+    /// as the `overlap` attribute in `GET /v1/trace/{id}` and folded
+    /// into `fastav_upload_overlap_ratio`. Per-layer persistent
+    /// [`GatherBuf`]s additionally downgrade steady-state re-gathers to
+    /// delta-append copies across quanta.
+    fn step_decode_batch_pipelined(
+        &mut self,
+        gens: &mut [&mut Generation],
+    ) -> Result<Vec<StepEvent>> {
+        let t0 = Instant::now();
+        let fm = self.fm();
+        let (d, n_heads, d_head, n_layers) = (
+            self.cfg.d_model,
+            self.cfg.n_heads,
+            self.cfg.d_head,
+            self.cfg.n_layers,
+        );
+        let b = gens.len();
+        let (bb, entry) = self.batch_entry(b).expect("checked by step_decode_batch");
+        if self.batch_gather.len() < n_layers {
+            self.batch_gather.resize_with(n_layers, GatherBuf::new);
+        }
+        let mut x_all = vec![0.0f32; bb * d];
+        let mut pos = vec![0i32; bb];
+        for (i, g) in gens.iter().enumerate() {
+            let cur = *g.tokens.last().expect("decode-ready implies a token");
+            x_all[i * d..(i + 1) * d].copy_from_slice(self.weights.embed(cur));
+            pos[i] = (g.prompt_len + g.tokens.len() - 1) as i32;
+        }
+        let pos_lit = lit_i32(&[bb], &pos)?;
+        // Layer 0 has no dispatch to hide behind: staged synchronously.
+        let up0 = crate::trace::seg_begin();
+        let mut staged = Some(Self::stage_batch_layer(
+            &self.art,
+            &entry,
+            gens,
+            0,
+            bb,
+            &mut self.batch_gather[0],
+            n_heads,
+            d_head,
+        )?);
+        crate::trace::seg_end("upload", None, up0);
+        let row = n_heads * d_head;
+        for l in 0..n_layers {
+            let cur = staged.take().expect("layer staged by the previous iteration");
+            let x_lit = lit_f32(&[bb, d], &x_all)?;
+            let path = self.art.path(&entry, Some(cur.cap));
+            let mut inputs: Vec<&xla::Literal> =
+                vec![&x_lit, &pos_lit, &cur.ci_lit, &cur.kc, &cur.vc, &cur.m_lit];
+            for p in &self.wlit.per_layer[l] {
+                inputs.push(p);
+            }
+            // Non-blocking dispatch: the device-0 worker runs layer l
+            // while this thread stages layer l+1's upload.
+            let pending = self.mesh.execute_queued(&path, &inputs)?;
+            if l + 1 < n_layers {
+                let up = crate::trace::seg_begin();
+                let next = Self::stage_batch_layer(
+                    &self.art,
+                    &entry,
+                    gens,
+                    l + 1,
+                    bb,
+                    &mut self.batch_gather[l + 1],
+                    n_heads,
+                    d_head,
+                );
+                crate::trace::seg_end_overlap("upload", None, up, true);
+                // `?` only after the segment closes; an error drops
+                // `pending`, whose drop drains the in-flight dispatch
+                // before the borrowed literals go away.
+                staged = Some(next?);
+            }
+            let outs = pending.wait()?;
+            let [x2_lit, k_lit, v_lit, s_lit]: [xla::Literal; 4] = outs
+                .try_into()
+                .map_err(|_| anyhow!("decode_batch returned wrong arity"))?;
+            x_all = to_vec_f32(&x2_lit)?; // [bb, d]
+            let kn = to_vec_f32(&k_lit)?; // [bb, H, dh]
+            let vn = to_vec_f32(&v_lit)?;
+            let sv = to_vec_f32(&s_lit)?; // [bb, cap]
+            for (i, g) in gens.iter_mut().enumerate() {
+                g.caches.layers[l].append(
+                    &kn[i * row..(i + 1) * row],
+                    &vn[i * row..(i + 1) * row],
+                    pos[i],
+                );
+                g.flops.add_decode_layer(&fm, cur.ctxs[i] + 1);
+                Self::maybe_decode_prune(g, l, &sv[i * cur.cap..(i + 1) * cur.cap]);
+            }
+        }
+
         let rows = self.logits_rows(&x_all[..b * d], b)?;
         let mut out = Vec::with_capacity(b);
         for (i, g) in gens.iter_mut().enumerate() {

@@ -1,35 +1,49 @@
 //! Device-mesh execution backend: D logical PJRT devices behind one
 //! dispatch surface.
 //!
-//! A [`DeviceMesh`] owns one [`Runtime`] (client + executable cache) per
-//! logical device. Single-device work (`tp_degree = 1`, replicated
-//! artifacts like `calib_probe`, combine/`*_tail` stages) runs on device
-//! 0 through [`DeviceMesh::execute`] — byte-for-byte the code path the
-//! pre-mesh engine had. Head-sharded work fans one [`ShardDispatch`] per
-//! device through [`DeviceMesh::execute_sharded`]: shard 0 executes on
-//! the caller's thread, shards 1.. on scoped worker threads, and the
-//! call joins all shards before returning (an all-or-nothing barrier —
-//! the combine step needs every partial).
+//! A [`DeviceMesh`] owns one persistent [`DeviceWorker`] (thread +
+//! `Runtime`: client + executable cache) per logical device.
+//! Single-device work (`tp_degree = 1`, replicated artifacts like
+//! `calib_probe`, combine/`*_tail` stages) runs on device 0's worker
+//! through [`DeviceMesh::execute`]. Head-sharded work fans one
+//! [`ShardDispatch`] per device through
+//! [`DeviceMesh::execute_sharded`]: every shard is enqueued on its
+//! worker's command queue, then the call receives every completion
+//! before returning (an all-or-nothing barrier — the combine step
+//! needs every partial).
 //!
-//! Why scoped threads and not the shared [`crate::util::threadpool`]:
-//! each device's `Runtime` is pinned to its shard for the executable
-//! cache to stay warm per device, and a dispatch borrows the engine's
-//! prebuilt weight literals — `std::thread::scope` supports both
-//! (non-`'static` borrows, one worker per remote shard) where the job
-//! pool's `'static` closures support neither. The cost is one OS thread
-//! spawn+join per remote shard per dispatch (~tens of µs), which a
-//! CPU-side XLA layer execution dwarfs; persistent per-device workers
-//! would need `'static` (owned/unsafe) input hand-off and are the noted
-//! follow-up if mesh dispatch overhead ever shows up in profiles. With
-//! the vendored host-only `xla` stub, `Runtime` and `Literal` are plain
-//! host data and cross the scope freely; a real PJRT backend keeps the
-//! same shape with per-device contexts created on their worker threads.
+//! Persistent workers replaced the original scoped-thread fan-out
+//! (which spawned + joined one OS thread per remote shard *per
+//! dispatch*): each device's `Runtime` now stays pinned to its
+//! long-lived worker so the executable cache is warm with zero
+//! per-dispatch thread churn, and — because submission is decoupled
+//! from completion — the engine can overlap host-side work with an
+//! in-flight dispatch ([`DeviceMesh::execute_queued`] returns a
+//! [`Pending`] handle the pipelined batched-decode loop waits on after
+//! staging the next layer's upload). Input literals are *borrowed* by
+//! an in-flight job via a raw-pointer `Send` shim; safety rests on one
+//! invariant, enforced structurally below: **every enqueued job is
+//! received before the borrow that produced its inputs ends**
+//! (`Pending::wait`, `Pending`'s drop drain, and the
+//! enqueue-all-then-receive-all shape of `execute_sharded`).
+//!
+//! Panic parity with the scoped-thread era is preserved for the
+//! supervision layer: a shard-0 (or device-0) panic is re-raised on
+//! the calling replica thread after the join barrier — exactly as when
+//! shard 0 ran on the caller — so replica guards still poison and
+//! respawn; a remote shard's panic fails only that dispatch with shard
+//! attribution, and the worker (plus its compiled-executable cache)
+//! survives for the next quantum.
 
+use std::any::Any;
+use std::marker::PhantomData;
+use std::panic::resume_unwind;
 use std::path::{Path, PathBuf};
+use std::sync::mpsc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::Runtime;
+use super::worker::{DeviceWorker, JobOutcome};
 
 /// One shard's work item: the artifact to run on that device and its
 /// borrowed input literals (activations + that shard's weight slices).
@@ -57,54 +71,162 @@ pub trait Backend {
         -> Result<Vec<Vec<xla::Literal>>>;
 }
 
-/// D logical devices, each with its own PJRT client + executable cache.
+/// What a worker sends back for one dispatch: the execution result and,
+/// when the quantum is traced, the dispatch interval measured on the
+/// worker (it cannot see the caller's thread-local segment collector,
+/// so it carries a clone of the trace clock instead).
+type DispatchReply = (Result<Vec<xla::Literal>>, Option<(u64, u64)>);
+
+/// `*const xla::Literal` that crosses the worker channel. SAFETY
+/// invariant (upheld by every call site in this module): the pointed-to
+/// literal outlives the job, because the submitting code always
+/// receives the job's completion before the borrow producing the
+/// pointer ends.
+struct SendLit(*const xla::Literal);
+unsafe impl Send for SendLit {}
+
+/// An in-flight device-0 dispatch returned by
+/// [`DeviceMesh::execute_queued`]. Holds the lifetime of the input
+/// literals, so the borrow checker pins them until the dispatch is
+/// waited on — and if the handle is dropped early (error unwinding in
+/// the caller), the drop impl blocks until the worker has released
+/// them.
+pub struct Pending<'a> {
+    rx: mpsc::Receiver<JobOutcome<DispatchReply>>,
+    /// `Some(shard)` records a "dispatch" trace segment on completion;
+    /// `None` keeps plain `execute` trace-silent (its callers time
+    /// themselves, as they always have).
+    seg_shard: Option<u32>,
+    waited: bool,
+    _borrow: PhantomData<&'a xla::Literal>,
+}
+
+impl Pending<'_> {
+    /// Block until the dispatch completes and return its outputs. A
+    /// panic inside the worker job is re-raised here, on the calling
+    /// thread.
+    pub fn wait(mut self) -> Result<Vec<xla::Literal>> {
+        self.waited = true;
+        match self.rx.recv() {
+            Ok(JobOutcome::Done((r, interval))) => {
+                if let (Some(s), Some((t0, t1))) = (self.seg_shard, interval) {
+                    crate::trace::push_seg("dispatch", Some(s), t0, t1);
+                }
+                r
+            }
+            Ok(JobOutcome::Panicked(p)) => resume_unwind(p),
+            Err(_) => Err(anyhow!("device worker died before completing the dispatch")),
+        }
+    }
+}
+
+impl Drop for Pending<'_> {
+    fn drop(&mut self) {
+        if !self.waited {
+            // Block until the in-flight job has released the borrowed
+            // input literals (the SendLit safety invariant). Receiving
+            // a second time after `wait` would return immediately (the
+            // sender is gone), so this is also harmlessly idempotent.
+            let _ = self.rx.recv();
+        }
+    }
+}
+
+/// D logical devices, each a persistent worker thread owning its own
+/// PJRT client + executable cache.
 pub struct DeviceMesh {
-    devices: Vec<Runtime>,
+    workers: Vec<DeviceWorker>,
 }
 
 impl DeviceMesh {
-    /// A mesh of `tp` CPU devices (`tp = 0` is clamped to 1).
+    /// A mesh of `tp` CPU devices (`tp = 0` is clamped to 1). Each
+    /// device's worker thread (and its `Runtime`) is up before this
+    /// returns.
     pub fn cpu(tp: usize) -> Result<DeviceMesh> {
-        let devices = (0..tp.max(1))
-            .map(|i| Runtime::cpu().with_context(|| format!("mesh device {}", i)))
+        let workers = (0..tp.max(1))
+            .map(|i| DeviceWorker::spawn(i).with_context(|| format!("mesh device {}", i)))
             .collect::<Result<Vec<_>>>()?;
-        Ok(DeviceMesh { devices })
+        Ok(DeviceMesh { workers })
     }
 
     /// Tensor-parallel degree (number of devices).
     pub fn tp(&self) -> usize {
-        self.devices.len()
+        self.workers.len()
     }
 
     pub fn platform(&self) -> String {
-        self.devices[0].platform()
+        self.workers[0]
+            .call(|rt| rt.platform())
+            .unwrap_or_else(|_| String::from("unknown"))
     }
 
     /// Pre-compile an artifact on device 0 (warmup of replicated and
     /// combine-stage entries).
     pub fn load(&mut self, path: &Path) -> Result<()> {
-        self.devices[0].load(path)
+        self.load_on(0, path)
     }
 
     /// Pre-compile a per-shard artifact on its device (warmup).
     pub fn load_on(&mut self, device: usize, path: &Path) -> Result<()> {
-        self.devices[device].load(path)
+        let path = path.to_path_buf();
+        self.workers[device].call(move |rt| rt.load(&path))?
     }
 
     /// (compiled executables, total executions) summed over devices.
     pub fn stats(&self) -> (usize, u64) {
-        self.devices
-            .iter()
-            .fold((0, 0), |(c, e), rt| (c + rt.cached(), e + rt.exec_count))
+        self.workers.iter().fold((0, 0), |(c, e), w| {
+            let (wc, we) = w.call(|rt| (rt.cached(), rt.exec_count)).unwrap_or((0, 0));
+            (c + wc, e + we)
+        })
     }
 
-    /// Run a replicated artifact on device 0.
+    /// Enqueue an artifact execution on `device`'s worker and return
+    /// the completion receiver without blocking. The job borrows the
+    /// input literals through `SendLit`; callers MUST receive the reply
+    /// before those borrows end.
+    fn enqueue(
+        &self,
+        device: usize,
+        path: &Path,
+        inputs: &[&xla::Literal],
+    ) -> Result<mpsc::Receiver<JobOutcome<DispatchReply>>> {
+        let clock = crate::trace::seg_clock();
+        let path = path.to_path_buf();
+        let lits: Vec<SendLit> = inputs.iter().map(|&l| SendLit(l as *const _)).collect();
+        self.workers[device].submit_outcome(move |rt| {
+            // SAFETY: see SendLit — the submitter keeps every input
+            // literal alive until this job's reply is received.
+            let refs: Vec<&xla::Literal> = lits.iter().map(|l| unsafe { &*l.0 }).collect();
+            let t0 = clock.as_ref().map(|c| c.now_ns());
+            let r = rt.execute(&path, &refs);
+            let t1 = clock.as_ref().map(|c| c.now_ns());
+            (r, t0.zip(t1))
+        })
+    }
+
+    /// Run a replicated artifact on device 0 (blocking, same contract
+    /// as the pre-worker mesh — records no trace segments of its own).
     pub fn execute(
         &mut self,
         path: &Path,
         inputs: &[&xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
-        self.devices[0].execute(path, inputs)
+        let rx = self.enqueue(0, path, inputs)?;
+        Pending { rx, seg_shard: None, waited: false, _borrow: PhantomData }.wait()
+    }
+
+    /// Enqueue a replicated artifact on device 0 and return a
+    /// [`Pending`] handle instead of blocking — the hook the pipelined
+    /// batched-decode loop uses to overlap the next layer's KV gather +
+    /// literal build with this dispatch. The dispatch interval is
+    /// recorded as a `dispatch` trace segment (shard 0) when waited on.
+    pub fn execute_queued<'a>(
+        &self,
+        path: &Path,
+        inputs: &[&'a xla::Literal],
+    ) -> Result<Pending<'a>> {
+        let rx = self.enqueue(0, path, inputs)?;
+        Ok(Pending { rx, seg_shard: Some(0), waited: false, _borrow: PhantomData })
     }
 
     /// Run `dispatches[s]` on device `s` (one per device, in parallel)
@@ -113,67 +235,77 @@ impl DeviceMesh {
         &mut self,
         dispatches: &[ShardDispatch<'_>],
     ) -> Result<Vec<Vec<xla::Literal>>> {
-        if dispatches.len() != self.devices.len() {
+        if dispatches.len() != self.workers.len() {
             bail!(
                 "sharded dispatch arity {} != mesh devices {}",
                 dispatches.len(),
-                self.devices.len()
+                self.workers.len()
             );
         }
         if dispatches.len() == 1 {
             let d = &dispatches[0];
             let t0 = crate::trace::seg_begin();
-            let out = self.devices[0].execute(&d.path, &d.inputs);
+            let out = self.execute(&d.path, &d.inputs);
             crate::trace::seg_end("dispatch", Some(0), t0);
             return Ok(vec![out?]);
         }
-        // Shard 0 on the caller's thread, shards 1.. on scoped workers;
-        // join everything before combining (all-or-nothing). Traced
-        // quanta (a segment collector is active on the replica thread)
-        // time each shard on the trace clock — workers can't see the
-        // caller's thread-local, so they carry a clone of the clock and
-        // return their interval for the caller to report after the
-        // join. Untraced dispatches have `clock = None` and skip every
-        // timestamp.
-        let clock = crate::trace::seg_clock();
-        let (first, rest) = self.devices.split_at_mut(1);
-        let (d0, drest) = dispatches.split_at(1);
-        type ShardOut = (Result<Vec<xla::Literal>>, Option<(u64, u64)>);
-        let results: Vec<ShardOut> = std::thread::scope(|scope| {
-            let handles: Vec<_> = rest
-                .iter_mut()
-                .zip(drest)
-                .map(|(rt, d)| {
-                    let clock = clock.clone();
-                    scope.spawn(move || {
-                        let t0 = clock.as_ref().map(|c| c.now_ns());
-                        let r = rt.execute(&d.path, &d.inputs);
-                        let t1 = clock.as_ref().map(|c| c.now_ns());
-                        (r, t0.zip(t1))
-                    })
-                })
-                .collect();
-            let t0 = clock.as_ref().map(|c| c.now_ns());
-            let r0 = first[0].execute(&d0[0].path, &d0[0].inputs);
-            let t1 = clock.as_ref().map(|c| c.now_ns());
-            let mut out: Vec<ShardOut> = vec![(r0, t0.zip(t1))];
-            for h in handles {
-                // A panicking worker must fail this dispatch (with shard
-                // attribution below), not take down the replica thread
-                // that owns the whole device group.
-                out.push(h.join().unwrap_or_else(|_| {
-                    (Err(anyhow!("shard worker thread panicked")), None)
-                }));
+        // Enqueue every shard, then receive every shard. No early
+        // return between the two halves: a failed enqueue becomes an
+        // Err entry and the receive loop still drains every receiver
+        // that was created, so no worker is left holding a borrowed
+        // input when this function returns (the SendLit invariant).
+        enum Reply {
+            Out(Result<Vec<xla::Literal>>),
+            Panicked(Box<dyn Any + Send>),
+        }
+        let rxs: Vec<_> = dispatches
+            .iter()
+            .enumerate()
+            .map(|(s, d)| self.enqueue(s, &d.path, &d.inputs))
+            .collect();
+        let replies: Vec<(Reply, Option<(u64, u64)>)> = rxs
+            .into_iter()
+            .map(|rx| match rx {
+                Ok(rx) => match rx.recv() {
+                    Ok(JobOutcome::Done((r, interval))) => (Reply::Out(r), interval),
+                    Ok(JobOutcome::Panicked(p)) => (Reply::Panicked(p), None),
+                    Err(_) => (
+                        Reply::Out(Err(anyhow!(
+                            "device worker died before completing the dispatch"
+                        ))),
+                        None,
+                    ),
+                },
+                Err(e) => (Reply::Out(Err(e)), None),
+            })
+            .collect();
+        // Traced quanta: report each shard's dispatch interval now that
+        // everything is joined (workers can't reach the caller's
+        // thread-local segment collector).
+        for (s, (_, interval)) in replies.iter().enumerate() {
+            if let Some((t0, t1)) = interval {
+                crate::trace::push_seg("dispatch", Some(s as u32), *t0, *t1);
             }
-            out
-        });
-        results
+        }
+        replies
             .into_iter()
             .enumerate()
-            .map(|(s, (r, interval))| {
-                if let Some((t0, t1)) = interval {
-                    crate::trace::push_seg("dispatch", Some(s as u32), t0, t1);
-                }
+            .map(|(s, (reply, _))| {
+                let r = match reply {
+                    Reply::Out(r) => r,
+                    // Shard 0 panic: re-raise on the replica thread
+                    // (post-barrier), matching the days when shard 0
+                    // ran on the caller — the supervision layer's
+                    // poison/respawn path depends on it. A remote
+                    // shard's panic fails only this dispatch, with
+                    // shard attribution below.
+                    Reply::Panicked(p) => {
+                        if s == 0 {
+                            resume_unwind(p);
+                        }
+                        Err(anyhow!("shard worker thread panicked"))
+                    }
+                };
                 r.map_err(|e| anyhow!("shard {}: {:#}", s, e))
             })
             .collect()
@@ -238,5 +370,26 @@ mod tests {
             .collect();
         let err = mesh.execute_sharded(&dispatches).unwrap_err();
         assert!(format!("{:#}", err).contains("shard 0"));
+    }
+
+    #[test]
+    fn queued_execute_is_drained_on_drop() {
+        // Dropping a Pending without waiting must still join the
+        // in-flight job (the borrowed-input invariant) and leave the
+        // worker usable.
+        let mesh = DeviceMesh::cpu(1).unwrap();
+        let x = lit_f32(&[1], &[0.0]).unwrap();
+        {
+            let _pending = mesh
+                .execute_queued(Path::new("/nonexistent/q.hlo.txt"), &[&x])
+                .unwrap();
+            // dropped here without wait()
+        }
+        let err = mesh
+            .execute_queued(Path::new("/nonexistent/q.hlo.txt"), &[&x])
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(format!("{:#}", err).contains("q.hlo.txt"));
     }
 }

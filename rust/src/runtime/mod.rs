@@ -2,10 +2,14 @@
 //!
 //! Wraps the `xla` crate (PJRT C API, CPU client). All execution happens
 //! on the thread that owns [`Runtime`] — PJRT handles are not `Send` in
-//! this crate, so the coordinator gives the engine a dedicated thread.
+//! this crate, so each mesh device pins its `Runtime` to a persistent
+//! [`worker`] thread and ships work to it over a command queue.
 //!
 //! Pieces:
 //! * [`Runtime`]     — client + executable cache (compile each HLO once).
+//! * [`worker`]      — persistent per-device worker threads: FIFO
+//!   command queue, panic-isolating job execution, non-blocking
+//!   submission (the hook the pipelined engine overlaps uploads on).
 //! * [`mesh`]        — the [`Backend`]/[`DeviceMesh`] abstraction: D
 //!   logical devices behind one dispatch surface (tensor-parallel
 //!   head-sharded execution; device 0 is the `tp_degree = 1` case).
@@ -16,8 +20,10 @@
 
 pub mod literals;
 pub mod mesh;
+pub mod worker;
 
 pub use mesh::{Backend, DeviceMesh, ShardDispatch};
+pub use worker::{DeviceWorker, JobOutcome};
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};

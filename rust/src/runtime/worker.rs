@@ -1,0 +1,298 @@
+//! Persistent per-device worker threads: the command-queue execution
+//! model behind [`DeviceMesh`](super::DeviceMesh).
+//!
+//! Each mesh device owns one long-lived OS thread (`fastav-dev{n}`)
+//! that constructs its [`Runtime`] on-thread and then drains a FIFO
+//! command queue. PJRT handles are not `Send` in this crate, so the
+//! `Runtime` never leaves its worker; callers ship closures *to* it
+//! and get results back over per-job completion channels. Compared to
+//! the old scoped-thread fan-out this removes a thread spawn + join
+//! per dispatch and — because submission returns a receiver instead of
+//! blocking — lets the engine overlap host-side work (KV gather,
+//! literal build) with an in-flight dispatch.
+//!
+//! Panic contract: a panicking job never takes the worker (or its
+//! compiled-executable cache) down. The panic payload is caught and
+//! shipped back through the job's completion channel as
+//! [`JobOutcome::Panicked`], so the caller can re-raise it on its own
+//! thread ([`DeviceWorker::call`] does exactly that) — preserving the
+//! caller-thread panic semantics the replica supervision layer (PR 7)
+//! depends on for poisoning and respawn.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::Runtime;
+
+/// A unit of work shipped to the worker: runs with exclusive access to
+/// the device's `Runtime`. Jobs are responsible for reporting their own
+/// result/panic over a channel (see [`DeviceWorker::submit_outcome`]).
+type Job = Box<dyn FnOnce(&mut Runtime) + Send>;
+
+enum Command {
+    Run(Job),
+    Shutdown,
+}
+
+/// How a submitted job finished on the worker thread.
+pub enum JobOutcome<T> {
+    Done(T),
+    /// The job panicked; this is the payload `catch_unwind` captured.
+    /// Re-raise with `std::panic::resume_unwind` for caller-thread
+    /// parity, or map to an error for shard-attributed reporting.
+    Panicked(Box<dyn Any + Send>),
+}
+
+/// One persistent device worker: a named thread owning a `Runtime`,
+/// fed through a FIFO command queue. Dropping the worker enqueues a
+/// shutdown command (queued jobs drain first) and joins the thread.
+pub struct DeviceWorker {
+    device: usize,
+    tx: mpsc::Sender<Command>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl DeviceWorker {
+    /// Spawn the worker thread and construct its `Runtime` on-thread.
+    /// Blocks until the runtime is up (or failed), so a mesh that
+    /// built successfully is ready to execute.
+    pub fn spawn(device: usize) -> Result<DeviceWorker> {
+        let (tx, rx) = mpsc::channel::<Command>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name(format!("fastav-dev{}", device))
+            .spawn(move || worker_main(rx, ready_tx))
+            .map_err(|e| anyhow!("spawning device {} worker: {}", device, e))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(DeviceWorker { device, tx, handle: Some(handle) }),
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                Err(e)
+            }
+            Err(_) => {
+                let _ = handle.join();
+                bail!("device {} worker exited during startup", device)
+            }
+        }
+    }
+
+    /// Logical device index this worker serves.
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    /// Enqueue `f` and return a receiver for its outcome without
+    /// blocking. Jobs run in submission (FIFO) order; a panic inside
+    /// `f` arrives as [`JobOutcome::Panicked`] and leaves the worker
+    /// alive for subsequent jobs.
+    pub fn submit_outcome<T, F>(&self, f: F) -> Result<mpsc::Receiver<JobOutcome<T>>>
+    where
+        T: Send + 'static,
+        F: FnOnce(&mut Runtime) -> T + Send + 'static,
+    {
+        let (out_tx, out_rx) = mpsc::channel();
+        let job: Job = Box::new(move |rt| {
+            let res = catch_unwind(AssertUnwindSafe(|| f(rt)));
+            let _ = out_tx.send(match res {
+                Ok(v) => JobOutcome::Done(v),
+                Err(p) => JobOutcome::Panicked(p),
+            });
+        });
+        self.tx
+            .send(Command::Run(job))
+            .map_err(|_| anyhow!("device {} worker is gone", self.device))?;
+        Ok(out_rx)
+    }
+
+    /// Run `f` on the worker and wait for it. A panic inside `f` is
+    /// re-raised on this thread — exactly as if `f` had run here —
+    /// which is what keeps shard-0 panic semantics identical to the
+    /// pre-worker (caller-thread) execution path.
+    pub fn call<T, F>(&self, f: F) -> Result<T>
+    where
+        T: Send + 'static,
+        F: FnOnce(&mut Runtime) -> T + Send + 'static,
+    {
+        let rx = self.submit_outcome(f)?;
+        match rx.recv() {
+            Ok(JobOutcome::Done(v)) => Ok(v),
+            Ok(JobOutcome::Panicked(p)) => resume_unwind(p),
+            Err(_) => bail!("device {} worker died before completing the job", self.device),
+        }
+    }
+}
+
+impl Drop for DeviceWorker {
+    fn drop(&mut self) {
+        // FIFO queue: already-submitted jobs drain before Shutdown is
+        // seen, so in-flight receivers still get their outcomes.
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(rx: mpsc::Receiver<Command>, ready_tx: mpsc::Sender<Result<()>>) {
+    let mut rt = match Runtime::cpu() {
+        Ok(rt) => {
+            let _ = ready_tx.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Run(job) => {
+                // Backstop only: `submit_outcome` jobs already catch
+                // their own panics. This keeps the worker (and its
+                // executable cache) alive even if a future job type
+                // forgets to.
+                let _ = catch_unwind(AssertUnwindSafe(|| job(&mut rt)));
+            }
+            Command::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{collect_segs, push_seg, seg_begin, seg_end_overlap, Clock, MockClock};
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn jobs_run_in_submission_order() {
+        let w = DeviceWorker::spawn(0).unwrap();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let rxs: Vec<_> = (0..8usize)
+            .map(|i| {
+                let order = Arc::clone(&order);
+                w.submit_outcome(move |_rt| {
+                    order.lock().unwrap().push(i);
+                    i
+                })
+                .unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            match rx.recv().unwrap() {
+                JobOutcome::Done(v) => assert_eq!(v, i),
+                JobOutcome::Panicked(_) => panic!("job {} panicked", i),
+            }
+        }
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_drains_queued_jobs_then_shuts_down() {
+        let ran = Arc::new(Mutex::new(Vec::new()));
+        {
+            let w = DeviceWorker::spawn(0).unwrap();
+            for i in 0..4usize {
+                let ran = Arc::clone(&ran);
+                let _rx = w
+                    .submit_outcome(move |_rt| ran.lock().unwrap().push(i))
+                    .unwrap();
+            }
+            // Drop joins the worker; queued jobs must complete first.
+        }
+        assert_eq!(*ran.lock().unwrap(), (0..4).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_job_fails_only_itself_and_worker_survives() {
+        let w = DeviceWorker::spawn(0).unwrap();
+        let rx = w
+            .submit_outcome(|_rt| -> usize { panic!("boom-7") })
+            .unwrap();
+        match rx.recv().unwrap() {
+            JobOutcome::Panicked(p) => {
+                let msg = p.downcast_ref::<&str>().copied().unwrap_or("");
+                assert_eq!(msg, "boom-7", "panic payload must cross the channel intact");
+            }
+            JobOutcome::Done(_) => panic!("expected a panic outcome"),
+        }
+        // The worker (and its Runtime) survived the panic.
+        assert_eq!(w.call(|_rt| 41 + 1).unwrap(), 42);
+    }
+
+    #[test]
+    fn call_reraises_panics_on_the_caller_thread() {
+        let w = DeviceWorker::spawn(0).unwrap();
+        let res = catch_unwind(AssertUnwindSafe(|| w.call(|_rt| -> usize { panic!("caller sees this") })));
+        let p = res.expect_err("call must resume_unwind the job panic");
+        assert_eq!(p.downcast_ref::<&str>().copied().unwrap_or(""), "caller sees this");
+        // Still usable afterwards.
+        assert_eq!(w.call(|_rt| 7usize).unwrap(), 7);
+    }
+
+    /// Deterministic pipelining proof on a MockClock: the caller's
+    /// "upload" segment (gather + literal build for the next layer) is
+    /// timed while the worker's "dispatch" job is still in flight, and
+    /// the resulting trace segments overlap. A two-way handshake
+    /// sequences the clock advances so the timeline is exact:
+    ///
+    ///   t=0   worker stamps dispatch start, acks
+    ///   t=10  caller begins upload       (dispatch in flight)
+    ///   t=20  caller ends upload (overlap=true), releases worker
+    ///   t=20  worker stamps dispatch end
+    #[test]
+    fn upload_overlaps_inflight_dispatch_on_mock_clock() {
+        let mock = Arc::new(MockClock::new());
+        let clock: Arc<dyn Clock> = mock.clone();
+        let w = DeviceWorker::spawn(0).unwrap();
+
+        let (start_tx, start_rx) = mpsc::channel::<()>();
+        let (ack_tx, ack_rx) = mpsc::channel::<()>();
+        let (end_tx, end_rx) = mpsc::channel::<()>();
+
+        let ((), segs) = collect_segs(&clock, || {
+            let wclock = crate::trace::seg_clock().expect("collector installed");
+            let rx = w
+                .submit_outcome(move |_rt| {
+                    start_rx.recv().unwrap();
+                    let t0 = wclock.now_ns();
+                    ack_tx.send(()).unwrap();
+                    end_rx.recv().unwrap();
+                    let t1 = wclock.now_ns();
+                    (t0, t1)
+                })
+                .unwrap();
+            start_tx.send(()).unwrap();
+            ack_rx.recv().unwrap(); // dispatch start stamped at t=0
+            mock.advance_ns(10);
+            let up = seg_begin(); // upload starts at t=10
+            mock.advance_ns(10);
+            seg_end_overlap("upload", None, up, true); // ends at t=20
+            end_tx.send(()).unwrap();
+            let (t0, t1) = match rx.recv().unwrap() {
+                JobOutcome::Done(v) => v,
+                JobOutcome::Panicked(_) => panic!("dispatch job panicked"),
+            };
+            push_seg("dispatch", Some(0), t0, t1);
+        });
+
+        let up = segs.iter().find(|s| s.name == "upload").expect("upload seg");
+        let disp = segs.iter().find(|s| s.name == "dispatch").expect("dispatch seg");
+        assert!(up.overlap, "upload must be marked as overlapping");
+        assert!(!disp.overlap);
+        assert_eq!((disp.start_ns, disp.end_ns), (0, 20));
+        assert_eq!((up.start_ns, up.end_ns), (10, 20));
+        assert!(
+            up.start_ns >= disp.start_ns && up.end_ns <= disp.end_ns,
+            "upload [{}, {}] must lie within the in-flight dispatch [{}, {}]",
+            up.start_ns,
+            up.end_ns,
+            disp.start_ns,
+            disp.end_ns
+        );
+    }
+}

@@ -154,6 +154,12 @@ pub struct PoolConfig {
     /// that have not yet streamed a token are retried (re-running a
     /// partially streamed generation would duplicate tokens client-side).
     pub max_request_retries: u32,
+    /// Pipelined quantum execution (`fastav serve --pipeline`): overlap
+    /// layer `l+1`'s KV gather + literal build with layer `l`'s
+    /// in-flight dispatch, with per-layer delta-append staging buffers.
+    /// Token-for-token identical to the strict ordering; `false`
+    /// forces the sequential upload→dispatch path (A/B benchmarking).
+    pub pipeline: bool,
 }
 
 impl Default for PoolConfig {
@@ -175,6 +181,7 @@ impl Default for PoolConfig {
             circuit_restarts: 5,
             circuit_window: Duration::from_secs(60),
             max_request_retries: 2,
+            pipeline: true,
         }
     }
 }
@@ -980,6 +987,8 @@ fn register_metrics(metrics: &Registry) {
         "fastav_requests_retried_total",
         "fastav_requests_quarantined_total",
         "fastav_client_disconnects_total",
+        "fastav_upload_ns_total",
+        "fastav_upload_hidden_ns_total",
     ] {
         metrics.counter(c);
     }
@@ -993,6 +1002,8 @@ fn register_metrics(metrics: &Registry) {
     }
     metrics.histogram("fastav_ttft_seconds");
     metrics.histogram("fastav_generate_seconds");
+    metrics.histogram("fastav_mesh_dispatch_seconds");
+    metrics.gauge("fastav_upload_overlap_ratio");
     metrics.gauge("fastav_queue_depth");
     metrics.gauge("fastav_kv_peak_bytes");
     metrics.gauge("fastav_tp_degree");

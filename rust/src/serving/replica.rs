@@ -118,6 +118,12 @@ pub trait ReplicaEngine {
     fn prefix_hit(&self, _gen: &Self::Gen) -> bool {
         false
     }
+
+    /// Hook: enable/disable pipelined quantum execution (upload of layer
+    /// `l+1` overlapped with the in-flight dispatch of layer `l`). The
+    /// pool forwards [`PoolConfig::pipeline`] at startup; engines
+    /// without a pipelined path ignore it.
+    fn set_pipeline(&mut self, _on: bool) {}
 }
 
 impl ReplicaEngine for ModelEngine {
@@ -187,6 +193,10 @@ impl ReplicaEngine for ModelEngine {
 
     fn prefix_hit(&self, gen: &Generation) -> bool {
         gen.prefix_hit()
+    }
+
+    fn set_pipeline(&mut self, on: bool) {
+        ModelEngine::set_pipeline(self, on);
     }
 }
 
@@ -324,6 +334,14 @@ struct ReplicaMetrics {
     quarantined_c: Arc<crate::metrics::Counter>,
     /// Token sends that found the client receiver gone.
     disconnects_c: Arc<crate::metrics::Counter>,
+    /// Per-shard mesh dispatch wall time (from trace "dispatch" segs).
+    dispatch_hist: Arc<crate::metrics::Histogram>,
+    /// Total KV upload (gather + literal build) nanoseconds.
+    upload_ns_c: Arc<crate::metrics::Counter>,
+    /// The subset of `upload_ns_c` that ran under an in-flight dispatch.
+    upload_hidden_ns_c: Arc<crate::metrics::Counter>,
+    /// hidden/total upload time, in permille (gauges are integers).
+    overlap_g: Arc<crate::metrics::Gauge>,
 }
 
 impl ReplicaMetrics {
@@ -356,6 +374,38 @@ impl ReplicaMetrics {
             retried_c: metrics.counter("fastav_requests_retried_total"),
             quarantined_c: metrics.counter("fastav_requests_quarantined_total"),
             disconnects_c: metrics.counter("fastav_client_disconnects_total"),
+            dispatch_hist: metrics.histogram("fastav_mesh_dispatch_seconds"),
+            upload_ns_c: metrics.counter("fastav_upload_ns_total"),
+            upload_hidden_ns_c: metrics.counter("fastav_upload_hidden_ns_total"),
+            overlap_g: metrics.gauge("fastav_upload_overlap_ratio"),
+        }
+    }
+}
+
+/// Fold a quantum's trace segments into the mesh pipeline metrics:
+/// each "dispatch" segment lands in the dispatch-seconds histogram, and
+/// "upload" segments accumulate total vs dispatch-hidden nanoseconds,
+/// from which the overlap-ratio gauge (permille) is recomputed.
+///
+/// Segments exist only for traced quanta (sampling per `trace_sample`),
+/// so these metrics are a sample of the pipeline, not a census — the
+/// ratio is unbiased because sampling is per-request, not per-segment.
+fn note_mesh_segs(m: &ReplicaMetrics, segs: &[crate::trace::Seg]) {
+    for sg in segs {
+        let dur = sg.end_ns.saturating_sub(sg.start_ns);
+        match sg.name {
+            "dispatch" => m.dispatch_hist.observe(dur as f64 / 1e9),
+            "upload" => {
+                m.upload_ns_c.add(dur);
+                if sg.overlap {
+                    m.upload_hidden_ns_c.add(dur);
+                }
+                let total = m.upload_ns_c.get();
+                if total > 0 {
+                    m.overlap_g.set(m.upload_hidden_ns_c.get() * 1000 / total);
+                }
+            }
+            _ => {}
         }
     }
 }
@@ -394,6 +444,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
     if let Some(c) = prefix.clone() {
         engine.attach_prefix_cache(c, replica_id);
     }
+    engine.set_pipeline(cfg.pipeline);
     // A replica is a device group: admission charges KV bytes against
     // the group's pooled capacity (per-device budget × tp_degree).
     let mut admission = Admission::new(cfg.group_kv_budget_bytes(), cfg.max_inflight);
@@ -633,6 +684,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
             (guard(|| step_picked(&mut engine, &mut active, &picked)), Vec::new())
         };
         let q_t1 = q_t0.map(|_| tracer.clock().now_ns());
+        note_mesh_segs(&m, &q_segs);
 
         match stepped {
             Ok(events) => {
@@ -1225,6 +1277,11 @@ fn record_segs(t: &mut ReqTrace, parent: usize, segs: &[Seg]) {
         let i = t.record_under(parent, sg.name, sg.track(), sg.start_ns, sg.end_ns);
         if let Some(sh) = sg.shard {
             t.attr_u64_on(i, "shard", sh as u64);
+        }
+        if sg.overlap {
+            // Marks work that ran concurrently with an in-flight
+            // dispatch (the pipelined engine's hidden uploads).
+            t.attr_u64_on(i, "overlap", 1);
         }
     }
 }

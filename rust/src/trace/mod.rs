@@ -496,6 +496,12 @@ pub struct Seg {
     pub shard: Option<u32>,
     pub start_ns: u64,
     pub end_ns: u64,
+    /// True when this segment ran concurrently with a dispatch already
+    /// in flight (the pipelined engine marks upload-of-layer-N+1 this
+    /// way while layer N executes). Surfaced as an `overlap` attribute
+    /// in `GET /v1/trace/{id}` and folded into the
+    /// `fastav_upload_overlap_ratio` gauge.
+    pub overlap: bool,
 }
 
 impl Seg {
@@ -539,11 +545,22 @@ pub fn seg_begin() -> Option<u64> {
 
 /// Close a segment opened by [`seg_begin`].
 pub fn seg_end(name: &'static str, shard: Option<u32>, started: Option<u64>) {
+    seg_end_overlap(name, shard, started, false);
+}
+
+/// Close a segment opened by [`seg_begin`], marking whether it
+/// overlapped an in-flight dispatch (see [`Seg::overlap`]).
+pub fn seg_end_overlap(
+    name: &'static str,
+    shard: Option<u32>,
+    started: Option<u64>,
+    overlap: bool,
+) {
     let Some(start_ns) = started else { return };
     SEG_CTX.with(|c| {
         if let Some(ctx) = c.borrow_mut().as_mut() {
             let end_ns = ctx.clock.now_ns();
-            ctx.segs.push(Seg { name, shard, start_ns, end_ns });
+            ctx.segs.push(Seg { name, shard, start_ns, end_ns, overlap });
         }
     });
 }
@@ -559,7 +576,7 @@ pub fn seg_clock() -> Option<Arc<dyn Clock>> {
 pub fn push_seg(name: &'static str, shard: Option<u32>, start_ns: u64, end_ns: u64) {
     SEG_CTX.with(|c| {
         if let Some(ctx) = c.borrow_mut().as_mut() {
-            ctx.segs.push(Seg { name, shard, start_ns, end_ns });
+            ctx.segs.push(Seg { name, shard, start_ns, end_ns, overlap: false });
         }
     });
 }

@@ -1,0 +1,311 @@
+//! Pipelined-quantum plumbing and equivalence, run against a mock
+//! engine so no AOT artifacts are needed:
+//!
+//! * **Plumbing:** [`PoolConfig::pipeline`] reaches every engine through
+//!   [`ReplicaEngine::set_pipeline`] at replica startup — including the
+//!   rebuilt engine after a supervised respawn (a rebuilt engine that
+//!   silently reverted to the default would change the execution order
+//!   mid-deployment).
+//! * **Equivalence:** the same workload driven with `pipeline: true` and
+//!   `pipeline: false` produces token-for-token identical per-request
+//!   streams and identical conservation ledgers. Each mock token is a
+//!   deterministic function of (request seed, step index), so any
+//!   reordering, loss, or duplication would change a stream.
+//!
+//! The real engine's pipelined path (`step_decode_batch_pipelined`) is
+//! equivalence-argued where it overlaps: staging layer `l+1` touches
+//! only layer `l+1` state, which the sequential order leaves untouched
+//! until its own iteration. The delta-append gather it stages with is
+//! property-tested against the stateless gather in `kvcache::gather`.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastav::coordinator::{Event, GenRequest, Priority};
+use fastav::metrics::Registry;
+use fastav::model::{GenerateResult, StepEvent};
+use fastav::policy::PruningSpec;
+use fastav::serving::{PoolConfig, ReplicaEngine, ReplicaPool};
+use fastav::tokens::Segment;
+use fastav::util::proptest::{run_prop, Gen};
+
+// ---------------------------------------------------------------- mock
+
+/// Deterministic token stream: mixing up either the request identity or
+/// the per-request step counter changes the token.
+fn mock_token(seed: u64, step: usize) -> u32 {
+    let x = seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(step as u64)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    (x >> 33) as u32 % 1000
+}
+
+struct PipeGen {
+    seed: u64,
+    prefill_left: usize,
+    produced: usize,
+    total: usize,
+}
+
+/// What the pool told this engine family about pipelining, observable
+/// from the test body.
+#[derive(Default)]
+struct PipeStats {
+    /// `set_pipeline` invocations (one per engine build, respawns
+    /// included).
+    set_calls: AtomicUsize,
+    /// Last value received.
+    last_on: AtomicBool,
+    /// One-shot step panic trigger (exercises the respawn path).
+    panic_once: AtomicBool,
+}
+
+struct PipeMock {
+    stats: Arc<PipeStats>,
+    /// Engine-local mirror of the pool's pipeline flag.
+    pipeline: bool,
+}
+
+impl PipeMock {
+    fn advance(&self, gen: &mut PipeGen) -> StepEvent {
+        if gen.prefill_left > 0 {
+            gen.prefill_left -= 1;
+            if gen.prefill_left > 0 {
+                return StepEvent::Prefilled { layer: 0 };
+            }
+        } else if gen.produced >= gen.total {
+            return StepEvent::Done;
+        }
+        let tok = mock_token(gen.seed, gen.produced);
+        gen.produced += 1;
+        StepEvent::Token(tok)
+    }
+}
+
+impl ReplicaEngine for PipeMock {
+    type Gen = PipeGen;
+
+    fn begin(&mut self, req: &GenRequest) -> anyhow::Result<PipeGen> {
+        Ok(PipeGen {
+            seed: req.prompt.iter().fold(0u64, |a, &t| a * 31 + t as u64),
+            prefill_left: 2,
+            produced: 0,
+            total: req.max_gen.max(1),
+        })
+    }
+
+    fn step(&mut self, gen: &mut PipeGen) -> anyhow::Result<StepEvent> {
+        if self.stats.panic_once.swap(false, Ordering::SeqCst) {
+            panic!("injected step panic (pipeline respawn test)");
+        }
+        Ok(self.advance(gen))
+    }
+
+    fn is_decoding(&self, gen: &PipeGen) -> bool {
+        gen.prefill_left == 0 && gen.produced > 0 && gen.produced < gen.total
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        8
+    }
+
+    fn step_batch(&mut self, gens: &mut [&mut PipeGen]) -> anyhow::Result<Vec<StepEvent>> {
+        // The fused path must behave identically whichever mode the
+        // pool configured — exactly the real engine's contract.
+        let _mode = self.pipeline;
+        Ok(gens.iter_mut().map(|g| self.advance(g)).collect())
+    }
+
+    fn is_done(&self, gen: &PipeGen) -> bool {
+        gen.prefill_left == 0 && gen.produced >= gen.total
+    }
+
+    fn finish(&mut self, gen: PipeGen) -> GenerateResult {
+        GenerateResult {
+            tokens: (0..gen.produced).map(|s| mock_token(gen.seed, s)).collect(),
+            prompt_len: 4,
+            flops: Default::default(),
+            relative_flops: 0.0,
+            peak_kv_bytes: 1000,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            decode_steps: gen.produced.saturating_sub(1),
+            live_counts: Vec::new(),
+            prefix_hit: false,
+            prefix_tokens_reused: 0,
+        }
+    }
+
+    fn kv_bytes(&self, _gen: &PipeGen) -> usize {
+        1000
+    }
+
+    fn estimate_bytes(&self, _req: &GenRequest) -> usize {
+        1000
+    }
+
+    fn set_pipeline(&mut self, on: bool) {
+        self.pipeline = on;
+        self.stats.set_calls.fetch_add(1, Ordering::SeqCst);
+        self.stats.last_on.store(on, Ordering::SeqCst);
+    }
+}
+
+fn pipe_request(seed_tok: u32, max_gen: usize) -> GenRequest {
+    GenRequest {
+        prompt: vec![seed_tok, 2, 3, 4],
+        segments: vec![Segment::Ctrl, Segment::Vis, Segment::Aud, Segment::Text],
+        frame_of: vec![-1, 0, -1, -1],
+        spec: PruningSpec::off(),
+        max_gen,
+        sampling: Default::default(),
+        priority: Priority::Normal,
+        deadline: None,
+        profile: None,
+    }
+}
+
+fn pipe_pool(cfg: PoolConfig) -> (ReplicaPool, Arc<PipeStats>) {
+    let stats = Arc::new(PipeStats::default());
+    let s2 = Arc::clone(&stats);
+    let pool = ReplicaPool::start_with_factory(cfg, Arc::new(Registry::default()), move |_r| {
+        Ok(PipeMock { stats: Arc::clone(&s2), pipeline: true })
+    })
+    .expect("mock pool starts");
+    (pool, stats)
+}
+
+/// Collect every request's full token stream (panics on stream errors).
+fn streams(receivers: Vec<std::sync::mpsc::Receiver<Event>>) -> Vec<Vec<u32>> {
+    receivers
+        .into_iter()
+        .map(|rx| {
+            let mut toks = Vec::new();
+            loop {
+                match rx.recv_timeout(Duration::from_secs(10)) {
+                    Ok(Event::Token(t)) => toks.push(t),
+                    Ok(Event::Done(res)) => {
+                        assert_eq!(res.tokens, toks, "Done result diverges from stream");
+                        return toks;
+                    }
+                    Ok(Event::Error(e)) => panic!("request failed: {}", e),
+                    Err(e) => panic!("stream stalled: {}", e),
+                }
+            }
+        })
+        .collect()
+}
+
+fn settled(pool: &ReplicaPool) -> fastav::serving::PoolStats {
+    let t0 = Instant::now();
+    loop {
+        let s = pool.stats();
+        if (s.conserved() && s.in_flight == 0 && s.in_queue == 0)
+            || t0.elapsed() > Duration::from_secs(10)
+        {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Drive one workload at the given pipeline setting.
+fn drive(
+    pipeline: bool,
+    reqs: &[(u32, usize)],
+) -> (Vec<Vec<u32>>, fastav::serving::PoolStats, Arc<PipeStats>) {
+    let (pool, stats) = pipe_pool(PoolConfig {
+        replicas: 1,
+        queue_cap: 64,
+        max_inflight: 4,
+        pipeline,
+        ..Default::default()
+    });
+    let receivers: Vec<_> = reqs
+        .iter()
+        .map(|&(seed, max_gen)| pool.submit(pipe_request(seed, max_gen)).unwrap().1)
+        .collect();
+    let streams = streams(receivers);
+    let ledger = settled(&pool);
+    (streams, ledger, stats)
+}
+
+// --------------------------------------------------------------- tests
+
+#[test]
+fn pool_forwards_pipeline_flag_to_every_engine() {
+    for on in [true, false] {
+        let (pool, stats) = pipe_pool(PoolConfig {
+            replicas: 2,
+            queue_cap: 8,
+            pipeline: on,
+            ..Default::default()
+        });
+        let rx = pool.submit(pipe_request(7, 2)).unwrap().1;
+        let _ = streams(vec![rx]);
+        // One call per replica engine, all with the configured value.
+        // The second replica starts concurrently — poll briefly.
+        let t0 = Instant::now();
+        while stats.set_calls.load(Ordering::SeqCst) < 2
+            && t0.elapsed() < Duration::from_secs(5)
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(
+            stats.set_calls.load(Ordering::SeqCst) >= 2,
+            "set_pipeline not applied on every replica"
+        );
+        assert_eq!(stats.last_on.load(Ordering::SeqCst), on);
+        drop(pool);
+    }
+}
+
+#[test]
+fn respawned_engine_gets_the_pipeline_flag_again() {
+    let (pool, stats) = pipe_pool(PoolConfig {
+        replicas: 1,
+        queue_cap: 8,
+        pipeline: false,
+        restart_backoff: Duration::from_millis(1),
+        ..Default::default()
+    });
+    // Let the first engine come up, then arm a one-shot step panic: the
+    // supervisor rebuilds the engine and must re-apply the flag.
+    let warm = pool.submit(pipe_request(1, 2)).unwrap().1;
+    let _ = streams(vec![warm]);
+    let before = stats.set_calls.load(Ordering::SeqCst);
+    stats.panic_once.store(true, Ordering::SeqCst);
+    let rx = pool.submit(pipe_request(2, 2)).unwrap().1;
+    let _ = streams(vec![rx]); // retried on the rebuilt engine
+    assert!(
+        stats.set_calls.load(Ordering::SeqCst) > before,
+        "rebuilt engine never saw set_pipeline"
+    );
+    assert!(!stats.last_on.load(Ordering::SeqCst), "respawn lost pipeline=false");
+}
+
+#[test]
+fn prop_pipelined_equals_sequential_streams() {
+    run_prop("pipeline_stream_equivalence", 10, |g: &mut Gen| {
+        let n = g.usize_in(2, 10);
+        let reqs: Vec<(u32, usize)> = (0..n)
+            .map(|i| (100 + i as u32 * 7, g.usize_in(1, 12)))
+            .collect();
+
+        let (on, on_ledger, on_stats) = drive(true, &reqs);
+        let (off, off_ledger, off_stats) = drive(false, &reqs);
+
+        assert_eq!(on, off, "pipeline on/off token streams must be identical");
+        assert!(on_ledger.conserved(), "pipelined ledger: {:?}", on_ledger);
+        assert!(off_ledger.conserved(), "sequential ledger: {:?}", off_ledger);
+        assert_eq!(on_ledger.submitted, off_ledger.submitted);
+        assert_eq!(on_ledger.completed, off_ledger.completed);
+        assert_eq!(on_ledger.failed, off_ledger.failed);
+        assert_eq!(on_ledger.completed, n as u64);
+        // Both runs actually configured their engines.
+        assert!(on_stats.last_on.load(Ordering::SeqCst));
+        assert!(!off_stats.last_on.load(Ordering::SeqCst));
+    });
+}

@@ -1,0 +1,40 @@
+#!/usr/bin/env sh
+# Run every serve_load benchmark phase and rewrite the BENCH_*.json
+# files at the repository root with measured=true results.
+#
+# Phases (one process, sequential):
+#   1-2  mixed short/long HTTP load, single replica vs pool of 4  -> BENCH_serving.json
+#   3    repeated-prefix workload (AV-prefix cache)               -> BENCH_prefix.json
+#   4    saturated decode, batched vs single-step                 -> BENCH_batch.json
+#   5    mixed quality/aggressive profiles over /v2/generate      -> BENCH_policy.json
+#   6    chaos soak under a seeded FaultPlan                      -> BENCH_chaos.json
+#   7    mesh worker-queue overhead + pipelined vs sequential     -> BENCH_mesh.json
+#
+# Usage: scripts/bench.sh [model] [n_requests]
+
+set -eu
+
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "scripts/bench.sh: no Rust toolchain on this machine (cargo not found)."
+    echo "Nothing was run; the committed BENCH_*.json placeholders are unchanged."
+    echo "Install a Rust toolchain (and build artifacts: python/compile/aot.py),"
+    echo "then re-run this script to produce measured results."
+    exit 0
+fi
+
+MODEL="${1:-vl2sim}"
+N="${2:-48}"
+
+if [ ! -d "rust/artifacts/$MODEL" ]; then
+    echo "scripts/bench.sh: no AOT artifacts for model '$MODEL' (rust/artifacts/$MODEL missing)."
+    echo "Build them first (python/compile/aot.py), then re-run."
+    exit 1
+fi
+
+echo "running serve_load phases 1-7 (model=$MODEL, n=$N)..."
+cargo run --release --example serve_load "$MODEL" "$N"
+echo
+echo "rewrote: BENCH_serving.json BENCH_prefix.json BENCH_batch.json" \
+     "BENCH_policy.json BENCH_chaos.json BENCH_mesh.json (measured=true)"
