@@ -46,6 +46,12 @@
 //! l+1 overlapped with layer l's dispatch vs strict ordering). Records
 //! everything in `BENCH_mesh.json`.
 //!
+//! An eighth phase drives the **tiered KV spill** (docs/TIERED_KV.md):
+//! 4 distinct warm AV prefixes round-robin against a device prefix
+//! budget that holds exactly one of them, tier on vs off — comparing
+//! warm-hit rate, full re-prefills after warmup, and p50 resume
+//! latency (promotion vs re-prefill). Records `BENCH_tiered.json`.
+//!
 //! ```sh
 //! cargo run --release --example serve_load [model] [n_requests]
 //! ```
@@ -424,6 +430,164 @@ fn reused_tokens(resp: &[u8]) -> usize {
         .and_then(|s| Json::parse(s).ok())
         .map(|j| j.get("prefix_tokens_reused").as_usize().unwrap_or(0))
         .unwrap_or(0)
+}
+
+/// Tiered-KV phase result: one configuration (tier on or off) under a
+/// working set of `samples` warm prefixes against a device budget that
+/// holds only one of them.
+struct TieredRun {
+    tiered: bool,
+    completed: usize,
+    /// Requests after the warmup pass (each *should* be warm).
+    warm_requests: usize,
+    warm_hits: u64,
+    /// Device+tier misses after warmup = full AV re-prefills paid.
+    reprefills: u64,
+    promotions: u64,
+    demotions: u64,
+    warm_lat: BenchStats,
+}
+
+impl TieredRun {
+    fn warm_hit_rate(&self) -> f64 {
+        self.warm_hits as f64 / (self.warm_requests as f64).max(1.0)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tiered", Json::Bool(self.tiered)),
+            ("completed", Json::num(self.completed as f64)),
+            ("warm_requests", Json::num(self.warm_requests as f64)),
+            ("warm_hits", Json::num(self.warm_hits as f64)),
+            ("warm_hit_rate", Json::num(self.warm_hit_rate())),
+            ("full_reprefills_after_warmup", Json::num(self.reprefills as f64)),
+            ("tier_promotions", Json::num(self.promotions as f64)),
+            ("tier_demotions", Json::num(self.demotions as f64)),
+            (
+                "resume_latency",
+                Json::obj(vec![
+                    ("mean_s", Json::num(self.warm_lat.mean)),
+                    ("p50_s", Json::num(self.warm_lat.p50)),
+                    ("p95_s", Json::num(self.warm_lat.p95)),
+                    ("max_s", Json::num(self.warm_lat.max)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Bytes one published AV-prefix entry occupies, measured on a probe
+/// pool with an unlimited budget (sizes the phase-8 device budget so
+/// the `samples`-prefix working set is `samples`× over budget).
+fn probe_prefix_entry_bytes(model: &str, plan: PruningPlan, layout: &Layout) -> usize {
+    let cfg = PoolConfig { replicas: 1, queue_cap: 16, max_inflight: 2, warmup: true, ..Default::default() };
+    let coord = Arc::new(
+        Coordinator::start_pool(common::artifact_root(), model.to_string(), cfg)
+            .expect("start probe pool"),
+    );
+    let handler =
+        make_handler(Arc::clone(&coord), layout.clone(), plan_registry(&plan), LONG_MAX_GEN, 1234);
+    let server = Server::bind("127.0.0.1:0", 2, handler).expect("bind");
+    let addr = server.local_addr().to_string();
+    let stop = server.shutdown_handle();
+    let server_thread = std::thread::spawn(move || server.serve());
+    let _ = request(&addr, "POST", "/v1/generate", prefix_body(0, 0).as_bytes());
+    let bytes = match request(&addr, "GET", "/v1/pool", b"") {
+        Ok((200, body)) => Json::parse(std::str::from_utf8(&body).unwrap_or(""))
+            .unwrap_or(Json::Null)
+            .get("prefix_cache")
+            .get("bytes")
+            .as_f64()
+            .unwrap_or(0.0) as usize,
+        _ => 0,
+    };
+    stop.store(true, Ordering::SeqCst);
+    let _ = server_thread.join();
+    bytes.max(1)
+}
+
+/// Drive the phase-8 workload: `samples` distinct AV prefixes round-
+/// robin against a device budget holding one entry. With the tier on,
+/// every post-warmup request should promote from RAM (zero full
+/// re-prefills); with it off, eviction discards and every re-request
+/// re-prefills.
+fn drive_tiered(
+    model: &str,
+    plan: PruningPlan,
+    layout: &Layout,
+    device_budget: usize,
+    samples: usize,
+    passes: usize,
+    tiered: bool,
+) -> TieredRun {
+    let cfg = PoolConfig {
+        replicas: 1,
+        queue_cap: 256,
+        max_inflight: 4,
+        warmup: true,
+        prefix_cache_bytes: device_budget,
+        tier_ram_bytes: if tiered { 512 << 20 } else { 0 },
+        tier_prune_interval: std::time::Duration::from_millis(5),
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::start_pool(common::artifact_root(), model.to_string(), cfg)
+            .expect("start pool"),
+    );
+    let handler =
+        make_handler(Arc::clone(&coord), layout.clone(), plan_registry(&plan), LONG_MAX_GEN, 1234);
+    let server = Server::bind("127.0.0.1:0", 4, handler).expect("bind");
+    let addr = server.local_addr().to_string();
+    let stop = server.shutdown_handle();
+    let server_thread = std::thread::spawn(move || server.serve());
+
+    let mut completed = 0usize;
+    let mut warm_lat = Vec::new();
+    // Sequential round-robin: every re-request of a sample arrives
+    // after `samples - 1` other prefixes evicted it from the device.
+    for pass in 0..passes {
+        for s in 0..samples {
+            let body = prefix_body(s, pass);
+            let t = Instant::now();
+            if let Ok((200, _)) = request(&addr, "POST", "/v1/generate", body.as_bytes()) {
+                completed += 1;
+                if pass > 0 {
+                    warm_lat.push(t.elapsed().as_secs_f64());
+                }
+            }
+        }
+    }
+
+    let pool = match request(&addr, "GET", "/v1/pool", b"") {
+        Ok((200, body)) => {
+            Json::parse(std::str::from_utf8(&body).unwrap_or("")).unwrap_or(Json::Null)
+        }
+        _ => Json::Null,
+    };
+    let n = |j: &Json| j.as_f64().unwrap_or(0.0) as u64;
+    let p = pool.get("prefix_cache");
+    let (hits, misses) = (n(p.get("hits")), n(p.get("misses")));
+    let tier = pool.get("tier");
+    let promotions =
+        n(tier.get("ram").get("promotions")) + n(tier.get("disk").get("promotions"));
+    let demotions =
+        n(tier.get("ram").get("demotions")) + n(tier.get("disk").get("demotions"));
+    stop.store(true, Ordering::SeqCst);
+    let _ = server_thread.join();
+
+    TieredRun {
+        tiered,
+        completed,
+        warm_requests: samples * passes.saturating_sub(1),
+        warm_hits: hits,
+        reprefills: misses.saturating_sub(samples as u64),
+        promotions,
+        demotions,
+        warm_lat: lat_stats(
+            if tiered { "tiered warm (promote)" } else { "untiered warm (re-prefill)" },
+            warm_lat,
+        ),
+    }
 }
 
 /// One saturated-decode measurement: `occupancy` concurrent
@@ -1145,4 +1309,63 @@ fn main() {
     ]);
     std::fs::write("BENCH_mesh.json", out.to_string() + "\n").expect("write BENCH_mesh.json");
     println!("wrote BENCH_mesh.json");
+
+    // --- Phase 8: tiered KV spill (working set 4× device budget). ------
+    let tier_samples = 4usize;
+    let tier_passes = 4usize;
+    println!(
+        "\ndriving tiered-KV workload: {} warm prefixes, device budget holds 1, tier on vs off",
+        tier_samples
+    );
+    let entry_bytes = probe_prefix_entry_bytes(&model, plan.clone(), &layout);
+    println!("[tiered] one prefix entry = {} bytes (device budget)", entry_bytes);
+    let mut tier_runs = Vec::new();
+    for &tiered in &[true, false] {
+        let r = drive_tiered(
+            &model,
+            plan.clone(),
+            &layout,
+            entry_bytes,
+            tier_samples,
+            tier_passes,
+            tiered,
+        );
+        println!(
+            "[tiered] tier {}: warm-hit rate {:.2}, {} full re-prefills, \
+             p50 resume {:.4}s ({} promotions / {} demotions)",
+            if tiered { "on " } else { "off" },
+            r.warm_hit_rate(),
+            r.reprefills,
+            r.warm_lat.p50,
+            r.promotions,
+            r.demotions
+        );
+        tier_runs.push(r);
+    }
+    let out = Json::obj(vec![
+        ("benchmark", Json::str("serve_load_tiered")),
+        ("model", Json::str(&model)),
+        ("samples", Json::num(tier_samples as f64)),
+        ("passes", Json::num(tier_passes as f64)),
+        ("device_budget_bytes", Json::num(entry_bytes as f64)),
+        ("runs", Json::arr(tier_runs.iter().map(|r| r.to_json()))),
+        ("measured", Json::Bool(true)),
+        (
+            "methodology",
+            Json::str(
+                "4 distinct AV samples requested round-robin for `passes` passes \
+                 against a device prefix budget sized (by a probe pool) to hold \
+                 exactly one entry, so every re-request finds its prefix evicted. \
+                 tiered=true attaches a 512 MiB host-RAM spill tier (demote on \
+                 evict, promote on probe, background pruner at 5 ms); tiered=false \
+                 is the discard-on-evict baseline. warm_hit_rate and \
+                 full_reprefills_after_warmup come from GET /v1/pool \
+                 prefix_cache/tier blocks; resume_latency is per-request wall time \
+                 for post-warmup requests (promotion + suffix vs full re-prefill).",
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_tiered.json", out.to_string() + "\n")
+        .expect("write BENCH_tiered.json");
+    println!("wrote BENCH_tiered.json");
 }

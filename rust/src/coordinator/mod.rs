@@ -243,6 +243,18 @@ impl Coordinator {
         self.pool.flush_prefix_cache()
     }
 
+    /// Drain every cache tier — device, host RAM, and disk — and reset
+    /// the tier pruner's checkpoint (`POST /v1/cache/flush`).
+    pub fn flush_all_tiers(&self) -> crate::serving::CacheFlushReport {
+        self.pool.flush_all_tiers()
+    }
+
+    /// Spill-tier accounting (the `tier` block of `GET /v1/pool`);
+    /// `None` when the pool runs device-only.
+    pub fn tier_stats(&self) -> Option<crate::kvcache::TierStats> {
+        self.pool.tier_stats()
+    }
+
     pub fn replica_count(&self) -> usize {
         self.pool.replica_count()
     }

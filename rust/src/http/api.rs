@@ -230,9 +230,62 @@ fn pool_status(coord: &Coordinator) -> Response {
                 ),
             ]),
         ),
+        ("tier", tier_summary(coord)),
         ("latency", latency_summary(coord)),
     ]);
     Response::json(200, out.to_string())
+}
+
+/// Spill-tier block for `/v1/pool`: per-tier occupancy, movement
+/// counters, pruner progress, and the promotion-latency summary.
+/// `{"enabled": false}` when the pool runs device-only.
+fn tier_summary(coord: &Coordinator) -> Json {
+    let Some(t) = coord.tier_stats() else {
+        return Json::obj(vec![("enabled", Json::Bool(false))]);
+    };
+    let promote = coord.metrics.histogram("fastav_tier_promote_seconds");
+    Json::obj(vec![
+        ("enabled", Json::Bool(true)),
+        (
+            "pending",
+            Json::obj(vec![
+                ("entries", Json::num(t.pending_entries as f64)),
+                ("bytes", Json::num(t.pending_bytes as f64)),
+            ]),
+        ),
+        (
+            "ram",
+            Json::obj(vec![
+                ("entries", Json::num(t.ram_entries as f64)),
+                ("bytes", Json::num(t.ram_bytes as f64)),
+                ("demotions", Json::num(t.demotions_ram as f64)),
+                ("promotions", Json::num(t.promotions_ram as f64)),
+                ("drops", Json::num(t.drops_ram as f64)),
+            ]),
+        ),
+        (
+            "disk",
+            Json::obj(vec![
+                ("entries", Json::num(t.disk_entries as f64)),
+                ("bytes", Json::num(t.disk_bytes as f64)),
+                ("file_bytes", Json::num(t.disk_file_bytes as f64)),
+                ("demotions", Json::num(t.demotions_disk as f64)),
+                ("promotions", Json::num(t.promotions_disk as f64)),
+                ("drops", Json::num(t.drops_disk as f64)),
+            ]),
+        ),
+        (
+            "pruner",
+            Json::obj(vec![
+                ("runs", Json::num(t.prune_runs as f64)),
+                ("entries", Json::num(t.prune_entries as f64)),
+                ("bytes", Json::num(t.prune_bytes as f64)),
+                ("cursor_stage", Json::num(t.cursor.stage as f64)),
+                ("cursor_ram_seq", Json::num(t.cursor.ram_seq as f64)),
+            ]),
+        ),
+        ("promote_latency", hist_summary(&promote)),
+    ])
 }
 
 /// Supervision block for `/v1/pool`: replica health census plus the
@@ -379,11 +432,41 @@ fn trace_get(path: &str, coord: &Coordinator) -> Response {
     Response::json(200, out.to_string())
 }
 
+/// `POST /v1/cache/flush`: drain every tier — device prefix cache plus
+/// the host-RAM and disk spill tiers — and reset the pruner checkpoint.
+/// Top-level `flushed_entries`/`freed_bytes` keep the pre-tier response
+/// shape (summed across tiers); `tiers` breaks the totals out.
 fn cache_flush(coord: &Coordinator) -> Response {
-    let (flushed, freed) = coord.flush_prefix_cache();
+    let report = coord.flush_all_tiers();
+    let tier = report.tier.unwrap_or_default();
+    let total_entries = report.device_entries
+        + tier.pending_entries
+        + tier.ram_entries
+        + tier.disk_entries;
+    let total_bytes =
+        report.device_bytes + tier.pending_bytes + tier.ram_bytes + tier.disk_bytes;
+    let per_tier = |entries: usize, bytes: usize| {
+        Json::obj(vec![
+            ("flushed_entries", Json::num(entries as f64)),
+            ("freed_bytes", Json::num(bytes as f64)),
+        ])
+    };
     let out = Json::obj(vec![
-        ("flushed_entries", Json::num(flushed as f64)),
-        ("freed_bytes", Json::num(freed as f64)),
+        ("flushed_entries", Json::num(total_entries as f64)),
+        ("freed_bytes", Json::num(total_bytes as f64)),
+        (
+            "tiers",
+            Json::obj(vec![
+                ("device", per_tier(report.device_entries, report.device_bytes)),
+                (
+                    "pending",
+                    per_tier(tier.pending_entries, tier.pending_bytes),
+                ),
+                ("ram", per_tier(tier.ram_entries, tier.ram_bytes)),
+                ("disk", per_tier(tier.disk_entries, tier.disk_bytes)),
+            ]),
+        ),
+        ("pruner_checkpoint_reset", Json::Bool(report.tier.is_some())),
     ]);
     Response::json(200, out.to_string())
 }

@@ -31,11 +31,16 @@
 pub mod block;
 pub mod gather;
 pub mod prefix;
+pub mod tier;
 
 pub use block::{block_bytes, BlockPool, BlockPoolStats, BLOCK_TOKENS};
 pub use gather::{GatherBuf, GatherStats};
 pub use prefix::{
     PerConfigPrefixStats, PrefixCache, PrefixCacheStats, PrefixEntry, PrefixLease,
+};
+pub use tier::{
+    PruneBudget, PruneCursor, PruneRunReport, SerializedEntry, TierConfig, TierFlush,
+    TierHit, TierStats, TieredStore,
 };
 
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -36,6 +36,7 @@ use std::sync::{Arc, Mutex};
 use crate::metrics::{Counter, Gauge, Registry};
 
 use super::block::BlockPool;
+use super::tier::TieredStore;
 use super::LayerCache;
 
 // ------------------------------------------------------------- hashing
@@ -318,6 +319,10 @@ pub struct PrefixCache {
     evictions: AtomicU64,
     insertions: AtomicU64,
     sinks: Mutex<Option<MetricSinks>>,
+    /// Optional spill store: budget evictions demote into it instead of
+    /// dropping, and exact-lookup misses promote out of it (see
+    /// [`super::tier::TieredStore`] and `docs/TIERED_KV.md`).
+    tier: Mutex<Option<Arc<TieredStore>>>,
 }
 
 impl PrefixCache {
@@ -336,7 +341,21 @@ impl PrefixCache {
             evictions: AtomicU64::new(0),
             insertions: AtomicU64::new(0),
             sinks: Mutex::new(None),
+            tier: Mutex::new(None),
         }
+    }
+
+    /// Attach the spill store this cache demotes into on eviction and
+    /// promotes from on an exact-lookup device miss. At most one;
+    /// attaching again replaces it. Without a tier, eviction drops
+    /// entries exactly as before.
+    pub fn attach_tier(&self, tier: Arc<TieredStore>) {
+        *self.tier.lock().unwrap() = Some(tier);
+    }
+
+    /// The attached spill store, if any.
+    pub fn tier(&self) -> Option<Arc<TieredStore>> {
+        self.tier.lock().unwrap().clone()
     }
 
     /// The block pool entry payloads must allocate from.
@@ -426,22 +445,51 @@ impl PrefixCache {
     ) -> Option<PrefixLease> {
         let seg_t0 = crate::trace::seg_begin();
         let exact_key = hash_mix(&[cfg, hash_tokens(0, tokens)]);
-        let found = {
+        // Device probe. The slot is pinned *provisionally* (active += 1)
+        // so eviction cannot race the predicate below; a rejection
+        // releases the pin before the miss is counted.
+        let mut found = {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
             let tick = inner.tick;
-            let found = match inner.slots.get_mut(&exact_key) {
-                Some(slot) if pred(&slot.entry) => {
-                    slot.active += 1;
-                    slot.last_used = tick;
-                    Some(Arc::clone(&slot.entry))
-                }
-                _ => None,
-            };
-            inner.count_cfg(cfg, found.is_some());
-            found
+            inner.slots.get_mut(&exact_key).map(|slot| {
+                slot.active += 1;
+                slot.last_used = tick;
+                Arc::clone(&slot.entry)
+            })
         };
-        let lease = match found {
+        // Device miss: promote from the spill tiers. Deserialization is
+        // the paying request's own work — still far cheaper than the
+        // full front prefill a true miss costs. The promoted entry is
+        // re-adopted device-side pre-pinned, so it cannot be evicted
+        // before this request leases it (re-adoption may itself demote
+        // colder entries back into the tier).
+        if found.is_none() {
+            if let Some(tier) = self.tier() {
+                if let Some((entry, _hit)) = tier.promote(&self.pool, cfg, tokens) {
+                    self.insert_arc(cfg, tokens, Arc::clone(&entry), true);
+                    found = Some(entry);
+                }
+            }
+        }
+        let accepted = match found {
+            Some(entry) => {
+                if pred(&entry) {
+                    Some(entry)
+                } else {
+                    // Rejected (e.g. keep-set mismatch): nothing is
+                    // reused, so unpin and count a miss.
+                    self.release_lease(exact_key);
+                    None
+                }
+            }
+            None => None,
+        };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.count_cfg(cfg, accepted.is_some());
+        }
+        let lease = match accepted {
             Some(entry) => {
                 self.count_hit();
                 Some(PrefixLease { cache: Arc::clone(self), key: exact_key, entry })
@@ -490,15 +538,37 @@ impl PrefixCache {
     /// uses). Returns `(entry key, entry bytes)`.
     pub fn peek(&self, cfg: u64, tokens: &[u32]) -> Option<(u64, usize)> {
         let key = hash_mix(&[cfg, hash_tokens(0, tokens)]);
-        let inner = self.inner.lock().unwrap();
-        inner.slots.get(&key).map(|s| (key, s.entry.bytes))
+        let device = {
+            let inner = self.inner.lock().unwrap();
+            inner.slots.get(&key).map(|s| (key, s.entry.bytes))
+        };
+        // Tier-resident entries count as shared too — the resume path
+        // will promote them instead of recomputing. Index lookup only:
+        // no deserialization or file I/O on the admission path.
+        device.or_else(|| {
+            self.tier().and_then(|t| t.peek(cfg, tokens)).map(|bytes| (key, bytes))
+        })
     }
 
     /// Insert a frozen entry for `tokens` under `cfg`; no-op if an entry
     /// for the exact prefix already exists (first writer wins — payloads
     /// are deterministic, so both are identical). Evicts LRU lease-free
-    /// entries afterwards if the byte budget is exceeded.
+    /// entries afterwards if the byte budget is exceeded; with a tier
+    /// attached, the evicted entries are **demoted** (staged for the
+    /// background pruner) instead of dropped.
     pub fn insert(&self, cfg: u64, tokens: &[u32], entry: PrefixEntry) -> bool {
+        self.insert_arc(cfg, tokens, Arc::new(entry), false)
+    }
+
+    /// [`Self::insert`] over an already-shared entry. The tier promotion
+    /// path re-adopts a promoted `Arc` without copying the payload;
+    /// `pinned` makes the new slot (or, on a lost insert race, the
+    /// concurrent winner's slot) carry one active lease already, so
+    /// eviction cannot drop the entry before the promoting request
+    /// leases it — the caller owns the matching [`Self::release_lease`]
+    /// via the `PrefixLease` it constructs (or releases directly on a
+    /// predicate rejection).
+    fn insert_arc(&self, cfg: u64, tokens: &[u32], entry: Arc<PrefixEntry>, pinned: bool) -> bool {
         debug_assert!(
             entry
                 .full_layers
@@ -507,30 +577,45 @@ impl PrefixCache {
                 .all(|c| c.pool().same_pool(&self.pool)),
             "entry blocks must come from the cache's pool"
         );
-        let inserted = {
+        let (inserted, victims) = {
             let mut inner = self.inner.lock().unwrap();
             let key = hash_mix(&[cfg, hash_tokens(0, tokens)]);
-            if inner.slots.contains_key(&key) {
-                false
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(slot) = inner.slots.get_mut(&key) {
+                if pinned {
+                    slot.active += 1;
+                    slot.last_used = tick;
+                }
+                (false, Vec::new())
             } else {
-                inner.tick += 1;
-                let tick = inner.tick;
                 inner.bytes += entry.bytes;
                 inner.slots.insert(
                     key,
                     Slot {
-                        entry: Arc::new(entry),
+                        entry,
                         tokens: tokens.to_vec(),
                         cfg,
-                        active: 0,
+                        active: usize::from(pinned),
                         last_used: tick,
                     },
                 );
                 inner.tries.entry(cfg).or_insert_with(Trie::new).insert(tokens, key);
-                Self::evict_over_budget(&mut inner, self.budget_bytes, &self.evictions);
-                true
+                let victims =
+                    Self::evict_over_budget(&mut inner, self.budget_bytes, &self.evictions);
+                (true, victims)
             }
         };
+        // Demotion staging happens *after* the inner lock is released:
+        // an O(1) Arc move into the tier's pending queue — the pruner
+        // thread does the serialization and spill I/O later.
+        if !victims.is_empty() {
+            if let Some(tier) = self.tier() {
+                for (vcfg, vtokens, ventry) in victims {
+                    tier.stage_demotion(vcfg, vtokens, ventry);
+                }
+            }
+        }
         if inserted {
             self.insertions.fetch_add(1, Ordering::Relaxed);
         }
@@ -549,7 +634,15 @@ impl PrefixCache {
         inserted
     }
 
-    fn evict_over_budget(inner: &mut Inner, budget: usize, evictions: &AtomicU64) {
+    /// Evict LRU lease-free entries until the budget holds, returning
+    /// the victims so the caller can demote them into the tier (with no
+    /// tier attached they are simply dropped, the pre-tier behavior).
+    fn evict_over_budget(
+        inner: &mut Inner,
+        budget: usize,
+        evictions: &AtomicU64,
+    ) -> Vec<(u64, Vec<u32>, Arc<PrefixEntry>)> {
+        let mut victims = Vec::new();
         while inner.bytes > budget {
             let victim = inner
                 .slots
@@ -558,31 +651,37 @@ impl PrefixCache {
                 .min_by_key(|(_, s)| s.last_used)
                 .map(|(&k, _)| k);
             let Some(key) = victim else { break };
-            Self::evict_key(inner, key);
+            if let Some(v) = Self::evict_key(inner, key) {
+                victims.push(v);
+            }
             evictions.fetch_add(1, Ordering::Relaxed);
         }
+        victims
     }
 
-    fn evict_key(inner: &mut Inner, key: u64) {
-        if let Some(slot) = inner.slots.remove(&key) {
-            inner.bytes = inner.bytes.saturating_sub(slot.entry.bytes);
-            if let Some(trie) = inner.tries.get_mut(&slot.cfg) {
-                trie.remove(&slot.tokens);
-                // Drop the whole per-config trie once its last entry is
-                // gone (only the root remains) — config keys are
-                // unbounded across a server's lifetime.
-                if trie.nodes[0].children.is_empty() {
-                    inner.tries.remove(&slot.cfg);
-                }
+    fn evict_key(inner: &mut Inner, key: u64) -> Option<(u64, Vec<u32>, Arc<PrefixEntry>)> {
+        let slot = inner.slots.remove(&key)?;
+        inner.bytes = inner.bytes.saturating_sub(slot.entry.bytes);
+        if let Some(trie) = inner.tries.get_mut(&slot.cfg) {
+            trie.remove(&slot.tokens);
+            // Drop the whole per-config trie once its last entry is
+            // gone (only the root remains) — config keys are
+            // unbounded across a server's lifetime.
+            if trie.nodes[0].children.is_empty() {
+                inner.tries.remove(&slot.cfg);
             }
-            // Dropping the Arc releases the blocks once the last
-            // in-flight borrower (cloned LayerCache / outstanding lease
-            // upgrade) lets go — never before.
         }
+        // Returning the Arc keeps the blocks alive for demotion; when
+        // the caller drops it instead, the blocks are recycled once the
+        // last in-flight borrower (cloned LayerCache / outstanding
+        // lease upgrade) lets go — never before.
+        Some((slot.cfg, slot.tokens, slot.entry))
     }
 
     /// Drop every lease-free entry (the `POST /v1/cache/flush` endpoint).
-    /// Returns `(entries_evicted, bytes_freed)`.
+    /// Returns `(entries_evicted, bytes_freed)`. Flush *drops* — it
+    /// never demotes into the tier (the pool-level flush drains the
+    /// tiers in the same call; see `ReplicaPool::flush_prefix_cache`).
     pub fn flush(&self) -> (usize, usize) {
         let (n, freed) = {
             let mut inner = self.inner.lock().unwrap();
@@ -594,7 +693,7 @@ impl PrefixCache {
                 .collect();
             let before = inner.bytes;
             for key in &victims {
-                Self::evict_key(&mut inner, *key);
+                drop(Self::evict_key(&mut inner, *key));
             }
             (victims.len(), before - inner.bytes)
         };
@@ -885,6 +984,59 @@ mod tests {
         let c10 = *per.iter().find(|r| r.config == 10).unwrap();
         assert_eq!((c10.entries, c10.bytes, c10.trie_nodes), (0, 0, 0));
         assert_eq!((c10.hits, c10.misses), (1, 1), "counters survive eviction");
+    }
+
+    #[test]
+    fn eviction_demotes_into_tier_and_lookup_promotes() {
+        use crate::kvcache::tier::{PruneBudget, TierConfig, TieredStore};
+        let pool = BlockPool::new();
+        let per_entry = entry_with(&pool, 2).bytes;
+        // Device budget fits exactly one entry; the tier catches the rest.
+        let cache = Arc::new(PrefixCache::new_in(pool.clone(), per_entry));
+        let tier =
+            Arc::new(TieredStore::new(TierConfig { ram_bytes: 1 << 20, ..Default::default() }));
+        cache.attach_tier(Arc::clone(&tier));
+        cache.insert(1, &[1], entry_with(&pool, 2));
+        cache.insert(1, &[2], entry_with(&pool, 2)); // evicts [1] → staged
+        assert_eq!(cache.stats().entries, 1);
+        assert_eq!(tier.stats().pending_entries, 1, "eviction demotes, not drops");
+        // The admission probe sees the tier-resident entry without
+        // promoting it.
+        assert!(cache.peek(1, &[1]).is_some());
+        assert_eq!(tier.stats().pending_entries, 1);
+        // Serialize into the RAM tier, then promote via exact lookup.
+        tier.prune_run(PruneBudget::default());
+        assert_eq!(tier.stats().ram_entries, 1);
+        let lease = cache.lookup_exact(1, &[1]).expect("tier promotion must hit");
+        assert_eq!(lease.entry().prefix_len, 2);
+        assert_eq!(cache.stats().hits, 1, "promotion counts as a cache hit");
+        assert_eq!(tier.stats().promotions_ram, 1);
+        // Re-adoption put [1] back on-device (pinned), demoting [2].
+        assert_eq!(tier.stats().pending_entries, 1);
+        assert!(cache.peek(1, &[2]).is_some(), "demoted [2] still reachable");
+        drop(lease);
+    }
+
+    #[test]
+    fn rejected_promotion_counts_miss_and_readopts_entry() {
+        use crate::kvcache::tier::{TierConfig, TieredStore};
+        let pool = BlockPool::new();
+        let cache = Arc::new(PrefixCache::new_in(pool.clone(), 0));
+        let tier =
+            Arc::new(TieredStore::new(TierConfig { ram_bytes: 1 << 20, ..Default::default() }));
+        cache.attach_tier(Arc::clone(&tier));
+        // An entry already demoted (still in the pending queue).
+        tier.stage_demotion(1, vec![7], Arc::new(entry_with(&pool, 2)));
+        // The predicate rejects the promoted entry: the lookup is a
+        // miss, takes no lease — but the entry stays device-side for
+        // the next compatible request.
+        assert!(cache.lookup_exact_where(1, &[7], |_| false).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 1));
+        assert_eq!(s.active_leases, 0, "rejected promotion leaves no pin");
+        assert_eq!(s.entries, 1, "promoted entry re-adopted device-side");
+        assert!(cache.lookup_exact(1, &[7]).is_some(), "second lookup hits on-device");
+        assert_eq!(tier.stats().promotions_ram, 1, "only the first lookup promoted");
     }
 
     #[test]

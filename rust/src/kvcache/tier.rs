@@ -1,0 +1,1301 @@
+//! Tiered KV: host-RAM + disk spill tiers below the device-resident
+//! [`super::PrefixCache`], with a budgeted background pruner.
+//!
+//! FastAV's positional global pruning makes warm AV-prefix entries the
+//! cheapest token source in the system (a hit skips ≥ 90% of front
+//! prefill), yet plain LRU eviction *discards* them — a multi-tenant
+//! working set larger than the device byte budget thrashes straight
+//! back to full AV prefill. The tiered store turns that hard capacity
+//! limit into a latency gradient:
+//!
+//! ```text
+//!   device PrefixCache ──evict──► pending queue ──pruner──► RAM tier
+//!        ▲                  (Arc move, O(1))        (serialize, budgeted)
+//!        │ promote (deserialize + resume replay)        │ RAM over budget
+//!        └──────────◄── RAM tier ◄──── disk tier ◄──────┘ (spill, budgeted)
+//! ```
+//!
+//! **Demotion never blocks a serving quantum.** The eviction hook in
+//! [`super::PrefixCache::insert`] only moves the evicted entry's `Arc`
+//! into the *pending* queue — no serialization, no I/O, O(1) under a
+//! short lock. The background pruner drains pending → RAM → disk with
+//! per-run work budgets ([`PruneBudget`]: max entries and max payload
+//! bytes per run) and a checkpointed cursor ([`PruneCursor`]) so an
+//! exhausted run resumes exactly where it stopped — the same
+//! incremental-prune shape as reth's `PrunerBuilder`
+//! (`delete_limit_per_block` / `prune_max_blocks_per_run`).
+//!
+//! **Promotion is the paying request's own work.** A device miss in
+//! [`super::PrefixCache::lookup_exact_where`] consults the tiers; a hit
+//! deserializes the entry back into pool blocks (a memcpy per row, far
+//! cheaper than recomputing front prefill), re-inserts it device-side,
+//! and the request resumes through the unchanged resume path. The
+//! promotion cost is recorded in `fastav_tier_promote_seconds` and as a
+//! `tier_promote` trace segment.
+//!
+//! **Serialization format** ([`SerializedEntry::encode`]): a little-
+//! endian record `magic "FVT1" | cfg | token list | prefix_len |
+//! keep_positions | h_keep | full layers | keep layers`, each layer as
+//! `n_heads | d_head | cap | rows × (pos, k[H·dh], v[H·dh])`. The entry
+//! carries its own identity (`cfg` + tokens), so a promoted entry
+//! re-enters the device trie under exactly the key it was evicted from.
+//! The disk tier is an append-only record file read/written with
+//! positioned I/O (`pread`/`pwrite` through the OS page cache — this
+//! image has no mmap crate; the access pattern is identical), compacted
+//! in place by the pruner when the dead-record ratio passes 1/2.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::fs::{File, OpenOptions};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::metrics::{labeled, Counter, Gauge, Histogram, Registry};
+
+use super::block::BlockPool;
+use super::prefix::{hash_mix, hash_tokens};
+use super::{LayerCache, PrefixEntry};
+
+// ------------------------------------------------------------- codec
+
+/// Record magic + version (`"FVT1"`). Bump on any layout change: a
+/// decoder that sees a foreign magic drops the record instead of
+/// misreading floats.
+const MAGIC: u32 = 0x4656_5431;
+
+/// One layer's rows in flat, pool-independent form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SerializedLayer {
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub cap: usize,
+    pub positions: Vec<i32>,
+    /// `[rows × n_heads × d_head]`, row-major (token, then head).
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl SerializedLayer {
+    /// Flatten a live [`LayerCache`] (reads rows under the pool lock).
+    pub fn from_cache(c: &LayerCache) -> SerializedLayer {
+        let (h, dh) = (c.n_heads, c.d_head);
+        let n = c.len();
+        let mut k = Vec::with_capacity(n * h * dh);
+        let mut v = Vec::with_capacity(n * h * dh);
+        for i in 0..n {
+            for head in 0..h {
+                k.extend_from_slice(&c.k_row(head, i));
+                v.extend_from_slice(&c.v_row(head, i));
+            }
+        }
+        SerializedLayer {
+            n_heads: h,
+            d_head: dh,
+            cap: c.cap(),
+            positions: c.positions().to_vec(),
+            k,
+            v,
+        }
+    }
+
+    /// Rebuild a paged cache in `pool` (fresh blocks, refcount 1).
+    pub fn to_cache(&self, pool: &BlockPool) -> LayerCache {
+        let w = self.n_heads * self.d_head;
+        let mut c = LayerCache::new_in(
+            pool.clone(),
+            self.n_heads,
+            self.d_head,
+            self.cap.max(self.positions.len()).max(1),
+        );
+        for (i, &pos) in self.positions.iter().enumerate() {
+            c.append(&self.k[i * w..(i + 1) * w], &self.v[i * w..(i + 1) * w], pos);
+        }
+        c
+    }
+
+    fn payload_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4 + self.positions.len() * 4
+    }
+}
+
+/// A [`PrefixEntry`] in pool-independent form, carrying its own cache
+/// identity (`cfg` + `tokens`) so promotion re-inserts under the exact
+/// trie key the entry was demoted from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SerializedEntry {
+    pub cfg: u64,
+    pub tokens: Vec<u32>,
+    pub prefix_len: usize,
+    pub keep_positions: Vec<i32>,
+    pub h_keep: Vec<f32>,
+    pub full_layers: Vec<SerializedLayer>,
+    pub keep_layers: Vec<SerializedLayer>,
+}
+
+impl SerializedEntry {
+    /// Flatten a live entry (the demotion direction).
+    pub fn from_entry(cfg: u64, tokens: &[u32], e: &PrefixEntry) -> SerializedEntry {
+        SerializedEntry {
+            cfg,
+            tokens: tokens.to_vec(),
+            prefix_len: e.prefix_len,
+            keep_positions: e.keep_positions.clone(),
+            h_keep: e.h_keep.clone(),
+            full_layers: e.full_layers.iter().map(SerializedLayer::from_cache).collect(),
+            keep_layers: e.keep_layers.iter().map(SerializedLayer::from_cache).collect(),
+        }
+    }
+
+    /// Rebuild a device-resident entry in `pool` (the promotion
+    /// direction). `bytes` is recomputed by `finalize`, so the promoted
+    /// entry's accounting reflects its *new* block allocation.
+    pub fn to_entry(&self, pool: &BlockPool) -> PrefixEntry {
+        PrefixEntry {
+            prefix_len: self.prefix_len,
+            full_layers: self.full_layers.iter().map(|l| l.to_cache(pool)).collect(),
+            keep_layers: self.keep_layers.iter().map(|l| l.to_cache(pool)).collect(),
+            h_keep: self.h_keep.clone(),
+            keep_positions: self.keep_positions.clone(),
+            bytes: 0,
+        }
+        .finalize()
+    }
+
+    /// The exact-lookup key this entry answers for (mirrors
+    /// [`super::PrefixCache`]'s `hash_mix(cfg, hash_tokens(tokens))`).
+    pub fn entry_key(&self) -> u64 {
+        hash_mix(&[self.cfg, hash_tokens(0, &self.tokens)])
+    }
+
+    /// Approximate payload bytes held by this serialized form (the
+    /// tier-budget accounting unit).
+    pub fn payload_bytes(&self) -> usize {
+        self.h_keep.len() * 4
+            + self.keep_positions.len() * 4
+            + self.tokens.len() * 4
+            + self
+                .full_layers
+                .iter()
+                .chain(self.keep_layers.iter())
+                .map(|l| l.payload_bytes())
+                .sum::<usize>()
+    }
+
+    /// Encode to the `FVT1` little-endian record.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.payload_bytes());
+        put_u32(&mut out, MAGIC);
+        put_u64(&mut out, self.cfg);
+        put_u64(&mut out, self.tokens.len() as u64);
+        for &t in &self.tokens {
+            put_u32(&mut out, t);
+        }
+        put_u64(&mut out, self.prefix_len as u64);
+        put_u64(&mut out, self.keep_positions.len() as u64);
+        for &p in &self.keep_positions {
+            put_u32(&mut out, p as u32);
+        }
+        put_u64(&mut out, self.h_keep.len() as u64);
+        for &x in &self.h_keep {
+            put_u32(&mut out, x.to_bits());
+        }
+        for layers in [&self.full_layers, &self.keep_layers] {
+            put_u64(&mut out, layers.len() as u64);
+            for l in layers {
+                put_u64(&mut out, l.n_heads as u64);
+                put_u64(&mut out, l.d_head as u64);
+                put_u64(&mut out, l.cap as u64);
+                put_u64(&mut out, l.positions.len() as u64);
+                for &p in &l.positions {
+                    put_u32(&mut out, p as u32);
+                }
+                for &x in &l.k {
+                    put_u32(&mut out, x.to_bits());
+                }
+                for &x in &l.v {
+                    put_u32(&mut out, x.to_bits());
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode an `FVT1` record; `None` on truncation or foreign magic
+    /// (a torn disk record drops instead of resurrecting garbage rows).
+    pub fn decode(buf: &[u8]) -> Option<SerializedEntry> {
+        let mut r = Reader { buf, at: 0 };
+        if r.u32()? != MAGIC {
+            return None;
+        }
+        let cfg = r.u64()?;
+        let n_tokens = r.u64()? as usize;
+        let tokens = r.u32_vec(n_tokens)?;
+        let prefix_len = r.u64()? as usize;
+        let n_keep = r.u64()? as usize;
+        let keep_positions = r.i32_vec(n_keep)?;
+        let n_h = r.u64()? as usize;
+        let h_keep = r.f32_vec(n_h)?;
+        let mut groups = Vec::with_capacity(2);
+        for _ in 0..2 {
+            let n_layers = r.u64()? as usize;
+            // Layer counts are small (the front half of a model);
+            // reject absurd values before allocating.
+            if n_layers > 4096 {
+                return None;
+            }
+            let mut layers = Vec::with_capacity(n_layers);
+            for _ in 0..n_layers {
+                let n_heads = r.u64()? as usize;
+                let d_head = r.u64()? as usize;
+                let cap = r.u64()? as usize;
+                let rows = r.u64()? as usize;
+                let positions = r.i32_vec(rows)?;
+                let w = rows.checked_mul(n_heads.checked_mul(d_head)?)?;
+                let k = r.f32_vec(w)?;
+                let v = r.f32_vec(w)?;
+                layers.push(SerializedLayer { n_heads, d_head, cap, positions, k, v });
+            }
+            groups.push(layers);
+        }
+        let keep_layers = groups.pop()?;
+        let full_layers = groups.pop()?;
+        Some(SerializedEntry {
+            cfg,
+            tokens,
+            prefix_len,
+            keep_positions,
+            h_keep,
+            full_layers,
+            keep_layers,
+        })
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Option<&[u8]> {
+        let end = self.at.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Some(s)
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u32_vec(&mut self, n: usize) -> Option<Vec<u32>> {
+        let b = self.take(n.checked_mul(4)?)?;
+        Some(b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn i32_vec(&mut self, n: usize) -> Option<Vec<i32>> {
+        Some(self.u32_vec(n)?.into_iter().map(|v| v as i32).collect())
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Option<Vec<f32>> {
+        Some(self.u32_vec(n)?.into_iter().map(f32::from_bits).collect())
+    }
+}
+
+// ----------------------------------------------------------- config
+
+/// Tier sizing. Both tiers optional: `ram_bytes == 0` disables the RAM
+/// tier (pending demotions spill straight to disk, or drop if no disk
+/// either); `disk_path == None` disables the disk tier.
+#[derive(Debug, Clone, Default)]
+pub struct TierConfig {
+    /// Host-RAM slab budget in bytes (serialized payload accounting).
+    pub ram_bytes: usize,
+    /// Backing file for the disk tier; created (truncated) on startup.
+    pub disk_path: Option<PathBuf>,
+    /// Disk-tier live-payload budget in bytes; `0` = unlimited.
+    pub disk_bytes: usize,
+}
+
+impl TierConfig {
+    pub fn enabled(&self) -> bool {
+        self.ram_bytes > 0 || self.disk_path.is_some()
+    }
+}
+
+/// Per-run work budget for [`TieredStore::prune_run`]: the run stops as
+/// soon as either limit is reached and checkpoints its cursor, so one
+/// run's cost is bounded no matter how deep the backlog is.
+#[derive(Debug, Clone, Copy)]
+pub struct PruneBudget {
+    /// Max entries moved (demoted, spilled, or dropped) per run.
+    pub max_entries: usize,
+    /// Max serialized payload bytes moved per run.
+    pub max_bytes: usize,
+}
+
+impl Default for PruneBudget {
+    fn default() -> PruneBudget {
+        PruneBudget { max_entries: 32, max_bytes: 64 << 20 }
+    }
+}
+
+/// Where the pruner's walk stopped when its budget ran out; the next
+/// run resumes from here instead of rescanning from the front.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneCursor {
+    /// Stage the last run was in when it exhausted its budget:
+    /// 0 = pending drain, 1 = RAM spill, 2 = disk enforcement/compact.
+    pub stage: u8,
+    /// RAM-tier sequence number the spill walk resumes from.
+    pub ram_seq: u64,
+}
+
+/// What one [`TieredStore::prune_run`] actually did (pruner-budget
+/// tests assert against this, and `/v1/pool` reports the totals).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneRunReport {
+    /// Entries moved this run (demoted + spilled + dropped).
+    pub entries: usize,
+    /// Serialized payload bytes moved this run.
+    pub bytes: usize,
+    pub demoted_ram: usize,
+    pub spilled_disk: usize,
+    pub dropped: usize,
+    /// Dead file bytes reclaimed by a disk compaction this run.
+    pub compacted_bytes: usize,
+    /// True when the run stopped on budget with work left (the next
+    /// run resumes from the checkpointed cursor).
+    pub exhausted: bool,
+}
+
+/// Point-in-time tier accounting (the `/v1/pool` tier block).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Device-evicted entries staged but not yet serialized.
+    pub pending_entries: usize,
+    pub pending_bytes: usize,
+    pub ram_entries: usize,
+    pub ram_bytes: usize,
+    pub disk_entries: usize,
+    /// Live serialized bytes on disk (excludes dead records).
+    pub disk_bytes: usize,
+    /// Backing-file size including dead records awaiting compaction.
+    pub disk_file_bytes: usize,
+    pub demotions_ram: u64,
+    pub demotions_disk: u64,
+    pub promotions_ram: u64,
+    pub promotions_disk: u64,
+    pub drops_ram: u64,
+    pub drops_disk: u64,
+    pub prune_runs: u64,
+    pub prune_entries: u64,
+    pub prune_bytes: u64,
+    pub cursor: PruneCursor,
+}
+
+/// Per-tier flush accounting (`POST /v1/cache/flush` response).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierFlush {
+    pub pending_entries: usize,
+    pub pending_bytes: usize,
+    pub ram_entries: usize,
+    pub ram_bytes: usize,
+    pub disk_entries: usize,
+    pub disk_bytes: usize,
+}
+
+/// Which tier satisfied a promotion (metrics labels; the pending queue
+/// is host-RAM-resident, so it reports under `ram`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierHit {
+    /// Straight from the pending queue — the entry was never
+    /// serialized, so the `Arc` moves back without a rebuild.
+    Pending,
+    Ram,
+    Disk,
+}
+
+// ------------------------------------------------------------- tiers
+
+/// An entry staged for demotion: the device cache's evicted `Arc` plus
+/// the identity needed to serialize it later.
+struct Pending {
+    cfg: u64,
+    tokens: Vec<u32>,
+    entry: Arc<PrefixEntry>,
+}
+
+/// RAM slab record. `seq` orders the tier for LRU spill and gives the
+/// pruner cursor something stable to resume from.
+struct RamRec {
+    seq: u64,
+    entry: Arc<SerializedEntry>,
+    bytes: usize,
+}
+
+#[derive(Default)]
+struct RamTier {
+    /// entry key → record (serialized payload kept in host RAM).
+    map: HashMap<u64, RamRec>,
+    /// seq → entry key, the spill/walk order (oldest first).
+    order: BTreeMap<u64, u64>,
+    bytes: usize,
+    next_seq: u64,
+}
+
+impl RamTier {
+    fn insert(&mut self, key: u64, entry: Arc<SerializedEntry>, bytes: usize) {
+        self.remove(key);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.order.insert(seq, key);
+        self.map.insert(key, RamRec { seq, entry, bytes });
+        self.bytes += bytes;
+    }
+
+    fn remove(&mut self, key: u64) -> Option<RamRec> {
+        let rec = self.map.remove(&key)?;
+        self.order.remove(&rec.seq);
+        self.bytes -= rec.bytes;
+        Some(rec)
+    }
+}
+
+/// Disk record index entry: where one serialized entry lives in the
+/// backing file.
+struct DiskRec {
+    offset: u64,
+    len: usize,
+    /// Decoded-payload accounting bytes (mirrors the RAM unit so the
+    /// budgets compare like-for-like).
+    bytes: usize,
+    seq: u64,
+}
+
+struct DiskTier {
+    file: File,
+    path: PathBuf,
+    map: HashMap<u64, DiskRec>,
+    order: BTreeMap<u64, u64>,
+    /// Live payload bytes (budget accounting).
+    bytes: usize,
+    /// Next append offset == file length.
+    tail: u64,
+    /// File bytes owned by deleted/overwritten records.
+    dead_file_bytes: u64,
+    next_seq: u64,
+}
+
+impl DiskTier {
+    fn open(path: &Path) -> std::io::Result<DiskTier> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(DiskTier {
+            file,
+            path: path.to_path_buf(),
+            map: HashMap::new(),
+            order: BTreeMap::new(),
+            bytes: 0,
+            tail: 0,
+            dead_file_bytes: 0,
+            next_seq: 0,
+        })
+    }
+
+    fn write_record(&mut self, key: u64, encoded: &[u8], payload_bytes: usize) -> bool {
+        use std::os::unix::fs::FileExt;
+        // Length-prefixed record so compaction can walk the file.
+        let mut rec = Vec::with_capacity(8 + encoded.len());
+        put_u64(&mut rec, encoded.len() as u64);
+        rec.extend_from_slice(encoded);
+        let offset = self.tail;
+        if self.file.write_at(&rec, offset).map(|n| n == rec.len()) != Ok(true) {
+            return false;
+        }
+        self.tail += rec.len() as u64;
+        if let Some(old) = self.map.remove(&key) {
+            self.order.remove(&old.seq);
+            self.bytes -= old.bytes;
+            self.dead_file_bytes += 8 + old.len as u64;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.order.insert(seq, key);
+        self.map.insert(key, DiskRec { offset, len: encoded.len(), bytes: payload_bytes, seq });
+        self.bytes += payload_bytes;
+        true
+    }
+
+    fn read_record(&self, key: u64) -> Option<Vec<u8>> {
+        use std::os::unix::fs::FileExt;
+        let rec = self.map.get(&key)?;
+        let mut buf = vec![0u8; rec.len];
+        self.file.read_exact_at(&mut buf, rec.offset + 8).ok()?;
+        Some(buf)
+    }
+
+    fn remove(&mut self, key: u64) -> Option<usize> {
+        let rec = self.map.remove(&key)?;
+        self.order.remove(&rec.seq);
+        self.bytes -= rec.bytes;
+        self.dead_file_bytes += 8 + rec.len as u64;
+        Some(rec.bytes)
+    }
+
+    /// Rewrite live records contiguously at the front of the file and
+    /// truncate the dead tail. Offsets are rebuilt; seq order (and so
+    /// the LRU drop order) is preserved. Returns file bytes reclaimed.
+    fn compact(&mut self) -> u64 {
+        use std::os::unix::fs::FileExt;
+        if self.dead_file_bytes == 0 {
+            return 0;
+        }
+        let before = self.tail;
+        let mut new_tail: u64 = 0;
+        // Walk in seq order so relative ages survive the rewrite.
+        let keys: Vec<u64> = self.order.values().copied().collect();
+        for key in keys {
+            let (offset, len) = {
+                let rec = &self.map[&key];
+                (rec.offset, rec.len)
+            };
+            let mut rec_buf = vec![0u8; 8 + len];
+            if self.file.read_exact_at(&mut rec_buf, offset).is_err() {
+                continue;
+            }
+            if self.file.write_at(&rec_buf, new_tail).map(|n| n == rec_buf.len()) != Ok(true) {
+                continue;
+            }
+            self.map.get_mut(&key).expect("live key").offset = new_tail;
+            new_tail += rec_buf.len() as u64;
+        }
+        let _ = self.file.set_len(new_tail);
+        self.tail = new_tail;
+        self.dead_file_bytes = 0;
+        before.saturating_sub(new_tail)
+    }
+}
+
+// ------------------------------------------------------------- store
+
+/// Tier counters kept outside the state lock (readable from any
+/// thread without contending with a pruner run).
+#[derive(Default)]
+struct TierCounters {
+    demotions_ram: AtomicU64,
+    demotions_disk: AtomicU64,
+    promotions_ram: AtomicU64,
+    promotions_disk: AtomicU64,
+    drops_ram: AtomicU64,
+    drops_disk: AtomicU64,
+    prune_runs: AtomicU64,
+    prune_entries: AtomicU64,
+    prune_bytes: AtomicU64,
+}
+
+/// Metric handles bound by [`TieredStore::bind_metrics`].
+struct TierSinks {
+    demotions_ram: Arc<Counter>,
+    demotions_disk: Arc<Counter>,
+    promotions_ram: Arc<Counter>,
+    promotions_disk: Arc<Counter>,
+    drops_ram: Arc<Counter>,
+    drops_disk: Arc<Counter>,
+    bytes_ram: Arc<Gauge>,
+    bytes_disk: Arc<Gauge>,
+    pending_g: Arc<Gauge>,
+    promote_hist: Arc<Histogram>,
+}
+
+struct TierState {
+    pending: VecDeque<Pending>,
+    pending_bytes: usize,
+    ram: RamTier,
+    disk: Option<DiskTier>,
+    cursor: PruneCursor,
+}
+
+/// The two-level spill store one [`super::PrefixCache`] demotes into
+/// and promotes from. Thread-safe (`&self` everywhere); shared between
+/// the replica threads (stage/promote) and the pruner thread
+/// (prune_run) behind an `Arc`.
+pub struct TieredStore {
+    cfg: TierConfig,
+    state: Mutex<TierState>,
+    counters: TierCounters,
+    sinks: Mutex<Option<TierSinks>>,
+}
+
+impl TieredStore {
+    /// Build the store; creates (truncates) the disk backing file when
+    /// one is configured. A disk path that cannot be opened disables
+    /// the disk tier rather than failing the pool.
+    pub fn new(cfg: TierConfig) -> TieredStore {
+        let disk = cfg.disk_path.as_deref().and_then(|p| match DiskTier::open(p) {
+            Ok(d) => Some(d),
+            Err(e) => {
+                eprintln!("tiered-kv: disk tier disabled ({}: {})", p.display(), e);
+                None
+            }
+        });
+        TieredStore {
+            cfg,
+            state: Mutex::new(TierState {
+                pending: VecDeque::new(),
+                pending_bytes: 0,
+                ram: RamTier::default(),
+                disk,
+                cursor: PruneCursor::default(),
+            }),
+            counters: TierCounters::default(),
+            sinks: Mutex::new(None),
+        }
+    }
+
+    pub fn config(&self) -> &TierConfig {
+        &self.cfg
+    }
+
+    /// Bind the `fastav_tier_*` series (counters labeled
+    /// `tier="ram"|"disk"`, byte gauges, promotion-latency histogram).
+    pub fn bind_metrics(&self, metrics: &Registry) {
+        *self.sinks.lock().unwrap() = Some(TierSinks {
+            demotions_ram: metrics.counter(&labeled("fastav_tier_demotions_total", "tier", "ram")),
+            demotions_disk: metrics
+                .counter(&labeled("fastav_tier_demotions_total", "tier", "disk")),
+            promotions_ram: metrics
+                .counter(&labeled("fastav_tier_promotions_total", "tier", "ram")),
+            promotions_disk: metrics
+                .counter(&labeled("fastav_tier_promotions_total", "tier", "disk")),
+            drops_ram: metrics.counter(&labeled("fastav_tier_drops_total", "tier", "ram")),
+            drops_disk: metrics.counter(&labeled("fastav_tier_drops_total", "tier", "disk")),
+            bytes_ram: metrics.gauge(&labeled("fastav_tier_bytes", "tier", "ram")),
+            bytes_disk: metrics.gauge(&labeled("fastav_tier_bytes", "tier", "disk")),
+            pending_g: metrics.gauge("fastav_tier_pending_entries"),
+            promote_hist: metrics.histogram("fastav_tier_promote_seconds"),
+        });
+        self.refresh_gauges();
+    }
+
+    fn refresh_gauges(&self) {
+        let sinks = self.sinks.lock().unwrap();
+        if let Some(s) = sinks.as_ref() {
+            let st = self.state.lock().unwrap();
+            s.bytes_ram.set(st.ram.bytes as u64);
+            s.bytes_disk.set(st.disk.as_ref().map_or(0, |d| d.bytes) as u64);
+            s.pending_g.set(st.pending.len() as u64);
+        }
+    }
+
+    /// Stage a device-evicted entry for demotion. O(1): moves the `Arc`
+    /// into the pending queue — never serializes on the caller's
+    /// (replica) thread. Called by [`super::PrefixCache`] *after* its
+    /// inner lock is released.
+    pub fn stage_demotion(&self, cfg: u64, tokens: Vec<u32>, entry: Arc<PrefixEntry>) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.pending_bytes += entry.bytes;
+            st.pending.push_back(Pending { cfg, tokens, entry });
+        }
+        self.refresh_gauges();
+    }
+
+    /// Exact-key probe across all tiers without promoting (the
+    /// admission estimate path — an index lookup, no deserialization or
+    /// file I/O). Returns the entry's device-payload byte estimate.
+    pub fn peek(&self, cfg: u64, tokens: &[u32]) -> Option<usize> {
+        let key = hash_mix(&[cfg, hash_tokens(0, tokens)]);
+        let st = self.state.lock().unwrap();
+        if let Some(p) = st.pending.iter().find(|p| p.cfg == cfg && p.tokens == tokens) {
+            return Some(p.entry.bytes);
+        }
+        if let Some(rec) = st.ram.map.get(&key) {
+            return Some(rec.bytes);
+        }
+        if let Some(d) = st.disk.as_ref() {
+            if let Some(rec) = d.map.get(&key) {
+                return Some(rec.bytes);
+            }
+        }
+        None
+    }
+
+    /// Promote the entry for (`cfg`, `tokens`) back toward the device
+    /// tier: from the pending queue the original `Arc` moves back
+    /// untouched; from RAM/disk the serialized form is rebuilt into
+    /// `pool` blocks. Records the promotion latency histogram and a
+    /// `tier_promote` trace segment. The promoted entry leaves the
+    /// spill tier (the device cache re-owns it; re-eviction re-demotes).
+    pub fn promote(
+        &self,
+        pool: &BlockPool,
+        cfg: u64,
+        tokens: &[u32],
+    ) -> Option<(Arc<PrefixEntry>, TierHit)> {
+        let t0 = Instant::now();
+        let seg_t0 = crate::trace::seg_begin();
+        let key = hash_mix(&[cfg, hash_tokens(0, tokens)]);
+        let found = self.take_for_promotion(key, cfg, tokens);
+        let out = match found {
+            Some(Promoted::Device(entry)) => Some((entry, TierHit::Pending)),
+            Some(Promoted::Serialized(se, hit)) => {
+                Some((Arc::new(se.to_entry(pool)), hit))
+            }
+            None => None,
+        };
+        if let Some((_, hit)) = out.as_ref() {
+            let sinks = self.sinks.lock().unwrap();
+            match hit {
+                TierHit::Pending | TierHit::Ram => {
+                    self.counters.promotions_ram.fetch_add(1, Ordering::Relaxed);
+                    if let Some(s) = sinks.as_ref() {
+                        s.promotions_ram.inc();
+                    }
+                }
+                TierHit::Disk => {
+                    self.counters.promotions_disk.fetch_add(1, Ordering::Relaxed);
+                    if let Some(s) = sinks.as_ref() {
+                        s.promotions_disk.inc();
+                    }
+                }
+            }
+            if let Some(s) = sinks.as_ref() {
+                s.promote_hist.observe(t0.elapsed().as_secs_f64());
+            }
+        }
+        crate::trace::seg_end("tier_promote", None, seg_t0);
+        self.refresh_gauges();
+        out
+    }
+
+    fn take_for_promotion(&self, key: u64, cfg: u64, tokens: &[u32]) -> Option<Promoted> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(i) = st.pending.iter().position(|p| p.cfg == cfg && p.tokens == tokens) {
+            let p = st.pending.remove(i).expect("index just found");
+            st.pending_bytes -= p.entry.bytes;
+            return Some(Promoted::Device(p.entry));
+        }
+        if let Some(rec) = st.ram.remove(key) {
+            // Sole owner after removal in the common case; clone the
+            // payload only if a concurrent reader still holds the Arc.
+            let se = Arc::try_unwrap(rec.entry).unwrap_or_else(|a| (*a).clone());
+            return Some(Promoted::Serialized(se, TierHit::Ram));
+        }
+        let buf = st.disk.as_ref().and_then(|d| d.read_record(key));
+        if let Some(buf) = buf {
+            if let Some(se) = SerializedEntry::decode(&buf) {
+                if let Some(d) = st.disk.as_mut() {
+                    d.remove(key);
+                }
+                return Some(Promoted::Serialized(se, TierHit::Disk));
+            }
+            // Torn record: drop it so the key stops matching.
+            if let Some(d) = st.disk.as_mut() {
+                d.remove(key);
+            }
+            self.counters.drops_disk.fetch_add(1, Ordering::Relaxed);
+        }
+        None
+    }
+
+    /// One budgeted pruner run (the reth `PrunerBuilder` shape): drain
+    /// pending demotions into the RAM tier, spill the RAM tier's oldest
+    /// entries to disk while RAM is over budget, enforce the disk
+    /// budget by dropping oldest, and compact the disk file when more
+    /// than half of it is dead. Every unit of work is charged against
+    /// `budget`; when a limit is hit the run checkpoints its cursor and
+    /// returns `exhausted: true`, and the next run resumes from the
+    /// checkpoint instead of rescanning.
+    pub fn prune_run(&self, budget: PruneBudget) -> PruneRunReport {
+        let mut report = PruneRunReport::default();
+        let budget = PruneBudget {
+            max_entries: budget.max_entries.max(1),
+            max_bytes: budget.max_bytes.max(1),
+        };
+        let mut st = self.state.lock().unwrap();
+        let start_stage = st.cursor.stage;
+
+        // Stage 0: pending → RAM (serialize off the hot path). A
+        // cursor parked in a later stage skips pending this run — the
+        // walk continues where it stopped, like reth's segment order.
+        if start_stage == 0 {
+            while !self.budget_hit(&report, budget) {
+                let Some(p) = st.pending.pop_front() else { break };
+                st.pending_bytes -= p.entry.bytes;
+                let se = SerializedEntry::from_entry(p.cfg, &p.tokens, &p.entry);
+                let bytes = se.payload_bytes();
+                let key = se.entry_key();
+                report.entries += 1;
+                report.bytes += bytes;
+                if self.cfg.ram_bytes > 0 {
+                    st.ram.insert(key, Arc::new(se), bytes);
+                    report.demoted_ram += 1;
+                    self.count_demotion_ram();
+                } else if st.disk.is_some() {
+                    let encoded = se.encode();
+                    let d = st.disk.as_mut().expect("checked above");
+                    if d.write_record(key, &encoded, bytes) {
+                        report.spilled_disk += 1;
+                        self.count_demotion_disk();
+                    } else {
+                        report.dropped += 1;
+                        self.count_drop(TierHit::Disk);
+                    }
+                } else {
+                    report.dropped += 1;
+                    self.count_drop(TierHit::Ram);
+                }
+            }
+            if !st.pending.is_empty() {
+                // Budget ran out mid-stage; resume here next run.
+                st.cursor = PruneCursor { stage: 0, ram_seq: 0 };
+                report.exhausted = true;
+                drop(st);
+                self.finish_run(&report);
+                return report;
+            }
+        }
+
+        // Stage 1: RAM over budget → spill oldest to disk (or drop when
+        // no disk tier). The cursor's ram_seq resumes the walk at the
+        // first unprocessed sequence number.
+        let resume_seq = if start_stage == 1 { st.cursor.ram_seq } else { 0 };
+        while st.ram.bytes > self.cfg.ram_bytes && !self.budget_hit(&report, budget) {
+            let Some((_, &key)) = st.ram.order.range(resume_seq..).next() else { break };
+            let Some(rec) = st.ram.remove(key) else { break };
+            report.entries += 1;
+            report.bytes += rec.bytes;
+            if st.disk.is_some() {
+                let encoded = rec.entry.encode();
+                let d = st.disk.as_mut().expect("checked above");
+                if d.write_record(key, &encoded, rec.bytes) {
+                    report.spilled_disk += 1;
+                    self.count_demotion_disk();
+                } else {
+                    report.dropped += 1;
+                    self.count_drop(TierHit::Disk);
+                }
+            } else {
+                report.dropped += 1;
+                self.count_drop(TierHit::Ram);
+            }
+        }
+        if st.ram.bytes > self.cfg.ram_bytes {
+            let next = st.ram.order.keys().next().copied().unwrap_or(0);
+            st.cursor = PruneCursor { stage: 1, ram_seq: next };
+            report.exhausted = true;
+            drop(st);
+            self.finish_run(&report);
+            return report;
+        }
+
+        // Stage 2: disk budget enforcement (drop oldest) + compaction.
+        if let Some(d) = st.disk.as_mut() {
+            if self.cfg.disk_bytes > 0 {
+                while d.bytes > self.cfg.disk_bytes && !self.budget_hit(&report, budget) {
+                    let Some((_, &key)) = d.order.iter().next() else { break };
+                    if let Some(bytes) = d.remove(key) {
+                        report.entries += 1;
+                        report.bytes += bytes;
+                        report.dropped += 1;
+                        self.count_drop(TierHit::Disk);
+                    }
+                }
+            }
+            let over = self.cfg.disk_bytes > 0 && d.bytes > self.cfg.disk_bytes;
+            if !over && d.tail > 0 && d.dead_file_bytes * 2 > d.tail {
+                report.compacted_bytes = d.compact() as usize;
+            }
+            if over {
+                st.cursor = PruneCursor { stage: 2, ram_seq: 0 };
+                report.exhausted = true;
+                drop(st);
+                self.finish_run(&report);
+                return report;
+            }
+        }
+
+        st.cursor = PruneCursor::default();
+        drop(st);
+        self.finish_run(&report);
+        report
+    }
+
+    fn budget_hit(&self, report: &PruneRunReport, budget: PruneBudget) -> bool {
+        report.entries >= budget.max_entries || report.bytes >= budget.max_bytes
+    }
+
+    fn finish_run(&self, report: &PruneRunReport) {
+        self.counters.prune_runs.fetch_add(1, Ordering::Relaxed);
+        self.counters.prune_entries.fetch_add(report.entries as u64, Ordering::Relaxed);
+        self.counters.prune_bytes.fetch_add(report.bytes as u64, Ordering::Relaxed);
+        self.refresh_gauges();
+    }
+
+    fn count_demotion_ram(&self) {
+        self.counters.demotions_ram.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = self.sinks.lock().unwrap().as_ref() {
+            s.demotions_ram.inc();
+        }
+    }
+
+    fn count_demotion_disk(&self) {
+        self.counters.demotions_disk.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = self.sinks.lock().unwrap().as_ref() {
+            s.demotions_disk.inc();
+        }
+    }
+
+    fn count_drop(&self, tier: TierHit) {
+        let sinks = self.sinks.lock().unwrap();
+        match tier {
+            TierHit::Disk => {
+                self.counters.drops_disk.fetch_add(1, Ordering::Relaxed);
+                if let Some(s) = sinks.as_ref() {
+                    s.drops_disk.inc();
+                }
+            }
+            _ => {
+                self.counters.drops_ram.fetch_add(1, Ordering::Relaxed);
+                if let Some(s) = sinks.as_ref() {
+                    s.drops_ram.inc();
+                }
+            }
+        }
+    }
+
+    /// Drain every tier (pending, RAM, disk), truncate the backing
+    /// file, and reset the pruner checkpoint (`POST /v1/cache/flush`).
+    pub fn flush(&self) -> TierFlush {
+        let out = {
+            let mut st = self.state.lock().unwrap();
+            let out = TierFlush {
+                pending_entries: st.pending.len(),
+                pending_bytes: st.pending_bytes,
+                ram_entries: st.ram.map.len(),
+                ram_bytes: st.ram.bytes,
+                disk_entries: st.disk.as_ref().map_or(0, |d| d.map.len()),
+                disk_bytes: st.disk.as_ref().map_or(0, |d| d.bytes),
+            };
+            st.pending.clear();
+            st.pending_bytes = 0;
+            st.ram = RamTier::default();
+            if let Some(d) = st.disk.as_mut() {
+                d.map.clear();
+                d.order.clear();
+                d.bytes = 0;
+                d.dead_file_bytes = 0;
+                d.tail = 0;
+                let _ = d.file.set_len(0);
+            }
+            st.cursor = PruneCursor::default();
+            out
+        };
+        self.refresh_gauges();
+        out
+    }
+
+    pub fn stats(&self) -> TierStats {
+        let st = self.state.lock().unwrap();
+        TierStats {
+            pending_entries: st.pending.len(),
+            pending_bytes: st.pending_bytes,
+            ram_entries: st.ram.map.len(),
+            ram_bytes: st.ram.bytes,
+            disk_entries: st.disk.as_ref().map_or(0, |d| d.map.len()),
+            disk_bytes: st.disk.as_ref().map_or(0, |d| d.bytes),
+            disk_file_bytes: st.disk.as_ref().map_or(0, |d| d.tail) as usize,
+            demotions_ram: self.counters.demotions_ram.load(Ordering::Relaxed),
+            demotions_disk: self.counters.demotions_disk.load(Ordering::Relaxed),
+            promotions_ram: self.counters.promotions_ram.load(Ordering::Relaxed),
+            promotions_disk: self.counters.promotions_disk.load(Ordering::Relaxed),
+            drops_ram: self.counters.drops_ram.load(Ordering::Relaxed),
+            drops_disk: self.counters.drops_disk.load(Ordering::Relaxed),
+            prune_runs: self.counters.prune_runs.load(Ordering::Relaxed),
+            prune_entries: self.counters.prune_entries.load(Ordering::Relaxed),
+            prune_bytes: self.counters.prune_bytes.load(Ordering::Relaxed),
+            cursor: st.cursor,
+        }
+    }
+}
+
+impl Drop for TieredStore {
+    fn drop(&mut self) {
+        // Remove the backing file: tier contents are a cache of
+        // recomputable state, never durable data.
+        if let Some(d) = self.state.get_mut().ok().and_then(|s| s.disk.take()) {
+            drop(d.file);
+            let _ = std::fs::remove_file(&d.path);
+        }
+    }
+}
+
+enum Promoted {
+    /// Intercepted in the pending queue, still in device form.
+    Device(Arc<PrefixEntry>),
+    Serialized(SerializedEntry, TierHit),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(pool: &BlockPool, rows: usize, salt: f32) -> PrefixEntry {
+        let mut full = LayerCache::new_in(pool.clone(), 2, 3, rows.max(1));
+        let mut keep = LayerCache::new_in(pool.clone(), 2, 3, rows.max(1));
+        for i in 0..rows {
+            let k: Vec<f32> = (0..6).map(|j| salt + (i * 6 + j) as f32).collect();
+            let v: Vec<f32> = (0..6).map(|j| -(salt + (i * 6 + j) as f32)).collect();
+            full.append(&k, &v, i as i32);
+            if i % 2 == 0 {
+                keep.append(&k, &v, i as i32);
+            }
+        }
+        PrefixEntry {
+            prefix_len: rows,
+            full_layers: vec![full],
+            keep_layers: vec![keep],
+            h_keep: (0..rows).map(|i| salt * 0.5 + i as f32).collect(),
+            keep_positions: (0..rows as i32).step_by(2).collect(),
+            bytes: 0,
+        }
+        .finalize()
+    }
+
+    fn layers_equal(a: &LayerCache, b: &LayerCache) -> bool {
+        if a.len() != b.len() || a.positions() != b.positions() {
+            return false;
+        }
+        for i in 0..a.len() {
+            for h in 0..a.n_heads {
+                if a.k_row(h, i) != b.k_row(h, i) || a.v_row(h, i) != b.v_row(h, i) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn codec_roundtrip_is_lossless() {
+        let pool = BlockPool::new();
+        let e = entry(&pool, 7, 3.25);
+        let se = SerializedEntry::from_entry(42, &[1, 2, 9], &e);
+        let decoded = SerializedEntry::decode(&se.encode()).expect("decodes");
+        assert_eq!(decoded, se);
+        let back = decoded.to_entry(&pool);
+        assert_eq!(back.prefix_len, e.prefix_len);
+        assert_eq!(back.keep_positions, e.keep_positions);
+        assert_eq!(back.h_keep, e.h_keep);
+        assert!(layers_equal(&back.full_layers[0], &e.full_layers[0]));
+        assert!(layers_equal(&back.keep_layers[0], &e.keep_layers[0]));
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_foreign_magic() {
+        let pool = BlockPool::new();
+        let se = SerializedEntry::from_entry(1, &[5], &entry(&pool, 3, 1.0));
+        let buf = se.encode();
+        assert!(SerializedEntry::decode(&buf[..buf.len() - 1]).is_none());
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(SerializedEntry::decode(&bad).is_none());
+        assert!(SerializedEntry::decode(&[]).is_none());
+    }
+
+    #[test]
+    fn pending_promotion_moves_arc_back_without_rebuild() {
+        let pool = BlockPool::new();
+        let store = TieredStore::new(TierConfig { ram_bytes: 1 << 20, ..Default::default() });
+        let e = Arc::new(entry(&pool, 4, 2.0));
+        store.stage_demotion(7, vec![1, 2], Arc::clone(&e));
+        assert_eq!(store.stats().pending_entries, 1);
+        let (back, hit) = store.promote(&pool, 7, &[1, 2]).expect("promotes");
+        assert_eq!(hit, TierHit::Pending);
+        assert!(Arc::ptr_eq(&back, &e), "pending promotion must not rebuild");
+        assert_eq!(store.stats().pending_entries, 0);
+        assert!(store.promote(&pool, 7, &[1, 2]).is_none(), "promotion removes the entry");
+    }
+
+    #[test]
+    fn prune_respects_entry_budget_and_checkpoint_resumes() {
+        let pool = BlockPool::new();
+        let store = TieredStore::new(TierConfig { ram_bytes: 1 << 20, ..Default::default() });
+        for i in 0..5u32 {
+            store.stage_demotion(1, vec![i], Arc::new(entry(&pool, 3, i as f32)));
+        }
+        let r1 = store.prune_run(PruneBudget { max_entries: 2, max_bytes: usize::MAX });
+        assert_eq!(r1.entries, 2, "run bounded by its entry budget");
+        assert!(r1.exhausted);
+        let s = store.stats();
+        assert_eq!((s.pending_entries, s.ram_entries), (3, 2));
+        assert_eq!(s.cursor.stage, 0, "checkpoint parked in the pending stage");
+        let r2 = store.prune_run(PruneBudget { max_entries: 2, max_bytes: usize::MAX });
+        assert_eq!(r2.entries, 2);
+        let r3 = store.prune_run(PruneBudget { max_entries: 2, max_bytes: usize::MAX });
+        assert_eq!(r3.entries, 1);
+        assert!(!r3.exhausted);
+        let s = store.stats();
+        assert_eq!((s.pending_entries, s.ram_entries), (0, 5));
+        assert_eq!(s.cursor, PruneCursor::default(), "finished run resets the cursor");
+    }
+
+    #[test]
+    fn prune_respects_byte_budget() {
+        let pool = BlockPool::new();
+        let store = TieredStore::new(TierConfig { ram_bytes: 1 << 20, ..Default::default() });
+        for i in 0..4u32 {
+            store.stage_demotion(1, vec![i], Arc::new(entry(&pool, 8, i as f32)));
+        }
+        let one = SerializedEntry::from_entry(1, &[0], &entry(&pool, 8, 0.0)).payload_bytes();
+        // Budget covers one entry: the run must stop at the first entry
+        // whose bytes reach the limit.
+        let r = store.prune_run(PruneBudget { max_entries: usize::MAX, max_bytes: one });
+        assert_eq!(r.entries, 1, "byte budget bounds the run");
+        assert!(r.exhausted);
+        assert!(r.bytes >= one && r.bytes < 2 * one);
+    }
+
+    #[test]
+    fn ram_overflow_spills_to_disk_oldest_first() {
+        let pool = BlockPool::new();
+        let dir = std::env::temp_dir().join(format!("fastav_tier_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("spill_oldest.tier");
+        let one = SerializedEntry::from_entry(1, &[0], &entry(&pool, 4, 0.0)).payload_bytes();
+        let store = TieredStore::new(TierConfig {
+            ram_bytes: 2 * one + one / 2, // fits two entries
+            disk_path: Some(path.clone()),
+            disk_bytes: 0,
+        });
+        for i in 0..4u32 {
+            store.stage_demotion(1, vec![i], Arc::new(entry(&pool, 4, i as f32)));
+        }
+        while store.prune_run(PruneBudget::default()).exhausted {}
+        let s = store.stats();
+        assert_eq!(s.ram_entries, 2, "RAM holds the newest two");
+        assert_eq!(s.disk_entries, 2, "oldest two spilled to disk");
+        // The oldest entries ([0], [1]) must now promote from disk.
+        let (_, hit) = store.promote(&pool, 1, &[0]).expect("disk hit");
+        assert_eq!(hit, TierHit::Disk);
+        let (_, hit) = store.promote(&pool, 1, &[3]).expect("ram hit");
+        assert_eq!(hit, TierHit::Ram);
+        drop(store);
+        assert!(!path.exists(), "backing file removed on drop");
+    }
+
+    #[test]
+    fn disk_budget_drops_oldest_and_compaction_reclaims() {
+        let pool = BlockPool::new();
+        let dir = std::env::temp_dir().join(format!("fastav_tier_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("budget_drop.tier");
+        let one = SerializedEntry::from_entry(1, &[0], &entry(&pool, 4, 0.0)).payload_bytes();
+        let store = TieredStore::new(TierConfig {
+            ram_bytes: 0, // straight to disk
+            disk_path: Some(path.clone()),
+            disk_bytes: 2 * one + one / 2,
+        });
+        for i in 0..5u32 {
+            store.stage_demotion(1, vec![i], Arc::new(entry(&pool, 4, i as f32)));
+        }
+        while store.prune_run(PruneBudget::default()).exhausted {}
+        let s = store.stats();
+        assert_eq!(s.disk_entries, 2, "disk budget keeps the newest two");
+        assert!(s.drops_disk >= 3, "oldest dropped under the disk budget");
+        assert!(s.disk_bytes <= 2 * one + one / 2);
+        // Dropped records leave dead file bytes; enough churn triggers
+        // compaction and the file shrinks back to the live set.
+        let before_file = s.disk_file_bytes;
+        while store.prune_run(PruneBudget::default()).exhausted {}
+        let after = store.stats();
+        assert!(
+            after.disk_file_bytes <= before_file,
+            "compaction never grows the file"
+        );
+        // The survivors still decode cleanly after compaction.
+        let (e, hit) = store.promote(&pool, 1, &[4]).expect("newest survives");
+        assert_eq!(hit, TierHit::Disk);
+        assert_eq!(e.prefix_len, 4);
+    }
+
+    #[test]
+    fn flush_drains_all_tiers_and_resets_cursor() {
+        let pool = BlockPool::new();
+        let dir = std::env::temp_dir().join(format!("fastav_tier_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("flush_all.tier");
+        let one = SerializedEntry::from_entry(1, &[0], &entry(&pool, 4, 0.0)).payload_bytes();
+        let store = TieredStore::new(TierConfig {
+            ram_bytes: one + one / 2, // fits one entry
+            disk_path: Some(path.clone()),
+            disk_bytes: 0,
+        });
+        for i in 0..3u32 {
+            store.stage_demotion(1, vec![i], Arc::new(entry(&pool, 4, i as f32)));
+        }
+        // One tiny run leaves work in every stage: pending + a parked cursor.
+        let r = store.prune_run(PruneBudget { max_entries: 1, max_bytes: usize::MAX });
+        assert!(r.exhausted);
+        let f = store.flush();
+        assert!(f.pending_entries + f.ram_entries + f.disk_entries == 3);
+        assert!(f.pending_bytes + f.ram_bytes + f.disk_bytes > 0);
+        let s = store.stats();
+        assert_eq!(
+            (s.pending_entries, s.ram_entries, s.disk_entries, s.disk_file_bytes),
+            (0, 0, 0, 0)
+        );
+        assert_eq!(s.cursor, PruneCursor::default(), "flush resets the pruner checkpoint");
+        assert!(store.promote(&pool, 1, &[0]).is_none());
+    }
+
+    #[test]
+    fn peek_sees_every_tier_without_promoting() {
+        let pool = BlockPool::new();
+        let store = TieredStore::new(TierConfig { ram_bytes: 1 << 20, ..Default::default() });
+        store.stage_demotion(1, vec![1], Arc::new(entry(&pool, 4, 1.0)));
+        assert!(store.peek(1, &[1]).is_some(), "pending visible");
+        store.prune_run(PruneBudget::default());
+        assert!(store.peek(1, &[1]).is_some(), "ram visible");
+        assert_eq!(store.stats().ram_entries, 1, "peek must not promote");
+        assert!(store.peek(1, &[2]).is_none());
+        assert!(store.peek(2, &[1]).is_none(), "config keys isolate");
+    }
+
+    #[test]
+    fn metrics_bound_series_track_operations() {
+        let pool = BlockPool::new();
+        let metrics = Registry::default();
+        let store = TieredStore::new(TierConfig { ram_bytes: 1 << 20, ..Default::default() });
+        store.bind_metrics(&metrics);
+        store.stage_demotion(1, vec![1], Arc::new(entry(&pool, 4, 1.0)));
+        store.prune_run(PruneBudget::default());
+        store.promote(&pool, 1, &[1]).expect("ram promote");
+        let text = metrics.export();
+        assert!(text.contains("fastav_tier_demotions_total{tier=\"ram\"} 1"));
+        assert!(text.contains("fastav_tier_promotions_total{tier=\"ram\"} 1"));
+        assert!(text.contains("fastav_tier_bytes{tier=\"ram\"} 0"));
+        assert!(text.contains("fastav_tier_promote_seconds_count 1"));
+    }
+}

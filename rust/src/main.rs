@@ -6,6 +6,8 @@
 //!                  [--prefix-cache-mb 256] [--decode-batch 0] [--tp 1]
 //!                  [--policies policies.json] [--profile balanced]
 //!                  [--pipeline on|off]
+//!                  [--tier-ram-mb 0] [--tier-disk-path kv.tier]
+//!                  [--tier-disk-mb 0] [--tier-prune-budget 32]
 //! fastav eval      --model vl2sim --dataset avhbench --n 50 [--no-pruning]
 //! fastav calibrate --model vl2sim --n 100
 //! fastav info      --model vl2sim
@@ -35,7 +37,8 @@ const OPTIONS: &[&str] = &[
     "max-gen", "queue-cap", "workers", "calibration", "replicas",
     "max-inflight", "kv-budget-mb", "deadline-ms", "prefix-cache-mb",
     "decode-batch", "tp", "policies", "profile", "trace-sample", "trace-ring",
-    "pipeline",
+    "pipeline", "tier-ram-mb", "tier-disk-path", "tier-disk-mb",
+    "tier-prune-budget",
 ];
 
 fn main() {
@@ -227,6 +230,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "off" => false,
         other => return Err(anyhow!("--pipeline must be on|off, got {:?}", other)),
     };
+    // Spill tier below the device prefix cache: evictions demote into
+    // host RAM (`--tier-ram-mb`) and then disk (`--tier-disk-path` +
+    // `--tier-disk-mb`) instead of dropping; a background pruner does
+    // the serialization/compaction in `--tier-prune-budget`-entry runs.
+    // Both sizes default to 0 = tier disabled (pre-tier behavior).
+    let tier_ram_mb = args.get_usize("tier-ram-mb", 0).map_err(|e| anyhow!(e))?;
+    let tier_disk_mb = args.get_usize("tier-disk-mb", 0).map_err(|e| anyhow!(e))?;
+    let tier_disk_path = args.get("tier-disk-path").map(std::path::PathBuf::from);
+    let tier_prune_budget =
+        args.get_usize("tier-prune-budget", 32).map_err(|e| anyhow!(e))?;
+    if tier_disk_mb > 0 && tier_disk_path.is_none() {
+        return Err(anyhow!("--tier-disk-mb requires --tier-disk-path"));
+    }
+    let tier_disk_path_display = tier_disk_path
+        .as_deref()
+        .map(|p| p.display().to_string())
+        .unwrap_or_else(|| "none".to_string());
     let registry = Arc::new(registry_from_args(args, &root, &model)?);
 
     // Replica pool: each engine lives on its own thread.
@@ -247,6 +267,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         trace_sample,
         trace_ring,
         pipeline,
+        tier_ram_bytes: tier_ram_mb * (1 << 20),
+        tier_disk_path,
+        tier_disk_bytes: tier_disk_mb * (1 << 20),
+        tier_prune_entries: tier_prune_budget,
         ..Default::default()
     };
     let coord = Arc::new(Coordinator::start_pool(root.clone(), model.clone(), cfg)?);
@@ -280,7 +304,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  POST /v1/generate     {{\"dataset\": \"avhbench\", \"index\": 0, \"question\": \"what_scene\"?}}");
     println!("  GET  /v1/policies     (profile registry + spec hashes)");
     println!("  POST /v1/cancel       {{\"request_id\": 1}}");
-    println!("  POST /v1/cache/flush  (evict lease-free AV-prefix entries)");
+    println!("  POST /v1/cache/flush  (drain device + RAM + disk cache tiers)");
+    if tier_ram_mb > 0 || tier_disk_path_display != "none" {
+        println!(
+            "  KV spill tier: ram {} MiB, disk {} MiB ({}), prune budget {} entries/run",
+            tier_ram_mb,
+            tier_disk_mb,
+            tier_disk_path_display,
+            tier_prune_budget.max(1)
+        );
+    }
     if trace_sample > 0.0 {
         println!(
             "  GET  /v1/traces       GET /v1/trace/{{id}}[?format=chrome]  (sampling 1/{} requests)",

@@ -92,7 +92,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{Event, GenRequest, PushError, SchedStats, SchedulerQueue};
-use crate::kvcache::{PrefixCache, PrefixCacheStats};
+use crate::kvcache::{
+    PrefixCache, PrefixCacheStats, PruneBudget, TierConfig, TierFlush, TierStats, TieredStore,
+};
 use crate::metrics::Registry;
 use crate::model::{request_prefix_affinity, ModelEngine};
 use crate::trace::{Clock, MonotonicClock, TraceRecorder};
@@ -160,6 +162,25 @@ pub struct PoolConfig {
     /// Token-for-token identical to the strict ordering; `false`
     /// forces the sequential upload→dispatch path (A/B benchmarking).
     pub pipeline: bool,
+    /// Host-RAM spill tier budget below the device prefix cache
+    /// (`fastav serve --tier-ram-mb`); `0` disables the RAM tier.
+    /// Device evictions demote into the tier instead of dropping; see
+    /// `docs/TIERED_KV.md`.
+    pub tier_ram_bytes: usize,
+    /// Disk spill tier backing file (`--tier-disk-path`); `None`
+    /// disables the disk tier.
+    pub tier_disk_path: Option<std::path::PathBuf>,
+    /// Disk-tier live-payload budget (`--tier-disk-mb`); `0` =
+    /// unlimited (the file still compacts when half dead).
+    pub tier_disk_bytes: usize,
+    /// Background pruner: max entries one run may move
+    /// (`--tier-prune-budget`); the checkpointed cursor resumes an
+    /// exhausted run where it stopped.
+    pub tier_prune_entries: usize,
+    /// Background pruner: max serialized payload bytes one run may move.
+    pub tier_prune_bytes: usize,
+    /// Sleep between pruner runs once the backlog is drained.
+    pub tier_prune_interval: Duration,
 }
 
 impl Default for PoolConfig {
@@ -182,6 +203,12 @@ impl Default for PoolConfig {
             circuit_window: Duration::from_secs(60),
             max_request_retries: 2,
             pipeline: true,
+            tier_ram_bytes: 0,
+            tier_disk_path: None,
+            tier_disk_bytes: 0,
+            tier_prune_entries: 32,
+            tier_prune_bytes: 64 << 20,
+            tier_prune_interval: Duration::from_millis(50),
         }
     }
 }
@@ -199,6 +226,23 @@ impl PoolConfig {
     /// the per-device budget pooled across its mesh devices.
     pub fn group_kv_budget_bytes(&self) -> usize {
         self.kv_budget_bytes.saturating_mul(self.tp_degree.max(1))
+    }
+
+    /// Spill-tier sizing described by this config's tier flags.
+    pub fn tier_config(&self) -> TierConfig {
+        TierConfig {
+            ram_bytes: self.tier_ram_bytes,
+            disk_path: self.tier_disk_path.clone(),
+            disk_bytes: self.tier_disk_bytes,
+        }
+    }
+
+    /// Per-run work budget for the background tier pruner.
+    pub fn prune_budget(&self) -> PruneBudget {
+        PruneBudget {
+            max_entries: self.tier_prune_entries.max(1),
+            max_bytes: self.tier_prune_bytes.max(1),
+        }
     }
 }
 
@@ -390,6 +434,58 @@ struct ReplicaHandle {
     thread: Option<std::thread::JoinHandle<()>>,
 }
 
+/// The background tier-pruner thread: a stop flag plus the join handle,
+/// so shutdown can stop it *before* the [`TieredStore`] (and its disk
+/// backing file) is dropped.
+struct PrunerHandle {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PrunerHandle {
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Body of the pruner thread: run budgeted [`TieredStore::prune_run`]s
+/// back-to-back while a run reports `exhausted` (work left behind the
+/// checkpointed cursor), and sleep `interval` once the backlog drains.
+/// Each run is bounded by the configured entry/byte budget, so one run
+/// can never monopolize the tier lock for long — demotion staging and
+/// promotion interleave between runs.
+fn pruner_loop(
+    tier: Arc<TieredStore>,
+    budget: PruneBudget,
+    interval: Duration,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        let report = tier.prune_run(budget);
+        if report.exhausted {
+            continue; // backlog remains; run again immediately
+        }
+        let t0 = Instant::now();
+        while t0.elapsed() < interval && !stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(2).min(interval));
+        }
+    }
+}
+
+/// Per-tier flush accounting for `POST /v1/cache/flush`: the device
+/// cache plus (when a tier is attached) every spill tier, with the
+/// pruner checkpoint reset.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheFlushReport {
+    pub device_entries: usize,
+    pub device_bytes: usize,
+    /// `None` when the pool runs without a spill tier.
+    pub tier: Option<TierFlush>,
+}
+
 /// A pool of engine replicas with iteration-level scheduling and
 /// prefix-affinity dispatch: requests sharing a cached AV prefix are
 /// routed to the replica that built its entry (the entry itself lives in
@@ -406,6 +502,11 @@ pub struct ReplicaPool {
     router: Mutex<HashMap<u64, usize>>,
     /// Sampled request-lifecycle tracer (see the `trace` module).
     tracer: Arc<TraceRecorder>,
+    /// Host-RAM + disk spill tier below the device prefix cache
+    /// (`None` when the pool runs device-only).
+    tier: Option<Arc<TieredStore>>,
+    /// Background pruner servicing the tier's demotion backlog.
+    pruner: Option<PrunerHandle>,
 }
 
 /// Bound on remembered affinity routes; the map resets when exceeded
@@ -478,6 +579,29 @@ impl ReplicaPool {
         // engine gets it via `ReplicaEngine::attach_prefix_cache`.
         let prefix = Arc::new(PrefixCache::new(cfg.prefix_cache_bytes));
         prefix.bind_metrics(&metrics);
+        // Spill tier: device evictions demote into host RAM / disk and a
+        // budgeted background pruner does all serialization + I/O, so the
+        // replica quantum path never touches tier storage.
+        let tier_cfg = cfg.tier_config();
+        let (tier, pruner) = if tier_cfg.enabled() {
+            let tier = Arc::new(TieredStore::new(tier_cfg));
+            tier.bind_metrics(&metrics);
+            prefix.attach_tier(Arc::clone(&tier));
+            let stop = Arc::new(AtomicBool::new(false));
+            let budget = cfg.prune_budget();
+            let interval = cfg.tier_prune_interval;
+            let thread = {
+                let tier = Arc::clone(&tier);
+                let stop = Arc::clone(&stop);
+                std::thread::Builder::new()
+                    .name("tier-pruner".into())
+                    .spawn(move || pruner_loop(tier, budget, interval, stop))
+                    .map_err(|e| anyhow!("spawn tier-pruner: {}", e))?
+            };
+            (Some(tier), Some(PrunerHandle { stop, thread: Some(thread) }))
+        } else {
+            (None, None)
+        };
         // Create every replica's queue + shared counters and register
         // the slots *before* any thread spawns: a replica that poisons
         // during warm-up traffic must already see its peers to redirect
@@ -552,6 +676,8 @@ impl ReplicaPool {
             prefix,
             router: Mutex::new(HashMap::new()),
             tracer,
+            tier,
+            pruner,
         })
     }
 
@@ -796,15 +922,40 @@ impl ReplicaPool {
         self.prefix.flush()
     }
 
+    /// The attached spill tier, when one is configured.
+    pub fn tier(&self) -> Option<&Arc<TieredStore>> {
+        self.tier.as_ref()
+    }
+
+    /// Spill-tier accounting snapshot (the `/v1/pool` tier block).
+    pub fn tier_stats(&self) -> Option<TierStats> {
+        self.tier.as_ref().map(|t| t.stats())
+    }
+
+    /// Drain *every* tier — device prefix cache plus RAM and disk spill
+    /// tiers — and reset the pruner checkpoint. The device flush drops
+    /// entries outright (it must not refill the tier being flushed).
+    pub fn flush_all_tiers(&self) -> CacheFlushReport {
+        let (device_entries, device_bytes) = self.prefix.flush();
+        let tier = self.tier.as_ref().map(|t| t.flush());
+        CacheFlushReport { device_entries, device_bytes, tier }
+    }
+
     /// Close every queue, drain in-flight work, and join the replicas.
     pub fn shutdown(mut self) {
         Self::close_handles(&mut self.replicas);
+        if let Some(p) = self.pruner.as_mut() {
+            p.stop_and_join();
+        }
     }
 }
 
 impl Drop for ReplicaPool {
     fn drop(&mut self) {
         Self::close_handles(&mut self.replicas);
+        if let Some(p) = self.pruner.as_mut() {
+            p.stop_and_join();
+        }
     }
 }
 
@@ -1012,4 +1163,17 @@ fn register_metrics(metrics: &Registry) {
     metrics.gauge("fastav_kv_blocks_used");
     metrics.gauge("fastav_kv_blocks_shared");
     metrics.gauge("fastav_kv_blocks_free");
+    // Spill-tier families (zero-valued unless a tier is attached).
+    for tier in ["ram", "disk"] {
+        for base in [
+            "fastav_tier_demotions_total",
+            "fastav_tier_promotions_total",
+            "fastav_tier_drops_total",
+        ] {
+            metrics.counter(&crate::metrics::labeled(base, "tier", tier));
+        }
+        metrics.gauge(&crate::metrics::labeled("fastav_tier_bytes", "tier", tier));
+    }
+    metrics.gauge("fastav_tier_pending_entries");
+    metrics.histogram("fastav_tier_promote_seconds");
 }

@@ -488,7 +488,9 @@ impl TraceRecorder {
 // sub-quantum timing without trait-signature changes.
 
 /// One engine-internal segment (upload/dispatch/download/combine/
-/// prefix_lookup), measured on the recorder clock.
+/// prefix_lookup/tier_promote), measured on the recorder clock —
+/// `tier_promote` covers deserializing a spill-tier entry back onto
+/// the device inside a prefix probe.
 #[derive(Debug, Clone)]
 pub struct Seg {
     pub name: &'static str,

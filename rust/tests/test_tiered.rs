@@ -1,0 +1,570 @@
+//! Tiered-KV spill properties, artifact-free:
+//!
+//! * demote→promote fidelity — an entry pushed through the RAM and disk
+//!   spill tiers (serialize → spill → deserialize) comes back identical
+//!   to a never-evicted control, across random pruning keep sets, COW
+//!   forks, and compact epochs;
+//! * pruner budgets — a run never processes more entries than its
+//!   budget allows (byte overshoot bounded by one entry), and the
+//!   checkpointed cursor resumes a walk exactly where it stopped;
+//! * serving acceptance (mock engine through the real `ReplicaPool`) —
+//!   with a device prefix budget holding 1 of 4 distinct warm prefixes,
+//!   every evicted prefix re-request is served from the warm tier (zero
+//!   full re-prefills after warmup) and the promoted streams are
+//!   token-for-token identical to a never-evicted control pool;
+//! * `flush_all_tiers` drains device + pending + RAM + disk and resets
+//!   the pruner checkpoint, so the next request is a true cold miss.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastav::coordinator::{Event, GenRequest, Priority};
+use fastav::kvcache::{
+    BlockPool, LayerCache, PrefixCache, PrefixEntry, PrefixLease, PruneBudget,
+    PruneCursor, SerializedEntry, TierConfig, TierHit, TieredStore,
+};
+use fastav::metrics::Registry;
+use fastav::model::{av_prefix_len, GenerateResult, StepEvent};
+use fastav::policy::PruningSpec;
+use fastav::serving::{PoolConfig, PrefixCharge, ReplicaEngine, ReplicaPool};
+use fastav::tokens::Segment;
+use fastav::util::proptest::{run_prop, Gen};
+
+// ----------------------------------------------------------- helpers
+
+/// Unique disk-tier backing path per test (the store unlinks it on
+/// drop, but concurrent tests must never share a file).
+fn tier_path(tag: &str) -> PathBuf {
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let n = SEQ.fetch_add(1, Ordering::SeqCst);
+    std::env::temp_dir().join(format!(
+        "fastav_tiered_{}_{}_{}.tier",
+        std::process::id(),
+        tag,
+        n
+    ))
+}
+
+fn ram_only(ram_bytes: usize) -> TierConfig {
+    TierConfig { ram_bytes, disk_path: None, disk_bytes: 0 }
+}
+
+fn disk_only(tag: &str, disk_bytes: usize) -> TierConfig {
+    TierConfig { ram_bytes: 0, disk_path: Some(tier_path(tag)), disk_bytes }
+}
+
+fn mix(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x100_0000_01b3)
+}
+
+/// Order- and bit-exact fingerprint of everything a `PrefixEntry`
+/// carries; two entries stream identically iff this matches.
+fn checksum(e: &PrefixEntry) -> u64 {
+    let mut h = mix(0xcbf2_9ce4_8422_2325, e.prefix_len as u64);
+    for &f in &e.h_keep {
+        h = mix(h, u64::from(f.to_bits()));
+    }
+    for &p in &e.keep_positions {
+        h = mix(h, p as u64);
+    }
+    for set in [&e.full_layers, &e.keep_layers] {
+        for c in set.iter() {
+            h = mix(h, c.len() as u64);
+            for i in 0..c.len() {
+                h = mix(h, c.positions()[i] as u64);
+                for head in 0..c.n_heads {
+                    for &f in &c.k_row(head, i) {
+                        h = mix(h, u64::from(f.to_bits()));
+                    }
+                    for &f in &c.v_row(head, i) {
+                        h = mix(h, u64::from(f.to_bits()));
+                    }
+                }
+            }
+        }
+    }
+    h
+}
+
+/// Random entry exercising the shapes a real publish produces: a full
+/// front-layer cache, a keep cache that is a COW fork compacted to a
+/// random pruning keep set (epoch bump + shared blocks), and pooled
+/// score / position side arrays.
+fn random_entry(pool: &BlockPool, g: &mut Gen, salt: u32) -> PrefixEntry {
+    let n_heads = g.usize_in(1, 2);
+    let d_head = g.usize_in(2, 4);
+    let rows = g.usize_in(1, 40);
+    let w = n_heads * d_head;
+    let mut full = LayerCache::new_in(pool.clone(), n_heads, d_head, rows.max(1));
+    for i in 0..rows {
+        let k: Vec<f32> = (0..w)
+            .map(|e| (salt as f32) * 10.0 + (i as f32) + (e as f32) * 0.25)
+            .collect();
+        let v: Vec<f32> = k.iter().map(|x| -0.5 * x).collect();
+        full.append(&k, &v, i as i32);
+    }
+    // Random keep set (the pruning spec's effect on the KV rows).
+    let mut keep_idx: Vec<usize> = (0..rows).filter(|_| g.bool()).collect();
+    if keep_idx.is_empty() {
+        keep_idx.push(0);
+    }
+    let mut keep = full.clone(); // COW fork: shares full's blocks
+    keep.compact(&keep_idx); // epoch bump + tail-block fork
+    if g.bool() {
+        // A second compact epoch on an already-compacted cache.
+        let n = keep.len();
+        keep.compact(&(0..n).step_by(2).collect::<Vec<_>>());
+    }
+    PrefixEntry {
+        prefix_len: rows,
+        full_layers: vec![full],
+        keep_layers: vec![keep],
+        h_keep: (0..g.usize_in(0, 16)).map(|i| (i as f32) * 0.125 - 1.0).collect(),
+        keep_positions: keep_idx.iter().map(|&i| i as i32).collect(),
+        bytes: 0,
+    }
+    .finalize()
+}
+
+/// Drive the pruner until a run completes within budget (no backlog).
+fn prune_to_quiescence(tier: &TieredStore) {
+    for _ in 0..1000 {
+        if !tier.prune_run(PruneBudget::default()).exhausted {
+            return;
+        }
+    }
+    panic!("pruner never quiesced");
+}
+
+// ------------------------------------- demote→promote fidelity (store)
+
+#[test]
+fn prop_demoted_entries_promote_identically_from_ram_and_disk() {
+    run_prop("tier_roundtrip", 20, |g: &mut Gen| {
+        let pool = BlockPool::new();
+        let entry = Arc::new(random_entry(&pool, g, 7));
+        let want = checksum(&entry);
+        let tokens: Vec<u32> = (0..g.usize_in(1, 6) as u32).collect();
+
+        // RAM tier: serialize on demotion, deserialize on promotion.
+        let ram = TieredStore::new(ram_only(1 << 20));
+        ram.stage_demotion(9, tokens.clone(), Arc::clone(&entry));
+        prune_to_quiescence(&ram);
+        assert_eq!(ram.stats().ram_entries, 1);
+        let (back, hit) = ram.promote(&pool, 9, &tokens).expect("ram promotion");
+        assert_eq!(hit, TierHit::Ram);
+        assert_eq!(checksum(&back), want, "RAM round-trip drifted");
+
+        // Disk tier: full encode → file → decode round-trip.
+        let disk = TieredStore::new(disk_only("prop", 1 << 20));
+        disk.stage_demotion(9, tokens.clone(), Arc::clone(&entry));
+        prune_to_quiescence(&disk);
+        assert_eq!(disk.stats().disk_entries, 1);
+        let (back, hit) = disk.promote(&pool, 9, &tokens).expect("disk promotion");
+        assert_eq!(hit, TierHit::Disk);
+        assert_eq!(checksum(&back), want, "disk round-trip drifted");
+
+        // Promotion removed the spill copies; the device tier re-owns.
+        assert!(ram.peek(9, &tokens).is_none());
+        assert!(disk.peek(9, &tokens).is_none());
+    });
+}
+
+// ------------------------------------------------- pruner work budgets
+
+#[test]
+fn prune_run_never_exceeds_entry_budget_and_cursor_resumes() {
+    let pool = BlockPool::new();
+    let tier = TieredStore::new(ram_only(1 << 20));
+    let mut g = Gen::new(42);
+    for i in 0..7u32 {
+        tier.stage_demotion(1, vec![i], Arc::new(random_entry(&pool, &mut g, i)));
+    }
+    let budget = PruneBudget { max_entries: 3, max_bytes: usize::MAX };
+    let r1 = tier.prune_run(budget);
+    assert_eq!(r1.entries, 3, "run capped at its entry budget");
+    assert!(r1.exhausted, "backlog remains");
+    assert_eq!(tier.stats().cursor, PruneCursor { stage: 0, ram_seq: 0 });
+    let r2 = tier.prune_run(budget);
+    assert_eq!((r2.entries, r2.exhausted), (3, true));
+    let r3 = tier.prune_run(budget);
+    assert_eq!(r3.entries, 1, "resumed walk finishes the tail");
+    assert!(!r3.exhausted);
+    assert_eq!(tier.stats().cursor, PruneCursor::default(), "checkpoint reset");
+    assert_eq!(tier.stats().ram_entries, 7);
+    assert_eq!(tier.stats().prune_runs, 3);
+}
+
+#[test]
+fn prune_run_byte_budget_overshoot_is_bounded_by_one_entry() {
+    let pool = BlockPool::new();
+    let tier = TieredStore::new(ram_only(1 << 20));
+    let mut g = Gen::new(7);
+    let mut max_entry = 0usize;
+    for i in 0..6u32 {
+        let e = Arc::new(random_entry(&pool, &mut g, i));
+        // The pruner charges serialized payload bytes, so bound the
+        // permitted overshoot by the largest serialized entry.
+        let payload = SerializedEntry::from_entry(2, &[i], &e).payload_bytes();
+        max_entry = max_entry.max(payload);
+        tier.stage_demotion(2, vec![i], e);
+    }
+    let budget = PruneBudget { max_entries: usize::MAX, max_bytes: 1 };
+    let mut runs = 0;
+    loop {
+        let r = tier.prune_run(budget);
+        assert!(
+            r.bytes <= budget.max_bytes + max_entry,
+            "byte budget overshot by more than one entry: {} vs {}",
+            r.bytes,
+            budget.max_bytes + max_entry
+        );
+        runs += 1;
+        if !r.exhausted {
+            break;
+        }
+        assert!(runs < 100, "pruner never finished");
+    }
+    // max_bytes = 1 stops every run after its first entry.
+    assert_eq!(runs, 6);
+    assert_eq!(tier.stats().ram_entries, 6);
+}
+
+// ------------------------------------------- serving acceptance (mock)
+
+/// Prefix tokens per request; the last `SUFFIX` tokens are the question.
+const P: usize = 24;
+const SUFFIX: usize = 4;
+const EST_BYTES: usize = 1000;
+const CFG: u64 = 11;
+
+/// The exact entry the mock publishes for a prefix: deterministic KV
+/// rows derived from the prefix tokens, a compacted COW-forked keep
+/// layer, and pooled score rows — so the checksum (and therefore the
+/// generated stream) depends on every byte the tier must preserve.
+fn mock_entry(pool: &BlockPool, tokens: &[u32]) -> PrefixEntry {
+    let (n_heads, d_head) = (2usize, 3usize);
+    let w = n_heads * d_head;
+    let mut full = LayerCache::new_in(pool.clone(), n_heads, d_head, tokens.len());
+    for (i, &t) in tokens.iter().enumerate() {
+        let k: Vec<f32> = (0..w)
+            .map(|e| (t as f32) + (i as f32) * 0.5 + (e as f32) * 0.25)
+            .collect();
+        let v: Vec<f32> = k.iter().map(|x| -0.5 * x).collect();
+        full.append(&k, &v, i as i32);
+    }
+    let keep_idx: Vec<usize> = (0..tokens.len()).step_by(2).collect();
+    let mut keep = full.clone();
+    keep.compact(&keep_idx);
+    PrefixEntry {
+        prefix_len: tokens.len(),
+        full_layers: vec![full],
+        keep_layers: vec![keep],
+        h_keep: tokens.iter().map(|&t| (t as f32) * 0.125).collect(),
+        keep_positions: keep_idx.iter().map(|&i| i as i32).collect(),
+        bytes: 0,
+    }
+    .finalize()
+}
+
+/// Bytes of one mock entry (all samples share the shape, so one
+/// measurement sizes the device budget to hold exactly one of them).
+fn mock_entry_bytes() -> usize {
+    let pool = BlockPool::new();
+    let tokens: Vec<u32> = (0..P as u32).collect();
+    mock_entry(&pool, &tokens).bytes
+}
+
+struct TMGen {
+    front_left: usize,
+    back_left: usize,
+    produced: usize,
+    total: usize,
+    seed: u64,
+    hit: bool,
+    reused: usize,
+    tokens: Vec<u32>,
+    _lease: Option<PrefixLease>,
+}
+
+/// Mock engine whose generated tokens are a function of the *entry
+/// contents* it resumed from: a promotion that corrupted even one KV
+/// float, position, or score produces a visibly different stream.
+struct TierMockEngine {
+    cache: Option<Arc<PrefixCache>>,
+    front_token_steps: Arc<AtomicUsize>,
+}
+
+impl ReplicaEngine for TierMockEngine {
+    type Gen = TMGen;
+
+    fn begin(&mut self, req: &GenRequest) -> anyhow::Result<TMGen> {
+        let k = req.prompt.len();
+        let p = av_prefix_len(&req.segments).filter(|&p| p < k);
+        let (mut front, mut hit, mut reused, mut lease) = (k, false, 0, None);
+        let mut seed = 0u64;
+        if let (Some(cache), Some(p)) = (&self.cache, p) {
+            let tokens = &req.prompt[..p];
+            if let Some(l) = cache.lookup_exact(CFG, tokens) {
+                seed = checksum(l.entry());
+                front = k - p;
+                hit = true;
+                reused = p;
+                lease = Some(l);
+            } else {
+                let entry = mock_entry(cache.pool(), tokens);
+                seed = checksum(&entry);
+                cache.insert(CFG, tokens, entry);
+            }
+        }
+        Ok(TMGen {
+            front_left: front,
+            back_left: 2,
+            produced: 0,
+            total: req.max_gen.max(1),
+            seed,
+            hit,
+            reused,
+            tokens: Vec::new(),
+            _lease: lease,
+        })
+    }
+
+    fn step(&mut self, gen: &mut TMGen) -> anyhow::Result<StepEvent> {
+        if gen.front_left > 0 {
+            gen.front_left -= 1;
+            self.front_token_steps.fetch_add(1, Ordering::SeqCst);
+            return Ok(StepEvent::Prefilled { layer: 0 });
+        }
+        if gen.back_left > 0 {
+            gen.back_left -= 1;
+            return Ok(StepEvent::Prefilled { layer: 1 });
+        }
+        if gen.produced >= gen.total {
+            return Ok(StepEvent::Done);
+        }
+        let t = (mix(gen.seed, gen.produced as u64) & 0xFFFF) as u32;
+        gen.produced += 1;
+        gen.tokens.push(t);
+        Ok(StepEvent::Token(t))
+    }
+
+    fn is_done(&self, gen: &TMGen) -> bool {
+        gen.front_left == 0 && gen.back_left == 0 && gen.produced >= gen.total
+    }
+
+    fn finish(&mut self, gen: TMGen) -> GenerateResult {
+        GenerateResult {
+            tokens: gen.tokens,
+            prompt_len: P + SUFFIX,
+            flops: Default::default(),
+            relative_flops: 0.0,
+            peak_kv_bytes: EST_BYTES,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            decode_steps: gen.produced.saturating_sub(1),
+            live_counts: Vec::new(),
+            prefix_hit: gen.hit,
+            prefix_tokens_reused: gen.reused,
+        }
+    }
+
+    fn kv_bytes(&self, _gen: &TMGen) -> usize {
+        EST_BYTES
+    }
+
+    fn estimate_bytes(&self, _req: &GenRequest) -> usize {
+        EST_BYTES
+    }
+
+    fn attach_prefix_cache(&mut self, cache: Arc<PrefixCache>, _replica: usize) {
+        self.cache = Some(cache);
+    }
+
+    fn prefix_probe(&self, req: &GenRequest) -> Option<PrefixCharge> {
+        let cache = self.cache.as_ref()?;
+        let p = av_prefix_len(&req.segments).filter(|&p| p < req.prompt.len())?;
+        cache
+            .peek(CFG, &req.prompt[..p])
+            .map(|(key, bytes)| PrefixCharge { key, bytes })
+    }
+}
+
+fn tier_request(sample: u32, question: u32, max_gen: usize) -> GenRequest {
+    let mut prompt = vec![1u32];
+    let mut segments = vec![Segment::Ctrl];
+    let mut frame_of = vec![-1i32];
+    for i in 0..P - 1 {
+        prompt.push(sample * 1000 + i as u32);
+        segments.push(Segment::Vis);
+        frame_of.push((i / 8) as i32);
+    }
+    for t in [3, 192 + question, 250 + question, 3] {
+        prompt.push(t);
+        segments.push(Segment::Text);
+        frame_of.push(-1);
+    }
+    GenRequest {
+        prompt,
+        segments,
+        frame_of,
+        spec: PruningSpec::fastav(32, 4, 2, 20.0),
+        max_gen,
+        sampling: Default::default(),
+        priority: Priority::Normal,
+        deadline: None,
+        profile: None,
+    }
+}
+
+fn tier_pool(device_budget: usize, tier: TierConfig, steps: Arc<AtomicUsize>) -> ReplicaPool {
+    ReplicaPool::start_with_factory(
+        PoolConfig {
+            replicas: 1,
+            queue_cap: 64,
+            max_inflight: 4,
+            prefix_cache_bytes: device_budget,
+            tier_ram_bytes: tier.ram_bytes,
+            tier_disk_path: tier.disk_path,
+            tier_disk_bytes: tier.disk_bytes,
+            tier_prune_interval: Duration::from_millis(1),
+            ..Default::default()
+        },
+        Arc::new(Registry::default()),
+        move |_replica| {
+            Ok(TierMockEngine { cache: None, front_token_steps: Arc::clone(&steps) })
+        },
+    )
+    .expect("mock pool starts")
+}
+
+fn drain_tokens(rx: std::sync::mpsc::Receiver<Event>) -> Vec<u32> {
+    let mut tokens = Vec::new();
+    loop {
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(Event::Token(t)) => tokens.push(t),
+            Ok(Event::Done(_)) => return tokens,
+            Ok(Event::Error(e)) => panic!("request failed: {}", e),
+            Err(e) => panic!("stream stalled: {}", e),
+        }
+    }
+}
+
+/// Acceptance: with a device budget holding 1 of 4 distinct warm
+/// prefixes, every evicted-prefix re-request is a warm-tier hit — zero
+/// full re-prefills after warmup — and the promoted streams are
+/// token-for-token identical to a never-evicted control pool.
+fn warm_tier_acceptance(tier: TierConfig) {
+    const SAMPLES: u32 = 4;
+    const PASSES: u32 = 3;
+    let k = P + SUFFIX;
+
+    let tiered_steps = Arc::new(AtomicUsize::new(0));
+    let tiered = tier_pool(mock_entry_bytes(), tier, Arc::clone(&tiered_steps));
+    let control_steps = Arc::new(AtomicUsize::new(0));
+    let control = tier_pool(0, ram_only(0), Arc::clone(&control_steps));
+
+    let mut streams: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+    for pass in 0..PASSES {
+        for sample in 1..=SAMPLES {
+            let req = || tier_request(sample, pass, 5);
+            let (_, rx_t) = tiered.submit(req()).unwrap();
+            let got = drain_tokens(rx_t);
+            let (_, rx_c) = control.submit(req()).unwrap();
+            streams.push((got, drain_tokens(rx_c)));
+        }
+        // Let the background pruner serialize the pass's demotions so
+        // later passes promote from real RAM/disk records, not just the
+        // pending queue.
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    for (i, (tiered_s, control_s)) in streams.iter().enumerate() {
+        assert_eq!(tiered_s, control_s, "stream {} diverged from control", i);
+    }
+    // Warmup pass pays 4 full prefills; after that only text suffixes —
+    // zero full re-prefills even though only 1 of 4 prefixes fits.
+    let post = (SAMPLES * (PASSES - 1)) as usize;
+    assert_eq!(
+        tiered_steps.load(Ordering::SeqCst),
+        SAMPLES as usize * k + post * SUFFIX,
+        "a tier miss forced a full re-prefill"
+    );
+    let stats = tiered.prefix_stats();
+    assert_eq!(stats.hits as usize, post, "every re-request must hit warm state");
+    let t = tiered.tier_stats().expect("tier attached");
+    // Round-robin over 4 prefixes with a 1-entry device budget: every
+    // post-warmup hit is a demote→promote round-trip, and the steady
+    // 50 ms idle gaps let the pruner serialize each pass's demotions.
+    assert_eq!(
+        (t.promotions_ram + t.promotions_disk) as usize,
+        post,
+        "hits were not served by tier promotions"
+    );
+    assert!(
+        t.demotions_ram + t.demotions_disk > 0,
+        "pruner never serialized a demotion"
+    );
+    assert_eq!(t.drops_ram + t.drops_disk, 0, "no entry may be dropped");
+    assert!(control.tier_stats().is_none(), "control pool runs device-only");
+    tiered.shutdown();
+    control.shutdown();
+}
+
+#[test]
+fn evicted_prefixes_promote_from_ram_tier_with_zero_reprefills() {
+    warm_tier_acceptance(ram_only(8 << 20));
+}
+
+#[test]
+fn evicted_prefixes_promote_from_disk_tier_with_zero_reprefills() {
+    warm_tier_acceptance(disk_only("accept", 8 << 20));
+}
+
+#[test]
+fn flush_all_tiers_drains_device_ram_and_disk_and_resets_checkpoint() {
+    const SAMPLES: u32 = 4;
+    let steps = Arc::new(AtomicUsize::new(0));
+    let pool = tier_pool(
+        mock_entry_bytes(),
+        ram_only(8 << 20),
+        Arc::clone(&steps),
+    );
+    for sample in 1..=SAMPLES {
+        let (_, rx) = pool.submit(tier_request(sample, 0, 2)).unwrap();
+        drain_tokens(rx);
+    }
+    std::thread::sleep(Duration::from_millis(50));
+
+    let report = pool.flush_all_tiers();
+    let tier = report.tier.expect("tier attached");
+    assert_eq!(report.device_entries, 1, "device held exactly one entry");
+    assert_eq!(
+        tier.pending_entries + tier.ram_entries + tier.disk_entries,
+        (SAMPLES - 1) as usize,
+        "spill tiers held the evicted prefixes"
+    );
+    assert!(report.device_bytes > 0);
+    assert!(tier.pending_bytes + tier.ram_bytes + tier.disk_bytes > 0);
+
+    let st = pool.tier_stats().expect("tier attached");
+    assert_eq!(
+        (st.pending_entries, st.ram_entries, st.disk_entries),
+        (0, 0, 0),
+        "flush drained every tier"
+    );
+    assert_eq!(st.cursor, PruneCursor::default(), "pruner checkpoint reset");
+
+    // Post-flush, a repeated request is a genuine cold miss again.
+    let before = steps.load(Ordering::SeqCst);
+    let (_, rx) = pool.submit(tier_request(1, 1, 2)).unwrap();
+    drain_tokens(rx);
+    assert_eq!(
+        steps.load(Ordering::SeqCst) - before,
+        P + SUFFIX,
+        "flushed prefix must pay a full prefill"
+    );
+    pool.shutdown();
+}

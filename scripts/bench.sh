@@ -9,6 +9,7 @@
 #   5    mixed quality/aggressive profiles over /v2/generate      -> BENCH_policy.json
 #   6    chaos soak under a seeded FaultPlan                      -> BENCH_chaos.json
 #   7    mesh worker-queue overhead + pipelined vs sequential     -> BENCH_mesh.json
+#   8    tiered KV spill, working set 4x device budget            -> BENCH_tiered.json
 #
 # Usage: scripts/bench.sh [model] [n_requests]
 
@@ -33,8 +34,9 @@ if [ ! -d "rust/artifacts/$MODEL" ]; then
     exit 1
 fi
 
-echo "running serve_load phases 1-7 (model=$MODEL, n=$N)..."
+echo "running serve_load phases 1-8 (model=$MODEL, n=$N)..."
 cargo run --release --example serve_load "$MODEL" "$N"
 echo
 echo "rewrote: BENCH_serving.json BENCH_prefix.json BENCH_batch.json" \
-     "BENCH_policy.json BENCH_chaos.json BENCH_mesh.json (measured=true)"
+     "BENCH_policy.json BENCH_chaos.json BENCH_mesh.json BENCH_tiered.json" \
+     "(measured=true)"
