@@ -52,6 +52,11 @@
 //! warm-hit rate, full re-prefills after warmup, and p50 resume
 //! latency (promotion vs re-prefill). Records `BENCH_tiered.json`.
 //!
+//! A ninth phase compares **streamed vs buffered delivery** of the
+//! same long workload over `POST /v2/generate`: SSE time-to-first-token
+//! against the buffered full-response latency, plus the pool's KV
+//! high-water in each mode. Records `BENCH_streaming.json`.
+//!
 //! ```sh
 //! cargo run --release --example serve_load [model] [n_requests]
 //! ```
@@ -65,7 +70,7 @@ use std::time::{Duration, Instant};
 
 use fastav::avsynth::QuestionKind;
 use fastav::coordinator::Coordinator;
-use fastav::http::{api::make_handler, request, Server};
+use fastav::http::{api::make_handler, request, request_streaming, Server};
 use fastav::metrics::Registry;
 use fastav::model::{ModelEngine, PruningPlan};
 use fastav::policy::{PolicyRegistry, PruningSpec};
@@ -1368,4 +1373,210 @@ fn main() {
     std::fs::write("BENCH_tiered.json", out.to_string() + "\n")
         .expect("write BENCH_tiered.json");
     println!("wrote BENCH_tiered.json");
+
+    // --- Phase 9: streamed vs buffered delivery (TTFT + pool memory). --
+    let stream_n = (n_requests / 2).max(8);
+    println!(
+        "\ndriving streamed-delivery workload: {} long generations, SSE vs buffered",
+        stream_n
+    );
+    let mut stream_runs = Vec::new();
+    for &streaming in &[true, false] {
+        let r = drive_streaming(&model, stream_n, plan.clone(), layout.clone(), streaming);
+        println!(
+            "[stream] {}: {} ok in {:.2}s — ttft p50 {:.4}s, total p50 {:.4}s, \
+             kv high-water {} bytes",
+            if streaming { "sse     " } else { "buffered" },
+            r.completed,
+            r.wall,
+            r.ttft.p50,
+            r.total.p50,
+            r.kv_high_water
+        );
+        stream_runs.push(r);
+    }
+    let out = Json::obj(vec![
+        ("benchmark", Json::str("serve_load_streaming")),
+        ("model", Json::str(&model)),
+        ("requests", Json::num(stream_n as f64)),
+        ("max_gen", Json::num(LONG_MAX_GEN as f64)),
+        ("runs", Json::arr(stream_runs.iter().map(|r| r.to_json()))),
+        ("measured", Json::Bool(true)),
+        (
+            "methodology",
+            Json::str(
+                "The same long-generation workload (max_gen 16, 8 concurrent \
+                 clients, 1 replica) driven twice over POST /v2/generate: once \
+                 with \"stream\": true (TTFT = wall time to the first SSE token \
+                 event) and once buffered (TTFT = full-response latency — the \
+                 pre-streaming user experience). kv_high_water_bytes is the max \
+                 of GET /v1/pool kv_blocks.bytes_used sampled at 5 ms during \
+                 each run. Streaming should cut p50 TTFT by roughly the decode \
+                 tail (15/16ths of decode time) at equal total latency.",
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_streaming.json", out.to_string() + "\n")
+        .expect("write BENCH_streaming.json");
+    println!("wrote BENCH_streaming.json");
+}
+
+/// Phase 9 result: one delivery mode's view of the long workload.
+struct StreamRun {
+    streaming: bool,
+    completed: usize,
+    wall: f64,
+    /// Streamed: wall time to the first SSE `token` event. Buffered:
+    /// full-response latency (tokens only arrive with the 200 body).
+    ttft: BenchStats,
+    total: BenchStats,
+    /// Max `kv_blocks.bytes_used` observed during the run.
+    kv_high_water: u64,
+}
+
+impl StreamRun {
+    fn to_json(&self) -> Json {
+        let lat = |s: &BenchStats| {
+            Json::obj(vec![
+                ("mean_s", Json::num(s.mean)),
+                ("p50_s", Json::num(s.p50)),
+                ("p95_s", Json::num(s.p95)),
+                ("max_s", Json::num(s.max)),
+            ])
+        };
+        Json::obj(vec![
+            ("streaming", Json::Bool(self.streaming)),
+            ("completed", Json::num(self.completed as f64)),
+            ("wall_s", Json::num(self.wall)),
+            ("ttft", lat(&self.ttft)),
+            ("total", lat(&self.total)),
+            ("kv_high_water_bytes", Json::num(self.kv_high_water as f64)),
+        ])
+    }
+}
+
+/// Drive `n` long generations through `/v2/generate` in the given
+/// delivery mode, sampling the pool's KV high-water alongside.
+fn drive_streaming(
+    model: &str,
+    n: usize,
+    plan: PruningPlan,
+    layout: Layout,
+    streaming: bool,
+) -> StreamRun {
+    let cfg = PoolConfig {
+        replicas: 1,
+        queue_cap: 256,
+        max_inflight: 8,
+        warmup: true,
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::start_pool(common::artifact_root(), model.to_string(), cfg)
+            .expect("start pool"),
+    );
+    let handler =
+        make_handler(Arc::clone(&coord), layout, plan_registry(&plan), LONG_MAX_GEN, 1234);
+    let server = Server::bind("127.0.0.1:0", 8, handler).expect("bind");
+    let addr = server.local_addr().to_string();
+    let stop = server.shutdown_handle();
+    let server_thread = std::thread::spawn(move || server.serve());
+
+    // KV high-water sampler (5 ms): reads `kv_blocks.bytes_used` from
+    // the pool endpoint for the memory half of the comparison.
+    let sampling = Arc::new(std::sync::atomic::AtomicBool::new(true));
+    let high_water = Arc::new(AtomicUsize::new(0));
+    let sampler = {
+        let addr = addr.clone();
+        let sampling = Arc::clone(&sampling);
+        let high_water = Arc::clone(&high_water);
+        std::thread::spawn(move || {
+            while sampling.load(Ordering::SeqCst) {
+                if let Ok((200, body)) = request(&addr, "GET", "/v1/pool", b"") {
+                    if let Ok(j) = Json::parse(&String::from_utf8_lossy(&body)) {
+                        let used = j
+                            .get("kv_blocks")
+                            .get("bytes_used")
+                            .as_usize()
+                            .unwrap_or(0);
+                        high_water.fetch_max(used, Ordering::Relaxed);
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        })
+    };
+
+    let ttft_lat = Arc::new(Mutex::new(Vec::new()));
+    let total_lat = Arc::new(Mutex::new(Vec::new()));
+    let ok = Arc::new(AtomicUsize::new(0));
+    let clients = ThreadPool::new(8);
+    let t0 = Instant::now();
+    for i in 0..n {
+        let addr = addr.clone();
+        let ttft_lat = Arc::clone(&ttft_lat);
+        let total_lat = Arc::clone(&total_lat);
+        let ok = Arc::clone(&ok);
+        clients.execute(move || {
+            let body = format!(
+                r#"{{"dataset": "avqa", "index": {}, "max_gen": {}, "stream": {}}}"#,
+                i, LONG_MAX_GEN, streaming
+            );
+            let t = Instant::now();
+            if streaming {
+                let mut first_token: Option<f64> = None;
+                let mut saw_done = false;
+                let status =
+                    request_streaming(&addr, "POST", "/v2/generate", body.as_bytes(), |c| {
+                        let text = String::from_utf8_lossy(c);
+                        if first_token.is_none() && text.contains("event: token") {
+                            first_token = Some(t.elapsed().as_secs_f64());
+                        }
+                        if text.contains("event: done") {
+                            saw_done = true;
+                        }
+                    });
+                if matches!(status, Ok(200)) && saw_done {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                    let total = t.elapsed().as_secs_f64();
+                    ttft_lat.lock().unwrap().push(first_token.unwrap_or(total));
+                    total_lat.lock().unwrap().push(total);
+                }
+            } else {
+                match request(&addr, "POST", "/v2/generate", body.as_bytes()) {
+                    Ok((200, _)) => {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                        let total = t.elapsed().as_secs_f64();
+                        // Buffered clients see nothing until the body:
+                        // TTFT *is* the full latency.
+                        ttft_lat.lock().unwrap().push(total);
+                        total_lat.lock().unwrap().push(total);
+                    }
+                    Ok((code, resp)) => eprintln!(
+                        "request {} -> {}: {}",
+                        i,
+                        code,
+                        String::from_utf8_lossy(&resp)
+                    ),
+                    Err(e) => eprintln!("request {} failed: {}", i, e),
+                }
+            }
+        });
+    }
+    clients.wait_idle();
+    let wall = t0.elapsed().as_secs_f64();
+    sampling.store(false, Ordering::SeqCst);
+    let _ = sampler.join();
+    stop.store(true, Ordering::SeqCst);
+    let _ = server_thread.join();
+
+    let name = if streaming { "sse" } else { "buffered" };
+    StreamRun {
+        streaming,
+        completed: ok.load(Ordering::Relaxed),
+        wall,
+        ttft: lat_stats(&format!("{} ttft", name), ttft_lat.lock().unwrap().clone()),
+        total: lat_stats(&format!("{} total", name), total_lat.lock().unwrap().clone()),
+        kv_high_water: high_water.load(Ordering::Relaxed) as u64,
+    }
 }

@@ -166,6 +166,25 @@ impl Coordinator {
         self.pool.submit(req)
     }
 
+    /// Submit for *streamed* delivery: the returned
+    /// [`crate::streaming::StreamReceiver`] yields tokens as they decode
+    /// plus exactly one terminal event. Dropping it mid-stream cancels
+    /// the request within one scheduling quantum; a receiver that stops
+    /// draining parks the request without stalling its batchmates (see
+    /// `docs/STREAMING.md`).
+    pub fn submit_streaming(
+        &self,
+        req: GenRequest,
+    ) -> Result<(u64, crate::streaming::StreamReceiver), SubmitError> {
+        self.pool.submit_streaming(req)
+    }
+
+    /// Streaming-session accounting (active/parked/completed), the
+    /// `streams` block of `GET /v1/pool`.
+    pub fn stream_stats(&self) -> crate::streaming::StreamStats {
+        self.pool.stream_stats()
+    }
+
     /// Submit and wait for the final result (drops streamed tokens).
     pub fn submit_blocking(&self, req: GenRequest) -> Result<GenerateResult> {
         let rx = self.submit(req).map_err(|e| match e {

@@ -5,7 +5,7 @@
 //!
 //! | Method | Path               | Purpose |
 //! |--------|--------------------|---------|
-//! | POST   | `/v2/generate`     | Generate under a **named pruning profile** with optional per-request spec overrides; returns the v1 payload plus the resolved `policy` block. |
+//! | POST   | `/v2/generate`     | Generate under a **named pruning profile** with optional per-request spec overrides; returns the v1 payload plus the resolved `policy` block. With `"stream": true` the response is `text/event-stream`: a `policy` event up front (request id + resolved spec), one `token` event per decoded token, then exactly one `done` or `error` event (see `docs/STREAMING.md`). |
 //! | POST   | `/v1/generate`     | Legacy surface: a thin adapter onto the registry's default profile (`no_pruning: true` → the `off` profile). **Responses** are byte-compatible with the pre-profile API (same key set, same values for the same config — golden-tested); requests are now strictly validated, so bodies with unknown fields that were silently tolerated before get a 400. |
 //! | GET    | `/v1/policies`     | The profile registry: default profile name + every profile's canonical spec, `spec_hash`, and prefix-shareability. |
 //! | POST   | `/v1/cancel`       | Cooperative cancellation by request id. |
@@ -30,28 +30,33 @@
 //!   *different* question about the same sample — the workload shape the
 //!   AV-prefix cache accelerates.
 //! * `POST /v2/generate` — the same request fields minus `no_pruning`,
-//!   plus `"profile": "name"?` (default: the registry default) and
+//!   plus `"profile": "name"?` (default: the registry default),
 //!   `"pruning": {spec overrides}?` (deep-merged onto the profile, then
-//!   re-validated; see `crate::policy`). The response adds
-//!   `"policy": {"profile", "spec", "spec_hash"}` with the fully
-//!   resolved spec the request actually ran under.
+//!   re-validated; see `crate::policy`), and `"stream": bool?`
+//!   (default false: the buffered JSON response, byte-unchanged). The
+//!   response adds `"policy": {"profile", "spec", "spec_hash"}` with
+//!   the fully resolved spec the request actually ran under; the
+//!   streamed form carries the same resolved-policy block in its
+//!   leading `policy` event and the full buffered payload in `done`.
 //!
 //! Backpressure mapping: a full queue is `429` with `Retry-After`; a
 //! shutting-down pool is `503`. Every response echoes the client's
 //! `x-request-id` header (or the pool-assigned id on generate) for
 //! request tracing.
 
+use std::io::Write;
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::{Handler, Request, Response};
-use crate::avsynth::{gen_sample, Dataset, QuestionKind};
+use super::{Action, Handler, Request, Response, StreamingResponse};
+use crate::avsynth::{gen_sample, Dataset, QuestionKind, Sample};
 use crate::coordinator::{Coordinator, Event, GenRequest, Priority};
 use crate::eval::exact_match;
 use crate::metrics::labeled;
-use crate::model::Sampling;
+use crate::model::{GenerateResult, Sampling};
 use crate::policy::{PolicyRegistry, PruningSpec};
 use crate::serving::{ReplicaHealth, SubmitError};
+use crate::streaming::{StreamReceiver, StreamRecv};
 use crate::tokens::{render_answer, Layout};
 use crate::util::json::Json;
 
@@ -64,7 +69,7 @@ const V1_GENERATE_KEYS: &[&str] = &[
 /// `off` profile).
 const V2_GENERATE_KEYS: &[&str] = &[
     "dataset", "index", "priority", "max_gen", "deadline_ms", "question", "profile",
-    "pruning",
+    "pruning", "stream",
 ];
 
 /// Build the request handler for a running coordinator. `registry` maps
@@ -80,9 +85,26 @@ pub fn make_handler(
     base_seed: u64,
 ) -> Handler {
     Arc::new(move |req: &Request| {
+        // Streaming pre-check: `POST /v2/generate` with `"stream": true`
+        // takes the SSE path; everything else (including stream bodies
+        // that fail to parse — they 400 identically) stays buffered.
+        if req.method == "POST" && req.path == "/v2/generate" && wants_stream(req) {
+            return generate_stream(req, &coord, &layout, &registry, max_gen, base_seed);
+        }
         let resp = route(req, &coord, &layout, &registry, max_gen, base_seed);
-        echo_request_id(req, resp)
+        echo_request_id(req, resp).into()
     })
+}
+
+/// Whether a `/v2/generate` body opts into SSE streaming. Unparseable
+/// bodies return false — the buffered path rejects them with the same
+/// 400 it always did.
+fn wants_stream(req: &Request) -> bool {
+    std::str::from_utf8(&req.body)
+        .ok()
+        .and_then(|s| Json::parse(s).ok())
+        .map(|j| j.get("stream").as_bool() == Some(true))
+        .unwrap_or(false)
 }
 
 /// Echo the client's `x-request-id` unless the handler already set one
@@ -231,9 +253,39 @@ fn pool_status(coord: &Coordinator) -> Response {
             ]),
         ),
         ("tier", tier_summary(coord)),
+        ("streams", streams_summary(coord)),
         ("latency", latency_summary(coord)),
     ]);
     Response::json(200, out.to_string())
+}
+
+/// Streaming-session block for `/v1/pool`: live session counts
+/// (active includes parked; parked are the slow consumers currently
+/// gated out of decode quanta) plus the stream-duration summary, also
+/// broken out per pruning profile (the labeled
+/// `fastav_stream_duration_seconds{profile=...}` series).
+fn streams_summary(coord: &Coordinator) -> Json {
+    let st = coord.stream_stats();
+    let dur = coord.metrics.histogram("fastav_stream_duration_seconds");
+    let mut per_profile = Vec::new();
+    for (name, h) in coord.metrics.histogram_entries() {
+        if let Some(p) = name
+            .strip_prefix("fastav_stream_duration_seconds{profile=\"")
+            .and_then(|r| r.strip_suffix("\"}"))
+        {
+            per_profile.push(Json::obj(vec![
+                ("profile", Json::str(p)),
+                ("duration", hist_summary(&h)),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("active", Json::num(st.active as f64)),
+        ("parked", Json::num(st.parked as f64)),
+        ("completed", Json::num(st.completed as f64)),
+        ("duration", hist_summary(&dur)),
+        ("per_profile", Json::arr(per_profile)),
+    ])
 }
 
 /// Spill-tier block for `/v1/pool`: per-tier occupancy, movement
@@ -488,9 +540,148 @@ fn cancel(req: &Request, coord: &Coordinator) -> Response {
 }
 
 #[derive(Clone, Copy, PartialEq, Eq)]
-enum ApiVersion {
+pub(crate) enum ApiVersion {
     V1,
     V2,
+}
+
+/// A generate request resolved through body validation, policy
+/// resolution, and sample synthesis — everything both front doors
+/// (HTTP and gRPC) and both delivery modes (buffered and streamed)
+/// share before submission.
+pub(crate) struct Assembled {
+    pub request: GenRequest,
+    pub sample: Sample,
+    pub profile: String,
+    pub spec: PruningSpec,
+}
+
+/// Validate a generate body and assemble the pool request: strict key
+/// check, policy resolution (profile + overrides), sample synthesis
+/// with the optional question override, clamps, and the per-profile
+/// traffic counter. Returns the HTTP error response on invalid input —
+/// the gRPC front door maps it onto `INVALID_ARGUMENT`.
+pub(crate) fn assemble_request(
+    coord: &Coordinator,
+    body: &Json,
+    layout: &Layout,
+    registry: &PolicyRegistry,
+    max_gen: usize,
+    base_seed: u64,
+    version: ApiVersion,
+) -> Result<Assembled, Response> {
+    let allowed = match version {
+        ApiVersion::V1 => V1_GENERATE_KEYS,
+        ApiVersion::V2 => V2_GENERATE_KEYS,
+    };
+    check_body_keys(body, allowed)?;
+    let (profile, spec) = resolve_policy(body, registry, version)?;
+    let dataset = body
+        .get("dataset")
+        .as_str()
+        .and_then(Dataset::parse)
+        .unwrap_or(Dataset::Avqa);
+    let index = body.get("index").as_usize().unwrap_or(0) as u64;
+    let high_priority = body.get("priority").as_str() == Some("high");
+    let req_max_gen = body
+        .get("max_gen")
+        .as_usize()
+        .map(|n| n.clamp(1, max_gen))
+        .unwrap_or(max_gen);
+    let deadline = body
+        .get("deadline_ms")
+        .as_usize()
+        .map(|ms| Duration::from_millis(ms as u64));
+    let mut sample = gen_sample(layout, dataset, index, base_seed);
+    // Optional question override: re-ask about the same sample (same AV
+    // prefix, different text suffix) — the prefix-cache workload shape.
+    if let Some(qname) = body.get("question").as_str() {
+        match QuestionKind::parse(qname) {
+            Some(q) => sample = sample.with_question(q),
+            None => {
+                return Err(Response::text(
+                    400,
+                    "question must be one of what_scene|what_sound|scene_sound",
+                ))
+            }
+        }
+    }
+    let request = GenRequest {
+        prompt: sample.prompt.clone(),
+        segments: sample.segments.clone(),
+        frame_of: sample.frame_of.clone(),
+        spec: spec.clone(),
+        max_gen: req_max_gen,
+        sampling: Sampling::default(),
+        priority: if high_priority { Priority::High } else { Priority::Normal },
+        deadline,
+        profile: Some(profile.clone()),
+    };
+    // Per-profile traffic accounting; label values are registry-bounded
+    // (only known profile names reach this point). Series semantics:
+    // the *labeled* `fastav_requests_total{profile=...}` series count
+    // front-door generate requests after policy resolution (including
+    // ones later rejected with 429/503), while the unlabeled series
+    // counts every pool submission (HTTP, gRPC, or direct); sum the
+    // labeled series — never the whole family — for per-profile
+    // dashboards.
+    coord
+        .metrics
+        .counter(&labeled("fastav_requests_total", "profile", &profile))
+        .inc();
+    Ok(Assembled { request, sample, profile, spec })
+}
+
+/// The completed-generation payload — identical JSON for the buffered
+/// `200` body and the SSE `done` event, so streamed and buffered runs
+/// of one request are byte-identical in everything but framing.
+pub(crate) fn done_payload(
+    coord: &Coordinator,
+    id: u64,
+    asm: &Assembled,
+    res: &GenerateResult,
+    version: ApiVersion,
+) -> Json {
+    let correct = exact_match(&res.tokens, &asm.sample.answer);
+    let mut fields = vec![
+        ("request_id", Json::num(id as f64)),
+        ("answer", Json::str(&render_answer(&res.tokens))),
+        ("expected", Json::str(&render_answer(&asm.sample.answer))),
+        ("correct", Json::Bool(correct)),
+        ("subtask", Json::str(asm.sample.subtask.name())),
+        (
+            "tokens",
+            Json::arr(res.tokens.iter().map(|&t| Json::num(t as f64))),
+        ),
+        ("relative_flops", Json::num(res.relative_flops)),
+        ("prefill_seconds", Json::num(res.prefill_seconds)),
+        ("decode_seconds", Json::num(res.decode_seconds)),
+        ("peak_kv_bytes", Json::num(res.peak_kv_bytes as f64)),
+        ("prefix_hit", Json::Bool(res.prefix_hit)),
+        (
+            "prefix_tokens_reused",
+            Json::num(res.prefix_tokens_reused as f64),
+        ),
+    ];
+    // v2 returns the resolved policy; v1 stays byte-compatible with the
+    // pre-profile response shape.
+    if version == ApiVersion::V2 {
+        fields.push((
+            "policy",
+            Json::obj(vec![
+                ("profile", Json::str(&asm.profile)),
+                ("spec", asm.spec.to_json()),
+                ("spec_hash", Json::str(&asm.spec.spec_hash_hex())),
+            ]),
+        ));
+        // Sampled requests carry their lifecycle timing inline (the
+        // same summary `/v1/traces` serves); unsampled requests omit
+        // the block entirely.
+        if let Some(t) = coord.tracer().get(id) {
+            fields.push(("timing", crate::trace::export::summary_json(&t)));
+        }
+    }
+    Json::obj(fields)
 }
 
 /// Resolve the pruning policy a generate request runs under.
@@ -559,70 +750,12 @@ fn generate(
         Ok(j) => j,
         Err(resp) => return resp,
     };
-    let allowed = match version {
-        ApiVersion::V1 => V1_GENERATE_KEYS,
-        ApiVersion::V2 => V2_GENERATE_KEYS,
-    };
-    if let Err(resp) = check_body_keys(&body, allowed) {
-        return resp;
-    }
-    let (profile, spec) = match resolve_policy(&body, registry, version) {
-        Ok(ok) => ok,
+    let asm = match assemble_request(coord, &body, layout, registry, max_gen, base_seed, version)
+    {
+        Ok(a) => a,
         Err(resp) => return resp,
     };
-    let dataset = body
-        .get("dataset")
-        .as_str()
-        .and_then(Dataset::parse)
-        .unwrap_or(Dataset::Avqa);
-    let index = body.get("index").as_usize().unwrap_or(0) as u64;
-    let high_priority = body.get("priority").as_str() == Some("high");
-    let req_max_gen = body
-        .get("max_gen")
-        .as_usize()
-        .map(|n| n.clamp(1, max_gen))
-        .unwrap_or(max_gen);
-    let deadline = body
-        .get("deadline_ms")
-        .as_usize()
-        .map(|ms| Duration::from_millis(ms as u64));
-    let mut sample = gen_sample(layout, dataset, index, base_seed);
-    // Optional question override: re-ask about the same sample (same AV
-    // prefix, different text suffix) — the prefix-cache workload shape.
-    if let Some(qname) = body.get("question").as_str() {
-        match QuestionKind::parse(qname) {
-            Some(q) => sample = sample.with_question(q),
-            None => {
-                return Response::text(
-                    400,
-                    "question must be one of what_scene|what_sound|scene_sound",
-                )
-            }
-        }
-    }
-    let request = GenRequest {
-        prompt: sample.prompt.clone(),
-        segments: sample.segments.clone(),
-        frame_of: sample.frame_of.clone(),
-        spec: spec.clone(),
-        max_gen: req_max_gen,
-        sampling: Sampling::default(),
-        priority: if high_priority { Priority::High } else { Priority::Normal },
-        deadline,
-        profile: Some(profile.clone()),
-    };
-    // Per-profile traffic accounting; label values are registry-bounded
-    // (only known profile names reach this point). Series semantics:
-    // the *labeled* `fastav_requests_total{profile=...}` series count
-    // HTTP generate requests after policy resolution (including ones
-    // later rejected with 429/503), while the unlabeled series counts
-    // every pool submission (HTTP or direct); sum the labeled series —
-    // never the whole family — for per-profile dashboards.
-    coord
-        .metrics
-        .counter(&labeled("fastav_requests_total", "profile", &profile))
-        .inc();
-    let (id, rx) = match coord.submit_with_id(request) {
+    let (id, rx) = match coord.submit_with_id(asm.request.clone()) {
         Ok(ok) => ok,
         Err(SubmitError::Full(_)) => {
             return Response::text(429, "queue full").with_header("retry-after", "1")
@@ -641,46 +774,8 @@ fn generate(
         match ev {
             Event::Token(_) => {}
             Event::Done(res) => {
-                let correct = exact_match(&res.tokens, &sample.answer);
-                let mut fields = vec![
-                    ("request_id", Json::num(id as f64)),
-                    ("answer", Json::str(&render_answer(&res.tokens))),
-                    ("expected", Json::str(&render_answer(&sample.answer))),
-                    ("correct", Json::Bool(correct)),
-                    ("subtask", Json::str(sample.subtask.name())),
-                    (
-                        "tokens",
-                        Json::arr(res.tokens.iter().map(|&t| Json::num(t as f64))),
-                    ),
-                    ("relative_flops", Json::num(res.relative_flops)),
-                    ("prefill_seconds", Json::num(res.prefill_seconds)),
-                    ("decode_seconds", Json::num(res.decode_seconds)),
-                    ("peak_kv_bytes", Json::num(res.peak_kv_bytes as f64)),
-                    ("prefix_hit", Json::Bool(res.prefix_hit)),
-                    (
-                        "prefix_tokens_reused",
-                        Json::num(res.prefix_tokens_reused as f64),
-                    ),
-                ];
-                // v2 returns the resolved policy; v1 stays byte-compatible
-                // with the pre-profile response shape.
-                if version == ApiVersion::V2 {
-                    fields.push((
-                        "policy",
-                        Json::obj(vec![
-                            ("profile", Json::str(&profile)),
-                            ("spec", spec.to_json()),
-                            ("spec_hash", Json::str(&spec.spec_hash_hex())),
-                        ]),
-                    ));
-                    // Sampled requests carry their lifecycle timing
-                    // inline (the same summary `/v1/traces` serves);
-                    // unsampled requests omit the block entirely.
-                    if let Some(t) = coord.tracer().get(id) {
-                        fields.push(("timing", crate::trace::export::summary_json(&t)));
-                    }
-                }
-                return Response::json(200, Json::obj(fields).to_string())
+                let payload = done_payload(coord, id, &asm, &res, version);
+                return Response::json(200, payload.to_string())
                     .with_header("x-request-id", &id_str);
             }
             Event::Error(e) => {
@@ -689,4 +784,120 @@ fn generate(
         }
     }
     Response::text(500, "worker dropped the request").with_header("x-request-id", &id_str)
+}
+
+/// One SSE frame: `event: <name>` + a single `data:` line. Payloads are
+/// single-line JSON, so no data-splitting is needed; the flush after
+/// each frame is what makes tokens visible as they decode.
+fn sse_event(w: &mut dyn Write, event: &str, data: &str) -> std::io::Result<()> {
+    write!(w, "event: {}\ndata: {}\n\n", event, data)?;
+    w.flush()
+}
+
+/// `POST /v2/generate` with `"stream": true`: submit through the same
+/// assembly path as the buffered form, then return a streaming action
+/// whose body relays the per-request token channel as SSE. A write
+/// failure (client went away mid-stream) cancels the request; dropping
+/// the receiver disconnects the channel, so the replica stops within
+/// one scheduling quantum either way.
+fn generate_stream(
+    req: &Request,
+    coord: &Arc<Coordinator>,
+    layout: &Layout,
+    registry: &Arc<PolicyRegistry>,
+    max_gen: usize,
+    base_seed: u64,
+) -> Action {
+    let body = match parse_body(req) {
+        Ok(j) => j,
+        Err(resp) => return echo_request_id(req, resp).into(),
+    };
+    let asm = match assemble_request(
+        coord, &body, layout, registry, max_gen, base_seed, ApiVersion::V2,
+    ) {
+        Ok(a) => a,
+        Err(resp) => return echo_request_id(req, resp).into(),
+    };
+    let (id, rx) = match coord.submit_streaming(asm.request.clone()) {
+        Ok(ok) => ok,
+        Err(SubmitError::Full(_)) => {
+            return echo_request_id(
+                req,
+                Response::text(429, "queue full").with_header("retry-after", "1"),
+            )
+            .into()
+        }
+        Err(SubmitError::Closed(_)) => {
+            return echo_request_id(req, Response::text(503, "shutting down")).into()
+        }
+    };
+    let id_str = req
+        .header("x-request-id")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| id.to_string());
+    let coord = Arc::clone(coord);
+    Action::Stream(StreamingResponse {
+        status: 200,
+        content_type: "text/event-stream".into(),
+        headers: vec![
+            ("cache-control".into(), "no-cache".into()),
+            ("x-request-id".into(), id_str),
+        ],
+        body: Box::new(move |w| {
+            let out = relay_stream(w, &coord, id, &rx, &asm);
+            if out.is_err() {
+                // The client hung up mid-stream: flip the cancel flag
+                // now; dropping `rx` (below) also disconnects the
+                // channel, so the replica stops within one quantum.
+                coord.cancel(id);
+            }
+            out
+        }),
+    })
+}
+
+/// Relay the stream channel onto an SSE body: the resolved-policy block
+/// first, one `token` event per decoded token, then exactly one
+/// `done`/`error` event.
+fn relay_stream(
+    w: &mut dyn Write,
+    coord: &Coordinator,
+    id: u64,
+    rx: &StreamReceiver,
+    asm: &Assembled,
+) -> std::io::Result<()> {
+    let policy = Json::obj(vec![
+        ("request_id", Json::num(id as f64)),
+        ("profile", Json::str(&asm.profile)),
+        ("spec", asm.spec.to_json()),
+        ("spec_hash", Json::str(&asm.spec.spec_hash_hex())),
+    ]);
+    sse_event(w, "policy", &policy.to_string())?;
+    let mut index = 0u64;
+    loop {
+        match rx.recv(Duration::from_millis(100)) {
+            StreamRecv::Token(t) => {
+                let data = Json::obj(vec![
+                    ("index", Json::num(index as f64)),
+                    ("token", Json::num(t as f64)),
+                ]);
+                index += 1;
+                sse_event(w, "token", &data.to_string())?;
+            }
+            StreamRecv::Done(res) => {
+                let payload = done_payload(coord, id, asm, &res, ApiVersion::V2);
+                return sse_event(w, "done", &payload.to_string());
+            }
+            StreamRecv::Error(e) => {
+                let data = Json::obj(vec![("error", Json::str(&e))]);
+                return sse_event(w, "error", &data.to_string());
+            }
+            StreamRecv::TimedOut => continue, // decode still running
+            StreamRecv::SenderGone => {
+                let data =
+                    Json::obj(vec![("error", Json::str("worker dropped the request"))]);
+                return sse_event(w, "error", &data.to_string());
+            }
+        }
+    }
 }

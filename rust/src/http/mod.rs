@@ -70,16 +70,7 @@ impl Response {
     }
 
     fn status_line(&self) -> &'static str {
-        match self.status {
-            200 => "200 OK",
-            400 => "400 Bad Request",
-            404 => "404 Not Found",
-            405 => "405 Method Not Allowed",
-            429 => "429 Too Many Requests",
-            500 => "500 Internal Server Error",
-            503 => "503 Service Unavailable",
-            _ => "500 Internal Server Error",
-        }
+        status_line(self.status)
     }
 
     pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
@@ -95,6 +86,62 @@ impl Response {
         }
         write!(w, "\r\n")?;
         w.write_all(&self.body)
+    }
+}
+
+fn status_line(status: u16) -> &'static str {
+    match status {
+        200 => "200 OK",
+        400 => "400 Bad Request",
+        404 => "404 Not Found",
+        405 => "405 Method Not Allowed",
+        429 => "429 Too Many Requests",
+        500 => "500 Internal Server Error",
+        503 => "503 Service Unavailable",
+        _ => "500 Internal Server Error",
+    }
+}
+
+/// A response whose body is produced incrementally *after* the head is
+/// on the wire (SSE streaming on `/v2/generate`). No `content-length`:
+/// the body is delimited by connection close, which HTTP/1.1 permits
+/// with `connection: close` — every client that can read SSE handles it.
+pub struct StreamingResponse {
+    pub status: u16,
+    pub content_type: String,
+    /// Extra headers (lowercase names), e.g. `x-request-id`.
+    pub headers: Vec<(String, String)>,
+    /// Runs on the connection's worker thread with the socket as its
+    /// writer; returning (or erroring) closes the connection.
+    pub body: Box<dyn FnOnce(&mut dyn Write) -> std::io::Result<()> + Send>,
+}
+
+impl StreamingResponse {
+    fn write_head(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {}\r\ncontent-type: {}\r\nconnection: close\r\n",
+            status_line(self.status),
+            self.content_type,
+        )?;
+        for (name, value) in &self.headers {
+            write!(w, "{}: {}\r\n", name, value)?;
+        }
+        write!(w, "\r\n")?;
+        w.flush()
+    }
+}
+
+/// What a handler produces: a buffered response (the default — written
+/// in one shot with `content-length`) or a streaming one.
+pub enum Action {
+    Respond(Response),
+    Stream(StreamingResponse),
+}
+
+impl From<Response> for Action {
+    fn from(r: Response) -> Action {
+        Action::Respond(r)
     }
 }
 
@@ -177,8 +224,9 @@ fn find_head_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-/// Request handler: borrows the request, returns a response.
-pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+/// Request handler: borrows the request, returns a buffered or
+/// streaming [`Action`] (plain [`Response`] values convert via `into()`).
+pub type Handler = Arc<dyn Fn(&Request) -> Action + Send + Sync>;
 
 /// Minimal HTTP server bound to `addr`, serving until `shutdown` is set.
 pub struct Server {
@@ -232,8 +280,19 @@ fn handle_conn(mut stream: TcpStream, handler: Handler) {
     loop {
         match parse_request(&buf) {
             ParseOutcome::Done(req, _) => {
-                let resp = handler(&req);
-                let _ = resp.write_to(&mut stream);
+                match handler(&req) {
+                    Action::Respond(resp) => {
+                        let _ = resp.write_to(&mut stream);
+                    }
+                    Action::Stream(s) => {
+                        // Keep the read timeout off the write path: SSE
+                        // bodies outlive 10s; writes block on the socket
+                        // send buffer (backpressure) instead.
+                        if s.write_head(&mut stream).is_ok() {
+                            let _ = (s.body)(&mut stream);
+                        }
+                    }
+                }
                 return;
             }
             ParseOutcome::Bad(msg) => {
@@ -317,6 +376,64 @@ pub fn request_with_headers(
     Ok(Reply { status, headers: parsed_headers, body: raw[head_end + 4..].to_vec() })
 }
 
+/// Streaming HTTP client: writes the request, forwards the response
+/// *body* to `on_chunk` as bytes arrive (head excluded), and returns
+/// the status once the server closes the connection. Used by the SSE
+/// tests and the serve_load bench to measure time-to-first-event.
+pub fn request_streaming(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    mut on_chunk: impl FnMut(&[u8]),
+) -> std::io::Result<u16> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "{} {} HTTP/1.1\r\nhost: localhost\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        method,
+        path,
+        body.len()
+    )?;
+    stream.write_all(body)?;
+    let mut raw = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut status: Option<u16> = None;
+    let mut seen = 0usize; // body bytes already forwarded
+    loop {
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e) => return Err(e),
+        };
+        raw.extend_from_slice(&chunk[..n]);
+        if status.is_none() {
+            if let Some(head_end) = find_head_end(&raw) {
+                let head = String::from_utf8_lossy(&raw[..head_end]);
+                status = head
+                    .split("\r\n")
+                    .next()
+                    .unwrap_or("")
+                    .split(' ')
+                    .nth(1)
+                    .and_then(|s| s.parse().ok());
+                if status.is_none() {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "bad status",
+                    ));
+                }
+                seen = head_end + 4;
+            }
+        }
+        if status.is_some() && raw.len() > seen {
+            on_chunk(&raw[seen..]);
+            seen = raw.len();
+        }
+    }
+    status.ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "no response head"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -391,9 +508,9 @@ mod tests {
     fn server_roundtrip() {
         let handler: Handler = Arc::new(|req: &Request| {
             if req.path == "/echo" {
-                Response::json(200, String::from_utf8_lossy(&req.body).to_string())
+                Response::json(200, String::from_utf8_lossy(&req.body).to_string()).into()
             } else {
-                Response::text(404, "nope")
+                Response::text(404, "nope").into()
             }
         });
         let server = Server::bind("127.0.0.1:0", 2, handler).unwrap();
@@ -428,7 +545,7 @@ mod tests {
     fn client_reply_exposes_headers() {
         let handler: Handler = Arc::new(|req: &Request| {
             let id = req.header("x-request-id").unwrap_or("none").to_string();
-            Response::text(200, "ok").with_header("x-request-id", &id)
+            Response::text(200, "ok").with_header("x-request-id", &id).into()
         });
         let server = Server::bind("127.0.0.1:0", 2, handler).unwrap();
         let addr = server.local_addr().to_string();
@@ -438,6 +555,37 @@ mod tests {
             .unwrap();
         assert_eq!(r.status, 200);
         assert_eq!(r.header("x-request-id"), Some("abc-7"));
+        stop.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn streaming_response_roundtrip() {
+        let handler: Handler = Arc::new(|_req: &Request| {
+            Action::Stream(StreamingResponse {
+                status: 200,
+                content_type: "text/event-stream".into(),
+                headers: vec![("x-request-id".into(), "7".into())],
+                body: Box::new(|w| {
+                    for i in 0..3 {
+                        write!(w, "event: token\ndata: {}\n\n", i)?;
+                        w.flush()?;
+                    }
+                    Ok(())
+                }),
+            })
+        });
+        let server = Server::bind("127.0.0.1:0", 2, handler).unwrap();
+        let addr = server.local_addr().to_string();
+        let stop = server.shutdown_handle();
+        let t = std::thread::spawn(move || server.serve());
+        let mut got = Vec::new();
+        let status =
+            request_streaming(&addr, "POST", "/s", b"{}", |c| got.extend_from_slice(c)).unwrap();
+        assert_eq!(status, 200);
+        let s = String::from_utf8(got).unwrap();
+        assert_eq!(s.matches("event: token").count(), 3);
+        assert!(s.contains("data: 2"));
         stop.store(true, Ordering::SeqCst);
         t.join().unwrap();
     }

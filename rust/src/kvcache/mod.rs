@@ -791,6 +791,18 @@ impl CacheSet {
     pub fn live_counts(&self) -> Vec<usize> {
         self.layers.iter().map(|c| c.len()).collect()
     }
+
+    /// Drop every layer's blocks now, returning them to the block pool
+    /// through the refcounted drop path (prefix-shared blocks survive
+    /// via the prefix-cache entry's own references). The peak watermark
+    /// is sealed first so result accounting still reports it — this is
+    /// the terminal-cleanup hook: a finished/canceled generation's KV
+    /// must not wait for the request object (or a slow stream consumer)
+    /// to be torn down.
+    pub fn release(&mut self) {
+        self.update_peak();
+        self.layers.clear();
+    }
 }
 
 #[cfg(test)]

@@ -39,6 +39,10 @@
 //!   KV-byte admission, cancellation/deadlines, and fault-domain
 //!   supervision (panic-isolated quanta, respawn with backoff + circuit
 //!   breaker, poison-batch quarantine, seeded chaos harness).
+//! * [`streaming`]   — per-request token delivery: bounded token
+//!   channels from the replica loop (park-based backpressure, one-quantum
+//!   disconnect cancel), SSE events on `/v2/generate`, and a hand-rolled
+//!   h2c gRPC front door (`fastav.v1.FastAV`).
 //! * [`coordinator`] — serving facade: request ids, streaming, shutdown.
 //! * [`http`]        — minimal HTTP/1.1 server (std::net, no framework).
 
@@ -55,6 +59,7 @@ pub mod policy;
 pub mod pruning;
 pub mod runtime;
 pub mod serving;
+pub mod streaming;
 pub mod tokens;
 pub mod trace;
 pub mod util;

@@ -8,6 +8,7 @@
 //!                  [--pipeline on|off]
 //!                  [--tier-ram-mb 0] [--tier-disk-path kv.tier]
 //!                  [--tier-disk-mb 0] [--tier-prune-budget 32]
+//!                  [--grpc-port 0] [--stream-channel 32]
 //! fastav eval      --model vl2sim --dataset avhbench --n 50 [--no-pruning]
 //! fastav calibrate --model vl2sim --n 100
 //! fastav info      --model vl2sim
@@ -38,7 +39,7 @@ const OPTIONS: &[&str] = &[
     "max-inflight", "kv-budget-mb", "deadline-ms", "prefix-cache-mb",
     "decode-batch", "tp", "policies", "profile", "trace-sample", "trace-ring",
     "pipeline", "tier-ram-mb", "tier-disk-path", "tier-disk-mb",
-    "tier-prune-budget",
+    "tier-prune-budget", "grpc-port", "stream-channel",
 ];
 
 fn main() {
@@ -240,6 +241,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let tier_disk_path = args.get("tier-disk-path").map(std::path::PathBuf::from);
     let tier_prune_budget =
         args.get_usize("tier-prune-budget", 32).map_err(|e| anyhow!(e))?;
+    // Streamed delivery: per-request token-channel capacity (the park
+    // threshold — a consumer this many tokens behind is gated out of
+    // decode quanta until it drains) and the optional gRPC front door
+    // (0 = HTTP only).
+    let stream_channel = args.get_usize("stream-channel", 32).map_err(|e| anyhow!(e))?;
+    let grpc_port = args.get_usize("grpc-port", 0).map_err(|e| anyhow!(e))?;
     if tier_disk_mb > 0 && tier_disk_path.is_none() {
         return Err(anyhow!("--tier-disk-mb requires --tier-disk-path"));
     }
@@ -271,6 +278,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         tier_disk_path,
         tier_disk_bytes: tier_disk_mb * (1 << 20),
         tier_prune_entries: tier_prune_budget,
+        stream_channel_cap: stream_channel,
         ..Default::default()
     };
     let coord = Arc::new(Coordinator::start_pool(root.clone(), model.clone(), cfg)?);
@@ -282,12 +290,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let handler: Handler = fastav::http::api::make_handler(
         Arc::clone(&coord),
-        layout,
+        layout.clone(),
         Arc::clone(&registry),
         max_gen,
         1234,
     );
     let server = Server::bind(&format!("127.0.0.1:{}", port), workers, handler)?;
+
+    // Optional gRPC front door: same assembly/submission path as HTTP
+    // (unary Generate + server-streaming GenerateStream), on its own
+    // accept thread so the HTTP serve loop below stays unchanged.
+    let grpc_shutdown = if grpc_port > 0 {
+        let grpc = fastav::streaming::grpc::GrpcServer::bind(
+            &format!("127.0.0.1:{}", grpc_port),
+            workers,
+            fastav::streaming::grpc::GrpcCtx {
+                coord: Arc::clone(&coord),
+                layout: layout.clone(),
+                registry: Arc::clone(&registry),
+                max_gen,
+                base_seed: 1234,
+            },
+        )?;
+        let addr = grpc.local_addr();
+        let handle = grpc.shutdown_handle();
+        std::thread::Builder::new()
+            .name("grpc-accept".into())
+            .spawn(move || grpc.serve())
+            .map_err(|e| anyhow!("spawning gRPC accept thread: {}", e))?;
+        println!("fastav gRPC on http2://{} (fastav.v1.FastAV)", addr);
+        Some(handle)
+    } else {
+        None
+    };
     println!(
         "fastav serving {} on http://{} ({} replica(s) × tp={})",
         model,
@@ -300,7 +335,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         registry.names().join(", "),
         registry.default_name()
     );
-    println!("  POST /v2/generate     {{\"profile\": \"aggressive\", \"pruning\": {{...}}?, \"dataset\": \"avhbench\", \"index\": 0}}");
+    println!("  POST /v2/generate     {{\"profile\": \"aggressive\", \"pruning\": {{...}}?, \"dataset\": \"avhbench\", \"index\": 0, \"stream\": true?}}");
     println!("  POST /v1/generate     {{\"dataset\": \"avhbench\", \"index\": 0, \"question\": \"what_scene\"?}}");
     println!("  GET  /v1/policies     (profile registry + spec hashes)");
     println!("  POST /v1/cancel       {{\"request_id\": 1}}");
@@ -324,6 +359,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shutdown = server.shutdown_handle();
     ctrlc_fallback(&shutdown);
     server.serve();
+    if let Some(h) = grpc_shutdown {
+        h.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
     Ok(())
 }
 

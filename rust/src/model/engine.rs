@@ -488,6 +488,17 @@ impl Generation {
         self.prefix_tokens_reused
     }
 
+    /// Eagerly release this generation's KV blocks (terminal cleanup:
+    /// the request finished, was canceled, or expired). The peak-bytes
+    /// watermark, pruning trace, and prefix lease survive so
+    /// [`ModelEngine::finish_generation`]'s result accounting is
+    /// unchanged; only the block references drop — the pool reclaims
+    /// non-prefix-shared blocks in the same quantum rather than when
+    /// the request (or its still-draining stream) is torn down.
+    pub fn release_kv(&mut self) {
+        self.caches.release();
+    }
+
     fn update_done(&mut self) {
         let last = *self.tokens.last().expect("update_done before first token");
         self.done = self.tokens.len() >= self.opts.max_gen || last == EOS;

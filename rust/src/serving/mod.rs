@@ -97,6 +97,7 @@ use crate::kvcache::{
 };
 use crate::metrics::Registry;
 use crate::model::{request_prefix_affinity, ModelEngine};
+use crate::streaming::{EventSink, StreamReceiver, StreamStats, TokenChannel};
 use crate::trace::{Clock, MonotonicClock, TraceRecorder};
 
 pub use admission::PrefixCharge;
@@ -181,6 +182,12 @@ pub struct PoolConfig {
     pub tier_prune_bytes: usize,
     /// Sleep between pruner runs once the backlog is drained.
     pub tier_prune_interval: Duration,
+    /// Per-request token-channel capacity for streaming submissions
+    /// (`fastav serve --stream-channel`): the *park threshold* — a
+    /// streaming request whose client has this many undelivered tokens
+    /// is parked (skips decode quanta, KV stays charged) until the
+    /// client drains. Buffered (non-streaming) requests are unaffected.
+    pub stream_channel_cap: usize,
 }
 
 impl Default for PoolConfig {
@@ -209,6 +216,7 @@ impl Default for PoolConfig {
             tier_prune_entries: 32,
             tier_prune_bytes: 64 << 20,
             tier_prune_interval: Duration::from_millis(50),
+            stream_channel_cap: 32,
         }
     }
 }
@@ -219,6 +227,7 @@ impl PoolConfig {
         self.queue_cap = self.queue_cap.max(1);
         self.max_inflight = self.max_inflight.max(1);
         self.tp_degree = self.tp_degree.max(1);
+        self.stream_channel_cap = self.stream_channel_cap.max(1);
         self
     }
 
@@ -316,6 +325,13 @@ pub(crate) struct PoolShared {
     /// Requests re-enqueued after a replica poisoning (not a ledger
     /// term: a retried request is still exactly one submission).
     pub retried: AtomicU64,
+    /// Streaming sessions currently open (created at submit, closed by
+    /// `close_stream` on whichever terminal path retires the request).
+    pub streams_active: AtomicU64,
+    /// Streaming sessions currently parked on a slow consumer.
+    pub streams_parked: AtomicU64,
+    /// Streaming sessions that reached any terminal state.
+    pub streams_completed: AtomicU64,
     pub cancels: Mutex<HashMap<u64, Arc<AtomicBool>>>,
     /// Every replica's queue + shared counters, registered before the
     /// replica threads spawn; the redirect path and the healthy-replica
@@ -705,6 +721,36 @@ impl ReplicaPool {
     /// the streaming event receiver.
     pub fn submit(&self, req: GenRequest) -> Result<(u64, Receiver<Event>), SubmitError> {
         let (tx, rx) = channel();
+        let id = self.submit_with_sink(req, EventSink::Buffered(tx))?;
+        Ok((id, rx))
+    }
+
+    /// Submit a request for *streamed* delivery: tokens are pushed into
+    /// a bounded per-request [`TokenChannel`] as they decode, and the
+    /// returned [`StreamReceiver`] is the client's subscription handle.
+    /// Dropping the receiver mid-stream cancels the request within one
+    /// scheduling quantum; a receiver that stops draining parks the
+    /// request (see [`PoolConfig::stream_channel_cap`]) without
+    /// stalling its batchmates.
+    pub fn submit_streaming(
+        &self,
+        req: GenRequest,
+    ) -> Result<(u64, StreamReceiver), SubmitError> {
+        let (tx, rx) = TokenChannel::pair(self.cfg.stream_channel_cap);
+        self.shared.streams_active.fetch_add(1, Ordering::Relaxed);
+        match self.submit_with_sink(req, EventSink::Stream(tx)) {
+            Ok(id) => Ok((id, rx)),
+            Err(e) => {
+                self.shared.streams_active.fetch_sub(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Shared submit path: identical dispatch for buffered and streaming
+    /// sinks, so streamed and buffered runs of one request are
+    /// byte-identical in everything but delivery.
+    fn submit_with_sink(&self, req: GenRequest, sink: EventSink) -> Result<u64, SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let cancel = Arc::new(AtomicBool::new(false));
         let deadline = req
@@ -732,7 +778,7 @@ impl ReplicaPool {
             enqueued: Instant::now(),
             deadline,
             cancel: Arc::clone(&cancel),
-            events: tx,
+            events: sink,
             retries: 0,
             trace,
         };
@@ -774,7 +820,7 @@ impl ReplicaPool {
                     self.metrics
                         .gauge("fastav_queue_depth")
                         .set(self.queue_depth() as u64);
-                    return Ok((id, rx));
+                    return Ok(id);
                 }
                 Err(e) => {
                     all_closed &= e.is_closed();
@@ -899,6 +945,16 @@ impl ReplicaPool {
                 t + r.shared.batch_tokens.load(Ordering::Relaxed),
             )
         })
+    }
+
+    /// Streaming-session accounting snapshot (the `/v1/pool` `streams`
+    /// block): sessions open, parked on a slow consumer, and completed.
+    pub fn stream_stats(&self) -> StreamStats {
+        StreamStats {
+            active: self.shared.streams_active.load(Ordering::Relaxed),
+            parked: self.shared.streams_parked.load(Ordering::Relaxed),
+            completed: self.shared.streams_completed.load(Ordering::Relaxed),
+        }
     }
 
     /// The process-wide AV-prefix cache backing every replica.
@@ -1138,6 +1194,8 @@ fn register_metrics(metrics: &Registry) {
         "fastav_requests_retried_total",
         "fastav_requests_quarantined_total",
         "fastav_client_disconnects_total",
+        "fastav_streams_parked_total",
+        "fastav_stream_tokens_sent_total",
         "fastav_upload_ns_total",
         "fastav_upload_hidden_ns_total",
     ] {
@@ -1153,6 +1211,7 @@ fn register_metrics(metrics: &Registry) {
     }
     metrics.histogram("fastav_ttft_seconds");
     metrics.histogram("fastav_generate_seconds");
+    metrics.histogram("fastav_stream_duration_seconds");
     metrics.histogram("fastav_mesh_dispatch_seconds");
     metrics.gauge("fastav_upload_overlap_ratio");
     metrics.gauge("fastav_queue_depth");

@@ -25,16 +25,16 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{Event, GenRequest, SchedulerQueue};
+use crate::coordinator::{GenRequest, SchedulerQueue};
 use crate::kvcache::PrefixCache;
 use crate::metrics::{labeled, occupancy_bucket, Registry, OCCUPANCY_BUCKETS};
 use crate::model::{GenerateResult, Generation, ModelEngine, RequestInput, StepEvent};
+use crate::streaming::EventSink;
 use crate::trace::{
     collect_segs, Outcome, ReqTrace, Seg, TraceRecorder, TraceStats, TRACK_REQUEST,
 };
@@ -124,6 +124,14 @@ pub trait ReplicaEngine {
     /// pool forwards [`PoolConfig::pipeline`] at startup; engines
     /// without a pipelined path ignore it.
     fn set_pipeline(&mut self, _on: bool) {}
+
+    /// Eagerly release the generation's KV blocks at a terminal
+    /// (finish/cancel/expire), in the same quantum the request retires —
+    /// before result assembly and independent of whether the client has
+    /// drained its stream. Must preserve whatever accounting `finish`
+    /// still reads (peak bytes, pruning trace). Default: no-op for
+    /// engines without real KV.
+    fn release_kv(&mut self, _gen: &mut Self::Gen) {}
 }
 
 impl ReplicaEngine for ModelEngine {
@@ -198,6 +206,10 @@ impl ReplicaEngine for ModelEngine {
     fn set_pipeline(&mut self, on: bool) {
         ModelEngine::set_pipeline(self, on);
     }
+
+    fn release_kv(&mut self, gen: &mut Generation) {
+        gen.release_kv();
+    }
 }
 
 /// Why `replica_loop` returned: a clean drain (queue closed and empty,
@@ -260,7 +272,9 @@ pub(crate) struct Job {
     pub enqueued: Instant,
     pub deadline: Option<Instant>,
     pub cancel: Arc<std::sync::atomic::AtomicBool>,
-    pub events: Sender<Event>,
+    /// Where tokens and the terminal event go: the buffered channel or a
+    /// bounded per-request stream ([`crate::streaming::EventSink`]).
+    pub events: EventSink,
     /// Times this request has been re-enqueued after a replica
     /// poisoning; bounded by [`PoolConfig::max_request_retries`].
     pub retries: u32,
@@ -279,7 +293,7 @@ struct Active<G> {
     req: GenRequest,
     cancel: Arc<std::sync::atomic::AtomicBool>,
     deadline: Option<Instant>,
-    events: Sender<Event>,
+    events: EventSink,
     /// Submission time — end-to-end `fastav_generate_seconds` and TTFT
     /// measure from here (SLO semantics: queue time counts).
     enqueued: Instant,
@@ -300,6 +314,11 @@ struct Active<G> {
     got_first_token: bool,
     /// Retry count carried over from the job.
     retries: u32,
+    /// Whether this streaming request is currently parked on a slow
+    /// consumer (its channel was full at quantum start): it skips decode
+    /// quanta until the client drains, with its admission-held KV still
+    /// charged. Always false for buffered requests.
+    parked: bool,
     trace: Option<Box<ReqTrace>>,
 }
 
@@ -334,6 +353,15 @@ struct ReplicaMetrics {
     quarantined_c: Arc<crate::metrics::Counter>,
     /// Token sends that found the client receiver gone.
     disconnects_c: Arc<crate::metrics::Counter>,
+    /// Park transitions: a streaming request whose consumer stopped
+    /// draining began skipping decode quanta.
+    streams_parked_c: Arc<crate::metrics::Counter>,
+    /// Tokens delivered into per-request streams (buffered sends are
+    /// counted by `fastav_tokens_generated_total` alone).
+    stream_tokens_c: Arc<crate::metrics::Counter>,
+    /// Registry handle for per-profile labeled series resolved at
+    /// terminal time (`fastav_stream_duration_seconds{profile=...}`).
+    registry: Arc<Registry>,
     /// Per-shard mesh dispatch wall time (from trace "dispatch" segs).
     dispatch_hist: Arc<crate::metrics::Histogram>,
     /// Total KV upload (gather + literal build) nanoseconds.
@@ -345,7 +373,7 @@ struct ReplicaMetrics {
 }
 
 impl ReplicaMetrics {
-    fn new(metrics: &Registry, replica: usize) -> ReplicaMetrics {
+    fn new(metrics: &Arc<Registry>, replica: usize) -> ReplicaMetrics {
         let l = replica.to_string();
         ReplicaMetrics {
             active_g: metrics.gauge(&labeled("fastav_replica_active_requests", "replica", &l)),
@@ -374,6 +402,9 @@ impl ReplicaMetrics {
             retried_c: metrics.counter("fastav_requests_retried_total"),
             quarantined_c: metrics.counter("fastav_requests_quarantined_total"),
             disconnects_c: metrics.counter("fastav_client_disconnects_total"),
+            streams_parked_c: metrics.counter("fastav_streams_parked_total"),
+            stream_tokens_c: metrics.counter("fastav_stream_tokens_sent_total"),
+            registry: Arc::clone(metrics),
             dispatch_hist: metrics.histogram("fastav_mesh_dispatch_seconds"),
             upload_ns_c: metrics.counter("fastav_upload_ns_total"),
             upload_hidden_ns_c: metrics.counter("fastav_upload_hidden_ns_total"),
@@ -436,7 +467,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
     queue: &SchedulerQueue<Job>,
     rshared: &ReplicaShared,
     pshared: &PoolShared,
-    metrics: &Registry,
+    metrics: &Arc<Registry>,
     prefix: Option<Arc<PrefixCache>>,
     tracer: &Arc<TraceRecorder>,
 ) -> ReplicaExit {
@@ -581,6 +612,7 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
                         profile: job.req.profile.clone(),
                         got_first_token: false,
                         retries: job.retries,
+                        parked: false,
                         req: job.req,
                         trace: job.trace,
                     });
@@ -664,8 +696,42 @@ pub(crate) fn replica_loop<E: ReplicaEngine>(
         };
         let ready: Vec<bool> = active.iter().map(|a| engine.is_decoding(&a.gen)).collect();
         let classes: Vec<u64> = active.iter().map(|a| a.spec_class).collect();
-        let picked = sched.pick_batch_classed(max_b, &ready, &classes);
+
+        // ---- Park/unpark sweep: a streaming consumer whose token
+        // channel is full is *parked* — it keeps its admission-charged
+        // KV but is excluded from this quantum entirely (never primary,
+        // never a batchmate), so one slow client cannot stall the
+        // quantum or perturb fused batchmates. Buffered sinks are
+        // always ready and never park. ----
+        let mut blocked: Vec<bool> = Vec::with_capacity(active.len());
+        for a in active.iter_mut() {
+            let block = !a.events.ready();
+            if block && !a.parked {
+                a.parked = true;
+                m.streams_parked_c.inc();
+                pshared.streams_parked.fetch_add(1, Ordering::Relaxed);
+                if let Some(t) = a.trace.as_mut() {
+                    let now = t.now_ns();
+                    t.record("stream_park", TRACK_REQUEST, now, now);
+                }
+            } else if !block && a.parked {
+                a.parked = false;
+                pshared.streams_parked.fetch_sub(1, Ordering::Relaxed);
+                if let Some(t) = a.trace.as_mut() {
+                    let now = t.now_ns();
+                    t.record("stream_resume", TRACK_REQUEST, now, now);
+                }
+            }
+            blocked.push(block);
+        }
+
+        let picked = sched.pick_batch_gated(max_b, &ready, &classes, &blocked);
         if picked.is_empty() {
+            // Everything runnable is parked behind slow consumers.
+            // Sleep briefly instead of busy-spinning so the drain (a
+            // client read on another thread) can make progress, then
+            // re-run the admission/cancel/park sweeps.
+            std::thread::sleep(Duration::from_micros(200));
             continue;
         }
         let decode_quantum = ready[picked[0]];
@@ -891,16 +957,23 @@ fn deliver<E: ReplicaEngine>(
                 // the cancel flag so the disconnected request stops
                 // consuming quanta within one step instead of running to
                 // its deadline. `swap` counts each disconnect once.
-                if entry.events.send(Event::Token(*t)).is_err()
-                    && !entry.cancel.swap(true, Ordering::SeqCst)
-                {
-                    m.disconnects_c.inc();
+                let is_stream = entry.events.is_stream();
+                if entry.events.send_token(*t).is_err() {
+                    if !entry.cancel.swap(true, Ordering::SeqCst) {
+                        m.disconnects_c.inc();
+                    }
+                } else if is_stream {
+                    m.stream_tokens_c.inc();
                 }
                 if !entry.got_first_token {
                     entry.got_first_token = true;
                     m.ttft_hist.observe(entry.enqueued.elapsed().as_secs_f64());
                     if let Some(tr) = entry.trace.as_mut() {
                         tr.mark_first_token();
+                        if is_stream {
+                            let now = tr.now_ns();
+                            tr.record("first_token_sent", TRACK_REQUEST, now, now);
+                        }
                     }
                 }
                 m.steps_c.inc();
@@ -959,12 +1032,21 @@ fn retire_set<E: ReplicaEngine>(
                         &format!("replica {} poisoned before result assembly", replica_id),
                         &a.events, rshared, pshared, m, true,
                     );
+                    close_stream(&a.events, a.profile.as_deref(), a.enqueued, a.parked, pshared, metrics);
                     admission.release_prefixed(a.est_bytes, a.prefix_charge);
                     lock_clean(&pshared.cancels).remove(&a.id);
                     continue;
                 }
-                let gen = a.gen;
-                match guard(|| Ok(engine.finish(gen))) {
+                // Eager terminal cleanup: drop the generation's
+                // non-prefix-shared KV blocks in the *same quantum* the
+                // terminal fires, before the result is assembled — a
+                // slow (or parked) consumer draining the stream later
+                // must not pin pool blocks.
+                let mut gen = a.gen;
+                match guard(|| {
+                    engine.release_kv(&mut gen);
+                    Ok(engine.finish(gen))
+                }) {
                     Ok(res) => {
                         // End-to-end latency (submit → finish). For
                         // traced requests the histogram observes
@@ -998,7 +1080,8 @@ fn retire_set<E: ReplicaEngine>(
                         rshared.completed.fetch_add(1, Ordering::SeqCst);
                         // The receiver may be gone (disconnect): the
                         // request is complete either way.
-                        let _ = a.events.send(Event::Done(Box::new(res)));
+                        a.events.send_done(Box::new(res));
+                        close_stream(&a.events, a.profile.as_deref(), a.enqueued, a.parked, pshared, metrics);
                         admission.release_prefixed(a.est_bytes, a.prefix_charge);
                         lock_clean(&pshared.cancels).remove(&a.id);
                         rshared.active.fetch_sub(1, Ordering::SeqCst);
@@ -1014,6 +1097,7 @@ fn retire_set<E: ReplicaEngine>(
                             tracer.commit(t, replica_id, Outcome::Failed, TraceStats::default());
                         }
                         settle_terminal(Terminal::Failed, &msg, &a.events, rshared, pshared, m, true);
+                        close_stream(&a.events, a.profile.as_deref(), a.enqueued, a.parked, pshared, metrics);
                         admission.release_prefixed(a.est_bytes, a.prefix_charge);
                         lock_clean(&pshared.cancels).remove(&a.id);
                         *poison = Some(msg);
@@ -1057,8 +1141,13 @@ fn retire_at<E: ReplicaEngine>(
     sched.remove(idx);
     let mut poison = None;
     let stats = if engine_ok {
-        let gen = a.gen;
-        match guard(|| Ok(engine.finish(gen))) {
+        // Eager terminal cleanup (cancel/expire/fail): release the
+        // generation's non-prefix-shared KV in this quantum.
+        let mut gen = a.gen;
+        match guard(|| {
+            engine.release_kv(&mut gen);
+            Ok(engine.finish(gen))
+        }) {
             Ok(res) => stats_of(&res),
             Err(fault) => {
                 note_panic(m, rshared);
@@ -1083,6 +1172,7 @@ fn retire_at<E: ReplicaEngine>(
         tracer.commit(t, replica_id, outcome, stats);
     }
     settle_terminal(kind, msg, &a.events, rshared, pshared, m, true);
+    close_stream(&a.events, a.profile.as_deref(), a.enqueued, a.parked, pshared, &m.registry);
     admission.release_prefixed(a.est_bytes, a.prefix_charge);
     lock_clean(&pshared.cancels).remove(&a.id);
     poison
@@ -1142,6 +1232,12 @@ fn strand_all<G>(
         admission.release_prefixed(a.est_bytes, a.prefix_charge);
         let retryable = !a.got_first_token && a.retries < cfg.max_request_retries;
         if retryable {
+            // A parked entry has streamed tokens, so it can never be
+            // retryable — but keep the pool-wide parked count exact even
+            // if that invariant ever shifts.
+            if a.parked {
+                pshared.streams_parked.fetch_sub(1, Ordering::Relaxed);
+            }
             let mut job = Job {
                 id: a.id,
                 req: a.req,
@@ -1179,6 +1275,7 @@ fn strand_all<G>(
                 tracer.commit(t, replica_id, Outcome::Failed, TraceStats::default());
             }
             settle_terminal(Terminal::Failed, &why, &a.events, rshared, pshared, m, true);
+            close_stream(&a.events, a.profile.as_deref(), a.enqueued, a.parked, pshared, &m.registry);
             lock_clean(&pshared.cancels).remove(&a.id);
         }
     }
@@ -1223,7 +1320,8 @@ pub(crate) fn strand_queued_job(
     commit_job_trace(tracer, from, &mut job, Outcome::Failed);
     metrics.counter("fastav_requests_failed_total").inc();
     pshared.failed.fetch_add(1, Ordering::SeqCst);
-    let _ = job.events.send(Event::Error(reason.to_string()));
+    job.events.send_error(reason.to_string());
+    close_stream(&job.events, job.req.profile.as_deref(), job.enqueued, false, pshared, metrics);
     lock_clean(&pshared.cancels).remove(&job.id);
 }
 
@@ -1322,13 +1420,42 @@ fn settle_job(
     m: &ReplicaMetrics,
 ) {
     settle_terminal(kind, msg, &job.events, rshared, pshared, m, true);
+    close_stream(&job.events, job.req.profile.as_deref(), job.enqueued, false, pshared, &m.registry);
     lock_clean(&pshared.cancels).remove(&job.id);
+}
+
+/// Close out the pool-wide stream accounting for a terminated request.
+/// No-op for buffered sinks. Must run exactly once per streaming
+/// request, on whichever terminal path retires it.
+fn close_stream(
+    sink: &EventSink,
+    profile: Option<&str>,
+    enqueued: Instant,
+    was_parked: bool,
+    pshared: &PoolShared,
+    metrics: &Registry,
+) {
+    if !sink.is_stream() {
+        return;
+    }
+    if was_parked {
+        pshared.streams_parked.fetch_sub(1, Ordering::Relaxed);
+    }
+    pshared.streams_active.fetch_sub(1, Ordering::Relaxed);
+    pshared.streams_completed.fetch_add(1, Ordering::Relaxed);
+    let secs = enqueued.elapsed().as_secs_f64();
+    metrics.histogram("fastav_stream_duration_seconds").observe(secs);
+    if let Some(p) = profile {
+        metrics
+            .histogram(&labeled("fastav_stream_duration_seconds", "profile", p))
+            .observe(secs);
+    }
 }
 
 fn settle_terminal(
     kind: Terminal,
     msg: &str,
-    events: &Sender<Event>,
+    events: &EventSink,
     rshared: &ReplicaShared,
     pshared: &PoolShared,
     m: &ReplicaMetrics,
@@ -1350,7 +1477,7 @@ fn settle_terminal(
     }
     // The receiver may be gone (client disconnect) — terminal
     // accounting must not depend on anyone listening.
-    let _ = events.send(Event::Error(msg.to_string()));
+    events.send_error(msg.to_string());
     if decrement_active {
         rshared.active.fetch_sub(1, Ordering::SeqCst);
     }

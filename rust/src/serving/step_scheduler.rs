@@ -169,16 +169,52 @@ impl StepScheduler {
         ready: &[bool],
         classes: &[u64],
     ) -> Vec<usize> {
+        self.pick_batch_gated(max_b, ready, classes, &[])
+    }
+
+    /// [`Self::pick_batch_classed`] with a per-entry **blocked mask**
+    /// (aligned like `ready`; empty = nothing blocked). A blocked entry
+    /// — a streaming request parked on a slow consumer — is never
+    /// granted a quantum in any form: not as the batch primary, not as
+    /// a batchmate, and not via the single-step prefill fallback (which
+    /// would otherwise step the cursor entry regardless of readiness).
+    /// The cursor skips over blocked entries without charging them
+    /// steps, so their round-robin position survives the park; when
+    /// every entry is blocked there is no quantum (empty pick with a
+    /// non-empty scheduler — the replica loop yields briefly instead of
+    /// spinning).
+    pub fn pick_batch_gated(
+        &mut self,
+        max_b: usize,
+        ready: &[bool],
+        classes: &[u64],
+        blocked: &[bool],
+    ) -> Vec<usize> {
         assert_eq!(ready.len(), self.entries.len(), "ready mask misaligned");
         assert!(
             classes.is_empty() || classes.len() == self.entries.len(),
             "classes misaligned"
+        );
+        assert!(
+            blocked.is_empty() || blocked.len() == self.entries.len(),
+            "blocked mask misaligned"
         );
         if self.entries.is_empty() {
             return Vec::new();
         }
         if self.cursor >= self.entries.len() {
             self.cursor = 0;
+            self.credits = 0;
+        }
+        let is_blocked = |i: usize| !blocked.is_empty() && blocked[i];
+        let n = self.entries.len();
+        if is_blocked(self.cursor) {
+            // Advance to the next runnable entry without granting the
+            // parked ones anything; a fresh primary starts a fresh turn.
+            let Some(off) = (1..n).find(|&o| !is_blocked((self.cursor + o) % n)) else {
+                return Vec::new();
+            };
+            self.cursor = (self.cursor + off) % n;
             self.credits = 0;
         }
         let primary = self.cursor;
@@ -188,11 +224,10 @@ impl StepScheduler {
         let compatible = |i: usize| {
             classes.is_empty() || classes[i] == classes[primary]
         };
-        let n = self.entries.len();
         let mut picked: Vec<usize> = Vec::new();
         for off in 0..n {
             let i = (primary + off) % n;
-            if ready[i] && compatible(i) {
+            if ready[i] && !is_blocked(i) && compatible(i) {
                 picked.push(i);
                 if picked.len() == max_b {
                     break;
@@ -387,6 +422,68 @@ mod tests {
         // An empty classes slice means one shared class — the legacy
         // pick_batch behavior drains everyone.
         assert_eq!(s.pick_batch(8, &ready), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pick_batch_gated_never_grants_blocked_entries() {
+        let mut s = StepScheduler::new();
+        for id in 0..4 {
+            s.admit(id, Priority::Normal, None);
+        }
+        let ready = vec![true; 4];
+        // Entry 1 parked: fused batch drains around it.
+        let blocked = vec![false, true, false, false];
+        let picked = s.pick_batch_gated(8, &ready, &[], &blocked);
+        assert_eq!(picked, vec![0, 2, 3]);
+        assert_eq!(s.entry(1).steps, 0, "parked entry never stepped");
+        // Cursor landed on the parked entry: it is skipped (no quantum,
+        // no step charge), and the batch re-forms from entry 2.
+        let picked = s.pick_batch_gated(8, &ready, &[], &blocked);
+        assert_eq!(picked, vec![0, 2, 3]);
+        assert_eq!(s.entry(1).steps, 0);
+    }
+
+    #[test]
+    fn pick_batch_gated_blocks_prefill_fallback_too() {
+        let mut s = StepScheduler::new();
+        s.admit(1, Priority::Normal, None);
+        s.admit(2, Priority::Normal, None);
+        // Cursor entry is parked *and* not decode-ready: without the
+        // gate this would degrade to pick() and step it anyway.
+        let ready = vec![false, true];
+        let blocked = vec![true, false];
+        let picked = s.pick_batch_gated(8, &ready, &[], &blocked);
+        assert_eq!(picked, vec![1]);
+        assert_eq!(s.entry(0).steps, 0, "parked prefill entry not stepped");
+    }
+
+    #[test]
+    fn pick_batch_gated_all_blocked_is_empty_and_position_survives() {
+        let mut s = StepScheduler::new();
+        for id in 0..3 {
+            s.admit(id, Priority::Normal, None);
+        }
+        let ready = vec![true; 3];
+        assert_eq!(s.pick_batch_gated(1, &ready, &[], &[false; 3]), vec![0]);
+        // Everyone parked: no quantum, nobody charged.
+        assert!(s.pick_batch_gated(8, &ready, &[], &[true; 3]).is_empty());
+        assert_eq!(s.total_steps(), 1);
+        // Unpark: rotation resumes from where it left off.
+        assert_eq!(s.pick_batch_gated(1, &ready, &[], &[false; 3]), vec![1]);
+    }
+
+    #[test]
+    fn pick_batch_gated_respects_classes_among_runnable() {
+        let mut s = StepScheduler::new();
+        for id in 0..4 {
+            s.admit(id, Priority::Normal, None);
+        }
+        let ready = vec![true; 4];
+        let classes = vec![7u64, 7, 9, 7];
+        // Primary (0) fuses class 7, minus the parked batchmate (1).
+        let blocked = vec![false, true, false, false];
+        let picked = s.pick_batch_gated(8, &ready, &classes, &blocked);
+        assert_eq!(picked, vec![0, 3]);
     }
 
     #[test]

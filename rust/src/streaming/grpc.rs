@@ -1,0 +1,883 @@
+//! gRPC front door: `fastav.v1.FastAV/Generate` (unary) and
+//! `/GenerateStream` (server-streaming) over hand-rolled h2c
+//! ([`super::http2`]) + protobuf ([`super::pb`]) — the same
+//! policy-resolution and channel layer as the HTTP surface, no new
+//! dependencies.
+//!
+//! ## Service contract (`docs/STREAMING.md` has the full schema)
+//!
+//! ```proto
+//! service FastAV {
+//!   rpc Generate(GenerateRequest) returns (GenerateResponse);
+//!   rpc GenerateStream(GenerateRequest) returns (stream StreamChunk);
+//! }
+//! ```
+//!
+//! `GenerateStream` emits a `policy` chunk first (the resolved spec),
+//! then one `token` chunk per decoded token as the replica produces it,
+//! then a terminal `done` (the full `GenerateResponse`) or `error`
+//! chunk, followed by `grpc-status` trailers. RST_STREAM from the
+//! client (or a dead socket) cancels the request within one quantum.
+//!
+//! Scope: prior-knowledge h2c only (no upgrade, no TLS); one RPC is
+//! served at a time per connection (concurrent streams on a single
+//! connection are serialized — open one connection per in-flight RPC,
+//! as the bundled client does).
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::http2::{self, Frame};
+use super::pb;
+use super::StreamRecv;
+use crate::coordinator::{Coordinator, Event};
+use crate::http::api::{assemble_request, ApiVersion, Assembled};
+use crate::policy::PolicyRegistry;
+use crate::serving::SubmitError;
+use crate::tokens::Layout;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+
+pub const PATH_GENERATE: &str = "/fastav.v1.FastAV/Generate";
+pub const PATH_GENERATE_STREAM: &str = "/fastav.v1.FastAV/GenerateStream";
+
+pub const GRPC_CANCELLED: u64 = 1;
+
+/// Everything the RPC handlers need to serve a request.
+pub struct GrpcCtx {
+    pub coord: Arc<Coordinator>,
+    pub layout: Layout,
+    pub registry: Arc<PolicyRegistry>,
+    pub max_gen: usize,
+    pub base_seed: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Message schemas (proto3 semantics; hand-encoded via `pb`).
+
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct GenerateRequestPb {
+    pub dataset: String,   // 1 (empty = avqa)
+    pub index: u64,        // 2
+    pub profile: String,   // 3 (empty = registry default)
+    pub max_gen: u32,      // 4 (0 = server default)
+    pub question: String,  // 5 (empty = the sample's own question)
+    pub high_priority: bool, // 6
+    pub deadline_ms: u64,  // 7 (0 = none)
+}
+
+pub fn encode_generate_request(r: &GenerateRequestPb) -> Vec<u8> {
+    let mut b = Vec::new();
+    pb::put_str(&mut b, 1, &r.dataset);
+    pb::put_uint(&mut b, 2, r.index);
+    pb::put_str(&mut b, 3, &r.profile);
+    pb::put_uint(&mut b, 4, u64::from(r.max_gen));
+    pb::put_str(&mut b, 5, &r.question);
+    pb::put_bool(&mut b, 6, r.high_priority);
+    pb::put_uint(&mut b, 7, r.deadline_ms);
+    b
+}
+
+pub fn decode_generate_request(buf: &[u8]) -> Option<GenerateRequestPb> {
+    let mut r = GenerateRequestPb::default();
+    for f in pb::fields(buf)? {
+        match f.number {
+            1 => r.dataset = f.as_str()?.to_string(),
+            2 => r.index = f.as_uint()?,
+            3 => r.profile = f.as_str()?.to_string(),
+            4 => r.max_gen = u32::try_from(f.as_uint()?).ok()?,
+            5 => r.question = f.as_str()?.to_string(),
+            6 => r.high_priority = f.as_uint()? != 0,
+            7 => r.deadline_ms = f.as_uint()?,
+            _ => {}
+        }
+    }
+    Some(r)
+}
+
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct PolicyPb {
+    pub request_id: u64,  // 1
+    pub profile: String,  // 2
+    pub spec_hash: String, // 3
+    pub spec_json: String, // 4 (canonical spec, JSON-encoded)
+}
+
+fn encode_policy(p: &PolicyPb) -> Vec<u8> {
+    let mut b = Vec::new();
+    pb::put_uint(&mut b, 1, p.request_id);
+    pb::put_str(&mut b, 2, &p.profile);
+    pb::put_str(&mut b, 3, &p.spec_hash);
+    pb::put_str(&mut b, 4, &p.spec_json);
+    b
+}
+
+fn decode_policy(buf: &[u8]) -> Option<PolicyPb> {
+    let mut p = PolicyPb::default();
+    for f in pb::fields(buf)? {
+        match f.number {
+            1 => p.request_id = f.as_uint()?,
+            2 => p.profile = f.as_str()?.to_string(),
+            3 => p.spec_hash = f.as_str()?.to_string(),
+            4 => p.spec_json = f.as_str()?.to_string(),
+            _ => {}
+        }
+    }
+    Some(p)
+}
+
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct GenerateResponsePb {
+    pub request_id: u64,          // 1
+    pub tokens: Vec<u32>,         // 2 (packed)
+    pub answer: String,           // 3
+    pub expected: String,         // 4
+    pub correct: bool,            // 5
+    pub relative_flops: f64,      // 6
+    pub subtask: String,          // 7
+    pub policy: Option<PolicyPb>, // 8
+    pub prefill_seconds: f64,     // 9
+    pub decode_seconds: f64,      // 10
+    pub peak_kv_bytes: u64,       // 11
+    pub prefix_hit: bool,         // 12
+    pub prefix_tokens_reused: u64, // 13
+}
+
+pub fn encode_generate_response(r: &GenerateResponsePb) -> Vec<u8> {
+    let mut b = Vec::new();
+    pb::put_uint(&mut b, 1, r.request_id);
+    pb::put_packed_uints(&mut b, 2, &r.tokens);
+    pb::put_str(&mut b, 3, &r.answer);
+    pb::put_str(&mut b, 4, &r.expected);
+    pb::put_bool(&mut b, 5, r.correct);
+    pb::put_double(&mut b, 6, r.relative_flops);
+    pb::put_str(&mut b, 7, &r.subtask);
+    if let Some(p) = &r.policy {
+        pb::put_bytes(&mut b, 8, &encode_policy(p));
+    }
+    pb::put_double(&mut b, 9, r.prefill_seconds);
+    pb::put_double(&mut b, 10, r.decode_seconds);
+    pb::put_uint(&mut b, 11, r.peak_kv_bytes);
+    pb::put_bool(&mut b, 12, r.prefix_hit);
+    pb::put_uint(&mut b, 13, r.prefix_tokens_reused);
+    b
+}
+
+pub fn decode_generate_response(buf: &[u8]) -> Option<GenerateResponsePb> {
+    let mut r = GenerateResponsePb::default();
+    for f in pb::fields(buf)? {
+        match f.number {
+            1 => r.request_id = f.as_uint()?,
+            2 => r.tokens = pb::unpack_uints(f.as_bytes()?)?,
+            3 => r.answer = f.as_str()?.to_string(),
+            4 => r.expected = f.as_str()?.to_string(),
+            5 => r.correct = f.as_uint()? != 0,
+            6 => r.relative_flops = f.as_double()?,
+            7 => r.subtask = f.as_str()?.to_string(),
+            8 => r.policy = Some(decode_policy(f.as_bytes()?)?),
+            9 => r.prefill_seconds = f.as_double()?,
+            10 => r.decode_seconds = f.as_double()?,
+            11 => r.peak_kv_bytes = f.as_uint()?,
+            12 => r.prefix_hit = f.as_uint()? != 0,
+            13 => r.prefix_tokens_reused = f.as_uint()?,
+            _ => {}
+        }
+    }
+    Some(r)
+}
+
+/// One server-streaming chunk: exactly one of the variants is set
+/// (token rides in a submessage so `token == 0` stays representable).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamChunkPb {
+    Policy(PolicyPb),                 // 1
+    Token { value: u32, index: u32 }, // 2 { value = 1, index = 2 }
+    Done(GenerateResponsePb),         // 3
+    Error(String),                    // 4
+}
+
+pub fn encode_stream_chunk(c: &StreamChunkPb) -> Vec<u8> {
+    let mut b = Vec::new();
+    match c {
+        StreamChunkPb::Policy(p) => pb::put_bytes(&mut b, 1, &encode_policy(p)),
+        StreamChunkPb::Token { value, index } => {
+            let mut t = Vec::new();
+            pb::put_uint(&mut t, 1, u64::from(*value));
+            pb::put_uint(&mut t, 2, u64::from(*index));
+            pb::put_bytes(&mut b, 2, &t);
+        }
+        StreamChunkPb::Done(r) => pb::put_bytes(&mut b, 3, &encode_generate_response(r)),
+        StreamChunkPb::Error(e) => pb::put_str(&mut b, 4, e),
+    }
+    b
+}
+
+pub fn decode_stream_chunk(buf: &[u8]) -> Option<StreamChunkPb> {
+    let fs = pb::fields(buf)?;
+    let f = fs.first()?;
+    match f.number {
+        1 => Some(StreamChunkPb::Policy(decode_policy(f.as_bytes()?)?)),
+        2 => {
+            let mut value = 0u32;
+            let mut index = 0u32;
+            for tf in pb::fields(f.as_bytes()?)? {
+                match tf.number {
+                    1 => value = u32::try_from(tf.as_uint()?).ok()?,
+                    2 => index = u32::try_from(tf.as_uint()?).ok()?,
+                    _ => {}
+                }
+            }
+            Some(StreamChunkPb::Token { value, index })
+        }
+        3 => Some(StreamChunkPb::Done(decode_generate_response(f.as_bytes()?)?)),
+        4 => Some(StreamChunkPb::Error(f.as_str()?.to_string())),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server.
+
+/// The gRPC listener (mirrors `http::Server`'s accept/shutdown shape).
+pub struct GrpcServer {
+    listener: TcpListener,
+    pool: ThreadPool,
+    ctx: Arc<GrpcCtx>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl GrpcServer {
+    pub fn bind(addr: &str, workers: usize, ctx: GrpcCtx) -> io::Result<GrpcServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(GrpcServer {
+            listener,
+            pool: ThreadPool::new(workers.max(1)),
+            ctx: Arc::new(ctx),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("bound listener has an addr")
+    }
+
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Accept loop; returns when the shutdown handle flips.
+    pub fn serve(&self) {
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let ctx = Arc::clone(&self.ctx);
+                    let _ = stream.set_nonblocking(false);
+                    self.pool.execute(move || {
+                        let _ = handle_conn(stream, &ctx);
+                    });
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => return,
+            }
+        }
+    }
+}
+
+/// Connection state: the socket plus a reassembly buffer and a queue of
+/// parsed-but-unhandled frames (filled by non-blocking polls during
+/// streaming responses).
+struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    queue: VecDeque<Frame>,
+}
+
+impl Conn {
+    /// Blocking: return the next frame.
+    fn next_frame(&mut self) -> io::Result<Frame> {
+        loop {
+            if let Some(f) = self.queue.pop_front() {
+                return Ok(f);
+            }
+            while let Some(f) = http2::parse_frame(&mut self.buf)? {
+                self.queue.push_back(f);
+            }
+            if self.queue.is_empty() {
+                let mut chunk = [0u8; 4096];
+                let n = self.stream.read(&mut chunk)?;
+                if n == 0 {
+                    return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "peer closed"));
+                }
+                self.buf.extend_from_slice(&chunk[..n]);
+            }
+        }
+    }
+
+    /// Non-blocking: pull whatever frames have arrived into the queue.
+    fn poll_frames(&mut self) -> io::Result<()> {
+        self.stream.set_nonblocking(true)?;
+        let mut chunk = [0u8; 4096];
+        let res = loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => break Err(io::Error::new(io::ErrorKind::UnexpectedEof, "peer closed")),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break Ok(()),
+                Err(e) => break Err(e),
+            }
+        };
+        self.stream.set_nonblocking(false)?;
+        res?;
+        while let Some(f) = http2::parse_frame(&mut self.buf)? {
+            self.queue.push_back(f);
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, ctx: &GrpcCtx) -> io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut conn = Conn { stream, buf: Vec::new(), queue: VecDeque::new() };
+    // Client connection preface, then our (empty) SETTINGS.
+    let mut preface = vec![0u8; http2::PREFACE.len()];
+    conn.stream.read_exact(&mut preface)?;
+    if preface != http2::PREFACE {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad h2c preface"));
+    }
+    http2::write_frame(&mut conn.stream, http2::FRAME_SETTINGS, 0, 0, &[])?;
+
+    // One in-flight request per connection: HEADERS then DATA until
+    // END_STREAM, dispatch, repeat.
+    let mut cur_stream = 0u32;
+    let mut cur_headers: Vec<(String, String)> = Vec::new();
+    let mut cur_data: Vec<u8> = Vec::new();
+    loop {
+        let f = conn.next_frame()?;
+        match f.kind {
+            http2::FRAME_SETTINGS if !f.ack() => {
+                http2::write_frame(&mut conn.stream, http2::FRAME_SETTINGS, http2::FLAG_ACK, 0, &[])?;
+            }
+            http2::FRAME_PING if !f.ack() => {
+                http2::write_frame(&mut conn.stream, http2::FRAME_PING, http2::FLAG_ACK, 0, &f.payload)?;
+            }
+            http2::FRAME_GOAWAY => return Ok(()),
+            http2::FRAME_HEADERS => {
+                if f.flags & http2::FLAG_END_HEADERS == 0 {
+                    // CONTINUATION unsupported.
+                    goaway(&mut conn.stream)?;
+                    return Ok(());
+                }
+                let Some(hs) = http2::parse_headers(&f.payload) else {
+                    goaway(&mut conn.stream)?;
+                    return Ok(());
+                };
+                cur_stream = f.stream;
+                cur_headers = hs;
+                cur_data.clear();
+                if f.end_stream() {
+                    dispatch(&mut conn, ctx, cur_stream, &cur_headers, &cur_data)?;
+                }
+            }
+            http2::FRAME_DATA if f.stream == cur_stream => {
+                cur_data.extend_from_slice(&f.payload);
+                if f.end_stream() {
+                    dispatch(&mut conn, ctx, cur_stream, &cur_headers, &cur_data)?;
+                }
+            }
+            http2::FRAME_RST_STREAM => {
+                if f.stream == cur_stream {
+                    cur_data.clear();
+                    cur_stream = 0;
+                }
+            }
+            _ => {} // WINDOW_UPDATE, stray DATA, SETTINGS ack: ignore.
+        }
+    }
+}
+
+fn goaway(w: &mut impl Write) -> io::Result<()> {
+    // last-stream-id 0 + PROTOCOL_ERROR (0x1).
+    let mut p = vec![0u8; 8];
+    p[7] = 1;
+    http2::write_frame(w, http2::FRAME_GOAWAY, 0, 0, &p)
+}
+
+/// Split one gRPC length-prefixed message stream into payloads.
+fn split_grpc_messages(data: &[u8]) -> Option<Vec<&[u8]>> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while pos < data.len() {
+        let compressed = *data.get(pos)?;
+        if compressed != 0 {
+            return None; // no compression support
+        }
+        let len = u32::from_be_bytes(data.get(pos + 1..pos + 5)?.try_into().ok()?) as usize;
+        let end = pos.checked_add(5 + len)?;
+        out.push(data.get(pos + 5..end)?);
+        pos = end;
+    }
+    Some(out)
+}
+
+fn write_response_headers(w: &mut impl Write, stream: u32) -> io::Result<()> {
+    let mut block = Vec::new();
+    http2::put_header(&mut block, ":status", "200");
+    http2::put_header(&mut block, "content-type", "application/grpc");
+    http2::write_frame(w, http2::FRAME_HEADERS, http2::FLAG_END_HEADERS, stream, &block)
+}
+
+fn write_grpc_message(w: &mut impl Write, stream: u32, msg: &[u8]) -> io::Result<()> {
+    let mut payload = Vec::with_capacity(5 + msg.len());
+    payload.push(0u8);
+    payload.extend_from_slice(&(msg.len() as u32).to_be_bytes());
+    payload.extend_from_slice(msg);
+    // Our messages are far below MAX_FRAME; split defensively anyway.
+    for part in payload.chunks(http2::MAX_FRAME) {
+        http2::write_frame(w, http2::FRAME_DATA, 0, stream, part)?;
+    }
+    Ok(())
+}
+
+fn write_trailers(w: &mut impl Write, stream: u32, status: u64, message: &str) -> io::Result<()> {
+    let mut block = Vec::new();
+    http2::put_header(&mut block, "grpc-status", &status.to_string());
+    if !message.is_empty() {
+        // Keep it header-safe; full percent-encoding is unnecessary for
+        // our ASCII error strings.
+        let msg: String = message
+            .chars()
+            .map(|c| if c == '\r' || c == '\n' { ' ' } else { c })
+            .collect();
+        http2::put_header(&mut block, "grpc-message", &msg);
+    }
+    http2::write_frame(
+        w,
+        http2::FRAME_HEADERS,
+        http2::FLAG_END_HEADERS | http2::FLAG_END_STREAM,
+        stream,
+        &block,
+    )
+}
+
+/// Trailers-only error response (headers + trailers, no messages).
+fn fail(conn: &mut Conn, stream: u32, status: u64, message: &str) -> io::Result<()> {
+    write_response_headers(&mut conn.stream, stream)?;
+    write_trailers(&mut conn.stream, stream, status, message)
+}
+
+fn dispatch(
+    conn: &mut Conn,
+    ctx: &GrpcCtx,
+    stream: u32,
+    headers: &[(String, String)],
+    data: &[u8],
+) -> io::Result<()> {
+    let path = http2::header(headers, ":path").unwrap_or("").to_string();
+    if http2::header(headers, ":method") != Some("POST") {
+        return fail(conn, stream, http2::GRPC_UNIMPLEMENTED, "POST required");
+    }
+    let Some(msgs) = split_grpc_messages(data) else {
+        return fail(conn, stream, http2::GRPC_INVALID_ARGUMENT, "bad gRPC framing");
+    };
+    let Some(req) = msgs.first().and_then(|m| decode_generate_request(m)) else {
+        return fail(conn, stream, http2::GRPC_INVALID_ARGUMENT, "bad GenerateRequest");
+    };
+    match path.as_str() {
+        PATH_GENERATE => serve_unary(conn, ctx, stream, &req),
+        PATH_GENERATE_STREAM => serve_streaming(conn, ctx, stream, &req),
+        _ => fail(
+            conn,
+            stream,
+            http2::GRPC_UNIMPLEMENTED,
+            &format!("unknown method {}", path),
+        ),
+    }
+}
+
+/// Resolve the pb request through the shared HTTP assembly path (same
+/// policy resolution, clamps, and per-profile accounting).
+fn assemble(ctx: &GrpcCtx, req: &GenerateRequestPb) -> Result<Assembled, (u64, String)> {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    if !req.dataset.is_empty() {
+        fields.push(("dataset", Json::str(&req.dataset)));
+    }
+    fields.push(("index", Json::num(req.index as f64)));
+    if !req.profile.is_empty() {
+        fields.push(("profile", Json::str(&req.profile)));
+    }
+    if req.max_gen > 0 {
+        fields.push(("max_gen", Json::num(f64::from(req.max_gen))));
+    }
+    if !req.question.is_empty() {
+        fields.push(("question", Json::str(&req.question)));
+    }
+    if req.high_priority {
+        fields.push(("priority", Json::str("high")));
+    }
+    if req.deadline_ms > 0 {
+        fields.push(("deadline_ms", Json::num(req.deadline_ms as f64)));
+    }
+    let body = Json::obj(fields);
+    assemble_request(
+        &ctx.coord,
+        &body,
+        &ctx.layout,
+        &ctx.registry,
+        ctx.max_gen,
+        ctx.base_seed,
+        ApiVersion::V2,
+    )
+    .map_err(|resp| {
+        (
+            http2::GRPC_INVALID_ARGUMENT,
+            String::from_utf8_lossy(&resp.body).to_string(),
+        )
+    })
+}
+
+fn policy_pb(id: u64, asm: &Assembled) -> PolicyPb {
+    PolicyPb {
+        request_id: id,
+        profile: asm.profile.clone(),
+        spec_hash: asm.spec.spec_hash_hex(),
+        spec_json: asm.spec.to_json().to_string(),
+    }
+}
+
+fn response_pb(id: u64, asm: &Assembled, res: &crate::model::GenerateResult) -> GenerateResponsePb {
+    GenerateResponsePb {
+        request_id: id,
+        tokens: res.tokens.clone(),
+        answer: crate::tokens::render_answer(&res.tokens),
+        expected: crate::tokens::render_answer(&asm.sample.answer),
+        correct: crate::eval::exact_match(&res.tokens, &asm.sample.answer),
+        relative_flops: res.relative_flops,
+        subtask: asm.sample.subtask.name().to_string(),
+        policy: Some(policy_pb(id, asm)),
+        prefill_seconds: res.prefill_seconds,
+        decode_seconds: res.decode_seconds,
+        peak_kv_bytes: res.peak_kv_bytes as u64,
+        prefix_hit: res.prefix_hit,
+        prefix_tokens_reused: res.prefix_tokens_reused as u64,
+    }
+}
+
+fn map_submit_err(e: &SubmitError) -> (u64, &'static str) {
+    match e {
+        SubmitError::Full(_) => (http2::GRPC_RESOURCE_EXHAUSTED, "queue full"),
+        SubmitError::Closed(_) => (http2::GRPC_UNAVAILABLE, "shutting down"),
+    }
+}
+
+fn serve_unary(conn: &mut Conn, ctx: &GrpcCtx, stream: u32, req: &GenerateRequestPb) -> io::Result<()> {
+    let asm = match assemble(ctx, req) {
+        Ok(a) => a,
+        Err((status, msg)) => return fail(conn, stream, status, &msg),
+    };
+    let (id, rx) = match ctx.coord.submit_with_id(asm.request.clone()) {
+        Ok(ok) => ok,
+        Err(e) => {
+            let (status, msg) = map_submit_err(&e);
+            return fail(conn, stream, status, msg);
+        }
+    };
+    for ev in rx {
+        match ev {
+            Event::Token(_) => {}
+            Event::Done(res) => {
+                let msg = encode_generate_response(&response_pb(id, &asm, &res));
+                write_response_headers(&mut conn.stream, stream)?;
+                write_grpc_message(&mut conn.stream, stream, &msg)?;
+                return write_trailers(&mut conn.stream, stream, http2::GRPC_OK, "");
+            }
+            Event::Error(e) => return fail(conn, stream, http2::GRPC_INTERNAL, &e),
+        }
+    }
+    fail(conn, stream, http2::GRPC_UNAVAILABLE, "worker dropped the request")
+}
+
+fn serve_streaming(
+    conn: &mut Conn,
+    ctx: &GrpcCtx,
+    stream: u32,
+    req: &GenerateRequestPb,
+) -> io::Result<()> {
+    let asm = match assemble(ctx, req) {
+        Ok(a) => a,
+        Err((status, msg)) => return fail(conn, stream, status, &msg),
+    };
+    let (id, rx) = match ctx.coord.submit_streaming(asm.request.clone()) {
+        Ok(ok) => ok,
+        Err(e) => {
+            let (status, msg) = map_submit_err(&e);
+            return fail(conn, stream, status, msg);
+        }
+    };
+    write_response_headers(&mut conn.stream, stream)?;
+    let policy = encode_stream_chunk(&StreamChunkPb::Policy(policy_pb(id, &asm)));
+    if write_grpc_message(&mut conn.stream, stream, &policy).is_err() {
+        // Dropping rx disconnects the channel; cancel makes it prompt.
+        ctx.coord.cancel(id);
+        return Err(io::Error::new(io::ErrorKind::BrokenPipe, "client gone"));
+    }
+    let mut index = 0u32;
+    loop {
+        // Surface client frames between events: RST_STREAM cancels the
+        // request within one quantum; PING keeps the connection honest.
+        if conn.poll_frames().is_err() {
+            ctx.coord.cancel(id);
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "client gone"));
+        }
+        let mut rst = false;
+        conn.queue.retain(|f| match f.kind {
+            http2::FRAME_RST_STREAM if f.stream == stream => {
+                rst = true;
+                false
+            }
+            http2::FRAME_WINDOW_UPDATE => false,
+            _ => true,
+        });
+        // Drain deferred PINGs (retain can't write; answer them here).
+        let pings: Vec<Frame> = {
+            let mut p = Vec::new();
+            conn.queue.retain(|f| {
+                if f.kind == http2::FRAME_PING && !f.ack() {
+                    p.push(f.clone());
+                    false
+                } else {
+                    true
+                }
+            });
+            p
+        };
+        for f in pings {
+            http2::write_frame(&mut conn.stream, http2::FRAME_PING, http2::FLAG_ACK, 0, &f.payload)?;
+        }
+        if rst {
+            ctx.coord.cancel(id);
+            drop(rx);
+            return write_trailers(&mut conn.stream, stream, GRPC_CANCELLED, "canceled by client");
+        }
+        match rx.recv(Duration::from_millis(50)) {
+            StreamRecv::TimedOut => continue,
+            StreamRecv::Token(t) => {
+                let chunk = encode_stream_chunk(&StreamChunkPb::Token { value: t, index });
+                index += 1;
+                if write_grpc_message(&mut conn.stream, stream, &chunk).is_err() {
+                    ctx.coord.cancel(id);
+                    return Err(io::Error::new(io::ErrorKind::BrokenPipe, "client gone"));
+                }
+            }
+            StreamRecv::Done(res) => {
+                let chunk =
+                    encode_stream_chunk(&StreamChunkPb::Done(response_pb(id, &asm, &res)));
+                write_grpc_message(&mut conn.stream, stream, &chunk)?;
+                return write_trailers(&mut conn.stream, stream, http2::GRPC_OK, "");
+            }
+            StreamRecv::Error(e) => {
+                let chunk = encode_stream_chunk(&StreamChunkPb::Error(e.clone()));
+                write_grpc_message(&mut conn.stream, stream, &chunk)?;
+                return write_trailers(&mut conn.stream, stream, http2::GRPC_INTERNAL, &e);
+            }
+            StreamRecv::SenderGone => {
+                let msg = "worker dropped the request";
+                let chunk = encode_stream_chunk(&StreamChunkPb::Error(msg.to_string()));
+                write_grpc_message(&mut conn.stream, stream, &chunk)?;
+                return write_trailers(&mut conn.stream, stream, http2::GRPC_UNAVAILABLE, msg);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Minimal client (tests + examples; one connection per RPC).
+
+/// A finished RPC as the client saw it.
+#[derive(Debug, Default)]
+pub struct GrpcReply {
+    /// Decoded gRPC message payloads, in arrival order.
+    pub messages: Vec<Vec<u8>>,
+    /// `grpc-status` trailer (0 = OK; [`GRPC_CANCELLED`] when we
+    /// canceled locally before trailers arrived).
+    pub status: u64,
+    pub message: String,
+}
+
+/// Unary/collecting call: send one request message, gather every
+/// response message until trailers.
+pub fn call(addr: &str, path: &str, request: &[u8]) -> io::Result<GrpcReply> {
+    call_streaming(addr, path, request, |_| true)
+}
+
+/// Streaming call: `on_msg` sees each message as it arrives; returning
+/// `false` cancels the RPC (RST_STREAM) — the mid-stream-cancel path.
+pub fn call_streaming(
+    addr: &str,
+    path: &str,
+    request: &[u8],
+    mut on_msg: impl FnMut(&[u8]) -> bool,
+) -> io::Result<GrpcReply> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.write_all(http2::PREFACE)?;
+    http2::write_frame(&mut stream, http2::FRAME_SETTINGS, 0, 0, &[])?;
+    let mut block = Vec::new();
+    http2::put_header(&mut block, ":method", "POST");
+    http2::put_header(&mut block, ":scheme", "http");
+    http2::put_header(&mut block, ":path", path);
+    http2::put_header(&mut block, ":authority", "localhost");
+    http2::put_header(&mut block, "content-type", "application/grpc");
+    http2::put_header(&mut block, "te", "trailers");
+    http2::write_frame(&mut stream, http2::FRAME_HEADERS, http2::FLAG_END_HEADERS, 1, &block)?;
+    let mut payload = Vec::with_capacity(5 + request.len());
+    payload.push(0u8);
+    payload.extend_from_slice(&(request.len() as u32).to_be_bytes());
+    payload.extend_from_slice(request);
+    http2::write_frame(&mut stream, http2::FRAME_DATA, http2::FLAG_END_STREAM, 1, &payload)?;
+
+    let mut reply = GrpcReply::default();
+    let mut buf = Vec::new();
+    let mut msgbuf: Vec<u8> = Vec::new();
+    loop {
+        let mut r = stream.try_clone()?;
+        let f = http2::read_frame_until(&mut r, &mut stream, &mut buf, |f| {
+            f.stream == 1 && (f.kind == http2::FRAME_DATA || f.kind == http2::FRAME_HEADERS)
+        })?;
+        match f.kind {
+            http2::FRAME_DATA => {
+                msgbuf.extend_from_slice(&f.payload);
+                while msgbuf.len() >= 5 {
+                    let len = u32::from_be_bytes(msgbuf[1..5].try_into().unwrap()) as usize;
+                    if msgbuf.len() < 5 + len {
+                        break;
+                    }
+                    let msg: Vec<u8> = msgbuf[5..5 + len].to_vec();
+                    msgbuf.drain(..5 + len);
+                    let keep = on_msg(&msg);
+                    reply.messages.push(msg);
+                    if !keep {
+                        // RST_STREAM error code CANCEL (0x8).
+                        http2::write_frame(
+                            &mut stream,
+                            http2::FRAME_RST_STREAM,
+                            0,
+                            1,
+                            &8u32.to_be_bytes(),
+                        )?;
+                        reply.status = GRPC_CANCELLED;
+                        reply.message = "canceled by client".to_string();
+                        return Ok(reply);
+                    }
+                }
+            }
+            http2::FRAME_HEADERS => {
+                let hs = http2::parse_headers(&f.payload)
+                    .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad headers"))?;
+                if let Some(status) = http2::header(&hs, "grpc-status") {
+                    reply.status = status.parse().unwrap_or(http2::GRPC_INTERNAL);
+                    reply.message =
+                        http2::header(&hs, "grpc-message").unwrap_or("").to_string();
+                    return Ok(reply);
+                }
+                if let Some(code) = http2::header(&hs, ":status") {
+                    if code != "200" {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!("HTTP status {}", code),
+                        ));
+                    }
+                }
+            }
+            _ => unreachable!("filtered by read_frame_until"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_request_roundtrip() {
+        let req = GenerateRequestPb {
+            dataset: "avqa".into(),
+            index: 17,
+            profile: "tight".into(),
+            max_gen: 4,
+            question: "what_sound".into(),
+            high_priority: true,
+            deadline_ms: 1500,
+        };
+        let wire = encode_generate_request(&req);
+        assert_eq!(decode_generate_request(&wire), Some(req));
+    }
+
+    #[test]
+    fn stream_chunk_variants_roundtrip() {
+        let chunks = [
+            StreamChunkPb::Policy(PolicyPb {
+                request_id: 3,
+                profile: "default".into(),
+                spec_hash: "abc".into(),
+                spec_json: "{}".into(),
+            }),
+            StreamChunkPb::Token { value: 0, index: 0 },
+            StreamChunkPb::Token { value: 42, index: 7 },
+            StreamChunkPb::Error("boom".into()),
+        ];
+        for c in &chunks {
+            let wire = encode_stream_chunk(c);
+            assert_eq!(decode_stream_chunk(&wire).as_ref(), Some(c));
+        }
+    }
+
+    #[test]
+    fn generate_response_roundtrip_with_policy() {
+        let resp = GenerateResponsePb {
+            request_id: 9,
+            tokens: vec![5, 0, 31],
+            answer: "scene_07".into(),
+            expected: "scene_07".into(),
+            correct: true,
+            relative_flops: 0.58,
+            subtask: "what_scene".into(),
+            policy: Some(PolicyPb {
+                request_id: 9,
+                profile: "default".into(),
+                spec_hash: "ff00".into(),
+                spec_json: "{\"global\":\"fastav\"}".into(),
+            }),
+            prefill_seconds: 0.5,
+            decode_seconds: 0.25,
+            peak_kv_bytes: 4096,
+            prefix_hit: true,
+            prefix_tokens_reused: 12,
+        };
+        let wire = encode_generate_response(&resp);
+        assert_eq!(decode_generate_response(&wire), Some(resp));
+    }
+
+    #[test]
+    fn grpc_message_split_and_framing() {
+        let mut data = Vec::new();
+        for msg in [&b"aa"[..], &b"bbbb"[..]] {
+            data.push(0u8);
+            data.extend_from_slice(&(msg.len() as u32).to_be_bytes());
+            data.extend_from_slice(msg);
+        }
+        let msgs = split_grpc_messages(&data).unwrap();
+        assert_eq!(msgs, vec![&b"aa"[..], &b"bbbb"[..]]);
+        // Compressed flag or truncation rejected.
+        assert!(split_grpc_messages(&[1, 0, 0, 0, 0]).is_none());
+        assert!(split_grpc_messages(&[0, 0, 0, 0, 9, 1]).is_none());
+    }
+}

@@ -1,0 +1,382 @@
+//! HTTP/2 cleartext (h2c) framing + HPACK subset for the gRPC front
+//! door — enough of RFC 9113/7541 for prior-knowledge gRPC clients and
+//! our own test client, with zero dependencies.
+//!
+//! Supported: the client connection preface, SETTINGS (+ack), HEADERS
+//! with END_HEADERS in one frame, DATA, RST_STREAM, PING (+reply),
+//! GOAWAY, WINDOW_UPDATE (parsed, flow control is not enforced — gRPC
+//! messages here are tiny relative to the 64 KiB default window).
+//! HPACK: static-table indexed fields and plain (non-Huffman) literals;
+//! we *emit* only "literal without indexing — new name" so any
+//! spec-compliant peer can decode us without a dynamic table.
+//! Unsupported (GOAWAY'd): CONTINUATION, Huffman-coded literals,
+//! dynamic-table references, PUSH_PROMISE, padding/priority flags.
+
+use std::io::{self, Read, Write};
+
+/// Client connection preface (RFC 9113 §3.4).
+pub const PREFACE: &[u8] = b"PRI * HTTP/2.0\r\n\r\nSM\r\n\r\n";
+
+pub const FRAME_DATA: u8 = 0x0;
+pub const FRAME_HEADERS: u8 = 0x1;
+pub const FRAME_RST_STREAM: u8 = 0x3;
+pub const FRAME_SETTINGS: u8 = 0x4;
+pub const FRAME_PING: u8 = 0x6;
+pub const FRAME_GOAWAY: u8 = 0x7;
+pub const FRAME_WINDOW_UPDATE: u8 = 0x8;
+
+pub const FLAG_END_STREAM: u8 = 0x1;
+pub const FLAG_ACK: u8 = 0x1;
+pub const FLAG_END_HEADERS: u8 = 0x4;
+
+/// Largest frame payload we accept (the RFC default max frame size).
+pub const MAX_FRAME: usize = 16_384;
+
+/// gRPC error codes we emit in `grpc-status` trailers.
+pub const GRPC_OK: u64 = 0;
+pub const GRPC_INVALID_ARGUMENT: u64 = 3;
+pub const GRPC_RESOURCE_EXHAUSTED: u64 = 8;
+pub const GRPC_INTERNAL: u64 = 13;
+pub const GRPC_UNAVAILABLE: u64 = 14;
+pub const GRPC_UNIMPLEMENTED: u64 = 12;
+
+/// One HTTP/2 frame (header fields + payload).
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub kind: u8,
+    pub flags: u8,
+    pub stream: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn end_stream(&self) -> bool {
+        self.flags & FLAG_END_STREAM != 0
+    }
+
+    pub fn ack(&self) -> bool {
+        self.flags & FLAG_ACK != 0
+    }
+}
+
+/// Serialize one frame (9-byte header + payload).
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: u8,
+    flags: u8,
+    stream: u32,
+    payload: &[u8],
+) -> io::Result<()> {
+    let len = payload.len();
+    debug_assert!(len <= MAX_FRAME);
+    let mut head = [0u8; 9];
+    head[0] = ((len >> 16) & 0xff) as u8;
+    head[1] = ((len >> 8) & 0xff) as u8;
+    head[2] = (len & 0xff) as u8;
+    head[3] = kind;
+    head[4] = flags;
+    head[5..9].copy_from_slice(&(stream & 0x7fff_ffff).to_be_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)
+}
+
+/// Try to parse one complete frame from the front of `buf`, draining the
+/// consumed bytes. `Ok(None)` = need more data; `Err` = protocol error.
+pub fn parse_frame(buf: &mut Vec<u8>) -> io::Result<Option<Frame>> {
+    if buf.len() < 9 {
+        return Ok(None);
+    }
+    let len = ((buf[0] as usize) << 16) | ((buf[1] as usize) << 8) | buf[2] as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame exceeds max size"));
+    }
+    if buf.len() < 9 + len {
+        return Ok(None);
+    }
+    let kind = buf[3];
+    let flags = buf[4];
+    let stream = u32::from_be_bytes([buf[5], buf[6], buf[7], buf[8]]) & 0x7fff_ffff;
+    let payload = buf[9..9 + len].to_vec();
+    buf.drain(..9 + len);
+    Ok(Some(Frame { kind, flags, stream, payload }))
+}
+
+/// Read frames until `want` returns true for one, replying to PING and
+/// ignoring SETTINGS/WINDOW_UPDATE along the way (client-side helper).
+pub fn read_frame_until(
+    r: &mut impl Read,
+    w: &mut impl Write,
+    buf: &mut Vec<u8>,
+    mut want: impl FnMut(&Frame) -> bool,
+) -> io::Result<Frame> {
+    let mut chunk = [0u8; 4096];
+    loop {
+        while let Some(f) = parse_frame(buf)? {
+            match f.kind {
+                FRAME_SETTINGS if !f.ack() => {
+                    write_frame(w, FRAME_SETTINGS, FLAG_ACK, 0, &[])?;
+                }
+                FRAME_PING if !f.ack() => {
+                    write_frame(w, FRAME_PING, FLAG_ACK, 0, &f.payload)?;
+                }
+                FRAME_GOAWAY => {
+                    return Err(io::Error::new(io::ErrorKind::ConnectionAborted, "GOAWAY"));
+                }
+                _ if want(&f) => return Ok(f),
+                _ => {}
+            }
+        }
+        let n = r.read(&mut chunk)?;
+        if n == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "peer closed"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HPACK subset (RFC 7541).
+
+/// The HPACK static table (RFC 7541 appendix A), 1-indexed.
+const STATIC_TABLE: &[(&str, &str)] = &[
+    (":authority", ""),
+    (":method", "GET"),
+    (":method", "POST"),
+    (":path", "/"),
+    (":path", "/index.html"),
+    (":scheme", "http"),
+    (":scheme", "https"),
+    (":status", "200"),
+    (":status", "204"),
+    (":status", "206"),
+    (":status", "304"),
+    (":status", "400"),
+    (":status", "404"),
+    (":status", "500"),
+    ("accept-charset", ""),
+    ("accept-encoding", "gzip, deflate"),
+    ("accept-language", ""),
+    ("accept-ranges", ""),
+    ("accept", ""),
+    ("access-control-allow-origin", ""),
+    ("age", ""),
+    ("allow", ""),
+    ("authorization", ""),
+    ("cache-control", ""),
+    ("content-disposition", ""),
+    ("content-encoding", ""),
+    ("content-language", ""),
+    ("content-length", ""),
+    ("content-location", ""),
+    ("content-range", ""),
+    ("content-type", ""),
+    ("cookie", ""),
+    ("date", ""),
+    ("etag", ""),
+    ("expect", ""),
+    ("expires", ""),
+    ("from", ""),
+    ("host", ""),
+    ("if-match", ""),
+    ("if-modified-since", ""),
+    ("if-none-match", ""),
+    ("if-range", ""),
+    ("if-unmodified-since", ""),
+    ("last-modified", ""),
+    ("link", ""),
+    ("location", ""),
+    ("max-forwards", ""),
+    ("proxy-authenticate", ""),
+    ("proxy-authorization", ""),
+    ("range", ""),
+    ("referer", ""),
+    ("refresh", ""),
+    ("retry-after", ""),
+    ("server", ""),
+    ("set-cookie", ""),
+    ("strict-transport-security", ""),
+    ("transfer-encoding", ""),
+    ("user-agent", ""),
+    ("vary", ""),
+    ("via", ""),
+    ("www-authenticate", ""),
+];
+
+/// HPACK prefix-integer encode (RFC 7541 §5.1) with `prefix` bits and
+/// the leading pattern `pattern` in the top bits.
+fn put_int(buf: &mut Vec<u8>, pattern: u8, prefix: u8, mut v: usize) {
+    let max = (1usize << prefix) - 1;
+    if v < max {
+        buf.push(pattern | v as u8);
+        return;
+    }
+    buf.push(pattern | max as u8);
+    v -= max;
+    while v >= 128 {
+        buf.push((v & 0x7f) as u8 | 0x80);
+        v >>= 7;
+    }
+    buf.push(v as u8);
+}
+
+fn get_int(block: &[u8], pos: &mut usize, prefix: u8) -> Option<usize> {
+    let max = (1usize << prefix) - 1;
+    let first = *block.get(*pos)? as usize & max;
+    *pos += 1;
+    if first < max {
+        return Some(first);
+    }
+    let mut v = max;
+    let mut shift = 0u32;
+    loop {
+        let byte = *block.get(*pos)?;
+        *pos += 1;
+        v = v.checked_add(((byte & 0x7f) as usize).checked_shl(shift)?)?;
+        if byte & 0x80 == 0 {
+            return Some(v);
+        }
+        shift = shift.checked_add(7)?;
+        if shift > 28 {
+            return None;
+        }
+    }
+}
+
+fn put_hpack_str(buf: &mut Vec<u8>, s: &str) {
+    // H bit clear: plain octets, never Huffman.
+    put_int(buf, 0x00, 7, s.len());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn get_hpack_str(block: &[u8], pos: &mut usize) -> Option<String> {
+    let huffman = *block.get(*pos)? & 0x80 != 0;
+    let len = get_int(block, pos, 7)?;
+    if huffman {
+        // Deliberately unsupported — peers negotiate plain literals by
+        // our never advertising Huffman; compliant encoders may still
+        // send it, in which case the connection is GOAWAY'd.
+        return None;
+    }
+    let end = pos.checked_add(len)?;
+    let s = std::str::from_utf8(block.get(*pos..end)?).ok()?.to_string();
+    *pos = end;
+    Some(s)
+}
+
+/// Encode one header as "literal header field without indexing — new
+/// name" (pattern `0000`), plain strings. Stateless: no dynamic table.
+pub fn put_header(buf: &mut Vec<u8>, name: &str, value: &str) {
+    buf.push(0x00);
+    put_hpack_str(buf, name);
+    put_hpack_str(buf, value);
+}
+
+/// Decode a header block. Handles static-table indexed fields and all
+/// three literal forms (with-indexing literals are decoded but *not*
+/// added to a dynamic table — a later index into that table fails,
+/// which our stateless emitters never produce). `None` on Huffman
+/// strings, dynamic-table references, or malformed input.
+pub fn parse_headers(block: &[u8]) -> Option<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while pos < block.len() {
+        let b = block[pos];
+        if b & 0x80 != 0 {
+            // Indexed header field.
+            let idx = get_int(block, &mut pos, 7)?;
+            let (n, v) = static_entry(idx)?;
+            out.push((n.to_string(), v.to_string()));
+        } else if b & 0xe0 == 0x20 {
+            // Dynamic table size update: accept and ignore.
+            let _ = get_int(block, &mut pos, 5)?;
+        } else {
+            // Literal: 01 = incremental indexing (6-bit name index),
+            // 0000 = without indexing, 0001 = never indexed (4-bit).
+            let name_prefix = if b & 0xc0 == 0x40 { 6 } else { 4 };
+            let idx = get_int(block, &mut pos, name_prefix)?;
+            let name = if idx == 0 {
+                get_hpack_str(block, &mut pos)?
+            } else {
+                static_entry(idx)?.0.to_string()
+            };
+            let value = get_hpack_str(block, &mut pos)?;
+            out.push((name, value));
+        }
+    }
+    Some(out)
+}
+
+fn static_entry(idx: usize) -> Option<(&'static str, &'static str)> {
+    STATIC_TABLE.get(idx.checked_sub(1)?).copied()
+}
+
+/// Find a header value (names are already lowercase on the wire).
+pub fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FRAME_DATA, FLAG_END_STREAM, 3, b"hello").unwrap();
+        let mut buf = wire.clone();
+        let f = parse_frame(&mut buf).unwrap().unwrap();
+        assert_eq!((f.kind, f.flags, f.stream), (FRAME_DATA, FLAG_END_STREAM, 3));
+        assert_eq!(f.payload, b"hello");
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn partial_frame_waits_for_more() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FRAME_HEADERS, 0, 1, &[1, 2, 3, 4]).unwrap();
+        let mut buf = wire[..7].to_vec();
+        assert!(parse_frame(&mut buf).unwrap().is_none());
+        buf.extend_from_slice(&wire[7..]);
+        assert!(parse_frame(&mut buf).unwrap().is_some());
+    }
+
+    #[test]
+    fn hpack_literal_roundtrip() {
+        let mut block = Vec::new();
+        put_header(&mut block, ":method", "POST");
+        put_header(&mut block, ":path", "/fastav.v1.FastAV/Generate");
+        put_header(&mut block, "content-type", "application/grpc");
+        let hs = parse_headers(&block).unwrap();
+        assert_eq!(header(&hs, ":method"), Some("POST"));
+        assert_eq!(header(&hs, ":path"), Some("/fastav.v1.FastAV/Generate"));
+        assert_eq!(header(&hs, "content-type"), Some("application/grpc"));
+    }
+
+    #[test]
+    fn hpack_static_indexed_and_name_indexed() {
+        // 0x83 = indexed field 3 (:method POST); literal with
+        // incremental indexing using static name index 4 (:path).
+        let mut block = vec![0x83];
+        block.push(0x44); // 01 pattern, name index 4
+        put_hpack_str(&mut block, "/x");
+        let hs = parse_headers(&block).unwrap();
+        assert_eq!(header(&hs, ":method"), Some("POST"));
+        assert_eq!(header(&hs, ":path"), Some("/x"));
+    }
+
+    #[test]
+    fn hpack_huffman_rejected() {
+        // H bit set on the name string.
+        let block = vec![0x00, 0x81, 0xff, 0x01, b'x'];
+        assert!(parse_headers(&block).is_none());
+    }
+
+    #[test]
+    fn hpack_long_int_boundary() {
+        let mut block = Vec::new();
+        let long = "v".repeat(300); // forces multi-byte length
+        put_header(&mut block, "x-long", &long);
+        let hs = parse_headers(&block).unwrap();
+        assert_eq!(header(&hs, "x-long"), Some(long.as_str()));
+    }
+}

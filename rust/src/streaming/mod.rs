@@ -1,0 +1,410 @@
+//! Streaming delivery: per-request token channels from the replica loop
+//! to the client (see `docs/STREAMING.md`).
+//!
+//! Every response used to buffer until `finish`, which hid the latency
+//! win FastAV's pruning buys — time-to-first-token is the production
+//! metric, and the begin/step/finish `Generation` state machine already
+//! yields exactly one token per quantum. This module is the missing
+//! transport: the replica loop pushes each decoded token (and the
+//! terminal event) into a bounded per-request [`TokenChannel`]; the
+//! coordinator hands the subscriber half back from
+//! `Coordinator::submit_streaming`; the HTTP layer serves it as
+//! `text/event-stream` (`POST /v2/generate` with `"stream": true`) and
+//! the hand-rolled gRPC front door ([`grpc`]) serves the same contract
+//! as unary + server-streaming RPCs.
+//!
+//! ## Backpressure = parking, never stalling
+//!
+//! The channel is **bounded** ([`TokenChannel::pair`]'s capacity = the
+//! park threshold). A consumer that stops draining makes
+//! [`StreamSender::ready`] report false; the replica loop then *parks*
+//! the request — it skips decode quanta (its admission-held KV stays
+//! charged) instead of blocking the quantum, so fused batchmates with
+//! healthy consumers keep byte-identical token streams. The replica
+//! checks `ready()` and delivers at most one token per generation per
+//! quantum, so a send after a positive `ready()` never has to block;
+//! the terminal event has its own dedicated slot outside the ring and
+//! is *always* deliverable — retirement and KV release never wait for a
+//! slow (or absent) consumer.
+//!
+//! ## Disconnect = cancel within one quantum
+//!
+//! Dropping the [`StreamReceiver`] (the HTTP writer drops it when the
+//! socket write fails) closes the channel; the replica's next
+//! `send_token` fails, which flips the request's cancellation flag —
+//! exactly the buffered path's disconnect semantics, counted by the
+//! same `fastav_client_disconnects_total`.
+
+pub mod grpc;
+pub mod http2;
+pub mod pb;
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::Event;
+use crate::model::GenerateResult;
+
+/// The terminal event parked in the channel's dedicated slot.
+#[derive(Debug)]
+enum TerminalEvent {
+    Done(Box<GenerateResult>),
+    Error(String),
+}
+
+/// Shared state behind one per-request stream.
+#[derive(Debug, Default)]
+struct ChannelState {
+    /// Undelivered tokens, oldest first.
+    ring: VecDeque<u32>,
+    /// Terminal slot: outside the ring capacity so `Done`/`Error` can
+    /// always be delivered regardless of consumer drain state.
+    terminal: Option<TerminalEvent>,
+    /// The producing replica dropped its sender (pool shutdown without
+    /// a terminal event — abnormal).
+    sender_gone: bool,
+    /// The consumer dropped its receiver (client disconnect).
+    receiver_gone: bool,
+}
+
+/// A bounded single-producer/single-consumer token channel for one
+/// request. The capacity bounds the *ring* of undelivered tokens (the
+/// park threshold); the terminal event rides in its own slot.
+#[derive(Debug)]
+pub struct TokenChannel {
+    cap: usize,
+    state: Mutex<ChannelState>,
+    /// Signaled on every push/terminal/close; the receiver waits on it.
+    recv_cv: Condvar,
+}
+
+impl TokenChannel {
+    /// Create a channel with `cap` (≥ 1) buffered tokens, returning the
+    /// producer and consumer halves.
+    pub fn pair(cap: usize) -> (StreamSender, StreamReceiver) {
+        let chan = Arc::new(TokenChannel {
+            cap: cap.max(1),
+            state: Mutex::new(ChannelState::default()),
+            recv_cv: Condvar::new(),
+        });
+        (
+            StreamSender { chan: Arc::clone(&chan) },
+            StreamReceiver { chan },
+        )
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ChannelState> {
+        // Plain data valid at every instruction boundary; a panicked
+        // peer cannot have left it torn (same policy as `lock_clean`).
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// The consumer hung up: the token cannot be delivered and the request
+/// should be canceled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Disconnected;
+
+/// Producer half, held inside the replica's event sink.
+#[derive(Debug)]
+pub struct StreamSender {
+    chan: Arc<TokenChannel>,
+}
+
+impl StreamSender {
+    /// Whether the consumer can absorb another token: the ring is below
+    /// capacity and the receiver is still attached. The replica loop
+    /// treats `false` as "park this request for the quantum".
+    pub fn ready(&self) -> bool {
+        let s = self.chan.lock();
+        !s.receiver_gone && s.ring.len() < self.chan.cap
+    }
+
+    /// Push one token. Never blocks: the replica checks [`Self::ready`]
+    /// at quantum start and delivers at most one token per generation
+    /// per quantum, so the ring can exceed `cap` by at most the ready
+    /// overshoot of a single in-flight quantum — parking is a
+    /// throughput valve, not a hard memory fence. Errs only when the
+    /// receiver is gone (client disconnect).
+    pub fn send_token(&self, t: u32) -> Result<(), Disconnected> {
+        let mut s = self.chan.lock();
+        if s.receiver_gone {
+            return Err(Disconnected);
+        }
+        s.ring.push_back(t);
+        self.chan.recv_cv.notify_one();
+        Ok(())
+    }
+
+    /// Deliver the terminal result. Always succeeds (dedicated slot):
+    /// retirement accounting must never depend on the consumer.
+    pub fn send_done(&self, res: Box<GenerateResult>) {
+        let mut s = self.chan.lock();
+        if !s.receiver_gone {
+            s.terminal = Some(TerminalEvent::Done(res));
+        }
+        self.chan.recv_cv.notify_one();
+    }
+
+    /// Deliver a terminal error (failed / canceled / expired).
+    pub fn send_error(&self, msg: String) {
+        let mut s = self.chan.lock();
+        if !s.receiver_gone {
+            s.terminal = Some(TerminalEvent::Error(msg));
+        }
+        self.chan.recv_cv.notify_one();
+    }
+}
+
+impl Drop for StreamSender {
+    fn drop(&mut self) {
+        let mut s = self.chan.lock();
+        s.sender_gone = true;
+        self.chan.recv_cv.notify_one();
+    }
+}
+
+/// One receive outcome. Tokens drain strictly before the terminal
+/// event, so the consumer observes the exact emission order.
+#[derive(Debug)]
+pub enum StreamRecv {
+    Token(u32),
+    Done(Box<GenerateResult>),
+    Error(String),
+    /// Nothing arrived within the timeout; poll again.
+    TimedOut,
+    /// The producer vanished without a terminal event (pool torn down
+    /// mid-request) — treat as an error upstream.
+    SenderGone,
+}
+
+/// Consumer half, returned by `Coordinator::submit_streaming`. Dropping
+/// it disconnects the stream (the replica cancels within one quantum).
+#[derive(Debug)]
+pub struct StreamReceiver {
+    chan: Arc<TokenChannel>,
+}
+
+impl StreamReceiver {
+    /// Wait up to `timeout` for the next event.
+    pub fn recv(&self, timeout: Duration) -> StreamRecv {
+        let mut s = self.chan.lock();
+        loop {
+            if let Some(t) = s.ring.pop_front() {
+                return StreamRecv::Token(t);
+            }
+            if let Some(term) = s.terminal.take() {
+                return match term {
+                    TerminalEvent::Done(res) => StreamRecv::Done(res),
+                    TerminalEvent::Error(e) => StreamRecv::Error(e),
+                };
+            }
+            if s.sender_gone {
+                return StreamRecv::SenderGone;
+            }
+            let (guard, wait) = self
+                .chan
+                .recv_cv
+                .wait_timeout(s, timeout)
+                .unwrap_or_else(|p| p.into_inner());
+            s = guard;
+            if wait.timed_out()
+                && s.ring.is_empty()
+                && s.terminal.is_none()
+                && !s.sender_gone
+            {
+                return StreamRecv::TimedOut;
+            }
+        }
+    }
+
+    /// Tokens currently buffered and undelivered (observability/tests).
+    pub fn pending(&self) -> usize {
+        self.chan.lock().ring.len()
+    }
+}
+
+impl Drop for StreamReceiver {
+    fn drop(&mut self) {
+        let mut s = self.chan.lock();
+        s.receiver_gone = true;
+        // Free buffered tokens immediately; the sender sees the
+        // disconnect on its next send.
+        s.ring.clear();
+        s.terminal = None;
+    }
+}
+
+/// Where a request's events go: the legacy unbounded buffered channel
+/// (always ready — today's `submit` path, byte-unchanged), or a bounded
+/// per-request token stream. The replica loop talks only to this enum,
+/// so both paths share one delivery/retire/disconnect code path.
+#[derive(Debug)]
+pub enum EventSink {
+    /// Unbounded mpsc to a buffering caller ([`crate::coordinator::Event`]).
+    Buffered(Sender<Event>),
+    /// Bounded per-request stream with park-based backpressure.
+    Stream(StreamSender),
+}
+
+impl EventSink {
+    /// Whether a token can be delivered this quantum without blocking.
+    /// Buffered sinks are always ready (unbounded channel).
+    pub fn ready(&self) -> bool {
+        match self {
+            EventSink::Buffered(_) => true,
+            EventSink::Stream(s) => s.ready(),
+        }
+    }
+
+    pub fn is_stream(&self) -> bool {
+        matches!(self, EventSink::Stream(_))
+    }
+
+    /// Deliver one token; `Err` means the consumer is gone (the caller
+    /// flips the request's cancel flag — client-disconnect semantics).
+    pub fn send_token(&self, t: u32) -> Result<(), Disconnected> {
+        match self {
+            EventSink::Buffered(tx) => tx.send(Event::Token(t)).map_err(|_| Disconnected),
+            EventSink::Stream(s) => s.send_token(t),
+        }
+    }
+
+    /// Deliver the final result (never blocks; consumer may be gone).
+    pub fn send_done(&self, res: Box<GenerateResult>) {
+        match self {
+            EventSink::Buffered(tx) => {
+                let _ = tx.send(Event::Done(res));
+            }
+            EventSink::Stream(s) => s.send_done(res),
+        }
+    }
+
+    /// Deliver a terminal error (never blocks; consumer may be gone).
+    pub fn send_error(&self, msg: String) {
+        match self {
+            EventSink::Buffered(tx) => {
+                let _ = tx.send(Event::Error(msg));
+            }
+            EventSink::Stream(s) => s.send_error(msg),
+        }
+    }
+}
+
+/// Pool-wide stream accounting (the `streams` block of `GET /v1/pool`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    /// Streaming requests submitted and not yet terminal.
+    pub active: u64,
+    /// Streams currently parked on a slow consumer (skipping quanta).
+    pub parked: u64,
+    /// Streams that reached any terminal state (done or error).
+    pub completed: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mock_result(tokens: Vec<u32>) -> Box<GenerateResult> {
+        Box::new(GenerateResult {
+            tokens,
+            prompt_len: 4,
+            flops: Default::default(),
+            relative_flops: 1.0,
+            peak_kv_bytes: 0,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            decode_steps: 0,
+            live_counts: Vec::new(),
+            prefix_hit: false,
+            prefix_tokens_reused: 0,
+        })
+    }
+
+    #[test]
+    fn tokens_then_terminal_in_order() {
+        let (tx, rx) = TokenChannel::pair(8);
+        tx.send_token(1).unwrap();
+        tx.send_token(2).unwrap();
+        tx.send_done(mock_result(vec![1, 2]));
+        assert!(matches!(rx.recv(Duration::from_millis(10)), StreamRecv::Token(1)));
+        assert!(matches!(rx.recv(Duration::from_millis(10)), StreamRecv::Token(2)));
+        match rx.recv(Duration::from_millis(10)) {
+            StreamRecv::Done(res) => assert_eq!(res.tokens, vec![1, 2]),
+            other => panic!("expected Done, got {:?}", other),
+        }
+    }
+
+    #[test]
+    fn ready_reflects_capacity_and_drain() {
+        let (tx, rx) = TokenChannel::pair(2);
+        assert!(tx.ready());
+        tx.send_token(7).unwrap();
+        assert!(tx.ready());
+        tx.send_token(8).unwrap();
+        assert!(!tx.ready(), "ring at capacity parks the producer");
+        assert!(matches!(rx.recv(Duration::from_millis(10)), StreamRecv::Token(7)));
+        assert!(tx.ready(), "drain unparks");
+    }
+
+    #[test]
+    fn terminal_always_deliverable_when_full() {
+        let (tx, rx) = TokenChannel::pair(1);
+        tx.send_token(5).unwrap();
+        assert!(!tx.ready());
+        // The terminal slot bypasses the full ring.
+        tx.send_error("deadline exceeded".into());
+        assert!(matches!(rx.recv(Duration::from_millis(10)), StreamRecv::Token(5)));
+        match rx.recv(Duration::from_millis(10)) {
+            StreamRecv::Error(e) => assert_eq!(e, "deadline exceeded"),
+            other => panic!("expected Error, got {:?}", other),
+        }
+    }
+
+    #[test]
+    fn receiver_drop_disconnects_sender() {
+        let (tx, rx) = TokenChannel::pair(4);
+        tx.send_token(1).unwrap();
+        drop(rx);
+        assert!(!tx.ready());
+        assert_eq!(tx.send_token(2), Err(Disconnected));
+    }
+
+    #[test]
+    fn sender_drop_without_terminal_is_visible() {
+        let (tx, rx) = TokenChannel::pair(4);
+        tx.send_token(9).unwrap();
+        drop(tx);
+        assert!(matches!(rx.recv(Duration::from_millis(10)), StreamRecv::Token(9)));
+        assert!(matches!(rx.recv(Duration::from_millis(10)), StreamRecv::SenderGone));
+    }
+
+    #[test]
+    fn recv_times_out_when_idle() {
+        let (_tx, rx) = TokenChannel::pair(4);
+        assert!(matches!(rx.recv(Duration::from_millis(5)), StreamRecv::TimedOut));
+    }
+
+    #[test]
+    fn buffered_sink_always_ready_and_forwards() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let sink = EventSink::Buffered(tx);
+        assert!(sink.ready());
+        assert!(!sink.is_stream());
+        sink.send_token(3).unwrap();
+        sink.send_done(mock_result(vec![3]));
+        assert!(matches!(rx.recv().unwrap(), Event::Token(3)));
+        assert!(matches!(rx.recv().unwrap(), Event::Done(_)));
+    }
+
+    #[test]
+    fn buffered_sink_disconnect_on_dropped_receiver() {
+        let (tx, rx) = std::sync::mpsc::channel::<Event>();
+        drop(rx);
+        let sink = EventSink::Buffered(tx);
+        assert_eq!(sink.send_token(1), Err(Disconnected));
+    }
+}

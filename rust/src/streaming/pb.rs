@@ -1,0 +1,242 @@
+//! Minimal protobuf wire codec for the gRPC front door.
+//!
+//! The container policy forbids new dependencies, so instead of
+//! `prost`/`tonic` this hand-rolls exactly the protobuf wire subset the
+//! `fastav.v1.FastAV` service needs: varint (wire type 0), 64-bit fixed
+//! (wire type 1, for `double`) and length-delimited (wire type 2)
+//! fields. 32-bit fixed fields (wire type 5) are parsed and skipped.
+//! Message schemas live in [`super::grpc`]; this module knows only the
+//! wire format.
+
+/// Append a base-128 varint.
+pub fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Read a varint at `*pos`, advancing it. `None` on truncation or a
+/// varint longer than 10 bytes.
+pub fn get_varint(buf: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut v: u64 = 0;
+    for i in 0..10 {
+        let byte = *buf.get(*pos)?;
+        *pos += 1;
+        v |= u64::from(byte & 0x7f) << (7 * i);
+        if byte & 0x80 == 0 {
+            return Some(v);
+        }
+    }
+    None
+}
+
+fn put_tag(buf: &mut Vec<u8>, field: u32, wire: u8) {
+    put_varint(buf, (u64::from(field) << 3) | u64::from(wire));
+}
+
+/// Append a varint-typed field. Proto3 presence rules: zero values are
+/// omitted, so callers that need "0 is meaningful" wrap in a submessage.
+pub fn put_uint(buf: &mut Vec<u8>, field: u32, v: u64) {
+    if v == 0 {
+        return;
+    }
+    put_tag(buf, field, 0);
+    put_varint(buf, v);
+}
+
+/// Append a bool field (omitted when false, proto3 default).
+pub fn put_bool(buf: &mut Vec<u8>, field: u32, v: bool) {
+    put_uint(buf, field, u64::from(v));
+}
+
+/// Append a `double` field (wire type 1, little-endian; omitted at 0).
+pub fn put_double(buf: &mut Vec<u8>, field: u32, v: f64) {
+    if v == 0.0 {
+        return;
+    }
+    put_tag(buf, field, 1);
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a string field (omitted when empty, proto3 default).
+pub fn put_str(buf: &mut Vec<u8>, field: u32, s: &str) {
+    if s.is_empty() {
+        return;
+    }
+    put_bytes(buf, field, s.as_bytes());
+}
+
+/// Append a length-delimited field (always emitted, even when empty —
+/// used for submessages whose *presence* is the signal).
+pub fn put_bytes(buf: &mut Vec<u8>, field: u32, b: &[u8]) {
+    put_tag(buf, field, 2);
+    put_varint(buf, b.len() as u64);
+    buf.extend_from_slice(b);
+}
+
+/// Append `repeated uint32` in packed encoding (proto3 default).
+pub fn put_packed_uints(buf: &mut Vec<u8>, field: u32, vals: &[u32]) {
+    if vals.is_empty() {
+        return;
+    }
+    let mut packed = Vec::with_capacity(vals.len() * 2);
+    for &v in vals {
+        put_varint(&mut packed, u64::from(v));
+    }
+    put_bytes(buf, field, &packed);
+}
+
+/// One decoded field of a message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FieldValue<'a> {
+    Varint(u64),
+    Fixed64(u64),
+    Bytes(&'a [u8]),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Field<'a> {
+    pub number: u32,
+    pub value: FieldValue<'a>,
+}
+
+impl Field<'_> {
+    pub fn as_uint(&self) -> Option<u64> {
+        match self.value {
+            FieldValue::Varint(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_double(&self) -> Option<f64> {
+        match self.value {
+            FieldValue::Fixed64(v) => Some(f64::from_bits(v)),
+            _ => None,
+        }
+    }
+
+    pub fn as_bytes(&self) -> Option<&[u8]> {
+        match self.value {
+            FieldValue::Bytes(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        std::str::from_utf8(self.as_bytes()?).ok()
+    }
+}
+
+/// Decode a message into its fields. `None` on any wire-format error
+/// (unknown wire type, truncated payload).
+pub fn fields(buf: &[u8]) -> Option<Vec<Field<'_>>> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while pos < buf.len() {
+        let tag = get_varint(buf, &mut pos)?;
+        let number = u32::try_from(tag >> 3).ok()?;
+        match tag & 0x7 {
+            0 => {
+                let v = get_varint(buf, &mut pos)?;
+                out.push(Field { number, value: FieldValue::Varint(v) });
+            }
+            1 => {
+                let end = pos.checked_add(8)?;
+                let raw = buf.get(pos..end)?;
+                pos = end;
+                let v = u64::from_le_bytes(raw.try_into().ok()?);
+                out.push(Field { number, value: FieldValue::Fixed64(v) });
+            }
+            2 => {
+                let len = usize::try_from(get_varint(buf, &mut pos)?).ok()?;
+                let end = pos.checked_add(len)?;
+                let b = buf.get(pos..end)?;
+                pos = end;
+                out.push(Field { number, value: FieldValue::Bytes(b) });
+            }
+            5 => {
+                // fixed32: skip (no field in our schemas uses it).
+                pos = pos.checked_add(4)?;
+                if pos > buf.len() {
+                    return None;
+                }
+            }
+            _ => return None,
+        }
+    }
+    Some(out)
+}
+
+/// Decode a packed `repeated uint32` payload.
+pub fn unpack_uints(b: &[u8]) -> Option<Vec<u32>> {
+    let mut pos = 0usize;
+    let mut out = Vec::new();
+    while pos < b.len() {
+        out.push(u32::try_from(get_varint(b, &mut pos)?).ok()?);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip_boundaries() {
+        for v in [0u64, 1, 127, 128, 300, u64::from(u32::MAX), u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_varint(&buf, &mut pos), Some(v));
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn message_roundtrip_all_wire_types() {
+        let mut buf = Vec::new();
+        put_uint(&mut buf, 1, 42);
+        put_str(&mut buf, 2, "hello");
+        put_double(&mut buf, 3, 0.625);
+        put_packed_uints(&mut buf, 4, &[7, 300, 0]);
+        put_bool(&mut buf, 5, true);
+        let fs = fields(&buf).unwrap();
+        assert_eq!(fs.len(), 5);
+        assert_eq!(fs[0].number, 1);
+        assert_eq!(fs[0].as_uint(), Some(42));
+        assert_eq!(fs[1].as_str(), Some("hello"));
+        assert_eq!(fs[2].as_double(), Some(0.625));
+        assert_eq!(unpack_uints(fs[3].as_bytes().unwrap()), Some(vec![7, 300, 0]));
+        assert_eq!(fs[4].as_uint(), Some(1));
+    }
+
+    #[test]
+    fn proto3_zero_defaults_are_omitted() {
+        let mut buf = Vec::new();
+        put_uint(&mut buf, 1, 0);
+        put_str(&mut buf, 2, "");
+        put_double(&mut buf, 3, 0.0);
+        put_bool(&mut buf, 4, false);
+        put_packed_uints(&mut buf, 5, &[]);
+        assert!(buf.is_empty());
+        // ...but an explicit empty submessage is still present.
+        put_bytes(&mut buf, 6, &[]);
+        let fs = fields(&buf).unwrap();
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].as_bytes(), Some(&[][..]));
+    }
+
+    #[test]
+    fn truncated_and_bad_wire_types_rejected() {
+        assert!(fields(&[0x08]).is_none()); // varint field, no value
+        assert!(fields(&[0x0a, 0x05, 1, 2]).is_none()); // len 5, only 2 bytes
+        assert!(fields(&[0x0b]).is_none()); // wire type 3 (group) unsupported
+        assert!(fields(&[0x09, 1, 2, 3]).is_none()); // fixed64 truncated
+    }
+}

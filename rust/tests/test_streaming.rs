@@ -1,0 +1,648 @@
+//! Streamed-delivery properties against mock pools (no AOT artifacts):
+//! the streamed token sequence is byte-identical to the buffered result
+//! for the same request; TTFT on a [`MockClock`] lands well before full
+//! latency; a consumer that stops draining parks without stalling its
+//! batchmates or perturbing the admission ledger; a mid-stream
+//! disconnect cancels within one scheduling quantum; terminal delivery
+//! and KV release never wait on an undrained consumer; and both front
+//! doors (SSE over HTTP, gRPC over h2c) relay the same events.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastav::coordinator::{Coordinator, Event, GenRequest, Priority};
+use fastav::http::{api::make_handler, request, request_streaming, Server};
+use fastav::metrics::Registry;
+use fastav::model::{GenerateResult, StepEvent};
+use fastav::policy::{PolicyRegistry, PruningSpec};
+use fastav::serving::{PoolConfig, ReplicaEngine, ReplicaPool};
+use fastav::streaming::{grpc, StreamReceiver, StreamRecv};
+use fastav::tokens::{Layout, Segment};
+use fastav::trace::{Clock, MockClock};
+use fastav::util::json::Json;
+use fastav::util::proptest::{run_prop, Gen};
+
+// ---------------------------------------------------------------- mock
+
+/// Deterministic per-request token: derived from the prompt and the
+/// position, so identical requests produce identical sequences and
+/// different requests (almost surely) don't — what makes the
+/// byte-identity property meaningful.
+fn tok(prompt: &[u32], i: usize) -> u32 {
+    let mut h = 0x9e37_79b9u64;
+    for &p in prompt {
+        h = h.wrapping_mul(31).wrapping_add(u64::from(p));
+    }
+    (h.wrapping_add((i as u64).wrapping_mul(2_654_435_761)) % 97) as u32
+}
+
+struct MockGen {
+    prefill_left: usize,
+    produced: usize,
+    total: usize,
+    prompt: Vec<u32>,
+    kv_bytes: usize,
+}
+
+/// Engine stand-in: every quantum burns `step_cost` of wall clock and
+/// optionally ticks a shared [`MockClock`] (for exact TTFT assertions).
+struct StreamMock {
+    step_cost: Duration,
+    tick: Option<(Arc<MockClock>, u64)>,
+}
+
+impl ReplicaEngine for StreamMock {
+    type Gen = MockGen;
+
+    fn begin(&mut self, req: &GenRequest) -> anyhow::Result<MockGen> {
+        Ok(MockGen {
+            prefill_left: 2,
+            produced: 0,
+            total: req.max_gen.max(1),
+            prompt: req.prompt.clone(),
+            kv_bytes: req.prompt.len() * 1000,
+        })
+    }
+
+    fn step(&mut self, gen: &mut MockGen) -> anyhow::Result<StepEvent> {
+        if !self.step_cost.is_zero() {
+            std::thread::sleep(self.step_cost);
+        }
+        if let Some((clock, d)) = &self.tick {
+            clock.advance_ns(*d);
+        }
+        if gen.prefill_left > 0 {
+            gen.prefill_left -= 1;
+            if gen.prefill_left > 0 {
+                return Ok(StepEvent::Prefilled { layer: 2 - gen.prefill_left });
+            }
+        }
+        if gen.produced >= gen.total {
+            return Ok(StepEvent::Done);
+        }
+        let t = tok(&gen.prompt, gen.produced);
+        gen.produced += 1;
+        Ok(StepEvent::Token(t))
+    }
+
+    fn is_decoding(&self, gen: &MockGen) -> bool {
+        gen.prefill_left == 0 && gen.produced > 0 && gen.produced < gen.total
+    }
+
+    fn is_done(&self, gen: &MockGen) -> bool {
+        gen.prefill_left == 0 && gen.produced >= gen.total
+    }
+
+    fn finish(&mut self, gen: MockGen) -> GenerateResult {
+        GenerateResult {
+            tokens: (0..gen.produced).map(|i| tok(&gen.prompt, i)).collect(),
+            prompt_len: gen.prompt.len(),
+            flops: Default::default(),
+            relative_flops: 0.0,
+            peak_kv_bytes: gen.kv_bytes,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            decode_steps: gen.produced.saturating_sub(1),
+            live_counts: Vec::new(),
+            prefix_hit: false,
+            prefix_tokens_reused: 0,
+        }
+    }
+
+    fn kv_bytes(&self, gen: &MockGen) -> usize {
+        gen.kv_bytes
+    }
+
+    fn estimate_bytes(&self, req: &GenRequest) -> usize {
+        req.prompt.len() * 1000
+    }
+}
+
+fn mock_request(prompt: Vec<u32>, max_gen: usize) -> GenRequest {
+    let n = prompt.len();
+    GenRequest {
+        prompt,
+        segments: vec![Segment::Text; n],
+        frame_of: vec![-1; n],
+        spec: PruningSpec::off(),
+        max_gen,
+        sampling: Default::default(),
+        priority: Priority::Normal,
+        deadline: None,
+        profile: None,
+    }
+}
+
+fn mock_pool(cfg: PoolConfig, metrics: Arc<Registry>, step_cost: Duration) -> ReplicaPool {
+    ReplicaPool::start_with_factory(cfg, metrics, move |_replica| {
+        Ok(StreamMock { step_cost, tick: None })
+    })
+    .expect("mock pool starts")
+}
+
+fn settled_stats(pool: &ReplicaPool) -> fastav::serving::PoolStats {
+    let t0 = Instant::now();
+    loop {
+        let s = pool.stats();
+        if (s.conserved() && s.in_flight == 0 && s.in_queue == 0)
+            || t0.elapsed() > Duration::from_secs(10)
+        {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Drain a buffered receiver; returns the streamed tokens and the final
+/// result tokens.
+fn drain_buffered(rx: std::sync::mpsc::Receiver<Event>) -> (Vec<u32>, Vec<u32>) {
+    let mut streamed = Vec::new();
+    loop {
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(Event::Token(t)) => streamed.push(t),
+            Ok(Event::Done(res)) => return (streamed, res.tokens),
+            Ok(Event::Error(e)) => panic!("buffered request failed: {}", e),
+            Err(e) => panic!("buffered stream stalled: {}", e),
+        }
+    }
+}
+
+/// Drain a stream receiver; returns the streamed tokens and the final
+/// result tokens.
+fn drain_stream(rx: &StreamReceiver) -> (Vec<u32>, Vec<u32>) {
+    let mut streamed = Vec::new();
+    let t0 = Instant::now();
+    loop {
+        assert!(t0.elapsed() < Duration::from_secs(10), "stream stalled");
+        match rx.recv(Duration::from_millis(100)) {
+            StreamRecv::Token(t) => streamed.push(t),
+            StreamRecv::Done(res) => return (streamed, res.tokens),
+            StreamRecv::Error(e) => panic!("streamed request failed: {}", e),
+            StreamRecv::TimedOut => continue,
+            StreamRecv::SenderGone => panic!("worker dropped the request"),
+        }
+    }
+}
+
+// --------------------------------------------------------------- tests
+
+#[test]
+fn prop_streamed_tokens_byte_identical_to_buffered() {
+    run_prop("streamed_equals_buffered", 12, |g: &mut Gen| {
+        let pool = mock_pool(
+            PoolConfig {
+                replicas: 1,
+                queue_cap: 16,
+                max_inflight: g.usize_in(1, 3),
+                ..Default::default()
+            },
+            Arc::new(Registry::default()),
+            Duration::ZERO,
+        );
+        for _ in 0..g.usize_in(1, 3) {
+            let prompt: Vec<u32> =
+                (0..g.usize_in(1, 12)).map(|_| (g.u64() % 1000) as u32).collect();
+            let max_gen = g.usize_in(1, 20);
+
+            let (_, brx) = pool.submit(mock_request(prompt.clone(), max_gen)).unwrap();
+            let (buf_streamed, buf_final) = drain_buffered(brx);
+
+            let (_, srx) = pool.submit_streaming(mock_request(prompt, max_gen)).unwrap();
+            let (str_streamed, str_final) = drain_stream(&srx);
+
+            assert_eq!(str_streamed, buf_streamed, "streamed token sequences diverge");
+            assert_eq!(str_final, buf_final, "final results diverge");
+            assert_eq!(str_streamed, str_final, "stream is not the result");
+        }
+        let s = settled_stats(&pool);
+        assert!(s.conserved(), "ledger out of balance: {:?}", s);
+    });
+}
+
+#[test]
+fn ttft_is_far_below_full_latency_on_mock_clock() {
+    // Every engine quantum ticks the mock clock 1ms; with 2 prefill
+    // quanta and 12 decode quanta, TTFT must land near the front.
+    let clock = Arc::new(MockClock::new());
+    let engine_clock = Arc::clone(&clock);
+    let pool = ReplicaPool::start_with_factory_clocked(
+        PoolConfig {
+            replicas: 1,
+            queue_cap: 4,
+            max_inflight: 1,
+            trace_sample: 1.0,
+            trace_ring: 16,
+            ..Default::default()
+        },
+        Arc::new(Registry::default()),
+        move |_replica| {
+            Ok(StreamMock {
+                step_cost: Duration::ZERO,
+                tick: Some((Arc::clone(&engine_clock), 1_000_000)),
+            })
+        },
+        clock as Arc<dyn Clock>,
+    )
+    .expect("clocked mock pool starts");
+
+    let (id, rx) = pool.submit_streaming(mock_request(vec![1, 2, 3], 12)).unwrap();
+    let (streamed, _) = drain_stream(&rx);
+    assert_eq!(streamed.len(), 12);
+    settled_stats(&pool);
+
+    let trace = pool.tracer().get(id).expect("sampled trace");
+    let ttft = trace.ttft_ns.expect("stream recorded a first token");
+    let total = trace.duration_ns();
+    assert!(
+        ttft * 3 < total,
+        "TTFT {}ns is not well below full latency {}ns",
+        ttft,
+        total
+    );
+    assert!(
+        trace.spans.iter().any(|s| s.name == "first_token_sent"),
+        "streamed trace missing first_token_sent marker"
+    );
+}
+
+#[test]
+fn parked_stream_never_stalls_batchmates_or_the_ledger() {
+    let metrics = Arc::new(Registry::default());
+    let pool = mock_pool(
+        PoolConfig {
+            replicas: 1,
+            queue_cap: 8,
+            max_inflight: 2,
+            stream_channel_cap: 2,
+            ..Default::default()
+        },
+        Arc::clone(&metrics),
+        Duration::from_micros(100),
+    );
+
+    // A: a streaming request whose consumer goes silent — the tiny
+    // channel fills after 2 tokens and the request parks.
+    let (_, arx) = pool.submit_streaming(mock_request(vec![9, 9, 9], 16)).unwrap();
+    let t0 = Instant::now();
+    while pool.stream_stats().parked == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "stream never parked");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // B, B': buffered batchmates submitted while A is parked — they
+    // must complete promptly and byte-identically to each other.
+    let (_, b1) = pool.submit(mock_request(vec![5, 6], 8)).unwrap();
+    let (streamed1, final1) = drain_buffered(b1);
+    let (_, b2) = pool.submit(mock_request(vec![5, 6], 8)).unwrap();
+    let (streamed2, final2) = drain_buffered(b2);
+    assert_eq!(streamed1, streamed2, "parked neighbor perturbed a batchmate");
+    assert_eq!(final1, final2);
+    assert_eq!(final1.len(), 8);
+
+    // A is still parked (we never drained it) and was counted.
+    assert_eq!(pool.stream_stats().parked, 1);
+    assert!(metrics.counter("fastav_streams_parked_total").get() >= 1);
+
+    // Draining resumes A: the full sequence arrives, nothing lost.
+    let (a_streamed, a_final) = drain_stream(&arx);
+    assert_eq!(a_streamed.len(), 16);
+    assert_eq!(a_streamed, a_final);
+
+    let s = settled_stats(&pool);
+    assert!(s.conserved(), "ledger out of balance: {:?}", s);
+    assert_eq!(s.completed, 3);
+    let st = pool.stream_stats();
+    assert_eq!((st.active, st.parked, st.completed), (0, 0, 1));
+}
+
+#[test]
+fn mid_stream_disconnect_cancels_within_one_quantum() {
+    let metrics = Arc::new(Registry::default());
+    let pool = mock_pool(
+        PoolConfig { replicas: 1, queue_cap: 4, max_inflight: 1, ..Default::default() },
+        Arc::clone(&metrics),
+        Duration::from_millis(1),
+    );
+
+    let (_, rx) = pool.submit_streaming(mock_request(vec![4, 4], 10_000)).unwrap();
+    // Take a couple of tokens, then vanish.
+    let mut got = 0;
+    while got < 2 {
+        match rx.recv(Duration::from_millis(100)) {
+            StreamRecv::Token(_) => got += 1,
+            StreamRecv::TimedOut => continue,
+            other => panic!("unexpected early terminal: {:?}", other),
+        }
+    }
+    drop(rx);
+
+    let s = settled_stats(&pool);
+    assert!(s.conserved(), "ledger out of balance: {:?}", s);
+    assert_eq!(s.canceled, 1, "disconnect did not cancel: {:?}", s);
+    assert_eq!(metrics.counter("fastav_client_disconnects_total").get(), 1);
+    // The canceled stream still closed out the session accounting.
+    let st = pool.stream_stats();
+    assert_eq!((st.active, st.parked, st.completed), (0, 0, 1));
+    // KV fully released (eager terminal cleanup).
+    for r in pool.status() {
+        assert_eq!(r.kv_bytes, 0, "replica {} still holds KV", r.id);
+    }
+}
+
+#[test]
+fn terminal_delivery_and_kv_release_never_wait_on_the_consumer() {
+    // Admission budget fits exactly one request (prompt 3 → 3000-byte
+    // estimate): the second admits only once the first's KV is freed.
+    let pool = mock_pool(
+        PoolConfig {
+            replicas: 1,
+            queue_cap: 4,
+            max_inflight: 4,
+            kv_budget_bytes: 4000,
+            ..Default::default()
+        },
+        Arc::new(Registry::default()),
+        Duration::ZERO,
+    );
+
+    // A streams 3 tokens (well under the channel cap — never parks)
+    // into a consumer that reads nothing, and must still finish.
+    let (_, arx) = pool.submit_streaming(mock_request(vec![1, 2, 3], 3)).unwrap();
+    let t0 = Instant::now();
+    while pool.stats().completed == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "completion is blocked on an undrained consumer"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // Its KV grant is back: an equally-sized request admits and runs.
+    let (_, brx) = pool.submit(mock_request(vec![7, 8, 9], 3)).unwrap();
+    let (_, b_final) = drain_buffered(brx);
+    assert_eq!(b_final.len(), 3);
+
+    // The undrained terminal is still there when the consumer returns.
+    let (a_streamed, a_final) = drain_stream(&arx);
+    assert_eq!(a_streamed.len(), 3);
+    assert_eq!(a_streamed, a_final);
+
+    let s = settled_stats(&pool);
+    assert!(s.conserved(), "ledger out of balance: {:?}", s);
+    for r in pool.status() {
+        assert_eq!(r.kv_bytes, 0, "replica {} still holds KV", r.id);
+    }
+}
+
+// ------------------------------------------------------ HTTP front door
+
+fn layout() -> Layout {
+    Layout { frames: 2, vis_per_frame: 4, aud_len: 6, aud_per_frame: 3, interleaved: false }
+}
+
+fn test_registry() -> Arc<PolicyRegistry> {
+    let calib = fastav::calibration::Calibration {
+        model: "tiny".into(),
+        samples: 8,
+        threshold: 0.01,
+        vis_cutoff: 5,
+        keep_audio: 2,
+        keep_frames: 0,
+        budget: 6,
+        profile: Vec::new(),
+    };
+    Arc::new(PolicyRegistry::builtin(&calib, 20.0))
+}
+
+fn mock_coordinator() -> Arc<Coordinator> {
+    let pool = mock_pool(
+        PoolConfig { replicas: 1, queue_cap: 16, max_inflight: 2, ..Default::default() },
+        Arc::new(Registry::default()),
+        Duration::ZERO,
+    );
+    Arc::new(Coordinator::from_pool(pool))
+}
+
+/// Parse an SSE body into `(event, data)` pairs.
+fn parse_sse(body: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    for frame in body.split("\n\n").filter(|f| !f.trim().is_empty()) {
+        let mut event = String::new();
+        let mut data = String::new();
+        for line in frame.lines() {
+            if let Some(v) = line.strip_prefix("event: ") {
+                event = v.to_string();
+            } else if let Some(v) = line.strip_prefix("data: ") {
+                data = v.to_string();
+            }
+        }
+        out.push((event, data));
+    }
+    out
+}
+
+#[test]
+fn sse_stream_matches_buffered_http_response() {
+    let coord = mock_coordinator();
+    let handler = make_handler(Arc::clone(&coord), layout(), test_registry(), 6, 1234);
+    let server = Server::bind("127.0.0.1:0", 2, handler).unwrap();
+    let addr = server.local_addr().to_string();
+    let stop = server.shutdown_handle();
+    let thread = std::thread::spawn(move || server.serve());
+
+    let body = br#"{"dataset": "avqa", "index": 3, "max_gen": 5}"#;
+    let (code, buf) = request(&addr, "POST", "/v2/generate", body).unwrap();
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&buf));
+    let buffered = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+
+    let stream_body = br#"{"dataset": "avqa", "index": 3, "max_gen": 5, "stream": true}"#;
+    let mut sse = Vec::new();
+    let status = request_streaming(&addr, "POST", "/v2/generate", stream_body, |chunk| {
+        sse.extend_from_slice(chunk)
+    })
+    .unwrap();
+    assert_eq!(status, 200);
+    let events = parse_sse(std::str::from_utf8(&sse).unwrap());
+
+    // Grammar: policy first, then tokens with contiguous indexes, then
+    // exactly one done.
+    assert_eq!(events.first().map(|(e, _)| e.as_str()), Some("policy"));
+    let policy = Json::parse(&events[0].1).unwrap();
+    assert!(policy.get("profile").as_str().is_some());
+    assert!(policy.get("spec_hash").as_str().is_some());
+    let done: Vec<&(String, String)> =
+        events.iter().filter(|(e, _)| e == "done").collect();
+    assert_eq!(done.len(), 1, "expected exactly one done event");
+    assert_eq!(events.last().map(|(e, _)| e.as_str()), Some("done"));
+
+    let mut streamed_tokens = Vec::new();
+    for (i, (event, data)) in events[1..events.len() - 1].iter().enumerate() {
+        assert_eq!(event, "token");
+        let j = Json::parse(data).unwrap();
+        assert_eq!(j.get("index").as_usize(), Some(i));
+        streamed_tokens.push(j.get("token").as_usize().unwrap() as u32);
+    }
+
+    // Byte-identity with the buffered response for the same request:
+    // same tokens, same rendered answer, same policy block.
+    let final_payload = Json::parse(&done[0].1).unwrap();
+    let buffered_tokens: Vec<u32> = buffered
+        .get("tokens")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap() as u32)
+        .collect();
+    assert_eq!(streamed_tokens, buffered_tokens);
+    assert_eq!(
+        final_payload.get("tokens").to_string(),
+        buffered.get("tokens").to_string()
+    );
+    assert_eq!(
+        final_payload.get("answer").as_str(),
+        buffered.get("answer").as_str()
+    );
+    assert_eq!(
+        final_payload.get("policy").to_string(),
+        buffered.get("policy").to_string()
+    );
+
+    // The pool block reports the finished stream.
+    let (code, buf) = request(&addr, "GET", "/v1/pool", b"").unwrap();
+    assert_eq!(code, 200);
+    let pool_json = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+    assert_eq!(pool_json.get("streams").get("completed").as_usize(), Some(1));
+    assert_eq!(pool_json.get("streams").get("active").as_usize(), Some(0));
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let _ = std::net::TcpStream::connect(&addr);
+    let _ = thread.join();
+}
+
+// ------------------------------------------------------ gRPC front door
+
+fn spin_up_grpc(
+    coord: Arc<Coordinator>,
+    max_gen: usize,
+) -> (String, Arc<std::sync::atomic::AtomicBool>) {
+    let server = grpc::GrpcServer::bind(
+        "127.0.0.1:0",
+        2,
+        grpc::GrpcCtx {
+            coord,
+            layout: layout(),
+            registry: test_registry(),
+            max_gen,
+            base_seed: 1234,
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let stop = server.shutdown_handle();
+    std::thread::spawn(move || server.serve());
+    (addr, stop)
+}
+
+#[test]
+fn grpc_unary_and_streaming_agree() {
+    let coord = mock_coordinator();
+    let (addr, stop) = spin_up_grpc(Arc::clone(&coord), 6);
+
+    let req = grpc::encode_generate_request(&grpc::GenerateRequestPb {
+        dataset: "avqa".into(),
+        index: 3,
+        max_gen: 5,
+        ..Default::default()
+    });
+
+    let unary = grpc::call(&addr, grpc::PATH_GENERATE, &req).unwrap();
+    assert_eq!(unary.status, 0, "unary failed: {}", unary.message);
+    let unary_resp = grpc::decode_generate_response(&unary.messages[0]).unwrap();
+    assert_eq!(unary_resp.tokens.len(), 5);
+    assert!(unary_resp.policy.is_some());
+
+    let streamed = grpc::call(&addr, grpc::PATH_GENERATE_STREAM, &req).unwrap();
+    assert_eq!(streamed.status, 0, "stream failed: {}", streamed.message);
+    let chunks: Vec<grpc::StreamChunkPb> = streamed
+        .messages
+        .iter()
+        .map(|m| grpc::decode_stream_chunk(m).unwrap())
+        .collect();
+    assert!(matches!(chunks.first(), Some(grpc::StreamChunkPb::Policy(_))));
+    let mut tokens = Vec::new();
+    let mut done_tokens = Vec::new();
+    for c in &chunks {
+        match c {
+            grpc::StreamChunkPb::Policy(_) => {}
+            grpc::StreamChunkPb::Token { value, index } => {
+                assert_eq!(*index as usize, tokens.len());
+                tokens.push(*value);
+            }
+            grpc::StreamChunkPb::Done(r) => done_tokens = r.tokens.clone(),
+            grpc::StreamChunkPb::Error(e) => panic!("stream errored: {}", e),
+        }
+    }
+    // Same request over both RPCs → identical token sequences.
+    assert_eq!(tokens, unary_resp.tokens);
+    assert_eq!(done_tokens, unary_resp.tokens);
+
+    // gRPC requests flow through the same per-profile counter family.
+    assert!(
+        coord
+            .metrics
+            .counter("fastav_requests_total{profile=\"balanced\"}")
+            .get()
+            >= 2
+    );
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+#[test]
+fn grpc_client_cancel_stops_generation() {
+    let pool = mock_pool(
+        PoolConfig { replicas: 1, queue_cap: 4, max_inflight: 1, ..Default::default() },
+        Arc::new(Registry::default()),
+        Duration::from_millis(1),
+    );
+    let coord = Arc::new(Coordinator::from_pool(pool));
+    // A long generation (1ms per step) so the cancel always lands
+    // mid-stream, never in a race with natural completion.
+    let (addr, stop) = spin_up_grpc(Arc::clone(&coord), 5000);
+
+    let req = grpc::encode_generate_request(&grpc::GenerateRequestPb {
+        dataset: "avqa".into(),
+        index: 0,
+        max_gen: 5000,
+        ..Default::default()
+    });
+    // Bail after the first token chunk; the client sends RST_STREAM and
+    // the server cancels the request.
+    let mut seen_token = false;
+    let reply = grpc::call_streaming(&addr, grpc::PATH_GENERATE_STREAM, &req, |m| {
+        match grpc::decode_stream_chunk(m) {
+            Some(grpc::StreamChunkPb::Token { .. }) => {
+                seen_token = true;
+                false
+            }
+            _ => true,
+        }
+    })
+    .unwrap();
+    assert!(seen_token, "never saw a token before canceling");
+    assert_eq!(reply.status, grpc::GRPC_CANCELLED);
+
+    let t0 = Instant::now();
+    loop {
+        let s = coord.pool_stats();
+        if s.canceled == 1 && s.in_flight == 0 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "server never canceled: {:?}",
+            s
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+}

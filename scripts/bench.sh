@@ -10,6 +10,7 @@
 #   6    chaos soak under a seeded FaultPlan                      -> BENCH_chaos.json
 #   7    mesh worker-queue overhead + pipelined vs sequential     -> BENCH_mesh.json
 #   8    tiered KV spill, working set 4x device budget            -> BENCH_tiered.json
+#   9    streamed (SSE) vs buffered delivery, TTFT + KV high-water -> BENCH_streaming.json
 #
 # Usage: scripts/bench.sh [model] [n_requests]
 
@@ -34,9 +35,9 @@ if [ ! -d "rust/artifacts/$MODEL" ]; then
     exit 1
 fi
 
-echo "running serve_load phases 1-8 (model=$MODEL, n=$N)..."
+echo "running serve_load phases 1-9 (model=$MODEL, n=$N)..."
 cargo run --release --example serve_load "$MODEL" "$N"
 echo
 echo "rewrote: BENCH_serving.json BENCH_prefix.json BENCH_batch.json" \
      "BENCH_policy.json BENCH_chaos.json BENCH_mesh.json BENCH_tiered.json" \
-     "(measured=true)"
+     "BENCH_streaming.json (measured=true)"
